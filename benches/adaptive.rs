@@ -1,0 +1,82 @@
+//! Bench: adaptive level-update cost (Table 7's source) — estimator fit,
+//! ALQ coordinate descent, safeguarded GD, AMQ multiplier descent, and
+//! the Prop. 6 codebook rebuild.
+
+mod bench_util;
+use aqsgd::adaptive::{alq, amq, gd, objective, Estimator};
+use aqsgd::quant::{Levels, NormType};
+use aqsgd::stats::Mixture;
+use aqsgd::util::Rng;
+use bench_util::{header, report, time_per_call};
+
+fn mixture(components: usize, seed: u64) -> Mixture {
+    let mut rng = Rng::new(seed);
+    let n = components * 8192;
+    let grad: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+    let mut est = Estimator::new(8192, NormType::L2, components);
+    est.observe(&grad);
+    est.fit(true, &mut rng).unwrap()
+}
+
+fn main() {
+    let n = 1 << 20;
+    let mut rng = Rng::new(3);
+    let grad: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+
+    header("estimator: per-bucket sufficient statistics, 1M coords");
+    for bucket in [64usize, 8192] {
+        let mut est = Estimator::new(bucket, NormType::L2, 350);
+        let t = time_per_call(
+            || {
+                est.clear();
+                est.observe(&grad);
+            },
+            300,
+        );
+        report(&format!("observe bucket={bucket}"), t, n);
+    }
+
+    // Paper scales: 20 components (CIFAR) and 350 (ImageNet).
+    for comps in [20usize, 350] {
+        let mix = mixture(comps, 4);
+        header(&format!("level optimizers on a {comps}-component mixture"));
+        for bits in [3u32, 8] {
+            let k = Levels::mags_for_bits(bits);
+            let init = Levels::exponential(k, 0.5);
+            let t = time_per_call(
+                || {
+                    std::hint::black_box(alq::optimize(&mix, &init, alq::AlqOptions::default()));
+                },
+                200,
+            );
+            report(&format!("ALQ CD bits={bits}"), t, 1);
+        }
+        let init = Levels::exponential(4, 0.5);
+        let t = time_per_call(
+            || {
+                std::hint::black_box(gd::optimize(
+                    &mix,
+                    &init,
+                    gd::GdOptions { steps: 50, ..Default::default() },
+                ));
+            },
+            200,
+        );
+        report("ALQ-G 50 GD steps bits=3", t, 1);
+        let t = time_per_call(
+            || {
+                std::hint::black_box(amq::optimize(&mix, 4, 0.5, amq::AmqOptions::default()));
+            },
+            200,
+        );
+        report("AMQ multiplier descent bits=3", t, 1);
+        let levels = Levels::exponential(4, 0.5);
+        let t = time_per_call(
+            || {
+                std::hint::black_box(objective::symbol_probs(&mix, &levels));
+            },
+            200,
+        );
+        report("Prop.6 symbol probabilities", t, 1);
+    }
+}

@@ -1,0 +1,37 @@
+//! Tiny shared bench harness (criterion is not in the offline vendor
+//! set): warmup + timed reps, median-of-runs, ns/item reporting.
+
+use std::time::Instant;
+
+/// Run `f` repeatedly for ~`target_ms` and return seconds per call.
+pub fn time_per_call<F: FnMut()>(mut f: F, target_ms: u64) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let reps = ((target_ms as f64 / 1e3 / once).ceil() as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / reps as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+pub fn report(name: &str, secs_per_call: f64, items: usize) {
+    println!(
+        "{name:<44} {:>10.3} µs/call {:>9.2} ns/item {:>10.1} Mitem/s",
+        secs_per_call * 1e6,
+        secs_per_call * 1e9 / items as f64,
+        items as f64 / secs_per_call / 1e6
+    );
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

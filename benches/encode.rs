@@ -1,0 +1,55 @@
+//! Bench: the entropy codec (Appendix D) — Huffman encode/decode and
+//! the achieved bits/coordinate vs the Theorem 3 bound.
+
+mod bench_util;
+use aqsgd::quant::{decode, encode, encode_into, symbol_counts, theory, HuffmanBook, Levels, NormType, Quantizer};
+use aqsgd::quant::bitio::BitWriter;
+use aqsgd::util::Rng;
+use bench_util::{header, report, time_per_call};
+
+fn main() {
+    let n = 1 << 20;
+    let mut rng = Rng::new(2);
+    let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+
+    for bits in [2u32, 3, 4, 8] {
+        let levels = Levels::exponential(Levels::mags_for_bits(bits), 0.5);
+        let quant = Quantizer::new(levels.clone(), NormType::L2, 8192);
+        let g = quant.quantize(&v, &mut rng);
+        let counts = symbol_counts(&g, &levels);
+        let book = HuffmanBook::from_weights(
+            &counts.iter().map(|c| c + 1.0).collect::<Vec<_>>(),
+        );
+
+        header(&format!("codec at bits={bits}, bucket=8192, 1M coords"));
+        let mut w = BitWriter::new();
+        let t_enc = time_per_call(
+            || {
+                w.clear();
+                std::hint::black_box(encode_into(&g, &levels, &book, &mut w));
+            },
+            300,
+        );
+        report("huffman encode", t_enc, n);
+
+        let e = encode(&g, &levels, &book);
+        let t_dec = time_per_call(
+            || {
+                std::hint::black_box(decode(&e, &levels, &book));
+            },
+            300,
+        );
+        report("huffman decode", t_dec, n);
+
+        let total: f64 = counts.iter().sum();
+        let probs: Vec<f64> = counts.iter().map(|c| c / total).collect();
+        let h = theory::entropy_bits(&probs);
+        let achieved = e.bits as f64 / n as f64;
+        let bound = theory::code_length_bound(&levels, n, 2.0, &probs) / n as f64;
+        println!(
+            "  bits/coord: achieved {achieved:.3}, symbol entropy {h:.3}, Thm-3 bound {bound:.3} \
+             (naive {} bits)",
+            bits
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Bench: the quantization hot path (L3 native + the HLO kernel).
+//! Source for the codec component of Tables 5–6.
+
+mod bench_util;
+use aqsgd::quant::{Levels, NormType, Quantizer};
+use aqsgd::util::Rng;
+use bench_util::{header, report, time_per_call};
+
+fn main() {
+    let n = 1 << 20;
+    let mut rng = Rng::new(1);
+    let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+
+    header("quantize (stochastic rounding + norms), 1M coords");
+    for bits in [2u32, 3, 4, 8] {
+        for bucket in [64usize, 8192] {
+            let q = Quantizer::new(
+                Levels::exponential(Levels::mags_for_bits(bits), 0.5),
+                NormType::L2,
+                bucket,
+            );
+            let mut out = q.quantize(&v, &mut rng);
+            let t = time_per_call(|| q.quantize_into(&v, &mut rng, &mut out), 300);
+            report(&format!("quantize bits={bits} bucket={bucket}"), t, n);
+        }
+    }
+
+    header("dequantize, 1M coords");
+    for bits in [3u32, 8] {
+        let q = Quantizer::new(
+            Levels::exponential(Levels::mags_for_bits(bits), 0.5),
+            NormType::L2,
+            8192,
+        );
+        let g = q.quantize(&v, &mut rng);
+        let mut out = vec![0.0f32; n];
+        let t = time_per_call(|| q.dequantize(&g, &mut out), 300);
+        report(&format!("dequantize bits={bits} bucket=8192"), t, n);
+    }
+
+    header("exact_variance (Eq. 1-2 closed form), 1M coords");
+    let q = Quantizer::new(Levels::exponential(4, 0.5), NormType::L2, 8192);
+    let t = time_per_call(
+        || {
+            std::hint::black_box(q.exact_variance(&v));
+        },
+        300,
+    );
+    report("exact_variance bits=3 bucket=8192", t, n);
+
+    header("Linf vs L2 norms, 1M coords");
+    for nt in [NormType::L2, NormType::Linf] {
+        let q = Quantizer::new(Levels::uniform(4), nt, 8192);
+        let mut out = q.quantize(&v, &mut rng);
+        let t = time_per_call(|| q.quantize_into(&v, &mut rng, &mut out), 300);
+        report(&format!("quantize {nt:?} bucket=8192"), t, n);
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench: full per-step codec pipeline at the paper's model sizes —
+//! quantize → encode → decode → dequantize for ResNet18/ResNet50-sized
+//! gradients (the measured half of Tables 5–6; the α-β network model is
+//! applied in `aqsgd exp timing`).
+
+mod bench_util;
+use aqsgd::quant::{decode, encode, symbol_counts, HuffmanBook, Levels, NormType, Quantizer};
+use aqsgd::util::Rng;
+use bench_util::{header, report, time_per_call};
+
+fn main() {
+    // Use 2^22 coords (≈ 4.2M) as a proxy chunk; costs are linear in d.
+    let n = 1 << 22;
+    let mut rng = Rng::new(5);
+    let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+
+    for bits in [2u32, 3, 4, 6, 8] {
+        for bucket in [64usize, 1024, 8192, 16384] {
+            let levels = Levels::exponential(Levels::mags_for_bits(bits), 0.5);
+            let quant = Quantizer::new(levels.clone(), NormType::L2, bucket);
+            let g0 = quant.quantize(&v, &mut rng);
+            let book = HuffmanBook::from_weights(
+                &symbol_counts(&g0, &levels)
+                    .iter()
+                    .map(|c| c + 1.0)
+                    .collect::<Vec<_>>(),
+            );
+            let mut out = vec![0.0f32; n];
+            let mut qbuf = g0.clone();
+            let t = time_per_call(
+                || {
+                    quant.quantize_into(&v, &mut rng, &mut qbuf);
+                    let e = encode(&qbuf, &levels, &book);
+                    let d = decode(&e, &levels, &book);
+                    quant.dequantize(&d, &mut out);
+                },
+                400,
+            );
+            header(&format!("full codec pipeline bits={bits} bucket={bucket}"));
+            report("quantize+encode+decode+dequantize", t, n);
+            // Extrapolate to the paper's models (linear in d).
+            for (model, d_model) in [("ResNet18", 11_690_000usize), ("ResNet50", 25_560_000)] {
+                println!(
+                    "  extrapolated {model} ({d_model} params): {:.1} ms/worker/step",
+                    t * 1e3 * d_model as f64 / n as f64
+                );
+            }
+        }
+    }
+}

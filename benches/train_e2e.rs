@@ -1,0 +1,74 @@
+//! Bench: end-to-end simulated data-parallel training throughput per
+//! method (steps/s on the ResNet-32 stand-in), plus one PJRT-backed HLO
+//! step if artifacts are present. The quantized/full-precision deltas
+//! here isolate the coordinator's own overhead (L3 should not be the
+//! bottleneck — DESIGN.md §Perf).
+
+mod bench_util;
+use aqsgd::exp::common::ModelSpec;
+use aqsgd::quant::Method;
+use aqsgd::sim::Cluster;
+use bench_util::header;
+use std::time::Instant;
+
+fn main() {
+    let spec = ModelSpec::resnet32_standin();
+    let iters = 150;
+    header(&format!(
+        "simulated cluster: {} ({} params), 4 workers, {iters} steps",
+        spec.name,
+        spec.param_count()
+    ));
+    println!(
+        "{:<12} {:>9} {:>12} {:>14} {:>12}",
+        "method", "steps/s", "ms/step", "codec ms/step", "bits/step"
+    );
+    for method in [
+        Method::SuperSgd,
+        Method::QsgdInf,
+        Method::Trn,
+        Method::NuqSgd,
+        Method::Alq,
+        Method::Amq,
+    ] {
+        let mut cfg = aqsgd::exp::common::cluster_config(method, &spec, iters, 4, 3, spec.bucket, 1);
+        cfg.eval_every = 0;
+        let mut task = spec.task(4, 3);
+        let t0 = Instant::now();
+        let rec = Cluster::new(cfg).train(&mut task);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<12} {:>9.1} {:>12.2} {:>14.3} {:>12.0}",
+            method.name(),
+            iters as f64 / dt,
+            dt * 1e3 / iters as f64,
+            rec.codec_seconds * 1e3 / iters as f64,
+            rec.comm_bits as f64 / iters as f64
+        );
+    }
+
+    // HLO path (requires `make artifacts`).
+    if let Ok(manifest) = aqsgd::runtime::Manifest::load_default() {
+        if let Ok(rt) = aqsgd::runtime::Runtime::cpu() {
+            use aqsgd::model::TrainTask;
+            header("PJRT HLO step (mlp_small train fwd+bwd)");
+            if let Ok(mut task) =
+                aqsgd::model::HloMlpTask::load(&rt, &manifest, "mlp_small", 4, 3)
+            {
+                let params = task.init_params(1);
+                let mut g = vec![0.0f32; task.param_count()];
+                task.grad(&params, 0, 0, &mut g); // compile+warm
+                let t0 = Instant::now();
+                let reps = 20;
+                for s in 0..reps {
+                    task.grad(&params, 0, s, &mut g);
+                }
+                println!(
+                    "mlp_small ({} params): {:.2} ms/grad-step",
+                    task.param_count(),
+                    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+                );
+            }
+        }
+    }
+}

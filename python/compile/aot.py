@@ -1,0 +1,214 @@
+"""AOT compiler: lower L2/L1 jax functions to HLO **text** artifacts.
+
+Run once at build time (`make artifacts`); the Rust binary is self-contained
+afterwards. Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the `xla` 0.1.6 crate binds) rejects (`proto.id() <= INT_MAX`).
+`HloModuleProto::from_text_file` re-assigns ids and round-trips cleanly.
+
+Outputs under `artifacts/`:
+  <model>.train.hlo.txt / <model>.eval.hlo.txt   per model config
+  <op>.hlo.txt                                   per Pallas kernel op
+  goldens/<name>.*.bin                           raw little-endian arrays
+  manifest.json                                  everything Rust needs
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .kernels.quantize import quantize_pallas
+from .kernels.stats import stats_pallas
+
+
+def to_hlo_text(fn, *arg_specs) -> str:
+    """Lower a jax function to HLO text with return_tuple=True."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def _dump(path: str, arr: np.ndarray) -> None:
+    np.ascontiguousarray(arr).tofile(path)
+
+
+def _golden_batch(cfg: dict):
+    """Deterministic batch for golden dumps (mirrored nowhere: stored as bins)."""
+    rng = np.random.RandomState(cfg["seed"] + 9999)
+    if cfg["kind"] == "mlp":
+        x = rng.randn(cfg["batch"], cfg["input_dim"]).astype(np.float32)
+        y = rng.randint(0, cfg["classes"], size=(cfg["batch"],)).astype(np.int32)
+        return (x, y)
+    tokens = rng.randint(0, cfg["vocab"], size=(cfg["batch"], cfg["seq_len"])).astype(np.int32)
+    return (tokens,)
+
+
+def build_models(out: str, full: bool) -> dict:
+    entries = {}
+    for name, cfg in configs.MODELS.items():
+        if cfg.get("full_only") and not full:
+            continue
+        print(f"model {name}:")
+        specs = model.specs_for(cfg)
+        pcount = model.param_count(specs)
+        flat_spec = jax.ShapeDtypeStruct((pcount,), jnp.float32)
+        if cfg["kind"] == "mlp":
+            batch_specs = (
+                jax.ShapeDtypeStruct((cfg["batch"], cfg["input_dim"]), jnp.float32),
+                jax.ShapeDtypeStruct((cfg["batch"],), jnp.int32),
+            )
+            eval_fn = model.make_mlp_eval_step(cfg, specs)
+        else:
+            batch_specs = (
+                jax.ShapeDtypeStruct((cfg["batch"], cfg["seq_len"]), jnp.int32),
+            )
+            eval_fn = model.make_lm_eval_step(cfg, specs)
+        train_fn = model.make_train_step(cfg, specs)
+
+        train_file = f"{name}.train.hlo.txt"
+        eval_file = f"{name}.eval.hlo.txt"
+        _write(os.path.join(out, train_file), to_hlo_text(train_fn, flat_spec, *batch_specs))
+        _write(os.path.join(out, eval_file), to_hlo_text(eval_fn, flat_spec, *batch_specs))
+
+        goldens = None
+        if cfg.get("goldens"):
+            gdir = os.path.join(out, "goldens")
+            flat = model.init_flat(specs, cfg["seed"])
+            batch = _golden_batch(cfg)
+            loss, grads = jax.jit(train_fn)(jnp.asarray(flat), *map(jnp.asarray, batch))
+            goldens = {"params": f"goldens/{name}.params.bin"}
+            _dump(os.path.join(out, goldens["params"]), flat)
+            for i, b in enumerate(batch):
+                key = f"in{i}"
+                goldens[key] = f"goldens/{name}.{key}.bin"
+                _dump(os.path.join(out, goldens[key]), np.asarray(b))
+            goldens["loss"] = f"goldens/{name}.loss.bin"
+            goldens["grads"] = f"goldens/{name}.grads.bin"
+            _dump(os.path.join(out, goldens["loss"]), np.asarray(loss, np.float32))
+            _dump(os.path.join(out, goldens["grads"]), np.asarray(grads, np.float32))
+
+        entries[name] = {
+            "kind": cfg["kind"],
+            "config": {k: v for k, v in cfg.items() if k not in ("goldens", "full_only")},
+            "param_count": pcount,
+            "train_hlo": train_file,
+            "eval_hlo": eval_file,
+            "layout": [
+                {"name": s.name, "shape": list(s.shape), "init": s.init, "std": s.std}
+                for s in specs
+            ],
+            "goldens": goldens,
+        }
+    return entries
+
+
+def build_quantize_ops(out: str) -> dict:
+    entries = {}
+    for name, op in configs.QUANTIZE_OPS.items():
+        print(f"op {name}:")
+        n, bucket, k, nt = op["n"], op["bucket"], op["k"], op["norm_type"]
+
+        def fn(v, levels, u, _bucket=bucket, _nt=nt):
+            return quantize_pallas(v, levels, u, _bucket, _nt)
+
+        hlo_file = f"{name}.hlo.txt"
+        _write(
+            os.path.join(out, hlo_file),
+            to_hlo_text(
+                fn,
+                jax.ShapeDtypeStruct((n,), jnp.float32),
+                jax.ShapeDtypeStruct((k,), jnp.float32),
+                jax.ShapeDtypeStruct((n,), jnp.float32),
+            ),
+        )
+
+        goldens = None
+        if op.get("goldens"):
+            rng = np.random.RandomState(4242)
+            v = rng.randn(n).astype(np.float32)
+            u = rng.rand(n).astype(np.float32)
+            # 3-bit NUQSGD-style exponential init levels for the golden run.
+            levels = np.array([0.0] + [0.5 ** (k - 2 - j) for j in range(k - 1)], np.float32)
+            qidx, norms = fn(jnp.asarray(v), jnp.asarray(levels), jnp.asarray(u))
+            goldens = {key: f"goldens/{name}.{key}.bin" for key in ("v", "levels", "u", "qidx", "norms")}
+            _dump(os.path.join(out, goldens["v"]), v)
+            _dump(os.path.join(out, goldens["levels"]), levels)
+            _dump(os.path.join(out, goldens["u"]), u)
+            _dump(os.path.join(out, goldens["qidx"]), np.asarray(qidx))
+            _dump(os.path.join(out, goldens["norms"]), np.asarray(norms))
+
+        entries[name] = {**{kk: op[kk] for kk in ("n", "bucket", "k", "norm_type")},
+                         "hlo": hlo_file, "goldens": goldens}
+    return entries
+
+
+def build_stats_ops(out: str) -> dict:
+    entries = {}
+    for name, op in configs.STATS_OPS.items():
+        print(f"op {name}:")
+        n, bucket, nt = op["n"], op["bucket"], op["norm_type"]
+
+        def fn(v, _bucket=bucket, _nt=nt):
+            return stats_pallas(v, _bucket, _nt)
+
+        hlo_file = f"{name}.hlo.txt"
+        _write(os.path.join(out, hlo_file),
+               to_hlo_text(fn, jax.ShapeDtypeStruct((n,), jnp.float32)))
+
+        goldens = None
+        if op.get("goldens"):
+            rng = np.random.RandomState(777)
+            v = rng.randn(n).astype(np.float32)
+            mu, sigma2, norms = fn(jnp.asarray(v))
+            goldens = {key: f"goldens/{name}.{key}.bin" for key in ("v", "mu", "sigma2", "norms")}
+            _dump(os.path.join(out, goldens["v"]), v)
+            _dump(os.path.join(out, goldens["mu"]), np.asarray(mu))
+            _dump(os.path.join(out, goldens["sigma2"]), np.asarray(sigma2))
+            _dump(os.path.join(out, goldens["norms"]), np.asarray(norms))
+
+        entries[name] = {**{kk: op[kk] for kk in ("n", "bucket", "norm_type")},
+                         "hlo": hlo_file, "goldens": goldens}
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also build the ~100M-param lm_medium artifacts")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    os.makedirs(os.path.join(args.out, "goldens"), exist_ok=True)
+
+    manifest = {
+        "models": build_models(args.out, args.full),
+        "quantize": build_quantize_ops(args.out),
+        "stats": build_stats_ops(args.out),
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

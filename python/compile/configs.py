@@ -1,0 +1,95 @@
+"""Named model / kernel-artifact configurations shared by aot.py and tests.
+
+The Rust side consumes these through `artifacts/manifest.json`; the names
+here are the artifact base names. Keep in sync with DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# Models.
+#
+# The paper trains ResNet-32/110 on CIFAR-10 and ResNet-18 on ImageNet.
+# Per DESIGN.md §3 those are substituted with an MLP classifier on synthetic
+# Gaussian blobs and a decoder-only transformer LM on a synthetic corpus.
+# `lm_small` is the end-to-end example model; `lm_medium` approximates the
+# brief's ~100M-parameter target and is built with `--full` only.
+# ---------------------------------------------------------------------------
+
+MODELS: dict[str, dict] = {
+    # Fast cross-check model: goldens are dumped for this one.
+    "mlp_tiny": {
+        "kind": "mlp",
+        "input_dim": 16,
+        "hidden": [32, 32],
+        "classes": 4,
+        "batch": 8,
+        "seed": 1234,
+        "goldens": True,
+    },
+    # The CIFAR-10 stand-in used by the quickstart example.
+    "mlp_small": {
+        "kind": "mlp",
+        "input_dim": 64,
+        "hidden": [256, 256, 256],
+        "classes": 10,
+        "batch": 128,
+        "seed": 1234,
+        "goldens": False,
+    },
+    # LM used by python tests; goldens dumped.
+    "lm_tiny": {
+        "kind": "lm",
+        "vocab": 256,
+        "d_model": 64,
+        "n_layers": 2,
+        "n_heads": 2,
+        "seq_len": 32,
+        "batch": 4,
+        "seed": 1234,
+        "goldens": True,
+    },
+    # End-to-end training example (examples/train_lm.rs): ~5.8M params.
+    "lm_small": {
+        "kind": "lm",
+        "vocab": 2048,
+        "d_model": 256,
+        "n_layers": 6,
+        "n_heads": 8,
+        "seq_len": 96,
+        "batch": 8,
+        "seed": 1234,
+        "goldens": False,
+    },
+    # ~100M-parameter configuration (built with `aot.py --full` only;
+    # too slow to *train* on CPU-PJRT, but compiles and loads).
+    "lm_medium": {
+        "kind": "lm",
+        "vocab": 8192,
+        "d_model": 768,
+        "n_layers": 12,
+        "n_heads": 12,
+        "seq_len": 128,
+        "batch": 4,
+        "seed": 1234,
+        "goldens": False,
+        "full_only": True,
+    },
+}
+
+# ---------------------------------------------------------------------------
+# Kernel artifacts: standalone HLO for the Pallas quantize / stats kernels,
+# loaded by the Rust runtime in integration tests and the quantize_hlo bench.
+# `k` is the number of magnitude levels (2^(bits-1), DESIGN.md §6): 3 bits -> 4.
+# ---------------------------------------------------------------------------
+
+QUANTIZE_OPS: dict[str, dict] = {
+    "quantize_tiny": {"n": 1024, "bucket": 64, "k": 4, "norm_type": "l2", "goldens": True},
+    "quantize_tiny_linf": {"n": 1024, "bucket": 64, "k": 4, "norm_type": "linf", "goldens": True},
+    "quantize_main": {"n": 65536, "bucket": 8192, "k": 4, "norm_type": "l2", "goldens": False},
+}
+
+STATS_OPS: dict[str, dict] = {
+    "stats_tiny": {"n": 1024, "bucket": 64, "norm_type": "l2", "goldens": True},
+    "stats_main": {"n": 65536, "bucket": 8192, "norm_type": "l2", "goldens": False},
+}

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: bucketed stochastic gradient quantization (Section 3).
+
+One grid step processes one bucket. TPU mapping (see DESIGN.md
+§Hardware-Adaptation): a bucket is one VMEM block (the analogue of the
+paper's CUDA threadblock over a bucket), the level table is tiny and lives
+in the block alongside it (scalar-prefetch-like), and the level search is
+branchless (a sum of compares against the broadcast level table) so it
+vectorizes on the VPU — no warp shuffles needed. The kernel is pure
+elementwise + small reductions; there is no MXU work, so the roofline is
+memory-bound: ~1 load of v + u and ~0.25x store of qidx per coordinate.
+
+`interpret=True` is mandatory here: real TPU lowering produces a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. Interpret mode lowers
+to plain HLO ops, which is exactly what the Rust runtime loads.
+
+The kernel must match `ref.quantize_ref` exactly on identical inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quantize_pallas"]
+
+
+def _quantize_kernel(v_ref, levels_ref, u_ref, qidx_ref, norm_ref, *, norm_type: str, k: int):
+    v = v_ref[...]
+    u = u_ref[...]
+    levels = levels_ref[...]
+
+    if norm_type == "l2":
+        nrm = jnp.sqrt(jnp.sum(v * v))
+    else:  # linf
+        nrm = jnp.max(jnp.abs(v))
+
+    denom = jnp.where(nrm > 0.0, nrm, 1.0)
+    r = jnp.abs(v) / denom
+    r = jnp.where(nrm > 0.0, r, 0.0)
+    r = jnp.clip(r, 0.0, 1.0)
+
+    # Branchless level search: tau = (#levels <= r) - 1 in [0, k-2].
+    cmp = (r[:, None] >= levels[None, :]).astype(jnp.int32)
+    tau = jnp.sum(cmp, axis=1) - 1
+    tau = jnp.clip(tau, 0, k - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    rho = (r - lo) / jnp.maximum(hi - lo, 1e-30)
+    idx = tau + (u < rho).astype(jnp.int32)
+    sign = jnp.where(v < 0.0, -1, 1)
+    qidx_ref[...] = (sign * idx).astype(jnp.int8)
+    norm_ref[0] = nrm
+
+
+@functools.partial(jax.jit, static_argnames=("bucket", "norm_type"))
+def quantize_pallas(
+    v: jnp.ndarray,
+    levels: jnp.ndarray,
+    u: jnp.ndarray,
+    bucket: int,
+    norm_type: str = "l2",
+):
+    """Quantize flat f32 `v` (len N, multiple of `bucket`) against `levels`.
+
+    Returns `(qidx int8[N], norms f32[N / bucket])`; see ref.quantize_ref.
+    """
+    n = v.shape[0]
+    assert n % bucket == 0, "length must be a multiple of the bucket size"
+    nb = n // bucket
+    k = levels.shape[0]
+
+    kernel = functools.partial(_quantize_kernel, norm_type=norm_type, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bucket,), lambda i: (i,)),  # v: one bucket per step
+            pl.BlockSpec((k,), lambda i: (0,)),  # levels: replicated
+            pl.BlockSpec((bucket,), lambda i: (i,)),  # u: one bucket per step
+        ],
+        out_specs=[
+            pl.BlockSpec((bucket,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(v, levels, u)

@@ -1,0 +1,132 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These implement the paper's quantization (Section 3) and the sufficient
+statistics used by the adaptive level optimizers (Appendix C/K) with plain
+jax.numpy, bucket-parallel. The Pallas kernels in quantize.py / stats.py
+must match these bit-for-bit on identical inputs (same f32 op order), and
+the Rust `quant::quantizer` must match them up to norm-reduction rounding.
+
+Conventions (shared with the Rust side — keep in sync with
+`rust/src/quant/quantizer.rs`):
+
+* `v` is a flat f32 vector whose length is a multiple of `bucket`.
+* `levels` is the *magnitude* level vector `[0 = l_0 < l_1 < ... < l_{K-1} = 1]`
+  (paper notation: K = s + 2). Signs are carried separately.
+* `u` is a flat f32 vector of uniform[0,1) variates, one per coordinate,
+  supplied by the caller so that quantization is a deterministic function
+  of its inputs (no PRNG inside the kernel).
+* The quantized representation is a signed level index `qidx` (int8,
+  `sign(v_i) * idx_i`) plus one f32 norm per bucket.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "bucket_norms",
+    "normalized_coords",
+    "quantize_ref",
+    "dequantize_ref",
+    "stats_ref",
+    "coord_variance_ref",
+]
+
+
+def bucket_norms(v: jnp.ndarray, bucket: int, norm_type: str) -> jnp.ndarray:
+    """Per-bucket norm (L2 or Linf) of the flat vector `v`."""
+    vb = v.reshape(-1, bucket)
+    if norm_type == "l2":
+        return jnp.sqrt(jnp.sum(vb * vb, axis=1))
+    if norm_type == "linf":
+        return jnp.max(jnp.abs(vb), axis=1)
+    raise ValueError(f"unknown norm_type {norm_type!r}")
+
+
+def normalized_coords(v: jnp.ndarray, bucket: int, norm_type: str) -> jnp.ndarray:
+    """r_i = |v_i| / ||bucket(v_i)||, clipped to [0, 1]; 0 where the norm is 0."""
+    vb = v.reshape(-1, bucket)
+    norms = bucket_norms(v, bucket, norm_type)
+    denom = jnp.where(norms > 0.0, norms, 1.0)
+    r = jnp.abs(vb) / denom[:, None]
+    r = jnp.where(norms[:, None] > 0.0, r, 0.0)
+    return jnp.clip(r, 0.0, 1.0)
+
+
+def quantize_ref(
+    v: jnp.ndarray,
+    levels: jnp.ndarray,
+    u: jnp.ndarray,
+    bucket: int,
+    norm_type: str = "l2",
+):
+    """Stochastic quantization of Section 3.
+
+    Returns `(qidx int8[N], norms f32[N / bucket])`.
+
+    For each coordinate: find tau with l_tau <= r < l_{tau+1}, round up to
+    tau+1 with probability rho = (r - l_tau) / (l_{tau+1} - l_tau) (i.e.
+    when `u < rho`), else down to tau. The emitted symbol is the signed
+    level index.
+    """
+    n = v.shape[0]
+    assert n % bucket == 0, "length must be a multiple of the bucket size"
+    nb = n // bucket
+    vb = v.reshape(nb, bucket)
+    ub = u.reshape(nb, bucket)
+    norms = bucket_norms(v, bucket, norm_type)
+    r = normalized_coords(v, bucket, norm_type)
+
+    k = levels.shape[0]
+    # tau = (#levels <= r) - 1, branchless; levels[0] == 0 so tau >= 0.
+    cmp = (r[..., None] >= levels[None, None, :]).astype(jnp.int32)
+    tau = jnp.sum(cmp, axis=-1) - 1
+    tau = jnp.clip(tau, 0, k - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    rho = (r - lo) / jnp.maximum(hi - lo, 1e-30)
+    idx = tau + (ub < rho).astype(jnp.int32)
+    sign = jnp.where(vb < 0.0, -1, 1)
+    qidx = (sign * idx).astype(jnp.int8).reshape(n)
+    return qidx, norms
+
+
+def dequantize_ref(
+    qidx: jnp.ndarray,
+    norms: jnp.ndarray,
+    levels: jnp.ndarray,
+    bucket: int,
+) -> jnp.ndarray:
+    """DECODE of Appendix D (minus the entropy coding): v_hat = sign * l_|idx| * norm."""
+    q = qidx.astype(jnp.int32).reshape(-1, bucket)
+    mag = levels[jnp.abs(q)]
+    sgn = jnp.sign(q).astype(levels.dtype)
+    return (sgn * mag * norms[:, None]).reshape(-1)
+
+
+def stats_ref(v: jnp.ndarray, bucket: int, norm_type: str = "l2"):
+    """Per-bucket sufficient statistics of the normalized coordinates.
+
+    Returns `(mu f32[B], sigma2 f32[B], norms f32[B])` where mu/sigma2 are
+    the population mean/variance of r within each bucket — exactly what the
+    truncated-normal estimator in `rust/src/adaptive/estimator.rs` consumes.
+    """
+    norms = bucket_norms(v, bucket, norm_type)
+    r = normalized_coords(v, bucket, norm_type)
+    mu = jnp.mean(r, axis=1)
+    sigma2 = jnp.mean(r * r, axis=1) - mu * mu
+    sigma2 = jnp.maximum(sigma2, 0.0)
+    return mu, sigma2, norms
+
+
+def coord_variance_ref(r: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Exact per-coordinate quantization variance sigma^2(r) of Eq. (2):
+
+    sigma^2(r) = (l_{tau+1} - r)(r - l_tau).
+    """
+    k = levels.shape[0]
+    cmp = (r[..., None] >= levels[None, :]).astype(jnp.int32)
+    tau = jnp.clip(jnp.sum(cmp, axis=-1) - 1, 0, k - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    return (hi - r) * (r - lo)

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: per-bucket sufficient statistics (Appendix C/K).
+
+At scheduled steps (Algorithm 1, line 4) each worker fits a mixture of
+truncated normals to the distribution of normalized gradient coordinates.
+The sufficient statistics per bucket are (mu, sigma^2, norm) of
+r_i = |v_i| / ||v_bucket||. This kernel computes them fused, one bucket per
+grid step (same VMEM-block mapping as quantize.py).
+
+Must match `ref.stats_ref` exactly on identical inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["stats_pallas"]
+
+
+def _stats_kernel(v_ref, mu_ref, sigma2_ref, norm_ref, *, norm_type: str, bucket: int):
+    v = v_ref[...]
+    if norm_type == "l2":
+        nrm = jnp.sqrt(jnp.sum(v * v))
+    else:  # linf
+        nrm = jnp.max(jnp.abs(v))
+    denom = jnp.where(nrm > 0.0, nrm, 1.0)
+    r = jnp.abs(v) / denom
+    r = jnp.where(nrm > 0.0, r, 0.0)
+    r = jnp.clip(r, 0.0, 1.0)
+    mu = jnp.sum(r) / bucket
+    sigma2 = jnp.maximum(jnp.sum(r * r) / bucket - mu * mu, 0.0)
+    mu_ref[0] = mu
+    sigma2_ref[0] = sigma2
+    norm_ref[0] = nrm
+
+
+@functools.partial(jax.jit, static_argnames=("bucket", "norm_type"))
+def stats_pallas(v: jnp.ndarray, bucket: int, norm_type: str = "l2"):
+    """Per-bucket (mu, sigma2, norm) of normalized coordinates of flat `v`."""
+    n = v.shape[0]
+    assert n % bucket == 0, "length must be a multiple of the bucket size"
+    nb = n // bucket
+    kernel = functools.partial(_stats_kernel, norm_type=norm_type, bucket=bucket)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((bucket,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(v)
+    return out[0], out[1], out[2]

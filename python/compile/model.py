@@ -1,0 +1,273 @@
+"""L2: JAX model definitions (build-time only; never on the request path).
+
+Two model families, both exposed through a **flat f32 parameter vector** so
+the Rust coordinator owns exactly one buffer per replica:
+
+* `mlp` — ReLU MLP classifier (the CIFAR-10 ResNet stand-in, DESIGN.md §3).
+* `lm`  — decoder-only transformer language model (the ImageNet stand-in
+  and the end-to-end example workload).
+
+The parameter *layout* (ordered (name, shape, init) list) is exported to
+`artifacts/manifest.json`; `rust/src/model/init.rs` re-implements the same
+initializers over the same layout so Rust can seed fresh replicas without
+Python. Goldens dumped by aot.py pin the two implementations together.
+
+Train steps are `f(params_flat, batch...) -> (loss, grads_flat)`, lowered
+once to HLO text by aot.py and executed from Rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ParamSpec",
+    "mlp_specs",
+    "lm_specs",
+    "specs_for",
+    "param_count",
+    "init_flat",
+    "unflatten",
+    "mlp_loss",
+    "mlp_eval",
+    "lm_loss",
+    "make_train_step",
+    "make_mlp_eval_step",
+    "make_lm_eval_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter tensor in the flat layout.
+
+    init kinds (mirrored in rust/src/model/init.rs):
+      - "zeros", "ones"
+      - "normal":  N(0, std^2)
+      - "he":      N(0, 2 / fan_in) with fan_in = shape[0]
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    init: str
+    std: float = 0.0
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def mlp_specs(cfg: dict) -> list[ParamSpec]:
+    dims = [cfg["input_dim"], *cfg["hidden"], cfg["classes"]]
+    specs: list[ParamSpec] = []
+    for i in range(len(dims) - 1):
+        specs.append(ParamSpec(f"fc{i}.w", (dims[i], dims[i + 1]), "he"))
+        specs.append(ParamSpec(f"fc{i}.b", (dims[i + 1],), "zeros"))
+    return specs
+
+
+def lm_specs(cfg: dict) -> list[ParamSpec]:
+    v, d, t = cfg["vocab"], cfg["d_model"], cfg["seq_len"]
+    nl = cfg["n_layers"]
+    # GPT-2-style init: 0.02, residual projections scaled by 1/sqrt(2*nl).
+    std, rstd = 0.02, 0.02 / math.sqrt(2.0 * nl)
+    specs: list[ParamSpec] = [
+        ParamSpec("embed", (v, d), "normal", std),
+        ParamSpec("pos", (t, d), "normal", 0.01),
+    ]
+    for l in range(nl):
+        p = f"blk{l}."
+        specs += [
+            ParamSpec(p + "ln1.g", (d,), "ones"),
+            ParamSpec(p + "ln1.b", (d,), "zeros"),
+            ParamSpec(p + "attn.wqkv", (d, 3 * d), "normal", std),
+            ParamSpec(p + "attn.bqkv", (3 * d,), "zeros"),
+            ParamSpec(p + "attn.wo", (d, d), "normal", rstd),
+            ParamSpec(p + "attn.bo", (d,), "zeros"),
+            ParamSpec(p + "ln2.g", (d,), "ones"),
+            ParamSpec(p + "ln2.b", (d,), "zeros"),
+            ParamSpec(p + "mlp.w1", (d, 4 * d), "normal", std),
+            ParamSpec(p + "mlp.b1", (4 * d,), "zeros"),
+            ParamSpec(p + "mlp.w2", (4 * d, d), "normal", rstd),
+            ParamSpec(p + "mlp.b2", (d,), "zeros"),
+        ]
+    specs += [
+        ParamSpec("lnf.g", (d,), "ones"),
+        ParamSpec("lnf.b", (d,), "zeros"),
+        ParamSpec("head", (d, v), "normal", std),
+    ]
+    return specs
+
+
+def specs_for(cfg: dict) -> list[ParamSpec]:
+    return mlp_specs(cfg) if cfg["kind"] == "mlp" else lm_specs(cfg)
+
+
+def param_count(specs: list[ParamSpec]) -> int:
+    return sum(s.size for s in specs)
+
+
+def init_flat(specs: list[ParamSpec], seed: int) -> np.ndarray:
+    """Deterministic numpy init over the layout.
+
+    Each tensor gets its own RandomState(seed + index); goldens dumped by
+    aot.py pin the values for the Rust integration tests (Rust uses its own
+    RNG for fresh seeds — statistically, not bitwise, identical).
+    """
+    out = np.empty(param_count(specs), dtype=np.float32)
+    off = 0
+    for i, s in enumerate(specs):
+        rng = np.random.RandomState(seed + i)
+        if s.init == "zeros":
+            x = np.zeros(s.shape, np.float32)
+        elif s.init == "ones":
+            x = np.ones(s.shape, np.float32)
+        elif s.init == "normal":
+            x = rng.randn(*s.shape).astype(np.float32) * s.std
+        elif s.init == "he":
+            fan_in = s.shape[0]
+            x = rng.randn(*s.shape).astype(np.float32) * math.sqrt(2.0 / fan_in)
+        else:  # pragma: no cover
+            raise ValueError(f"unknown init {s.init!r}")
+        out[off : off + s.size] = x.ravel()
+        off += s.size
+    return out
+
+
+def unflatten(flat: jnp.ndarray, specs: list[ParamSpec]) -> dict[str, jnp.ndarray]:
+    params: dict[str, jnp.ndarray] = {}
+    off = 0
+    for s in specs:
+        params[s.name] = flat[off : off + s.size].reshape(s.shape)
+        off += s.size
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_apply(params: dict, cfg: dict, x: jnp.ndarray) -> jnp.ndarray:
+    n_layers = len(cfg["hidden"]) + 1
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"fc{i}.w"] + params[f"fc{i}.b"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def _xent(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def mlp_loss(flat: jnp.ndarray, specs, cfg: dict, x: jnp.ndarray, y: jnp.ndarray):
+    params = unflatten(flat, specs)
+    return _xent(mlp_apply(params, cfg, x), y)
+
+
+def mlp_eval(flat: jnp.ndarray, specs, cfg: dict, x: jnp.ndarray, y: jnp.ndarray):
+    params = unflatten(flat, specs)
+    logits = mlp_apply(params, cfg, x)
+    loss = _xent(logits, y)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _attention(x: jnp.ndarray, params: dict, prefix: str, n_heads: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    hd = d // n_heads
+    qkv = x @ params[prefix + "attn.wqkv"] + params[prefix + "attn.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ params[prefix + "attn.wo"] + params[prefix + "attn.bo"]
+
+
+def lm_apply(params: dict, cfg: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    _, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:t][None]
+    for l in range(cfg["n_layers"]):
+        p = f"blk{l}."
+        h = _layer_norm(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        x = x + _attention(h, params, p, cfg["n_heads"])
+        h = _layer_norm(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        h = jax.nn.gelu(h @ params[p + "mlp.w1"] + params[p + "mlp.b1"])
+        x = x + h @ params[p + "mlp.w2"] + params[p + "mlp.b2"]
+    x = _layer_norm(x, params["lnf.g"], params["lnf.b"])
+    return x @ params["head"]
+
+
+def lm_loss(flat: jnp.ndarray, specs, cfg: dict, tokens: jnp.ndarray):
+    params = unflatten(flat, specs)
+    logits = lm_apply(params, cfg, tokens)
+    return _xent(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Step builders (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: dict, specs: list[ParamSpec]):
+    """Fused fwd+bwd: (params_flat, batch...) -> (loss, grads_flat)."""
+    if cfg["kind"] == "mlp":
+
+        def step(flat, x, y):
+            loss, g = jax.value_and_grad(lambda f: mlp_loss(f, specs, cfg, x, y))(flat)
+            return loss, g
+
+    else:
+
+        def step(flat, tokens):
+            loss, g = jax.value_and_grad(lambda f: lm_loss(f, specs, cfg, tokens))(flat)
+            return loss, g
+
+    return step
+
+
+def make_mlp_eval_step(cfg: dict, specs: list[ParamSpec]):
+    def step(flat, x, y):
+        return mlp_eval(flat, specs, cfg, x, y)
+
+    return step
+
+
+def make_lm_eval_step(cfg: dict, specs: list[ParamSpec]):
+    def step(flat, tokens):
+        return (lm_loss(flat, specs, cfg, tokens),)
+
+    return step

@@ -1,0 +1,122 @@
+"""L2 model checks: layouts, shapes, gradient sanity, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+
+MLP = configs.MODELS["mlp_tiny"]
+LM = configs.MODELS["lm_tiny"]
+
+
+def _batch(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    if cfg["kind"] == "mlp":
+        x = rng.randn(cfg["batch"], cfg["input_dim"]).astype(np.float32)
+        y = rng.randint(0, cfg["classes"], size=(cfg["batch"],)).astype(np.int32)
+        return (jnp.asarray(x), jnp.asarray(y))
+    toks = rng.randint(0, cfg["vocab"], size=(cfg["batch"], cfg["seq_len"])).astype(np.int32)
+    return (jnp.asarray(toks),)
+
+
+@pytest.mark.parametrize("cfg", [MLP, LM], ids=["mlp", "lm"])
+def test_layout_roundtrip(cfg):
+    specs = model.specs_for(cfg)
+    flat = model.init_flat(specs, 0)
+    assert flat.shape == (model.param_count(specs),)
+    params = model.unflatten(jnp.asarray(flat), specs)
+    # Repack and compare.
+    repacked = np.concatenate([np.asarray(params[s.name]).ravel() for s in specs])
+    np.testing.assert_array_equal(repacked, flat)
+    # Names unique, offsets contiguous.
+    assert len({s.name for s in specs}) == len(specs)
+
+
+@pytest.mark.parametrize("cfg", [MLP, LM], ids=["mlp", "lm"])
+def test_train_step_shapes_and_finite(cfg):
+    specs = model.specs_for(cfg)
+    step = jax.jit(model.make_train_step(cfg, specs))
+    flat = jnp.asarray(model.init_flat(specs, cfg["seed"]))
+    loss, grads = step(flat, *_batch(cfg))
+    assert loss.shape == ()
+    assert grads.shape == flat.shape
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(grads)).all()
+
+
+def test_init_determinism():
+    specs = model.specs_for(LM)
+    a = model.init_flat(specs, 42)
+    b = model.init_flat(specs, 42)
+    c = model.init_flat(specs, 43)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_mlp_loss_decreases_under_sgd():
+    cfg = MLP
+    specs = model.specs_for(cfg)
+    step = jax.jit(model.make_train_step(cfg, specs))
+    flat = jnp.asarray(model.init_flat(specs, 0))
+    batch = _batch(cfg, seed=1)
+    loss0, _ = step(flat, *batch)
+    for _ in range(30):
+        _, g = step(flat, *batch)
+        flat = flat - 0.1 * g
+    loss1, _ = step(flat, *batch)
+    assert float(loss1) < float(loss0) * 0.5
+
+
+def test_lm_loss_starts_near_uniform():
+    cfg = LM
+    specs = model.specs_for(cfg)
+    flat = jnp.asarray(model.init_flat(specs, cfg["seed"]))
+    loss = model.lm_loss(flat, specs, cfg, *_batch(cfg))
+    assert abs(float(loss) - np.log(cfg["vocab"])) < 0.5
+
+
+def test_lm_causality():
+    """Changing a future token must not change past logits."""
+    cfg = LM
+    specs = model.specs_for(cfg)
+    flat = jnp.asarray(model.init_flat(specs, cfg["seed"]))
+    params = model.unflatten(flat, specs)
+    (toks,) = _batch(cfg)
+    logits_a = model.lm_apply(params, cfg, toks)
+    toks_b = toks.at[:, -1].set((toks[:, -1] + 1) % cfg["vocab"])
+    logits_b = model.lm_apply(params, cfg, toks_b)
+    np.testing.assert_allclose(
+        np.asarray(logits_a[:, :-1]), np.asarray(logits_b[:, :-1]), atol=1e-5
+    )
+
+
+def test_eval_steps():
+    specs = model.specs_for(MLP)
+    ev = jax.jit(model.make_mlp_eval_step(MLP, specs))
+    flat = jnp.asarray(model.init_flat(specs, 0))
+    loss, acc = ev(flat, *_batch(MLP))
+    assert 0.0 <= float(acc) <= 1.0
+    specs = model.specs_for(LM)
+    ev = jax.jit(model.make_lm_eval_step(LM, specs))
+    flat = jnp.asarray(model.init_flat(specs, 0))
+    (loss,) = ev(flat, *_batch(LM))
+    assert np.isfinite(float(loss))
+
+
+def test_grads_match_finite_difference():
+    cfg = MLP
+    specs = model.specs_for(cfg)
+    flat = jnp.asarray(model.init_flat(specs, 3))
+    batch = _batch(cfg, seed=2)
+    loss_fn = lambda f: model.mlp_loss(f, specs, cfg, *batch)
+    g = jax.grad(loss_fn)(flat)
+    rng = np.random.RandomState(0)
+    idxs = rng.choice(flat.shape[0], size=5, replace=False)
+    eps = 1e-3
+    for i in idxs:
+        e = jnp.zeros_like(flat).at[i].set(eps)
+        fd = (float(loss_fn(flat + e)) - float(loss_fn(flat - e))) / (2 * eps)
+        np.testing.assert_allclose(fd, float(g[i]), atol=2e-3)

@@ -1,0 +1,56 @@
+"""Pallas stats kernel vs oracle + basic statistical sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import stats_ref, normalized_coords
+from compile.kernels.stats import stats_pallas
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 8),
+    bucket_log2=st.integers(2, 8),
+    norm_type=st.sampled_from(["l2", "linf"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(nb, bucket_log2, norm_type, seed):
+    bucket = 1 << bucket_log2
+    n = nb * bucket
+    v = np.random.RandomState(seed).randn(n).astype(np.float32)
+    ref = stats_ref(jnp.asarray(v), bucket, norm_type)
+    pal = stats_pallas(jnp.asarray(v), bucket, norm_type)
+    for a, b in zip(ref, pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("norm_type", ["l2", "linf"])
+def test_stats_against_numpy(norm_type):
+    rng = np.random.RandomState(5)
+    bucket = 128
+    v = rng.randn(4 * bucket).astype(np.float32)
+    mu, sigma2, norms = map(np.asarray, stats_pallas(jnp.asarray(v), bucket, norm_type))
+    r = np.asarray(normalized_coords(jnp.asarray(v), bucket, norm_type))
+    np.testing.assert_allclose(mu, r.mean(axis=1), rtol=1e-5)
+    np.testing.assert_allclose(sigma2, r.var(axis=1), rtol=1e-4, atol=1e-7)
+    if norm_type == "linf":
+        np.testing.assert_allclose(norms, np.abs(v.reshape(4, -1)).max(axis=1))
+
+
+def test_gaussian_bucket_moments():
+    """For N(0,1) coords under L2 norm over a large bucket, r ~ |x|/sqrt(n):
+    E[r] ~ sqrt(2/pi)/sqrt(n), Var[r] ~ (1 - 2/pi)/n."""
+    rng = np.random.RandomState(6)
+    bucket = 1 << 14
+    v = rng.randn(bucket).astype(np.float32)
+    mu, sigma2, _ = map(np.asarray, stats_pallas(jnp.asarray(v), bucket, "l2"))
+    np.testing.assert_allclose(mu[0], np.sqrt(2 / np.pi) / np.sqrt(bucket), rtol=5e-2)
+    np.testing.assert_allclose(sigma2[0], (1 - 2 / np.pi) / bucket, rtol=1e-1)
+
+
+def test_zero_bucket():
+    v = np.zeros(64, np.float32)
+    mu, sigma2, norms = map(np.asarray, stats_pallas(jnp.asarray(v), 64, "l2"))
+    assert mu[0] == 0 and sigma2[0] == 0 and norms[0] == 0

@@ -1,0 +1,213 @@
+//! ALQ: coordinate descent on individual levels (Section 3.1).
+//!
+//! Theorem 1: with neighbours (a, c) fixed, the optimal middle level is
+//! `ℓ* = β(a, c) = F⁻¹( F(c) − ∫_a^c (r−a)/(c−a) dF )` — solved here by
+//! bisection of `F(x) = target` restricted to `[a, c]` (Eq. 33). A full CD
+//! sweep updates ℓ_1…ℓ_s in order; the paper observes convergence in < 10
+//! sweeps from either uniform or exponential initialization.
+
+use super::objective::psi;
+use crate::quant::Levels;
+use crate::stats::Dist;
+use crate::util::bisect;
+
+/// Options for the CD solver.
+#[derive(Clone, Copy, Debug)]
+pub struct AlqOptions {
+    /// Max CD sweeps (paper: < 10 suffices).
+    pub max_sweeps: usize,
+    /// Stop when the max level movement in a sweep is below this.
+    pub tol: f64,
+    /// Bisection tolerance.
+    pub bisect_tol: f64,
+}
+
+impl Default for AlqOptions {
+    fn default() -> Self {
+        AlqOptions {
+            max_sweeps: 12,
+            tol: 1e-7,
+            bisect_tol: 1e-10,
+        }
+    }
+}
+
+/// One optimal-level solve: β(a, c) under `dist`.
+pub fn beta<D: Dist>(dist: &D, a: f64, c: f64, bisect_tol: f64) -> f64 {
+    debug_assert!(a < c);
+    // target = F(c) − ∫_a^c (r−a)/(c−a) dF
+    let df = dist.cdf(c) - dist.cdf(a);
+    let ramp = (dist.partial_mean(a, c) - a * df) / (c - a);
+    let target = dist.cdf(c) - ramp;
+    bisect(|x| dist.cdf(x) - target, a, c, bisect_tol, 200)
+}
+
+/// Run ALQ coordinate descent from `levels`, returning the adapted levels
+/// and the number of sweeps used.
+pub fn optimize<D: Dist>(dist: &D, levels: &Levels, opts: AlqOptions) -> (Levels, usize) {
+    assert!(
+        levels.has_zero(),
+        "ALQ coordinate descent operates on levels with a zero symbol"
+    );
+    let mut m = levels.mags().to_vec();
+    let k = m.len();
+    if k <= 2 {
+        return (levels.clone(), 0); // nothing adaptable (e.g. ternary)
+    }
+    let mut sweeps = 0;
+    for _ in 0..opts.max_sweeps {
+        sweeps += 1;
+        let mut max_move = 0.0f64;
+        for j in 1..k - 1 {
+            let new = beta(dist, m[j - 1], m[j + 1], opts.bisect_tol);
+            // Keep strictly interior to preserve 𝓛; guard against two
+            // levels collapsing onto one point under very concentrated
+            // distributions (lo can exceed hi by rounding otherwise).
+            let lo = m[j - 1] + 1e-12;
+            let hi = (m[j + 1] - 1e-12).max(lo);
+            let new = new.clamp(lo, hi);
+            max_move = max_move.max((new - m[j]).abs());
+            m[j] = new;
+        }
+        if max_move < opts.tol {
+            break;
+        }
+    }
+    (Levels::from_mags(m, true), sweeps)
+}
+
+/// Trace of Ψ across CD sweeps (for the Fig. 8 convergence experiment).
+pub fn optimize_traced<D: Dist>(
+    dist: &D,
+    levels: &Levels,
+    opts: AlqOptions,
+) -> (Levels, Vec<f64>) {
+    let mut cur = levels.clone();
+    let mut trace = vec![psi(dist, &cur)];
+    for _ in 0..opts.max_sweeps {
+        let (next, _) = optimize(
+            dist,
+            &cur,
+            AlqOptions {
+                max_sweeps: 1,
+                ..opts
+            },
+        );
+        trace.push(psi(dist, &next));
+        let moved = next
+            .mags()
+            .iter()
+            .zip(cur.mags())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        cur = next;
+        if moved < opts.tol {
+            break;
+        }
+    }
+    (cur, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{Histogram, Mixture, TruncNormal};
+
+    fn gradient_like_dist() -> Mixture {
+        // Normalized gradient coords concentrate near zero.
+        Mixture::new(
+            vec![TruncNormal::unit(0.005, 0.01), TruncNormal::unit(0.03, 0.03)],
+            vec![3.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn beta_satisfies_first_order_condition() {
+        // Proposition 2: at b*, ∫_a^b (r−a) dF = ∫_b^c (c−r) dF.
+        let d = gradient_like_dist();
+        let (a, c) = (0.0, 0.2);
+        let b = beta(&d, a, c, 1e-12);
+        assert!(a < b && b < c);
+        let left = d.partial_mean(a, b) - a * (d.cdf(b) - d.cdf(a));
+        let right = c * (d.cdf(c) - d.cdf(b)) - d.partial_mean(b, c);
+        assert!((left - right).abs() < 1e-8, "{left} vs {right}");
+    }
+
+    #[test]
+    fn cd_decreases_psi_monotonically() {
+        let d = gradient_like_dist();
+        let init = Levels::uniform(8);
+        let (_, trace) = optimize_traced(&d, &init, AlqOptions::default());
+        for w in trace.windows(2) {
+            assert!(
+                w[1] <= w[0] + 1e-12,
+                "Ψ must not increase under CD: {trace:?}"
+            );
+        }
+        assert!(
+            trace.last().unwrap() < &(trace[0] * 0.9),
+            "CD should improve noticeably from uniform init: {trace:?}"
+        );
+    }
+
+    #[test]
+    fn cd_converges_fast_from_both_inits() {
+        // Paper: "starting from either initialization CD converges in
+        // small number of steps (less than 10)".
+        let d = gradient_like_dist();
+        for init in [Levels::uniform(4), Levels::exponential(4, 0.5)] {
+            let (levels, sweeps) = optimize(&d, &init, AlqOptions::default());
+            assert!(sweeps <= 12, "sweeps = {sweeps}");
+            assert!(levels.mags().windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn fixed_point_is_stationary() {
+        let d = gradient_like_dist();
+        let (levels, _) = optimize(&d, &Levels::exponential(8, 0.5), AlqOptions::default());
+        let g = super::super::objective::psi_grad(&d, &levels);
+        for (j, gj) in g.iter().enumerate() {
+            assert!(gj.abs() < 1e-4, "grad[{j}] = {gj} at CD fixed point");
+        }
+    }
+
+    #[test]
+    fn adapted_levels_concentrate_near_zero_for_concentrated_dist() {
+        // Fig. 6's qualitative claim: adaptive levels bunch near 0 when
+        // the coordinate distribution is concentrated near 0.
+        let d = gradient_like_dist();
+        let (adapted, _) = optimize(&d, &Levels::uniform(8), AlqOptions::default());
+        let uni = Levels::uniform(8);
+        // Compare the median interior level.
+        let mid_a = adapted.mags()[4];
+        let mid_u = uni.mags()[4];
+        assert!(
+            mid_a < mid_u * 0.5,
+            "adapted median level {mid_a} should sit well below uniform {mid_u}"
+        );
+    }
+
+    #[test]
+    fn ternary_is_noop() {
+        let d = gradient_like_dist();
+        let (l, sweeps) = optimize(&d, &Levels::ternary(), AlqOptions::default());
+        assert_eq!(l.mags(), &[0.0, 1.0]);
+        assert_eq!(sweeps, 0);
+    }
+
+    #[test]
+    fn works_on_histogram_distribution() {
+        let mut h = Histogram::new(128);
+        let mut rng = crate::util::Rng::new(31);
+        for _ in 0..50_000 {
+            h.add((rng.normal().abs() * 0.02).min(1.0));
+        }
+        let (levels, _) = optimize(&h, &Levels::uniform(4), AlqOptions::default());
+        assert!(levels.mags().windows(2).all(|w| w[0] < w[1]));
+        assert!(
+            psi(&h, &levels) <= psi(&h, &Levels::uniform(4)) + 1e-12,
+            "CD should not do worse than its init"
+        );
+    }
+}

@@ -1,0 +1,201 @@
+//! Gradient → distribution estimator (Section 3.4, Appendix K).
+//!
+//! At update steps the workers sample per-bucket sufficient statistics
+//! (μ_n, σ_n², ‖v_n‖) of the normalized coordinates — via the L1 `stats`
+//! Pallas kernel on device, or the host path here — subsample to keep the
+//! component count bounded (paper: 20 for CIFAR-scale, 350 for ImageNet),
+//! and fit a mixture of truncated normals `F̄ = Σ γ_n F_n` with
+//! `γ_n ∝ ‖v_n‖²` (expected variance) or `γ_n = 1/N` (normalized).
+
+use crate::quant::NormType;
+use crate::stats::{BucketStats, Histogram, Mixture, TruncNormal};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Estimator {
+    pub bucket: usize,
+    pub norm_type: NormType,
+    /// Max mixture components after subsampling (App. K: 20 / 350).
+    pub max_components: usize,
+    /// σ floor guarding the CDF math against degenerate buckets (App. K
+    /// "the value of the statistics, especially the variance, can become
+    /// very small. This makes PDF and CDF calculations challenging.").
+    pub sigma_floor: f64,
+    accum: Vec<BucketStats>,
+}
+
+impl Estimator {
+    pub fn new(bucket: usize, norm_type: NormType, max_components: usize) -> Self {
+        Estimator {
+            bucket,
+            norm_type,
+            max_components,
+            sigma_floor: 1e-5,
+            accum: Vec::new(),
+        }
+    }
+
+    /// Ingest one gradient vector's full buckets.
+    pub fn observe(&mut self, grad: &[f32]) {
+        let nb = grad.len() / self.bucket;
+        for b in 0..nb {
+            let s = BucketStats::from_bucket(
+                &grad[b * self.bucket..(b + 1) * self.bucket],
+                self.norm_type,
+            );
+            if s.norm > 0.0 {
+                self.accum.push(s);
+            }
+        }
+    }
+
+    /// Ingest precomputed stats (e.g. from the Pallas stats artifact).
+    pub fn observe_stats(&mut self, stats: &[BucketStats]) {
+        self.accum
+            .extend(stats.iter().filter(|s| s.norm > 0.0).copied());
+    }
+
+    pub fn n_observed(&self) -> usize {
+        self.accum.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.accum.clear();
+    }
+
+    /// Fit the mixture. `weighted`: γ_n ∝ ‖v_n‖² (ALQ/AMQ) vs uniform
+    /// (`-N` variants). Subsamples uniformly to `max_components`.
+    pub fn fit(&self, weighted: bool, rng: &mut Rng) -> Option<Mixture> {
+        if self.accum.is_empty() {
+            return None;
+        }
+        let chosen: Vec<&BucketStats> = if self.accum.len() <= self.max_components {
+            self.accum.iter().collect()
+        } else {
+            let mut idx: Vec<usize> = (0..self.accum.len()).collect();
+            // Partial Fisher–Yates for the first max_components slots.
+            for i in 0..self.max_components {
+                let j = i + rng.below(idx.len() - i);
+                idx.swap(i, j);
+            }
+            idx[..self.max_components]
+                .iter()
+                .map(|&i| &self.accum[i])
+                .collect()
+        };
+        let comps: Vec<TruncNormal> = chosen
+            .iter()
+            .map(|s| TruncNormal::unit(s.mu, s.sigma2.sqrt().max(self.sigma_floor)))
+            .collect();
+        let weights: Vec<f64> = if weighted {
+            chosen.iter().map(|s| s.norm * s.norm).collect()
+        } else {
+            vec![1.0; chosen.len()]
+        };
+        Some(Mixture::new(comps, weights))
+    }
+
+    /// Nonparametric alternative: histogram of all normalized coordinates
+    /// (subsampled), usable directly as a `Dist` for ALQ.
+    pub fn fit_histogram(&self, grad: &[f32], bins: usize) -> Histogram {
+        let mut h = Histogram::new(bins);
+        let nb = grad.len() / self.bucket;
+        for b in 0..nb {
+            let bucket = &grad[b * self.bucket..(b + 1) * self.bucket];
+            let norm = crate::quant::bucket_norm(bucket, self.norm_type);
+            if norm == 0.0 {
+                continue;
+            }
+            let inv = 1.0 / norm as f64;
+            for &x in bucket {
+                h.add((x.abs() as f64 * inv).clamp(0.0, 1.0));
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Dist;
+
+    fn gaussian_grad(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.normal() * 0.01) as f32).collect()
+    }
+
+    #[test]
+    fn observes_and_fits() {
+        let mut e = Estimator::new(256, NormType::L2, 20);
+        e.observe(&gaussian_grad(4096, 1));
+        assert_eq!(e.n_observed(), 16);
+        let mut rng = Rng::new(2);
+        let m = e.fit(true, &mut rng).unwrap();
+        assert_eq!(m.len(), 16);
+        // For iid normal coords with bucket 256, E[r] ~ sqrt(2/pi)/16 ~ 0.05.
+        let mean = m.partial_mean(0.0, 1.0);
+        assert!((mean - 0.0498).abs() < 0.01, "mixture mean {mean}");
+    }
+
+    #[test]
+    fn subsampling_caps_components() {
+        let mut e = Estimator::new(64, NormType::L2, 10);
+        e.observe(&gaussian_grad(6400, 3)); // 100 buckets
+        assert_eq!(e.n_observed(), 100);
+        let mut rng = Rng::new(4);
+        let m = e.fit(false, &mut rng).unwrap();
+        assert_eq!(m.len(), 10);
+    }
+
+    #[test]
+    fn weighted_vs_uniform_weights_differ() {
+        let mut e = Estimator::new(32, NormType::L2, 50);
+        // Two populations with very different norms.
+        let mut g = gaussian_grad(320, 5);
+        for x in g.iter_mut().take(160) {
+            *x *= 100.0;
+        }
+        e.observe(&g);
+        let mut rng = Rng::new(6);
+        let w = e.fit(true, &mut rng).unwrap();
+        let u = e.fit(false, &mut rng).unwrap();
+        // Under γ ∝ ‖v‖² the large-norm half takes ~all the mass (its
+        // norm² is 10⁴× larger); under uniform every bucket gets 1/10.
+        let big_mass_w: f64 = w.weights().iter().filter(|&&x| x > 0.01).sum();
+        let max_u = u.weights().iter().cloned().fold(0.0, f64::max);
+        assert!(big_mass_w > 0.999, "weighted mass on large buckets: {big_mass_w}");
+        assert!((max_u - 0.1).abs() < 1e-12, "uniform weights: {max_u}");
+    }
+
+    #[test]
+    fn empty_estimator_returns_none() {
+        let e = Estimator::new(64, NormType::L2, 10);
+        let mut rng = Rng::new(7);
+        assert!(e.fit(true, &mut rng).is_none());
+    }
+
+    #[test]
+    fn zero_buckets_skipped() {
+        let mut e = Estimator::new(64, NormType::L2, 10);
+        e.observe(&vec![0.0f32; 256]);
+        assert_eq!(e.n_observed(), 0);
+    }
+
+    #[test]
+    fn histogram_fit_matches_mixture_shape() {
+        let mut e = Estimator::new(256, NormType::L2, 64);
+        let g = gaussian_grad(16384, 8);
+        e.observe(&g);
+        let h = e.fit_histogram(&g, 256);
+        let mut rng = Rng::new(9);
+        let m = e.fit(false, &mut rng).unwrap();
+        // Medians should roughly agree between parametric + nonparametric.
+        let med_h = h.inv_cdf(0.5);
+        let med_m = m.inv_cdf(0.5);
+        assert!(
+            (med_h - med_m).abs() < 0.02,
+            "hist median {med_h} vs mixture {med_m}"
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Adaptive quantization (Section 3) — the paper's core contribution.
+//!
+//! * [`objective`] — Ψ(ℓ) (Eq. 3/10), its gradient (Eq. 25/36), symbol
+//!   probabilities (Prop. 6), all in closed form over any [`crate::stats::Dist`].
+//! * [`alq`] — ALQ coordinate descent (Theorem 1, Eq. 33).
+//! * [`gd`] — safeguarded projection-free gradient descent (Eq. 7).
+//! * [`amq`] — AMQ multiplier descent (Eq. 8 / Appendix C.3).
+//! * [`estimator`] — gradient → sufficient statistics → truncated-normal
+//!   mixture (Section 3.4 / Appendix K).
+//! * [`policy`] — per-method dispatch used by the training loop.
+
+pub mod alq;
+pub mod amq;
+pub mod estimator;
+pub mod gd;
+pub mod objective;
+pub mod policy;
+pub mod zipml;
+
+pub use estimator::Estimator;
+pub use policy::update_levels;

@@ -1,0 +1,267 @@
+//! The expected-variance objective Ψ(ℓ) and its derivatives, in closed
+//! form over any `Dist` (truncated normal, mixture, or histogram).
+//!
+//! All pieces reduce to the partial moments `ΔF`, `M1 = ∫ r dF`,
+//! `M2 = ∫ r² dF` of sub-intervals:
+//!
+//! * bin variance `∫_a^b (b−r)(r−a) dF = −M2 + (a+b) M1 − ab ΔF`
+//! * AMQ first bin `∫_0^{ℓ₁} (ℓ₁²−r²) dF = ℓ₁² ΔF − M2`
+//! * ramp `∫_a^c (r−a)/(c−a) dF = (M1 − a ΔF)/(c−a)` (Prop. 6)
+
+use crate::quant::Levels;
+use crate::stats::Dist;
+
+/// `∫_a^b (b−r)(r−a) dF` — the variance mass of one bin (Eq. 2 integrated).
+#[inline]
+pub fn bin_variance<D: Dist>(dist: &D, a: f64, b: f64) -> f64 {
+    if b <= a {
+        return 0.0;
+    }
+    let df = dist.cdf(b) - dist.cdf(a);
+    let m1 = dist.partial_mean(a, b);
+    let m2 = dist.partial_mean_sq(a, b);
+    (-m2 + (a + b) * m1 - a * b * df).max(0.0)
+}
+
+/// Ψ(ℓ): expected per-coordinate quantization variance under `dist`
+/// (Eq. 3 with the mixture of Eq. 10 folded into `dist`).
+pub fn psi<D: Dist>(dist: &D, levels: &Levels) -> f64 {
+    let m = levels.mags();
+    let mut total = 0.0;
+    if levels.has_zero() {
+        for w in m.windows(2) {
+            total += bin_variance(dist, w[0], w[1]);
+        }
+    } else {
+        // AMQ-style symmetric first bin: ∫_0^{ℓ₁} (ℓ₁² − r²) dF.
+        let l1 = m[0];
+        let df = dist.cdf(l1) - dist.cdf(0.0);
+        let m2 = dist.partial_mean_sq(0.0, l1);
+        total += (l1 * l1 * df - m2).max(0.0);
+        for w in m.windows(2) {
+            total += bin_variance(dist, w[0], w[1]);
+        }
+    }
+    total
+}
+
+/// ∂Ψ/∂ℓ_j for an interior level (Eq. 36):
+/// `∫_{a}^{ℓ_j} (r−a) dF − ∫_{ℓ_j}^{c} (c−r) dF`.
+#[inline]
+pub fn psi_grad_level<D: Dist>(dist: &D, a: f64, lj: f64, c: f64) -> f64 {
+    let left = dist.partial_mean(a, lj) - a * (dist.cdf(lj) - dist.cdf(a));
+    let right = c * (dist.cdf(c) - dist.cdf(lj)) - dist.partial_mean(lj, c);
+    left - right
+}
+
+/// ∂Ψ/∂ℓ₁ for zero-free symmetric levels (Eq. 30, halved):
+/// `2ℓ₁ (F(ℓ₁) − F(0)) − ∫_{ℓ₁}^{ℓ₂} (ℓ₂ − r) dF`.
+#[inline]
+pub fn psi_grad_first_symmetric<D: Dist>(dist: &D, l1: f64, l2: f64) -> f64 {
+    let first = 2.0 * l1 * (dist.cdf(l1) - dist.cdf(0.0));
+    let right = l2 * (dist.cdf(l2) - dist.cdf(l1)) - dist.partial_mean(l1, l2);
+    first - right
+}
+
+/// Full gradient vector over the adaptable levels.
+pub fn psi_grad<D: Dist>(dist: &D, levels: &Levels) -> Vec<f64> {
+    let m = levels.mags();
+    let k = m.len();
+    if levels.has_zero() {
+        (1..k - 1)
+            .map(|j| psi_grad_level(dist, m[j - 1], m[j], m[j + 1]))
+            .collect()
+    } else {
+        let mut g = Vec::with_capacity(k - 1);
+        g.push(psi_grad_first_symmetric(dist, m[0], m[1]));
+        for j in 1..k - 1 {
+            g.push(psi_grad_level(dist, m[j - 1], m[j], m[j + 1]));
+        }
+        g
+    }
+}
+
+/// Symbol probabilities of Proposition 6 (has-zero) / Proposition 8
+/// (zero-free), used to build the Huffman codebook without observing data.
+pub fn symbol_probs<D: Dist>(dist: &D, levels: &Levels) -> Vec<f64> {
+    let m = levels.mags();
+    let k = m.len();
+    let ramp_up = |a: f64, c: f64| -> f64 {
+        // ∫_a^c (r − a)/(c − a) dF
+        if c <= a {
+            return 0.0;
+        }
+        (dist.partial_mean(a, c) - a * (dist.cdf(c) - dist.cdf(a))) / (c - a)
+    };
+    let ramp_down = |a: f64, c: f64| -> f64 {
+        // ∫_a^c (c − r)/(c − a) dF
+        if c <= a {
+            return 0.0;
+        }
+        (c * (dist.cdf(c) - dist.cdf(a)) - dist.partial_mean(a, c)) / (c - a)
+    };
+    let mut probs = vec![0.0f64; k];
+    if levels.has_zero() {
+        probs[0] = ramp_down(0.0, m[1]);
+        for j in 1..k {
+            probs[j] += ramp_up(m[j - 1], m[j]);
+            if j + 1 < k {
+                probs[j] += ramp_down(m[j], m[j + 1]);
+            }
+        }
+    } else {
+        // Whole first bin maps to ±ℓ₁ plus the down-ramp from bin 2.
+        probs[0] = (dist.cdf(m[0]) - dist.cdf(0.0)) + ramp_down(m[0], m[1]);
+        for j in 1..k {
+            probs[j] += ramp_up(m[j - 1], m[j]);
+            if j + 1 < k {
+                probs[j] += ramp_down(m[j], m[j + 1]);
+            }
+        }
+    }
+    // Clamp rounding slack (nearly-collapsed levels can yield tiny
+    // negative ramps) and normalize.
+    for p in probs.iter_mut() {
+        if !p.is_finite() || *p < 0.0 {
+            *p = 0.0;
+        }
+    }
+    let total: f64 = probs.iter().sum();
+    if total > 0.0 {
+        for p in probs.iter_mut() {
+            *p /= total;
+        }
+    }
+    probs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{Mixture, TruncNormal};
+    use crate::util::simpson;
+
+    fn dist() -> Mixture {
+        Mixture::new(
+            vec![TruncNormal::unit(0.02, 0.02), TruncNormal::unit(0.08, 0.05)],
+            vec![2.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn bin_variance_matches_quadrature() {
+        let d = dist();
+        let (a, b) = (0.05, 0.3);
+        let got = bin_variance(&d, a, b);
+        let want = simpson(|r| (b - r) * (r - a) * d.pdf(r), a, b, 4000);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn psi_matches_quadrature_has_zero() {
+        let d = dist();
+        let levels = Levels::exponential(4, 0.5);
+        let got = psi(&d, &levels);
+        let m = levels.mags();
+        let mut want = 0.0;
+        for w in m.windows(2) {
+            want += simpson(|r| (w[1] - r) * (r - w[0]) * d.pdf(r), w[0], w[1], 4000);
+        }
+        assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+    }
+
+    #[test]
+    fn psi_matches_quadrature_amq() {
+        let d = dist();
+        let levels = Levels::amq(4, 0.5);
+        let got = psi(&d, &levels);
+        let m = levels.mags();
+        let mut want = simpson(|r| (m[0] * m[0] - r * r) * d.pdf(r), 0.0, m[0], 4000);
+        for w in m.windows(2) {
+            want += simpson(|r| (w[1] - r) * (r - w[0]) * d.pdf(r), w[0], w[1], 4000);
+        }
+        assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let d = dist();
+        let levels = Levels::exponential(5, 0.5);
+        let g = psi_grad(&d, &levels);
+        let eps = 1e-6;
+        let m = levels.mags().to_vec();
+        for (gi, j) in g.iter().zip(1..m.len() - 1) {
+            let mut hi = m.clone();
+            hi[j] += eps;
+            let mut lo = m.clone();
+            lo[j] -= eps;
+            let fd = (psi(&d, &Levels::from_mags(hi, true))
+                - psi(&d, &Levels::from_mags(lo, true)))
+                / (2.0 * eps);
+            assert!((gi - fd).abs() < 1e-6, "level {j}: {gi} vs fd {fd}");
+        }
+    }
+
+    #[test]
+    fn grad_amq_first_level_matches_fd() {
+        let d = dist();
+        let levels = Levels::amq(4, 0.5);
+        let g = psi_grad(&d, &levels);
+        let m = levels.mags().to_vec();
+        let eps = 1e-6;
+        for (gi, j) in g.iter().zip(0..m.len() - 1) {
+            let mut hi = m.clone();
+            hi[j] += eps;
+            let mut lo = m.clone();
+            lo[j] -= eps;
+            let fd = (psi(&d, &Levels::from_mags(hi, false))
+                - psi(&d, &Levels::from_mags(lo, false)))
+                / (2.0 * eps);
+            assert!((gi - fd).abs() < 1e-6, "level {j}: {gi} vs fd {fd}");
+        }
+    }
+
+    #[test]
+    fn symbol_probs_sum_to_one_and_match_simulation() {
+        use crate::quant::{NormType, Quantizer};
+        use crate::util::Rng;
+        // Simulate: draw magnitudes from the mixture directly by feeding a
+        // synthetic bucket whose normalized coords are mixture samples.
+        let levels = Levels::exponential(4, 0.5);
+        let d = TruncNormal::unit(0.15, 0.1);
+        let probs = symbol_probs(&d, &levels);
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+
+        // Empirical check: quantize coords with r drawn from d, Linf norm 1
+        // (embed a 1.0 coordinate to pin the norm).
+        let mut rng = Rng::new(30);
+        let n = 40_000;
+        let mut counts = vec![0f64; levels.num_symbols()];
+        let quant = Quantizer::new(levels.clone(), NormType::Linf, n);
+        let mut v: Vec<f32> = (0..n).map(|_| d.inv_cdf(rng.f64()) as f32).collect();
+        v[0] = 1.0; // pins Linf norm to 1 so r_i = v_i
+        let q = quant.quantize(&v, &mut rng);
+        for &s in &q.qidx {
+            counts[s.unsigned_abs() as usize] += 1.0;
+        }
+        let total: f64 = counts.iter().sum();
+        for (j, (&c, &p)) in counts.iter().zip(&probs).enumerate() {
+            let emp = c / total;
+            assert!(
+                (emp - p).abs() < 0.01,
+                "symbol {j}: empirical {emp} vs Prop.6 {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_zero_at_uniform_for_uniform_dist() {
+        // For the uniform distribution the uniform levels are stationary:
+        // ∫(r−a) over left bin equals ∫(c−r) over right bin by symmetry.
+        let u = crate::stats::Histogram::new(4); // empty = uniform
+        let levels = Levels::uniform(5);
+        for g in psi_grad(&u, &levels) {
+            assert!(g.abs() < 1e-12, "{g}");
+        }
+    }
+}

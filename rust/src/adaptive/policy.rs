@@ -1,0 +1,78 @@
+//! Per-method adaptation dispatch (Algorithm 1, line 4).
+//!
+//! Given a method, its current levels, and the fitted mixture, produce the
+//! updated levels. Non-adaptive methods are identity.
+
+use super::{alq, amq, gd};
+use crate::quant::{schemes::AdaptKind, Levels, Method};
+use crate::stats::Dist;
+
+/// Update a method's levels against the fitted distribution.
+pub fn update_levels<D: Dist>(method: Method, levels: &Levels, dist: &D) -> Levels {
+    match method.adapt_kind() {
+        AdaptKind::None => levels.clone(),
+        AdaptKind::Cd => alq::optimize(dist, levels, alq::AlqOptions::default()).0,
+        AdaptKind::Gd => gd::optimize(dist, levels, gd::GdOptions::default()),
+        AdaptKind::Multiplier => {
+            let k = levels.k();
+            // Recover the current multiplier from the second-smallest /
+            // smallest ratio (levels are exactly geometric by construction).
+            let p0 = if k >= 2 {
+                (levels.mags()[0] / levels.mags()[1]).clamp(0.05, 0.95)
+            } else {
+                0.5
+            };
+            amq::optimize(dist, k, p0, amq::AmqOptions::default())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adaptive::objective::psi;
+    use crate::stats::TruncNormal;
+
+    #[test]
+    fn non_adaptive_identity() {
+        let d = TruncNormal::unit(0.05, 0.05);
+        for m in [Method::QsgdInf, Method::Trn, Method::NuqSgd] {
+            let l = m.initial_levels(3).unwrap();
+            assert_eq!(update_levels(m, &l, &d).mags(), l.mags());
+        }
+    }
+
+    #[test]
+    fn all_adaptive_methods_improve_psi() {
+        let d = TruncNormal::unit(0.02, 0.03);
+        for m in [
+            Method::Alq,
+            Method::AlqN,
+            Method::AlqG,
+            Method::AlqGN,
+            Method::Amq,
+            Method::AmqN,
+        ] {
+            let init = m.initial_levels(3).unwrap();
+            let adapted = update_levels(m, &init, &d);
+            let before = psi(&d, &init);
+            let after = psi(&d, &adapted);
+            assert!(
+                after <= before + 1e-12,
+                "{m}: psi {before} -> {after} should not increase"
+            );
+        }
+    }
+
+    #[test]
+    fn amq_stays_geometric() {
+        let d = TruncNormal::unit(0.02, 0.03);
+        let init = Method::Amq.initial_levels(3).unwrap();
+        let adapted = update_levels(Method::Amq, &init, &d);
+        let m = adapted.mags();
+        let p = m[0] / m[1];
+        for w in m.windows(2) {
+            assert!((w[0] / w[1] - p).abs() < 1e-9, "not geometric: {m:?}");
+        }
+    }
+}

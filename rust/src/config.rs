@@ -1,0 +1,162 @@
+//! Experiment configuration: CLI-style `--key value` overrides over
+//! Table 3-shaped defaults. Dependency-free (no TOML/serde in the image's
+//! vendored crate set); values are validated on parse.
+
+use crate::quant::Method;
+use anyhow::{bail, Context, Result};
+
+/// One training-run configuration (Table 3, scaled).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub method: Method,
+    pub workers: usize,
+    pub bits: u32,
+    pub bucket: usize,
+    pub iters: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub seeds: usize,
+    /// Model selector: "mlp" (pure-Rust blobs task) or a manifest model
+    /// name ("mlp_tiny", "lm_small", …) for the PJRT path.
+    pub model: String,
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            method: Method::Alq,
+            workers: 4,
+            bits: 3,
+            bucket: 8192,
+            iters: 3000,
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            seed: 1,
+            seeds: 3,
+            model: "mlp".to_string(),
+            out_dir: "runs".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `--key value` pairs; unknown keys are an error.
+    pub fn from_args(args: &[String]) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        let mut it = args.iter();
+        while let Some(key) = it.next() {
+            let Some(name) = key.strip_prefix("--") else {
+                bail!("expected --key, got {key:?}");
+            };
+            let val = it
+                .next()
+                .with_context(|| format!("missing value for --{name}"))?;
+            match name {
+                "method" => {
+                    self.method = Method::parse(val)
+                        .with_context(|| format!("unknown method {val:?}"))?
+                }
+                "workers" | "m" => self.workers = val.parse()?,
+                "bits" => self.bits = val.parse()?,
+                "bucket" => self.bucket = val.parse()?,
+                "iters" => self.iters = val.parse()?,
+                "lr" => self.lr = val.parse()?,
+                "momentum" => self.momentum = val.parse()?,
+                "weight-decay" => self.weight_decay = val.parse()?,
+                "seed" => self.seed = val.parse()?,
+                "seeds" => self.seeds = val.parse()?,
+                "model" => self.model = val.clone(),
+                "out" => self.out_dir = val.clone(),
+                other => bail!("unknown option --{other}"),
+            }
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(2..=8).contains(&self.bits) {
+            bail!("bits must be in [2, 8], got {}", self.bits);
+        }
+        if self.workers == 0 || self.iters == 0 || self.bucket == 0 {
+            bail!("workers, iters, bucket must be positive");
+        }
+        Ok(())
+    }
+
+    /// Lower into a cluster config.
+    pub fn cluster(&self) -> crate::sim::ClusterConfig {
+        use crate::opt::{LrSchedule, UpdateSchedule};
+        crate::sim::ClusterConfig {
+            method: self.method,
+            workers: self.workers,
+            bits: self.bits,
+            bucket: self.bucket,
+            iters: self.iters,
+            lr: LrSchedule::paper_default(self.lr, self.iters),
+            updates: UpdateSchedule::paper_default(self.iters),
+            momentum: self.momentum,
+            weight_decay: self.weight_decay,
+            seed: self.seed,
+            eval_every: (self.iters / 20).max(1),
+            variance_every: 0,
+            network: crate::sim::NetworkModel::paper_testbed(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn defaults_mirror_table3() {
+        let c = RunConfig::default();
+        assert_eq!(c.lr, 0.1);
+        assert_eq!(c.momentum, 0.9);
+        assert_eq!(c.weight_decay, 1e-4);
+        assert_eq!(c.bits, 3);
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let c = RunConfig::from_args(&args(
+            "--method qsgdinf --workers 16 --bits 4 --bucket 1024 --iters 100",
+        ))
+        .unwrap();
+        assert_eq!(c.method, Method::QsgdInf);
+        assert_eq!(c.workers, 16);
+        assert_eq!(c.bits, 4);
+        assert_eq!(c.bucket, 1024);
+    }
+
+    #[test]
+    fn rejects_unknown_and_invalid() {
+        assert!(RunConfig::from_args(&args("--bogus 1")).is_err());
+        assert!(RunConfig::from_args(&args("--bits 9")).is_err());
+        assert!(RunConfig::from_args(&args("--method nope")).is_err());
+        assert!(RunConfig::from_args(&args("--iters")).is_err());
+        assert!(RunConfig::from_args(&args("iters 5")).is_err());
+    }
+
+    #[test]
+    fn lowers_to_cluster_config() {
+        let c = RunConfig::from_args(&args("--iters 1000 --method trn")).unwrap();
+        let cc = c.cluster();
+        assert_eq!(cc.iters, 1000);
+        assert_eq!(cc.method, Method::Trn);
+        assert!(cc.lr.lr(0) > cc.lr.lr(999));
+    }
+}

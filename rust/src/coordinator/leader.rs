@@ -1,0 +1,79 @@
+//! The leader: a barrier + relay for encoded gradients.
+//!
+//! The leader never decodes gradients — it is a pure switchboard, so its
+//! per-step cost is O(total encoded bytes). All model math stays on the
+//! workers (mirroring the decentralized all-to-all of the paper, with the
+//! leader standing in for the interconnect).
+
+use super::messages::{Msg, WireGrad};
+use anyhow::{bail, Context, Result};
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+
+#[derive(Clone, Debug)]
+pub struct LeaderConfig {
+    /// Bind address, e.g. "127.0.0.1:7700". Port 0 picks a free port.
+    pub bind: String,
+    pub world: usize,
+    pub steps: usize,
+}
+
+/// Run the leader until `steps` exchanges have completed.
+/// Returns total relayed payload bits.
+pub fn run_leader(cfg: &LeaderConfig) -> Result<u64> {
+    let listener = TcpListener::bind(&cfg.bind).context("leader bind")?;
+    run_leader_on(listener, cfg.world, cfg.steps)
+}
+
+/// Leader loop over an already-bound listener (lets tests use port 0).
+pub fn run_leader_on(listener: TcpListener, world: usize, steps: usize) -> Result<u64> {
+    let mut conns: Vec<Option<(BufReader<TcpStream>, TcpStream)>> = (0..world).map(|_| None).collect();
+    for _ in 0..world {
+        let (stream, _) = listener.accept().context("accept")?;
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        match Msg::read_from(&mut reader)? {
+            Msg::Hello { worker, world: w } => {
+                if w as usize != world {
+                    bail!("worker announced world {w}, leader has {world}");
+                }
+                let slot = worker as usize;
+                if slot >= world || conns[slot].is_some() {
+                    bail!("bad or duplicate worker id {worker}");
+                }
+                conns[slot] = Some((reader, stream));
+            }
+            other => bail!("expected Hello, got {other:?}"),
+        }
+    }
+    let mut conns: Vec<(BufReader<TcpStream>, TcpStream)> =
+        conns.into_iter().map(|c| c.unwrap()).collect();
+
+    let mut relayed_bits = 0u64;
+    for step in 0..steps {
+        let mut grads: Vec<Option<WireGrad>> = vec![None; conns.len()];
+        for (w, (reader, _)) in conns.iter_mut().enumerate() {
+            match Msg::read_from(reader)? {
+                Msg::Grad { step: s, grad } => {
+                    if s as usize != step {
+                        bail!("worker {w} sent step {s}, expected {step}");
+                    }
+                    relayed_bits += grad.bits;
+                    grads[w] = Some(grad);
+                }
+                other => bail!("expected Grad, got {other:?}"),
+            }
+        }
+        let all = Msg::AllGrads {
+            step: step as u32,
+            grads: grads.into_iter().map(|g| g.unwrap()).collect(),
+        };
+        for (_, stream) in conns.iter_mut() {
+            all.write_to(stream)?;
+        }
+    }
+    for (_, stream) in conns.iter_mut() {
+        Msg::Done.write_to(stream)?;
+    }
+    Ok(relayed_bits)
+}

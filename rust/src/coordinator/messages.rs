@@ -1,0 +1,253 @@
+//! Length-prefixed wire frames (dependency-free serialization).
+//!
+//! Frame layout: `[tag: u8][len: u32 LE][payload: len bytes]`.
+
+use crate::quant::EncodedGrad;
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker announces itself: (worker_id, world_size).
+    Hello { worker: u32, world: u32 },
+    /// One encoded gradient for a step.
+    Grad { step: u32, grad: WireGrad },
+    /// Leader broadcast: every worker's encoded gradient for a step.
+    AllGrads { step: u32, grads: Vec<WireGrad> },
+    /// Orderly end of training.
+    Done,
+}
+
+/// Serializable form of [`EncodedGrad`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireGrad {
+    pub bits: u64,
+    pub n_full: u32,
+    pub n_tail: u32,
+    pub bucket: u32,
+    pub bytes: Vec<u8>,
+}
+
+impl From<&EncodedGrad> for WireGrad {
+    fn from(e: &EncodedGrad) -> Self {
+        WireGrad {
+            bits: e.bits,
+            n_full: e.n_full as u32,
+            n_tail: e.n_tail as u32,
+            bucket: e.bucket as u32,
+            bytes: e.bytes.clone(),
+        }
+    }
+}
+
+impl WireGrad {
+    pub fn to_encoded(&self) -> EncodedGrad {
+        EncodedGrad {
+            bytes: self.bytes.clone(),
+            bits: self.bits,
+            n_full: self.n_full as usize,
+            n_tail: self.n_tail as usize,
+            bucket: self.bucket as usize,
+        }
+    }
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_GRAD: u8 = 2;
+const TAG_ALL: u8 = 3;
+const TAG_DONE: u8 = 4;
+
+struct Buf(Vec<u8>);
+
+impl Buf {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.0.extend_from_slice(b);
+    }
+    fn grad(&mut self, g: &WireGrad) {
+        self.u64(g.bits);
+        self.u32(g.n_full);
+        self.u32(g.n_tail);
+        self.u32(g.bucket);
+        self.bytes(&g.bytes);
+    }
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated frame");
+        }
+        let v = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into()?);
+        self.i += 4;
+        Ok(v)
+    }
+    fn u64(&mut self) -> Result<u64> {
+        if self.i + 8 > self.b.len() {
+            bail!("truncated frame");
+        }
+        let v = u64::from_le_bytes(self.b[self.i..self.i + 8].try_into()?);
+        self.i += 8;
+        Ok(v)
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        if self.i + n > self.b.len() {
+            bail!("truncated frame payload");
+        }
+        let v = self.b[self.i..self.i + n].to_vec();
+        self.i += n;
+        Ok(v)
+    }
+    fn grad(&mut self) -> Result<WireGrad> {
+        Ok(WireGrad {
+            bits: self.u64()?,
+            n_full: self.u32()?,
+            n_tail: self.u32()?,
+            bucket: self.u32()?,
+            bytes: self.bytes()?,
+        })
+    }
+}
+
+impl Msg {
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let (tag, payload) = match self {
+            Msg::Hello { worker, world } => {
+                let mut b = Buf(Vec::with_capacity(8));
+                b.u32(*worker);
+                b.u32(*world);
+                (TAG_HELLO, b.0)
+            }
+            Msg::Grad { step, grad } => {
+                let mut b = Buf(Vec::with_capacity(24 + grad.bytes.len()));
+                b.u32(*step);
+                b.grad(grad);
+                (TAG_GRAD, b.0)
+            }
+            Msg::AllGrads { step, grads } => {
+                let mut b = Buf(Vec::new());
+                b.u32(*step);
+                b.u32(grads.len() as u32);
+                for g in grads {
+                    b.grad(g);
+                }
+                (TAG_ALL, b.0)
+            }
+            Msg::Done => (TAG_DONE, Vec::new()),
+        };
+        w.write_all(&[tag])?;
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        w.write_all(&payload)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Msg> {
+        let mut hdr = [0u8; 5];
+        r.read_exact(&mut hdr)?;
+        let tag = hdr[0];
+        let len = u32::from_le_bytes(hdr[1..5].try_into()?) as usize;
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload)?;
+        let mut c = Cur { b: &payload, i: 0 };
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello {
+                worker: c.u32()?,
+                world: c.u32()?,
+            },
+            TAG_GRAD => Msg::Grad {
+                step: c.u32()?,
+                grad: c.grad()?,
+            },
+            TAG_ALL => {
+                let step = c.u32()?;
+                let n = c.u32()? as usize;
+                let mut grads = Vec::with_capacity(n);
+                for _ in 0..n {
+                    grads.push(c.grad()?);
+                }
+                Msg::AllGrads { step, grads }
+            }
+            TAG_DONE => Msg::Done,
+            t => bail!("unknown frame tag {t}"),
+        };
+        if c.i != payload.len() {
+            bail!("frame has {} trailing bytes", payload.len() - c.i);
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let got = Msg::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(Msg::Hello { worker: 3, world: 8 });
+        roundtrip(Msg::Done);
+        let g = WireGrad {
+            bits: 12345,
+            n_full: 128,
+            n_tail: 5,
+            bucket: 64,
+            bytes: vec![1, 2, 3, 255, 0],
+        };
+        roundtrip(Msg::Grad { step: 7, grad: g.clone() });
+        roundtrip(Msg::AllGrads {
+            step: 9,
+            grads: vec![g.clone(), g],
+        });
+    }
+
+    #[test]
+    fn multiple_messages_stream() {
+        let mut buf = Vec::new();
+        Msg::Hello { worker: 0, world: 2 }.write_to(&mut buf).unwrap();
+        Msg::Done.write_to(&mut buf).unwrap();
+        let mut r = buf.as_slice();
+        assert!(matches!(Msg::read_from(&mut r).unwrap(), Msg::Hello { .. }));
+        assert!(matches!(Msg::read_from(&mut r).unwrap(), Msg::Done));
+    }
+
+    #[test]
+    fn rejects_bad_tag() {
+        let buf = vec![99u8, 0, 0, 0, 0];
+        assert!(Msg::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn encoded_grad_conversion() {
+        let e = EncodedGrad {
+            bytes: vec![9, 8, 7],
+            bits: 21,
+            n_full: 10,
+            n_tail: 2,
+            bucket: 5,
+        };
+        let w = WireGrad::from(&e);
+        let back = w.to_encoded();
+        assert_eq!(back.bytes, e.bytes);
+        assert_eq!(back.bits, e.bits);
+        assert_eq!(back.n_full, e.n_full);
+    }
+}

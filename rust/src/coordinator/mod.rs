@@ -1,0 +1,26 @@
+//! Wire-true distributed data-parallel runtime (Algorithm 1 over TCP).
+//!
+//! The [`crate::sim::Cluster`] simulates M workers in-process (the paper's
+//! own evaluation methodology); this module is the production topology:
+//! one **leader** process relaying encoded gradients between M **worker**
+//! processes over length-prefixed TCP frames.
+//!
+//! Synchronization model:
+//! * Workers compute, quantize, entropy-encode, and send their gradient;
+//!   the leader barriers on all M, then broadcasts the concatenation.
+//! * Every worker decodes all M gradients, aggregates, and applies the
+//!   same optimizer step — replicas stay **bit-identical** (asserted in
+//!   tests) because quantization randomness is per-worker-seeded and the
+//!   exchanged ciphertext is identical.
+//! * At update steps (𝒰 of Algorithm 1), each worker re-fits the level
+//!   optimizer on the *decoded* gradients of the previous exchange —
+//!   identical inputs ⇒ identical adapted levels, no extra round-trips
+//!   (this is the paper's "processors update their compression schemes
+//!   in parallel").
+
+pub mod leader;
+pub mod messages;
+pub mod worker;
+
+pub use leader::{run_leader, LeaderConfig};
+pub use worker::{run_worker, WorkerConfig, WorkerReport};

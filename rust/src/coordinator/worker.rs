@@ -1,0 +1,285 @@
+//! The worker: local compute + codec, lockstep replica of the model.
+
+use super::messages::{Msg, WireGrad};
+use crate::adaptive::{update_levels, Estimator};
+use crate::model::{EvalResult, TrainTask};
+use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
+use crate::quant::{decode, encode, HuffmanBook, Method, QuantizedGrad, Quantizer};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::BufReader;
+use std::net::TcpStream;
+
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub addr: String,
+    pub worker: usize,
+    pub world: usize,
+    pub method: Method,
+    pub bits: u32,
+    pub bucket: usize,
+    pub iters: usize,
+    pub lr: LrSchedule,
+    pub updates: UpdateSchedule,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub final_eval: EvalResult,
+    /// FNV-1a over the final parameter bytes: replicas must agree.
+    pub params_hash: u64,
+    pub sent_bits: u64,
+    pub final_levels: Option<Vec<f64>>,
+    pub level_updates: usize,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn params_hash(params: &[f32]) -> u64 {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_bits().to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+/// Add-δ smoothing (same rule as the in-process cluster) so codebooks are
+/// total and — crucially here — identical across replicas.
+fn smooth(weights: &[f64]) -> Vec<f64> {
+    let total: f64 = weights.iter().sum();
+    let delta = (total * 1e-4).max(1e-6);
+    weights.iter().map(|w| w + delta).collect()
+}
+
+/// Run one worker to completion against the leader at `cfg.addr`.
+pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<WorkerReport> {
+    let stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting to leader {}", cfg.addr))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    Msg::Hello {
+        worker: cfg.worker as u32,
+        world: cfg.world as u32,
+    }
+    .write_to(&mut writer)?;
+
+    let d = task.param_count();
+    // All replicas must initialize identically.
+    let mut params = task.init_params(cfg.seed ^ 0xA5A5);
+    let mut optimizer: Box<dyn Optimizer> = if cfg.momentum > 0.0 {
+        Box::new(Umsgd::heavy_ball(cfg.momentum, cfg.weight_decay))
+    } else {
+        Box::new(Sgd::new(cfg.weight_decay))
+    };
+
+    let mut quantizer = cfg.method.initial_levels(cfg.bits).map(|levels| {
+        let mut q = Quantizer::new(levels, cfg.method.norm_type(), cfg.bucket);
+        if let Some(c) = cfg.method.clip_factor() {
+            q = q.with_clip(c);
+        }
+        q
+    });
+    // Uniform initial codebook: identical on every replica by construction.
+    let mut book = quantizer
+        .as_ref()
+        .map(|q| HuffmanBook::from_weights(&vec![1.0; q.levels().num_symbols()]));
+
+    // Per-worker quantization randomness (replicas need not share this —
+    // only the ciphertext is shared).
+    let mut qrng = Rng::new(cfg.seed ^ (cfg.worker as u64).wrapping_mul(0x9E3779B97F4A7C15));
+
+    let mut grad = vec![0.0f32; d];
+    let mut agg = vec![0.0f32; d];
+    let mut ghat = vec![0.0f32; d];
+    let mut prev_decoded: Vec<Vec<f32>> = Vec::new();
+    let mut sent_bits = 0u64;
+    let mut level_updates = 0usize;
+
+    for step in 0..cfg.iters {
+        task.grad(&params, cfg.worker, step, &mut grad);
+
+        // Adapt from last exchange's decoded gradients (identical on all
+        // replicas ⇒ identical levels + codebook).
+        if cfg.updates.is_update_step(step) && !prev_decoded.is_empty() {
+            if let Some(q) = &mut quantizer {
+                if cfg.method.is_adaptive() {
+                    let mut est = Estimator::new(cfg.bucket, q.norm_type(), 20);
+                    for g in &prev_decoded {
+                        est.observe(g);
+                    }
+                    // Deterministic subsample seed shared by all replicas.
+                    let mut rng = Rng::new(cfg.seed ^ step as u64);
+                    if let Some(mix) = est.fit(cfg.method.weighted_mixture(), &mut rng) {
+                        let new_levels = update_levels(cfg.method, q.levels(), &mix);
+                        q.set_levels(new_levels);
+                        let probs =
+                            crate::adaptive::objective::symbol_probs(&mix, q.levels());
+                        book = Some(HuffmanBook::from_weights(&smooth(&probs)));
+                        level_updates += 1;
+                    }
+                }
+            }
+        }
+
+        // Quantize + encode.
+        let wire = if let Some(q) = &quantizer {
+            let qg = q.quantize(&grad, &mut qrng);
+            let enc = encode(&qg, q.levels(), book.as_ref().unwrap());
+            WireGrad::from(&enc)
+        } else {
+            // Full precision: everything rides in the fp32 tail.
+            let qg = QuantizedGrad {
+                qidx: vec![],
+                norms: vec![],
+                tail: grad.clone(),
+                bucket: cfg.bucket,
+            };
+            let dummy_levels = crate::quant::Levels::uniform(2);
+            let dummy_book = HuffmanBook::from_weights(&[1.0, 1.0]);
+            WireGrad::from(&encode(&qg, &dummy_levels, &dummy_book))
+        };
+        sent_bits += wire.bits;
+        Msg::Grad {
+            step: step as u32,
+            grad: wire,
+        }
+        .write_to(&mut writer)?;
+
+        // Receive everyone's gradient; decode; aggregate.
+        let grads = match Msg::read_from(&mut reader)? {
+            Msg::AllGrads { step: s, grads } => {
+                if s as usize != step {
+                    bail!("leader sent step {s}, expected {step}");
+                }
+                grads
+            }
+            other => bail!("expected AllGrads, got {other:?}"),
+        };
+        agg.fill(0.0);
+        prev_decoded.clear();
+        for w in &grads {
+            let enc = w.to_encoded();
+            if let Some(q) = &quantizer {
+                let qg = decode(&enc, q.levels(), book.as_ref().unwrap());
+                q.dequantize(&qg, &mut ghat);
+            } else {
+                let dummy_levels = crate::quant::Levels::uniform(2);
+                let dummy_book = HuffmanBook::from_weights(&[1.0, 1.0]);
+                let qg = decode(&enc, &dummy_levels, &dummy_book);
+                ghat.copy_from_slice(&qg.tail);
+            }
+            for (a, &g) in agg.iter_mut().zip(&ghat) {
+                *a += g / cfg.world as f32;
+            }
+            prev_decoded.push(ghat.clone());
+        }
+
+        optimizer.step(&mut params, &agg, cfg.lr.lr(step));
+    }
+
+    match Msg::read_from(&mut reader)? {
+        Msg::Done => {}
+        other => bail!("expected Done, got {other:?}"),
+    }
+
+    Ok(WorkerReport {
+        final_eval: task.eval(&params),
+        params_hash: params_hash(&params),
+        sent_bits,
+        final_levels: quantizer.map(|q| q.levels().mags().to_vec()),
+        level_updates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::leader::run_leader_on;
+    use crate::data::Blobs;
+    use crate::model::{Mlp, MlpTask};
+    use std::net::TcpListener;
+
+    fn spawn_cluster(method: Method, iters: usize, world: usize) -> Vec<WorkerReport> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let leader = std::thread::spawn(move || run_leader_on(listener, world, iters).unwrap());
+
+        let mut handles = Vec::new();
+        for w in 0..world {
+            let addr = addr.clone();
+            let cfg = WorkerConfig {
+                addr,
+                worker: w,
+                world,
+                method,
+                bits: 3,
+                bucket: 128,
+                iters,
+                lr: LrSchedule::paper_default(0.1, iters),
+                updates: UpdateSchedule::at(vec![3, 20], 50, 20),
+                momentum: 0.9,
+                weight_decay: 1e-4,
+                seed: 42,
+            };
+            handles.push(std::thread::spawn(move || {
+                // Same dataset seed on every worker: shards differ by
+                // worker id inside the task.
+                let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, 7);
+                let mut task = MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, world, 7);
+                run_worker(&cfg, &mut task).unwrap()
+            }));
+        }
+        let reports: Vec<WorkerReport> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        leader.join().unwrap();
+        reports
+    }
+
+    #[test]
+    fn replicas_stay_bit_identical_alq() {
+        let reports = spawn_cluster(Method::Alq, 60, 4);
+        let h0 = reports[0].params_hash;
+        for r in &reports {
+            assert_eq!(r.params_hash, h0, "replica divergence!");
+        }
+        // Levels adapted identically everywhere.
+        let l0 = reports[0].final_levels.clone().unwrap();
+        for r in &reports {
+            assert_eq!(r.final_levels.as_ref().unwrap(), &l0);
+        }
+        assert!(reports[0].level_updates >= 1);
+    }
+
+    #[test]
+    fn replicas_stay_bit_identical_supersgd() {
+        let reports = spawn_cluster(Method::SuperSgd, 30, 3);
+        let h0 = reports[0].params_hash;
+        for r in &reports {
+            assert_eq!(r.params_hash, h0);
+            assert!(r.final_levels.is_none());
+        }
+    }
+
+    #[test]
+    fn distributed_training_learns() {
+        let reports = spawn_cluster(Method::QsgdInf, 300, 4);
+        assert!(
+            reports[0].final_eval.accuracy > 0.65,
+            "acc {}",
+            reports[0].final_eval.accuracy
+        );
+        // Quantized workers sent far fewer bits than fp32 would need.
+        let d = Mlp::new(vec![8, 32, 4]).param_count() as u64;
+        assert!(reports[0].sent_bits < 300 * 32 * d / 4);
+    }
+}

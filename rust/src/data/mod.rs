@@ -1,0 +1,7 @@
+//! Synthetic datasets (the CIFAR-10 / ImageNet substitutes; DESIGN.md §3).
+
+pub mod synth;
+pub mod text;
+
+pub use synth::Blobs;
+pub use text::Corpus;

@@ -1,0 +1,199 @@
+//! Gaussian-blob classification data — the CIFAR-10 stand-in.
+//!
+//! C class centroids drawn on a sphere; samples are centroid + isotropic
+//! noise, plus a small fraction of label noise so the task is not
+//! separable (otherwise every method trivially reaches 100% and the
+//! quantization comparison degenerates). Deterministic per seed.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Blobs {
+    pub dim: usize,
+    pub classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<u32>,
+    pub val_x: Vec<f32>,
+    pub val_y: Vec<u32>,
+}
+
+impl Blobs {
+    /// `noise` is the per-dimension sample std relative to unit-norm
+    /// centroids; ~1.0 gives a task where a good MLP lands at 85–95%.
+    pub fn generate(
+        dim: usize,
+        classes: usize,
+        n_train: usize,
+        n_val: usize,
+        noise: f64,
+        seed: u64,
+    ) -> Blobs {
+        let mut rng = Rng::new(seed);
+        // Centroids: random directions at radius 2 — pairwise separation
+        // ≈ 2√2, so unit noise gives a Bayes accuracy in the 75–90% range
+        // (hard enough that quantization noise matters, per §5).
+        let radius = 2.0;
+        let mut centroids = vec![0.0f64; classes * dim];
+        for c in 0..classes {
+            let row = &mut centroids[c * dim..(c + 1) * dim];
+            let mut norm = 0.0;
+            for v in row.iter_mut() {
+                *v = rng.normal();
+                norm += *v * *v;
+            }
+            let norm = norm.sqrt().max(1e-9);
+            for v in row.iter_mut() {
+                *v *= radius / norm;
+            }
+        }
+        let label_noise = 0.08;
+        let gen = |n: usize, rng: &mut Rng| {
+            let mut x = Vec::with_capacity(n * dim);
+            let mut y = Vec::with_capacity(n);
+            for _ in 0..n {
+                let c = rng.below(classes);
+                let row = &centroids[c * dim..(c + 1) * dim];
+                for &m in row {
+                    x.push((m + noise * rng.normal()) as f32);
+                }
+                let label = if rng.f64() < label_noise {
+                    rng.below(classes) as u32
+                } else {
+                    c as u32
+                };
+                y.push(label);
+            }
+            (x, y)
+        };
+        let (train_x, train_y) = gen(n_train, &mut rng);
+        let (val_x, val_y) = gen(n_val, &mut rng);
+        Blobs {
+            dim,
+            classes,
+            train_x,
+            train_y,
+            val_x,
+            val_y,
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn val_set(&self) -> (&[f32], &[u32]) {
+        (&self.val_x, &self.val_y)
+    }
+
+    /// Sample a minibatch from worker `w`'s contiguous shard of the
+    /// training set (data-parallel sharding).
+    pub fn sample_train_shard(
+        &self,
+        worker: usize,
+        workers: usize,
+        batch: usize,
+        rng: &mut Rng,
+        x_out: &mut Vec<f32>,
+        y_out: &mut Vec<u32>,
+    ) {
+        let n = self.n_train();
+        let shard = n / workers;
+        let start = worker * shard;
+        let len = if worker == workers - 1 { n - start } else { shard };
+        x_out.clear();
+        y_out.clear();
+        for _ in 0..batch {
+            let i = start + rng.below(len);
+            x_out.extend_from_slice(&self.train_x[i * self.dim..(i + 1) * self.dim]);
+            y_out.push(self.train_y[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Blobs::generate(8, 4, 100, 20, 1.0, 3);
+        let b = Blobs::generate(8, 4, 100, 20, 1.0, 3);
+        let c = Blobs::generate(8, 4, 100, 20, 1.0, 4);
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.val_y, b.val_y);
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn shapes() {
+        let b = Blobs::generate(16, 10, 500, 100, 1.0, 1);
+        assert_eq!(b.train_x.len(), 500 * 16);
+        assert_eq!(b.train_y.len(), 500);
+        assert_eq!(b.val_x.len(), 100 * 16);
+        assert!(b.train_y.iter().all(|&y| y < 10));
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let b = Blobs::generate(8, 4, 1000, 100, 1.0, 2);
+        for c in 0..4u32 {
+            assert!(b.train_y.contains(&c));
+        }
+    }
+
+    #[test]
+    fn shards_are_disjoint_ranges() {
+        let b = Blobs::generate(4, 2, 100, 10, 1.0, 5);
+        let mut rng = Rng::new(0);
+        let (mut x0, mut y0) = (Vec::new(), Vec::new());
+        b.sample_train_shard(0, 4, 200, &mut rng, &mut x0, &mut y0);
+        // Every sampled row from shard 0 must exist in rows 0..25.
+        for k in 0..y0.len() {
+            let row = &x0[k * 4..(k + 1) * 4];
+            let found = (0..25).any(|i| &b.train_x[i * 4..(i + 1) * 4] == row);
+            assert!(found, "sample {k} escaped its shard");
+        }
+    }
+
+    #[test]
+    fn task_is_learnable_but_not_trivial() {
+        // Nearest-centroid achievable accuracy should be well above chance
+        // but below 100% (noise + label noise).
+        let b = Blobs::generate(8, 4, 400, 400, 1.0, 7);
+        // Estimate class means from train data.
+        let mut means = vec![0.0f64; 4 * 8];
+        let mut counts = [0usize; 4];
+        for i in 0..b.n_train() {
+            let c = b.train_y[i] as usize;
+            counts[c] += 1;
+            for d in 0..8 {
+                means[c * 8 + d] += b.train_x[i * 8 + d] as f64;
+            }
+        }
+        for c in 0..4 {
+            for d in 0..8 {
+                means[c * 8 + d] /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..b.val_y.len() {
+            let mut best = (0, f64::INFINITY);
+            for c in 0..4 {
+                let mut d2 = 0.0;
+                for d in 0..8 {
+                    let diff = b.val_x[i * 8 + d] as f64 - means[c * 8 + d];
+                    d2 += diff * diff;
+                }
+                if d2 < best.1 {
+                    best = (c, d2);
+                }
+            }
+            if best.0 as u32 == b.val_y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / b.val_y.len() as f64;
+        assert!(acc > 0.5, "learnable: {acc}");
+        assert!(acc < 0.999, "not trivial: {acc}");
+    }
+}

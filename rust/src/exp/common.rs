@@ -1,0 +1,219 @@
+//! Shared experiment plumbing: model scales, task construction, runners.
+
+use crate::data::Blobs;
+use crate::model::{Mlp, MlpTask};
+use crate::opt::{LrSchedule, UpdateSchedule};
+use crate::quant::Method;
+use crate::sim::{Cluster, ClusterConfig, NetworkModel, TrainRecord};
+use std::path::PathBuf;
+
+/// A scaled-down stand-in for one of the paper's model/dataset pairs
+/// (DESIGN.md §3: bucket sizes scale with the ~22× parameter reduction).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Which paper workload this stands in for.
+    pub paper_name: &'static str,
+    pub name: &'static str,
+    pub dims: Vec<usize>,
+    pub batch: usize,
+    pub bucket: usize,
+    pub data_dim: usize,
+    pub classes: usize,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub noise: f64,
+}
+
+impl ModelSpec {
+    /// ResNet-32 on CIFAR-10 → 3-layer MLP, bucket 512 (≈ 8192 / 22).
+    pub fn resnet32_standin() -> Self {
+        ModelSpec {
+            paper_name: "ResNet-32 on CIFAR-10",
+            name: "mlp32",
+            dims: vec![32, 128, 128, 10],
+            batch: 16,
+            bucket: 512,
+            data_dim: 32,
+            classes: 10,
+            n_train: 16384,
+            n_val: 1024,
+            noise: 0.8,
+        }
+    }
+
+    /// ResNet-110 on CIFAR-10 → deeper MLP, bucket 1024 (≈ 16384 / 22).
+    pub fn resnet110_standin() -> Self {
+        ModelSpec {
+            paper_name: "ResNet-110 on CIFAR-10",
+            name: "mlp110",
+            dims: vec![32, 128, 128, 128, 128, 10],
+            batch: 16,
+            bucket: 1024,
+            data_dim: 32,
+            classes: 10,
+            n_train: 16384,
+            n_val: 1024,
+            noise: 0.8,
+        }
+    }
+
+    /// ResNet-8 on CIFAR-10 (the Fig. 7 sweep model) → small MLP.
+    pub fn resnet8_standin() -> Self {
+        ModelSpec {
+            paper_name: "ResNet-8 on CIFAR-10",
+            name: "mlp8",
+            dims: vec![32, 64, 10],
+            batch: 16,
+            bucket: 256,
+            data_dim: 32,
+            classes: 10,
+            n_train: 16384,
+            n_val: 1024,
+            noise: 0.8,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        Mlp::new(self.dims.clone()).param_count()
+    }
+
+    pub fn task(&self, workers: usize, data_seed: u64) -> MlpTask {
+        let blobs = Blobs::generate(
+            self.data_dim,
+            self.classes,
+            self.n_train,
+            self.n_val,
+            self.noise,
+            data_seed,
+        );
+        MlpTask::new(
+            Mlp::new(self.dims.clone()),
+            blobs,
+            self.batch,
+            workers,
+            data_seed ^ 0x51ED,
+        )
+    }
+}
+
+/// Build the cluster config for one run.
+pub fn cluster_config(
+    method: Method,
+    _spec: &ModelSpec,
+    iters: usize,
+    workers: usize,
+    bits: u32,
+    bucket: usize,
+    seed: u64,
+) -> ClusterConfig {
+    ClusterConfig {
+        method,
+        workers,
+        bits,
+        bucket,
+        iters,
+        lr: LrSchedule::paper_default(0.1, iters),
+        updates: UpdateSchedule::paper_default(iters),
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        seed,
+        eval_every: (iters / 25).max(1),
+        variance_every: 0,
+        network: NetworkModel::paper_testbed(),
+    }
+}
+
+/// Run one (method, seed) training job end to end.
+pub fn run_one(
+    method: Method,
+    spec: &ModelSpec,
+    iters: usize,
+    workers: usize,
+    bits: u32,
+    bucket: usize,
+    seed: u64,
+    variance_every: usize,
+) -> TrainRecord {
+    let mut cfg = cluster_config(method, spec, iters, workers, bits, bucket, seed);
+    cfg.variance_every = variance_every;
+    let mut task = spec.task(workers, seed.wrapping_mul(31).wrapping_add(7));
+    Cluster::new(cfg).train(&mut task)
+}
+
+/// Output directory for experiment CSVs.
+pub fn out_dir() -> PathBuf {
+    std::env::var("AQSGD_RUNS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/runs")))
+}
+
+/// Common flag parsing for experiment drivers.
+pub struct ExpArgs {
+    pub full: bool,
+    pub long: bool,
+    pub clip: bool,
+    pub seeds: usize,
+    pub iters: Option<usize>,
+}
+
+impl ExpArgs {
+    pub fn parse(args: &[String]) -> Self {
+        let mut out = ExpArgs {
+            full: false,
+            long: false,
+            clip: false,
+            seeds: 3,
+            iters: None,
+        };
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--full" => out.full = true,
+                "--long" => out.long = true,
+                "--clip" => out.clip = true,
+                "--seeds" => out.seeds = it.next().and_then(|v| v.parse().ok()).unwrap_or(3),
+                "--iters" => out.iters = it.next().and_then(|v| v.parse().ok()),
+                _ => {}
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_sane() {
+        for spec in [
+            ModelSpec::resnet32_standin(),
+            ModelSpec::resnet110_standin(),
+            ModelSpec::resnet8_standin(),
+        ] {
+            assert!(spec.param_count() > spec.bucket, "{}", spec.name);
+            let mut task = spec.task(4, 1);
+            use crate::model::TrainTask;
+            let p = task.init_params(0);
+            let mut g = vec![0.0; p.len()];
+            let loss = task.grad(&p, 0, 0, &mut g);
+            assert!(loss.is_finite() && loss > 0.0);
+        }
+    }
+
+    #[test]
+    fn run_one_smoke() {
+        let spec = ModelSpec::resnet8_standin();
+        let rec = run_one(Method::QsgdInf, &spec, 20, 2, 3, 128, 1, 10);
+        assert_eq!(rec.steps.len(), 20);
+        assert!(!rec.variance.is_empty());
+    }
+
+    #[test]
+    fn exp_args_parse() {
+        let a = ExpArgs::parse(&["--full".into(), "--seeds".into(), "5".into()]);
+        assert!(a.full);
+        assert_eq!(a.seeds, 5);
+        assert!(!a.clip);
+    }
+}

@@ -1,0 +1,47 @@
+//! Fig. 4 — mean gradient variance *during training* (each method on its
+//! own trajectory). Adaptive methods should hold the lowest variance.
+
+use super::common::{out_dir, run_one, ExpArgs, ModelSpec};
+use crate::metrics::{Series, Table};
+use anyhow::Result;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let a = ExpArgs::parse(args);
+    let iters = a.iters.unwrap_or(if a.full { 3000 } else { 1200 });
+    let workers = 4;
+    let bits = 3;
+    let spec = ModelSpec::resnet32_standin();
+    let every = (iters / 60).max(1);
+
+    println!("Fig. 4 — variance during training (model {}, {iters} iters)", spec.name);
+    let mut series = Vec::new();
+    let mut summary = Table::new(
+        "Fig. 4: mean per-coordinate variance of the update estimate",
+        &["Method", "mean(total var)", "mean(quant var)"],
+    );
+    for method in super::table1::METHODS {
+        let rec = run_one(method, &spec, iters, workers, bits, spec.bucket, 5, every);
+        let mut s = Series::new(method.name());
+        let mut tot = 0.0;
+        let mut q = 0.0;
+        for v in &rec.variance {
+            s.push(v.step, v.total_var);
+            tot += v.total_var;
+            q += v.quant_var;
+        }
+        let n = rec.variance.len().max(1) as f64;
+        summary.row(vec![
+            method.name().into(),
+            format!("{:.4e}", tot / n),
+            format!("{:.4e}", q / n),
+        ]);
+        series.push(s);
+    }
+    let path = out_dir().join("fig4_variance.csv");
+    Series::save_csv(&series, &path)?;
+    println!("{}", summary.to_markdown());
+    println!("curves written to {path:?}");
+    println!("\nPaper shape: SuperSGD lowest (= SGD/M); ALQ/AMQ close behind;");
+    println!("QSGDinf/TRN higher; NUQSGD highest.");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Fig. 7 — robustness sweeps on the ResNet-8 stand-in:
+//! (a) bucket size at 3 bits, (b) bit width at fixed bucket.
+//! `--clip` turns on 2.5σ gradient clipping for every method — the
+//! Appendix K.2 / Fig. 14 ablation.
+
+use super::common::{out_dir, ExpArgs, ModelSpec};
+use crate::metrics::{mean_std, Table};
+use crate::quant::Method;
+use crate::sim::Cluster;
+use anyhow::Result;
+
+const METHODS: [Method; 6] = [
+    Method::NuqSgd,
+    Method::QsgdInf,
+    Method::Trn,
+    Method::Alq,
+    Method::AlqN,
+    Method::Amq,
+];
+
+fn run_cell(
+    method: Method,
+    spec: &ModelSpec,
+    iters: usize,
+    bits: u32,
+    bucket: usize,
+    seeds: usize,
+    clip: bool,
+) -> (f64, f64) {
+    let mut accs = Vec::new();
+    for seed in 0..seeds as u64 {
+        let mut cfg = super::common::cluster_config(method, spec, iters, 4, bits, bucket, 31 + seed);
+        cfg.eval_every = 0;
+        let mut cluster = Cluster::new(cfg);
+        if clip {
+            // Force the K.2 ablation clip onto every quantized method
+            // (TRN already clips by definition).
+            cluster.force_clip(2.5);
+        }
+        let mut task = spec.task(4, 1000 + seed);
+        let rec = cluster.train(&mut task);
+        accs.push(rec.final_eval.accuracy);
+    }
+    mean_std(&accs)
+}
+
+pub fn run(args: &[String]) -> Result<()> {
+    let a = ExpArgs::parse(args);
+    let iters = a.iters.unwrap_or(if a.full { 1600 } else { 800 });
+    let spec = ModelSpec::resnet8_standin();
+    let seeds = a.seeds.min(3);
+    let clip_tag = if a.clip { " (2.5σ clipping — Fig. 14)" } else { "" };
+
+    // (a) bucket-size sweep at 3 bits.
+    let buckets = if a.full {
+        vec![64usize, 256, 1024, 4096, 8192]
+    } else {
+        vec![64usize, 256, 1024, 4096]
+    };
+    println!(
+        "Fig. 7a — bucket sweep{clip_tag}: model {}, 3 bits, {iters} iters, {seeds} seeds",
+        spec.name
+    );
+    let mut cols: Vec<String> = vec!["Method".into()];
+    cols.extend(buckets.iter().map(|b| b.to_string()));
+    let mut t_bucket = Table::new(
+        "Fig. 7a: val accuracy vs bucket size (3 bits)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for method in METHODS {
+        let mut cells = vec![method.name().to_string()];
+        for &bucket in &buckets {
+            let (m, s) = run_cell(method, &spec, iters, 3, bucket, seeds, a.clip);
+            cells.push(format!("{:.1}±{:.1}", 100.0 * m, 100.0 * s));
+            println!("  {method:<8} bucket {bucket:<6} {:.1}%", 100.0 * m);
+        }
+        t_bucket.row(cells);
+    }
+    println!("\n{}", t_bucket.to_markdown());
+
+    // (b) bit-width sweep at fixed bucket.
+    let bit_list = if a.full {
+        vec![2u32, 3, 4, 5, 6, 8]
+    } else {
+        vec![2u32, 3, 4, 6]
+    };
+    println!(
+        "Fig. 7b — bit sweep{clip_tag}: bucket {}, {iters} iters",
+        spec.bucket
+    );
+    let mut cols: Vec<String> = vec!["Method".into()];
+    cols.extend(bit_list.iter().map(|b| format!("{b} bits")));
+    let mut t_bits = Table::new(
+        "Fig. 7b: val accuracy vs bits",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for method in METHODS {
+        let mut cells = vec![method.name().to_string()];
+        for &bits in &bit_list {
+            let (m, s) = run_cell(method, &spec, iters, bits, spec.bucket, seeds, a.clip);
+            cells.push(format!("{:.1}±{:.1}", 100.0 * m, 100.0 * s));
+            println!("  {method:<8} {bits} bits {:.1}%", 100.0 * m);
+        }
+        t_bits.row(cells);
+    }
+    println!("\n{}", t_bits.to_markdown());
+
+    let tag = if a.clip { "fig14" } else { "fig7" };
+    let path = out_dir().join(format!("{tag}_bucket.csv"));
+    t_bucket.save_csv(&path)?;
+    let path2 = out_dir().join(format!("{tag}_bits.csv"));
+    t_bits.save_csv(&path2)?;
+    println!("tables written to {path:?}, {path2:?}");
+    println!("\nPaper shape: adaptive methods flat across both sweeps; NUQSGD good");
+    println!("only near bucket ≈ 100; QSGDinf degrades at the extremes; 2 bits hurts AMQ.");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Experiment harness: one driver per paper table/figure (DESIGN.md §6).
+//!
+//! Every driver prints the paper-shaped table/series to stdout and writes
+//! CSVs under `runs/`. Workloads are scaled to minutes-on-CPU (see
+//! DESIGN.md §3 for the substitution argument); pass `--full` for the
+//! larger configurations recorded in EXPERIMENTS.md.
+
+pub mod common;
+pub mod fig1;
+pub mod fig3_loss;
+pub mod fig4_variance;
+pub mod fig5_no_train;
+pub mod fig6_levels;
+pub mod fig7_sweep;
+pub mod fig8_convergence;
+pub mod table1;
+pub mod table2;
+pub mod timing;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids, mapped to the paper artifact they regenerate.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig1", "Fig. 1 — variance of normalized coordinates during training"),
+    ("table1", "Table 1 — validation accuracy, 4 workers, 3 bits"),
+    ("table2", "Table 2 — scaling to 16/32 workers"),
+    ("table4", "Table 4 — long-horizon headline (table1 --long)"),
+    ("fig3", "Fig. 3 — validation loss curves"),
+    ("fig4", "Fig. 4 — gradient variance during training"),
+    ("fig5", "Fig. 5 — variance on the frozen SGD trajectory"),
+    ("fig6", "Fig. 6 — final quantization levels per method"),
+    ("fig7", "Fig. 7 — bucket-size and bit-width sweeps"),
+    ("fig8", "Fig. 8 — convergence of level-update methods"),
+    ("fig14", "Fig. 14 (K.2) — gradient clipping ablation (fig7 --clip)"),
+    ("timing", "Tables 5–7 — per-step and level-update timing"),
+];
+
+/// Dispatch an experiment by id.
+pub fn run(name: &str, args: &[String]) -> Result<()> {
+    match name {
+        "fig1" => fig1::run(args),
+        "table1" => table1::run(args),
+        "table2" => table2::run(args),
+        "table4" => {
+            let mut a = args.to_vec();
+            a.push("--long".into());
+            table1::run(&a)
+        }
+        "fig3" => fig3_loss::run(args),
+        "fig4" => fig4_variance::run(args),
+        "fig5" => fig5_no_train::run(args),
+        "fig6" => fig6_levels::run(args),
+        "fig7" => fig7_sweep::run(args),
+        "fig8" => fig8_convergence::run(args),
+        "fig14" => {
+            let mut a = args.to_vec();
+            a.push("--clip".into());
+            fig7_sweep::run(&a)
+        }
+        "timing" => timing::run(args),
+        other => bail!(
+            "unknown experiment {other:?}; available: {:?}",
+            EXPERIMENTS.iter().map(|(n, _)| *n).collect::<Vec<_>>()
+        ),
+    }
+}

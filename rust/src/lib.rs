@@ -1,0 +1,34 @@
+//! # aqsgd — Adaptive Gradient Quantization for Data-Parallel SGD
+//!
+//! Production-quality reproduction of Faghri et al., *"Adaptive Gradient
+//! Quantization for Data-Parallel SGD"* (NeurIPS 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** (build time): Pallas quantization / statistics kernels
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **L2** (build time): JAX model fwd/bwd (`python/compile/model.py`),
+//!   AOT-lowered to HLO text.
+//! * **L3** (run time, this crate): the data-parallel coordinator —
+//!   bucketed stochastic quantization, entropy coding, the ALQ/AMQ
+//!   adaptive level optimizers, baselines (QSGDinf/NUQSGD/TRN), the
+//!   M-worker cluster simulation, the tokio leader/worker runtime, and
+//!   the experiment harness reproducing every table and figure.
+//!
+//! Python never runs on the request path: `runtime` loads the HLO
+//! artifacts once via PJRT and executes them natively.
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index.
+
+pub mod adaptive;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod opt;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;

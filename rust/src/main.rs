@@ -1,0 +1,181 @@
+//! `aqsgd` — CLI for the Adaptive Gradient Quantization reproduction.
+//!
+//! Subcommands:
+//!   train   — one data-parallel training run (simulated cluster)
+//!   exp     — regenerate a paper table/figure (see `aqsgd exp list`)
+//!   leader  — start a distributed leader (TCP)
+//!   worker  — start a distributed worker (TCP)
+//!   inspect — validate + describe the AOT artifacts
+//!
+//! Hand-rolled argument parsing: the offline image vendors only the `xla`
+//! crate closure, so no clap.
+
+use anyhow::{bail, Context, Result};
+use aqsgd::config::RunConfig;
+use aqsgd::coordinator::{run_leader, run_worker, LeaderConfig, WorkerConfig};
+use aqsgd::exp;
+use aqsgd::opt::{LrSchedule, UpdateSchedule};
+use aqsgd::runtime::{Manifest, Runtime};
+use aqsgd::sim::Cluster;
+
+const USAGE: &str = "\
+aqsgd — Adaptive Gradient Quantization for Data-Parallel SGD (NeurIPS 2020)
+
+USAGE:
+  aqsgd train [--method ALQ] [--workers 4] [--bits 3] [--bucket 8192]
+              [--iters 3000] [--seed 1] [--model mlp]
+  aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
+  aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
+  aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
+              [--method ALQ --bits 3 --bucket 512 --seed 42]
+  aqsgd inspect [--artifacts DIR]
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("exp") => cmd_exp(&args[1..]),
+        Some("leader") => cmd_leader(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    println!(
+        "training: method={} workers={} bits={} bucket={} iters={} model={}",
+        cfg.method, cfg.workers, cfg.bits, cfg.bucket, cfg.iters, cfg.model
+    );
+    if cfg.model != "mlp" {
+        bail!("`train` runs the pure-Rust blobs task; for HLO models see examples/train_lm.rs");
+    }
+    let spec = aqsgd::exp::common::ModelSpec::resnet32_standin();
+    let mut accs = Vec::new();
+    for seed in 0..cfg.seeds as u64 {
+        let mut ccfg = cfg.cluster();
+        ccfg.seed = cfg.seed + seed;
+        ccfg.bucket = cfg.bucket.min(spec.param_count() / 2);
+        let mut task = spec.task(cfg.workers, cfg.seed + seed);
+        let rec = Cluster::new(ccfg).train(&mut task);
+        println!(
+            "  seed {}: val acc {:.4}, val loss {:.4}, bits/step {:.0}, levels {:?}",
+            seed,
+            rec.final_eval.accuracy,
+            rec.final_eval.loss,
+            rec.comm_bits as f64 / rec.steps.len() as f64,
+            rec.final_levels
+                .as_ref()
+                .map(|l| l.iter().map(|x| (x * 1e4).round() / 1e4).collect::<Vec<_>>())
+        );
+        accs.push(rec.final_eval.accuracy);
+    }
+    let (m, s) = aqsgd::metrics::mean_std(&accs);
+    println!("mean val acc: {}", aqsgd::metrics::pct(m, s));
+    Ok(())
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        None | Some("list") => {
+            println!("experiments:");
+            for (id, desc) in exp::EXPERIMENTS {
+                println!("  {id:<8} {desc}");
+            }
+            Ok(())
+        }
+        Some(id) => exp::run(id, &args[1..]),
+    }
+}
+
+fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn cmd_leader(args: &[String]) -> Result<()> {
+    let cfg = LeaderConfig {
+        bind: flag(args, "--bind").unwrap_or("127.0.0.1:7700").to_string(),
+        world: flag(args, "--world").unwrap_or("4").parse()?,
+        steps: flag(args, "--iters").unwrap_or("500").parse()?,
+    };
+    println!("leader on {} (world {}, {} steps)", cfg.bind, cfg.world, cfg.steps);
+    let bits = run_leader(&cfg)?;
+    println!("relayed {bits} payload bits");
+    Ok(())
+}
+
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let iters: usize = flag(args, "--iters").unwrap_or("500").parse()?;
+    let method = aqsgd::quant::Method::parse(flag(args, "--method").unwrap_or("ALQ"))
+        .context("bad --method")?;
+    let cfg = WorkerConfig {
+        addr: flag(args, "--addr").unwrap_or("127.0.0.1:7700").to_string(),
+        worker: flag(args, "--worker").unwrap_or("0").parse()?,
+        world: flag(args, "--world").unwrap_or("4").parse()?,
+        method,
+        bits: flag(args, "--bits").unwrap_or("3").parse()?,
+        bucket: flag(args, "--bucket").unwrap_or("512").parse()?,
+        iters,
+        lr: LrSchedule::paper_default(0.1, iters),
+        updates: UpdateSchedule::paper_default(iters),
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        seed: flag(args, "--seed").unwrap_or("42").parse()?,
+    };
+    let spec = aqsgd::exp::common::ModelSpec::resnet32_standin();
+    let mut task = spec.task(cfg.world, 7);
+    println!("worker {}/{} → {}", cfg.worker, cfg.world, cfg.addr);
+    let report = run_worker(&cfg, &mut task)?;
+    println!(
+        "done: val acc {:.4}, params hash {:016x}, sent {} bits, {} level updates",
+        report.final_eval.accuracy, report.params_hash, report.sent_bits, report.level_updates
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let dir = flag(args, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let m = Manifest::load(&dir)?;
+    let rt = Runtime::cpu()?;
+    println!("artifacts in {dir:?} (PJRT platform: {})", rt.platform());
+    println!("\nmodels:");
+    for (name, e) in &m.models {
+        println!(
+            "  {name:<10} kind={} params={} layout tensors={} goldens={}",
+            e.kind,
+            e.param_count,
+            e.layout.len(),
+            e.goldens.is_some()
+        );
+    }
+    println!("\nkernel ops:");
+    for (name, op) in m.quantize.iter().chain(m.stats.iter()) {
+        println!(
+            "  {name:<20} n={} bucket={} k={} norm={}",
+            op.n, op.bucket, op.k, op.norm_type
+        );
+    }
+    // Compile the tiny ones as a health check.
+    let tiny = m.model("mlp_tiny")?;
+    rt.compile_hlo_text(&tiny.train_hlo)?;
+    println!("\nmlp_tiny.train compiles OK — runtime healthy");
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! Run metrics: CSV recording and markdown table rendering for the
+//! experiment harness (results land in `runs/` and EXPERIMENTS.md).
+
+use std::io::Write;
+use std::path::Path;
+
+/// A rectangular table of named columns; renders to CSV or markdown.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.columns.join(","));
+        s.push('\n');
+        for r in &self.rows {
+            let escaped: Vec<String> = r
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            s.push_str(&escaped.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (w, c) in widths.iter_mut().zip(r) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            s.push_str(&format!("### {}\n\n", self.title));
+        }
+        s.push_str(&fmt_row(&self.columns));
+        s.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        s.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for r in &self.rows {
+            s.push_str(&fmt_row(r));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// mean ± std over a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() == 1 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// Format "93.24% ± 0.06" like the paper's tables.
+pub fn pct(mean: f64, std: f64) -> String {
+    format!("{:.2}% ± {:.2}", 100.0 * mean, 100.0 * std)
+}
+
+/// A simple time-series logger: (step, value) pairs per named series.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Series {
+            name: name.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, step: usize, v: f64) {
+        self.points.push((step, v));
+    }
+
+    /// Render several series into one long-format CSV
+    /// (`series,step,value`).
+    pub fn to_csv(series: &[Series]) -> String {
+        let mut s = String::from("series,step,value\n");
+        for sr in series {
+            for (step, v) in &sr.points {
+                s.push_str(&format!("{},{},{}\n", sr.name, step, v));
+            }
+        }
+        s
+    }
+
+    pub fn save_csv(series: &[Series], path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, Self::to_csv(series))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn markdown_layout() {
+        let mut t = Table::new("Title", &["method", "acc"]);
+        t.row(vec!["ALQ".into(), "93.2".into()]);
+        t.row(vec!["QSGDinf".into(), "91.5".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("### Title"));
+        assert!(md.contains("| method  | acc  |"));
+        assert!(md.contains("| QSGDinf | 91.5 |"));
+    }
+
+    #[test]
+    fn stats() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+        assert_eq!(mean_std(&[5.0]).1, 0.0);
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.9324, 0.0006), "93.24% ± 0.06");
+    }
+
+    #[test]
+    fn series_csv() {
+        let mut a = Series::new("loss");
+        a.push(0, 2.0);
+        a.push(10, 1.5);
+        let csv = Series::to_csv(&[a]);
+        assert!(csv.contains("loss,10,1.5"));
+    }
+}

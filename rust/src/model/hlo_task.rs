@@ -1,0 +1,261 @@
+//! PJRT-backed training tasks: the L2 JAX models (AOT HLO artifacts)
+//! driven through the [`TrainTask`] interface, so the same cluster
+//! simulation and coordinator run either the pure-Rust MLP or the
+//! compiled transformer LM / MLP with zero Python on the path.
+
+use super::{init, EvalResult, TrainTask};
+use crate::data::Corpus;
+use crate::runtime::{EvalStep, Manifest, ModelEntry, Runtime, TrainStep};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Transformer LM on the synthetic Markov corpus, executed via PJRT.
+pub struct HloLmTask {
+    entry: ModelEntry,
+    step: TrainStep,
+    eval: EvalStep,
+    corpus: Corpus,
+    batch: usize,
+    seq: usize,
+    /// Fixed eval batches (worker-independent).
+    eval_batches: Vec<Vec<i32>>,
+}
+
+impl HloLmTask {
+    pub fn load(rt: &Runtime, manifest: &Manifest, model: &str, corpus_seed: u64) -> Result<Self> {
+        let entry = manifest.model(model)?.clone();
+        anyhow::ensure!(entry.kind == "lm", "{model} is not an lm");
+        let batch = entry.cfg("batch");
+        let seq = entry.cfg("seq_len");
+        let vocab = entry.cfg("vocab");
+        let corpus = Corpus::new(vocab, 4, corpus_seed);
+        let eval_batches = (0..4)
+            .map(|i| corpus.batch(usize::MAX - 1, 1_000_000 + i, batch, seq))
+            .collect();
+        Ok(HloLmTask {
+            step: TrainStep::load(rt, &entry)?,
+            eval: EvalStep::load(rt, &entry)?,
+            entry,
+            corpus,
+            batch,
+            seq,
+            eval_batches,
+        })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+}
+
+impl TrainTask for HloLmTask {
+    fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        init::init_flat(&self.entry.layout, seed)
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, step: usize, out: &mut [f32]) -> f32 {
+        let tokens = self.corpus.batch(worker, step, self.batch, self.seq);
+        let (loss, grads) = self
+            .step
+            .run_lm(params, &tokens)
+            .expect("lm train step failed");
+        out.copy_from_slice(&grads);
+        loss
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalResult {
+        let mut loss = 0.0f64;
+        for b in &self.eval_batches {
+            loss += self.eval.run_lm(params, b).expect("lm eval failed") as f64;
+        }
+        EvalResult {
+            loss: loss / self.eval_batches.len() as f64,
+            accuracy: 0.0,
+        }
+    }
+}
+
+/// HLO MLP on synthetic blobs (cross-checks the pure-Rust path).
+pub struct HloMlpTask {
+    entry: ModelEntry,
+    step: TrainStep,
+    eval: EvalStep,
+    blobs: crate::data::Blobs,
+    batch: usize,
+    workers: usize,
+    seed: u64,
+    xbuf: Vec<f32>,
+    ybuf: Vec<u32>,
+}
+
+impl HloMlpTask {
+    pub fn load(
+        rt: &Runtime,
+        manifest: &Manifest,
+        model: &str,
+        workers: usize,
+        data_seed: u64,
+    ) -> Result<Self> {
+        let entry = manifest.model(model)?.clone();
+        anyhow::ensure!(entry.kind == "mlp", "{model} is not an mlp");
+        let batch = entry.cfg("batch");
+        let blobs = crate::data::Blobs::generate(
+            entry.cfg("input_dim"),
+            entry.cfg("classes"),
+            8192,
+            entry.cfg("batch"), // eval set size = one device batch
+            0.8,
+            data_seed,
+        );
+        Ok(HloMlpTask {
+            step: TrainStep::load(rt, &entry)?,
+            eval: EvalStep::load(rt, &entry)?,
+            entry,
+            blobs,
+            batch,
+            workers,
+            seed: data_seed ^ 0x51ED,
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
+        })
+    }
+}
+
+impl TrainTask for HloMlpTask {
+    fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        init::init_flat(&self.entry.layout, seed)
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, step: usize, out: &mut [f32]) -> f32 {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (worker as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (step as u64).wrapping_mul(0xD1B54A32D192ED03),
+        );
+        self.blobs.sample_train_shard(
+            worker,
+            self.workers,
+            self.batch,
+            &mut rng,
+            &mut self.xbuf,
+            &mut self.ybuf,
+        );
+        let y: Vec<i32> = self.ybuf.iter().map(|&v| v as i32).collect();
+        let (loss, grads) = self
+            .step
+            .run_mlp(params, &self.xbuf, &y)
+            .expect("mlp train step failed");
+        out.copy_from_slice(&grads);
+        loss
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalResult {
+        let (x, y) = self.blobs.val_set();
+        let y: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+        let (loss, acc) = self
+            .eval
+            .run_mlp(params, &x[..self.batch * self.entry.cfg("input_dim")], &y[..self.batch])
+            .expect("mlp eval failed");
+        EvalResult {
+            loss: loss as f64,
+            accuracy: acc as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> Option<(Runtime, Manifest)> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some((Runtime::cpu().unwrap(), Manifest::load(&dir).unwrap()))
+    }
+
+    #[test]
+    fn hlo_mlp_task_trains() {
+        let Some((rt, m)) = setup() else { return };
+        let mut task = HloMlpTask::load(&rt, &m, "mlp_tiny", 2, 3).unwrap();
+        let mut params = task.init_params(1);
+        let mut g = vec![0.0f32; task.param_count()];
+        let l0 = task.grad(&params, 0, 0, &mut g);
+        assert!(l0.is_finite());
+        for step in 0..40 {
+            task.grad(&params, 0, step, &mut g);
+            for (p, gv) in params.iter_mut().zip(&g) {
+                *p -= 0.1 * gv;
+            }
+        }
+        let l1 = task.grad(&params, 0, 999, &mut g);
+        assert!(l1 < l0, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn hlo_mlp_matches_rust_mlp_gradients() {
+        // The HLO MLP and the pure-Rust MLP share layout + math: same
+        // params + batch must give (near-)identical loss and gradients.
+        let Some((rt, m)) = setup() else { return };
+        let entry = m.model("mlp_tiny").unwrap();
+        let dims = vec![
+            entry.cfg("input_dim"),
+            32,
+            32,
+            entry.cfg("classes"),
+        ];
+        let rust_mlp = crate::model::Mlp::new(dims);
+        assert_eq!(rust_mlp.param_count(), entry.param_count);
+
+        let params = init::init_flat(&entry.layout, 5);
+        let mut rng = Rng::new(6);
+        let b = entry.cfg("batch");
+        let d = entry.cfg("input_dim");
+        let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let y: Vec<u32> = (0..b).map(|_| rng.below(entry.cfg("classes")) as u32).collect();
+        let yi: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+
+        let step = TrainStep::load(&rt, entry).unwrap();
+        let (hlo_loss, hlo_grads) = step.run_mlp(&params, &x, &yi).unwrap();
+
+        let mut scratch = crate::model::mlp::Scratch::default();
+        let mut rust_grads = vec![0.0f32; rust_mlp.param_count()];
+        let rust_loss = rust_mlp.loss_grad(&params, &x, &y, &mut rust_grads, &mut scratch);
+
+        assert!(
+            (hlo_loss - rust_loss).abs() < 1e-5,
+            "loss {hlo_loss} vs {rust_loss}"
+        );
+        let max_err = hlo_grads
+            .iter()
+            .zip(&rust_grads)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-5, "max grad err {max_err}");
+    }
+
+    #[test]
+    fn hlo_lm_task_grad_and_eval() {
+        let Some((rt, m)) = setup() else { return };
+        let mut task = HloLmTask::load(&rt, &m, "lm_tiny", 11).unwrap();
+        let params = task.init_params(2);
+        let mut g = vec![0.0f32; task.param_count()];
+        let loss = task.grad(&params, 0, 0, &mut g);
+        // Fresh LM ≈ uniform over vocab.
+        let vocab = task.entry().cfg("vocab") as f64;
+        assert!((loss as f64 - vocab.ln()).abs() < 1.0, "loss {loss}");
+        assert!(g.iter().any(|&x| x != 0.0));
+        let ev = task.eval(&params);
+        assert!(ev.loss.is_finite());
+    }
+}

@@ -1,0 +1,97 @@
+//! Flat-parameter initialization over a layout (manifest or native).
+
+use crate::runtime::LayoutEntry;
+use crate::util::Rng;
+
+/// Initialize a flat parameter vector for a layout. Kinds mirror
+/// `python/compile/model.py`: zeros | ones | normal(std) | he(fan_in).
+pub fn init_flat(layout: &[LayoutEntry], seed: u64) -> Vec<f32> {
+    let total: usize = layout.iter().map(|e| e.size()).sum();
+    let mut out = Vec::with_capacity(total);
+    for (i, e) in layout.iter().enumerate() {
+        let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        match e.init.as_str() {
+            "zeros" => out.extend(std::iter::repeat_n(0.0f32, e.size())),
+            "ones" => out.extend(std::iter::repeat_n(1.0f32, e.size())),
+            "normal" => {
+                for _ in 0..e.size() {
+                    out.push((rng.normal() * e.std) as f32);
+                }
+            }
+            "he" => {
+                let fan_in = e.shape.first().copied().unwrap_or(1) as f64;
+                let std = (2.0 / fan_in).sqrt();
+                for _ in 0..e.size() {
+                    out.push((rng.normal() * std) as f32);
+                }
+            }
+            other => panic!("unknown init kind {other:?} for {}", e.name),
+        }
+    }
+    out
+}
+
+/// Native layout for the pure-Rust MLP (same shape conventions as the
+/// JAX model so the flat vectors are interchangeable).
+pub fn mlp_layout(dims: &[usize]) -> Vec<LayoutEntry> {
+    assert!(dims.len() >= 2);
+    let mut layout = Vec::new();
+    for i in 0..dims.len() - 1 {
+        layout.push(LayoutEntry {
+            name: format!("fc{i}.w"),
+            shape: vec![dims[i], dims[i + 1]],
+            init: "he".into(),
+            std: 0.0,
+        });
+        layout.push(LayoutEntry {
+            name: format!("fc{i}.b"),
+            shape: vec![dims[i + 1]],
+            init: "zeros".into(),
+            std: 0.0,
+        });
+    }
+    layout
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_determinism() {
+        let layout = mlp_layout(&[4, 8, 3]);
+        let total: usize = layout.iter().map(|e| e.size()).sum();
+        assert_eq!(total, 4 * 8 + 8 + 8 * 3 + 3);
+        let a = init_flat(&layout, 7);
+        let b = init_flat(&layout, 7);
+        let c = init_flat(&layout, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), total);
+    }
+
+    #[test]
+    fn he_scale() {
+        let layout = vec![LayoutEntry {
+            name: "w".into(),
+            shape: vec![1000, 100],
+            init: "he".into(),
+            std: 0.0,
+        }];
+        let v = init_flat(&layout, 1);
+        let var: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64;
+        let want = 2.0 / 1000.0;
+        assert!((var - want).abs() / want < 0.05, "var {var} want {want}");
+    }
+
+    #[test]
+    fn biases_zero_gains_one() {
+        let layout = vec![
+            LayoutEntry { name: "b".into(), shape: vec![5], init: "zeros".into(), std: 0.0 },
+            LayoutEntry { name: "g".into(), shape: vec![5], init: "ones".into(), std: 0.0 },
+        ];
+        let v = init_flat(&layout, 0);
+        assert_eq!(&v[..5], &[0.0; 5]);
+        assert_eq!(&v[5..], &[1.0; 5]);
+    }
+}

@@ -1,0 +1,433 @@
+//! Pure-Rust MLP classifier with manual backprop on flat parameters.
+//!
+//! Matches the JAX `mlp` family layer-for-layer (ReLU hidden layers,
+//! softmax cross-entropy, He init, identical flat layout) so parameter
+//! vectors are interchangeable with the HLO path; `rust/tests/` pins the
+//! two against each other on the same params/batch.
+
+use super::{EvalResult, TrainTask};
+use crate::data::synth::Blobs;
+use crate::model::init;
+use crate::util::Rng;
+
+/// MLP architecture: dims = [input, hidden…, classes].
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(dims.len() >= 2);
+        Mlp { dims }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.dims
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1])
+            .sum()
+    }
+
+    pub fn layout(&self) -> Vec<crate::runtime::LayoutEntry> {
+        init::mlp_layout(&self.dims)
+    }
+
+    /// Forward pass into reusable activation buffers.
+    /// `acts[l]` holds layer l's post-activation output, `acts[0]` = x.
+    fn forward(&self, params: &[f32], x: &[f32], batch: usize, acts: &mut Vec<Vec<f32>>) {
+        let nl = self.dims.len() - 1;
+        acts.resize(nl + 1, Vec::new());
+        acts[0].clear();
+        acts[0].extend_from_slice(x);
+        let mut off = 0;
+        for l in 0..nl {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let w = &params[off..off + din * dout];
+            let b = &params[off + din * dout..off + din * dout + dout];
+            off += din * dout + dout;
+            let (prev, rest) = acts.split_at_mut(l + 1);
+            let inp = &prev[l];
+            let out = &mut rest[0];
+            out.clear();
+            out.resize(batch * dout, 0.0);
+            matmul_bias(inp, w, b, out, batch, din, dout);
+            if l < nl - 1 {
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Loss + gradient on one minibatch. `grads` is accumulated into
+    /// (caller zeroes it); returns mean cross-entropy loss.
+    pub fn loss_grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+        grads: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> f32 {
+        let batch = y.len();
+        let nl = self.dims.len() - 1;
+        debug_assert_eq!(x.len(), batch * self.dims[0]);
+        debug_assert_eq!(grads.len(), self.param_count());
+        self.forward(params, x, batch, &mut scratch.acts);
+
+        // Softmax CE on logits (last activation).
+        let c = self.dims[nl];
+        let logits = &scratch.acts[nl];
+        let delta = &mut scratch.delta;
+        delta.clear();
+        delta.resize(batch * c, 0.0);
+        let mut loss = 0.0f64;
+        for i in 0..batch {
+            let row = &logits[i * c..(i + 1) * c];
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut z = 0.0f64;
+            for &v in row {
+                z += ((v - max) as f64).exp();
+            }
+            let logz = z.ln() + max as f64;
+            loss += logz - row[y[i] as usize] as f64;
+            for j in 0..c {
+                let p = (((row[j] - max) as f64).exp() / z) as f32;
+                delta[i * c + j] = (p - if j == y[i] as usize { 1.0 } else { 0.0 })
+                    / batch as f32;
+            }
+        }
+
+        // Backward.
+        let mut offsets = Vec::with_capacity(nl);
+        let mut off = 0;
+        for l in 0..nl {
+            offsets.push(off);
+            off += self.dims[l] * self.dims[l + 1] + self.dims[l + 1];
+        }
+        for l in (0..nl).rev() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let off = offsets[l];
+            let inp = &scratch.acts[l];
+            // dW = inp^T @ delta ; db = sum over batch of delta.
+            let (gw, gb) = grads[off..off + din * dout + dout].split_at_mut(din * dout);
+            for i in 0..batch {
+                let d = &scratch.delta[i * dout..(i + 1) * dout];
+                let xi = &inp[i * din..(i + 1) * din];
+                for a in 0..din {
+                    let xa = xi[a];
+                    if xa == 0.0 {
+                        continue;
+                    }
+                    let gwa = &mut gw[a * dout..(a + 1) * dout];
+                    for (g, &dv) in gwa.iter_mut().zip(d) {
+                        *g += xa * dv;
+                    }
+                }
+                for (g, &dv) in gb.iter_mut().zip(d) {
+                    *g += dv;
+                }
+            }
+            if l > 0 {
+                // delta_prev = (delta @ W^T) * relu'(act_prev)
+                let w = &params[off..off + din * dout];
+                let prev = &mut scratch.delta_prev;
+                prev.clear();
+                prev.resize(batch * din, 0.0);
+                for i in 0..batch {
+                    let d = &scratch.delta[i * dout..(i + 1) * dout];
+                    let pr = &mut prev[i * din..(i + 1) * din];
+                    for a in 0..din {
+                        let mut acc = 0.0f32;
+                        let wa = &w[a * dout..(a + 1) * dout];
+                        for (wv, dv) in wa.iter().zip(d) {
+                            acc += wv * dv;
+                        }
+                        pr[a] = acc;
+                    }
+                }
+                // ReLU mask from forward activations.
+                let act = &scratch.acts[l];
+                for (p, &a) in prev.iter_mut().zip(act) {
+                    if a == 0.0 {
+                        *p = 0.0;
+                    }
+                }
+                std::mem::swap(&mut scratch.delta, &mut scratch.delta_prev);
+            }
+        }
+        (loss / batch as f64) as f32
+    }
+
+    /// Predicted class per row.
+    pub fn predict(&self, params: &[f32], x: &[f32], batch: usize, scratch: &mut Scratch) -> Vec<u32> {
+        self.forward(params, x, batch, &mut scratch.acts);
+        let c = *self.dims.last().unwrap();
+        let logits = &scratch.acts[self.dims.len() - 1];
+        (0..batch)
+            .map(|i| {
+                let row = &logits[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as u32
+            })
+            .collect()
+    }
+
+    /// Mean loss + accuracy over a dataset.
+    pub fn evaluate(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+        scratch: &mut Scratch,
+    ) -> EvalResult {
+        let batch = y.len();
+        self.forward(params, x, batch, &mut scratch.acts);
+        let c = *self.dims.last().unwrap();
+        let logits = &scratch.acts[self.dims.len() - 1];
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for i in 0..batch {
+            let row = &logits[i * c..(i + 1) * c];
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut z = 0.0f64;
+            let mut argmax = 0;
+            for (j, &v) in row.iter().enumerate() {
+                z += ((v - max) as f64).exp();
+                if v > row[argmax] {
+                    argmax = j;
+                }
+            }
+            loss += z.ln() + max as f64 - row[y[i] as usize] as f64;
+            if argmax == y[i] as usize {
+                correct += 1;
+            }
+        }
+        EvalResult {
+            loss: loss / batch as f64,
+            accuracy: correct as f64 / batch as f64,
+        }
+    }
+}
+
+fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], batch: usize, din: usize, dout: usize) {
+    // out[i, j] = sum_a x[i, a] w[a, j] + b[j]; ikj loop order for locality.
+    for i in 0..batch {
+        let o = &mut out[i * dout..(i + 1) * dout];
+        o.copy_from_slice(b);
+        let xi = &x[i * din..(i + 1) * din];
+        for (a, &xa) in xi.iter().enumerate() {
+            if xa == 0.0 {
+                continue;
+            }
+            let wa = &w[a * dout..(a + 1) * dout];
+            for (ov, &wv) in o.iter_mut().zip(wa) {
+                *ov += xa * wv;
+            }
+        }
+    }
+}
+
+/// Reusable backprop buffers (no allocation in the training loop).
+#[derive(Default)]
+pub struct Scratch {
+    acts: Vec<Vec<f32>>,
+    delta: Vec<f32>,
+    delta_prev: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// MlpTask: MLP + synthetic blobs dataset as a TrainTask.
+// ---------------------------------------------------------------------------
+
+/// The CIFAR-stand-in workload: MLP on Gaussian blobs, sharded over M
+/// workers (each worker draws batches from its own shard, mirroring
+/// data-parallel training).
+pub struct MlpTask {
+    pub mlp: Mlp,
+    pub blobs: Blobs,
+    pub batch: usize,
+    pub workers: usize,
+    seed: u64,
+    scratch: Scratch,
+    xbuf: Vec<f32>,
+    ybuf: Vec<u32>,
+}
+
+impl MlpTask {
+    pub fn new(mlp: Mlp, blobs: Blobs, batch: usize, workers: usize, seed: u64) -> Self {
+        assert_eq!(mlp.dims[0], blobs.dim);
+        assert_eq!(*mlp.dims.last().unwrap(), blobs.classes);
+        MlpTask {
+            mlp,
+            blobs,
+            batch,
+            workers,
+            seed,
+            scratch: Scratch::default(),
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
+        }
+    }
+}
+
+impl TrainTask for MlpTask {
+    fn param_count(&self) -> usize {
+        self.mlp.param_count()
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        init::init_flat(&self.mlp.layout(), seed)
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, step: usize, out: &mut [f32]) -> f32 {
+        out.fill(0.0);
+        let mut rng = Rng::new(
+            self.seed
+                ^ (worker as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (step as u64).wrapping_mul(0xD1B54A32D192ED03),
+        );
+        self.blobs.sample_train_shard(
+            worker,
+            self.workers,
+            self.batch,
+            &mut rng,
+            &mut self.xbuf,
+            &mut self.ybuf,
+        );
+        self.mlp
+            .loss_grad(params, &self.xbuf, &self.ybuf, out, &mut self.scratch)
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalResult {
+        let (x, y) = self.blobs.val_set();
+        self.mlp.evaluate(params, x, y, &mut self.scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (Mlp, Vec<f32>, Vec<f32>, Vec<u32>) {
+        let mlp = Mlp::new(vec![6, 10, 4]);
+        let mut rng = Rng::new(1);
+        let params = init::init_flat(&mlp.layout(), 2);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 6).map(|_| rng.normal() as f32).collect();
+        let y: Vec<u32> = (0..batch).map(|_| rng.below(4) as u32).collect();
+        (mlp, params, x, y)
+    }
+
+    #[test]
+    fn param_count() {
+        let mlp = Mlp::new(vec![6, 10, 4]);
+        assert_eq!(mlp.param_count(), 6 * 10 + 10 + 10 * 4 + 4);
+    }
+
+    #[test]
+    fn grads_match_finite_difference() {
+        let (mlp, mut params, x, y) = tiny();
+        let mut scratch = Scratch::default();
+        let mut grads = vec![0.0f32; mlp.param_count()];
+        mlp.loss_grad(&params, &x, &y, &mut grads, &mut scratch);
+        let mut rng = Rng::new(3);
+        for _ in 0..12 {
+            let i = rng.below(params.len());
+            let eps = 1e-3f32;
+            let orig = params[i];
+            params[i] = orig + eps;
+            let mut g = vec![0.0f32; mlp.param_count()];
+            let lp = mlp.loss_grad(&params, &x, &y, &mut g, &mut scratch);
+            params[i] = orig - eps;
+            let lm = mlp.loss_grad(&params, &x, &y, &mut g, &mut scratch);
+            params[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grads[i]).abs() < 2e-3,
+                "param {i}: fd {fd} vs grad {}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn loss_decreases_under_sgd() {
+        let (mlp, mut params, x, y) = tiny();
+        let mut scratch = Scratch::default();
+        let mut grads = vec![0.0f32; mlp.param_count()];
+        grads.fill(0.0);
+        let l0 = mlp.loss_grad(&params, &x, &y, &mut grads, &mut scratch);
+        for _ in 0..60 {
+            grads.fill(0.0);
+            mlp.loss_grad(&params, &x, &y, &mut grads, &mut scratch);
+            for (p, g) in params.iter_mut().zip(&grads) {
+                *p -= 0.2 * g;
+            }
+        }
+        grads.fill(0.0);
+        let l1 = mlp.loss_grad(&params, &x, &y, &mut grads, &mut scratch);
+        assert!(l1 < 0.3 * l0, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn evaluate_consistent_with_predict() {
+        let (mlp, params, x, y) = tiny();
+        let mut scratch = Scratch::default();
+        let ev = mlp.evaluate(&params, &x, &y, &mut scratch);
+        let preds = mlp.predict(&params, &x, y.len(), &mut scratch);
+        let acc = preds
+            .iter()
+            .zip(&y)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / y.len() as f64;
+        assert!((ev.accuracy - acc).abs() < 1e-12);
+        assert!(ev.loss > 0.0);
+    }
+
+    #[test]
+    fn task_runs_and_workers_get_distinct_batches() {
+        let blobs = Blobs::generate(6, 4, 400, 100, 0.5, 11);
+        let mlp = Mlp::new(vec![6, 16, 4]);
+        let mut task = MlpTask::new(mlp, blobs, 8, 4, 5);
+        let params = task.init_params(1);
+        let mut g0 = vec![0.0f32; task.param_count()];
+        let mut g1 = vec![0.0f32; task.param_count()];
+        let l0 = task.grad(&params, 0, 0, &mut g0);
+        let l1 = task.grad(&params, 1, 0, &mut g1);
+        assert!(l0.is_finite() && l1.is_finite());
+        assert_ne!(g0, g1, "different workers → different shards");
+        // Determinism in (worker, step).
+        let mut g0b = vec![0.0f32; task.param_count()];
+        task.grad(&params, 0, 0, &mut g0b);
+        assert_eq!(g0, g0b);
+    }
+
+    #[test]
+    fn training_improves_validation_accuracy() {
+        let blobs = Blobs::generate(8, 4, 2000, 400, 1.0, 13);
+        let mlp = Mlp::new(vec![8, 32, 4]);
+        let mut task = MlpTask::new(mlp, blobs, 32, 1, 7);
+        let mut params = task.init_params(3);
+        let before = task.eval(&params).accuracy;
+        let mut grads = vec![0.0f32; task.param_count()];
+        for step in 0..300 {
+            task.grad(&params, 0, step, &mut grads);
+            for (p, g) in params.iter_mut().zip(&grads) {
+                *p -= 0.1 * g;
+            }
+        }
+        let after = task.eval(&params).accuracy;
+        assert!(
+            after > before + 0.2 && after > 0.7,
+            "val acc {before} -> {after}"
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Host-side models.
+//!
+//! * [`init`] — flat-parameter initialization over a manifest layout
+//!   (mirrors `python/compile/model.py::init_flat` semantics).
+//! * [`mlp`] — a pure-Rust MLP with manual backprop. This is the fast
+//!   substrate behind the many sweep experiments (Table 1/2, Figs. 3–7
+//!   run hundreds of training jobs — far too many for CPU-PJRT), and it
+//!   is cross-checked against the HLO MLP on identical params/batches.
+//!
+//! The [`TrainTask`] trait is what the cluster simulation and the
+//! coordinator drive; both the Rust MLP and the PJRT-backed models
+//! implement it.
+
+pub mod hlo_task;
+pub mod init;
+pub mod mlp;
+
+pub use hlo_task::{HloLmTask, HloMlpTask};
+pub use mlp::{Mlp, MlpTask};
+
+/// Evaluation summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// A training workload: supplies per-worker gradients and evaluation.
+///
+/// `grad` must be deterministic in `(params, worker, step)` so distributed
+/// replicas stay in lockstep (the coordinator relies on this).
+pub trait TrainTask {
+    fn param_count(&self) -> usize;
+    /// Initialize a fresh flat parameter vector.
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+    /// Compute the stochastic gradient of worker `worker` at `step` into
+    /// `out`; returns the minibatch loss.
+    fn grad(&mut self, params: &[f32], worker: usize, step: usize, out: &mut [f32]) -> f32;
+    /// Evaluate on the held-out set.
+    fn eval(&mut self, params: &[f32]) -> EvalResult;
+}

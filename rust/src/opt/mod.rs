@@ -1,0 +1,15 @@
+//! Optimizers and schedules (Section 2, Appendix I).
+
+pub mod momentum;
+pub mod schedule;
+pub mod sgd;
+
+pub use momentum::Umsgd;
+pub use schedule::{LrSchedule, UpdateSchedule};
+pub use sgd::Sgd;
+
+/// A parameter-update rule over flat vectors.
+pub trait Optimizer {
+    /// Apply one update with the aggregated gradient.
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
+}

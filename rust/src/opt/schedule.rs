@@ -1,0 +1,125 @@
+//! Schedules: step-decay learning rate (Table 3) and the level-update
+//! schedule 𝒰 (Appendix K "Update Schedule": once at 100 and 2000, then
+//! every 10K iterations — fractions scaled to the configured horizon).
+
+/// Step-decay LR: `lr0 × factor^(#drops passed)`.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub lr0: f32,
+    pub factor: f32,
+    /// Iterations at which the LR drops (paper: 40K/60K of 80K total).
+    pub drops: Vec<usize>,
+}
+
+impl LrSchedule {
+    /// The paper's shape: drops at 50% and 75% of the horizon, ×0.1.
+    pub fn paper_default(lr0: f32, total_iters: usize) -> Self {
+        LrSchedule {
+            lr0,
+            factor: 0.1,
+            drops: vec![total_iters * 56 / 100, total_iters * 75 / 100],
+        }
+    }
+
+    pub fn lr(&self, step: usize) -> f32 {
+        let passed = self.drops.iter().filter(|&&d| step >= d).count();
+        self.lr0 * self.factor.powi(passed as i32)
+    }
+}
+
+/// The level-update schedule 𝒰 of Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct UpdateSchedule {
+    points: Vec<usize>,
+    every: usize,
+    after: usize,
+}
+
+impl UpdateSchedule {
+    /// Paper schedule scaled to `total_iters`: one-shot warmup updates at
+    /// 100/80K and 2000/80K of the horizon, then periodically (10K/80K).
+    pub fn paper_default(total_iters: usize) -> Self {
+        let frac = |num: usize| (total_iters * num / 80_000).max(1);
+        UpdateSchedule {
+            points: vec![frac(100), frac(2000)],
+            every: frac(10_000).max(2),
+            after: frac(2000),
+        }
+    }
+
+    /// Explicit schedule (for tests / ablations).
+    pub fn at(points: Vec<usize>, every: usize, after: usize) -> Self {
+        UpdateSchedule {
+            points,
+            every,
+            after,
+        }
+    }
+
+    pub fn never() -> Self {
+        UpdateSchedule {
+            points: vec![],
+            every: usize::MAX,
+            after: usize::MAX,
+        }
+    }
+
+    pub fn is_update_step(&self, step: usize) -> bool {
+        if self.points.contains(&step) {
+            return true;
+        }
+        step > self.after && self.every != usize::MAX && step % self.every == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_drops() {
+        let s = LrSchedule {
+            lr0: 0.1,
+            factor: 0.1,
+            drops: vec![100, 200],
+        };
+        assert_eq!(s.lr(0), 0.1);
+        assert_eq!(s.lr(99), 0.1);
+        assert!((s.lr(100) - 0.01).abs() < 1e-9);
+        assert!((s.lr(250) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_default_shape() {
+        let s = LrSchedule::paper_default(0.1, 80_000);
+        assert_eq!(s.lr(44_000), 0.1);
+        assert!((s.lr(45_000) - 0.01).abs() < 1e-9);
+        assert!((s.lr(61_000) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn update_schedule_scales() {
+        let u = UpdateSchedule::paper_default(80_000);
+        assert!(u.is_update_step(100));
+        assert!(u.is_update_step(2000));
+        assert!(u.is_update_step(10_000));
+        assert!(u.is_update_step(20_000));
+        assert!(!u.is_update_step(5000));
+        assert!(!u.is_update_step(101));
+    }
+
+    #[test]
+    fn update_schedule_small_horizon() {
+        let u = UpdateSchedule::paper_default(800);
+        assert!(u.is_update_step(1));
+        assert!(u.is_update_step(20));
+        // Periodic updates appear after warmup.
+        assert!((21..=400).any(|s| u.is_update_step(s)));
+    }
+
+    #[test]
+    fn never_schedule() {
+        let u = UpdateSchedule::never();
+        assert!((0..10_000).all(|s| !u.is_update_step(s)));
+    }
+}

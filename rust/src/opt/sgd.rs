@@ -1,0 +1,50 @@
+//! Plain SGD with optional weight decay.
+
+use super::Optimizer;
+
+#[derive(Clone, Debug, Default)]
+pub struct Sgd {
+    pub weight_decay: f32,
+}
+
+impl Sgd {
+    pub fn new(weight_decay: f32) -> Self {
+        Sgd { weight_decay }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), grad.len());
+        if self.weight_decay != 0.0 {
+            for (p, &g) in params.iter_mut().zip(grad) {
+                *p -= lr * (g + self.weight_decay * *p);
+            }
+        } else {
+            for (p, &g) in params.iter_mut().zip(grad) {
+                *p -= lr * g;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_step() {
+        let mut o = Sgd::new(0.0);
+        let mut p = vec![1.0f32, -2.0];
+        o.step(&mut p, &[0.5, -0.5], 0.1);
+        assert_eq!(p, vec![0.95, -1.95]);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let mut o = Sgd::new(0.1);
+        let mut p = vec![1.0f32];
+        o.step(&mut p, &[0.0], 0.5);
+        assert!((p[0] - 0.95).abs() < 1e-7);
+    }
+}

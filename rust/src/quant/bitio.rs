@@ -1,0 +1,304 @@
+//! Bit-level writer/reader for the gradient codec (Appendix D).
+//!
+//! LSB-first packing: the first bit written is the least significant bit
+//! of the first byte. Codes are written most-significant-code-bit first
+//! (canonical Huffman order); the fast path [`BitWriter::push_bits_lsb`]
+//! takes *stream-order* (bit-reversed) chunks so a whole symbol is one
+//! shift+or — the §Perf pass replaced per-bit loops with this.
+
+/// Append-only bit writer over a reusable byte buffer.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Staged bits (low `nacc` bits valid, stream order).
+    acc: u64,
+    nacc: u32,
+    bits_written: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset for reuse without freeing capacity (hot-path requirement).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.acc = 0;
+        self.nacc = 0;
+        self.bits_written = 0;
+    }
+
+    #[inline]
+    fn flush_bytes(&mut self) {
+        while self.nacc >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nacc -= 8;
+        }
+    }
+
+    /// Push `len` bits already in *stream order* (bit 0 first). O(1).
+    #[inline]
+    pub fn push_bits_lsb(&mut self, chunk: u64, len: u32) {
+        debug_assert!(len <= 57, "chunk too wide for the accumulator");
+        debug_assert!(len == 64 || chunk < (1u64 << len));
+        self.acc |= chunk << self.nacc;
+        self.nacc += len;
+        self.bits_written += len as u64;
+        self.flush_bytes();
+    }
+
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        self.push_bits_lsb(bit as u64, 1);
+    }
+
+    /// Push the low `len` bits of `code`, most significant first
+    /// (canonical Huffman convention).
+    #[inline]
+    pub fn push_code(&mut self, code: u32, len: u32) {
+        let rev = (code as u64).reverse_bits() >> (64 - len.max(1));
+        self.push_bits_lsb(if len == 0 { 0 } else { rev }, len);
+    }
+
+    /// Push 32 raw bits (LSB-first within the value), used for fp32 norms.
+    #[inline]
+    pub fn push_u32(&mut self, v: u32) {
+        self.push_bits_lsb(v as u64, 32);
+    }
+
+    #[inline]
+    pub fn push_f32(&mut self, v: f32) {
+        self.push_u32(v.to_bits());
+    }
+
+    pub fn bits_written(&self) -> u64 {
+        self.bits_written
+    }
+
+    /// Flush and return the packed bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nacc > 0 {
+            self.buf.push(self.acc as u8);
+        }
+        self.buf
+    }
+
+    /// Flush into the internal buffer and borrow it (reusable variant).
+    pub fn finish_ref(&mut self) -> &[u8] {
+        if self.nacc > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc = 0;
+            self.nacc = 0;
+        }
+        &self.buf
+    }
+}
+
+/// Bit reader matching `BitWriter`'s layout, with a refillable u64
+/// buffer so symbol decode is a peek + table lookup.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next unread byte.
+    pos: usize,
+    /// Bits consumed overall.
+    consumed: u64,
+    /// Buffered bits (low `nbits` valid, stream order).
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader {
+            buf,
+            pos: 0,
+            consumed: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.pos < self.buf.len() {
+            self.acc |= (self.buf[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Peek up to 32 bits (stream order); missing past-the-end bits are 0.
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 32);
+        if self.nbits < n {
+            self.refill();
+        }
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        debug_assert!(self.nbits >= n || self.pos >= self.buf.len());
+        self.acc >>= n;
+        self.nbits = self.nbits.saturating_sub(n);
+        self.consumed += n as u64;
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> bool {
+        let b = self.peek_bits(1) == 1;
+        self.consume(1);
+        b
+    }
+
+    #[inline]
+    pub fn read_u32(&mut self) -> u32 {
+        let v = self.peek_bits(32) as u32;
+        self.consume(32);
+        v
+    }
+
+    #[inline]
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_u32())
+    }
+
+    pub fn bits_read(&self) -> u64 {
+        self.consumed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.push_bit(b);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), b);
+        }
+    }
+
+    #[test]
+    fn code_roundtrip_msb_first() {
+        let mut w = BitWriter::new();
+        w.push_code(0b1011, 4);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit());
+        assert!(!r.read_bit());
+        assert!(r.read_bit());
+        assert!(r.read_bit());
+    }
+
+    #[test]
+    fn f32_roundtrip_aligned_and_unaligned() {
+        let vals = [0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE, -0.0];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.push_f32(v);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.read_f32().to_bits(), v.to_bits());
+        }
+        let mut w = BitWriter::new();
+        w.push_bit(true);
+        for &v in &vals {
+            w.push_f32(v);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit());
+        for &v in &vals {
+            assert_eq!(r.read_f32().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn bits_written_counts() {
+        let mut w = BitWriter::new();
+        w.push_bit(true);
+        w.push_u32(42);
+        w.push_code(0b111, 3);
+        assert_eq!(w.bits_written(), 36);
+    }
+
+    #[test]
+    fn clear_reuses() {
+        let mut w = BitWriter::new();
+        w.push_u32(7);
+        let _ = w.finish_ref();
+        w.clear();
+        w.push_bit(true);
+        assert_eq!(w.bits_written(), 1);
+        let b = w.finish_ref();
+        assert_eq!(b, &[1u8]);
+    }
+
+    #[test]
+    fn push_bits_lsb_matches_per_bit() {
+        let mut a = BitWriter::new();
+        let mut b = BitWriter::new();
+        // Stream-order chunk 0b1101 (bit0=1 first) == pushes 1,0,1,1.
+        a.push_bits_lsb(0b1101, 4);
+        for bit in [true, false, true, true] {
+            b.push_bit(bit);
+        }
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn peek_and_consume() {
+        let mut w = BitWriter::new();
+        w.push_bits_lsb(0b1010_1100, 8);
+        w.push_u32(0xDEADBEEF);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek_bits(4), 0b1100);
+        r.consume(4);
+        assert_eq!(r.peek_bits(4), 0b1010);
+        r.consume(4);
+        assert_eq!(r.read_u32(), 0xDEADBEEF);
+        assert_eq!(r.bits_read(), 40);
+    }
+
+    #[test]
+    fn peek_past_end_is_zero() {
+        let bytes = [0xFFu8];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek_bits(16), 0x00FF);
+    }
+
+    #[test]
+    fn long_random_stream() {
+        let mut rng = crate::util::Rng::new(1);
+        let items: Vec<(u64, u32)> = (0..5000)
+            .map(|_| {
+                let len = 1 + rng.below(20) as u32;
+                (rng.next_u64() & ((1 << len) - 1), len)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(chunk, len) in &items {
+            w.push_bits_lsb(chunk, len);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(chunk, len) in &items {
+            assert_eq!(r.peek_bits(len), chunk);
+            r.consume(len);
+        }
+    }
+}

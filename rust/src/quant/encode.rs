@@ -1,0 +1,268 @@
+//! ENCODE / DECODE of Appendix D with exact bit accounting.
+//!
+//! Wire layout per gradient (metadata — n, bucket size, levels, codebook —
+//! is negotiated out of band, as in the paper where every worker derives
+//! the same codebook from the shared levels and statistics):
+//!
+//! ```text
+//! for each full bucket:
+//!     norm: f32 (32 bits)                          | "b bits" of Thm. 3
+//!     for each coordinate:
+//!         Huffman(|symbol|)                        | H(L) term
+//!         sign bit (present iff value can be ±)    | the "+1" term
+//! tail coordinates: raw f32 each                   | App. K partial bucket
+//! ```
+
+use super::bitio::{BitReader, BitWriter};
+use super::huffman::HuffmanBook;
+use super::quantizer::QuantizedGrad;
+use super::Levels;
+
+/// An encoded gradient plus its exact size in bits (the communication
+/// meter the network model charges).
+#[derive(Clone, Debug)]
+pub struct EncodedGrad {
+    pub bytes: Vec<u8>,
+    pub bits: u64,
+    /// Number of full-bucket coordinates (needed to decode).
+    pub n_full: usize,
+    /// Tail length.
+    pub n_tail: usize,
+    pub bucket: usize,
+}
+
+impl EncodedGrad {
+    /// Total payload in bytes (rounded up).
+    pub fn byte_len(&self) -> usize {
+        self.bits.div_ceil(8) as usize
+    }
+}
+
+/// Build the Huffman book for a level set from symbol probabilities
+/// (Prop. 6 closed forms live in `adaptive::objective::symbol_probs`).
+pub fn book_for(levels: &Levels, probs: &[f64]) -> HuffmanBook {
+    assert_eq!(probs.len(), levels.num_symbols());
+    HuffmanBook::from_weights(probs)
+}
+
+/// Encode a quantized gradient.
+pub fn encode(q: &QuantizedGrad, levels: &Levels, book: &HuffmanBook) -> EncodedGrad {
+    let mut w = BitWriter::new();
+    encode_into(q, levels, book, &mut w);
+    let bits = w.bits_written();
+    EncodedGrad {
+        bytes: w.finish(),
+        bits,
+        n_full: q.qidx.len(),
+        n_tail: q.tail.len(),
+        bucket: q.bucket,
+    }
+}
+
+/// Encode into a reusable writer (hot path). Returns bits written.
+pub fn encode_into(
+    q: &QuantizedGrad,
+    levels: &Levels,
+    book: &HuffmanBook,
+    w: &mut BitWriter,
+) -> u64 {
+    let start = w.bits_written();
+    let has_zero = levels.has_zero();
+    for (b, &norm) in q.norms.iter().enumerate() {
+        w.push_f32(norm);
+        let syms = &q.qidx[b * q.bucket..(b + 1) * q.bucket];
+        if has_zero {
+            for &s in syms {
+                let mag = s.unsigned_abs() as usize;
+                // Fused symbol+sign push (one shift/or on the hot path).
+                let len = book.len_of(mag);
+                if mag != 0 {
+                    w.push_bits_lsb(book.rcode(mag) | ((s < 0) as u64) << len, len + 1);
+                } else {
+                    w.push_bits_lsb(book.rcode(mag), len);
+                }
+            }
+        } else {
+            for &s in syms {
+                // Zero-norm AMQ buckets store 0 symbols; map to mag 0, sign +.
+                let mag = (s.unsigned_abs() as usize).saturating_sub(1);
+                let len = book.len_of(mag);
+                w.push_bits_lsb(book.rcode(mag) | ((s < 0) as u64) << len, len + 1);
+            }
+        }
+    }
+    for &t in &q.tail {
+        w.push_f32(t);
+    }
+    w.bits_written() - start
+}
+
+/// Decode an encoded gradient back to symbols + norms + tail.
+pub fn decode(e: &EncodedGrad, levels: &Levels, book: &HuffmanBook) -> QuantizedGrad {
+    let mut q = QuantizedGrad {
+        qidx: Vec::new(),
+        norms: Vec::new(),
+        tail: Vec::new(),
+        bucket: e.bucket,
+    };
+    decode_into(e, levels, book, &mut q);
+    q
+}
+
+/// Decode into a reusable buffer (hot path: zero allocation once warm).
+pub fn decode_into(e: &EncodedGrad, levels: &Levels, book: &HuffmanBook, q: &mut QuantizedGrad) {
+    let mut r = BitReader::new(&e.bytes);
+    let nb = if e.bucket == 0 { 0 } else { e.n_full / e.bucket };
+    let has_zero = levels.has_zero();
+    q.qidx.clear();
+    q.qidx.resize(e.n_full, 0);
+    q.norms.clear();
+    q.norms.resize(nb, 0.0);
+    q.tail.clear();
+    q.tail.resize(e.n_tail, 0.0);
+    q.bucket = e.bucket;
+    for b in 0..nb {
+        q.norms[b] = r.read_f32();
+        for i in 0..e.bucket {
+            let mag = book.decode(&mut r) as i32;
+            let sym = if has_zero {
+                if mag == 0 {
+                    0
+                } else {
+                    let neg = r.read_bit();
+                    if neg {
+                        -mag
+                    } else {
+                        mag
+                    }
+                }
+            } else {
+                let neg = r.read_bit();
+                let v = mag + 1;
+                if neg {
+                    -v
+                } else {
+                    v
+                }
+            };
+            q.qidx[b * e.bucket + i] = sym as i8;
+        }
+    }
+    for t in q.tail.iter_mut() {
+        *t = r.read_f32();
+    }
+}
+
+/// Empirical symbol counts of a quantized gradient (codebook input when
+/// coding against measured frequencies rather than the model of Prop. 6).
+pub fn symbol_counts(q: &QuantizedGrad, levels: &Levels) -> Vec<f64> {
+    let mut counts = vec![0.0f64; levels.num_symbols()];
+    let has_zero = levels.has_zero();
+    for &s in &q.qidx {
+        let mag = if has_zero {
+            s.unsigned_abs() as usize
+        } else {
+            (s.unsigned_abs() as usize).saturating_sub(1)
+        };
+        counts[mag] += 1.0;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{NormType, Quantizer};
+    use crate::util::Rng;
+
+    fn roundtrip_case(levels: Levels, norm: NormType, n: usize, bucket: usize, seed: u64) {
+        let quant = Quantizer::new(levels.clone(), norm, bucket);
+        let mut rng = Rng::new(seed);
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let q = quant.quantize(&v, &mut rng);
+        let counts = symbol_counts(&q, &levels);
+        let book = HuffmanBook::from_weights(&counts);
+        let e = encode(&q, &levels, &book);
+        let q2 = decode(&e, &levels, &book);
+        assert_eq!(q, q2);
+    }
+
+    #[test]
+    fn roundtrip_uniform_levels() {
+        roundtrip_case(Levels::uniform(4), NormType::Linf, 1024, 128, 1);
+    }
+
+    #[test]
+    fn roundtrip_exponential_levels() {
+        roundtrip_case(Levels::exponential(8, 0.5), NormType::L2, 500, 64, 2);
+    }
+
+    #[test]
+    fn roundtrip_amq_nozero() {
+        roundtrip_case(Levels::amq(4, 0.5), NormType::L2, 300, 32, 3);
+    }
+
+    #[test]
+    fn roundtrip_ternary_with_tail() {
+        roundtrip_case(Levels::ternary(), NormType::Linf, 130, 64, 4);
+    }
+
+    #[test]
+    fn bits_accounting_exact() {
+        let levels = Levels::uniform(4);
+        let quant = Quantizer::new(levels.clone(), NormType::L2, 64);
+        let mut rng = Rng::new(5);
+        let v: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        let q = quant.quantize(&v, &mut rng);
+        let book = HuffmanBook::from_weights(&symbol_counts(&q, &levels));
+        let e = encode(&q, &levels, &book);
+        // Recompute expected bits by hand.
+        let mut want = 0u64;
+        for b in 0..2 {
+            want += 32;
+            for i in 0..64 {
+                let s = q.qidx[b * 64 + i];
+                let mag = s.unsigned_abs() as usize;
+                want += book.len_of(mag) as u64;
+                if mag != 0 {
+                    want += 1;
+                }
+            }
+        }
+        assert_eq!(e.bits, want);
+        assert!(e.bytes.len() == e.byte_len());
+    }
+
+    #[test]
+    fn compression_beats_fp32_at_3_bits() {
+        let levels = Levels::exponential(4, 0.5);
+        let quant = Quantizer::new(levels.clone(), NormType::L2, 256);
+        let mut rng = Rng::new(6);
+        let v: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let q = quant.quantize(&v, &mut rng);
+        let book = HuffmanBook::from_weights(&symbol_counts(&q, &levels));
+        let e = encode(&q, &levels, &book);
+        let fp32_bits = 32 * 4096;
+        assert!(
+            (e.bits as f64) < 0.2 * fp32_bits as f64,
+            "3-bit encoding should be <20% of fp32, got {}",
+            e.bits as f64 / fp32_bits as f64
+        );
+    }
+
+    #[test]
+    fn empty_gradient() {
+        let levels = Levels::uniform(4);
+        let q = QuantizedGrad {
+            qidx: vec![],
+            norms: vec![],
+            tail: vec![],
+            bucket: 64,
+        };
+        let book = HuffmanBook::from_weights(&[1.0; 4]);
+        let e = encode(&q, &levels, &book);
+        assert_eq!(e.bits, 0);
+        let q2 = decode(&e, &levels, &book);
+        assert_eq!(q, q2);
+    }
+}

@@ -1,0 +1,372 @@
+//! Canonical Huffman coding over level symbols (Appendix D).
+//!
+//! The paper uses Huffman codes over the quantization-level alphabet,
+//! built from the symbol probabilities of Proposition 6 (closed form under
+//! the fitted truncated-normal mixture) or from empirical counts. Codes
+//! are canonical so the codebook is summarized by code lengths alone, and
+//! decoding uses the standard first-code-per-length walk (fast, no tree).
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Width of the one-shot decode table (codes ≤ this decode in one peek).
+const TABLE_BITS: u32 = 11;
+
+/// A canonical Huffman codebook over `n` symbols.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HuffmanBook {
+    /// Code length per symbol (0 = symbol absent from the alphabet).
+    lens: Vec<u32>,
+    /// Canonical code per symbol.
+    codes: Vec<u32>,
+    /// Stream-order (bit-reversed) code per symbol — the O(1) encode path.
+    rcodes: Vec<u64>,
+    /// Decode tables: symbols sorted by (len, symbol), first code and
+    /// first index per length.
+    sorted_symbols: Vec<u16>,
+    first_code: Vec<u32>,  // per length 1..=max_len
+    first_index: Vec<u32>, // per length
+    max_len: u32,
+    /// One-shot decode table over TABLE_BITS-bit peeks: (symbol, len),
+    /// len == 0 ⇒ code longer than TABLE_BITS, fall back to the walk.
+    table: Vec<(u16, u8)>,
+}
+
+impl HuffmanBook {
+    /// Build from nonnegative weights (counts or probabilities).
+    /// Zero-weight symbols get no code unless everything is zero, in which
+    /// case a uniform fixed-length code is produced.
+    pub fn from_weights(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty() && weights.len() <= u16::MAX as usize);
+        assert!(weights.iter().all(|&w| w >= 0.0 && w.is_finite()));
+        let n = weights.len();
+        let total: f64 = weights.iter().sum();
+        let weights: Vec<f64> = if total <= 0.0 {
+            vec![1.0; n]
+        } else {
+            // Floor tiny positive weights at 1e-4 of the max so code depth
+            // stays well under 32 bits even for pathologically skewed
+            // distributions (Prop. 6 probabilities can underflow); the
+            // expected-length impact is < 1e-3 bits.
+            let floor = weights.iter().cloned().fold(0.0, f64::max) * 1e-4;
+            weights
+                .iter()
+                .map(|&w| if w > 0.0 { w.max(floor) } else { 0.0 })
+                .collect()
+        };
+
+        // Package-free Huffman over the present symbols.
+        let lens = huffman_lengths(&weights);
+        Self::from_lengths(lens)
+    }
+
+    /// Build directly from code lengths (canonical assignment).
+    pub fn from_lengths(lens: Vec<u32>) -> Self {
+        let n = lens.len();
+        let max_len = lens.iter().copied().max().unwrap_or(0).max(1);
+        // Kraft check.
+        let kraft: f64 = lens
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-9, "invalid code lengths (Kraft {kraft})");
+
+        // Sort symbols by (len, symbol); assign canonical codes.
+        let mut order: Vec<u16> = (0..n as u16).filter(|&s| lens[s as usize] > 0).collect();
+        order.sort_by_key(|&s| (lens[s as usize], s));
+
+        let mut codes = vec![0u32; n];
+        let mut first_code = vec![0u32; (max_len + 1) as usize];
+        let mut first_index = vec![0u32; (max_len + 1) as usize];
+        let mut code = 0u32;
+        let mut prev_len = 0u32;
+        for (i, &s) in order.iter().enumerate() {
+            let l = lens[s as usize];
+            code <<= l - prev_len;
+            if l != prev_len {
+                for fill in prev_len + 1..=l {
+                    first_code[fill as usize] = code << 0;
+                    first_index[fill as usize] = i as u32;
+                }
+                // first_code for length l is this code; lengths between
+                // prev_len and l (exclusive) have no symbols: their
+                // first_code is the shifted running code as well.
+            }
+            codes[s as usize] = code;
+            code += 1;
+            prev_len = l;
+        }
+
+        // Stream-order codes + the one-shot decode table.
+        let mut rcodes = vec![0u64; n];
+        let mut table = vec![(0u16, 0u8); 1usize << TABLE_BITS];
+        for s in 0..n {
+            let l = lens[s];
+            if l == 0 {
+                continue;
+            }
+            let rev = (codes[s] as u64).reverse_bits() >> (64 - l);
+            rcodes[s] = rev;
+            if l <= TABLE_BITS {
+                // Every TABLE_BITS peek whose low l bits equal `rev`
+                // decodes to s.
+                let step = 1usize << l;
+                let mut i = rev as usize;
+                while i < table.len() {
+                    table[i] = (s as u16, l as u8);
+                    i += step;
+                }
+            }
+        }
+        HuffmanBook {
+            lens,
+            codes,
+            rcodes,
+            sorted_symbols: order,
+            first_code,
+            first_index,
+            max_len,
+            table,
+        }
+    }
+
+    pub fn num_symbols(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn len_of(&self, sym: usize) -> u32 {
+        self.lens[sym]
+    }
+
+    pub fn lengths(&self) -> &[u32] {
+        &self.lens
+    }
+
+    /// Expected code length under `probs` (for Theorem 5 checks).
+    pub fn expected_length(&self, probs: &[f64]) -> f64 {
+        probs
+            .iter()
+            .zip(&self.lens)
+            .map(|(&p, &l)| p * l as f64)
+            .sum()
+    }
+
+    /// Stream-order code for a symbol (for fused sign+symbol pushes).
+    #[inline]
+    pub fn rcode(&self, sym: usize) -> u64 {
+        self.rcodes[sym]
+    }
+
+    #[inline]
+    pub fn encode(&self, sym: usize, w: &mut BitWriter) {
+        debug_assert!(self.lens[sym] > 0, "symbol {sym} has no code");
+        w.push_bits_lsb(self.rcodes[sym], self.lens[sym]);
+    }
+
+    /// Decode one symbol: one-table fast path, canonical walk fallback
+    /// for codes longer than TABLE_BITS.
+    #[inline]
+    pub fn decode(&self, r: &mut BitReader) -> u16 {
+        let peek = r.peek_bits(TABLE_BITS) as usize;
+        let (sym, len) = self.table[peek];
+        if len != 0 {
+            r.consume(len as u32);
+            return sym;
+        }
+        self.decode_slow(r)
+    }
+
+    #[cold]
+    fn decode_slow(&self, r: &mut BitReader) -> u16 {
+        let mut code = 0u32;
+        let mut len = 0u32;
+        loop {
+            code = (code << 1) | r.read_bit() as u32;
+            len += 1;
+            debug_assert!(len <= self.max_len, "corrupt stream");
+            // Count of codes of this length: difference of first_index.
+            let fi = self.first_index[len as usize];
+            let fc = self.first_code[len as usize];
+            let count = self.count_at(len);
+            if count > 0 && code >= fc && code - fc < count {
+                return self.sorted_symbols[(fi + (code - fc)) as usize];
+            }
+        }
+    }
+
+    fn count_at(&self, len: u32) -> u32 {
+        let fi = self.first_index[len as usize];
+        let next = if (len as usize) + 1 < self.first_index.len() {
+            self.first_index[len as usize + 1]
+        } else {
+            self.sorted_symbols.len() as u32
+        };
+        // Symbols with exactly this length: those in [fi, next) whose len == len.
+        let mut c = 0;
+        for i in fi..next {
+            if self.lens[self.sorted_symbols[i as usize] as usize] == len {
+                c += 1;
+            } else {
+                break;
+            }
+        }
+        c
+    }
+}
+
+/// Classic two-queue Huffman code lengths from weights. Symbols with zero
+/// weight get length 0 (absent). A single present symbol gets length 1.
+fn huffman_lengths(weights: &[f64]) -> Vec<u32> {
+    #[derive(Clone)]
+    struct Node {
+        w: f64,
+        kids: Option<(usize, usize)>,
+    }
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut heap: std::collections::BinaryHeap<(std::cmp::Reverse<u64>, usize)> =
+        std::collections::BinaryHeap::new();
+    // Scale weights to u64 for a deterministic total order.
+    let max_w = weights.iter().cloned().fold(0.0, f64::max).max(1e-300);
+    let scale = (u64::MAX / 4) as f64 / max_w / weights.len().max(1) as f64;
+    let mut present = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        if w > 0.0 {
+            nodes.push(Node { w, kids: None });
+            let key = ((w * scale) as u64).max(1);
+            heap.push((std::cmp::Reverse(key), nodes.len() - 1));
+            present += 1;
+            let _ = i;
+        } else {
+            nodes.push(Node { w: 0.0, kids: None });
+        }
+    }
+    let mut lens = vec![0u32; weights.len()];
+    if present == 0 {
+        return lens;
+    }
+    if present == 1 {
+        let (_, idx) = heap.pop().unwrap();
+        lens[idx] = 1;
+        return lens;
+    }
+    // Merge.
+    while heap.len() > 1 {
+        let (std::cmp::Reverse(wa), a) = heap.pop().unwrap();
+        let (std::cmp::Reverse(wb), b) = heap.pop().unwrap();
+        nodes.push(Node {
+            w: nodes[a].w + nodes[b].w,
+            kids: Some((a, b)),
+        });
+        heap.push((std::cmp::Reverse(wa.saturating_add(wb)), nodes.len() - 1));
+    }
+    // Depth-first depth assignment.
+    let root = heap.pop().unwrap().1;
+    let mut stack = vec![(root, 0u32)];
+    while let Some((idx, depth)) = stack.pop() {
+        match nodes[idx].kids {
+            Some((a, b)) => {
+                stack.push((a, depth + 1));
+                stack.push((b, depth + 1));
+            }
+            None => {
+                lens[idx] = depth.max(1);
+            }
+        }
+    }
+    lens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(book: &HuffmanBook, syms: &[u16]) {
+        let mut w = BitWriter::new();
+        for &s in syms {
+            book.encode(s as usize, &mut w);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &s in syms {
+            assert_eq!(book.decode(&mut r), s);
+        }
+    }
+
+    #[test]
+    fn two_symbols() {
+        let book = HuffmanBook::from_weights(&[0.9, 0.1]);
+        assert_eq!(book.len_of(0), 1);
+        assert_eq!(book.len_of(1), 1);
+        roundtrip(&book, &[0, 1, 1, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn skewed_distribution_short_codes_for_common() {
+        let book = HuffmanBook::from_weights(&[100.0, 10.0, 5.0, 1.0]);
+        assert!(book.len_of(0) <= book.len_of(1));
+        assert!(book.len_of(1) <= book.len_of(3));
+        roundtrip(&book, &[0, 3, 1, 2, 0, 0, 1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn uniform_distribution_balanced() {
+        let book = HuffmanBook::from_weights(&[1.0; 8]);
+        for s in 0..8 {
+            assert_eq!(book.len_of(s), 3);
+        }
+        roundtrip(&book, &(0..8u16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_weight_symbols_absent() {
+        let book = HuffmanBook::from_weights(&[1.0, 0.0, 2.0, 0.0, 4.0]);
+        assert_eq!(book.len_of(1), 0);
+        assert_eq!(book.len_of(3), 0);
+        roundtrip(&book, &[0, 2, 4, 4, 2, 0]);
+    }
+
+    #[test]
+    fn all_zero_weights_fall_back_to_uniform() {
+        let book = HuffmanBook::from_weights(&[0.0; 4]);
+        roundtrip(&book, &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn single_symbol() {
+        let book = HuffmanBook::from_weights(&[0.0, 5.0, 0.0]);
+        assert_eq!(book.len_of(1), 1);
+        roundtrip(&book, &[1, 1, 1]);
+    }
+
+    #[test]
+    fn optimality_vs_entropy() {
+        // Theorem 5: H(X) <= E[L] < H(X) + 1.
+        let probs = [0.55, 0.25, 0.1, 0.05, 0.03, 0.02];
+        let book = HuffmanBook::from_weights(&probs);
+        let h: f64 = probs.iter().map(|&p| -p * p.log2()).sum();
+        let el = book.expected_length(&probs);
+        assert!(el >= h - 1e-9, "E[L]={el} < H={h}");
+        assert!(el < h + 1.0, "E[L]={el} >= H+1={}", h + 1.0);
+    }
+
+    #[test]
+    fn long_random_stream_roundtrip() {
+        let mut rng = crate::util::Rng::new(42);
+        let weights: Vec<f64> = (0..17).map(|i| 1.0 / (1 + i) as f64).collect();
+        let book = HuffmanBook::from_weights(&weights);
+        let syms: Vec<u16> = (0..10_000).map(|_| rng.below(17) as u16).collect();
+        roundtrip(&book, &syms);
+    }
+
+    #[test]
+    fn kraft_holds() {
+        let book = HuffmanBook::from_weights(&[3.0, 1.0, 1.0, 1.0, 0.5, 0.25]);
+        let kraft: f64 = book
+            .lengths()
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-12);
+    }
+}

@@ -1,0 +1,260 @@
+//! Quantization level sets.
+//!
+//! A `Levels` holds the *magnitude* levels of the paper's notation
+//! `0 = ℓ_0 < ℓ_1 < … < ℓ_{s+1} = 1` (signs carried separately), or — for
+//! AMQ's symmetric exponential scheme (Section 3.3 / Appendix B.3.3) — a
+//! zero-free set `p^s < … < p < 1` where the first bin `[−p^s, p^s]`
+//! rounds stochastically between `±p^s`.
+
+use crate::util::Rng;
+
+/// Validated, sorted magnitude levels in (0, 1], optionally including 0.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Levels {
+    mags: Vec<f64>,
+    has_zero: bool,
+}
+
+impl Levels {
+    /// Arbitrary levels. `mags` must be strictly increasing, end at 1.0,
+    /// and start at 0.0 iff `has_zero`.
+    pub fn from_mags(mags: Vec<f64>, has_zero: bool) -> Self {
+        assert!(mags.len() >= 2, "need at least two magnitude levels");
+        assert!(
+            mags.windows(2).all(|w| w[0] < w[1]),
+            "levels must be strictly increasing: {mags:?}"
+        );
+        assert!(
+            (mags[mags.len() - 1] - 1.0).abs() < 1e-12,
+            "last level must be 1.0: {mags:?}"
+        );
+        if has_zero {
+            assert_eq!(mags[0], 0.0, "first level must be 0.0: {mags:?}");
+        } else {
+            assert!(mags[0] > 0.0, "no-zero levels must start above 0: {mags:?}");
+        }
+        Levels { mags, has_zero }
+    }
+
+    /// Uniformly spaced `k` magnitudes including 0 and 1 (QSGD / QSGDinf).
+    pub fn uniform(k: usize) -> Self {
+        assert!(k >= 2);
+        let mags = (0..k).map(|j| j as f64 / (k - 1) as f64).collect();
+        Levels::from_mags(mags, true)
+    }
+
+    /// Exponentially spaced `{0, p^{k-2}, …, p, 1}` (NUQSGD with p = 0.5).
+    pub fn exponential(k: usize, p: f64) -> Self {
+        assert!(k >= 2);
+        assert!(p > 0.0 && p < 1.0);
+        let mut mags = vec![0.0];
+        for j in (0..k - 1).rev() {
+            mags.push(p.powi(j as i32));
+        }
+        Levels::from_mags(mags, true)
+    }
+
+    /// Ternary levels {−1, 0, 1} (TernGrad).
+    pub fn ternary() -> Self {
+        Levels::uniform(2)
+    }
+
+    /// AMQ's symmetric, zero-free exponential levels `[p^s, …, p, 1]`
+    /// with `k` magnitudes (s = k − 1).
+    pub fn amq(k: usize, p: f64) -> Self {
+        assert!(k >= 1);
+        assert!(p > 0.0 && p < 1.0);
+        let mags = (0..k).rev().map(|j| p.powi(j as i32)).collect();
+        Levels::from_mags(mags, false)
+    }
+
+    /// Number of magnitude levels the paper's `bits` hyperparameter maps
+    /// to: `2^(bits-1)` (3 bits → 4 magnitudes; 2 bits → ternary).
+    pub fn mags_for_bits(bits: u32) -> usize {
+        assert!(bits >= 2 && bits <= 8, "bits must be in [2, 8], got {bits}");
+        1usize << (bits - 1)
+    }
+
+    pub fn mags(&self) -> &[f64] {
+        &self.mags
+    }
+
+    pub fn mags_f32(&self) -> Vec<f32> {
+        self.mags.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn has_zero(&self) -> bool {
+        self.has_zero
+    }
+
+    /// Number of magnitude levels K (= s + 2 when zero is included).
+    pub fn k(&self) -> usize {
+        self.mags.len()
+    }
+
+    /// Number of interior (adaptable) levels `s`.
+    pub fn interior(&self) -> usize {
+        if self.has_zero {
+            self.mags.len().saturating_sub(2)
+        } else {
+            // first level is adaptable too; only the final 1.0 is pinned
+            self.mags.len() - 1
+        }
+    }
+
+    /// Number of distinct encoded symbols (magnitude indices).
+    pub fn num_symbols(&self) -> usize {
+        self.mags.len()
+    }
+
+    /// Number of distinct signed values representable.
+    pub fn num_values(&self) -> usize {
+        if self.has_zero {
+            2 * self.mags.len() - 1
+        } else {
+            2 * self.mags.len()
+        }
+    }
+
+    /// The largest ratio `ℓ_{j+1}/ℓ_j` over consecutive positive levels
+    /// (the `j*` of Theorem 2).
+    pub fn max_ratio(&self) -> f64 {
+        let start = if self.has_zero { 1 } else { 0 };
+        self.mags[start..]
+            .windows(2)
+            .map(|w| w[1] / w[0])
+            .fold(1.0, f64::max)
+    }
+
+    /// Smallest positive level ℓ_1.
+    pub fn smallest_positive(&self) -> f64 {
+        if self.has_zero {
+            self.mags[1]
+        } else {
+            self.mags[0]
+        }
+    }
+
+    /// Replace interior levels, preserving endpoints and ordering.
+    /// Values are clamped into a strictly increasing sequence.
+    pub fn set_interior(&mut self, vals: &[f64]) {
+        let k = self.k();
+        if self.has_zero {
+            assert_eq!(vals.len(), k - 2);
+            for (i, &v) in vals.iter().enumerate() {
+                self.mags[i + 1] = v;
+            }
+        } else {
+            assert_eq!(vals.len(), k - 1);
+            for (i, &v) in vals.iter().enumerate() {
+                self.mags[i] = v;
+            }
+        }
+        self.enforce_order();
+    }
+
+    /// Force strict monotonicity after an external update (guards the
+    /// feasible set 𝓛 of Eq. 3 against floating-point ties).
+    fn enforce_order(&mut self) {
+        let eps = 1e-9;
+        let lo = if self.has_zero { 1 } else { 0 };
+        for i in lo..self.mags.len() - 1 {
+            let prev = if i == 0 { 0.0 } else { self.mags[i - 1] };
+            self.mags[i] = self.mags[i].max(prev + eps).min(1.0 - eps * (self.mags.len() - 1 - i) as f64);
+        }
+        let last = self.mags.len() - 1;
+        self.mags[last] = 1.0;
+    }
+
+    /// Random perturbation of interior levels (used by convergence tests
+    /// and the Fig. 8 experiment for random restarts).
+    pub fn jitter(&self, rng: &mut Rng, scale: f64) -> Levels {
+        let mut out = self.clone();
+        let lo = if self.has_zero { 1 } else { 0 };
+        for i in lo..out.mags.len() - 1 {
+            out.mags[i] = (out.mags[i] + scale * (rng.f64() - 0.5)).clamp(1e-6, 1.0 - 1e-6);
+        }
+        out.mags[lo..].sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.enforce_order();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_levels() {
+        let l = Levels::uniform(4);
+        assert_eq!(l.mags(), &[0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0]);
+        assert!(l.has_zero());
+        assert_eq!(l.interior(), 2);
+        assert_eq!(l.num_values(), 7);
+    }
+
+    #[test]
+    fn exponential_levels() {
+        let l = Levels::exponential(4, 0.5);
+        assert_eq!(l.mags(), &[0.0, 0.25, 0.5, 1.0]);
+        assert_eq!(l.max_ratio(), 2.0);
+        assert_eq!(l.smallest_positive(), 0.25);
+    }
+
+    #[test]
+    fn ternary() {
+        let l = Levels::ternary();
+        assert_eq!(l.mags(), &[0.0, 1.0]);
+        assert_eq!(l.num_values(), 3);
+    }
+
+    #[test]
+    fn amq_levels() {
+        let l = Levels::amq(4, 0.5);
+        assert_eq!(l.mags(), &[0.125, 0.25, 0.5, 1.0]);
+        assert!(!l.has_zero());
+        assert_eq!(l.num_values(), 8);
+        assert_eq!(l.interior(), 3);
+    }
+
+    #[test]
+    fn bits_mapping() {
+        assert_eq!(Levels::mags_for_bits(2), 2); // ternary
+        assert_eq!(Levels::mags_for_bits(3), 4);
+        assert_eq!(Levels::mags_for_bits(8), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_unsorted() {
+        Levels::from_mags(vec![0.0, 0.5, 0.3, 1.0], true);
+    }
+
+    #[test]
+    #[should_panic(expected = "last level")]
+    fn rejects_bad_top() {
+        Levels::from_mags(vec![0.0, 0.5], true);
+    }
+
+    #[test]
+    fn set_interior_keeps_feasible() {
+        let mut l = Levels::uniform(4);
+        l.set_interior(&[0.9, 0.1]); // deliberately out of order
+        let m = l.mags();
+        assert!(m.windows(2).all(|w| w[0] < w[1]), "{m:?}");
+        assert_eq!(m[0], 0.0);
+        assert_eq!(m[3], 1.0);
+    }
+
+    #[test]
+    fn jitter_stays_feasible() {
+        let l = Levels::exponential(8, 0.5);
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let j = l.jitter(&mut rng, 0.2);
+            assert!(j.mags().windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(*j.mags().last().unwrap(), 1.0);
+            assert_eq!(j.mags()[0], 0.0);
+        }
+    }
+}

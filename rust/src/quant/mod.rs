@@ -1,0 +1,64 @@
+//! Gradient quantization stack (Section 3 + Appendix D).
+//!
+//! * [`levels`] — validated quantization level sets (uniform, exponential,
+//!   ternary, AMQ's symmetric no-zero exponential, arbitrary adaptive).
+//! * [`quantizer`] — bucketed stochastic rounding + dequantization +
+//!   exact per-vector variance (Eq. 1–2).
+//! * [`bitio`] / [`huffman`] / [`encode`] — the ENCODE/DECODE pipeline of
+//!   Appendix D: fp32 bucket norms + Huffman-coded level symbols + sign
+//!   bits, with exact bit accounting for the communication model.
+//! * [`schemes`] — the method zoo: SuperSGD, QSGDinf, TRN, NUQSGD, and the
+//!   adaptive ALQ/ALQ-N/ALQ-G/AMQ/AMQ-N configurations.
+//! * [`theory`] — Theorem 2 variance bound ε_Q and Theorem 3 code-length
+//!   bound, used by tests and the theory-validation experiments.
+
+pub mod bitio;
+pub mod elias;
+pub mod encode;
+pub mod huffman;
+pub mod levels;
+pub mod quantizer;
+pub mod schemes;
+pub mod theory;
+
+pub use encode::{decode, decode_into, encode, encode_into, symbol_counts, EncodedGrad};
+pub use huffman::HuffmanBook;
+pub use levels::Levels;
+pub use quantizer::{QuantizedGrad, Quantizer};
+pub use schemes::Method;
+
+/// Normalization applied per bucket before quantization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NormType {
+    /// Euclidean norm (QSGD, NUQSGD, ALQ, AMQ).
+    L2,
+    /// Max norm (QSGDinf, TernGrad).
+    Linf,
+}
+
+/// Per-bucket norm, matching `python/compile/kernels/ref.py::bucket_norms`.
+#[inline]
+pub fn bucket_norm(v: &[f32], norm_type: NormType) -> f32 {
+    match norm_type {
+        NormType::L2 => {
+            // f64 accumulation: cheap and removes reduction-order drift
+            // against the XLA-side pairwise sum (see python tests).
+            let s: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            (s as f32).sqrt()
+        }
+        NormType::Linf => v.iter().fold(0.0f32, |m, &x| m.max(x.abs())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        assert!((bucket_norm(&[3.0, -4.0], NormType::L2) - 5.0).abs() < 1e-6);
+        assert_eq!(bucket_norm(&[3.0, -4.0], NormType::Linf), 4.0);
+        assert_eq!(bucket_norm(&[], NormType::Linf), 0.0);
+        assert_eq!(bucket_norm(&[0.0; 4], NormType::L2), 0.0);
+    }
+}

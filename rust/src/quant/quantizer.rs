@@ -1,0 +1,528 @@
+//! Bucketed stochastic quantization — the L3 hot path.
+//!
+//! Semantics match `python/compile/kernels/ref.py::quantize_ref` (and thus
+//! the L1 Pallas kernel) coordinate-for-coordinate when driven with the
+//! same uniform variates. On top of the kernel semantics this adds:
+//!
+//! * network-wise bucketing with the last partial bucket carried in fp32
+//!   (Appendix K: "We only transmit the last bucket in full precision if
+//!   it is smaller than the specified bucket size");
+//! * AMQ's zero-free symmetric first bin (Appendix B.3.3);
+//! * optional TernGrad-style clipping at `c·σ` (Appendix K.2, Eq. 49);
+//! * exact variance evaluation via Eq. (1)–(2) for the variance figures.
+
+use super::{bucket_norm, Levels, NormType};
+use crate::util::Rng;
+
+/// A quantized gradient: signed level symbols for all full buckets, one
+/// fp32 norm per bucket, and a raw fp32 tail (the trailing partial bucket).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedGrad {
+    /// Signed symbol per coordinate of the full-bucket prefix.
+    /// `has_zero`: symbol = sign·mag_index (0 encodes value 0).
+    /// `!has_zero`: symbol = sign·(mag_index + 1) (never 0).
+    pub qidx: Vec<i8>,
+    /// Per-full-bucket norms.
+    pub norms: Vec<f32>,
+    /// Raw fp32 tail (len = n % bucket).
+    pub tail: Vec<f32>,
+    /// Bucket size used.
+    pub bucket: usize,
+}
+
+impl QuantizedGrad {
+    pub fn len(&self) -> usize {
+        self.qidx.len() + self.tail.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Stochastic quantizer for one scheme configuration.
+#[derive(Clone, Debug)]
+pub struct Quantizer {
+    levels: Levels,
+    mags: Vec<f32>,
+    norm_type: NormType,
+    bucket: usize,
+    /// TernGrad clipping factor c (clip at c·σ before quantization).
+    clip_factor: Option<f32>,
+}
+
+impl Quantizer {
+    pub fn new(levels: Levels, norm_type: NormType, bucket: usize) -> Self {
+        assert!(bucket >= 1);
+        let mags = levels.mags_f32();
+        Quantizer { levels, mags, norm_type, bucket, clip_factor: None }
+    }
+
+    pub fn with_clip(mut self, c: f32) -> Self {
+        assert!(c > 0.0);
+        self.clip_factor = Some(c);
+        self
+    }
+
+    pub fn levels(&self) -> &Levels {
+        &self.levels
+    }
+
+    /// Swap in adapted levels (Algorithm 1 line 4) without reallocating.
+    pub fn set_levels(&mut self, levels: Levels) {
+        self.mags = levels.mags_f32();
+        self.levels = levels;
+    }
+
+    pub fn norm_type(&self) -> NormType {
+        self.norm_type
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    pub fn clip_factor(&self) -> Option<f32> {
+        self.clip_factor
+    }
+
+    /// Quantize `v`, drawing one uniform variate per coordinate from `rng`.
+    pub fn quantize(&self, v: &[f32], rng: &mut Rng) -> QuantizedGrad {
+        let nb = v.len() / self.bucket;
+        let full = nb * self.bucket;
+        let mut q = QuantizedGrad {
+            qidx: vec![0i8; full],
+            norms: vec![0f32; nb],
+            tail: v[full..].to_vec(),
+            bucket: self.bucket,
+        };
+        self.quantize_into(v, rng, &mut q);
+        q
+    }
+
+    /// Quantize into a preallocated `QuantizedGrad` (hot-path entry; no
+    /// allocation when the shapes already match).
+    pub fn quantize_into(&self, v: &[f32], rng: &mut Rng, out: &mut QuantizedGrad) {
+        let nb = v.len() / self.bucket;
+        let full = nb * self.bucket;
+        out.qidx.resize(full, 0);
+        out.norms.resize(nb, 0.0);
+        out.tail.clear();
+        out.tail.extend_from_slice(&v[full..]);
+        out.bucket = self.bucket;
+
+        let mut clipped_buf: Vec<f32>;
+        for b in 0..nb {
+            let raw = &v[b * self.bucket..(b + 1) * self.bucket];
+            let src: &[f32] = if let Some(c) = self.clip_factor {
+                clipped_buf = clip_bucket(raw, c);
+                &clipped_buf
+            } else {
+                raw
+            };
+            let norm = bucket_norm(src, self.norm_type);
+            out.norms[b] = norm;
+            let dst = &mut out.qidx[b * self.bucket..(b + 1) * self.bucket];
+            if norm == 0.0 {
+                // All-zero bucket: symbol 0 (has_zero) / smallest mag with
+                // random sign is unnecessary — keep deterministic floor.
+                if self.levels.has_zero() {
+                    dst.fill(0);
+                } else {
+                    for (d, _x) in dst.iter_mut().zip(src) {
+                        *d = if rng.f32() < 0.5 { 1 } else { -1 };
+                    }
+                }
+                continue;
+            }
+            let inv = 1.0 / norm;
+            if self.levels.has_zero() {
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = self.quantize_coord_zero(x, inv, rng.f32());
+                }
+            } else {
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = self.quantize_coord_nozero(x, inv, rng.f32());
+                }
+            }
+        }
+    }
+
+    /// Kernel-compatible path: consume caller-provided uniforms (used by
+    /// the cross-layer bit-for-bit tests against the Pallas artifact).
+    pub fn quantize_with_u(&self, v: &[f32], u: &[f32]) -> QuantizedGrad {
+        assert_eq!(v.len(), u.len());
+        assert!(self.clip_factor.is_none() && self.levels.has_zero());
+        let nb = v.len() / self.bucket;
+        let full = nb * self.bucket;
+        let mut q = QuantizedGrad {
+            qidx: vec![0; full],
+            norms: vec![0.0; nb],
+            tail: v[full..].to_vec(),
+            bucket: self.bucket,
+        };
+        for b in 0..nb {
+            let s = b * self.bucket;
+            let src = &v[s..s + self.bucket];
+            let norm = bucket_norm(src, self.norm_type);
+            q.norms[b] = norm;
+            if norm == 0.0 {
+                continue;
+            }
+            let inv = 1.0 / norm;
+            for i in 0..self.bucket {
+                q.qidx[s + i] = self.quantize_coord_zero_u(src[i], inv, u[s + i]);
+            }
+        }
+        q
+    }
+
+    #[inline]
+    fn quantize_coord_zero(&self, x: f32, inv_norm: f32, u: f32) -> i8 {
+        self.quantize_coord_zero_u(x, inv_norm, u)
+    }
+
+    /// Level search: linear scan for small K (branch-predictor friendly),
+    /// binary search for K > 8 (the bits ≥ 5 regimes — §Perf).
+    #[inline]
+    fn find_tau(&self, r: f32) -> usize {
+        let k = self.mags.len();
+        if k <= 8 {
+            let mut tau = 0usize;
+            while tau + 2 < k && r >= self.mags[tau + 1] {
+                tau += 1;
+            }
+            tau
+        } else {
+            // partition_point: first index with mags[i] > r.
+            let idx = self.mags.partition_point(|&m| m <= r);
+            idx.saturating_sub(1).min(k - 2)
+        }
+    }
+
+    /// Matches the Pallas kernel: branchless-equivalent level search,
+    /// round up with probability rho = (r - lo)/(hi - lo) when u < rho.
+    #[inline]
+    fn quantize_coord_zero_u(&self, x: f32, inv_norm: f32, u: f32) -> i8 {
+        let r = (x.abs() * inv_norm).clamp(0.0, 1.0);
+        let tau = self.find_tau(r);
+        // tau in [0, k-2]; r may still be >= mags[tau+1] only when tau = k-2.
+        let lo = self.mags[tau];
+        let hi = self.mags[tau + 1];
+        let rho = (r - lo) / (hi - lo).max(1e-30);
+        let idx = tau + usize::from(u < rho);
+        let sign = if x < 0.0 { -1 } else { 1 };
+        (sign * idx as i8) as i8
+    }
+
+    /// AMQ path (Appendix B.3.3): first bin [−ℓ_1, ℓ_1] rounds between the
+    /// two signed smallest levels; symbols are sign·(mag_index + 1).
+    #[inline]
+    fn quantize_coord_nozero(&self, x: f32, inv_norm: f32, u: f32) -> i8 {
+        let theta = (x * inv_norm).clamp(-1.0, 1.0);
+        let l1 = self.mags[0];
+        let r = theta.abs();
+        if r < l1 {
+            // q = +l1 w.p. (theta + l1) / (2 l1), else −l1. Unbiased.
+            let p_up = (theta + l1) / (2.0 * l1);
+            return if u < p_up { 1 } else { -1 };
+        }
+        let tau = self.find_tau(r);
+        let lo = self.mags[tau];
+        let hi = self.mags[tau + 1];
+        let rho = (r - lo) / (hi - lo).max(1e-30);
+        let idx = tau + usize::from(u < rho);
+        let sign = if theta < 0.0 { -1 } else { 1 };
+        sign * (idx as i8 + 1)
+    }
+
+    /// Dequantize into `out` (len must equal `q.len()`).
+    pub fn dequantize(&self, q: &QuantizedGrad, out: &mut [f32]) {
+        assert_eq!(out.len(), q.len());
+        let has_zero = self.levels.has_zero();
+        for b in 0..q.norms.len() {
+            let norm = q.norms[b];
+            let s = b * q.bucket;
+            for i in 0..q.bucket {
+                let sym = q.qidx[s + i] as i32;
+                let mag_idx = if has_zero {
+                    sym.unsigned_abs() as usize
+                } else if sym == 0 {
+                    // only possible for zero-norm AMQ bucket; value 0
+                    out[s + i] = 0.0;
+                    continue;
+                } else {
+                    (sym.unsigned_abs() - 1) as usize
+                };
+                let val = self.mags[mag_idx] * norm;
+                out[s + i] = if sym < 0 { -val } else { val };
+            }
+        }
+        let full = q.qidx.len();
+        out[full..].copy_from_slice(&q.tail);
+    }
+
+    /// Exact quantization MSE `E‖Q(v) − v‖²` of Eq. (1)–(2); when clipping
+    /// is enabled this includes the clipping bias² (the estimator becomes
+    /// biased; the paper's variance plots report MSE in that case too).
+    pub fn exact_variance(&self, v: &[f32]) -> f64 {
+        let (var, bias_sq) = self.exact_variance_parts(v);
+        var + bias_sq
+    }
+
+    /// (stochastic variance, clipping bias²) decomposition of the MSE.
+    /// Without clipping the second term is 0 and the first is Eq. (1).
+    pub fn exact_variance_parts(&self, v: &[f32]) -> (f64, f64) {
+        let nb = v.len() / self.bucket;
+        let mut total = 0.0f64;
+        let mut total_bias = 0.0f64;
+        let mut clipped_buf: Vec<f32>;
+        for b in 0..nb {
+            let raw = &v[b * self.bucket..(b + 1) * self.bucket];
+            let src: &[f32] = if let Some(c) = self.clip_factor {
+                clipped_buf = clip_bucket(raw, c);
+                &clipped_buf
+            } else {
+                raw
+            };
+            let norm = bucket_norm(src, self.norm_type) as f64;
+            if norm == 0.0 {
+                continue;
+            }
+            let n2 = norm * norm;
+            for (i, &x) in src.iter().enumerate() {
+                let var = if self.levels.has_zero() {
+                    let r = ((x.abs() as f64) / norm).clamp(0.0, 1.0);
+                    let (lo, hi) = self.bin_of(r);
+                    (hi - r) * (r - lo)
+                } else {
+                    let theta = ((x as f64) / norm).clamp(-1.0, 1.0);
+                    let r = theta.abs();
+                    let l1 = self.levels.mags()[0];
+                    if r < l1 {
+                        l1 * l1 - theta * theta
+                    } else {
+                        let (lo, hi) = self.bin_of(r);
+                        (hi - r) * (r - lo)
+                    }
+                };
+                // Clipping bias: E[q] = clip(x), so MSE adds (clip(x)-x)^2.
+                let bias = (src[i] as f64) - (raw[i] as f64);
+                total += n2 * var;
+                total_bias += bias * bias;
+            }
+        }
+        (total, total_bias)
+    }
+
+    #[inline]
+    fn bin_of(&self, r: f64) -> (f64, f64) {
+        let m = self.levels.mags();
+        let k = m.len();
+        let mut tau = 0usize;
+        while tau + 2 < k && r >= m[tau + 1] {
+            tau += 1;
+        }
+        (m[tau], m[tau + 1])
+    }
+}
+
+/// TernGrad-style clipping (Eq. 49): clamp coordinates to ±c·σ where σ is
+/// the standard deviation of the bucket's coordinates.
+fn clip_bucket(v: &[f32], c: f32) -> Vec<f32> {
+    let n = v.len() as f64;
+    let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var: f64 = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let lim = (c as f64 * var.sqrt()) as f32;
+    if lim == 0.0 {
+        return v.to_vec();
+    }
+    v.iter().map(|&x| x.clamp(-lim, lim)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn roundtrip_values_in_level_set() {
+        let q = Quantizer::new(Levels::exponential(4, 0.5), NormType::L2, 64);
+        let v = randn(256, 1);
+        let mut rng = Rng::new(2);
+        let g = q.quantize(&v, &mut rng);
+        let mut out = vec![0.0; 256];
+        q.dequantize(&g, &mut out);
+        for b in 0..4 {
+            let norm = g.norms[b];
+            for i in 0..64 {
+                let mag = out[b * 64 + i].abs() / norm;
+                assert!(
+                    q.levels().mags().iter().any(|&m| (m - mag as f64).abs() < 1e-5),
+                    "mag {mag} not in level set"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partial_tail_is_exact() {
+        let q = Quantizer::new(Levels::uniform(4), NormType::L2, 64);
+        let v = randn(150, 3); // 2 full buckets + tail of 22
+        let mut rng = Rng::new(4);
+        let g = q.quantize(&v, &mut rng);
+        assert_eq!(g.tail.len(), 22);
+        let mut out = vec![0.0; 150];
+        q.dequantize(&g, &mut out);
+        assert_eq!(&out[128..], &v[128..]);
+    }
+
+    #[test]
+    fn unbiased_has_zero() {
+        let q = Quantizer::new(Levels::exponential(4, 0.5), NormType::L2, 32);
+        let v = randn(32, 5);
+        let mut rng = Rng::new(6);
+        let trials = 4000;
+        let mut acc = vec![0.0f64; 32];
+        let mut out = vec![0.0f32; 32];
+        for _ in 0..trials {
+            let g = q.quantize(&v, &mut rng);
+            q.dequantize(&g, &mut out);
+            for i in 0..32 {
+                acc[i] += out[i] as f64;
+            }
+        }
+        let norm = bucket_norm(&v, NormType::L2) as f64;
+        for i in 0..32 {
+            let mean = acc[i] / trials as f64;
+            let tol = 4.0 * norm / (trials as f64).sqrt();
+            assert!(
+                (mean - v[i] as f64).abs() < tol,
+                "coord {i}: {mean} vs {}",
+                v[i]
+            );
+        }
+    }
+
+    #[test]
+    fn unbiased_amq_nozero() {
+        let q = Quantizer::new(Levels::amq(4, 0.5), NormType::L2, 32);
+        let v = randn(32, 7);
+        let mut rng = Rng::new(8);
+        let trials = 4000;
+        let mut acc = vec![0.0f64; 32];
+        let mut out = vec![0.0f32; 32];
+        for _ in 0..trials {
+            let g = q.quantize(&v, &mut rng);
+            q.dequantize(&g, &mut out);
+            for i in 0..32 {
+                acc[i] += out[i] as f64;
+            }
+        }
+        let norm = bucket_norm(&v, NormType::L2) as f64;
+        for i in 0..32 {
+            let mean = acc[i] / trials as f64;
+            let tol = 4.0 * norm / (trials as f64).sqrt();
+            assert!(
+                (mean - v[i] as f64).abs() < tol,
+                "coord {i}: {mean} vs {}",
+                v[i]
+            );
+        }
+    }
+
+    #[test]
+    fn exact_variance_matches_monte_carlo() {
+        let q = Quantizer::new(Levels::uniform(4), NormType::L2, 64);
+        let v = randn(64, 9);
+        let want = q.exact_variance(&v);
+        let mut rng = Rng::new(10);
+        let trials = 6000;
+        let mut acc = 0.0f64;
+        let mut out = vec![0.0f32; 64];
+        for _ in 0..trials {
+            let g = q.quantize(&v, &mut rng);
+            q.dequantize(&g, &mut out);
+            acc += out
+                .iter()
+                .zip(&v)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+        }
+        let got = acc / trials as f64;
+        assert!(
+            (got - want).abs() / want.max(1e-12) < 0.1,
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn exact_variance_amq_matches_monte_carlo() {
+        let q = Quantizer::new(Levels::amq(4, 0.5), NormType::L2, 64);
+        let v = randn(64, 11);
+        let want = q.exact_variance(&v);
+        let mut rng = Rng::new(12);
+        let trials = 6000;
+        let mut acc = 0.0f64;
+        let mut out = vec![0.0f32; 64];
+        for _ in 0..trials {
+            let g = q.quantize(&v, &mut rng);
+            q.dequantize(&g, &mut out);
+            acc += out
+                .iter()
+                .zip(&v)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+        }
+        let got = acc / trials as f64;
+        assert!(
+            (got - want).abs() / want.max(1e-12) < 0.1,
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn clipping_reduces_extreme_variance() {
+        // A bucket with one huge outlier: clipping shrinks the Linf norm
+        // and thus the *stochastic* quantization variance of everyone
+        // else, at the cost of a bias on the outlier (TernGrad's trade).
+        let mut v = vec![0.01f32; 256];
+        v[0] = 100.0;
+        let plain = Quantizer::new(Levels::ternary(), NormType::Linf, 256);
+        let clipped = plain.clone().with_clip(2.5);
+        let (var_p, bias_p) = plain.exact_variance_parts(&v);
+        let (var_c, bias_c) = clipped.exact_variance_parts(&v);
+        assert_eq!(bias_p, 0.0);
+        assert!(var_c < var_p, "stochastic variance {var_c} !< {var_p}");
+        assert!(bias_c > 0.0);
+    }
+
+    #[test]
+    fn zero_vector() {
+        let q = Quantizer::new(Levels::uniform(4), NormType::L2, 16);
+        let v = vec![0.0f32; 32];
+        let mut rng = Rng::new(13);
+        let g = q.quantize(&v, &mut rng);
+        assert!(g.qidx.iter().all(|&s| s == 0));
+        let mut out = vec![1.0f32; 32];
+        q.dequantize(&g, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn matches_kernel_semantics_with_u() {
+        // Same math as ref.py on a hand-checkable case.
+        let q = Quantizer::new(Levels::uniform(3), NormType::Linf, 4);
+        let v = [0.5f32, -1.0, 0.2, 0.75];
+        // norms: linf = 1.0; r = [0.5, 1.0, 0.2, 0.75]; levels [0, .5, 1]
+        let u = [0.9f32, 0.5, 0.39, 0.51];
+        // r=0.5 -> tau=1 (r>=0.5), rho=0 -> idx=1; r=1.0 -> tau=1, rho=1, u<1 -> idx 2 (sign -)
+        // r=0.2 -> tau=0, rho=0.4, u=0.39<0.4 -> idx 1; r=0.75: tau=1, rho=.5, u=.51 -> idx 1
+        let g = q.quantize_with_u(&v, &u);
+        assert_eq!(g.qidx, vec![1, -2, 1, 1]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Executable theory: Theorem 2 (variance bound), Theorem 3 (code-length
+//! bound), Lemma 2's K_p, and the Proposition 7 variance gap. Used by the
+//! property tests ("empirical variance ≤ ε_Q‖v‖²", "measured bits ≤ bound")
+//! and the theory-validation experiment.
+
+use super::Levels;
+
+/// K_p of Lemma 2 / Theorem 2: K_p = (1/(2−p)) ((1−p)/(2−p))^{1−p}.
+pub fn k_p(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0);
+    (1.0 / (2.0 - p)) * ((1.0 - p) / (2.0 - p)).powf(1.0 - p)
+}
+
+/// ε_Q of Theorem 2 for `L^q` normalization in dimension `d`:
+///
+/// ε_Q = (ρ−1)²/(4ρ) + inf_{0<p<1} K_p ℓ₁^{2−p} d^{(2−p)/min(q,2)}
+/// with ρ = max_j ℓ_{j+1}/ℓ_j over positive levels.
+///
+/// For zero-free (AMQ) level sets Theorem 9 applies instead:
+/// ε_Q = ℓ₁² d^{2/min(q,2)} + (ρ−1)²/(4ρ).
+pub fn epsilon_q(levels: &Levels, d: usize, q_norm: f64) -> f64 {
+    let rho = levels.max_ratio();
+    let ratio_term = (rho - 1.0).powi(2) / (4.0 * rho);
+    let l1 = levels.smallest_positive();
+    let dq = (q_norm.min(2.0)).max(1.0);
+    if !levels.has_zero() {
+        // Theorem 9.
+        return l1 * l1 * (d as f64).powf(2.0 / dq) + ratio_term;
+    }
+    // Grid-minimize over p in (0,1).
+    let mut best = f64::INFINITY;
+    for i in 1..200 {
+        let p = i as f64 / 200.0;
+        let term = k_p(p) * l1.powf(2.0 - p) * (d as f64).powf((2.0 - p) / dq);
+        best = best.min(term);
+    }
+    ratio_term + best
+}
+
+/// Entropy (bits) of a probability vector.
+pub fn entropy_bits(probs: &[f64]) -> f64 {
+    probs
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.log2())
+        .sum()
+}
+
+/// Theorem 3 code-length bound (expected bits to transmit one quantized
+/// vector): `b + n_{ℓ₁,d} + d (H(L) + 1)` where
+/// `n_{ℓ₁,d} = min(ℓ₁^{−q} + d^{1−1/q}/ℓ₁, d)` and `b` = 32 (fp32 norm).
+pub fn code_length_bound(levels: &Levels, d: usize, q_norm: f64, symbol_probs: &[f64]) -> f64 {
+    let b = 32.0;
+    let l1 = levels.smallest_positive();
+    let n_l1 = (l1.powf(-q_norm) + (d as f64).powf(1.0 - 1.0 / q_norm) / l1).min(d as f64);
+    let h = entropy_bits(symbol_probs).min((levels.num_symbols() as f64).log2());
+    b + n_l1 + d as f64 * (h + 1.0)
+}
+
+/// Proposition 7's point: the per-coordinate gap between worst-case-
+/// optimal levels (b̂ = 1/2 for a single level) and distribution-optimal
+/// levels scales the total gap by d. Returns the per-coordinate expected
+/// variance of a single level `b` under a distribution `F` restricted to
+/// [0, 1]: `Q(b) = ∫_0^b (b−r) r dF + ∫_b^1 (1−r)(r−b) dF`.
+pub fn single_level_variance<D: crate::stats::Dist>(dist: &D, b: f64) -> f64 {
+    // ∫_0^b (b−r) r dF = b·M1[0,b] − M2[0,b]
+    let m1a = dist.partial_mean(0.0, b);
+    let m2a = dist.partial_mean_sq(0.0, b);
+    let first = b * m1a - m2a;
+    // ∫_b^1 (1−r)(r−b) dF = −M2[b,1] + (1+b) M1[b,1] − b·ΔF
+    let m1b = dist.partial_mean(b, 1.0);
+    let m2b = dist.partial_mean_sq(b, 1.0);
+    let df = dist.cdf(1.0) - dist.cdf(b);
+    let second = -m2b + (1.0 + b) * m1b - b * df;
+    first + second
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{NormType, Quantizer};
+    use crate::stats::{Dist, TruncNormal};
+    use crate::util::Rng;
+
+    #[test]
+    fn k_p_shape() {
+        // K_p is the max of θ^{1/p−1} − θ^{2/p−1} on (0,1): in (0, 1).
+        for p in [0.1, 0.5, 0.9] {
+            let k = k_p(p);
+            assert!(k > 0.0 && k < 1.0, "K_{p} = {k}");
+        }
+        // Verify against direct maximization for p = 0.5.
+        let p = 0.5;
+        let direct = (0..10_000)
+            .map(|i| {
+                let theta = (i + 1) as f64 / 10_001.0;
+                theta.powf(1.0 / p - 1.0) - theta.powf(2.0 / p - 1.0)
+            })
+            .fold(0.0, f64::max);
+        assert!((k_p(p) - direct).abs() < 1e-4);
+    }
+
+    #[test]
+    fn variance_bound_holds_empirically() {
+        // E‖Q(v)−v‖² ≤ ε_Q ‖v‖₂² for random vectors, exact variance form.
+        let mut rng = Rng::new(21);
+        for (levels, q_norm, nt) in [
+            (Levels::uniform(4), f64::INFINITY, NormType::Linf),
+            (Levels::exponential(4, 0.5), 2.0, NormType::L2),
+            (Levels::exponential(8, 0.5), 2.0, NormType::L2),
+            (Levels::amq(4, 0.5), 2.0, NormType::L2),
+        ] {
+            let d = 256;
+            let quant = Quantizer::new(levels.clone(), nt, d);
+            let eps = epsilon_q(&levels, d, if q_norm.is_finite() { q_norm } else { 100.0 });
+            for _ in 0..10 {
+                let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let var = quant.exact_variance(&v);
+                let l2: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+                assert!(
+                    var <= eps * l2 + 1e-9,
+                    "levels {:?}: var {var} > eps {eps} * |v|2 {l2}",
+                    levels.mags()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn code_length_bound_holds_empirically() {
+        use crate::quant::{encode, symbol_counts, HuffmanBook};
+        let levels = Levels::exponential(4, 0.5);
+        let d = 1024;
+        let quant = Quantizer::new(levels.clone(), NormType::L2, d);
+        let mut rng = Rng::new(22);
+        let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let q = quant.quantize(&v, &mut rng);
+        let counts = symbol_counts(&q, &levels);
+        let total: f64 = counts.iter().sum();
+        let probs: Vec<f64> = counts.iter().map(|c| c / total).collect();
+        let book = HuffmanBook::from_weights(&counts);
+        let e = encode(&q, &levels, &book);
+        let bound = code_length_bound(&levels, d, 2.0, &probs);
+        assert!(
+            (e.bits as f64) <= bound,
+            "measured {} > bound {bound}",
+            e.bits
+        );
+    }
+
+    #[test]
+    fn entropy_sanity() {
+        assert!((entropy_bits(&[0.5, 0.5]) - 1.0).abs() < 1e-12);
+        assert!(entropy_bits(&[1.0, 0.0]).abs() < 1e-12);
+        assert!((entropy_bits(&[0.25; 4]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_level_optimum_beats_half() {
+        // Corollary 2: b* = F^{-1}(1 − E[R]); for a concentrated
+        // distribution near 0 this beats the worst-case choice 1/2.
+        let t = TruncNormal::unit(0.05, 0.05);
+        let er = t.partial_mean(0.0, 1.0);
+        let b_star = t.inv_cdf(1.0 - er);
+        let v_star = single_level_variance(&t, b_star);
+        let v_half = single_level_variance(&t, 0.5);
+        assert!(
+            v_star < v_half,
+            "optimal {v_star} should beat worst-case {v_half}"
+        );
+        // And b* should satisfy first-order optimality approximately.
+        let eps = 1e-4;
+        let dv = (single_level_variance(&t, b_star + eps)
+            - single_level_variance(&t, b_star - eps))
+            / (2.0 * eps);
+        assert!(dv.abs() < 1e-3, "dQ/db at b* = {dv}");
+    }
+
+    #[test]
+    fn epsilon_decreases_with_more_levels() {
+        // Thm 2 remark: with the max ratio held, more levels shrink ℓ₁ and
+        // the bound... (uniform levels: ratio shrinks too).
+        let e4 = epsilon_q(&Levels::uniform(4), 1024, 100.0);
+        let e8 = epsilon_q(&Levels::uniform(8), 1024, 100.0);
+        assert!(e8 < e4);
+    }
+}

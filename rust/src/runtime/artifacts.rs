@@ -1,0 +1,242 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named parameter tensor in the flat layout (mirrors
+/// `python/compile/model.py::ParamSpec`).
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub std: f64,
+}
+
+impl LayoutEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A model whose train/eval steps were AOT-compiled.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String, // "mlp" | "lm"
+    pub param_count: usize,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub layout: Vec<LayoutEntry>,
+    pub config: BTreeMap<String, f64>,
+    pub goldens: Option<BTreeMap<String, PathBuf>>,
+}
+
+impl ModelEntry {
+    pub fn cfg(&self, key: &str) -> usize {
+        *self
+            .config
+            .get(key)
+            .unwrap_or_else(|| panic!("model {} missing config key {key}", self.name))
+            as usize
+    }
+}
+
+/// A standalone Pallas kernel artifact.
+#[derive(Clone, Debug)]
+pub struct OpEntry {
+    pub name: String,
+    pub n: usize,
+    pub bucket: usize,
+    /// Number of magnitude levels (quantize ops only; 0 for stats).
+    pub k: usize,
+    pub norm_type: String,
+    pub hlo: PathBuf,
+    pub goldens: Option<BTreeMap<String, PathBuf>>,
+}
+
+/// Parsed `artifacts/manifest.json` with resolved paths.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub quantize: BTreeMap<String, OpEntry>,
+    pub stats: BTreeMap<String, OpEntry>,
+}
+
+impl Manifest {
+    /// Default artifacts directory: `$AQSGD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("AQSGD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+            })
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let goldens_of = |entry: &Json| -> Option<BTreeMap<String, PathBuf>> {
+            let g = entry.get("goldens")?;
+            let obj = g.as_obj()?;
+            Some(
+                obj.iter()
+                    .map(|(k, v)| (k.clone(), dir.join(v.as_str().unwrap())))
+                    .collect(),
+            )
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").as_obj().context("models")? {
+            let layout = m
+                .req("layout")
+                .as_arr()
+                .context("layout")?
+                .iter()
+                .map(|e| LayoutEntry {
+                    name: e.req("name").as_str().unwrap().to_string(),
+                    shape: e
+                        .req("shape")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
+                    init: e.req("init").as_str().unwrap().to_string(),
+                    std: e.req("std").as_f64().unwrap(),
+                })
+                .collect();
+            let config = m
+                .req("config")
+                .as_obj()
+                .unwrap()
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    kind: m.req("kind").as_str().unwrap().to_string(),
+                    param_count: m.req("param_count").as_usize().unwrap(),
+                    train_hlo: dir.join(m.req("train_hlo").as_str().unwrap()),
+                    eval_hlo: dir.join(m.req("eval_hlo").as_str().unwrap()),
+                    layout,
+                    config,
+                    goldens: goldens_of(m),
+                },
+            );
+        }
+
+        let parse_ops = |key: &str| -> Result<BTreeMap<String, OpEntry>> {
+            let mut out = BTreeMap::new();
+            for (name, o) in j.req(key).as_obj().context("ops")? {
+                out.insert(
+                    name.clone(),
+                    OpEntry {
+                        name: name.clone(),
+                        n: o.req("n").as_usize().unwrap(),
+                        bucket: o.req("bucket").as_usize().unwrap(),
+                        k: o.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                        norm_type: o.req("norm_type").as_str().unwrap().to_string(),
+                        hlo: dir.join(o.req("hlo").as_str().unwrap()),
+                        goldens: goldens_of(o),
+                    },
+                );
+            }
+            Ok(out)
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            quantize: parse_ops("quantize")?,
+            stats: parse_ops("stats")?,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name} not in manifest (have: {:?})", self.models.keys()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Raw golden tensors.
+// ---------------------------------------------------------------------------
+
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{path:?} not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{path:?} not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub fn read_i8(path: &Path) -> Result<Vec<i8>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    Ok(bytes.iter().map(|&b| b as i8).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        let tiny = m.model("mlp_tiny").unwrap();
+        assert_eq!(tiny.kind, "mlp");
+        let total: usize = tiny.layout.iter().map(|e| e.size()).sum();
+        assert_eq!(total, tiny.param_count);
+        assert!(tiny.train_hlo.exists());
+        assert!(tiny.eval_hlo.exists());
+        assert!(m.quantize.contains_key("quantize_tiny"));
+        assert!(m.stats.contains_key("stats_tiny"));
+    }
+
+    #[test]
+    fn goldens_readable() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        let tiny = m.model("mlp_tiny").unwrap();
+        let g = tiny.goldens.as_ref().expect("mlp_tiny has goldens");
+        let params = read_f32(&g["params"]).unwrap();
+        assert_eq!(params.len(), tiny.param_count);
+        let loss = read_f32(&g["loss"]).unwrap();
+        assert_eq!(loss.len(), 1);
+        assert!(loss[0].is_finite() && loss[0] > 0.0);
+        let y = read_i32(&g["in1"]).unwrap();
+        assert_eq!(y.len(), tiny.cfg("batch"));
+    }
+}

@@ -1,0 +1,77 @@
+//! PJRT CPU client wrapper.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids — see `/opt/xla-example/README.md` and
+//! `python/compile/aot.py`.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Owns the PJRT client; compile HLO text files into executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        assert!(rt.platform().to_lowercase().contains("cpu")
+            || rt.platform().to_lowercase().contains("host"));
+    }
+
+    #[test]
+    fn compiles_every_artifact() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        // Compile the cheap artifacts (tiny models + kernel ops); skip the
+        // big LM train graphs here (covered by the e2e example).
+        for name in ["mlp_tiny", "lm_tiny"] {
+            let e = m.model(name).unwrap();
+            rt.compile_hlo_text(&e.train_hlo).unwrap();
+            rt.compile_hlo_text(&e.eval_hlo).unwrap();
+        }
+        for op in m.quantize.values() {
+            rt.compile_hlo_text(&op.hlo).unwrap();
+        }
+        for op in m.stats.values() {
+            rt.compile_hlo_text(&op.hlo).unwrap();
+        }
+    }
+}

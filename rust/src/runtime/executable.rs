@@ -1,0 +1,404 @@
+//! Typed wrappers over the compiled artifacts.
+//!
+//! Every wrapper checks input shapes against the manifest, builds
+//! `xla::Literal`s, executes, and unpacks the `return_tuple=True` output.
+
+use super::artifacts::ModelEntry;
+use super::client::Runtime;
+use anyhow::{ensure, Result};
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    ensure!(n as usize == data.len(), "shape {dims:?} vs len {}", data.len());
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    ensure!(n as usize == data.len(), "shape {dims:?} vs len {}", data.len());
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+/// Fused fwd+bwd step: `(params, batch…) → (loss, grads)`.
+pub struct TrainStep {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ModelEntry,
+}
+
+impl TrainStep {
+    pub fn load(rt: &Runtime, entry: &ModelEntry) -> Result<TrainStep> {
+        Ok(TrainStep {
+            exe: rt.compile_hlo_text(&entry.train_hlo)?,
+            entry: entry.clone(),
+        })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// MLP: batch = (x: f32[B·D] row-major, y: i32[B]).
+    pub fn run_mlp(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        ensure!(self.entry.kind == "mlp");
+        let b = self.entry.cfg("batch") as i64;
+        let d = self.entry.cfg("input_dim") as i64;
+        let args = [
+            lit_f32(params, &[self.entry.param_count as i64])?,
+            lit_f32(x, &[b, d])?,
+            lit_i32(y, &[b])?,
+        ];
+        self.unpack(self.execute(&args)?)
+    }
+
+    /// LM: batch = tokens i32[B·T] row-major.
+    pub fn run_lm(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        ensure!(self.entry.kind == "lm");
+        let b = self.entry.cfg("batch") as i64;
+        let t = self.entry.cfg("seq_len") as i64;
+        let args = [
+            lit_f32(params, &[self.entry.param_count as i64])?,
+            lit_i32(tokens, &[b, t])?,
+        ];
+        self.unpack(self.execute(&args)?)
+    }
+
+    fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing train step: {e:?}"))?;
+        out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<(f32, Vec<f32>)> {
+        let (loss_l, grads_l) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("unpacking (loss, grads): {e:?}"))?;
+        let loss: f32 = loss_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?[0];
+        let grads = grads_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        ensure!(grads.len() == self.entry.param_count);
+        Ok((loss, grads))
+    }
+}
+
+/// Eval step: MLP → (loss, acc); LM → (loss,).
+pub struct EvalStep {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ModelEntry,
+}
+
+impl EvalStep {
+    pub fn load(rt: &Runtime, entry: &ModelEntry) -> Result<EvalStep> {
+        Ok(EvalStep {
+            exe: rt.compile_hlo_text(&entry.eval_hlo)?,
+            entry: entry.clone(),
+        })
+    }
+
+    pub fn run_mlp(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        ensure!(self.entry.kind == "mlp");
+        let b = self.entry.cfg("batch") as i64;
+        let d = self.entry.cfg("input_dim") as i64;
+        let args = [
+            lit_f32(params, &[self.entry.param_count as i64])?,
+            lit_f32(x, &[b, d])?,
+            lit_i32(y, &[b])?,
+        ];
+        let out = self.execute(&args)?;
+        let (loss_l, acc_l) = out
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("unpack eval: {e:?}"))?;
+        Ok((
+            loss_l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0],
+            acc_l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0],
+        ))
+    }
+
+    pub fn run_lm(&self, params: &[f32], tokens: &[i32]) -> Result<f32> {
+        ensure!(self.entry.kind == "lm");
+        let b = self.entry.cfg("batch") as i64;
+        let t = self.entry.cfg("seq_len") as i64;
+        let args = [
+            lit_f32(params, &[self.entry.param_count as i64])?,
+            lit_i32(tokens, &[b, t])?,
+        ];
+        let out = self.execute(&args)?;
+        let loss_l = out
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("unpack eval: {e:?}"))?;
+        Ok(loss_l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0])
+    }
+
+    fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing eval step: {e:?}"))?;
+        out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))
+    }
+}
+
+/// The Pallas quantize kernel artifact: `(v, levels, u) → (qidx, norms)`.
+pub struct QuantizeOp {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub bucket: usize,
+    pub k: usize,
+}
+
+impl QuantizeOp {
+    pub fn load(rt: &Runtime, op: &super::artifacts::OpEntry) -> Result<QuantizeOp> {
+        Ok(QuantizeOp {
+            exe: rt.compile_hlo_text(&op.hlo)?,
+            n: op.n,
+            bucket: op.bucket,
+            k: op.k,
+        })
+    }
+
+    pub fn run(&self, v: &[f32], levels: &[f32], u: &[f32]) -> Result<(Vec<i8>, Vec<f32>)> {
+        ensure!(v.len() == self.n && u.len() == self.n && levels.len() == self.k);
+        let args = [
+            lit_f32(v, &[self.n as i64])?,
+            lit_f32(levels, &[self.k as i64])?,
+            lit_f32(u, &[self.n as i64])?,
+        ];
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("executing quantize op: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let (qidx_l, norms_l) = out
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("unpack quantize: {e:?}"))?;
+        let qidx = qidx_l
+            .to_vec::<i8>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let norms = norms_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((qidx, norms))
+    }
+}
+
+/// The Pallas stats kernel artifact: `v → (mu, sigma2, norms)`.
+pub struct StatsOp {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub bucket: usize,
+}
+
+impl StatsOp {
+    pub fn load(rt: &Runtime, op: &super::artifacts::OpEntry) -> Result<StatsOp> {
+        Ok(StatsOp {
+            exe: rt.compile_hlo_text(&op.hlo)?,
+            n: op.n,
+            bucket: op.bucket,
+        })
+    }
+
+    pub fn run(&self, v: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        ensure!(v.len() == self.n);
+        let args = [lit_f32(v, &[self.n as i64])?];
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("executing stats op: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let (mu, s2, norms) = out
+            .to_tuple3()
+            .map_err(|e| anyhow::anyhow!("unpack stats: {e:?}"))?;
+        Ok((
+            mu.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            s2.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            norms.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts, Manifest};
+
+    fn setup() -> Option<(Runtime, Manifest)> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some((Runtime::cpu().unwrap(), Manifest::load(&dir).unwrap()))
+    }
+
+    #[test]
+    fn mlp_train_step_matches_jax_goldens() {
+        let Some((rt, m)) = setup() else { return };
+        let entry = m.model("mlp_tiny").unwrap();
+        let g = entry.goldens.as_ref().unwrap();
+        let params = artifacts::read_f32(&g["params"]).unwrap();
+        let x = artifacts::read_f32(&g["in0"]).unwrap();
+        let y = artifacts::read_i32(&g["in1"]).unwrap();
+        let want_loss = artifacts::read_f32(&g["loss"]).unwrap()[0];
+        let want_grads = artifacts::read_f32(&g["grads"]).unwrap();
+
+        let step = TrainStep::load(&rt, entry).unwrap();
+        let (loss, grads) = step.run_mlp(&params, &x, &y).unwrap();
+        assert!(
+            (loss - want_loss).abs() / want_loss.abs().max(1e-6) < 1e-5,
+            "loss {loss} vs golden {want_loss}"
+        );
+        assert_eq!(grads.len(), want_grads.len());
+        let max_err = grads
+            .iter()
+            .zip(&want_grads)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-5, "max grad err {max_err}");
+    }
+
+    #[test]
+    fn lm_train_step_matches_jax_goldens() {
+        let Some((rt, m)) = setup() else { return };
+        let entry = m.model("lm_tiny").unwrap();
+        let g = entry.goldens.as_ref().unwrap();
+        let params = artifacts::read_f32(&g["params"]).unwrap();
+        let tokens = artifacts::read_i32(&g["in0"]).unwrap();
+        let want_loss = artifacts::read_f32(&g["loss"]).unwrap()[0];
+        let want_grads = artifacts::read_f32(&g["grads"]).unwrap();
+
+        let step = TrainStep::load(&rt, entry).unwrap();
+        let (loss, grads) = step.run_lm(&params, &tokens).unwrap();
+        assert!(
+            (loss - want_loss).abs() / want_loss.abs().max(1e-6) < 1e-4,
+            "loss {loss} vs golden {want_loss}"
+        );
+        // Grad elements are tiny; compare with absolute + relative slack.
+        let mut worst = 0.0f32;
+        for (a, b) in grads.iter().zip(&want_grads) {
+            worst = worst.max((a - b).abs() / (b.abs() + 1e-4));
+        }
+        assert!(worst < 1e-2, "worst relative grad err {worst}");
+    }
+
+    #[test]
+    fn quantize_op_matches_goldens_and_rust_quantizer() {
+        let Some((rt, m)) = setup() else { return };
+        // Linf variant: bit-exact against the Rust quantizer (max is
+        // reduction-order independent).
+        let op = &m.quantize["quantize_tiny_linf"];
+        let g = op.goldens.as_ref().unwrap();
+        let v = artifacts::read_f32(&g["v"]).unwrap();
+        let levels = artifacts::read_f32(&g["levels"]).unwrap();
+        let u = artifacts::read_f32(&g["u"]).unwrap();
+        let want_qidx = artifacts::read_i8(&g["qidx"]).unwrap();
+        let want_norms = artifacts::read_f32(&g["norms"]).unwrap();
+
+        let qop = QuantizeOp::load(&rt, op).unwrap();
+        let (qidx, norms) = qop.run(&v, &levels, &u).unwrap();
+        assert_eq!(qidx, want_qidx, "HLO output vs python golden");
+        assert_eq!(norms, want_norms);
+
+        // Cross-layer: Rust quantizer on the same inputs.
+        let rust_levels = crate::quant::Levels::from_mags(
+            levels.iter().map(|&x| x as f64).collect(),
+            true,
+        );
+        let quant = crate::quant::Quantizer::new(
+            rust_levels,
+            crate::quant::NormType::Linf,
+            op.bucket,
+        );
+        let rq = quant.quantize_with_u(&v, &u);
+        assert_eq!(rq.qidx, want_qidx, "rust quantizer vs pallas kernel");
+        assert_eq!(rq.norms, want_norms);
+    }
+
+    #[test]
+    fn quantize_op_l2_close_to_rust_quantizer() {
+        let Some((rt, m)) = setup() else { return };
+        let op = &m.quantize["quantize_tiny"];
+        let g = op.goldens.as_ref().unwrap();
+        let v = artifacts::read_f32(&g["v"]).unwrap();
+        let levels = artifacts::read_f32(&g["levels"]).unwrap();
+        let u = artifacts::read_f32(&g["u"]).unwrap();
+        let qop = QuantizeOp::load(&rt, op).unwrap();
+        let (qidx, norms) = qop.run(&v, &levels, &u).unwrap();
+
+        let rust_levels = crate::quant::Levels::from_mags(
+            levels.iter().map(|&x| x as f64).collect(),
+            true,
+        );
+        let quant =
+            crate::quant::Quantizer::new(rust_levels, crate::quant::NormType::L2, op.bucket);
+        let rq = quant.quantize_with_u(&v, &u);
+        // L2 norms can differ in the final ulp between reduction orders.
+        for (a, b) in rq.norms.iter().zip(&norms) {
+            assert!((a - b).abs() / b.abs().max(1e-20) < 1e-6);
+        }
+        let mismatches = rq
+            .qidx
+            .iter()
+            .zip(&qidx)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(
+            (mismatches as f64) < 1e-3 * qidx.len() as f64 + 1.0,
+            "{mismatches} mismatching symbols"
+        );
+    }
+
+    #[test]
+    fn stats_op_matches_goldens_and_host_stats() {
+        let Some((rt, m)) = setup() else { return };
+        let op = &m.stats["stats_tiny"];
+        let g = op.goldens.as_ref().unwrap();
+        let v = artifacts::read_f32(&g["v"]).unwrap();
+        let want_mu = artifacts::read_f32(&g["mu"]).unwrap();
+        let want_s2 = artifacts::read_f32(&g["sigma2"]).unwrap();
+        let want_norms = artifacts::read_f32(&g["norms"]).unwrap();
+
+        let sop = StatsOp::load(&rt, op).unwrap();
+        let (mu, s2, norms) = sop.run(&v).unwrap();
+        // jax (xla_extension in the Python env) and our PJRT (0.5.1) fuse
+        // reductions differently -> last-ulp drift; compare with tolerance.
+        let close = |a: &[f32], b: &[f32], tol: f32| {
+            a.iter()
+                .zip(b)
+                .all(|(x, y)| (x - y).abs() <= tol * y.abs().max(1e-6))
+        };
+        assert!(close(&mu, &want_mu, 1e-5));
+        assert!(close(&s2, &want_s2, 1e-4));
+        assert!(close(&norms, &want_norms, 1e-5));
+
+        // Host path agrees within f32 tolerance.
+        for b in 0..op.n / op.bucket {
+            let s = crate::stats::BucketStats::from_bucket(
+                &v[b * op.bucket..(b + 1) * op.bucket],
+                crate::quant::NormType::L2,
+            );
+            assert!((s.mu - mu[b] as f64).abs() < 1e-6);
+            assert!((s.sigma2 - s2[b] as f64).abs() < 1e-6);
+            assert!((s.norm - norms[b] as f64).abs() < 1e-4);
+        }
+    }
+}

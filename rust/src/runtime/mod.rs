@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts from Rust.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards this
+//! module is the only consumer of the outputs:
+//!
+//! * [`artifacts`] — `manifest.json` (parsed with the built-in JSON
+//!   parser) + raw `.bin` golden tensors.
+//! * [`client`] — `PjRtClient` wrapper: HLO text → compile → executable.
+//! * [`executable`] — typed entry points (`TrainStep`, `EvalStep`,
+//!   `QuantizeOp`, `StatsOp`) with shape checking against the manifest.
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+
+pub use artifacts::{LayoutEntry, Manifest, ModelEntry};
+pub use client::Runtime;
+pub use executable::{EvalStep, QuantizeOp, StatsOp, TrainStep};

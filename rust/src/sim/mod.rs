@@ -1,0 +1,8 @@
+//! Data-parallel simulation: the M-worker cluster and the communication
+//! cost model (DESIGN.md §Hardware-Adaptation).
+
+pub mod cluster;
+pub mod network;
+
+pub use cluster::{Cluster, ClusterConfig, StepStats, TrainRecord};
+pub use network::{NetworkModel, Topology};

@@ -1,0 +1,160 @@
+//! α-β communication cost model.
+//!
+//! The paper's testbed constrains the network to 1 Gbit/s (Appendix K.3);
+//! we regenerate the timing tables by charging *measured encoded bits*
+//! against this analytical model instead of wall-clocking V100 nodes.
+//!
+//! `time(msg) = α + bits / β` per message; a step's communication is the
+//! all-to-all exchange of every worker's encoded gradient under the
+//! chosen topology.
+
+/// Broadcast topology for the gradient exchange.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Every worker sends its gradient to all M−1 peers, all links active
+    /// in parallel: time = (M−1) · max_bits / β + α·(M−1).
+    FlatAllToAll,
+    /// Ring all-gather: 2(M−1) stages of (1/M of the payload), which for
+    /// identical payload sizes is time = 2·(M−1)/M · total_bits/β.
+    Ring,
+}
+
+/// Analytical network.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Per-message latency in seconds.
+    pub alpha: f64,
+    /// Bandwidth in bits per second.
+    pub beta: f64,
+    pub topology: Topology,
+}
+
+impl NetworkModel {
+    /// The paper's constrained testbed: 1 Gbit/s, 50 µs latency.
+    pub fn paper_testbed() -> Self {
+        NetworkModel {
+            alpha: 50e-6,
+            beta: 1e9,
+            topology: Topology::Ring,
+        }
+    }
+
+    /// Communication time for one synchronous step in which each of the
+    /// `m` workers contributes an encoded gradient of `bits_per_worker`.
+    pub fn step_time(&self, bits_per_worker: &[u64]) -> f64 {
+        let m = bits_per_worker.len();
+        if m <= 1 {
+            return 0.0;
+        }
+        match self.topology {
+            Topology::FlatAllToAll => {
+                let max_bits = *bits_per_worker.iter().max().unwrap() as f64;
+                (m as f64 - 1.0) * (self.alpha + max_bits / self.beta)
+            }
+            Topology::Ring => {
+                // Bandwidth-optimal all-reduce: 2(M−1) stages of payload/M.
+                let max_bits = *bits_per_worker.iter().max().unwrap() as f64;
+                let stages = 2.0 * (m as f64 - 1.0);
+                stages * self.alpha + (stages / m as f64) * max_bits / self.beta
+            }
+        }
+    }
+
+    /// Time to exchange full-precision gradients of `d` f32 coords.
+    pub fn fp32_step_time(&self, d: usize, m: usize) -> f64 {
+        self.step_time(&vec![32 * d as u64; m])
+    }
+}
+
+/// Running communication meter for a training run.
+#[derive(Clone, Debug, Default)]
+pub struct Meter {
+    pub total_bits: u64,
+    pub total_time: f64,
+    pub steps: u64,
+}
+
+impl Meter {
+    pub fn record(&mut self, net: &NetworkModel, bits_per_worker: &[u64]) {
+        self.total_bits += bits_per_worker.iter().sum::<u64>();
+        self.total_time += net.step_time(bits_per_worker);
+        self.steps += 1;
+    }
+
+    pub fn bits_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.total_bits as f64 / self.steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_free() {
+        let n = NetworkModel::paper_testbed();
+        assert_eq!(n.step_time(&[1_000_000]), 0.0);
+    }
+
+    #[test]
+    fn more_bits_more_time() {
+        let n = NetworkModel::paper_testbed();
+        let t1 = n.step_time(&[1_000_000; 4]);
+        let t2 = n.step_time(&[4_000_000; 4]);
+        assert!(t2 > t1 * 2.0);
+    }
+
+    #[test]
+    fn compression_ratio_shows_up() {
+        // 3-bit encoding ~ 4/32 of fp32 time at large payloads.
+        let n = NetworkModel {
+            alpha: 0.0,
+            beta: 1e9,
+            topology: Topology::Ring,
+        };
+        let d = 10_000_000usize;
+        let fp32 = n.fp32_step_time(d, 4);
+        let q3 = n.step_time(&[4 * d as u64; 4]);
+        assert!((q3 / fp32 - 4.0 / 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_scales_with_m() {
+        let n = NetworkModel {
+            alpha: 0.0,
+            beta: 1e9,
+            topology: Topology::FlatAllToAll,
+        };
+        let t4 = n.step_time(&[1_000_000; 4]);
+        let t8 = n.step_time(&[1_000_000; 8]);
+        assert!((t8 / t4 - 7.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_near_bandwidth_optimal() {
+        // Ring: per-worker time ≈ 2·total_own_bytes/β regardless of M.
+        let n = NetworkModel {
+            alpha: 0.0,
+            beta: 1e9,
+            topology: Topology::Ring,
+        };
+        let t4 = n.step_time(&[8_000_000; 4]);
+        let t16 = n.step_time(&[8_000_000; 16]);
+        assert!(t16 < t4 * 1.4, "{t16} vs {t4}");
+    }
+
+    #[test]
+    fn meter_accumulates() {
+        let n = NetworkModel::paper_testbed();
+        let mut m = Meter::default();
+        m.record(&n, &[100; 4]);
+        m.record(&n, &[300; 4]);
+        assert_eq!(m.total_bits, 1600);
+        assert_eq!(m.steps, 2);
+        assert!((m.bits_per_step() - 800.0).abs() < 1e-12);
+    }
+}

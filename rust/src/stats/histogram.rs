@@ -1,0 +1,200 @@
+//! Nonparametric histogram distribution on [0, 1].
+//!
+//! Appendix K: "we use histograms to model the distribution of gradients as
+//! a weighted sum of truncated normals" — the histogram is both (a) the raw
+//! accumulator the estimator fills from sampled coordinates, and (b) a
+//! `Dist` in its own right (piecewise-uniform density), which gives an
+//! assumption-free alternative to the truncated-normal mixture for ALQ.
+
+use super::Dist;
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bin counts (len = bins) over [0,1], plus total.
+    counts: Vec<f64>,
+    total: f64,
+}
+
+impl Histogram {
+    pub fn new(bins: usize) -> Self {
+        assert!(bins >= 1);
+        Histogram {
+            counts: vec![0.0; bins],
+            total: 0.0,
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    #[inline]
+    pub fn add(&mut self, r: f64) {
+        self.add_weighted(r, 1.0);
+    }
+
+    #[inline]
+    pub fn add_weighted(&mut self, r: f64, w: f64) {
+        let b = ((r.clamp(0.0, 1.0)) * self.counts.len() as f64) as usize;
+        let b = b.min(self.counts.len() - 1);
+        self.counts[b] += w;
+        self.total += w;
+    }
+
+    pub fn add_slice(&mut self, rs: &[f32]) {
+        for &r in rs {
+            self.add(r as f64);
+        }
+    }
+
+    /// Merge another histogram (same binning) into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bins(), other.bins());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    fn width(&self) -> f64 {
+        1.0 / self.counts.len() as f64
+    }
+}
+
+impl Dist for Histogram {
+    fn cdf(&self, x: f64) -> f64 {
+        if self.total == 0.0 {
+            return x.clamp(0.0, 1.0); // degenerate: uniform
+        }
+        let x = x.clamp(0.0, 1.0);
+        let w = self.width();
+        let full = (x / w) as usize;
+        let full = full.min(self.bins());
+        let mut acc: f64 = self.counts[..full].iter().sum();
+        if full < self.bins() {
+            let frac = (x - full as f64 * w) / w;
+            acc += self.counts[full] * frac;
+        }
+        acc / self.total
+    }
+
+    fn pdf(&self, x: f64) -> f64 {
+        if self.total == 0.0 {
+            return if (0.0..=1.0).contains(&x) { 1.0 } else { 0.0 };
+        }
+        if !(0.0..=1.0).contains(&x) {
+            return 0.0;
+        }
+        let b = ((x * self.bins() as f64) as usize).min(self.bins() - 1);
+        self.counts[b] / (self.total * self.width())
+    }
+
+    /// Piecewise closed form: within a bin the density is constant, so
+    /// `∫ r dF` over a sub-interval [c,d] of bin b is `p_b (d²−c²)/2`.
+    fn partial_mean(&self, c: f64, d: f64) -> f64 {
+        self.piecewise(c, d, |lo, hi| 0.5 * (hi * hi - lo * lo))
+    }
+
+    fn partial_mean_sq(&self, c: f64, d: f64) -> f64 {
+        self.piecewise(c, d, |lo, hi| (hi * hi * hi - lo * lo * lo) / 3.0)
+    }
+}
+
+impl Histogram {
+    fn piecewise<F: Fn(f64, f64) -> f64>(&self, c: f64, d: f64, seg: F) -> f64 {
+        let (c, d) = (c.clamp(0.0, 1.0), d.clamp(0.0, 1.0));
+        if c >= d {
+            return 0.0;
+        }
+        let w = self.width();
+        let mut acc = 0.0;
+        let b0 = ((c / w) as usize).min(self.bins() - 1);
+        let b1 = ((d / w) as usize).min(self.bins() - 1);
+        for b in b0..=b1 {
+            let lo = (b as f64 * w).max(c);
+            let hi = ((b + 1) as f64 * w).min(d);
+            if hi > lo {
+                acc += self.pdf((lo + hi) * 0.5) * seg(lo, hi);
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::simpson;
+
+    fn sample_hist() -> Histogram {
+        let mut h = Histogram::new(64);
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..20_000 {
+            // half-normal-ish magnitudes
+            h.add((rng.normal() * 0.1).abs().min(1.0));
+        }
+        h
+    }
+
+    #[test]
+    fn cdf_properties() {
+        let h = sample_hist();
+        assert_eq!(h.cdf(0.0), 0.0);
+        assert!((h.cdf(1.0) - 1.0).abs() < 1e-12);
+        let mut prev = 0.0;
+        for i in 0..=50 {
+            let f = h.cdf(i as f64 / 50.0);
+            assert!(f >= prev - 1e-12);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn pdf_matches_cdf() {
+        let h = sample_hist();
+        let got = simpson(|x| h.pdf(x), 0.0, 0.31, 8000);
+        assert!((got - h.cdf(0.31)).abs() < 2e-3, "{got} vs {}", h.cdf(0.31));
+    }
+
+    #[test]
+    fn partial_moments_match_quadrature() {
+        let h = sample_hist();
+        let got = h.partial_mean(0.03, 0.4);
+        let want = simpson(|x| x * h.pdf(x), 0.03, 0.4, 16000);
+        assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        let got2 = h.partial_mean_sq(0.0, 1.0);
+        let want2 = simpson(|x| x * x * h.pdf(x), 0.0, 1.0, 16000);
+        assert!((got2 - want2).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_histogram_is_uniform() {
+        let h = Histogram::new(8);
+        assert!((h.cdf(0.5) - 0.5).abs() < 1e-12);
+        assert!((h.partial_mean(0.0, 1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new(4);
+        a.add(0.1);
+        let mut b = Histogram::new(4);
+        b.add(0.9);
+        a.merge(&b);
+        assert_eq!(a.total(), 2.0);
+        assert!((a.cdf(0.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inv_cdf_roundtrip() {
+        let h = sample_hist();
+        for p in [0.1, 0.5, 0.9] {
+            let x = h.inv_cdf(p);
+            assert!((h.cdf(x) - p).abs() < 1e-6);
+        }
+    }
+}

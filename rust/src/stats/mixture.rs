@@ -1,0 +1,159 @@
+//! Weighted mixture of truncated normals — the paper's `F̄(r) = Σ γ_n F_n(r)`
+//! (Section 3.4, Eq. 10).
+//!
+//! * For **expected variance** minimization (ALQ/AMQ), `γ_n ∝ ‖v_n‖²`.
+//! * For **expected normalized variance** (ALQ-N/AMQ-N, Eq. 3), γ_n = 1/N.
+//!
+//! All `Dist` primitives are linear in the mixture, so the closed forms of
+//! `TruncNormal` lift directly; the inverse CDF falls back to bisection.
+
+use super::truncnorm::TruncNormal;
+use super::Dist;
+
+#[derive(Clone, Debug)]
+pub struct Mixture {
+    comps: Vec<TruncNormal>,
+    weights: Vec<f64>,
+}
+
+impl Mixture {
+    /// Build from components and unnormalized nonnegative weights.
+    pub fn new(comps: Vec<TruncNormal>, weights: Vec<f64>) -> Self {
+        assert_eq!(comps.len(), weights.len());
+        assert!(!comps.is_empty(), "mixture needs at least one component");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must not all be zero");
+        let weights = weights.iter().map(|w| w / total).collect();
+        Mixture { comps, weights }
+    }
+
+    /// Uniform-weight mixture (the `-N` objective of Eq. 3).
+    pub fn uniform(comps: Vec<TruncNormal>) -> Self {
+        let n = comps.len();
+        Self::new(comps, vec![1.0; n])
+    }
+
+    /// Single-component convenience.
+    pub fn single(c: TruncNormal) -> Self {
+        Self::new(vec![c], vec![1.0])
+    }
+
+    pub fn components(&self) -> &[TruncNormal] {
+        &self.comps
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    pub fn len(&self) -> usize {
+        self.comps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.comps.is_empty()
+    }
+
+    #[inline]
+    fn sum<F: Fn(&TruncNormal) -> f64>(&self, f: F) -> f64 {
+        self.comps
+            .iter()
+            .zip(&self.weights)
+            .map(|(c, w)| w * f(c))
+            .sum()
+    }
+}
+
+impl Dist for Mixture {
+    fn cdf(&self, x: f64) -> f64 {
+        self.sum(|c| c.cdf(x))
+    }
+
+    fn pdf(&self, x: f64) -> f64 {
+        self.sum(|c| c.pdf(x))
+    }
+
+    fn partial_mean(&self, c0: f64, d: f64) -> f64 {
+        self.sum(|c| c.partial_mean(c0, d))
+    }
+
+    fn partial_mean_sq(&self, c0: f64, d: f64) -> f64 {
+        self.sum(|c| c.partial_mean_sq(c0, d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::simpson;
+
+    fn mix() -> Mixture {
+        Mixture::new(
+            vec![
+                TruncNormal::unit(0.02, 0.01),
+                TruncNormal::unit(0.10, 0.05),
+                TruncNormal::unit(0.30, 0.20),
+            ],
+            vec![3.0, 2.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn weights_normalized() {
+        let m = mix();
+        let s: f64 = m.weights().iter().sum();
+        assert!((s - 1.0).abs() < 1e-15);
+        assert!((m.weights()[0] - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let m = mix();
+        let mut prev = -1.0;
+        for i in 0..=100 {
+            let x = i as f64 / 100.0;
+            let f = m.cdf(x);
+            assert!((0.0..=1.0).contains(&f));
+            assert!(f >= prev - 1e-14);
+            prev = f;
+        }
+        assert!(m.cdf(0.0).abs() < 1e-12);
+        assert!((m.cdf(1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pdf_matches_cdf() {
+        let m = mix();
+        let got = simpson(|x| m.pdf(x), 0.05, 0.7, 4000);
+        assert!((got - (m.cdf(0.7) - m.cdf(0.05))).abs() < 1e-8);
+    }
+
+    #[test]
+    fn partial_moments_match_quadrature() {
+        let m = mix();
+        let m1 = m.partial_mean(0.0, 0.5);
+        let w1 = simpson(|x| x * m.pdf(x), 0.0, 0.5, 4000);
+        assert!((m1 - w1).abs() < 1e-8, "{m1} vs {w1}");
+        let m2 = m.partial_mean_sq(0.1, 0.9);
+        let w2 = simpson(|x| x * x * m.pdf(x), 0.1, 0.9, 4000);
+        assert!((m2 - w2).abs() < 1e-8, "{m2} vs {w2}");
+    }
+
+    #[test]
+    fn inv_cdf_roundtrip_bisection() {
+        let m = mix();
+        for p in [0.01, 0.25, 0.5, 0.75, 0.99] {
+            let x = m.inv_cdf(p);
+            assert!((m.cdf(x) - p).abs() < 1e-9, "p={p}");
+        }
+    }
+
+    #[test]
+    fn single_equals_component() {
+        let t = TruncNormal::unit(0.1, 0.05);
+        let m = Mixture::single(t);
+        for x in [0.0, 0.1, 0.5, 1.0] {
+            assert_eq!(m.cdf(x), t.cdf(x));
+        }
+    }
+}

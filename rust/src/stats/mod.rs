@@ -1,0 +1,50 @@
+//! Probability substrate for the adaptive level optimizers.
+//!
+//! The paper models the distribution of normalized gradient coordinates
+//! `r = |v_i| / ||v||` with (mixtures of) truncated normal distributions
+//! (Section 3.4, Appendices A–C, K). Everything the optimizers need is the
+//! closed-form integrals of those distributions; this module provides them
+//! from scratch (no external math deps):
+//!
+//! * [`special`] — erf / erfc / Φ / Φ⁻¹.
+//! * [`normal`] — the normal distribution.
+//! * [`truncnorm`] — truncated normal with the paper's partial-moment
+//!   closed forms (`∫ r dF`, `∫ r² dF`).
+//! * [`mixture`] — weighted mixtures `F̄ = Σ γ_n F_n` (Eq. 10).
+//! * [`histogram`] — nonparametric piecewise-uniform alternative (App. K
+//!   notes the authors fall back to histograms when σ is tiny).
+//! * [`moments`] — streaming per-bucket sufficient statistics.
+
+pub mod histogram;
+pub mod mixture;
+pub mod moments;
+pub mod normal;
+pub mod special;
+pub mod truncnorm;
+
+pub use histogram::Histogram;
+pub use mixture::Mixture;
+pub use moments::{BucketStats, OnlineMoments};
+pub use normal::Normal;
+pub use truncnorm::TruncNormal;
+
+/// A distribution of normalized coordinates supported on `[0, 1]`.
+///
+/// All the level-update rules (Theorem 1 / Eqs. 33–38) are written in terms
+/// of these four primitives; `ALQ`, `GD` and `AMQ` are generic over them.
+pub trait Dist {
+    /// Cumulative distribution function F(x).
+    fn cdf(&self, x: f64) -> f64;
+    /// Density p(x).
+    fn pdf(&self, x: f64) -> f64;
+    /// Partial mean `∫_c^d r dF(r)`.
+    fn partial_mean(&self, c: f64, d: f64) -> f64;
+    /// Partial second moment `∫_c^d r² dF(r)`.
+    fn partial_mean_sq(&self, c: f64, d: f64) -> f64;
+
+    /// Inverse CDF via bisection on `[0, 1]` (override when closed-form).
+    fn inv_cdf(&self, y: f64) -> f64 {
+        let y = y.clamp(0.0, 1.0);
+        crate::util::bisect(|x| self.cdf(x) - y, 0.0, 1.0, 1e-12, 200)
+    }
+}

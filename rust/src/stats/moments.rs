@@ -1,0 +1,160 @@
+//! Streaming moment accumulators and per-bucket sufficient statistics.
+//!
+//! Algorithm 1 line 4: at update steps every worker computes sufficient
+//! statistics of the normalized-coordinate distribution. The statistics per
+//! bucket are (μ, σ², ‖v‖) — exactly what the L1 `stats` Pallas kernel
+//! produces on-device; this is the host-side equivalent plus Welford
+//! accumulators used by the variance-tracking experiments (Figs. 1/4/5).
+
+/// Numerically stable online mean/variance (Welford).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OnlineMoments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl OnlineMoments {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).max(0.0)
+        }
+    }
+
+    pub fn merge(&mut self, o: &OnlineMoments) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *o;
+            return;
+        }
+        let n = (self.n + o.n) as f64;
+        let d = o.mean - self.mean;
+        self.m2 += o.m2 + d * d * (self.n as f64 * o.n as f64) / n;
+        self.mean += d * o.n as f64 / n;
+        self.n += o.n;
+    }
+}
+
+/// Sufficient statistics of one bucket's normalized coordinates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BucketStats {
+    /// Mean of r within the bucket.
+    pub mu: f64,
+    /// Population variance of r within the bucket.
+    pub sigma2: f64,
+    /// Bucket norm (the normalizer).
+    pub norm: f64,
+}
+
+impl BucketStats {
+    /// Compute (μ, σ², ‖·‖) of normalized coordinates for one bucket,
+    /// matching `python/compile/kernels/stats.py` semantics.
+    pub fn from_bucket(v: &[f32], norm_type: crate::quant::NormType) -> BucketStats {
+        let norm = crate::quant::bucket_norm(v, norm_type) as f64;
+        if norm == 0.0 {
+            return BucketStats { mu: 0.0, sigma2: 0.0, norm: 0.0 };
+        }
+        let inv = 1.0 / norm;
+        let n = v.len() as f64;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for &x in v {
+            let r = (x.abs() as f64 * inv).clamp(0.0, 1.0);
+            s1 += r;
+            s2 += r * r;
+        }
+        let mu = s1 / n;
+        BucketStats { mu, sigma2: (s2 / n - mu * mu).max(0.0), norm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::NormType;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 7919) % 1000) as f64 / 999.0).collect();
+        let mut m = OnlineMoments::new();
+        for &x in &xs {
+            m.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((m.mean() - mean).abs() < 1e-12);
+        assert!((m.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge() {
+        let mut a = OnlineMoments::new();
+        let mut b = OnlineMoments::new();
+        let mut all = OnlineMoments::new();
+        let mut rng = crate::util::Rng::new(1);
+        for i in 0..500 {
+            let x = rng.normal();
+            if i % 2 == 0 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        assert!((a.variance() - all.variance()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_stats_l2() {
+        let v = [3.0f32, -4.0];
+        let s = BucketStats::from_bucket(&v, NormType::L2);
+        assert!((s.norm - 5.0).abs() < 1e-6);
+        // r = [0.6, 0.8]; mu = 0.7; var = 0.01
+        assert!((s.mu - 0.7).abs() < 1e-6);
+        assert!((s.sigma2 - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bucket_stats_zero() {
+        let v = [0.0f32; 8];
+        let s = BucketStats::from_bucket(&v, NormType::L2);
+        assert_eq!(s.norm, 0.0);
+        assert_eq!(s.mu, 0.0);
+    }
+
+    #[test]
+    fn bucket_stats_linf() {
+        let v = [1.0f32, -2.0, 0.5, 0.0];
+        let s = BucketStats::from_bucket(&v, NormType::Linf);
+        assert!((s.norm - 2.0).abs() < 1e-9);
+        let want_mu = (0.5 + 1.0 + 0.25 + 0.0) / 4.0;
+        assert!((s.mu - want_mu).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,99 @@
+//! Normal distribution N(μ, σ²) (Appendix A.1).
+
+use super::special::{phi, phi_inv, phi_pdf};
+use super::Dist;
+
+/// Normal distribution with mean `mu` and standard deviation `sigma`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Normal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Normal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma > 0.0, "sigma must be positive, got {sigma}");
+        Normal { mu, sigma }
+    }
+
+    #[inline]
+    pub fn std(&self, x: f64) -> f64 {
+        (x - self.mu) / self.sigma
+    }
+}
+
+impl Dist for Normal {
+    fn cdf(&self, x: f64) -> f64 {
+        phi(self.std(x))
+    }
+
+    fn pdf(&self, x: f64) -> f64 {
+        phi_pdf(self.std(x)) / self.sigma
+    }
+
+    /// ∫_c^d x dF = μ(Φ(d̃)−Φ(c̃)) − σ(φ(d̃)−φ(c̃)).
+    fn partial_mean(&self, c: f64, d: f64) -> f64 {
+        let (ct, dt) = (self.std(c), self.std(d));
+        self.mu * (phi(dt) - phi(ct)) - self.sigma * (phi_pdf(dt) - phi_pdf(ct))
+    }
+
+    /// ∫_c^d x² dF = (μ²+σ²)ΔΦ + 2μσ(φ(c̃)−φ(d̃)) + σ²(c̃φ(c̃)−d̃φ(d̃)).
+    fn partial_mean_sq(&self, c: f64, d: f64) -> f64 {
+        let (ct, dt) = (self.std(c), self.std(d));
+        let dphi = phi(dt) - phi(ct);
+        (self.mu * self.mu + self.sigma * self.sigma) * dphi
+            + 2.0 * self.mu * self.sigma * (phi_pdf(ct) - phi_pdf(dt))
+            + self.sigma * self.sigma * (ct * phi_pdf(ct) - dt * phi_pdf(dt))
+    }
+
+    fn inv_cdf(&self, y: f64) -> f64 {
+        self.mu + self.sigma * phi_inv(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::simpson;
+
+    #[test]
+    fn cdf_pdf_consistent() {
+        let n = Normal::new(0.3, 0.7);
+        let got = simpson(|x| n.pdf(x), -1.0, 1.2, 400);
+        assert!((got - (n.cdf(1.2) - n.cdf(-1.0))).abs() < 1e-10);
+    }
+
+    #[test]
+    fn partial_mean_matches_quadrature() {
+        let n = Normal::new(0.1, 0.4);
+        let got = n.partial_mean(-0.5, 0.8);
+        let want = simpson(|x| x * n.pdf(x), -0.5, 0.8, 800);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn partial_mean_sq_matches_quadrature() {
+        let n = Normal::new(-0.2, 0.6);
+        let got = n.partial_mean_sq(-1.0, 1.0);
+        let want = simpson(|x| x * x * n.pdf(x), -1.0, 1.0, 800);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn full_moments() {
+        let n = Normal::new(1.5, 2.0);
+        // Over (−∞, ∞): mean and second moment.
+        let m1 = n.partial_mean(-60.0, 60.0);
+        let m2 = n.partial_mean_sq(-60.0, 60.0);
+        assert!((m1 - 1.5).abs() < 1e-12);
+        assert!((m2 - (1.5f64.powi(2) + 4.0)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn inv_cdf_roundtrip() {
+        let n = Normal::new(0.05, 0.01);
+        for p in [0.01, 0.3, 0.5, 0.9, 0.999] {
+            assert!((n.cdf(n.inv_cdf(p)) - p).abs() < 1e-11);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Truncated normal distribution on an interval (Appendix A.2) with the
+//! closed-form partial moments the update rules of Appendices B–C use.
+//!
+//! With underlying N(μ, σ²) truncated to [a, b], Z = Φ(β) − Φ(α):
+//!
+//! * `F_T(x) = (Φ(x̃) − Φ(α)) / Z`
+//! * `p_T(x) = φ(x̃) / (σ Z)`
+//! * `∫_c^d r dF_T = μ (F_T(d) − F_T(c)) − σ² (p_T(d) − p_T(c))`  — the
+//!   identity behind the paper's Eq. (25)/(34)-style closed forms.
+//! * `∫_c^d r² dF_T = (μ²+σ²) ΔF_T + σ² ((c+μ) p_T(c) − (d+μ) p_T(d))`
+
+use super::special::{phi, phi_inv, phi_pdf};
+use super::Dist;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TruncNormal {
+    pub mu: f64,
+    pub sigma: f64,
+    pub a: f64,
+    pub b: f64,
+    /// Z = Φ((b−μ)/σ) − Φ((a−μ)/σ), cached.
+    z: f64,
+    phi_a: f64,
+}
+
+impl TruncNormal {
+    pub fn new(mu: f64, sigma: f64, a: f64, b: f64) -> Self {
+        assert!(a < b, "need a < b, got [{a}, {b}]");
+        assert!(sigma > 0.0, "sigma must be positive, got {sigma}");
+        let phi_a = phi((a - mu) / sigma);
+        let z = phi((b - mu) / sigma) - phi_a;
+        // For extremely concentrated distributions Z can underflow; clamp
+        // to keep the math finite (App. K notes this exact pitfall — the
+        // estimator guards against it by flooring sigma upstream too).
+        let z = z.max(1e-300);
+        TruncNormal { mu, sigma, a, b, z, phi_a }
+    }
+
+    /// Truncated to the unit interval — the domain of normalized coords.
+    pub fn unit(mu: f64, sigma: f64) -> Self {
+        Self::new(mu, sigma, 0.0, 1.0)
+    }
+
+    #[inline]
+    fn std(&self, x: f64) -> f64 {
+        (x - self.mu) / self.sigma
+    }
+
+    #[inline]
+    fn clamp(&self, x: f64) -> f64 {
+        x.clamp(self.a, self.b)
+    }
+}
+
+impl Dist for TruncNormal {
+    fn cdf(&self, x: f64) -> f64 {
+        if x <= self.a {
+            return 0.0;
+        }
+        if x >= self.b {
+            return 1.0;
+        }
+        ((phi(self.std(x)) - self.phi_a) / self.z).clamp(0.0, 1.0)
+    }
+
+    fn pdf(&self, x: f64) -> f64 {
+        if x < self.a || x > self.b {
+            return 0.0;
+        }
+        phi_pdf(self.std(x)) / (self.sigma * self.z)
+    }
+
+    fn partial_mean(&self, c: f64, d: f64) -> f64 {
+        let (c, d) = (self.clamp(c), self.clamp(d));
+        if c >= d {
+            return 0.0;
+        }
+        self.mu * (self.cdf(d) - self.cdf(c))
+            - self.sigma * self.sigma * (self.pdf(d) - self.pdf(c))
+    }
+
+    fn partial_mean_sq(&self, c: f64, d: f64) -> f64 {
+        let (c, d) = (self.clamp(c), self.clamp(d));
+        if c >= d {
+            return 0.0;
+        }
+        let s2 = self.sigma * self.sigma;
+        (self.mu * self.mu + s2) * (self.cdf(d) - self.cdf(c))
+            + s2 * ((c + self.mu) * self.pdf(c) - (d + self.mu) * self.pdf(d))
+    }
+
+    /// Closed-form inverse (Eq. 18): F⁻¹(y) = μ + σ Φ⁻¹(Φ(α) + yZ).
+    fn inv_cdf(&self, y: f64) -> f64 {
+        let y = y.clamp(0.0, 1.0);
+        let x = self.mu + self.sigma * phi_inv(self.phi_a + y * self.z);
+        x.clamp(self.a, self.b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::simpson;
+
+    fn dist() -> TruncNormal {
+        TruncNormal::unit(0.02, 0.015)
+    }
+
+    #[test]
+    fn cdf_endpoints() {
+        let t = dist();
+        assert_eq!(t.cdf(0.0), 0.0);
+        assert_eq!(t.cdf(1.0), 1.0);
+        assert_eq!(t.cdf(-0.5), 0.0);
+        assert_eq!(t.cdf(1.5), 1.0);
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let t = dist();
+        let got = simpson(|x| t.pdf(x), 0.0, 1.0, 4000);
+        assert!((got - 1.0).abs() < 1e-8, "{got}");
+    }
+
+    #[test]
+    fn cdf_matches_pdf_quadrature() {
+        let t = TruncNormal::unit(0.3, 0.25);
+        for d in [0.1, 0.3, 0.55, 0.9] {
+            let got = simpson(|x| t.pdf(x), 0.0, d, 2000);
+            assert!((got - t.cdf(d)).abs() < 1e-9, "d={d}");
+        }
+    }
+
+    #[test]
+    fn partial_mean_matches_quadrature() {
+        let t = TruncNormal::unit(0.1, 0.2);
+        let got = t.partial_mean(0.05, 0.6);
+        let want = simpson(|x| x * t.pdf(x), 0.05, 0.6, 2000);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn partial_mean_sq_matches_quadrature() {
+        let t = TruncNormal::unit(0.1, 0.2);
+        let got = t.partial_mean_sq(0.0, 0.8);
+        let want = simpson(|x| x * x * t.pdf(x), 0.0, 0.8, 2000);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn inv_cdf_roundtrip() {
+        let t = dist();
+        for p in [0.001, 0.1, 0.5, 0.9, 0.999] {
+            let x = t.inv_cdf(p);
+            assert!((0.0..=1.0).contains(&x));
+            assert!((t.cdf(x) - p).abs() < 1e-10, "p={p}");
+        }
+    }
+
+    #[test]
+    fn concentrated_distribution_is_finite() {
+        // The App. K pathology: tiny sigma far from the interval center.
+        let t = TruncNormal::unit(0.9, 1e-6);
+        assert!(t.cdf(0.5).is_finite());
+        assert!(t.partial_mean(0.0, 1.0).is_finite());
+        let m = t.partial_mean(0.0, 1.0);
+        assert!((m - 0.9).abs() < 1e-3, "mean of concentrated ~ mu, got {m}");
+    }
+
+    #[test]
+    fn mean_shifts_with_mu() {
+        let lo = TruncNormal::unit(0.2, 0.1).partial_mean(0.0, 1.0);
+        let hi = TruncNormal::unit(0.6, 0.1).partial_mean(0.0, 1.0);
+        assert!(lo < hi);
+    }
+}

@@ -1,0 +1,88 @@
+//! Small shared utilities: deterministic RNG, numeric helpers.
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Simpson-rule quadrature used by tests and by the histogram fallback.
+pub fn simpson<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, n: usize) -> f64 {
+    let n = if n % 2 == 0 { n } else { n + 1 };
+    let h = (b - a) / n as f64;
+    let mut s = f(a) + f(b);
+    for i in 1..n {
+        let w = if i % 2 == 1 { 4.0 } else { 2.0 };
+        s += w * f(a + i as f64 * h);
+    }
+    s * h / 3.0
+}
+
+/// Bisection root finding for a monotone function: returns x in [lo, hi]
+/// with f(x) ~ 0. `f(lo)` and `f(hi)` need not bracket strictly — the
+/// nearest endpoint is returned if they do not.
+pub fn bisect<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64, tol: f64, max_iter: usize) -> f64 {
+    let flo = f(lo);
+    let fhi = f(hi);
+    if flo == 0.0 {
+        return lo;
+    }
+    if fhi == 0.0 {
+        return hi;
+    }
+    if flo.signum() == fhi.signum() {
+        // No bracket: return the endpoint with the smaller |f|.
+        return if flo.abs() <= fhi.abs() { lo } else { hi };
+    }
+    let rising = flo < 0.0;
+    for _ in 0..max_iter {
+        let mid = 0.5 * (lo + hi);
+        if hi - lo < tol {
+            return mid;
+        }
+        let fm = f(mid);
+        if (fm < 0.0) == rising {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simpson_integrates_polynomials_exactly() {
+        // Simpson is exact on cubics.
+        let got = simpson(|x| x * x * x - 2.0 * x + 1.0, 0.0, 2.0, 10);
+        let want = 4.0 - 4.0 + 2.0;
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn simpson_sin() {
+        let got = simpson(f64::sin, 0.0, std::f64::consts::PI, 200);
+        assert!((got - 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn bisect_finds_sqrt2() {
+        let x = bisect(|x| x * x - 2.0, 0.0, 2.0, 1e-12, 200);
+        assert!((x - std::f64::consts::SQRT_2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn bisect_decreasing() {
+        let x = bisect(|x| 1.0 - x, 0.0, 3.0, 1e-12, 200);
+        assert!((x - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn bisect_no_bracket_returns_best_endpoint() {
+        let x = bisect(|x| x + 10.0, 0.0, 1.0, 1e-12, 50);
+        assert_eq!(x, 0.0);
+    }
+}

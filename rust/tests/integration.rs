@@ -1,0 +1,207 @@
+//! Cross-module integration tests: artifacts → runtime → quantizer →
+//! cluster → coordinator, plus executable-theory checks at system level.
+
+use aqsgd::adaptive::{update_levels, Estimator};
+use aqsgd::model::{HloMlpTask, TrainTask};
+use aqsgd::opt::{LrSchedule, UpdateSchedule};
+use aqsgd::quant::{self, theory, Levels, Method, NormType, Quantizer};
+use aqsgd::runtime::{Manifest, Runtime};
+use aqsgd::sim::{Cluster, ClusterConfig, NetworkModel};
+use aqsgd::util::Rng;
+
+fn artifacts_ready() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+/// Full stack over the HLO model: quantized data-parallel training on the
+/// PJRT-executed MLP must learn, meter bits, and adapt levels.
+#[test]
+fn quantized_training_over_hlo_model() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load_default().unwrap();
+    let workers = 2;
+    let mut task = HloMlpTask::load(&rt, &manifest, "mlp_tiny", workers, 5).unwrap();
+    let d = task.param_count();
+    let iters = 120;
+    let cfg = ClusterConfig {
+        method: Method::Alq,
+        workers,
+        bits: 3,
+        bucket: 64,
+        iters,
+        lr: LrSchedule::paper_default(0.1, iters),
+        updates: UpdateSchedule::at(vec![2, 20], 50, 20),
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        seed: 1,
+        eval_every: 0,
+        variance_every: 0,
+        network: NetworkModel::paper_testbed(),
+    };
+    let rec = Cluster::new(cfg).train(&mut task);
+    let first = rec.steps.first().unwrap().train_loss;
+    let last: f64 = rec.steps.iter().rev().take(10).map(|s| s.train_loss).sum::<f64>() / 10.0;
+    assert!(last < first * 0.8, "HLO training did not learn: {first} -> {last}");
+    assert!(rec.level_updates >= 2);
+    assert!(rec.comm_bits > 0 && rec.comm_bits < iters as u64 * workers as u64 * 32 * d as u64 / 3);
+    let levels = rec.final_levels.unwrap();
+    assert_ne!(levels, Method::Alq.initial_levels(3).unwrap().mags().to_vec());
+}
+
+/// The adaptive loop strictly reduces the Eq. (10) objective on the
+/// fitted mixture for every adaptive method (system-level Theorem 1 use).
+#[test]
+fn adaptation_reduces_objective_on_real_gradients() {
+    let spec = aqsgd::exp::common::ModelSpec::resnet8_standin();
+    let mut task = spec.task(2, 3);
+    let params = task.init_params(1);
+    let mut grad = vec![0.0f32; task.param_count()];
+    task.grad(&params, 0, 0, &mut grad);
+
+    for method in [Method::Alq, Method::AlqN, Method::AlqG, Method::Amq] {
+        let mut est = Estimator::new(spec.bucket, method.norm_type(), 20);
+        est.observe(&grad);
+        let mut rng = Rng::new(4);
+        let mix = est.fit(method.weighted_mixture(), &mut rng).unwrap();
+        let init = method.initial_levels(3).unwrap();
+        let adapted = update_levels(method, &init, &mix);
+        let before = aqsgd::adaptive::objective::psi(&mix, &init);
+        let after = aqsgd::adaptive::objective::psi(&mix, &adapted);
+        assert!(after <= before + 1e-12, "{method}: {before} -> {after}");
+    }
+}
+
+/// Theorem 2/3 hold along a real training run (not just synthetic vectors).
+#[test]
+fn theory_bounds_hold_during_training() {
+    let spec = aqsgd::exp::common::ModelSpec::resnet8_standin();
+    let mut task = spec.task(1, 9);
+    let params = task.init_params(2);
+    let mut grad = vec![0.0f32; task.param_count()];
+    task.grad(&params, 0, 0, &mut grad);
+
+    for (method, qnorm) in [(Method::QsgdInf, 100.0), (Method::NuqSgd, 2.0), (Method::Alq, 100.0)] {
+        let levels = method.initial_levels(3).unwrap();
+        let quant = Quantizer::new(levels.clone(), method.norm_type(), grad.len());
+        let eps = theory::epsilon_q(&levels, grad.len(), qnorm);
+        let var = quant.exact_variance(&grad);
+        let l2: f64 = grad.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(var <= eps * l2 + 1e-9, "{method}: {var} > {eps} * {l2}");
+    }
+}
+
+/// Wire format survives a full quantize→encode→frame→decode round trip
+/// (the exact path the TCP coordinator uses), including partial buckets.
+#[test]
+fn wire_roundtrip_preserves_gradients() {
+    use aqsgd::coordinator::messages::{Msg, WireGrad};
+    let levels = Levels::exponential(4, 0.5);
+    let quant = Quantizer::new(levels.clone(), NormType::L2, 64);
+    let mut rng = Rng::new(7);
+    let v: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+    let g = quant.quantize(&v, &mut rng);
+    let book = quant::HuffmanBook::from_weights(&[4.0, 3.0, 2.0, 1.0]);
+    let enc = quant::encode(&g, &levels, &book);
+
+    let msg = Msg::Grad { step: 3, grad: WireGrad::from(&enc) };
+    let mut buf = Vec::new();
+    msg.write_to(&mut buf).unwrap();
+    let got = Msg::read_from(&mut buf.as_slice()).unwrap();
+    let Msg::Grad { grad, .. } = got else { panic!() };
+    let dec = quant::decode(&grad.to_encoded(), &levels, &book);
+    assert_eq!(dec, g);
+
+    let mut out = vec![0.0f32; 1000];
+    quant.dequantize(&dec, &mut out);
+    assert_eq!(&out[960..], &v[960..], "fp32 tail must be exact");
+}
+
+/// The in-process simulation and the TCP coordinator implement the same
+/// algorithm: same method/levels family, both learn, both meter bits of
+/// the same order.
+#[test]
+fn cluster_and_coordinator_agree_qualitatively() {
+    use aqsgd::coordinator::{leader::run_leader_on, run_worker, WorkerConfig};
+    use aqsgd::data::Blobs;
+    use aqsgd::model::{Mlp, MlpTask};
+    use std::net::TcpListener;
+
+    let iters = 150;
+    let world = 2;
+    // Simulated.
+    let spec = aqsgd::exp::common::ModelSpec::resnet8_standin();
+    let mut cfg = aqsgd::exp::common::cluster_config(Method::QsgdInf, &spec, iters, world, 3, 256, 11);
+    cfg.eval_every = 0;
+    let mut task = spec.task(world, 11);
+    let sim = Cluster::new(cfg).train(&mut task);
+
+    // Wire-true.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || run_leader_on(listener, world, iters).unwrap());
+    let mut handles = Vec::new();
+    for w in 0..world {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                addr,
+                worker: w,
+                world,
+                method: Method::QsgdInf,
+                bits: 3,
+                bucket: 256,
+                iters,
+                lr: LrSchedule::paper_default(0.1, iters),
+                updates: UpdateSchedule::paper_default(iters),
+                momentum: 0.9,
+                weight_decay: 1e-4,
+                seed: 11,
+            };
+            let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 11);
+            let mut task = MlpTask::new(Mlp::new(vec![32, 64, 10]), blobs, 16, world, 11);
+            run_worker(&cfg, &mut task).unwrap()
+        }));
+    }
+    let reports: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    leader.join().unwrap();
+
+    assert!(sim.final_eval.accuracy > 0.5);
+    assert!(reports[0].final_eval.accuracy > 0.5);
+    // Bits per step within 2x of each other (different codebook refresh
+    // cadence, same entropy regime).
+    let sim_bits = sim.comm_bits as f64 / iters as f64 / world as f64;
+    let wire_bits = reports[0].sent_bits as f64 / iters as f64;
+    let ratio = sim_bits / wire_bits;
+    assert!((0.5..2.0).contains(&ratio), "bits/step ratio {ratio}");
+}
+
+/// Huffman coding on a real gradient beats fixed-width coding and stays
+/// within 1 bit/symbol of the empirical entropy (Theorem 5).
+#[test]
+fn entropy_coding_efficiency_on_real_gradients() {
+    let spec = aqsgd::exp::common::ModelSpec::resnet8_standin();
+    let mut task = spec.task(1, 13);
+    let params = task.init_params(3);
+    let mut grad = vec![0.0f32; task.param_count()];
+    task.grad(&params, 0, 0, &mut grad);
+
+    let levels = Levels::exponential(4, 0.5);
+    let quant = Quantizer::new(levels.clone(), NormType::Linf, 256);
+    let mut rng = Rng::new(14);
+    let g = quant.quantize(&grad, &mut rng);
+    let counts = quant::symbol_counts(&g, &levels);
+    let total: f64 = counts.iter().sum();
+    let probs: Vec<f64> = counts.iter().map(|c| c / total).collect();
+    let book = quant::HuffmanBook::from_weights(&counts.iter().map(|c| c + 1.0).collect::<Vec<_>>());
+    let h = theory::entropy_bits(&probs);
+    let el = book.expected_length(&probs);
+    assert!(el < h + 1.0, "E[L]={el} vs H={h}");
+    // And beats 2-bit fixed coding whenever the distribution is skewed.
+    if h < 1.8 {
+        assert!(el < 2.0);
+    }
+}
