@@ -1,0 +1,70 @@
+//! Bench: the unified exchange engine — serial vs thread-parallel worker
+//! lanes on a large gradient (the acceptance measurement for the
+//! multi-lane refactor: parallel must beat the seed's serial loop for
+//! M ≥ 4). Both schedules are bit-identical by construction (see
+//! rust/tests/exchange_parity.rs); this measures only wall clock.
+
+mod bench_util;
+use aqsgd::exchange::{ExchangeConfig, GradientExchange, ParallelMode};
+use aqsgd::quant::Method;
+use aqsgd::sim::NetworkModel;
+use aqsgd::util::Rng;
+use bench_util::{header, report, time_per_call};
+
+fn engine(method: Method, workers: usize, mode: ParallelMode) -> GradientExchange {
+    GradientExchange::new(ExchangeConfig {
+        method,
+        workers,
+        bits: 3,
+        bucket: 8192,
+        seed: 1,
+        network: NetworkModel::paper_testbed(),
+        parallel: mode,
+    })
+}
+
+fn main() {
+    let d = 1 << 20;
+    for method in [Method::QsgdInf, Method::Alq] {
+        for &workers in &[2usize, 4, 8] {
+            header(&format!(
+                "exchange step: {} @ 3 bits, d = 2^20, M = {workers}",
+                method.name()
+            ));
+            let mut rng = Rng::new(7);
+            let grads: Vec<Vec<f32>> = (0..workers)
+                .map(|_| (0..d).map(|_| (rng.normal() * 0.01) as f32).collect())
+                .collect();
+            let mut agg = vec![0.0f32; d];
+
+            let mut times = [0.0f64; 2];
+            for (i, mode) in [ParallelMode::Serial, ParallelMode::Parallel]
+                .into_iter()
+                .enumerate()
+            {
+                let mut eng = engine(method, workers, mode);
+                let mut step = 0usize;
+                times[i] = time_per_call(
+                    || {
+                        eng.exchange(step, &grads, &mut agg);
+                        step += 1;
+                    },
+                    400,
+                );
+                report(&format!("M={workers} {}", mode.name()), times[i], d * workers);
+            }
+            println!(
+                "    parallel speedup over serial at M={workers}: {:.2}x",
+                times[0] / times[1]
+            );
+
+            // Sanity: identical bits either way (full parity is tested in
+            // rust/tests/exchange_parity.rs).
+            let mut a = engine(method, workers, ParallelMode::Serial);
+            let mut b = engine(method, workers, ParallelMode::Parallel);
+            let bits_a = a.exchange(0, &grads, &mut agg);
+            let bits_b = b.exchange(0, &grads, &mut agg);
+            assert_eq!(bits_a, bits_b, "schedules must meter identical bits");
+        }
+    }
+}

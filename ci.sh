@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# CI entry point: format check, lints, tier-1 build+test, and a one-step
+# training smoke run. Also usable locally: ./ci.sh
+#
+# fmt/clippy are skipped with a warning when the components are not
+# installed (the offline build image ships only cargo+rustc).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+step() { printf '\n==> %s\n' "$*"; }
+
+# fmt/clippy are advisory (report, don't gate): the tier-1 contract is
+# build+test+smoke. Flip ADVISORY_LINTS=0 to make them hard failures.
+ADVISORY_LINTS="${ADVISORY_LINTS:-1}"
+lint() {
+  if [ "$ADVISORY_LINTS" = "1" ]; then "$@" || step "advisory: '$*' reported issues"; else "$@"; fi
+}
+
+if cargo fmt --version >/dev/null 2>&1; then
+  step "cargo fmt --check (advisory)"
+  lint cargo fmt --all -- --check
+else
+  step "cargo fmt not installed — skipping format check"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+  step "cargo clippy (advisory)"
+  lint cargo clippy --all-targets
+else
+  step "cargo clippy not installed — skipping lints"
+fi
+
+step "tier-1: cargo build --release"
+cargo build --release
+
+step "tier-1: cargo test -q"
+cargo test -q
+
+step "smoke: one-iteration training run (serial + parallel exchange)"
+./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --parallel off
+./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --parallel on
+
+step "ci.sh OK"

@@ -39,6 +39,7 @@ fn main() -> Result<()> {
         eval_every: 15,
         variance_every: 15,
         network: NetworkModel::paper_testbed(),
+        parallel: aqsgd::exchange::ParallelMode::Auto,
     };
     let rec = Cluster::new(cfg).train(&mut task);
 

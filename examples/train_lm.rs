@@ -58,6 +58,7 @@ fn main() -> Result<()> {
         eval_every: (steps / 10).max(1),
         variance_every: 0,
         network: NetworkModel::paper_testbed(),
+        parallel: aqsgd::exchange::ParallelMode::Auto,
     };
 
     println!("\ntraining {steps} steps with ALQ @ 3 bits, bucket 8192 …");

@@ -2,6 +2,7 @@
 //! Table 3-shaped defaults. Dependency-free (no TOML/serde in the image's
 //! vendored crate set); values are validated on parse.
 
+use crate::exchange::ParallelMode;
 use crate::quant::Method;
 use anyhow::{bail, Context, Result};
 
@@ -22,6 +23,8 @@ pub struct RunConfig {
     /// name ("mlp_tiny", "lm_small", …) for the PJRT path.
     pub model: String,
     pub out_dir: String,
+    /// Worker-lane scheduling in the exchange engine (auto|on|off).
+    pub parallel: ParallelMode,
 }
 
 impl Default for RunConfig {
@@ -39,6 +42,7 @@ impl Default for RunConfig {
             seeds: 3,
             model: "mlp".to_string(),
             out_dir: "runs".to_string(),
+            parallel: ParallelMode::Auto,
         }
     }
 }
@@ -76,6 +80,10 @@ impl RunConfig {
                 "seeds" => self.seeds = val.parse()?,
                 "model" => self.model = val.clone(),
                 "out" => self.out_dir = val.clone(),
+                "parallel" => {
+                    self.parallel = ParallelMode::parse(val)
+                        .with_context(|| format!("bad --parallel {val:?} (auto|on|off)"))?
+                }
                 other => bail!("unknown option --{other}"),
             }
         }
@@ -109,6 +117,7 @@ impl RunConfig {
             eval_every: (self.iters / 20).max(1),
             variance_every: 0,
             network: crate::sim::NetworkModel::paper_testbed(),
+            parallel: self.parallel,
         }
     }
 }
@@ -149,6 +158,17 @@ mod tests {
         assert!(RunConfig::from_args(&args("--method nope")).is_err());
         assert!(RunConfig::from_args(&args("--iters")).is_err());
         assert!(RunConfig::from_args(&args("iters 5")).is_err());
+        assert!(RunConfig::from_args(&args("--parallel sideways")).is_err());
+    }
+
+    #[test]
+    fn parses_parallel_mode() {
+        assert_eq!(RunConfig::default().parallel, ParallelMode::Auto);
+        let c = RunConfig::from_args(&args("--parallel on")).unwrap();
+        assert_eq!(c.parallel, ParallelMode::Parallel);
+        let c = RunConfig::from_args(&args("--parallel off")).unwrap();
+        assert_eq!(c.parallel, ParallelMode::Serial);
+        assert_eq!(c.cluster().parallel, ParallelMode::Serial);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! Frame layout: `[tag: u8][len: u32 LE][payload: len bytes]`.
 
-use crate::quant::EncodedGrad;
+use crate::quant::{EncodedGrad, EncodedView};
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
 
@@ -30,17 +30,14 @@ pub struct WireGrad {
 
 impl From<&EncodedGrad> for WireGrad {
     fn from(e: &EncodedGrad) -> Self {
-        WireGrad {
-            bits: e.bits,
-            n_full: e.n_full as u32,
-            n_tail: e.n_tail as u32,
-            bucket: e.bucket as u32,
-            bytes: e.bytes.clone(),
-        }
+        WireGrad::from_view(e.view())
     }
 }
 
 impl WireGrad {
+    /// Owned conversion (clones the payload). Hot paths should use
+    /// [`WireGrad::view`] / [`WireGrad::from_view`] instead — the worker
+    /// decodes received frames in place.
     pub fn to_encoded(&self) -> EncodedGrad {
         EncodedGrad {
             bytes: self.bytes.clone(),
@@ -48,6 +45,30 @@ impl WireGrad {
             n_full: self.n_full as usize,
             n_tail: self.n_tail as usize,
             bucket: self.bucket as usize,
+        }
+    }
+
+    /// Zero-copy frame over the received payload (the decode hot path —
+    /// no byte clone per peer gradient).
+    pub fn view(&self) -> EncodedView<'_> {
+        EncodedView {
+            bytes: &self.bytes,
+            bits: self.bits,
+            n_full: self.n_full as usize,
+            n_tail: self.n_tail as usize,
+            bucket: self.bucket as usize,
+        }
+    }
+
+    /// Build a wire frame from a borrowed encoded frame (the one copy
+    /// the wire inherently needs: the frame must own its payload).
+    pub fn from_view(v: EncodedView<'_>) -> WireGrad {
+        WireGrad {
+            bits: v.bits,
+            n_full: v.n_full as u32,
+            n_tail: v.n_tail as u32,
+            bucket: v.bucket as u32,
+            bytes: v.bytes.to_vec(),
         }
     }
 }
@@ -249,5 +270,10 @@ mod tests {
         assert_eq!(back.bytes, e.bytes);
         assert_eq!(back.bits, e.bits);
         assert_eq!(back.n_full, e.n_full);
+        // View paths agree with the owned conversion.
+        let via_view = WireGrad::from_view(e.view());
+        assert_eq!(via_view, w);
+        let v = w.view();
+        assert_eq!((v.bytes, v.bits, v.n_full, v.n_tail, v.bucket), (&e.bytes[..], 21, 10, 2, 5));
     }
 }

@@ -1,11 +1,16 @@
 //! The worker: local compute + codec, lockstep replica of the model.
+//!
+//! The codec path — quantizer, codebook lifecycle, encode/decode buffers,
+//! level adaptation — is the same [`CodecSession`] + [`ExchangeLane`]
+//! the in-process simulation drives; only the transport differs (the
+//! leader relays wire frames instead of the engine looping back lanes).
 
 use super::messages::{Msg, WireGrad};
-use crate::adaptive::{update_levels, Estimator};
+use crate::exchange::{CodecSession, ExchangeLane};
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
-use crate::quant::{decode, encode, HuffmanBook, Method, QuantizedGrad, Quantizer};
-use crate::util::Rng;
+use crate::quant::Method;
+use crate::util::{hash_params, Rng};
 use anyhow::{bail, Context, Result};
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -36,31 +41,6 @@ pub struct WorkerReport {
     pub level_updates: usize,
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
-fn params_hash(params: &[f32]) -> u64 {
-    let mut bytes = Vec::with_capacity(params.len() * 4);
-    for p in params {
-        bytes.extend_from_slice(&p.to_bits().to_le_bytes());
-    }
-    fnv1a(&bytes)
-}
-
-/// Add-δ smoothing (same rule as the in-process cluster) so codebooks are
-/// total and — crucially here — identical across replicas.
-fn smooth(weights: &[f64]) -> Vec<f64> {
-    let total: f64 = weights.iter().sum();
-    let delta = (total * 1e-4).max(1e-6);
-    weights.iter().map(|w| w + delta).collect()
-}
-
 /// Run one worker to completion against the leader at `cfg.addr`.
 pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<WorkerReport> {
     let stream = TcpStream::connect(&cfg.addr)
@@ -83,17 +63,11 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
         Box::new(Sgd::new(cfg.weight_decay))
     };
 
-    let mut quantizer = cfg.method.initial_levels(cfg.bits).map(|levels| {
-        let mut q = Quantizer::new(levels, cfg.method.norm_type(), cfg.bucket);
-        if let Some(c) = cfg.method.clip_factor() {
-            q = q.with_clip(c);
-        }
-        q
-    });
-    // Uniform initial codebook: identical on every replica by construction.
-    let mut book = quantizer
-        .as_ref()
-        .map(|q| HuffmanBook::from_weights(&vec![1.0; q.levels().num_symbols()]));
+    let mut session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket);
+    // Uniform initial codebook: identical on every replica by
+    // construction (no replica may depend on another's first batch).
+    session.init_uniform_book();
+    let mut lane = ExchangeLane::new(cfg.bucket);
 
     // Per-worker quantization randomness (replicas need not share this —
     // only the ciphertext is shared).
@@ -101,7 +75,6 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
 
     let mut grad = vec![0.0f32; d];
     let mut agg = vec![0.0f32; d];
-    let mut ghat = vec![0.0f32; d];
     let mut prev_decoded: Vec<Vec<f32>> = Vec::new();
     let mut sent_bits = 0u64;
     let mut level_updates = 0usize;
@@ -112,47 +85,25 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
         // Adapt from last exchange's decoded gradients (identical on all
         // replicas ⇒ identical levels + codebook).
         if cfg.updates.is_update_step(step) && !prev_decoded.is_empty() {
-            if let Some(q) = &mut quantizer {
-                if cfg.method.is_adaptive() {
-                    let mut est = Estimator::new(cfg.bucket, q.norm_type(), 20);
-                    for g in &prev_decoded {
-                        est.observe(g);
-                    }
-                    // Deterministic subsample seed shared by all replicas.
-                    let mut rng = Rng::new(cfg.seed ^ step as u64);
-                    if let Some(mix) = est.fit(cfg.method.weighted_mixture(), &mut rng) {
-                        let new_levels = update_levels(cfg.method, q.levels(), &mix);
-                        q.set_levels(new_levels);
-                        let probs =
-                            crate::adaptive::objective::symbol_probs(&mix, q.levels());
-                        book = Some(HuffmanBook::from_weights(&smooth(&probs)));
-                        level_updates += 1;
-                    }
-                }
+            // Deterministic subsample seed shared by all replicas.
+            let mut rng = Rng::new(cfg.seed ^ step as u64);
+            if session.adapt(prev_decoded.iter().map(|g| g.as_slice()), &mut rng) {
+                level_updates += 1;
             }
         }
 
-        // Quantize + encode.
-        let wire = if let Some(q) = &quantizer {
-            let qg = q.quantize(&grad, &mut qrng);
-            let enc = encode(&qg, q.levels(), book.as_ref().unwrap());
-            WireGrad::from(&enc)
+        // Quantize + encode into the lane's reusable buffers (full
+        // precision rides as a raw fp32 frame).
+        let bits = if session.is_quantized() {
+            lane.quantize(&session, &grad, &mut qrng);
+            lane.encode(&session)
         } else {
-            // Full precision: everything rides in the fp32 tail.
-            let qg = QuantizedGrad {
-                qidx: vec![],
-                norms: vec![],
-                tail: grad.clone(),
-                bucket: cfg.bucket,
-            };
-            let dummy_levels = crate::quant::Levels::uniform(2);
-            let dummy_book = HuffmanBook::from_weights(&[1.0, 1.0]);
-            WireGrad::from(&encode(&qg, &dummy_levels, &dummy_book))
+            lane.encode_raw(&grad)
         };
-        sent_bits += wire.bits;
+        sent_bits += bits;
         Msg::Grad {
             step: step as u32,
-            grad: wire,
+            grad: WireGrad::from_view(lane.encoded()),
         }
         .write_to(&mut writer)?;
 
@@ -167,22 +118,15 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
             other => bail!("expected AllGrads, got {other:?}"),
         };
         agg.fill(0.0);
-        prev_decoded.clear();
-        for w in &grads {
-            let enc = w.to_encoded();
-            if let Some(q) = &quantizer {
-                let qg = decode(&enc, q.levels(), book.as_ref().unwrap());
-                q.dequantize(&qg, &mut ghat);
-            } else {
-                let dummy_levels = crate::quant::Levels::uniform(2);
-                let dummy_book = HuffmanBook::from_weights(&[1.0, 1.0]);
-                let qg = decode(&enc, &dummy_levels, &dummy_book);
-                ghat.copy_from_slice(&qg.tail);
-            }
-            for (a, &g) in agg.iter_mut().zip(&ghat) {
+        if prev_decoded.len() != grads.len() {
+            prev_decoded = vec![vec![0.0f32; d]; grads.len()];
+        }
+        for (w, wire) in grads.iter().enumerate() {
+            let ghat = lane.decode_to_ghat(&session, wire.view());
+            for (a, &g) in agg.iter_mut().zip(ghat) {
                 *a += g / cfg.world as f32;
             }
-            prev_decoded.push(ghat.clone());
+            prev_decoded[w].copy_from_slice(ghat);
         }
 
         optimizer.step(&mut params, &agg, cfg.lr.lr(step));
@@ -195,9 +139,9 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
 
     Ok(WorkerReport {
         final_eval: task.eval(&params),
-        params_hash: params_hash(&params),
+        params_hash: hash_params(&params),
         sent_bits,
-        final_levels: quantizer.map(|q| q.levels().mags().to_vec()),
+        final_levels: session.final_levels(),
         level_updates,
     })
 }

@@ -1,0 +1,391 @@
+//! The M-lane in-process exchange engine: worker fan-out across OS
+//! threads with a bit-for-bit deterministic reduction.
+
+use super::session::{CodecSession, ExchangeLane};
+use super::ExchangeBackend;
+use crate::quant::{Method, Quantizer};
+use crate::sim::network::{Meter, NetworkModel};
+use crate::util::Rng;
+
+/// How the engine schedules worker lanes within one exchange.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Fan out when it should pay off: ≥ 2 lanes and a gradient large
+    /// enough that per-lane codec work dwarfs thread-spawn cost.
+    #[default]
+    Auto,
+    /// One lane at a time (the seed behavior; also the parity oracle).
+    Serial,
+    /// Always fan out, regardless of size.
+    Parallel,
+}
+
+impl ParallelMode {
+    pub fn parse(s: &str) -> Option<ParallelMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(ParallelMode::Auto),
+            "on" | "parallel" => Some(ParallelMode::Parallel),
+            "off" | "serial" => Some(ParallelMode::Serial),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ParallelMode::Auto => "auto",
+            ParallelMode::Serial => "serial",
+            ParallelMode::Parallel => "parallel",
+        }
+    }
+}
+
+/// Coordinate count below which `Auto` stays serial: spawning a scoped
+/// thread costs ~tens of µs, and quantize+code of fewer coordinates is
+/// cheaper than that (DESIGN.md §Perf).
+const AUTO_PARALLEL_MIN_COORDS: usize = 32_768;
+
+/// Everything the engine needs to stand up a simulated exchange.
+#[derive(Clone, Debug)]
+pub struct ExchangeConfig {
+    pub method: Method,
+    pub workers: usize,
+    pub bits: u32,
+    pub bucket: usize,
+    pub seed: u64,
+    pub network: NetworkModel,
+    pub parallel: ParallelMode,
+}
+
+/// The unified in-process exchange: owns the codec session, one lane and
+/// one RNG stream per worker, and the communication meter.
+///
+/// Determinism contract: per-worker RNG streams are forked exactly as
+/// the seed serial loop forked them, each lane consumes only its own
+/// stream, and the float aggregation runs on the main thread in fixed
+/// worker order — so serial and parallel schedules produce bit-identical
+/// runs (see `rust/tests/exchange_parity.rs`).
+pub struct GradientExchange {
+    cfg: ExchangeConfig,
+    session: CodecSession,
+    rngs: Vec<Rng>,
+    lanes: Vec<ExchangeLane>,
+    bits_scratch: Vec<u64>,
+    meter: Meter,
+    codec_seconds: f64,
+}
+
+impl GradientExchange {
+    pub fn new(cfg: ExchangeConfig) -> Self {
+        let mut seeder = Rng::new(cfg.seed);
+        // One stream per *configured* worker even when fewer lanes are
+        // active, so a seed maps to the same per-worker randomness
+        // regardless of method (and identically to the seed loop).
+        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
+        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket);
+        let active = if cfg.method == Method::SingleSgd {
+            1
+        } else {
+            cfg.workers
+        };
+        let lanes = (0..active).map(|_| ExchangeLane::new(cfg.bucket)).collect();
+        GradientExchange {
+            session,
+            rngs,
+            lanes,
+            bits_scratch: vec![0; active],
+            meter: Meter::default(),
+            codec_seconds: 0.0,
+            cfg,
+        }
+    }
+
+    /// Lanes that actually compute and communicate (1 for SingleSGD).
+    pub fn active_workers(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn session(&self) -> &CodecSession {
+        &self.session
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.session.is_quantized()
+    }
+
+    pub fn force_clip(&mut self, c: f32) {
+        self.session.force_clip(c);
+    }
+
+    pub fn meter(&self) -> &Meter {
+        &self.meter
+    }
+
+    /// Wall time spent inside quantize+encode+decode (the codec hot
+    /// path; the parallel region is charged at its wall time).
+    pub fn codec_seconds(&self) -> f64 {
+        self.codec_seconds
+    }
+
+    pub fn final_levels(&self) -> Option<Vec<f64>> {
+        self.session.final_levels()
+    }
+
+    /// Encoded bits per worker for the last exchange.
+    pub fn bits_per_worker(&self) -> &[u64] {
+        &self.bits_scratch
+    }
+
+    fn use_parallel(&self, d: usize) -> bool {
+        match self.cfg.parallel {
+            ParallelMode::Serial => false,
+            ParallelMode::Parallel => self.lanes.len() > 1,
+            ParallelMode::Auto => self.lanes.len() > 1 && d >= AUTO_PARALLEL_MIN_COORDS,
+        }
+    }
+}
+
+/// One lane's codec work for a step. Free function so the parallel and
+/// serial schedules run literally the same code.
+fn run_lane(
+    session: &CodecSession,
+    lane: &mut ExchangeLane,
+    rng: &mut Rng,
+    grad: &[f32],
+    skip_quantize: bool,
+    sample_counts: bool,
+) {
+    if !skip_quantize {
+        lane.quantize(session, grad, rng);
+    }
+    if sample_counts {
+        lane.count_symbols(session);
+    }
+    lane.encode(session);
+    lane.decode_own(session);
+}
+
+impl GradientExchange {
+    /// One synchronous exchange: quantize → entropy-encode → meter →
+    /// decode → aggregate the mean estimate into `agg`. Returns the
+    /// step's total encoded bits.
+    pub fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        let m = self.lanes.len();
+        // Hard assert: with fewer gradients the zip would silently skip
+        // lanes while the reduction still added their stale estimates.
+        assert!(
+            grads.len() >= m,
+            "exchange needs one gradient per active lane ({} < {m})",
+            grads.len()
+        );
+        agg.fill(0.0);
+
+        if !self.session.is_quantized() {
+            // Full precision is charged at 32·d per worker.
+            let mut step_bits = 0u64;
+            for (w, grad) in grads.iter().take(m).enumerate() {
+                self.bits_scratch[w] = 32 * grad.len() as u64;
+                step_bits += self.bits_scratch[w];
+                for (a, &g) in agg.iter_mut().zip(grad) {
+                    *a += g / m as f32;
+                }
+            }
+            self.meter.record(&self.cfg.network, &self.bits_scratch);
+            return step_bits;
+        }
+
+        let t0 = std::time::Instant::now();
+        // Lazy codebook: built from the first gradient's empirical symbol
+        // distribution before any lane encodes.
+        let mut lane0_quantized = false;
+        if self.session.book().is_none() {
+            self.lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
+            self.session.build_empirical_book(self.lanes[0].quantized());
+            lane0_quantized = true;
+        }
+        let sample_counts = step % 10 == 0;
+
+        if self.use_parallel(grads[0].len()) {
+            let session = &self.session;
+            std::thread::scope(|scope| {
+                for (w, ((lane, rng), grad)) in self
+                    .lanes
+                    .iter_mut()
+                    .zip(self.rngs.iter_mut())
+                    .zip(grads)
+                    .enumerate()
+                {
+                    let skip = w == 0 && lane0_quantized;
+                    scope.spawn(move || {
+                        run_lane(session, lane, rng, grad, skip, sample_counts)
+                    });
+                }
+            });
+        } else {
+            for (w, ((lane, rng), grad)) in self
+                .lanes
+                .iter_mut()
+                .zip(self.rngs.iter_mut())
+                .zip(grads)
+                .enumerate()
+            {
+                let skip = w == 0 && lane0_quantized;
+                run_lane(&self.session, lane, rng, grad, skip, sample_counts);
+            }
+        }
+
+        // Deterministic reduction: fixed worker order on the main
+        // thread, so the f32 accumulation matches the serial loop
+        // bit-for-bit no matter how the lanes were scheduled.
+        let inv = 1.0 / m as f32;
+        let mut step_bits = 0u64;
+        for (w, lane) in self.lanes.iter().enumerate() {
+            self.bits_scratch[w] = lane.bits();
+            step_bits += self.bits_scratch[w];
+            if sample_counts {
+                self.session.accumulate_counts(lane.counts());
+            }
+            for (a, &g) in agg.iter_mut().zip(lane.ghat()) {
+                *a += g * inv;
+            }
+        }
+        self.codec_seconds += t0.elapsed().as_secs_f64();
+        self.meter.record(&self.cfg.network, &self.bits_scratch);
+        step_bits
+    }
+
+    /// Algorithm 1 line 4 at the update schedule: re-fit the
+    /// distribution, re-optimize levels, refresh the codebook (adaptive
+    /// methods) or rebuild it from the sampled empirical counts
+    /// (non-adaptive). No-op for full precision.
+    pub fn adapt(&mut self, grads: &[Vec<f32>]) {
+        if !self.session.is_quantized() {
+            return;
+        }
+        // Same stream the seed loop drew its subsample seed from.
+        let mut rng = self.rngs[0].fork(0xE57);
+        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
+            self.session.refresh_book_from_counts();
+        }
+    }
+
+    pub fn quantizer(&self) -> Option<&Quantizer> {
+        self.session.quantizer()
+    }
+}
+
+impl ExchangeBackend for GradientExchange {
+    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        GradientExchange::exchange(self, step, grads, agg)
+    }
+
+    fn adapt(&mut self, grads: &[Vec<f32>]) {
+        GradientExchange::adapt(self, grads)
+    }
+
+    fn quantizer(&self) -> Option<&Quantizer> {
+        GradientExchange::quantizer(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NetworkModel;
+
+    fn config(method: Method, workers: usize, parallel: ParallelMode) -> ExchangeConfig {
+        ExchangeConfig {
+            method,
+            workers,
+            bits: 3,
+            bucket: 64,
+            seed: 9,
+            network: NetworkModel::paper_testbed(),
+            parallel,
+        }
+    }
+
+    fn grads(workers: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..workers)
+            .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn serial_and_parallel_schedules_are_bit_identical() {
+        let d = 1000;
+        let g = grads(4, d, 1);
+        let mut serial = GradientExchange::new(config(Method::Alq, 4, ParallelMode::Serial));
+        let mut parallel = GradientExchange::new(config(Method::Alq, 4, ParallelMode::Parallel));
+        let mut agg_s = vec![0.0f32; d];
+        let mut agg_p = vec![0.0f32; d];
+        for step in 0..12 {
+            if step == 5 {
+                serial.adapt(&g);
+                parallel.adapt(&g);
+            }
+            let bs = serial.exchange(step, &g, &mut agg_s);
+            let bp = parallel.exchange(step, &g, &mut agg_p);
+            assert_eq!(bs, bp, "step {step} bits");
+            assert_eq!(serial.bits_per_worker(), parallel.bits_per_worker());
+            let sb: Vec<u32> = agg_s.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u32> = agg_p.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, pb, "step {step} aggregate");
+        }
+        assert_eq!(serial.final_levels(), parallel.final_levels());
+        assert_eq!(serial.meter().total_bits, parallel.meter().total_bits);
+    }
+
+    #[test]
+    fn full_precision_charges_32d_per_worker() {
+        let d = 333;
+        let g = grads(3, d, 2);
+        let mut eng = GradientExchange::new(config(Method::SuperSgd, 3, ParallelMode::Auto));
+        let mut agg = vec![0.0f32; d];
+        let bits = eng.exchange(0, &g, &mut agg);
+        assert_eq!(bits, 3 * 32 * d as u64);
+        // Aggregate is the plain mean.
+        for i in 0..d {
+            let want = (g[0][i] / 3.0) + (g[1][i] / 3.0) + (g[2][i] / 3.0);
+            assert_eq!(agg[i].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn single_sgd_runs_one_lane() {
+        let d = 256;
+        let g = grads(4, d, 3);
+        let mut eng = GradientExchange::new(config(Method::SingleSgd, 4, ParallelMode::Auto));
+        assert_eq!(eng.active_workers(), 1);
+        let mut agg = vec![0.0f32; d];
+        let bits = eng.exchange(0, &g, &mut agg);
+        assert_eq!(bits, 32 * d as u64);
+        // One worker pays no communication time.
+        assert_eq!(eng.meter().total_time, 0.0);
+    }
+
+    #[test]
+    fn quantized_exchange_meters_fewer_bits_than_fp32() {
+        let d = 4096;
+        let g = grads(4, d, 4);
+        let mut eng = GradientExchange::new(config(Method::NuqSgd, 4, ParallelMode::Auto));
+        let mut agg = vec![0.0f32; d];
+        let mut total = 0u64;
+        for step in 0..5 {
+            total += eng.exchange(step, &g, &mut agg);
+        }
+        assert!(total > 0);
+        assert!(total < 5 * 4 * 32 * d as u64 / 4, "{total}");
+        assert!(eng.codec_seconds() > 0.0);
+    }
+
+    #[test]
+    fn parallel_mode_parses() {
+        assert_eq!(ParallelMode::parse("auto"), Some(ParallelMode::Auto));
+        assert_eq!(ParallelMode::parse("ON"), Some(ParallelMode::Parallel));
+        assert_eq!(ParallelMode::parse("off"), Some(ParallelMode::Serial));
+        assert_eq!(ParallelMode::parse("serial"), Some(ParallelMode::Serial));
+        assert_eq!(ParallelMode::parse("nope"), None);
+        assert_eq!(ParallelMode::default().name(), "auto");
+    }
+}

@@ -1,0 +1,53 @@
+//! The unified gradient-exchange engine (Algorithm 1's communication
+//! path, DESIGN.md §7).
+//!
+//! The paper's pipeline — quantize → entropy-encode → meter → decode →
+//! aggregate → adapt levels — used to be implemented twice: inline in
+//! `sim::Cluster::train` and again in `coordinator::worker`, each with
+//! its own codebook lifecycle and smoothing. This module is the single
+//! implementation both topologies now drive:
+//!
+//! * [`CodecSession`] — one method's codec state: the quantizer, the
+//!   Huffman codebook lifecycle (lazy empirical build, sampled
+//!   symbol-count refresh, model-based Prop. 6 books after level
+//!   updates, add-δ smoothing via [`crate::quant::smooth_weights`]),
+//!   and the mixture estimator behind ALQ/AMQ adaptation.
+//! * [`ExchangeLane`] — one worker's reusable codec buffers (quantized
+//!   symbols, bit writer, decode scratch, dequantized estimate). The
+//!   hot loop is allocation-free once warm, and the sim loopback
+//!   decodes straight out of the lane's writer through
+//!   [`crate::quant::EncodedView`] — no per-step ciphertext clone.
+//! * [`GradientExchange`] — the M-lane in-process engine: fans the
+//!   lanes out across OS threads ([`ParallelMode`]) while keeping the
+//!   float reduction order — and therefore every bit of the run —
+//!   identical to the serial loop.
+//!
+//! The TCP coordinator reuses [`CodecSession`] + [`ExchangeLane`]
+//! directly (its "exchange" is the leader relay), so both topologies
+//! share quantization, coding, codebooks, and adaptation by
+//! construction. Future backends (sharded leaders, async exchange)
+//! implement [`ExchangeBackend`].
+
+pub mod engine;
+pub mod session;
+
+pub use engine::{ExchangeConfig, GradientExchange, ParallelMode};
+pub use session::{CodecSession, ExchangeLane};
+
+use crate::quant::Quantizer;
+
+/// A synchronous collective exchange of per-worker gradients: everything
+/// between "local gradients are ready" and "the mean estimate is in
+/// `agg`" (Algorithm 1 lines 5–9), with exact bit accounting.
+pub trait ExchangeBackend {
+    /// Exchange one step's gradients; writes the aggregated mean
+    /// estimate into `agg` and returns the step's total encoded bits.
+    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64;
+
+    /// Re-fit the coordinate distribution and re-optimize levels and
+    /// codebook (Algorithm 1 line 4; a no-op for full precision).
+    fn adapt(&mut self, grads: &[Vec<f32>]);
+
+    /// The live quantizer, if this exchange quantizes at all.
+    fn quantizer(&self) -> Option<&Quantizer>;
+}

@@ -1,0 +1,466 @@
+//! Codec session + per-worker lanes: the state and buffers behind one
+//! method's quantize/encode/decode path, shared by the in-process
+//! engine and the TCP coordinator.
+
+use crate::adaptive::{update_levels, Estimator};
+use crate::quant::bitio::{BitReader, BitWriter};
+use crate::quant::{
+    decode_view_into, encode_into, smooth_weights, symbol_counts, EncodedView, HuffmanBook,
+    Method, QuantizedGrad, Quantizer,
+};
+use crate::util::Rng;
+
+/// App. K: mixture components retained for CIFAR-scale runs.
+const MAX_MIXTURE_COMPONENTS: usize = 20;
+
+/// One method's codec state: quantizer, Huffman codebook lifecycle, and
+/// the distribution estimator driving ALQ/AMQ level adaptation.
+///
+/// The codebook has three sources, all smoothed with
+/// [`smooth_weights`] so every symbol stays codable:
+/// * **lazy empirical** — built from the first quantized gradient's
+///   symbol histogram ([`CodecSession::build_empirical_book`], the sim
+///   path);
+/// * **uniform** — identical on every replica by construction
+///   ([`CodecSession::init_uniform_book`], the distributed path, where
+///   no replica may depend on another's first batch);
+/// * **model-based** — Prop. 6 closed-form symbol probabilities under
+///   the fitted mixture, installed on every successful level update
+///   ([`CodecSession::adapt`]), or refreshed from the sampled empirical
+///   counts for non-adaptive methods
+///   ([`CodecSession::refresh_book_from_counts`]).
+#[derive(Clone, Debug)]
+pub struct CodecSession {
+    method: Method,
+    bucket: usize,
+    quantizer: Option<Quantizer>,
+    book: Option<HuffmanBook>,
+    sym_counts: Vec<f64>,
+    estimator: Option<Estimator>,
+}
+
+impl CodecSession {
+    pub fn new(method: Method, bits: u32, bucket: usize) -> Self {
+        let quantizer = method.initial_levels(bits).map(|levels| {
+            let mut q = Quantizer::new(levels, method.norm_type(), bucket);
+            if let Some(c) = method.clip_factor() {
+                q = q.with_clip(c);
+            }
+            q
+        });
+        let estimator = quantizer
+            .as_ref()
+            .map(|q| Estimator::new(bucket, q.norm_type(), MAX_MIXTURE_COMPONENTS));
+        let sym_counts = quantizer
+            .as_ref()
+            .map(|q| vec![0.0; q.levels().num_symbols()])
+            .unwrap_or_default();
+        CodecSession {
+            method,
+            bucket,
+            quantizer,
+            book: None,
+            sym_counts,
+            estimator,
+        }
+    }
+
+    pub fn method(&self) -> Method {
+        self.method
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    pub fn quantizer(&self) -> Option<&Quantizer> {
+        self.quantizer.as_ref()
+    }
+
+    /// Whether this session quantizes at all (full-precision methods
+    /// carry raw fp32 and never touch the codebook).
+    pub fn is_quantized(&self) -> bool {
+        self.quantizer.is_some()
+    }
+
+    pub fn book(&self) -> Option<&HuffmanBook> {
+        self.book.as_ref()
+    }
+
+    pub fn final_levels(&self) -> Option<Vec<f64>> {
+        self.quantizer.as_ref().map(|q| q.levels().mags().to_vec())
+    }
+
+    /// Force TernGrad-style c·σ clipping regardless of method (the
+    /// Appendix K.2 / Fig. 14 ablation).
+    pub fn force_clip(&mut self, c: f32) {
+        if let Some(q) = self.quantizer.take() {
+            self.quantizer = Some(q.with_clip(c));
+        }
+    }
+
+    /// Uniform initial codebook: identical on every replica by
+    /// construction (the TCP path's requirement).
+    pub fn init_uniform_book(&mut self) {
+        if let Some(q) = &self.quantizer {
+            self.book = Some(HuffmanBook::from_weights(&vec![
+                1.0;
+                q.levels().num_symbols()
+            ]));
+        }
+    }
+
+    /// Lazily build the codebook from the first quantized gradient's
+    /// empirical symbol distribution (smoothed: later steps may emit
+    /// symbols unseen in the first batch). No-op once a book exists.
+    pub fn build_empirical_book(&mut self, first: &QuantizedGrad) {
+        if self.book.is_some() {
+            return;
+        }
+        let q = self
+            .quantizer
+            .as_ref()
+            .expect("empirical codebook on a full-precision session");
+        let counts = symbol_counts(first, q.levels());
+        self.book = Some(HuffmanBook::from_weights(&smooth_weights(&counts)));
+    }
+
+    /// Fold one lane's sampled symbol histogram into the refresh
+    /// statistics.
+    pub fn accumulate_counts(&mut self, counts: &[f64]) {
+        for (c, n) in self.sym_counts.iter_mut().zip(counts) {
+            *c += n;
+        }
+    }
+
+    /// Refresh the codebook from the empirical symbol counts accumulated
+    /// since the last refresh (the non-adaptive methods' codebook update
+    /// at the schedule 𝒰). No-op when nothing was accumulated.
+    pub fn refresh_book_from_counts(&mut self) {
+        if self.sym_counts.iter().sum::<f64>() > 0.0 {
+            self.book = Some(HuffmanBook::from_weights(&smooth_weights(&self.sym_counts)));
+            for c in self.sym_counts.iter_mut() {
+                *c = 0.0;
+            }
+        }
+    }
+
+    /// Algorithm 1 line 4 for adaptive methods: fit the truncated-normal
+    /// mixture to the observed gradients, re-optimize the levels, and
+    /// install the model-based codebook (Prop. 6). Returns true iff the
+    /// levels were updated; non-adaptive methods (and an empty fit)
+    /// return false so the caller can fall back to
+    /// [`CodecSession::refresh_book_from_counts`].
+    pub fn adapt<'a, I>(&mut self, grads: I, rng: &mut Rng) -> bool
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+        let (Some(q), Some(est)) = (&mut self.quantizer, &mut self.estimator) else {
+            return false;
+        };
+        if !self.method.is_adaptive() {
+            // Non-adaptive methods never fit the mixture; skip the
+            // O(d) sufficient-statistics pass entirely.
+            return false;
+        }
+        est.clear();
+        for g in grads {
+            est.observe(g);
+        }
+        let Some(mix) = est.fit(self.method.weighted_mixture(), rng) else {
+            return false;
+        };
+        let new_levels = update_levels(self.method, q.levels(), &mix);
+        q.set_levels(new_levels);
+        // Model-based codebook (Prop. 6) for the new levels.
+        let probs = crate::adaptive::objective::symbol_probs(&mix, q.levels());
+        self.book = Some(HuffmanBook::from_weights(&smooth_weights(&probs)));
+        self.sym_counts = vec![0.0; q.levels().num_symbols()];
+        true
+    }
+}
+
+/// One worker's reusable codec buffers. Everything here is scratch that
+/// survives across steps so the hot loop is allocation-free once warm;
+/// the encoded frame is borrowed out of the writer via [`EncodedView`]
+/// rather than cloned.
+#[derive(Debug)]
+pub struct ExchangeLane {
+    qbuf: QuantizedGrad,
+    writer: BitWriter,
+    dec_buf: QuantizedGrad,
+    ghat: Vec<f32>,
+    counts: Vec<f64>,
+    bits: u64,
+    n_full: usize,
+    n_tail: usize,
+}
+
+impl ExchangeLane {
+    pub fn new(bucket: usize) -> Self {
+        let empty = || QuantizedGrad {
+            qidx: Vec::new(),
+            norms: Vec::new(),
+            tail: Vec::new(),
+            bucket,
+        };
+        ExchangeLane {
+            qbuf: empty(),
+            writer: BitWriter::new(),
+            dec_buf: empty(),
+            ghat: Vec::new(),
+            counts: Vec::new(),
+            bits: 0,
+            n_full: 0,
+            n_tail: 0,
+        }
+    }
+
+    /// Draw this worker's stochastic quantization of `grad`.
+    pub fn quantize(&mut self, s: &CodecSession, grad: &[f32], rng: &mut Rng) {
+        let q = s
+            .quantizer()
+            .expect("quantize on a full-precision session");
+        q.quantize_into(grad, rng, &mut self.qbuf);
+    }
+
+    /// The last quantization (feeds the lazy codebook build).
+    pub fn quantized(&self) -> &QuantizedGrad {
+        &self.qbuf
+    }
+
+    /// Record this lane's symbol histogram (the sampled codebook-refresh
+    /// statistic; a full counting pass per worker-step was ~25% of codec
+    /// time — DESIGN.md §Perf).
+    pub fn count_symbols(&mut self, s: &CodecSession) {
+        let q = s.quantizer().expect("counts on a full-precision session");
+        self.counts = symbol_counts(&self.qbuf, q.levels());
+    }
+
+    pub fn counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// Entropy-encode the lane's quantized gradient into the reusable
+    /// writer. Returns the exact payload bits (norms + Huffman symbols +
+    /// signs + fp32 tail) — the figure the network model is charged.
+    pub fn encode(&mut self, s: &CodecSession) -> u64 {
+        let q = s.quantizer().expect("encode on a full-precision session");
+        let book = s.book().expect("codebook not initialized");
+        self.writer.clear();
+        self.bits = encode_into(&self.qbuf, q.levels(), book, &mut self.writer);
+        self.n_full = self.qbuf.qidx.len();
+        self.n_tail = self.qbuf.tail.len();
+        self.writer.finish_ref();
+        self.bits
+    }
+
+    /// Full-precision "encoding": the raw fp32 coordinates ride in the
+    /// tail slot of the frame (32·d bits, byte-compatible with what the
+    /// codec path emits for an all-tail gradient).
+    pub fn encode_raw(&mut self, grad: &[f32]) -> u64 {
+        self.writer.clear();
+        for &g in grad {
+            self.writer.push_f32(g);
+        }
+        self.bits = self.writer.bits_written();
+        self.n_full = 0;
+        self.n_tail = grad.len();
+        self.writer.finish_ref();
+        self.bits
+    }
+
+    /// Bits of the last encode.
+    pub fn bits(&self) -> u64 {
+        self.bits
+    }
+
+    /// Borrow the last encoded frame (valid until the next encode).
+    pub fn encoded(&self) -> EncodedView<'_> {
+        EncodedView {
+            bytes: self.writer.bytes(),
+            bits: self.bits,
+            n_full: self.n_full,
+            n_tail: self.n_tail,
+            bucket: self.qbuf.bucket,
+        }
+    }
+
+    /// Decode an encoded frame (own or a peer's) and dequantize into the
+    /// lane's `ghat`; returns the estimate.
+    pub fn decode_to_ghat(&mut self, s: &CodecSession, view: EncodedView<'_>) -> &[f32] {
+        if let Some(q) = s.quantizer() {
+            let book = s.book().expect("codebook not initialized");
+            decode_frame_into(view, q, book, &mut self.dec_buf, &mut self.ghat);
+        } else {
+            // Full precision: the payload is the raw fp32 stream.
+            let n = view.n_full + view.n_tail;
+            if self.ghat.len() != n {
+                self.ghat.resize(n, 0.0);
+            }
+            let mut r = BitReader::new(view.bytes);
+            for x in self.ghat.iter_mut() {
+                *x = r.read_f32();
+            }
+        }
+        &self.ghat
+    }
+
+    /// Decode the lane's own freshly-encoded frame — the simulated
+    /// loopback: every peer would decode these exact bytes, so decoding
+    /// once here is the paper's "simulate M GPUs on one" methodology
+    /// with real bit accounting.
+    pub fn decode_own(&mut self, s: &CodecSession) {
+        let q = s
+            .quantizer()
+            .expect("loopback decode on a full-precision session");
+        let book = s.book().expect("codebook not initialized");
+        let view = EncodedView {
+            bytes: self.writer.bytes(),
+            bits: self.bits,
+            n_full: self.n_full,
+            n_tail: self.n_tail,
+            bucket: self.qbuf.bucket,
+        };
+        decode_frame_into(view, q, book, &mut self.dec_buf, &mut self.ghat);
+    }
+
+    /// The dequantized gradient estimate of the last decode.
+    pub fn ghat(&self) -> &[f32] {
+        &self.ghat
+    }
+}
+
+/// The single quantized-frame decode path: resize the estimate buffer,
+/// decode symbols + norms + tail, dequantize. Free function over the
+/// lane's disjoint fields so `decode_own` (which also borrows the
+/// lane's writer for the view) and `decode_to_ghat` share one copy.
+fn decode_frame_into(
+    view: EncodedView<'_>,
+    q: &Quantizer,
+    book: &HuffmanBook,
+    dec_buf: &mut QuantizedGrad,
+    ghat: &mut Vec<f32>,
+) {
+    let n = view.n_full + view.n_tail;
+    if ghat.len() != n {
+        ghat.resize(n, 0.0);
+    }
+    decode_view_into(view, q.levels(), book, dec_buf);
+    q.dequantize(dec_buf, ghat);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::decode;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.normal() * 0.1) as f32).collect()
+    }
+
+    #[test]
+    fn lane_roundtrip_matches_owned_pipeline() {
+        let mut s = CodecSession::new(Method::Alq, 3, 64);
+        let grad = randn(300, 1);
+        let mut lane = ExchangeLane::new(64);
+        let mut rng = Rng::new(2);
+        lane.quantize(&s, &grad, &mut rng);
+        s.build_empirical_book(lane.quantized());
+        let bits = lane.encode(&s);
+        assert!(bits > 0);
+        assert_eq!(bits, lane.encoded().bits);
+
+        // Owned-path reference on the same quantization.
+        let q = s.quantizer().unwrap();
+        let book = s.book().unwrap();
+        let e = crate::quant::encode(lane.quantized(), q.levels(), book);
+        assert_eq!(e.bits, bits);
+        assert_eq!(e.bytes, lane.encoded().bytes);
+        let dec = decode(&e, q.levels(), book);
+        let mut want = vec![0.0f32; grad.len()];
+        q.dequantize(&dec, &mut want);
+
+        lane.decode_own(&s);
+        assert_eq!(lane.ghat(), &want[..]);
+        // Tail is carried exactly.
+        assert_eq!(&lane.ghat()[256..], &grad[256..]);
+    }
+
+    #[test]
+    fn lane_buffers_are_reused_across_steps() {
+        let mut s = CodecSession::new(Method::QsgdInf, 3, 32);
+        let mut lane = ExchangeLane::new(32);
+        let mut rng = Rng::new(3);
+        let mut last_bits = 0;
+        for step in 0..5 {
+            let grad = randn(128, 10 + step);
+            lane.quantize(&s, &grad, &mut rng);
+            s.build_empirical_book(lane.quantized());
+            last_bits = lane.encode(&s);
+            lane.decode_own(&s);
+            assert_eq!(lane.ghat().len(), 128);
+        }
+        assert!(last_bits > 0);
+    }
+
+    #[test]
+    fn raw_encoding_roundtrips_without_quantizer() {
+        let s = CodecSession::new(Method::SuperSgd, 3, 32);
+        assert!(!s.is_quantized());
+        let grad = randn(100, 4);
+        let mut lane = ExchangeLane::new(32);
+        let bits = lane.encode_raw(&grad);
+        assert_eq!(bits, 32 * 100);
+        let view = lane.encoded();
+        assert_eq!((view.n_full, view.n_tail), (0, 100));
+        let mut peer = ExchangeLane::new(32);
+        let got = peer.decode_to_ghat(&s, view);
+        assert_eq!(got, &grad[..]);
+    }
+
+    #[test]
+    fn uniform_book_is_replica_independent() {
+        let mut a = CodecSession::new(Method::Alq, 3, 64);
+        let mut b = CodecSession::new(Method::Alq, 3, 64);
+        a.init_uniform_book();
+        b.init_uniform_book();
+        assert_eq!(a.book().unwrap(), b.book().unwrap());
+    }
+
+    #[test]
+    fn adapt_moves_levels_and_installs_model_book() {
+        let mut s = CodecSession::new(Method::Alq, 3, 64);
+        s.init_uniform_book();
+        let before_levels = s.final_levels().unwrap();
+        let before_book = s.book().unwrap().clone();
+        let grads: Vec<Vec<f32>> = (0..4).map(|i| randn(640, 20 + i)).collect();
+        let mut rng = Rng::new(5);
+        assert!(s.adapt(grads.iter().map(|g| g.as_slice()), &mut rng));
+        assert_ne!(s.final_levels().unwrap(), before_levels);
+        assert_ne!(s.book().unwrap(), &before_book);
+    }
+
+    #[test]
+    fn non_adaptive_adapt_refreshes_from_counts_only() {
+        let mut s = CodecSession::new(Method::NuqSgd, 3, 64);
+        let grad = randn(640, 6);
+        let mut lane = ExchangeLane::new(64);
+        let mut rng = Rng::new(7);
+        lane.quantize(&s, &grad, &mut rng);
+        s.build_empirical_book(lane.quantized());
+        let levels_before = s.final_levels().unwrap();
+        lane.count_symbols(&s);
+        let counts = lane.counts().to_vec();
+        s.accumulate_counts(&counts);
+        assert!(!s.adapt(std::iter::once(&grad[..]), &mut rng));
+        s.refresh_book_from_counts();
+        // Levels untouched; book exists; counts were consumed (a second
+        // refresh with nothing accumulated keeps the book).
+        assert_eq!(s.final_levels().unwrap(), levels_before);
+        let book = s.book().unwrap().clone();
+        s.refresh_book_from_counts();
+        assert_eq!(s.book().unwrap(), &book);
+    }
+}

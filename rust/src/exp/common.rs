@@ -1,6 +1,7 @@
 //! Shared experiment plumbing: model scales, task construction, runners.
 
 use crate::data::Blobs;
+use crate::exchange::ParallelMode;
 use crate::model::{Mlp, MlpTask};
 use crate::opt::{LrSchedule, UpdateSchedule};
 use crate::quant::Method;
@@ -120,6 +121,7 @@ pub fn cluster_config(
         eval_every: (iters / 25).max(1),
         variance_every: 0,
         network: NetworkModel::paper_testbed(),
+        parallel: ParallelMode::Auto,
     }
 }
 

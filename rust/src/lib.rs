@@ -11,7 +11,8 @@
 //! * **L3** (run time, this crate): the data-parallel coordinator —
 //!   bucketed stochastic quantization, entropy coding, the ALQ/AMQ
 //!   adaptive level optimizers, baselines (QSGDinf/NUQSGD/TRN), the
-//!   M-worker cluster simulation, the tokio leader/worker runtime, and
+//!   unified worker-parallel [`exchange`] engine driving both the
+//!   M-worker cluster simulation and the TCP leader/worker runtime, and
 //!   the experiment harness reproducing every table and figure.
 //!
 //! Python never runs on the request path: `runtime` loads the HLO
@@ -23,6 +24,7 @@ pub mod adaptive;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exchange;
 pub mod exp;
 pub mod metrics;
 pub mod model;

@@ -23,7 +23,7 @@ aqsgd — Adaptive Gradient Quantization for Data-Parallel SGD (NeurIPS 2020)
 
 USAGE:
   aqsgd train [--method ALQ] [--workers 4] [--bits 3] [--bucket 8192]
-              [--iters 3000] [--seed 1] [--model mlp]
+              [--iters 3000] [--seed 1] [--model mlp] [--parallel auto|on|off]
   aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
   aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
   aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
@@ -57,8 +57,14 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     println!(
-        "training: method={} workers={} bits={} bucket={} iters={} model={}",
-        cfg.method, cfg.workers, cfg.bits, cfg.bucket, cfg.iters, cfg.model
+        "training: method={} workers={} bits={} bucket={} iters={} model={} exchange={}",
+        cfg.method,
+        cfg.workers,
+        cfg.bits,
+        cfg.bucket,
+        cfg.iters,
+        cfg.model,
+        cfg.parallel.name()
     );
     if cfg.model != "mlp" {
         bail!("`train` runs the pure-Rust blobs task; for HLO models see examples/train_lm.rs");

@@ -94,6 +94,14 @@ impl BitWriter {
         }
         &self.buf
     }
+
+    /// The packed bytes without flushing: only complete after a
+    /// [`BitWriter::finish_ref`] with no pushes since. This is the
+    /// zero-copy handle the exchange lanes decode from.
+    pub fn bytes(&self) -> &[u8] {
+        debug_assert_eq!(self.nacc, 0, "bytes() before finish_ref()");
+        &self.buf
+    }
 }
 
 /// Bit reader matching `BitWriter`'s layout, with a refillable u64

@@ -36,6 +36,30 @@ impl EncodedGrad {
     pub fn byte_len(&self) -> usize {
         self.bits.div_ceil(8) as usize
     }
+
+    /// Borrow as a zero-copy frame.
+    pub fn view(&self) -> EncodedView<'_> {
+        EncodedView {
+            bytes: &self.bytes,
+            bits: self.bits,
+            n_full: self.n_full,
+            n_tail: self.n_tail,
+            bucket: self.bucket,
+        }
+    }
+}
+
+/// A borrowed encoded frame: same shape metadata as [`EncodedGrad`], but
+/// the payload is a slice. This is the hot-path decode handle — the sim
+/// loopback decodes straight out of each lane's bit writer and the TCP
+/// worker straight out of the received wire frame, with no byte clone.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodedView<'a> {
+    pub bytes: &'a [u8],
+    pub bits: u64,
+    pub n_full: usize,
+    pub n_tail: usize,
+    pub bucket: usize,
 }
 
 /// Build the Huffman book for a level set from symbol probabilities
@@ -111,7 +135,18 @@ pub fn decode(e: &EncodedGrad, levels: &Levels, book: &HuffmanBook) -> Quantized
 
 /// Decode into a reusable buffer (hot path: zero allocation once warm).
 pub fn decode_into(e: &EncodedGrad, levels: &Levels, book: &HuffmanBook, q: &mut QuantizedGrad) {
-    let mut r = BitReader::new(&e.bytes);
+    decode_view_into(e.view(), levels, book, q)
+}
+
+/// Decode a borrowed frame into a reusable buffer (the zero-copy variant
+/// every decode path funnels through).
+pub fn decode_view_into(
+    e: EncodedView<'_>,
+    levels: &Levels,
+    book: &HuffmanBook,
+    q: &mut QuantizedGrad,
+) {
+    let mut r = BitReader::new(e.bytes);
     let nb = if e.bucket == 0 { 0 } else { e.n_full / e.bucket };
     let has_zero = levels.has_zero();
     q.qidx.clear();
@@ -248,6 +283,26 @@ mod tests {
             "3-bit encoding should be <20% of fp32, got {}",
             e.bits as f64 / fp32_bits as f64
         );
+    }
+
+    #[test]
+    fn view_decode_matches_owned_decode() {
+        let levels = Levels::exponential(4, 0.5);
+        let quant = Quantizer::new(levels.clone(), NormType::L2, 64);
+        let mut rng = Rng::new(7);
+        let v: Vec<f32> = (0..300).map(|_| rng.normal() as f32).collect();
+        let q = quant.quantize(&v, &mut rng);
+        let book = HuffmanBook::from_weights(&symbol_counts(&q, &levels));
+        let e = encode(&q, &levels, &book);
+        let owned = decode(&e, &levels, &book);
+        let mut via_view = QuantizedGrad {
+            qidx: vec![],
+            norms: vec![],
+            tail: vec![],
+            bucket: 0,
+        };
+        decode_view_into(e.view(), &levels, &book, &mut via_view);
+        assert_eq!(owned, via_view);
     }
 
     #[test]

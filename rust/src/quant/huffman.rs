@@ -214,6 +214,18 @@ impl HuffmanBook {
     }
 }
 
+/// Add-δ smoothing over symbol weights so every level symbol gets a
+/// Huffman code: a symbol absent from one batch can still occur later in
+/// the run, and — on the distributed path — codebooks derived from it
+/// stay total and identical across replicas. Shared by the in-process
+/// simulation and the TCP coordinator (it used to be copy-pasted in
+/// both; keep this the only definition).
+pub fn smooth_weights(weights: &[f64]) -> Vec<f64> {
+    let total: f64 = weights.iter().sum();
+    let delta = (total * 1e-4).max(1e-6);
+    weights.iter().map(|w| w + delta).collect()
+}
+
 /// Classic two-queue Huffman code lengths from weights. Symbols with zero
 /// weight get length 0 (absent). A single present symbol gets length 1.
 fn huffman_lengths(weights: &[f64]) -> Vec<u32> {
@@ -356,6 +368,18 @@ mod tests {
         let book = HuffmanBook::from_weights(&weights);
         let syms: Vec<u16> = (0..10_000).map(|_| rng.below(17) as u16).collect();
         roundtrip(&book, &syms);
+    }
+
+    #[test]
+    fn smoothing_makes_every_symbol_codable() {
+        let smoothed = smooth_weights(&[100.0, 0.0, 3.0, 0.0]);
+        assert!(smoothed.iter().all(|&w| w > 0.0));
+        let book = HuffmanBook::from_weights(&smoothed);
+        for s in 0..4 {
+            assert!(book.len_of(s) > 0, "symbol {s} got no code");
+        }
+        // All-zero weights still smooth to a positive floor.
+        assert!(smooth_weights(&[0.0; 3]).iter().all(|&w| w >= 1e-6));
     }
 
     #[test]

@@ -21,8 +21,11 @@ pub mod quantizer;
 pub mod schemes;
 pub mod theory;
 
-pub use encode::{decode, decode_into, encode, encode_into, symbol_counts, EncodedGrad};
-pub use huffman::HuffmanBook;
+pub use encode::{
+    decode, decode_into, decode_view_into, encode, encode_into, symbol_counts, EncodedGrad,
+    EncodedView,
+};
+pub use huffman::{smooth_weights, HuffmanBook};
 pub use levels::Levels;
 pub use quantizer::{QuantizedGrad, Quantizer};
 pub use schemes::Method;

@@ -8,11 +8,23 @@
 //! * [`client`] — `PjRtClient` wrapper: HLO text → compile → executable.
 //! * [`executable`] — typed entry points (`TrainStep`, `EvalStep`,
 //!   `QuantizeOp`, `StatsOp`) with shape checking against the manifest.
+//!
+//! The PJRT-backed modules are gated behind the `pjrt` cargo feature
+//! (the vendored `xla` crate); without it a stub with the same surface
+//! is compiled so the rest of the stack builds and tests everywhere.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executable;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
 pub use artifacts::{LayoutEntry, Manifest, ModelEntry};
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use executable::{EvalStep, QuantizeOp, StatsOp, TrainStep};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{EvalStep, QuantizeOp, Runtime, StatsOp, TrainStep};

@@ -1,0 +1,124 @@
+//! Stub runtime used when the `pjrt` feature is off.
+//!
+//! The offline image vendors the `xla` crate closure, but plain source
+//! checkouts (and CI) have no xla_extension. This module mirrors the
+//! public surface of [`super::client`] / [`super::executable`] so every
+//! consumer compiles unchanged; constructors return a descriptive error,
+//! and callers that guard on artifact presence (all of them) skip
+//! gracefully. Build with `--features pjrt` (plus the vendored `xla`
+//! dependency — see Cargo.toml) for the real PJRT path.
+
+use super::artifacts::{ModelEntry, OpEntry};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    bail!(
+        "{what} requires the PJRT runtime; this build has the `pjrt` \
+         feature disabled (see Cargo.toml)"
+    )
+}
+
+/// Stub for the PJRT client wrapper. [`Runtime::cpu`] always errors, so
+/// values of this type are never constructed.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        unavailable("creating a PJRT client")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (pjrt disabled)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<()> {
+        unavailable(&format!("compiling HLO text {path:?}"))
+    }
+}
+
+/// Stub fused fwd+bwd step.
+pub struct TrainStep {
+    entry: ModelEntry,
+}
+
+impl TrainStep {
+    pub fn load(_rt: &Runtime, entry: &ModelEntry) -> Result<TrainStep> {
+        unavailable(&format!("loading train step for {:?}", entry.kind))
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    pub fn run_mlp(&self, _params: &[f32], _x: &[f32], _y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        unavailable("running an mlp train step")
+    }
+
+    pub fn run_lm(&self, _params: &[f32], _tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        unavailable("running an lm train step")
+    }
+}
+
+/// Stub eval step.
+pub struct EvalStep {
+    entry: ModelEntry,
+}
+
+impl EvalStep {
+    pub fn load(_rt: &Runtime, entry: &ModelEntry) -> Result<EvalStep> {
+        unavailable(&format!("loading eval step for {:?}", entry.kind))
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    pub fn run_mlp(&self, _params: &[f32], _x: &[f32], _y: &[i32]) -> Result<(f32, f32)> {
+        unavailable("running an mlp eval step")
+    }
+
+    pub fn run_lm(&self, _params: &[f32], _tokens: &[i32]) -> Result<f32> {
+        unavailable("running an lm eval step")
+    }
+}
+
+/// Stub Pallas quantize artifact.
+pub struct QuantizeOp {
+    pub n: usize,
+    pub bucket: usize,
+    pub k: usize,
+}
+
+impl QuantizeOp {
+    pub fn load(_rt: &Runtime, _op: &OpEntry) -> Result<QuantizeOp> {
+        unavailable("loading the quantize kernel artifact")
+    }
+
+    pub fn run(&self, _v: &[f32], _levels: &[f32], _u: &[f32]) -> Result<(Vec<i8>, Vec<f32>)> {
+        unavailable("running the quantize kernel")
+    }
+}
+
+/// Stub Pallas stats artifact.
+pub struct StatsOp {
+    pub n: usize,
+    pub bucket: usize,
+}
+
+impl StatsOp {
+    pub fn load(_rt: &Runtime, _op: &OpEntry) -> Result<StatsOp> {
+        unavailable("loading the stats kernel artifact")
+    }
+
+    #[allow(clippy::type_complexity)]
+    pub fn run(&self, _v: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        unavailable("running the stats kernel")
+    }
+}

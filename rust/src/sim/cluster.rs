@@ -10,17 +10,16 @@
 //! Single-process simulation of the M workers — exactly the paper's own
 //! methodology ("we simulate training with 4-GPUs on a single GPU by
 //! quantizing and dequantizing the gradient from 4 mini-batches"), plus
-//! real bit accounting. The wire-true distributed version lives in
-//! `crate::coordinator`.
+//! real bit accounting. The whole codec path is delegated to
+//! [`crate::exchange::GradientExchange`] (shared with the wire-true
+//! distributed version in `crate::coordinator`), which fans the worker
+//! lanes out across threads without changing a single bit of the run.
 
-use crate::adaptive::{update_levels, Estimator};
+use crate::exchange::{ExchangeConfig, GradientExchange, ParallelMode};
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
-use crate::quant::{
-    symbol_counts, HuffmanBook, Method, QuantizedGrad, Quantizer,
-};
-use crate::sim::network::{Meter, NetworkModel};
-use crate::util::Rng;
+use crate::quant::{Method, Quantizer};
+use crate::sim::network::NetworkModel;
 
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -40,6 +39,8 @@ pub struct ClusterConfig {
     /// Record gradient/quantization variance every this many steps (0 = off).
     pub variance_every: usize,
     pub network: NetworkModel,
+    /// Worker-lane scheduling inside the exchange engine.
+    pub parallel: ParallelMode,
 }
 
 impl ClusterConfig {
@@ -59,6 +60,19 @@ impl ClusterConfig {
             eval_every: (iters / 20).max(1),
             variance_every: 0,
             network: NetworkModel::paper_testbed(),
+            parallel: ParallelMode::Auto,
+        }
+    }
+
+    fn exchange(&self) -> ExchangeConfig {
+        ExchangeConfig {
+            method: self.method,
+            workers: self.workers,
+            bits: self.bits,
+            bucket: self.bucket,
+            seed: self.seed,
+            network: self.network,
+            parallel: self.parallel,
         }
     }
 }
@@ -102,87 +116,37 @@ pub struct TrainRecord {
     pub codec_seconds: f64,
     /// Number of level updates performed.
     pub level_updates: usize,
+    /// FNV-1a over the final parameter bits (parity fingerprint shared
+    /// with the distributed workers' replica hash).
+    pub params_hash: u64,
 }
 
-/// Add-δ smoothing so every level symbol gets a Huffman code (a symbol
-/// absent from one batch can still occur later in the run).
-fn smooth(weights: &[f64]) -> Vec<f64> {
-    let total: f64 = weights.iter().sum();
-    let delta = (total * 1e-4).max(1e-6);
-    weights.iter().map(|w| w + delta).collect()
-}
-
-/// The simulated cluster.
+/// The simulated cluster: local gradients + optimizer around the shared
+/// exchange engine.
 pub struct Cluster {
     cfg: ClusterConfig,
-    quantizer: Option<Quantizer>,
-    book: Option<HuffmanBook>,
-    sym_counts: Vec<f64>,
-    estimator: Option<Estimator>,
-    rngs: Vec<Rng>,
-    meter: Meter,
-    /// Reused codec buffers (hot loop is allocation-free once warm).
-    writer: crate::quant::bitio::BitWriter,
-    dec_buf: QuantizedGrad,
+    engine: GradientExchange,
 }
 
 impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
-        let mut seeder = Rng::new(cfg.seed);
-        let rngs = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
-        let quantizer = cfg.method.initial_levels(cfg.bits).map(|levels| {
-            let mut q = Quantizer::new(levels, cfg.method.norm_type(), cfg.bucket);
-            if let Some(c) = cfg.method.clip_factor() {
-                q = q.with_clip(c);
-            }
-            q
-        });
-        let estimator = quantizer.as_ref().map(|q| {
-            Estimator::new(
-                cfg.bucket,
-                q.norm_type(),
-                // App. K: 20 components for CIFAR-scale runs.
-                20,
-            )
-        });
-        let sym_counts = quantizer
-            .as_ref()
-            .map(|q| vec![0.0; q.levels().num_symbols()])
-            .unwrap_or_default();
-        Cluster {
-            quantizer,
-            book: None,
-            sym_counts,
-            estimator,
-            rngs,
-            meter: Meter::default(),
-            writer: crate::quant::bitio::BitWriter::new(),
-            dec_buf: QuantizedGrad {
-                qidx: Vec::new(),
-                norms: Vec::new(),
-                tail: Vec::new(),
-                bucket: cfg.bucket,
-            },
-            cfg,
-        }
+        let engine = GradientExchange::new(cfg.exchange());
+        Cluster { cfg, engine }
     }
 
     pub fn quantizer(&self) -> Option<&Quantizer> {
-        self.quantizer.as_ref()
+        self.engine.quantizer()
     }
 
     /// Force TernGrad-style c·σ clipping on the quantizer regardless of
     /// method (the Appendix K.2 / Fig. 14 ablation).
     pub fn force_clip(&mut self, c: f32) {
-        if let Some(q) = self.quantizer.take() {
-            self.quantizer = Some(q.with_clip(c));
-        }
+        self.engine.force_clip(c);
     }
 
     /// Run the full training loop on `task`.
     pub fn train(&mut self, task: &mut dyn TrainTask) -> TrainRecord {
         let d = task.param_count();
-        let m = self.cfg.workers;
         let mut params = task.init_params(self.cfg.seed ^ 0xA5A5);
         let mut optimizer: Box<dyn Optimizer> = if self.cfg.momentum > 0.0 {
             Box::new(Umsgd::heavy_ball(self.cfg.momentum, self.cfg.weight_decay))
@@ -190,17 +154,9 @@ impl Cluster {
             Box::new(Sgd::new(self.cfg.weight_decay))
         };
 
-        let active_workers = if self.cfg.method == Method::SingleSgd { 1 } else { m };
+        let active_workers = self.engine.active_workers();
         let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; active_workers];
-        let mut ghat = vec![0.0f32; d];
         let mut agg = vec![0.0f32; d];
-        let mut qbuf = QuantizedGrad {
-            qidx: Vec::new(),
-            norms: Vec::new(),
-            tail: Vec::new(),
-            bucket: self.cfg.bucket,
-        };
-        let mut bits_per_worker = vec![0u64; active_workers];
 
         let mut rec = TrainRecord {
             method: self.cfg.method,
@@ -213,81 +169,26 @@ impl Cluster {
             comm_time: 0.0,
             codec_seconds: 0.0,
             level_updates: 0,
+            params_hash: 0,
         };
 
         for step in 0..self.cfg.iters {
             // 1. Local gradients.
             let mut mean_loss = 0.0f64;
-            for w in 0..active_workers {
-                let loss = task.grad(&params, w, step, &mut grads[w]);
+            for (w, grad) in grads.iter_mut().enumerate() {
+                let loss = task.grad(&params, w, step, grad);
                 mean_loss += loss as f64 / active_workers as f64;
             }
 
             // 2. Level adaptation + codebook refresh (Algorithm 1 line 4).
-            if self.quantizer.is_some() && self.cfg.updates.is_update_step(step) {
-                self.adapt(&grads);
+            if self.engine.is_quantized() && self.cfg.updates.is_update_step(step) {
+                self.engine.adapt(&grads);
                 rec.level_updates += 1;
             }
 
-            // 3. Quantize → encode → meter → decode → aggregate.
-            agg.fill(0.0);
-            let mut step_bits = 0u64;
-            if let Some(q) = &self.quantizer {
-                let t0 = std::time::Instant::now();
-                let inv_workers = 1.0 / active_workers as f32;
-                for w in 0..active_workers {
-                    q.quantize_into(&grads[w], &mut self.rngs[w], &mut qbuf);
-                    // Lazily build the codebook from the first gradient's
-                    // empirical symbol distribution (smoothed: every
-                    // symbol needs a code — later steps may emit symbols
-                    // unseen in the first batch).
-                    if self.book.is_none() {
-                        let counts = symbol_counts(&qbuf, q.levels());
-                        self.book = Some(HuffmanBook::from_weights(&smooth(&counts)));
-                    }
-                    // Codebook-refresh statistics: sampling every 10th
-                    // step is plenty (a full counting pass per worker-step
-                    // was ~25% of codec time — §Perf).
-                    if step % 10 == 0 {
-                        for (c, n) in self
-                            .sym_counts
-                            .iter_mut()
-                            .zip(symbol_counts(&qbuf, q.levels()))
-                        {
-                            *c += n;
-                        }
-                    }
-                    let book = self.book.as_ref().unwrap();
-                    // Reused writer/decode buffers: zero allocation once warm.
-                    self.writer.clear();
-                    let bits = crate::quant::encode_into(&qbuf, q.levels(), book, &mut self.writer);
-                    let enc = crate::quant::EncodedGrad {
-                        bytes: self.writer.finish_ref().to_vec(),
-                        bits,
-                        n_full: qbuf.qidx.len(),
-                        n_tail: qbuf.tail.len(),
-                        bucket: qbuf.bucket,
-                    };
-                    bits_per_worker[w] = enc.bits + enc.n_tail as u64 * 32;
-                    step_bits += bits_per_worker[w];
-                    crate::quant::decode_into(&enc, q.levels(), book, &mut self.dec_buf);
-                    q.dequantize(&self.dec_buf, &mut ghat);
-                    for (a, &g) in agg.iter_mut().zip(&ghat) {
-                        *a += g * inv_workers;
-                    }
-                }
-                rec.codec_seconds += t0.elapsed().as_secs_f64();
-            } else {
-                for w in 0..active_workers {
-                    bits_per_worker[w] = 32 * d as u64;
-                    step_bits += bits_per_worker[w];
-                    for (a, &g) in agg.iter_mut().zip(&grads[w]) {
-                        *a += g / active_workers as f32;
-                    }
-                }
-            }
-            self.meter
-                .record(&self.cfg.network, &bits_per_worker[..active_workers]);
+            // 3. Quantize → encode → meter → decode → aggregate, fanned
+            // out across the worker lanes by the exchange engine.
+            let step_bits = self.engine.exchange(step, &grads, &mut agg);
 
             // 4. Variance telemetry (Figs. 1/4/5).
             if self.cfg.variance_every > 0 && step % self.cfg.variance_every == 0 {
@@ -312,44 +213,12 @@ impl Cluster {
         }
 
         rec.final_eval = task.eval(&params);
-        rec.final_levels = self
-            .quantizer
-            .as_ref()
-            .map(|q| q.levels().mags().to_vec());
-        rec.comm_bits = self.meter.total_bits;
-        rec.comm_time = self.meter.total_time;
+        rec.final_levels = self.engine.final_levels();
+        rec.comm_bits = self.engine.meter().total_bits;
+        rec.comm_time = self.engine.meter().total_time;
+        rec.codec_seconds = self.engine.codec_seconds();
+        rec.params_hash = crate::util::hash_params(&params);
         rec
-    }
-
-    /// Fit the distribution and update levels + codebook.
-    fn adapt(&mut self, grads: &[Vec<f32>]) {
-        let (Some(q), Some(est)) = (&mut self.quantizer, &mut self.estimator) else {
-            return;
-        };
-        est.clear();
-        for g in grads {
-            est.observe(g);
-        }
-        let mut rng = self.rngs[0].fork(0xE57);
-        if self.cfg.method.is_adaptive() {
-            if let Some(mix) = est.fit(self.cfg.method.weighted_mixture(), &mut rng) {
-                let new_levels = update_levels(self.cfg.method, q.levels(), &mix);
-                q.set_levels(new_levels);
-                // Model-based codebook (Prop. 6) for the new levels.
-                let probs = crate::adaptive::objective::symbol_probs(&mix, q.levels());
-                self.book = Some(HuffmanBook::from_weights(&smooth(&probs)));
-                self.sym_counts = vec![0.0; q.levels().num_symbols()];
-                return;
-            }
-        }
-        // Non-adaptive (or estimator empty): refresh the codebook from the
-        // empirical symbol counts accumulated since the last refresh.
-        if self.sym_counts.iter().sum::<f64>() > 0.0 {
-            self.book = Some(HuffmanBook::from_weights(&smooth(&self.sym_counts)));
-            for c in self.sym_counts.iter_mut() {
-                *c = 0.0;
-            }
-        }
     }
 
     fn variance_sample(
@@ -377,7 +246,7 @@ impl Cluster {
             sgd_var /= d as f64;
         }
         // Exact quantization variance of the mean estimate.
-        let quant_var = if let Some(q) = &self.quantizer {
+        let quant_var = if let Some(q) = self.engine.quantizer() {
             let sum: f64 = grads[..active_workers]
                 .iter()
                 .map(|g| q.exact_variance(g))
@@ -444,10 +313,9 @@ mod tests {
         let mut t2 = task(4, 3);
         let rec = cluster.train(&mut t2);
         assert_eq!(rec.steps.len(), 1);
-        // Train again reading out params via a fresh eval on a task whose
-        // gradient at step 0 equals `manual`… instead, verify the recorded
-        // loss matches and rely on determinism for the rest.
-        let _ = want;
+        // The engine's aggregation order matches the manual loop exactly,
+        // so the one-step parameters agree bit for bit.
+        assert_eq!(rec.params_hash, crate::util::hash_params(&want));
         assert!(rec.steps[0].train_loss > 0.0);
         assert_eq!(rec.comm_bits, 4 * 32 * d as u64);
     }
@@ -467,6 +335,7 @@ mod tests {
         assert_eq!(a.final_eval.accuracy, b.final_eval.accuracy);
         assert_eq!(a.comm_bits, b.comm_bits);
         assert_eq!(a.final_levels, b.final_levels);
+        assert_eq!(a.params_hash, b.params_hash);
         assert_ne!(
             (a.comm_bits, a.final_eval.loss.to_bits()),
             (c.comm_bits, c.final_eval.loss.to_bits())

@@ -4,5 +4,5 @@
 pub mod cluster;
 pub mod network;
 
-pub use cluster::{Cluster, ClusterConfig, StepStats, TrainRecord};
+pub use cluster::{Cluster, ClusterConfig, StepStats, TrainRecord, VarianceSample};
 pub use network::{NetworkModel, Topology};

@@ -6,6 +6,29 @@ pub mod rng;
 pub use json::Json;
 pub use rng::Rng;
 
+/// FNV-1a over raw bytes: the replica/parity fingerprint hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a over the little-endian bit patterns of `params`: distributed
+/// replicas and the sim/engine parity tests must agree on this exactly.
+pub fn hash_params(params: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for p in params {
+        for b in p.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
 /// Simpson-rule quadrature used by tests and by the histogram fallback.
 pub fn simpson<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, n: usize) -> f64 {
     let n = if n % 2 == 0 { n } else { n + 1 };
@@ -53,6 +76,25 @@ pub fn bisect<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64, tol: f64, max_i
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Known FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn hash_params_equals_fnv_over_le_bytes() {
+        let params = [1.5f32, -0.25, 0.0, f32::MIN_POSITIVE];
+        let mut bytes = Vec::new();
+        for p in &params {
+            bytes.extend_from_slice(&p.to_bits().to_le_bytes());
+        }
+        assert_eq!(hash_params(&params), fnv1a(&bytes));
+        assert_ne!(hash_params(&params), hash_params(&params[..3]));
+    }
 
     #[test]
     fn simpson_integrates_polynomials_exactly() {

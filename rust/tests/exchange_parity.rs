@@ -1,0 +1,280 @@
+//! Exchange-engine parity: the unified `GradientExchange` must reproduce
+//! the original serial codec loop bit for bit — same comm_bits, same
+//! per-step bits, same adapted levels, same final parameters — and its
+//! thread-parallel schedule must be indistinguishable from its serial
+//! one. The reference below is the seed's in-process loop re-implemented
+//! verbatim from public quant/adaptive/opt APIs: the oracle the engine is
+//! checked against.
+
+use aqsgd::adaptive::{update_levels, Estimator};
+use aqsgd::exchange::ParallelMode;
+use aqsgd::data::Blobs;
+use aqsgd::model::{Mlp, MlpTask, TrainTask};
+use aqsgd::opt::{Optimizer, Sgd, Umsgd, UpdateSchedule};
+use aqsgd::quant::{
+    self, bitio::BitWriter, smooth_weights, EncodedView, HuffmanBook, Method, QuantizedGrad,
+    Quantizer,
+};
+use aqsgd::sim::{Cluster, ClusterConfig};
+use aqsgd::util::{hash_params, Rng};
+
+struct RefOutcome {
+    comm_bits: u64,
+    step_bits: Vec<u64>,
+    params_hash: u64,
+    final_levels: Option<Vec<f64>>,
+}
+
+/// The seed serial training loop: quantize → encode → meter → decode →
+/// aggregate per worker in order, lazy empirical codebook, sampled
+/// symbol-count refresh every 10th step, adapt at the schedule 𝒰.
+fn reference_train(cfg: &ClusterConfig, task: &mut dyn TrainTask) -> RefOutcome {
+    let d = task.param_count();
+    let mut seeder = Rng::new(cfg.seed);
+    let mut rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
+    let mut params = task.init_params(cfg.seed ^ 0xA5A5);
+    let mut optimizer: Box<dyn Optimizer> = if cfg.momentum > 0.0 {
+        Box::new(Umsgd::heavy_ball(cfg.momentum, cfg.weight_decay))
+    } else {
+        Box::new(Sgd::new(cfg.weight_decay))
+    };
+    let mut quantizer = cfg.method.initial_levels(cfg.bits).map(|levels| {
+        let mut q = Quantizer::new(levels, cfg.method.norm_type(), cfg.bucket);
+        if let Some(c) = cfg.method.clip_factor() {
+            q = q.with_clip(c);
+        }
+        q
+    });
+    let mut estimator = quantizer
+        .as_ref()
+        .map(|q| Estimator::new(cfg.bucket, q.norm_type(), 20));
+    let mut sym_counts = quantizer
+        .as_ref()
+        .map(|q| vec![0.0; q.levels().num_symbols()])
+        .unwrap_or_default();
+    let mut book: Option<HuffmanBook> = None;
+
+    let active = if cfg.method == Method::SingleSgd {
+        1
+    } else {
+        cfg.workers
+    };
+    let mut grads = vec![vec![0.0f32; d]; active];
+    let mut agg = vec![0.0f32; d];
+    let mut ghat = vec![0.0f32; d];
+    let empty = || QuantizedGrad {
+        qidx: Vec::new(),
+        norms: Vec::new(),
+        tail: Vec::new(),
+        bucket: cfg.bucket,
+    };
+    let mut qbuf = empty();
+    let mut dec = empty();
+    let mut writer = BitWriter::new();
+    let mut comm_bits = 0u64;
+    let mut step_bits_log = Vec::new();
+
+    for step in 0..cfg.iters {
+        for (w, g) in grads.iter_mut().enumerate() {
+            task.grad(&params, w, step, g);
+        }
+
+        if quantizer.is_some() && cfg.updates.is_update_step(step) {
+            let q = quantizer.as_mut().unwrap();
+            let est = estimator.as_mut().unwrap();
+            est.clear();
+            for g in &grads {
+                est.observe(g);
+            }
+            let mut rng = rngs[0].fork(0xE57);
+            let mut adapted = false;
+            if cfg.method.is_adaptive() {
+                if let Some(mix) = est.fit(cfg.method.weighted_mixture(), &mut rng) {
+                    let new_levels = update_levels(cfg.method, q.levels(), &mix);
+                    q.set_levels(new_levels);
+                    let probs = aqsgd::adaptive::objective::symbol_probs(&mix, q.levels());
+                    book = Some(HuffmanBook::from_weights(&smooth_weights(&probs)));
+                    sym_counts = vec![0.0; q.levels().num_symbols()];
+                    adapted = true;
+                }
+            }
+            if !adapted && sym_counts.iter().sum::<f64>() > 0.0 {
+                book = Some(HuffmanBook::from_weights(&smooth_weights(&sym_counts)));
+                for c in sym_counts.iter_mut() {
+                    *c = 0.0;
+                }
+            }
+        }
+
+        agg.fill(0.0);
+        let mut step_bits = 0u64;
+        if let Some(q) = &quantizer {
+            let inv = 1.0 / active as f32;
+            for w in 0..active {
+                q.quantize_into(&grads[w], &mut rngs[w], &mut qbuf);
+                if book.is_none() {
+                    let counts = quant::symbol_counts(&qbuf, q.levels());
+                    book = Some(HuffmanBook::from_weights(&smooth_weights(&counts)));
+                }
+                if step % 10 == 0 {
+                    for (c, n) in sym_counts
+                        .iter_mut()
+                        .zip(quant::symbol_counts(&qbuf, q.levels()))
+                    {
+                        *c += n;
+                    }
+                }
+                let bk = book.as_ref().unwrap();
+                writer.clear();
+                let bits = quant::encode_into(&qbuf, q.levels(), bk, &mut writer);
+                writer.finish_ref();
+                let view = EncodedView {
+                    bytes: writer.bytes(),
+                    bits,
+                    n_full: qbuf.qidx.len(),
+                    n_tail: qbuf.tail.len(),
+                    bucket: qbuf.bucket,
+                };
+                step_bits += bits;
+                quant::decode_view_into(view, q.levels(), bk, &mut dec);
+                q.dequantize(&dec, &mut ghat);
+                for (a, &g) in agg.iter_mut().zip(&ghat) {
+                    *a += g * inv;
+                }
+            }
+        } else {
+            for g in &grads {
+                step_bits += 32 * d as u64;
+                for (a, &x) in agg.iter_mut().zip(g) {
+                    *a += x / active as f32;
+                }
+            }
+        }
+        comm_bits += step_bits;
+        step_bits_log.push(step_bits);
+        optimizer.step(&mut params, &agg, cfg.lr.lr(step));
+    }
+
+    RefOutcome {
+        comm_bits,
+        step_bits: step_bits_log,
+        params_hash: hash_params(&params),
+        final_levels: quantizer.as_ref().map(|q| q.levels().mags().to_vec()),
+    }
+}
+
+fn task(workers: usize, seed: u64) -> MlpTask {
+    let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, seed);
+    MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, workers, seed)
+}
+
+fn config(method: Method, iters: usize, parallel: ParallelMode) -> ClusterConfig {
+    let mut cfg = ClusterConfig::paper_default(method, iters);
+    cfg.bucket = 128;
+    cfg.eval_every = 0;
+    cfg.seed = 5;
+    cfg.updates = UpdateSchedule::at(vec![3, 15], 30, 15);
+    cfg.parallel = parallel;
+    cfg
+}
+
+#[test]
+fn engine_matches_reference_serial_loop() {
+    for method in [
+        Method::Alq,
+        Method::Amq,
+        Method::QsgdInf,
+        Method::NuqSgd,
+        Method::SuperSgd,
+        Method::SingleSgd,
+    ] {
+        let cfg = config(method, 40, ParallelMode::Serial);
+        let want = reference_train(&cfg, &mut task(4, 3));
+        let rec = Cluster::new(cfg).train(&mut task(4, 3));
+        assert_eq!(rec.comm_bits, want.comm_bits, "{method}: comm_bits");
+        assert_eq!(
+            rec.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+            want.step_bits,
+            "{method}: per-step bits"
+        );
+        assert_eq!(rec.final_levels, want.final_levels, "{method}: levels");
+        assert_eq!(rec.params_hash, want.params_hash, "{method}: final params");
+    }
+}
+
+#[test]
+fn parallel_lanes_are_bit_identical_to_serial() {
+    for method in [Method::Alq, Method::NuqSgd, Method::Trn] {
+        let a = Cluster::new(config(method, 40, ParallelMode::Serial)).train(&mut task(4, 3));
+        let b = Cluster::new(config(method, 40, ParallelMode::Parallel)).train(&mut task(4, 3));
+        assert_eq!(a.comm_bits, b.comm_bits, "{method}: comm_bits");
+        assert_eq!(
+            a.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+            b.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+            "{method}: per-step bits"
+        );
+        assert_eq!(a.final_levels, b.final_levels, "{method}: levels");
+        assert_eq!(a.params_hash, b.params_hash, "{method}: final params");
+        assert_eq!(
+            a.final_eval.loss.to_bits(),
+            b.final_eval.loss.to_bits(),
+            "{method}: eval"
+        );
+    }
+}
+
+/// The sim engine and the TCP coordinator share one codec session; their
+/// bit meters must agree on the same workload up to codebook cadence
+/// (uniform bootstrap vs lazy empirical book).
+#[test]
+fn engine_and_coordinator_bits_agree_qualitatively() {
+    use aqsgd::coordinator::{leader::run_leader_on, run_worker, WorkerConfig};
+    use aqsgd::opt::LrSchedule;
+    use std::net::TcpListener;
+
+    let iters = 60;
+    let world = 2;
+    let cfg = {
+        let mut c = config(Method::QsgdInf, iters, ParallelMode::Serial);
+        c.workers = world;
+        c.seed = 11;
+        c
+    };
+    let sim = Cluster::new(cfg).train(&mut task(world, 7));
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader = std::thread::spawn(move || run_leader_on(listener, world, iters).unwrap());
+    let mut handles = Vec::new();
+    for w in 0..world {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                addr,
+                worker: w,
+                world,
+                method: Method::QsgdInf,
+                bits: 3,
+                bucket: 128,
+                iters,
+                lr: LrSchedule::paper_default(0.1, iters),
+                updates: UpdateSchedule::at(vec![3, 15], 30, 15),
+                momentum: 0.9,
+                weight_decay: 1e-4,
+                seed: 11,
+            };
+            let mut t = task(world, 7);
+            run_worker(&cfg, &mut t).unwrap()
+        }));
+    }
+    let reports: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    leader.join().unwrap();
+
+    let sim_bits_per_step = sim.comm_bits as f64 / iters as f64 / world as f64;
+    let wire_bits_per_step = reports[0].sent_bits as f64 / iters as f64;
+    let ratio = sim_bits_per_step / wire_bits_per_step;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "bits/step diverged: sim {sim_bits_per_step} vs wire {wire_bits_per_step}"
+    );
+}

@@ -41,6 +41,7 @@ fn quantized_training_over_hlo_model() {
         eval_every: 0,
         variance_every: 0,
         network: NetworkModel::paper_testbed(),
+        parallel: aqsgd::exchange::ParallelMode::Auto,
     };
     let rec = Cluster::new(cfg).train(&mut task);
     let first = rec.steps.first().unwrap().train_loss;
