@@ -20,6 +20,7 @@ fn engine(method: Method, workers: usize, mode: ParallelMode) -> GradientExchang
         seed: 1,
         network: NetworkModel::paper_testbed(),
         parallel: mode,
+        codec: aqsgd::quant::Codec::Huffman,
     })
 }
 

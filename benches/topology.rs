@@ -1,0 +1,90 @@
+//! Bench: the executable exchange topologies — wall-clock step time,
+//! total metered bits, and modeled α-β network seconds across
+//! M ∈ {4, 8, 16} workers for flat, sharded, tree, and ring schedules
+//! (the EXPERIMENTS.md topology scaling table).
+//!
+//! What to look for:
+//! * sharded meters exactly the flat bit total (routing, not payload);
+//! * tree's top-level hop carries G frames instead of M — its modeled
+//!   network time flattens as M grows;
+//! * ring's modeled time per worker stays near-constant in M while its
+//!   total injected bits grow ~2(M−1)/M·flat.
+
+mod bench_util;
+use aqsgd::exchange::{make_backend, ExchangeConfig, ParallelMode, TopologySpec};
+use aqsgd::quant::{Codec, Method};
+use aqsgd::sim::{NetworkModel, Topology};
+use aqsgd::util::Rng;
+use bench_util::{header, time_per_call};
+
+fn config(workers: usize, topo: TopologySpec) -> ExchangeConfig {
+    // The flat engine charges the analytical closed form of
+    // `network.topology`; pin it to the flat all-to-all fabric so the
+    // flat row is comparable to the per-link-metered schedules (the
+    // paper_testbed default is the ring closed form). The topology
+    // backends meter per link and ignore this field.
+    let network = match topo {
+        TopologySpec::Flat => NetworkModel {
+            topology: Topology::FlatAllToAll,
+            ..NetworkModel::paper_testbed()
+        },
+        _ => NetworkModel::paper_testbed(),
+    };
+    ExchangeConfig {
+        method: Method::Alq,
+        workers,
+        bits: 3,
+        bucket: 8192,
+        seed: 1,
+        network,
+        parallel: ParallelMode::Serial,
+        codec: Codec::Huffman,
+    }
+}
+
+fn main() {
+    let d = 1 << 18;
+    println!("topology scaling: ALQ @ 3 bits, d = 2^18, paper testbed network");
+    for &workers in &[4usize, 8, 16] {
+        header(&format!("M = {workers}"));
+        let mut rng = Rng::new(7);
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|_| (0..d).map(|_| (rng.normal() * 0.01) as f32).collect())
+            .collect();
+        let mut agg = vec![0.0f32; d];
+        let topologies = [
+            TopologySpec::Flat,
+            TopologySpec::Sharded(4),
+            TopologySpec::Tree(workers / 4),
+            TopologySpec::Ring,
+        ];
+        println!(
+            "{:<12} {:>14} {:>16} {:>16} {:>8}",
+            "topology", "step wall (µs)", "bits/step", "net model (ms)", "hops"
+        );
+        for topo in topologies {
+            let mut backend = make_backend(config(workers, topo), topo);
+            let mut step = 0usize;
+            let wall = time_per_call(
+                || {
+                    backend.exchange(step, &grads, &mut agg);
+                    step += 1;
+                },
+                300,
+            );
+            let hops = backend.last_hops().len();
+            let bits_per_step = backend.meter().total_bits / backend.meter().steps.max(1);
+            let net_ms =
+                backend.meter().total_time / backend.meter().steps.max(1) as f64 * 1e3;
+            println!(
+                "{:<12} {:>14.1} {:>16} {:>16.3} {:>8}",
+                topo.name(),
+                wall * 1e6,
+                bits_per_step,
+                net_ms,
+                hops
+            );
+        }
+    }
+    println!("\n(regenerate the EXPERIMENTS.md table from this output)");
+}

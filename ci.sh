@@ -36,8 +36,14 @@ cargo build --release
 step "tier-1: cargo test -q"
 cargo test -q
 
+step "bench targets compile (cargo bench --no-run)"
+cargo bench --no-run
+
 step "smoke: one-iteration training run (serial + parallel exchange)"
 ./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --parallel off
 ./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --parallel on
+
+step "smoke: one-step hierarchical topology run"
+./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --topology tree:2
 
 step "ci.sh OK"

@@ -40,6 +40,8 @@ fn main() -> Result<()> {
                 momentum: 0.9,
                 weight_decay: 1e-4,
                 seed: 42,
+                topology: aqsgd::exchange::TopologySpec::Flat,
+                codec: aqsgd::quant::Codec::Huffman,
             };
             let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 7);
             let mut task = MlpTask::new(Mlp::new(vec![32, 128, 128, 10]), blobs, 16, world, 7);

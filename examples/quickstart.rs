@@ -40,6 +40,8 @@ fn main() -> Result<()> {
         variance_every: 15,
         network: NetworkModel::paper_testbed(),
         parallel: aqsgd::exchange::ParallelMode::Auto,
+        topology: aqsgd::exchange::TopologySpec::Flat,
+        codec: aqsgd::quant::Codec::Huffman,
     };
     let rec = Cluster::new(cfg).train(&mut task);
 

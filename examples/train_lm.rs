@@ -59,6 +59,8 @@ fn main() -> Result<()> {
         variance_every: 0,
         network: NetworkModel::paper_testbed(),
         parallel: aqsgd::exchange::ParallelMode::Auto,
+        topology: aqsgd::exchange::TopologySpec::Flat,
+        codec: aqsgd::quant::Codec::Huffman,
     };
 
     println!("\ntraining {steps} steps with ALQ @ 3 bits, bucket 8192 …");

@@ -2,8 +2,8 @@
 //! Table 3-shaped defaults. Dependency-free (no TOML/serde in the image's
 //! vendored crate set); values are validated on parse.
 
-use crate::exchange::ParallelMode;
-use crate::quant::Method;
+use crate::exchange::{ParallelMode, TopologySpec};
+use crate::quant::{Codec, Method};
 use anyhow::{bail, Context, Result};
 
 /// One training-run configuration (Table 3, scaled).
@@ -25,6 +25,10 @@ pub struct RunConfig {
     pub out_dir: String,
     /// Worker-lane scheduling in the exchange engine (auto|on|off).
     pub parallel: ParallelMode,
+    /// Exchange schedule (flat|sharded:S|tree:G|ring).
+    pub topology: TopologySpec,
+    /// Entropy coder (huffman|elias — the QSGD-style coding ablation).
+    pub codec: Codec,
 }
 
 impl Default for RunConfig {
@@ -43,6 +47,8 @@ impl Default for RunConfig {
             model: "mlp".to_string(),
             out_dir: "runs".to_string(),
             parallel: ParallelMode::Auto,
+            topology: TopologySpec::Flat,
+            codec: Codec::Huffman,
         }
     }
 }
@@ -84,6 +90,15 @@ impl RunConfig {
                     self.parallel = ParallelMode::parse(val)
                         .with_context(|| format!("bad --parallel {val:?} (auto|on|off)"))?
                 }
+                "topology" => {
+                    self.topology = TopologySpec::parse(val).with_context(|| {
+                        format!("bad --topology {val:?} (flat|sharded:S|tree:G|ring)")
+                    })?
+                }
+                "codec" => {
+                    self.codec = Codec::parse(val)
+                        .with_context(|| format!("bad --codec {val:?} (huffman|elias)"))?
+                }
                 other => bail!("unknown option --{other}"),
             }
         }
@@ -96,6 +111,25 @@ impl RunConfig {
         }
         if self.workers == 0 || self.iters == 0 || self.bucket == 0 {
             bail!("workers, iters, bucket must be positive");
+        }
+        if let TopologySpec::Tree(g) = self.topology {
+            if g > self.workers {
+                bail!(
+                    "--topology tree:{g} needs at most {} groups (one per worker)",
+                    self.workers
+                );
+            }
+        }
+        if self.codec == Codec::Elias {
+            if let Some(levels) = self.method.initial_levels(self.bits) {
+                if !levels.has_zero() {
+                    bail!(
+                        "--codec elias needs a zero level to run-length over; \
+                         {} uses a no-zero level family (keep --codec huffman)",
+                        self.method
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -118,6 +152,8 @@ impl RunConfig {
             variance_every: 0,
             network: crate::sim::NetworkModel::paper_testbed(),
             parallel: self.parallel,
+            topology: self.topology,
+            codec: self.codec,
         }
     }
 }
@@ -159,6 +195,27 @@ mod tests {
         assert!(RunConfig::from_args(&args("--iters")).is_err());
         assert!(RunConfig::from_args(&args("iters 5")).is_err());
         assert!(RunConfig::from_args(&args("--parallel sideways")).is_err());
+    }
+
+    #[test]
+    fn parses_topology_and_codec() {
+        let c = RunConfig::from_args(&args("--topology sharded:4 --codec elias --method nuqsgd"))
+            .unwrap();
+        assert_eq!(c.topology, TopologySpec::Sharded(4));
+        assert_eq!(c.codec, Codec::Elias);
+        assert_eq!(c.cluster().topology, TopologySpec::Sharded(4));
+        assert_eq!(c.cluster().codec, Codec::Elias);
+        let c = RunConfig::from_args(&args("--topology tree:2")).unwrap();
+        assert_eq!(c.topology, TopologySpec::Tree(2));
+        let c = RunConfig::from_args(&args("--topology ring")).unwrap();
+        assert_eq!(c.topology, TopologySpec::Ring);
+        // Rejections: unknown shapes, zero shards, too many tree groups,
+        // Elias over a no-zero level family.
+        assert!(RunConfig::from_args(&args("--topology mesh")).is_err());
+        assert!(RunConfig::from_args(&args("--topology sharded:0")).is_err());
+        assert!(RunConfig::from_args(&args("--topology tree:9 --workers 4")).is_err());
+        assert!(RunConfig::from_args(&args("--codec elias --method amq")).is_err());
+        assert!(RunConfig::from_args(&args("--codec morse")).is_err());
     }
 
     #[test]

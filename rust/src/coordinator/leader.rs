@@ -4,8 +4,27 @@
 //! per-step cost is O(total encoded bytes). All model math stays on the
 //! workers (mirroring the decentralized all-to-all of the paper, with the
 //! leader standing in for the interconnect).
+//!
+//! Three relay modes mirror the sim's exchange topologies
+//! (`--topology`, see `exchange::topology`):
+//!
+//! * **flat** — barrier on M `Grad` frames, broadcast `AllGrads`.
+//! * **sharded:S** — S relay lanes: drain every worker's S `ShardGrad`
+//!   frames (workers send all their shards up front), then broadcast
+//!   one `AllShardGrads` per shard. Draining fully before broadcasting
+//!   keeps the write/read transition one-directional — no
+//!   worker-writing-while-leader-writing cycle, so large frames cannot
+//!   deadlock on socket buffers. Workers decode every peer's shards,
+//!   so replicas stay bit-identical to the flat relay.
+//! * **tree:G** — collect all M `Grad` frames, hand each group leader
+//!   its members' frames, collect the G `LeaderGrad` partial-aggregate
+//!   frames, broadcast `AllLeaderGrads` to everyone. All replicas
+//!   aggregate the same G decoded partials, so they stay bit-identical
+//!   to each other (though not to the flat run — the partials are
+//!   re-quantized).
 
 use super::messages::{Msg, WireGrad};
+use crate::exchange::topology::{group_members, TopologySpec};
 use anyhow::{bail, Context, Result};
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -16,18 +35,34 @@ pub struct LeaderConfig {
     pub bind: String,
     pub world: usize,
     pub steps: usize,
+    /// Relay schedule (flat | sharded:S | tree:G; ring is sim-only).
+    pub topology: TopologySpec,
 }
+
+type Conn = (BufReader<TcpStream>, TcpStream);
 
 /// Run the leader until `steps` exchanges have completed.
 /// Returns total relayed payload bits.
 pub fn run_leader(cfg: &LeaderConfig) -> Result<u64> {
     let listener = TcpListener::bind(&cfg.bind).context("leader bind")?;
-    run_leader_on(listener, cfg.world, cfg.steps)
+    run_leader_topo(listener, cfg.world, cfg.steps, cfg.topology)
 }
 
-/// Leader loop over an already-bound listener (lets tests use port 0).
+/// Flat leader loop over an already-bound listener (lets tests use
+/// port 0); kept as the default-topology entry point.
 pub fn run_leader_on(listener: TcpListener, world: usize, steps: usize) -> Result<u64> {
-    let mut conns: Vec<Option<(BufReader<TcpStream>, TcpStream)>> = (0..world).map(|_| None).collect();
+    run_leader_topo(listener, world, steps, TopologySpec::Flat)
+}
+
+/// Leader loop over an already-bound listener with an explicit relay
+/// topology.
+pub fn run_leader_topo(
+    listener: TcpListener,
+    world: usize,
+    steps: usize,
+    topology: TopologySpec,
+) -> Result<u64> {
+    let mut conns: Vec<Option<Conn>> = (0..world).map(|_| None).collect();
     for _ in 0..world {
         let (stream, _) = listener.accept().context("accept")?;
         stream.set_nodelay(true).ok();
@@ -46,9 +81,28 @@ pub fn run_leader_on(listener: TcpListener, world: usize, steps: usize) -> Resul
             other => bail!("expected Hello, got {other:?}"),
         }
     }
-    let mut conns: Vec<(BufReader<TcpStream>, TcpStream)> =
-        conns.into_iter().map(|c| c.unwrap()).collect();
+    let mut conns: Vec<Conn> = conns.into_iter().map(|c| c.unwrap()).collect();
 
+    let relayed = match topology {
+        TopologySpec::Flat => relay_flat(&mut conns, steps)?,
+        TopologySpec::Sharded(s) => relay_sharded(&mut conns, steps, s)?,
+        TopologySpec::Tree(g) => {
+            if g > world {
+                bail!("tree:{g} needs at most {world} groups");
+            }
+            relay_tree(&mut conns, steps, g)?
+        }
+        TopologySpec::Ring => {
+            bail!("ring is a simulation schedule; the TCP relay supports flat|sharded:S|tree:G")
+        }
+    };
+    for (_, stream) in conns.iter_mut() {
+        Msg::Done.write_to(stream)?;
+    }
+    Ok(relayed)
+}
+
+fn relay_flat(conns: &mut [Conn], steps: usize) -> Result<u64> {
     let mut relayed_bits = 0u64;
     for step in 0..steps {
         let mut grads: Vec<Option<WireGrad>> = vec![None; conns.len()];
@@ -72,8 +126,111 @@ pub fn run_leader_on(listener: TcpListener, world: usize, steps: usize) -> Resul
             all.write_to(stream)?;
         }
     }
-    for (_, stream) in conns.iter_mut() {
-        Msg::Done.write_to(stream)?;
+    Ok(relayed_bits)
+}
+
+fn relay_sharded(conns: &mut [Conn], steps: usize, shards: usize) -> Result<u64> {
+    let mut relayed_bits = 0u64;
+    for step in 0..steps {
+        // Drain every worker's full shard set before writing anything:
+        // workers write all S frames then switch to reading, so reading
+        // everything first makes the socket flow one-directional and
+        // immune to buffer-full deadlocks at any frame size.
+        let mut frames: Vec<Vec<Option<WireGrad>>> =
+            (0..shards).map(|_| vec![None; conns.len()]).collect();
+        for (w, (reader, _)) in conns.iter_mut().enumerate() {
+            for shard in 0..shards {
+                match Msg::read_from(reader)? {
+                    Msg::ShardGrad {
+                        step: s,
+                        shard: sh,
+                        grad,
+                    } => {
+                        if s as usize != step || sh as usize != shard {
+                            bail!(
+                                "worker {w} sent step {s} shard {sh}, expected {step}/{shard}"
+                            );
+                        }
+                        relayed_bits += grad.bits;
+                        frames[shard][w] = Some(grad);
+                    }
+                    other => bail!("expected ShardGrad, got {other:?}"),
+                }
+            }
+        }
+        for (shard, grads) in frames.into_iter().enumerate() {
+            let all = Msg::AllShardGrads {
+                step: step as u32,
+                shard: shard as u32,
+                grads: grads.into_iter().map(|g| g.unwrap()).collect(),
+            };
+            for (_, stream) in conns.iter_mut() {
+                all.write_to(stream)?;
+            }
+        }
+    }
+    Ok(relayed_bits)
+}
+
+fn relay_tree(conns: &mut [Conn], steps: usize, groups: usize) -> Result<u64> {
+    let world = conns.len();
+    let mut relayed_bits = 0u64;
+    for step in 0..steps {
+        // 1. Barrier on every worker's frame.
+        let mut grads: Vec<Option<WireGrad>> = vec![None; world];
+        for (w, (reader, _)) in conns.iter_mut().enumerate() {
+            match Msg::read_from(reader)? {
+                Msg::Grad { step: s, grad } => {
+                    if s as usize != step {
+                        bail!("worker {w} sent step {s}, expected {step}");
+                    }
+                    relayed_bits += grad.bits;
+                    grads[w] = Some(grad);
+                }
+                other => bail!("expected Grad, got {other:?}"),
+            }
+        }
+        let grads: Vec<WireGrad> = grads.into_iter().map(|g| g.unwrap()).collect();
+
+        // 2. Hand each group leader its members' frames.
+        for g in 0..groups {
+            let members = group_members(world, groups, g);
+            let leader = members.start;
+            let msg = Msg::AllGrads {
+                step: step as u32,
+                grads: grads[members].to_vec(),
+            };
+            msg.write_to(&mut conns[leader].1)?;
+        }
+
+        // 3. Collect the G partial-aggregate frames.
+        let mut lead: Vec<Option<WireGrad>> = vec![None; groups];
+        for g in 0..groups {
+            let leader = group_members(world, groups, g).start;
+            match Msg::read_from(&mut conns[leader].0)? {
+                Msg::LeaderGrad {
+                    step: s,
+                    group,
+                    grad,
+                } => {
+                    if s as usize != step || group as usize != g {
+                        bail!("leader {leader} sent step {s} group {group}, expected {step}/{g}");
+                    }
+                    relayed_bits += grad.bits;
+                    lead[g] = Some(grad);
+                }
+                other => bail!("expected LeaderGrad, got {other:?}"),
+            }
+        }
+
+        // 4. Broadcast the partials down to everyone.
+        let all = Msg::AllLeaderGrads {
+            step: step as u32,
+            grads: lead.into_iter().map(|g| g.unwrap()).collect(),
+        };
+        for (_, stream) in conns.iter_mut() {
+            all.write_to(stream)?;
+        }
     }
     Ok(relayed_bits)
 }

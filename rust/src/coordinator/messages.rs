@@ -14,6 +14,20 @@ pub enum Msg {
     Grad { step: u32, grad: WireGrad },
     /// Leader broadcast: every worker's encoded gradient for a step.
     AllGrads { step: u32, grads: Vec<WireGrad> },
+    /// One bucket-aligned shard of a worker's encoded gradient
+    /// (sharded leader mode: the relay barriers and broadcasts per
+    /// shard lane).
+    ShardGrad { step: u32, shard: u32, grad: WireGrad },
+    /// Relay broadcast: every worker's frame for one shard.
+    AllShardGrads {
+        step: u32,
+        shard: u32,
+        grads: Vec<WireGrad>,
+    },
+    /// A group leader's encoded partial aggregate (hierarchical mode).
+    LeaderGrad { step: u32, group: u32, grad: WireGrad },
+    /// Relay broadcast: every group's encoded partial aggregate.
+    AllLeaderGrads { step: u32, grads: Vec<WireGrad> },
     /// Orderly end of training.
     Done,
 }
@@ -77,6 +91,10 @@ const TAG_HELLO: u8 = 1;
 const TAG_GRAD: u8 = 2;
 const TAG_ALL: u8 = 3;
 const TAG_DONE: u8 = 4;
+const TAG_SHARD: u8 = 5;
+const TAG_ALL_SHARD: u8 = 6;
+const TAG_LEADER: u8 = 7;
+const TAG_ALL_LEADER: u8 = 8;
 
 struct Buf(Vec<u8>);
 
@@ -166,6 +184,39 @@ impl Msg {
                 }
                 (TAG_ALL, b.0)
             }
+            Msg::ShardGrad { step, shard, grad } => {
+                let mut b = Buf(Vec::with_capacity(28 + grad.bytes.len()));
+                b.u32(*step);
+                b.u32(*shard);
+                b.grad(grad);
+                (TAG_SHARD, b.0)
+            }
+            Msg::AllShardGrads { step, shard, grads } => {
+                let mut b = Buf(Vec::new());
+                b.u32(*step);
+                b.u32(*shard);
+                b.u32(grads.len() as u32);
+                for g in grads {
+                    b.grad(g);
+                }
+                (TAG_ALL_SHARD, b.0)
+            }
+            Msg::LeaderGrad { step, group, grad } => {
+                let mut b = Buf(Vec::with_capacity(28 + grad.bytes.len()));
+                b.u32(*step);
+                b.u32(*group);
+                b.grad(grad);
+                (TAG_LEADER, b.0)
+            }
+            Msg::AllLeaderGrads { step, grads } => {
+                let mut b = Buf(Vec::new());
+                b.u32(*step);
+                b.u32(grads.len() as u32);
+                for g in grads {
+                    b.grad(g);
+                }
+                (TAG_ALL_LEADER, b.0)
+            }
             Msg::Done => (TAG_DONE, Vec::new()),
         };
         w.write_all(&[tag])?;
@@ -200,6 +251,35 @@ impl Msg {
                     grads.push(c.grad()?);
                 }
                 Msg::AllGrads { step, grads }
+            }
+            TAG_SHARD => Msg::ShardGrad {
+                step: c.u32()?,
+                shard: c.u32()?,
+                grad: c.grad()?,
+            },
+            TAG_ALL_SHARD => {
+                let step = c.u32()?;
+                let shard = c.u32()?;
+                let n = c.u32()? as usize;
+                let mut grads = Vec::with_capacity(n);
+                for _ in 0..n {
+                    grads.push(c.grad()?);
+                }
+                Msg::AllShardGrads { step, shard, grads }
+            }
+            TAG_LEADER => Msg::LeaderGrad {
+                step: c.u32()?,
+                group: c.u32()?,
+                grad: c.grad()?,
+            },
+            TAG_ALL_LEADER => {
+                let step = c.u32()?;
+                let n = c.u32()? as usize;
+                let mut grads = Vec::with_capacity(n);
+                for _ in 0..n {
+                    grads.push(c.grad()?);
+                }
+                Msg::AllLeaderGrads { step, grads }
             }
             TAG_DONE => Msg::Done,
             t => bail!("unknown frame tag {t}"),
@@ -236,7 +316,26 @@ mod tests {
         roundtrip(Msg::Grad { step: 7, grad: g.clone() });
         roundtrip(Msg::AllGrads {
             step: 9,
-            grads: vec![g.clone(), g],
+            grads: vec![g.clone(), g.clone()],
+        });
+        roundtrip(Msg::ShardGrad {
+            step: 3,
+            shard: 2,
+            grad: g.clone(),
+        });
+        roundtrip(Msg::AllShardGrads {
+            step: 4,
+            shard: 1,
+            grads: vec![g.clone(), g.clone(), g.clone()],
+        });
+        roundtrip(Msg::LeaderGrad {
+            step: 5,
+            group: 1,
+            grad: g.clone(),
+        });
+        roundtrip(Msg::AllLeaderGrads {
+            step: 6,
+            grads: vec![g],
         });
     }
 

@@ -17,6 +17,12 @@
 //!   identical inputs ⇒ identical adapted levels, no extra round-trips
 //!   (this is the paper's "processors update their compression schemes
 //!   in parallel").
+//!
+//! Beyond the flat relay, the leader and workers speak the sharded and
+//! hierarchical schedules of `exchange::topology` (`--topology
+//! sharded:S|tree:G`): S shard relay lanes with bit-identical-to-flat
+//! replicas, or a two-level tree whose group leaders re-quantize and
+//! relay partial aggregates (replica-identical, per-seed golden).
 
 pub mod leader;
 pub mod messages;

@@ -4,12 +4,29 @@
 //! level adaptation — is the same [`CodecSession`] + [`ExchangeLane`]
 //! the in-process simulation drives; only the transport differs (the
 //! leader relays wire frames instead of the engine looping back lanes).
+//!
+//! Topology modes (`--topology`, mirroring `exchange::topology`):
+//!
+//! * **flat** — send the whole encoded frame, decode all M peers.
+//! * **sharded:S** — encode the quantized gradient as S bucket-aligned
+//!   shard frames (which concatenate to exactly the whole-frame bits),
+//!   send each to its shard relay lane, decode every peer's shards.
+//!   Replicas remain bit-identical to the flat run: same symbols, same
+//!   per-coordinate reduction order.
+//! * **tree:G** — send the frame up; group leaders decode their
+//!   members' frames, re-quantize the group partial aggregate with
+//!   their own RNG stream, and send it up; everyone aggregates the G
+//!   decoded partials. Replicas are bit-identical to *each other* (they
+//!   decode identical leader frames); the re-quantized partials make
+//!   the trajectory a distinct per-seed golden from flat.
 
 use super::messages::{Msg, WireGrad};
+use crate::exchange::topology::{group_members, group_of, shard_buckets, TopologySpec};
 use crate::exchange::{CodecSession, ExchangeLane};
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
-use crate::quant::Method;
+use crate::quant::bitio::BitWriter;
+use crate::quant::{Codec, EncodedView, Method};
 use crate::util::{hash_params, Rng};
 use anyhow::{bail, Context, Result};
 use std::io::BufReader;
@@ -29,6 +46,10 @@ pub struct WorkerConfig {
     pub momentum: f32,
     pub weight_decay: f32,
     pub seed: u64,
+    /// Exchange topology (must match the leader's relay mode).
+    pub topology: TopologySpec,
+    /// Entropy coder (must match every replica).
+    pub codec: Codec,
 }
 
 #[derive(Clone, Debug)]
@@ -63,11 +84,12 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
         Box::new(Sgd::new(cfg.weight_decay))
     };
 
-    let mut session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket);
+    let mut session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
     // Uniform initial codebook: identical on every replica by
     // construction (no replica may depend on another's first batch).
     session.init_uniform_book();
     let mut lane = ExchangeLane::new(cfg.bucket);
+    let mut shard_writer = BitWriter::new();
 
     // Per-worker quantization randomness (replicas need not share this —
     // only the ciphertext is shared).
@@ -75,6 +97,7 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
 
     let mut grad = vec![0.0f32; d];
     let mut agg = vec![0.0f32; d];
+    let mut partial = vec![0.0f32; d];
     let mut prev_decoded: Vec<Vec<f32>> = Vec::new();
     let mut sent_bits = 0u64;
     let mut level_updates = 0usize;
@@ -82,8 +105,9 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
     for step in 0..cfg.iters {
         task.grad(&params, cfg.worker, step, &mut grad);
 
-        // Adapt from last exchange's decoded gradients (identical on all
-        // replicas ⇒ identical levels + codebook).
+        // Adapt from last exchange's decoded gradients — M frames under
+        // flat/sharded, G partials under tree, identical on all replicas
+        // either way ⇒ identical levels + codebook.
         if cfg.updates.is_update_step(step) && !prev_decoded.is_empty() {
             // Deterministic subsample seed shared by all replicas.
             let mut rng = Rng::new(cfg.seed ^ step as u64);
@@ -92,41 +116,59 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
             }
         }
 
-        // Quantize + encode into the lane's reusable buffers (full
-        // precision rides as a raw fp32 frame).
-        let bits = if session.is_quantized() {
-            lane.quantize(&session, &grad, &mut qrng);
-            lane.encode(&session)
-        } else {
-            lane.encode_raw(&grad)
-        };
-        sent_bits += bits;
-        Msg::Grad {
-            step: step as u32,
-            grad: WireGrad::from_view(lane.encoded()),
-        }
-        .write_to(&mut writer)?;
-
-        // Receive everyone's gradient; decode; aggregate.
-        let grads = match Msg::read_from(&mut reader)? {
-            Msg::AllGrads { step: s, grads } => {
-                if s as usize != step {
-                    bail!("leader sent step {s}, expected {step}");
-                }
-                grads
+        match cfg.topology {
+            TopologySpec::Flat => {
+                exchange_flat(
+                    cfg,
+                    step,
+                    &grad,
+                    &session,
+                    &mut lane,
+                    &mut qrng,
+                    &mut writer,
+                    &mut reader,
+                    &mut agg,
+                    &mut prev_decoded,
+                    &mut sent_bits,
+                )?;
             }
-            other => bail!("expected AllGrads, got {other:?}"),
-        };
-        agg.fill(0.0);
-        if prev_decoded.len() != grads.len() {
-            prev_decoded = vec![vec![0.0f32; d]; grads.len()];
-        }
-        for (w, wire) in grads.iter().enumerate() {
-            let ghat = lane.decode_to_ghat(&session, wire.view());
-            for (a, &g) in agg.iter_mut().zip(ghat) {
-                *a += g / cfg.world as f32;
+            TopologySpec::Sharded(shards) => {
+                exchange_sharded(
+                    cfg,
+                    step,
+                    shards,
+                    &grad,
+                    &session,
+                    &mut lane,
+                    &mut shard_writer,
+                    &mut qrng,
+                    &mut writer,
+                    &mut reader,
+                    &mut agg,
+                    &mut prev_decoded,
+                    &mut sent_bits,
+                )?;
             }
-            prev_decoded[w].copy_from_slice(ghat);
+            TopologySpec::Tree(groups) => {
+                exchange_tree(
+                    cfg,
+                    step,
+                    groups,
+                    &grad,
+                    &session,
+                    &mut lane,
+                    &mut partial,
+                    &mut qrng,
+                    &mut writer,
+                    &mut reader,
+                    &mut agg,
+                    &mut prev_decoded,
+                    &mut sent_bits,
+                )?;
+            }
+            TopologySpec::Ring => {
+                bail!("ring is a simulation schedule; TCP workers support flat|sharded:S|tree:G")
+            }
         }
 
         optimizer.step(&mut params, &agg, cfg.lr.lr(step));
@@ -146,18 +188,287 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
     })
 }
 
+/// Flat all-to-all over the relay: one frame up, M frames down.
+#[allow(clippy::too_many_arguments)]
+fn exchange_flat(
+    cfg: &WorkerConfig,
+    step: usize,
+    grad: &[f32],
+    session: &CodecSession,
+    lane: &mut ExchangeLane,
+    qrng: &mut Rng,
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    agg: &mut [f32],
+    prev_decoded: &mut Vec<Vec<f32>>,
+    sent_bits: &mut u64,
+) -> Result<()> {
+    let d = grad.len();
+    let bits = if session.is_quantized() {
+        lane.quantize(session, grad, qrng);
+        lane.encode(session)
+    } else {
+        lane.encode_raw(grad)
+    };
+    *sent_bits += bits;
+    Msg::Grad {
+        step: step as u32,
+        grad: WireGrad::from_view(lane.encoded()),
+    }
+    .write_to(writer)?;
+
+    let grads = match Msg::read_from(reader)? {
+        Msg::AllGrads { step: s, grads } => {
+            if s as usize != step {
+                bail!("leader sent step {s}, expected {step}");
+            }
+            grads
+        }
+        other => bail!("expected AllGrads, got {other:?}"),
+    };
+    agg.fill(0.0);
+    if prev_decoded.len() != grads.len() {
+        *prev_decoded = vec![vec![0.0f32; d]; grads.len()];
+    }
+    for (w, wire) in grads.iter().enumerate() {
+        let ghat = lane.decode_to_ghat(session, wire.view());
+        for (a, &g) in agg.iter_mut().zip(ghat) {
+            *a += g / cfg.world as f32;
+        }
+        prev_decoded[w].copy_from_slice(ghat);
+    }
+    Ok(())
+}
+
+/// Sharded leader lanes over the relay: S shard frames up, M·S shard
+/// frames down, reassembled per peer. Bit-identical to the flat mode.
+#[allow(clippy::too_many_arguments)]
+fn exchange_sharded(
+    cfg: &WorkerConfig,
+    step: usize,
+    shards: usize,
+    grad: &[f32],
+    session: &CodecSession,
+    lane: &mut ExchangeLane,
+    shard_writer: &mut BitWriter,
+    qrng: &mut Rng,
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    agg: &mut [f32],
+    prev_decoded: &mut Vec<Vec<f32>>,
+    sent_bits: &mut u64,
+) -> Result<()> {
+    let d = grad.len();
+    let quantized = session.is_quantized();
+    let bucket = session.bucket();
+    let nb = if quantized { d / bucket } else { 0 };
+
+    // Send our S shard frames (bucket-aligned for quantized payloads,
+    // coordinate-even fp32 slices otherwise).
+    if quantized {
+        lane.quantize(session, grad, qrng);
+        for shard in 0..shards {
+            let buckets = shard_buckets(nb, shards, shard);
+            let include_tail = shard + 1 == shards;
+            shard_writer.clear();
+            let bits = lane.encode_shard_into(session, buckets.clone(), include_tail, shard_writer);
+            shard_writer.finish_ref();
+            let view = EncodedView {
+                bytes: shard_writer.bytes(),
+                bits,
+                n_full: buckets.len() * bucket,
+                n_tail: if include_tail { lane.tail_len() } else { 0 },
+                bucket,
+            };
+            *sent_bits += bits;
+            Msg::ShardGrad {
+                step: step as u32,
+                shard: shard as u32,
+                grad: WireGrad::from_view(view),
+            }
+            .write_to(writer)?;
+        }
+    } else {
+        for shard in 0..shards {
+            let lo = shard * d / shards;
+            let hi = (shard + 1) * d / shards;
+            let bits = lane.encode_raw(&grad[lo..hi]);
+            *sent_bits += bits;
+            Msg::ShardGrad {
+                step: step as u32,
+                shard: shard as u32,
+                grad: WireGrad::from_view(lane.encoded()),
+            }
+            .write_to(writer)?;
+        }
+    }
+
+    // Receive each shard's relay broadcast and reassemble per peer.
+    agg.fill(0.0);
+    if prev_decoded.len() != cfg.world {
+        *prev_decoded = vec![vec![0.0f32; d]; cfg.world];
+    }
+    for shard in 0..shards {
+        let (coord_lo, coord_hi) = if quantized {
+            let buckets = shard_buckets(nb, shards, shard);
+            let lo = buckets.start * bucket;
+            let hi = if shard + 1 == shards {
+                d
+            } else {
+                buckets.end * bucket
+            };
+            (lo, hi)
+        } else {
+            (shard * d / shards, (shard + 1) * d / shards)
+        };
+        let grads = match Msg::read_from(reader)? {
+            Msg::AllShardGrads {
+                step: s,
+                shard: sh,
+                grads,
+            } => {
+                if s as usize != step || sh as usize != shard {
+                    bail!("leader sent step {s} shard {sh}, expected {step}/{shard}");
+                }
+                grads
+            }
+            other => bail!("expected AllShardGrads, got {other:?}"),
+        };
+        if grads.len() != cfg.world {
+            bail!("shard broadcast has {} frames, world {}", grads.len(), cfg.world);
+        }
+        for (w, wire) in grads.iter().enumerate() {
+            let ghat = lane.decode_to_ghat(session, wire.view());
+            for (a, &g) in agg[coord_lo..coord_hi].iter_mut().zip(ghat) {
+                *a += g / cfg.world as f32;
+            }
+            prev_decoded[w][coord_lo..coord_hi].copy_from_slice(ghat);
+        }
+    }
+    Ok(())
+}
+
+/// Two-level tree over the relay: frame up, leaders re-quantize group
+/// partials, everyone aggregates the G decoded partials.
+#[allow(clippy::too_many_arguments)]
+fn exchange_tree(
+    cfg: &WorkerConfig,
+    step: usize,
+    groups: usize,
+    grad: &[f32],
+    session: &CodecSession,
+    lane: &mut ExchangeLane,
+    partial: &mut [f32],
+    qrng: &mut Rng,
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    agg: &mut [f32],
+    prev_decoded: &mut Vec<Vec<f32>>,
+    sent_bits: &mut u64,
+) -> Result<()> {
+    let d = grad.len();
+    let my_group = group_of(cfg.worker, cfg.world, groups);
+    let members = group_members(cfg.world, groups, my_group);
+    let is_leader = cfg.worker == members.start;
+
+    // 1. Everyone sends its frame up.
+    let bits = if session.is_quantized() {
+        lane.quantize(session, grad, qrng);
+        lane.encode(session)
+    } else {
+        lane.encode_raw(grad)
+    };
+    *sent_bits += bits;
+    Msg::Grad {
+        step: step as u32,
+        grad: WireGrad::from_view(lane.encoded()),
+    }
+    .write_to(writer)?;
+
+    // 2. Group leaders reduce their members and send the re-quantized
+    // partial mean contribution (Σ ĝ_w / world) up.
+    if is_leader {
+        let group = match Msg::read_from(reader)? {
+            Msg::AllGrads { step: s, grads } => {
+                if s as usize != step {
+                    bail!("leader sent step {s}, expected {step}");
+                }
+                grads
+            }
+            other => bail!("expected AllGrads (group frames), got {other:?}"),
+        };
+        if group.len() != members.len() {
+            bail!("group broadcast has {} frames, group size {}", group.len(), members.len());
+        }
+        partial.fill(0.0);
+        let inv = 1.0 / cfg.world as f32;
+        for wire in group.iter() {
+            let ghat = lane.decode_to_ghat(session, wire.view());
+            for (p, &g) in partial.iter_mut().zip(ghat) {
+                *p += g * inv;
+            }
+        }
+        let bits = if session.is_quantized() {
+            lane.quantize(session, partial, qrng);
+            lane.encode(session)
+        } else {
+            lane.encode_raw(partial)
+        };
+        *sent_bits += bits;
+        Msg::LeaderGrad {
+            step: step as u32,
+            group: my_group as u32,
+            grad: WireGrad::from_view(lane.encoded()),
+        }
+        .write_to(writer)?;
+    }
+
+    // 3. Everyone aggregates the G decoded partials.
+    let leads = match Msg::read_from(reader)? {
+        Msg::AllLeaderGrads { step: s, grads } => {
+            if s as usize != step {
+                bail!("leader sent step {s}, expected {step}");
+            }
+            grads
+        }
+        other => bail!("expected AllLeaderGrads, got {other:?}"),
+    };
+    if leads.len() != groups {
+        bail!("leader broadcast has {} frames, groups {}", leads.len(), groups);
+    }
+    agg.fill(0.0);
+    if prev_decoded.len() != groups {
+        *prev_decoded = vec![vec![0.0f32; d]; groups];
+    }
+    for (g, wire) in leads.iter().enumerate() {
+        let ghat = lane.decode_to_ghat(session, wire.view());
+        for (a, &x) in agg.iter_mut().zip(ghat) {
+            *a += x;
+        }
+        prev_decoded[g].copy_from_slice(ghat);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::leader::run_leader_on;
+    use crate::coordinator::leader::run_leader_topo;
     use crate::data::Blobs;
     use crate::model::{Mlp, MlpTask};
     use std::net::TcpListener;
 
-    fn spawn_cluster(method: Method, iters: usize, world: usize) -> Vec<WorkerReport> {
+    fn spawn_cluster_topo(
+        method: Method,
+        iters: usize,
+        world: usize,
+        topology: TopologySpec,
+        codec: Codec,
+    ) -> Vec<WorkerReport> {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let leader = std::thread::spawn(move || run_leader_on(listener, world, iters).unwrap());
+        let leader =
+            std::thread::spawn(move || run_leader_topo(listener, world, iters, topology).unwrap());
 
         let mut handles = Vec::new();
         for w in 0..world {
@@ -175,6 +486,8 @@ mod tests {
                 momentum: 0.9,
                 weight_decay: 1e-4,
                 seed: 42,
+                topology,
+                codec,
             };
             handles.push(std::thread::spawn(move || {
                 // Same dataset seed on every worker: shards differ by
@@ -187,6 +500,10 @@ mod tests {
         let reports: Vec<WorkerReport> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         leader.join().unwrap();
         reports
+    }
+
+    fn spawn_cluster(method: Method, iters: usize, world: usize) -> Vec<WorkerReport> {
+        spawn_cluster_topo(method, iters, world, TopologySpec::Flat, Codec::Huffman)
     }
 
     #[test]
@@ -225,5 +542,48 @@ mod tests {
         // Quantized workers sent far fewer bits than fp32 would need.
         let d = Mlp::new(vec![8, 32, 4]).param_count() as u64;
         assert!(reports[0].sent_bits < 300 * 32 * d / 4);
+    }
+
+    #[test]
+    fn sharded_relay_is_bit_identical_to_flat() {
+        let flat = spawn_cluster_topo(Method::Alq, 40, 4, TopologySpec::Flat, Codec::Huffman);
+        let sharded =
+            spawn_cluster_topo(Method::Alq, 40, 4, TopologySpec::Sharded(2), Codec::Huffman);
+        // Replicas agree within each mode…
+        for r in &sharded {
+            assert_eq!(r.params_hash, sharded[0].params_hash);
+        }
+        // …and sharded routing reproduces the flat run exactly: same
+        // params, same levels, same payload bits (shards concatenate to
+        // the whole frame).
+        assert_eq!(flat[0].params_hash, sharded[0].params_hash);
+        assert_eq!(flat[0].final_levels, sharded[0].final_levels);
+        for (f, s) in flat.iter().zip(&sharded) {
+            assert_eq!(f.sent_bits, s.sent_bits);
+        }
+    }
+
+    #[test]
+    fn tree_relay_replicas_identical_and_deterministic() {
+        let a = spawn_cluster_topo(Method::QsgdInf, 30, 4, TopologySpec::Tree(2), Codec::Huffman);
+        for r in &a {
+            assert_eq!(r.params_hash, a[0].params_hash, "replica divergence!");
+        }
+        // Deterministic golden per seed.
+        let b = spawn_cluster_topo(Method::QsgdInf, 30, 4, TopologySpec::Tree(2), Codec::Huffman);
+        assert_eq!(a[0].params_hash, b[0].params_hash);
+        // Leaders sent an extra partial frame on top of their gradient.
+        let flat = spawn_cluster_topo(Method::QsgdInf, 30, 4, TopologySpec::Flat, Codec::Huffman);
+        assert!(a[0].sent_bits > flat[0].sent_bits, "worker 0 leads group 0");
+        assert_ne!(a[0].params_hash, flat[0].params_hash);
+    }
+
+    #[test]
+    fn elias_codec_runs_over_the_wire() {
+        let reports = spawn_cluster_topo(Method::NuqSgd, 30, 3, TopologySpec::Flat, Codec::Elias);
+        for r in &reports {
+            assert_eq!(r.params_hash, reports[0].params_hash);
+            assert!(r.sent_bits > 0);
+        }
     }
 }

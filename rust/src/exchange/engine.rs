@@ -2,8 +2,9 @@
 //! threads with a bit-for-bit deterministic reduction.
 
 use super::session::{CodecSession, ExchangeLane};
+use super::topology::Hop;
 use super::ExchangeBackend;
-use crate::quant::{Method, Quantizer};
+use crate::quant::{Codec, Method, Quantizer};
 use crate::sim::network::{Meter, NetworkModel};
 use crate::util::Rng;
 
@@ -54,6 +55,8 @@ pub struct ExchangeConfig {
     pub seed: u64,
     pub network: NetworkModel,
     pub parallel: ParallelMode,
+    /// Entropy coder for the symbol stream (`--codec huffman|elias`).
+    pub codec: Codec,
 }
 
 /// The unified in-process exchange: owns the codec session, one lane and
@@ -72,6 +75,7 @@ pub struct GradientExchange {
     bits_scratch: Vec<u64>,
     meter: Meter,
     codec_seconds: f64,
+    hops: Vec<Hop>,
 }
 
 impl GradientExchange {
@@ -81,7 +85,7 @@ impl GradientExchange {
         // active, so a seed maps to the same per-worker randomness
         // regardless of method (and identically to the seed loop).
         let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
-        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket);
+        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
         let active = if cfg.method == Method::SingleSgd {
             1
         } else {
@@ -95,6 +99,7 @@ impl GradientExchange {
             bits_scratch: vec![0; active],
             meter: Meter::default(),
             codec_seconds: 0.0,
+            hops: Vec::new(),
             cfg,
         }
     }
@@ -141,6 +146,20 @@ impl GradientExchange {
             ParallelMode::Parallel => self.lanes.len() > 1,
             ParallelMode::Auto => self.lanes.len() > 1 && d >= AUTO_PARALLEL_MIN_COORDS,
         }
+    }
+
+    /// The flat schedule is one hop: every worker's frame crosses the
+    /// fabric once. Returns the hop's α-β seconds so the caller can feed
+    /// the meter without recomputing the closed form.
+    fn record_flat_hop(&mut self, step_bits: u64) -> f64 {
+        let seconds = self.cfg.network.step_time(&self.bits_scratch);
+        self.hops.clear();
+        self.hops.push(Hop {
+            label: "all-to-all".to_string(),
+            bits: step_bits,
+            seconds,
+        });
+        seconds
     }
 }
 
@@ -189,20 +208,22 @@ impl GradientExchange {
                     *a += g / m as f32;
                 }
             }
-            self.meter.record(&self.cfg.network, &self.bits_scratch);
+            let seconds = self.record_flat_hop(step_bits);
+            self.meter.record_raw(step_bits, seconds);
             return step_bits;
         }
 
         let t0 = std::time::Instant::now();
         // Lazy codebook: built from the first gradient's empirical symbol
-        // distribution before any lane encodes.
+        // distribution before any lane encodes (skipped entirely by
+        // codebook-free coders).
         let mut lane0_quantized = false;
-        if self.session.book().is_none() {
+        if self.session.needs_book() && self.session.book().is_none() {
             self.lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
             self.session.build_empirical_book(self.lanes[0].quantized());
             lane0_quantized = true;
         }
-        let sample_counts = step % 10 == 0;
+        let sample_counts = self.session.needs_book() && step % 10 == 0;
 
         if self.use_parallel(grads[0].len()) {
             let session = &self.session;
@@ -249,7 +270,8 @@ impl GradientExchange {
             }
         }
         self.codec_seconds += t0.elapsed().as_secs_f64();
-        self.meter.record(&self.cfg.network, &self.bits_scratch);
+        let seconds = self.record_flat_hop(step_bits);
+        self.meter.record_raw(step_bits, seconds);
         step_bits
     }
 
@@ -285,6 +307,34 @@ impl ExchangeBackend for GradientExchange {
     fn quantizer(&self) -> Option<&Quantizer> {
         GradientExchange::quantizer(self)
     }
+
+    fn active_workers(&self) -> usize {
+        GradientExchange::active_workers(self)
+    }
+
+    fn is_quantized(&self) -> bool {
+        GradientExchange::is_quantized(self)
+    }
+
+    fn force_clip(&mut self, c: f32) {
+        GradientExchange::force_clip(self, c)
+    }
+
+    fn meter(&self) -> &Meter {
+        GradientExchange::meter(self)
+    }
+
+    fn codec_seconds(&self) -> f64 {
+        GradientExchange::codec_seconds(self)
+    }
+
+    fn final_levels(&self) -> Option<Vec<f64>> {
+        GradientExchange::final_levels(self)
+    }
+
+    fn last_hops(&self) -> &[Hop] {
+        &self.hops
+    }
 }
 
 #[cfg(test)]
@@ -301,6 +351,7 @@ mod tests {
             seed: 9,
             network: NetworkModel::paper_testbed(),
             parallel,
+            codec: Codec::Huffman,
         }
     }
 

@@ -25,21 +25,30 @@
 //! The TCP coordinator reuses [`CodecSession`] + [`ExchangeLane`]
 //! directly (its "exchange" is the leader relay), so both topologies
 //! share quantization, coding, codebooks, and adaptation by
-//! construction. Future backends (sharded leaders, async exchange)
-//! implement [`ExchangeBackend`].
+//! construction. The [`topology`] subsystem provides the non-flat
+//! executable schedules — sharded leaders, hierarchical two-level
+//! trees, ring all-reduce — behind the same [`ExchangeBackend`] trait
+//! (`--topology flat|sharded:S|tree:G|ring`).
 
 pub mod engine;
 pub mod session;
+pub mod topology;
 
 pub use engine::{ExchangeConfig, GradientExchange, ParallelMode};
 pub use session::{CodecSession, ExchangeLane};
+pub use topology::{make_backend, Hop, TopologySpec};
 
 use crate::quant::Quantizer;
+use crate::sim::network::Meter;
 
 /// A synchronous collective exchange of per-worker gradients: everything
 /// between "local gradients are ready" and "the mean estimate is in
 /// `agg`" (Algorithm 1 lines 5–9), with exact bit accounting.
-pub trait ExchangeBackend {
+///
+/// Implementors are the flat engine ([`GradientExchange`]) and the
+/// [`topology`] schedules; `Send` so a boxed backend can train inside a
+/// spawned thread (the multi-replica tests).
+pub trait ExchangeBackend: Send {
     /// Exchange one step's gradients; writes the aggregated mean
     /// estimate into `agg` and returns the step's total encoded bits.
     fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64;
@@ -50,4 +59,30 @@ pub trait ExchangeBackend {
 
     /// The live quantizer, if this exchange quantizes at all.
     fn quantizer(&self) -> Option<&Quantizer>;
+
+    /// Lanes that actually compute and communicate (1 for SingleSGD).
+    fn active_workers(&self) -> usize;
+
+    /// Whether this backend quantizes at all.
+    fn is_quantized(&self) -> bool;
+
+    /// Force TernGrad-style c·σ clipping regardless of method (the
+    /// Appendix K.2 / Fig. 14 ablation).
+    fn force_clip(&mut self, c: f32);
+
+    /// The running communication meter (total bits + modeled seconds).
+    fn meter(&self) -> &Meter;
+
+    /// Wall time spent inside quantize+encode+decode (the codec hot
+    /// path).
+    fn codec_seconds(&self) -> f64;
+
+    /// The final (possibly adapted) quantization level magnitudes.
+    fn final_levels(&self) -> Option<Vec<f64>>;
+
+    /// Per-hop accounting of the last exchange. Invariant (asserted in
+    /// `rust/tests/topology_parity.rs`): Σ hop bits equals the step
+    /// total returned by [`ExchangeBackend::exchange`] — every encoded
+    /// frame is charged on every hop it traverses, and nothing else is.
+    fn last_hops(&self) -> &[Hop];
 }

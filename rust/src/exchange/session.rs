@@ -4,11 +4,13 @@
 
 use crate::adaptive::{update_levels, Estimator};
 use crate::quant::bitio::{BitReader, BitWriter};
+use crate::quant::elias::{decode_qsgd_style_into, encode_qsgd_style, encode_qsgd_style_range};
 use crate::quant::{
-    decode_view_into, encode_into, smooth_weights, symbol_counts, EncodedView, HuffmanBook,
-    Method, QuantizedGrad, Quantizer,
+    decode_view_into, encode_buckets_into, encode_into, smooth_weights, symbol_counts, Codec,
+    EncodedView, HuffmanBook, Method, QuantizedGrad, Quantizer,
 };
 use crate::util::Rng;
+use std::ops::Range;
 
 /// App. K: mixture components retained for CIFAR-scale runs.
 const MAX_MIXTURE_COMPONENTS: usize = 20;
@@ -33,6 +35,7 @@ const MAX_MIXTURE_COMPONENTS: usize = 20;
 pub struct CodecSession {
     method: Method,
     bucket: usize,
+    codec: Codec,
     quantizer: Option<Quantizer>,
     book: Option<HuffmanBook>,
     sym_counts: Vec<f64>,
@@ -58,11 +61,40 @@ impl CodecSession {
         CodecSession {
             method,
             bucket,
+            codec: Codec::Huffman,
             quantizer,
             book: None,
             sym_counts,
             estimator,
         }
+    }
+
+    /// Select the entropy coder (the QSGD-style coding ablation). Elias
+    /// coding runs books-free but needs a zero level to run-length over —
+    /// the no-zero AMQ level family must keep Huffman (validated again at
+    /// config parse time).
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        if codec == Codec::Elias {
+            if let Some(q) = &self.quantizer {
+                assert!(
+                    q.levels().has_zero(),
+                    "elias coding needs a zero level; {} has none",
+                    self.method
+                );
+            }
+        }
+        self.codec = codec;
+        self
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Whether this session's coder needs a Huffman codebook at all
+    /// (Elias coding is codebook-free; so is full precision).
+    pub fn needs_book(&self) -> bool {
+        self.quantizer.is_some() && self.codec == Codec::Huffman
     }
 
     pub fn method(&self) -> Method {
@@ -100,8 +132,12 @@ impl CodecSession {
     }
 
     /// Uniform initial codebook: identical on every replica by
-    /// construction (the TCP path's requirement).
+    /// construction (the TCP path's requirement). No-op for codebook-free
+    /// coders.
     pub fn init_uniform_book(&mut self) {
+        if !self.needs_book() {
+            return;
+        }
         if let Some(q) = &self.quantizer {
             self.book = Some(HuffmanBook::from_weights(&vec![
                 1.0;
@@ -112,9 +148,10 @@ impl CodecSession {
 
     /// Lazily build the codebook from the first quantized gradient's
     /// empirical symbol distribution (smoothed: later steps may emit
-    /// symbols unseen in the first batch). No-op once a book exists.
+    /// symbols unseen in the first batch). No-op once a book exists (or
+    /// for codebook-free coders).
     pub fn build_empirical_book(&mut self, first: &QuantizedGrad) {
-        if self.book.is_some() {
+        if self.book.is_some() || !self.needs_book() {
             return;
         }
         let q = self
@@ -137,7 +174,7 @@ impl CodecSession {
     /// since the last refresh (the non-adaptive methods' codebook update
     /// at the schedule 𝒰). No-op when nothing was accumulated.
     pub fn refresh_book_from_counts(&mut self) {
-        if self.sym_counts.iter().sum::<f64>() > 0.0 {
+        if self.needs_book() && self.sym_counts.iter().sum::<f64>() > 0.0 {
             self.book = Some(HuffmanBook::from_weights(&smooth_weights(&self.sym_counts)));
             for c in self.sym_counts.iter_mut() {
                 *c = 0.0;
@@ -172,9 +209,12 @@ impl CodecSession {
         };
         let new_levels = update_levels(self.method, q.levels(), &mix);
         q.set_levels(new_levels);
-        // Model-based codebook (Prop. 6) for the new levels.
-        let probs = crate::adaptive::objective::symbol_probs(&mix, q.levels());
-        self.book = Some(HuffmanBook::from_weights(&smooth_weights(&probs)));
+        // Model-based codebook (Prop. 6) for the new levels (Elias
+        // coding is codebook-free — only the levels move).
+        if self.codec == Codec::Huffman {
+            let probs = crate::adaptive::objective::symbol_probs(&mix, q.levels());
+            self.book = Some(HuffmanBook::from_weights(&smooth_weights(&probs)));
+        }
         self.sym_counts = vec![0.0; q.levels().num_symbols()];
         true
     }
@@ -242,17 +282,53 @@ impl ExchangeLane {
     }
 
     /// Entropy-encode the lane's quantized gradient into the reusable
-    /// writer. Returns the exact payload bits (norms + Huffman symbols +
-    /// signs + fp32 tail) — the figure the network model is charged.
+    /// writer with the session's coder (Huffman symbols or Elias-γ runs).
+    /// Returns the exact payload bits — the figure the network model is
+    /// charged.
     pub fn encode(&mut self, s: &CodecSession) -> u64 {
         let q = s.quantizer().expect("encode on a full-precision session");
-        let book = s.book().expect("codebook not initialized");
         self.writer.clear();
-        self.bits = encode_into(&self.qbuf, q.levels(), book, &mut self.writer);
+        self.bits = match s.codec() {
+            Codec::Huffman => {
+                let book = s.book().expect("codebook not initialized");
+                encode_into(&self.qbuf, q.levels(), book, &mut self.writer)
+            }
+            Codec::Elias => encode_qsgd_style(&self.qbuf, q.levels(), &mut self.writer),
+        };
         self.n_full = self.qbuf.qidx.len();
         self.n_tail = self.qbuf.tail.len();
         self.writer.finish_ref();
         self.bits
+    }
+
+    /// Encode one bucket-aligned shard of the lane's quantized gradient
+    /// into an external writer (the sharded topology's per-shard frames).
+    /// Bucket-aligned shard frames concatenate to exactly the bits of
+    /// [`ExchangeLane::encode`]'s whole frame. Returns the shard's bits.
+    pub fn encode_shard_into(
+        &self,
+        s: &CodecSession,
+        buckets: Range<usize>,
+        include_tail: bool,
+        w: &mut BitWriter,
+    ) -> u64 {
+        let q = s
+            .quantizer()
+            .expect("shard encode on a full-precision session");
+        match s.codec() {
+            Codec::Huffman => {
+                let book = s.book().expect("codebook not initialized");
+                encode_buckets_into(&self.qbuf, q.levels(), book, buckets, include_tail, w)
+            }
+            Codec::Elias => {
+                encode_qsgd_style_range(&self.qbuf, q.levels(), buckets, include_tail, w)
+            }
+        }
+    }
+
+    /// Tail length of the last quantization (shard-frame metadata).
+    pub fn tail_len(&self) -> usize {
+        self.qbuf.tail.len()
     }
 
     /// Full-precision "encoding": the raw fp32 coordinates ride in the
@@ -289,9 +365,8 @@ impl ExchangeLane {
     /// Decode an encoded frame (own or a peer's) and dequantize into the
     /// lane's `ghat`; returns the estimate.
     pub fn decode_to_ghat(&mut self, s: &CodecSession, view: EncodedView<'_>) -> &[f32] {
-        if let Some(q) = s.quantizer() {
-            let book = s.book().expect("codebook not initialized");
-            decode_frame_into(view, q, book, &mut self.dec_buf, &mut self.ghat);
+        if s.quantizer().is_some() {
+            decode_frame_into(view, s, &mut self.dec_buf, &mut self.ghat);
         } else {
             // Full precision: the payload is the raw fp32 stream.
             let n = view.n_full + view.n_tail;
@@ -311,10 +386,10 @@ impl ExchangeLane {
     /// once here is the paper's "simulate M GPUs on one" methodology
     /// with real bit accounting.
     pub fn decode_own(&mut self, s: &CodecSession) {
-        let q = s
-            .quantizer()
-            .expect("loopback decode on a full-precision session");
-        let book = s.book().expect("codebook not initialized");
+        assert!(
+            s.quantizer().is_some(),
+            "loopback decode on a full-precision session"
+        );
         let view = EncodedView {
             bytes: self.writer.bytes(),
             bits: self.bits,
@@ -322,7 +397,7 @@ impl ExchangeLane {
             n_tail: self.n_tail,
             bucket: self.qbuf.bucket,
         };
-        decode_frame_into(view, q, book, &mut self.dec_buf, &mut self.ghat);
+        decode_frame_into(view, s, &mut self.dec_buf, &mut self.ghat);
     }
 
     /// The dequantized gradient estimate of the last decode.
@@ -332,21 +407,30 @@ impl ExchangeLane {
 }
 
 /// The single quantized-frame decode path: resize the estimate buffer,
-/// decode symbols + norms + tail, dequantize. Free function over the
-/// lane's disjoint fields so `decode_own` (which also borrows the
-/// lane's writer for the view) and `decode_to_ghat` share one copy.
+/// decode symbols + norms + tail with the session's coder, dequantize.
+/// Free function over the lane's disjoint fields so `decode_own` (which
+/// also borrows the lane's writer for the view) and `decode_to_ghat`
+/// share one copy.
 fn decode_frame_into(
     view: EncodedView<'_>,
-    q: &Quantizer,
-    book: &HuffmanBook,
+    s: &CodecSession,
     dec_buf: &mut QuantizedGrad,
     ghat: &mut Vec<f32>,
 ) {
+    let q = s.quantizer().expect("frame decode needs a quantizer");
     let n = view.n_full + view.n_tail;
     if ghat.len() != n {
         ghat.resize(n, 0.0);
     }
-    decode_view_into(view, q.levels(), book, dec_buf);
+    match s.codec() {
+        Codec::Huffman => {
+            let book = s.book().expect("codebook not initialized");
+            decode_view_into(view, q.levels(), book, dec_buf);
+        }
+        Codec::Elias => {
+            decode_qsgd_style_into(view.bytes, view.n_full, view.n_tail, view.bucket, dec_buf);
+        }
+    }
     q.dequantize(dec_buf, ghat);
 }
 
@@ -418,6 +502,40 @@ mod tests {
         let mut peer = ExchangeLane::new(32);
         let got = peer.decode_to_ghat(&s, view);
         assert_eq!(got, &grad[..]);
+    }
+
+    #[test]
+    fn elias_lane_roundtrip_matches_huffman_values() {
+        // Same RNG → same symbols → identical decoded estimates; only the
+        // bit counts differ between the coders.
+        let grad = randn(300, 21);
+        let mut s_h = CodecSession::new(Method::NuqSgd, 3, 64);
+        let s_e = CodecSession::new(Method::NuqSgd, 3, 64).with_codec(Codec::Elias);
+        assert!(!s_e.needs_book());
+        assert!(s_h.needs_book());
+        let mut lane_h = ExchangeLane::new(64);
+        let mut lane_e = ExchangeLane::new(64);
+        let mut rng_h = Rng::new(22);
+        let mut rng_e = Rng::new(22);
+        lane_h.quantize(&s_h, &grad, &mut rng_h);
+        lane_e.quantize(&s_e, &grad, &mut rng_e);
+        s_h.build_empirical_book(lane_h.quantized());
+        let bits_h = lane_h.encode(&s_h);
+        let bits_e = lane_e.encode(&s_e);
+        assert!(bits_h > 0 && bits_e > 0);
+        assert_ne!(bits_h, bits_e, "coders should produce different frames");
+        lane_h.decode_own(&s_h);
+        lane_e.decode_own(&s_e);
+        assert_eq!(lane_h.ghat(), lane_e.ghat());
+        // The Elias session never builds a book.
+        assert!(s_e.book().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "zero level")]
+    fn elias_rejects_no_zero_levels() {
+        // AMQ's symmetric no-zero family cannot run-length encode.
+        let _ = CodecSession::new(Method::Amq, 3, 64).with_codec(Codec::Elias);
     }
 
     #[test]

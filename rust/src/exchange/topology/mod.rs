@@ -1,0 +1,199 @@
+//! Executable exchange topologies (DESIGN.md §7-Topology).
+//!
+//! The flat engine ([`super::GradientExchange`]) realizes Algorithm 1's
+//! all-to-all in one hop. This subsystem provides the schedules that
+//! matter once M grows past a single switch — each one a *real,
+//! executable* implementation of [`super::ExchangeBackend`] that moves
+//! encoded frames hop by hop, not an analytical formula:
+//!
+//! * [`ShardedExchange`] (`--topology sharded:S`) — parameters are
+//!   partitioned into S bucket-aligned shards; each shard is gathered,
+//!   decoded, and reduced by a different leader lane in parallel.
+//!   Routing changes, payload content does not: the per-coordinate
+//!   reduction order and every encoded bit are identical to the flat
+//!   engine (`rust/tests/topology_parity.rs` asserts `params_hash` and
+//!   per-step bits match flat exactly).
+//! * [`HierarchicalExchange`] (`--topology tree:G`) — two-level tree: G
+//!   groups reduce locally, group leaders exchange *re-quantized*
+//!   partial aggregates, then broadcast down. Quantized payloads at
+//!   every hop; the up-level re-quantization necessarily changes the
+//!   reduction numerics, so its contract is a per-seed `params_hash`
+//!   golden (deterministic, but distinct from flat).
+//! * [`RingExchange`] (`--topology ring`) — bandwidth-optimal ring
+//!   all-reduce over encoded chunks: M−1 reduce-scatter stages in which
+//!   each worker re-quantizes and forwards a 1/M-sized partial sum, then
+//!   M−1 all-gather stages relaying the reduced chunks. This turns the
+//!   analytical `sim::network::Topology::Ring` formula into an actual
+//!   schedule with the same 2(M−1)-stage shape.
+//!
+//! # Metering contract
+//!
+//! Every backend reports per-hop [`Hop`] records. A hop's `bits` is the
+//! total encoded payload that crosses links in that hop, and the step
+//! total returned by `exchange()` is exactly Σ hop bits — a frame is
+//! charged once per hop it traverses. Consequences:
+//!
+//! * flat and sharded charge each worker frame once (identical step
+//!   totals — sharding only re-routes);
+//! * tree charges member frames up, leader frames across, and leader
+//!   frames again on the broadcast down (three hops);
+//! * ring charges every stage's freshly encoded (or relayed) chunks —
+//!   the classic 2(M−1)/M·payload per-link ring cost.
+//!
+//! Hop `seconds` charge the α-β [`crate::sim::NetworkModel`] per link:
+//! serialized fan-in/out at endpoints, parallel links elsewhere. Hops
+//! that run concurrently (the S shard lanes) contribute their max to
+//! the step's time; sequential hops (tree levels, ring stages) sum.
+
+pub mod ring;
+pub mod sharded;
+pub mod tree;
+
+pub use ring::RingExchange;
+pub use sharded::ShardedExchange;
+pub use tree::HierarchicalExchange;
+
+use super::engine::{ExchangeConfig, GradientExchange};
+use super::ExchangeBackend;
+
+/// Which executable exchange schedule a run uses
+/// (`--topology flat|sharded:S|tree:G|ring`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// The flat all-to-all engine (one hop; the paper's Algorithm 1).
+    #[default]
+    Flat,
+    /// S shard leader lanes, each reducing a bucket-aligned slice of the
+    /// parameters.
+    Sharded(usize),
+    /// G groups reducing locally under a two-level leader tree.
+    Tree(usize),
+    /// Ring all-reduce over encoded chunks (2(M−1) stages).
+    Ring,
+}
+
+impl TopologySpec {
+    pub fn parse(s: &str) -> Option<TopologySpec> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "flat" => return Some(TopologySpec::Flat),
+            "ring" => return Some(TopologySpec::Ring),
+            _ => {}
+        }
+        let (kind, n) = s.split_once(':')?;
+        let n: usize = n.parse().ok()?;
+        if n == 0 {
+            return None;
+        }
+        match kind {
+            "sharded" => Some(TopologySpec::Sharded(n)),
+            "tree" => Some(TopologySpec::Tree(n)),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            TopologySpec::Flat => "flat".to_string(),
+            TopologySpec::Sharded(s) => format!("sharded:{s}"),
+            TopologySpec::Tree(g) => format!("tree:{g}"),
+            TopologySpec::Ring => "ring".to_string(),
+        }
+    }
+}
+
+/// One hop of a topology's schedule: the encoded payload that crossed
+/// links in the hop and the α-β time it was charged.
+#[derive(Clone, Debug)]
+pub struct Hop {
+    /// Human-readable hop name ("shard2-gather", "reduce-scatter[1]", …).
+    pub label: String,
+    /// Total encoded bits that crossed links in this hop.
+    pub bits: u64,
+    /// Modeled α-β seconds for this hop.
+    pub seconds: f64,
+}
+
+/// Stand up the backend for a topology over the shared exchange config.
+pub fn make_backend(cfg: ExchangeConfig, topo: TopologySpec) -> Box<dyn ExchangeBackend> {
+    match topo {
+        TopologySpec::Flat => Box::new(GradientExchange::new(cfg)),
+        TopologySpec::Sharded(s) => Box::new(ShardedExchange::new(cfg, s)),
+        TopologySpec::Tree(g) => Box::new(HierarchicalExchange::new(cfg, g)),
+        TopologySpec::Ring => Box::new(RingExchange::new(cfg)),
+    }
+}
+
+/// Bucket range owned by shard `s` of `shards` over `nb` full buckets
+/// (shared by the sim backend and the TCP workers so both sides of the
+/// wire agree on shard boundaries).
+pub fn shard_buckets(nb: usize, shards: usize, s: usize) -> std::ops::Range<usize> {
+    (s * nb / shards)..((s + 1) * nb / shards)
+}
+
+/// Worker range of group `g` of `groups` over `world` workers
+/// (contiguous, sizes as even as possible; the group leader is the
+/// first member).
+pub fn group_members(world: usize, groups: usize, g: usize) -> std::ops::Range<usize> {
+    (g * world / groups)..((g + 1) * world / groups)
+}
+
+/// Which group worker `w` belongs to.
+pub fn group_of(w: usize, world: usize, groups: usize) -> usize {
+    for g in 0..groups {
+        if group_members(world, groups, g).contains(&w) {
+            return g;
+        }
+    }
+    unreachable!("worker {w} outside all {groups} groups of world {world}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses() {
+        assert_eq!(TopologySpec::parse("flat"), Some(TopologySpec::Flat));
+        assert_eq!(TopologySpec::parse("RING"), Some(TopologySpec::Ring));
+        assert_eq!(
+            TopologySpec::parse("sharded:4"),
+            Some(TopologySpec::Sharded(4))
+        );
+        assert_eq!(TopologySpec::parse("tree:2"), Some(TopologySpec::Tree(2)));
+        assert_eq!(TopologySpec::parse("sharded:0"), None);
+        assert_eq!(TopologySpec::parse("tree"), None);
+        assert_eq!(TopologySpec::parse("mesh:3"), None);
+        assert_eq!(TopologySpec::default().name(), "flat");
+        assert_eq!(TopologySpec::Sharded(8).name(), "sharded:8");
+    }
+
+    #[test]
+    fn shard_partition_covers_buckets_exactly_once() {
+        for (nb, shards) in [(10usize, 3usize), (4, 4), (2, 5), (0, 2), (7, 1)] {
+            let mut covered = 0;
+            for s in 0..shards {
+                let r = shard_buckets(nb, shards, s);
+                assert_eq!(r.start, covered, "nb={nb} shards={shards} s={s}");
+                covered = r.end;
+            }
+            assert_eq!(covered, nb);
+        }
+    }
+
+    #[test]
+    fn group_partition_covers_workers_exactly_once() {
+        for (world, groups) in [(8usize, 2usize), (8, 3), (4, 4), (5, 2), (6, 1)] {
+            let mut covered = 0;
+            for g in 0..groups {
+                let r = group_members(world, groups, g);
+                assert_eq!(r.start, covered);
+                covered = r.end;
+                for w in r.clone() {
+                    assert_eq!(group_of(w, world, groups), g);
+                }
+            }
+            assert_eq!(covered, world);
+        }
+    }
+}

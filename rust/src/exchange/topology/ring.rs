@@ -1,0 +1,409 @@
+//! Ring all-reduce over encoded chunks — the analytical
+//! `sim::network::Topology::Ring` formula turned into an actual,
+//! executable schedule.
+//!
+//! The parameters are split into M bucket-aligned chunks (the fp32 tail
+//! rides with the last chunk). The classic 2(M−1)-stage schedule runs
+//! for real, with quantized payloads on every link:
+//!
+//! * **reduce-scatter** (M−1 stages): at stage t, worker w quantizes its
+//!   current partial sum of chunk (w−t mod M) with its own RNG stream,
+//!   encodes it, and sends it to worker w+1, which decodes and
+//!   accumulates. After M−1 stages worker (c−1 mod M) owns the fully
+//!   reduced chunk c.
+//! * **all-gather** (M−1 stages): each owner re-quantizes its reduced
+//!   chunk mean once; the M final chunk frames then circle the ring,
+//!   every worker forwarding what it holds, until everyone has all
+//!   chunks. The simulation decodes each final frame once (the loopback
+//!   convention: every replica would decode these exact bytes).
+//!
+//! Each of the 2(M−1) stages is one [`Hop`]: its bits are the chunk
+//! frames on the wire that stage (relays included — ring genuinely
+//! retransmits), its seconds one parallel link round `α + max/β`. That
+//! reproduces the analytical ring cost shape `2(M−1)·α +
+//! 2(M−1)/M·payload/β` from measured frames instead of a formula.
+//!
+//! Numerics: partial sums are re-quantized at every reduce-scatter hop,
+//! so quantization noise compounds along the ring — the documented,
+//! honest cost of quantized ring all-reduce. Runs are bit-deterministic
+//! per seed (`rust/tests/topology_parity.rs` asserts the golden), but
+//! distinct from the flat engine's fixed point.
+
+use super::super::engine::ExchangeConfig;
+use super::super::session::{CodecSession, ExchangeLane};
+use super::super::ExchangeBackend;
+use super::Hop;
+use crate::quant::{Method, Quantizer};
+use crate::sim::network::Meter;
+use crate::util::Rng;
+
+/// The ring all-reduce exchange backend (`--topology ring`).
+pub struct RingExchange {
+    cfg: ExchangeConfig,
+    session: CodecSession,
+    rngs: Vec<Rng>,
+    /// Per-worker working copy of the gradient being ring-reduced.
+    partials: Vec<Vec<f32>>,
+    /// Scratch codec lane for the chunk in flight.
+    chunk_lane: ExchangeLane,
+    /// Scratch lane decoding received chunk frames.
+    dec_lane: ExchangeLane,
+    /// Scratch: a reduced chunk scaled to the mean.
+    mean_buf: Vec<f32>,
+    hops: Vec<Hop>,
+    meter: Meter,
+    codec_seconds: f64,
+}
+
+impl RingExchange {
+    pub fn new(cfg: ExchangeConfig) -> Self {
+        let mut seeder = Rng::new(cfg.seed);
+        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
+        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
+        let active = if cfg.method == Method::SingleSgd {
+            1
+        } else {
+            cfg.workers
+        };
+        RingExchange {
+            session,
+            rngs,
+            partials: vec![Vec::new(); active],
+            chunk_lane: ExchangeLane::new(cfg.bucket),
+            dec_lane: ExchangeLane::new(cfg.bucket),
+            mean_buf: Vec::new(),
+            hops: Vec::new(),
+            meter: Meter::default(),
+            codec_seconds: 0.0,
+            cfg,
+        }
+    }
+
+    /// Coordinate range of ring chunk `c` (bucket-aligned; the tail
+    /// rides with the last chunk).
+    fn chunk_coords(c: usize, m: usize, nb: usize, bucket: usize, d: usize) -> std::ops::Range<usize> {
+        let lo = (c * nb / m) * bucket;
+        let hi = if c + 1 == m {
+            d
+        } else {
+            ((c + 1) * nb / m) * bucket
+        };
+        lo..hi
+    }
+
+    fn exchange_impl(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        let m = self.partials.len();
+        assert!(
+            grads.len() >= m,
+            "exchange needs one gradient per active lane ({} < {m})",
+            grads.len()
+        );
+        agg.fill(0.0);
+        let d = agg.len();
+        let net = self.cfg.network;
+        let bucket = self.session.bucket();
+        let nb = d / bucket;
+        let quantized = self.session.is_quantized();
+        // Sampled symbol-count refresh on the same cadence as the other
+        // topologies (every 10th step), measured on the chunk frames the
+        // ring actually codes, so refresh_book_from_counts() has real
+        // statistics for non-adaptive methods.
+        let sample_counts = self.session.needs_book() && step % 10 == 0;
+        let t0 = std::time::Instant::now();
+
+        // Each worker starts from its own raw gradient; a worker's own
+        // contribution never crosses a link, so it is never quantized —
+        // the real ring semantics.
+        for (p, g) in self.partials.iter_mut().zip(grads) {
+            p.clear();
+            p.extend_from_slice(g);
+        }
+
+        self.hops.clear();
+        let mut step_bits = 0u64;
+        let mut step_seconds = 0.0f64;
+
+        // Reduce-scatter: M−1 stages, every link active in parallel.
+        for t in 0..m.saturating_sub(1) {
+            let mut stage_bits = 0u64;
+            let mut stage_max = 0u64;
+            for w in 0..m {
+                let c = (w + m - t) % m;
+                let r = (w + 1) % m;
+                let range = Self::chunk_coords(c, m, nb, bucket, d);
+                let bits = if quantized {
+                    self.chunk_lane.quantize(
+                        &self.session,
+                        &self.partials[w][range.clone()],
+                        &mut self.rngs[w],
+                    );
+                    if self.session.needs_book() && self.session.book().is_none() {
+                        self.session
+                            .build_empirical_book(self.chunk_lane.quantized());
+                    }
+                    if sample_counts {
+                        self.chunk_lane.count_symbols(&self.session);
+                        self.session.accumulate_counts(self.chunk_lane.counts());
+                    }
+                    let bits = self.chunk_lane.encode(&self.session);
+                    let view = self.chunk_lane.encoded();
+                    self.dec_lane.decode_to_ghat(&self.session, view);
+                    let dst = &mut self.partials[r][range.clone()];
+                    for (a, &g) in dst.iter_mut().zip(self.dec_lane.ghat()) {
+                        *a += g;
+                    }
+                    bits
+                } else {
+                    for i in range.clone() {
+                        let v = self.partials[w][i];
+                        self.partials[r][i] += v;
+                    }
+                    32 * range.len() as u64
+                };
+                stage_bits += bits;
+                stage_max = stage_max.max(bits);
+            }
+            let seconds = net.link_time(stage_max);
+            step_bits += stage_bits;
+            step_seconds += seconds;
+            self.hops.push(Hop {
+                label: format!("reduce-scatter[{t}]"),
+                bits: stage_bits,
+                seconds,
+            });
+        }
+
+        // Finalize: chunk owners scale to the mean, re-quantize once, and
+        // the reduced frames circle the ring M−1 more stages.
+        let inv = 1.0 / m as f32;
+        let mut final_bits = 0u64;
+        let mut final_max = 0u64;
+        for c in 0..m {
+            let o = (c + m - 1) % m;
+            let range = Self::chunk_coords(c, m, nb, bucket, d);
+            let bits = if quantized {
+                self.mean_buf.clear();
+                self.mean_buf
+                    .extend(self.partials[o][range.clone()].iter().map(|&x| x * inv));
+                self.chunk_lane
+                    .quantize(&self.session, &self.mean_buf, &mut self.rngs[o]);
+                // Degenerate rings (M = 1) skip reduce-scatter, so the
+                // lazy book may not exist yet.
+                if self.session.needs_book() && self.session.book().is_none() {
+                    self.session
+                        .build_empirical_book(self.chunk_lane.quantized());
+                }
+                if sample_counts {
+                    self.chunk_lane.count_symbols(&self.session);
+                    self.session.accumulate_counts(self.chunk_lane.counts());
+                }
+                let bits = self.chunk_lane.encode(&self.session);
+                let view = self.chunk_lane.encoded();
+                let ghat = self.dec_lane.decode_to_ghat(&self.session, view);
+                agg[range.clone()].copy_from_slice(ghat);
+                bits
+            } else {
+                let src = &self.partials[o];
+                for i in range.clone() {
+                    agg[i] = src[i] * inv;
+                }
+                32 * range.len() as u64
+            };
+            final_bits += bits;
+            final_max = final_max.max(bits);
+        }
+        if m == 1 {
+            // Degenerate single-worker ring: nothing crosses a link.
+            self.hops.push(Hop {
+                label: "loopback".to_string(),
+                bits: final_bits,
+                seconds: 0.0,
+            });
+            step_bits += final_bits;
+        } else {
+            for u in 0..m - 1 {
+                let seconds = net.link_time(final_max);
+                step_bits += final_bits;
+                step_seconds += seconds;
+                self.hops.push(Hop {
+                    label: format!("all-gather[{u}]"),
+                    bits: final_bits,
+                    seconds,
+                });
+            }
+        }
+
+        if quantized {
+            self.codec_seconds += t0.elapsed().as_secs_f64();
+        }
+        self.meter.record_raw(step_bits, step_seconds);
+        step_bits
+    }
+}
+
+impl ExchangeBackend for RingExchange {
+    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        self.exchange_impl(step, grads, agg)
+    }
+
+    fn adapt(&mut self, grads: &[Vec<f32>]) {
+        if !self.session.is_quantized() {
+            return;
+        }
+        let mut rng = self.rngs[0].fork(0xE57);
+        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
+            self.session.refresh_book_from_counts();
+        }
+    }
+
+    fn quantizer(&self) -> Option<&Quantizer> {
+        self.session.quantizer()
+    }
+
+    fn active_workers(&self) -> usize {
+        self.partials.len()
+    }
+
+    fn is_quantized(&self) -> bool {
+        self.session.is_quantized()
+    }
+
+    fn force_clip(&mut self, c: f32) {
+        self.session.force_clip(c);
+    }
+
+    fn meter(&self) -> &Meter {
+        &self.meter
+    }
+
+    fn codec_seconds(&self) -> f64 {
+        self.codec_seconds
+    }
+
+    fn final_levels(&self) -> Option<Vec<f64>> {
+        self.session.final_levels()
+    }
+
+    fn last_hops(&self) -> &[Hop] {
+        &self.hops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::engine::ParallelMode;
+    use super::*;
+    use crate::quant::Codec;
+    use crate::sim::NetworkModel;
+
+    fn config(method: Method, workers: usize) -> ExchangeConfig {
+        ExchangeConfig {
+            method,
+            workers,
+            bits: 3,
+            bucket: 64,
+            seed: 9,
+            network: NetworkModel::paper_testbed(),
+            parallel: ParallelMode::Serial,
+            codec: Codec::Huffman,
+        }
+    }
+
+    fn grads(workers: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..workers)
+            .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn ring_has_2m_minus_2_stages_summing_to_step_total() {
+        let d = 1024; // 16 buckets, no tail
+        for m in [2usize, 4, 8] {
+            let g = grads(m, d, 1);
+            let mut ring = RingExchange::new(config(Method::NuqSgd, m));
+            let mut agg = vec![0.0f32; d];
+            let bits = ExchangeBackend::exchange(&mut ring, 0, &g, &mut agg);
+            let hops = ring.last_hops();
+            assert_eq!(hops.len(), 2 * (m - 1), "M={m}");
+            assert_eq!(hops.iter().map(|h| h.bits).sum::<u64>(), bits, "M={m}");
+            assert!(agg.iter().any(|&x| x != 0.0));
+        }
+    }
+
+    #[test]
+    fn fp32_ring_reduces_to_the_exact_mean_shape() {
+        let d = 200; // 3 buckets + tail 8
+        let m = 4;
+        let g = grads(m, d, 2);
+        let mut ring = RingExchange::new(config(Method::SuperSgd, m));
+        let mut agg = vec![0.0f32; d];
+        let bits = ExchangeBackend::exchange(&mut ring, 0, &g, &mut agg);
+        // fp32 ring: every stage carries 32 bits/coord of the full d.
+        assert_eq!(bits, 2 * (m as u64 - 1) * 32 * d as u64);
+        for i in 0..d {
+            let want = (g[0][i] + g[1][i] + g[2][i] + g[3][i]) / 4.0;
+            assert!((agg[i] - want).abs() < 1e-5, "coord {i}: {} vs {want}", agg[i]);
+        }
+    }
+
+    #[test]
+    fn quantized_ring_is_deterministic_and_unbiased_enough_to_track() {
+        let d = 640;
+        let m = 4;
+        let g = grads(m, d, 3);
+        let run = || {
+            let mut ring = RingExchange::new(config(Method::QsgdInf, m));
+            let mut agg = vec![0.0f32; d];
+            let mut total = 0u64;
+            for step in 0..4 {
+                total += ExchangeBackend::exchange(&mut ring, step, &g, &mut agg);
+            }
+            (total, agg.iter().map(|x| x.to_bits()).collect::<Vec<u32>>())
+        };
+        let (ba, aa) = run();
+        let (bb, ab) = run();
+        assert_eq!(ba, bb);
+        assert_eq!(aa, ab);
+        // The ring estimate tracks the true mean within quantization
+        // noise: correlation with the exact mean must be clearly
+        // positive.
+        let mut ring = RingExchange::new(config(Method::QsgdInf, m));
+        let mut agg = vec![0.0f32; d];
+        ExchangeBackend::exchange(&mut ring, 0, &g, &mut agg);
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..d {
+            let want = (g[0][i] + g[1][i] + g[2][i] + g[3][i]) as f64 / 4.0;
+            dot += want * agg[i] as f64;
+            na += want * want;
+            nb += (agg[i] as f64).powi(2);
+        }
+        let corr = dot / (na.sqrt() * nb.sqrt()).max(1e-30);
+        assert!(corr > 0.5, "ring estimate decorrelated: {corr}");
+    }
+
+    #[test]
+    fn single_quantized_worker_ring_builds_its_book() {
+        // M = 1 skips reduce-scatter; the finalize encode must still
+        // bootstrap the lazy empirical codebook.
+        let d = 256;
+        let g = grads(1, d, 5);
+        let mut ring = RingExchange::new(config(Method::NuqSgd, 1));
+        let mut agg = vec![0.0f32; d];
+        let bits = ExchangeBackend::exchange(&mut ring, 0, &g, &mut agg);
+        assert!(bits > 0);
+        assert_eq!(ring.last_hops().len(), 1);
+    }
+
+    #[test]
+    fn single_worker_ring_is_free() {
+        let d = 256;
+        let g = grads(1, d, 4);
+        let mut ring = RingExchange::new(config(Method::SingleSgd, 1));
+        assert_eq!(ExchangeBackend::active_workers(&ring), 1);
+        let mut agg = vec![0.0f32; d];
+        let bits = ExchangeBackend::exchange(&mut ring, 0, &g, &mut agg);
+        assert_eq!(bits, 32 * d as u64);
+        assert_eq!(ring.meter().total_time, 0.0);
+    }
+}

@@ -1,0 +1,370 @@
+//! Sharded leader lanes: S parameter shards, each gathered and reduced
+//! by its own leader.
+//!
+//! The parameters are partitioned into S bucket-aligned shards
+//! ([`super::shard_buckets`]; the fp32 tail rides with the last shard).
+//! Every worker quantizes its full gradient exactly as the flat engine
+//! does (same per-worker RNG fork pattern, same codebook lifecycle),
+//! then encodes one frame *per shard*; leader lane `s` decodes the M
+//! shard-`s` frames and reduces its slice of the aggregate in worker
+//! order.
+//!
+//! Because the wire layout is bucket-major, the S shard frames of a
+//! worker concatenate to exactly the bits of its whole-frame encode, and
+//! because each coordinate is still reduced in worker order 0..M with
+//! the same decoded values, the aggregate — and therefore the entire
+//! training run — is bit-identical to the flat engine. Sharding changes
+//! *routing* (S parallel leader lanes instead of one all-to-all), not
+//! payload or numerics. `rust/tests/topology_parity.rs` asserts
+//! `params_hash`, per-step bits, and total bits match flat exactly.
+
+use super::super::engine::ExchangeConfig;
+use super::super::session::{CodecSession, ExchangeLane};
+use super::super::ExchangeBackend;
+use super::{shard_buckets, Hop};
+use crate::quant::bitio::BitWriter;
+use crate::quant::{EncodedView, Method, Quantizer};
+use crate::sim::network::Meter;
+use crate::util::Rng;
+
+/// The sharded-leader exchange backend (`--topology sharded:S`).
+pub struct ShardedExchange {
+    cfg: ExchangeConfig,
+    shards: usize,
+    session: CodecSession,
+    rngs: Vec<Rng>,
+    lanes: Vec<ExchangeLane>,
+    /// Scratch lane decoding shard frames on behalf of the leaders.
+    dec_lane: ExchangeLane,
+    /// Scratch writer for per-shard frames (one in flight at a time).
+    writer: BitWriter,
+    bits_scratch: Vec<u64>,
+    hops: Vec<Hop>,
+    meter: Meter,
+    codec_seconds: f64,
+}
+
+impl ShardedExchange {
+    pub fn new(cfg: ExchangeConfig, shards: usize) -> Self {
+        assert!(shards >= 1, "sharded topology needs at least one shard");
+        let mut seeder = Rng::new(cfg.seed);
+        // Identical fork pattern to the flat engine: the determinism
+        // contract that makes sharded ≡ flat bit-for-bit.
+        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
+        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
+        let active = if cfg.method == Method::SingleSgd {
+            1
+        } else {
+            cfg.workers
+        };
+        let lanes = (0..active).map(|_| ExchangeLane::new(cfg.bucket)).collect();
+        ShardedExchange {
+            shards,
+            session,
+            rngs,
+            lanes,
+            dec_lane: ExchangeLane::new(cfg.bucket),
+            writer: BitWriter::new(),
+            bits_scratch: vec![0; active],
+            hops: Vec::new(),
+            meter: Meter::default(),
+            codec_seconds: 0.0,
+            cfg,
+        }
+    }
+
+    /// Encoded bits per worker for the last exchange (Σ over its shard
+    /// frames — equal to the flat engine's whole-frame figure).
+    pub fn bits_per_worker(&self) -> &[u64] {
+        &self.bits_scratch
+    }
+
+    fn exchange_impl(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        let m = self.lanes.len();
+        assert!(
+            grads.len() >= m,
+            "exchange needs one gradient per active lane ({} < {m})",
+            grads.len()
+        );
+        agg.fill(0.0);
+        let net = self.cfg.network;
+
+        if !self.session.is_quantized() {
+            // Full precision: 32·d per worker, reduced in worker order
+            // exactly as the flat engine does; shards split the fp32
+            // payload coordinate-evenly for the hop accounting.
+            let d = agg.len();
+            let mut step_bits = 0u64;
+            for (w, grad) in grads.iter().take(m).enumerate() {
+                self.bits_scratch[w] = 32 * grad.len() as u64;
+                step_bits += self.bits_scratch[w];
+                for (a, &g) in agg.iter_mut().zip(grad) {
+                    *a += g / m as f32;
+                }
+            }
+            self.hops.clear();
+            let mut step_seconds = 0.0f64;
+            for s in 0..self.shards {
+                let lo = s * d / self.shards;
+                let hi = (s + 1) * d / self.shards;
+                let per_worker = 32 * (hi - lo) as u64;
+                let hop_bits = per_worker * m as u64;
+                let seconds = net.fan_time(m.saturating_sub(1), per_worker)
+                    + net.fan_time(m.saturating_sub(1), hop_bits);
+                step_seconds = step_seconds.max(seconds);
+                self.hops.push(Hop {
+                    label: format!("shard{s}"),
+                    bits: hop_bits,
+                    seconds,
+                });
+            }
+            self.meter.record_raw(step_bits, step_seconds);
+            return step_bits;
+        }
+
+        let t0 = std::time::Instant::now();
+        // Codebook lifecycle identical to the flat engine: lazy empirical
+        // book from lane 0's first quantization, sampled symbol counts
+        // every 10th step.
+        let mut lane0_quantized = false;
+        if self.session.needs_book() && self.session.book().is_none() {
+            self.lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
+            self.session.build_empirical_book(self.lanes[0].quantized());
+            lane0_quantized = true;
+        }
+        let sample_counts = self.session.needs_book() && step % 10 == 0;
+
+        for (w, ((lane, rng), grad)) in self
+            .lanes
+            .iter_mut()
+            .zip(self.rngs.iter_mut())
+            .zip(grads)
+            .enumerate()
+        {
+            if !(w == 0 && lane0_quantized) {
+                lane.quantize(&self.session, grad, rng);
+            }
+            if sample_counts {
+                lane.count_symbols(&self.session);
+            }
+        }
+        if sample_counts {
+            // Same worker-order f64 accumulation as the flat engine, so
+            // refreshed codebooks stay bit-identical across topologies.
+            for w in 0..m {
+                self.session.accumulate_counts(self.lanes[w].counts());
+            }
+        }
+
+        let bucket = self.session.bucket();
+        let nb = self.lanes[0].quantized().norms.len();
+        let inv = 1.0 / m as f32;
+        for b in self.bits_scratch.iter_mut() {
+            *b = 0;
+        }
+        let mut step_bits = 0u64;
+        let mut step_seconds = 0.0f64;
+        self.hops.clear();
+
+        for s in 0..self.shards {
+            let buckets = shard_buckets(nb, self.shards, s);
+            let include_tail = s + 1 == self.shards;
+            let coord_lo = buckets.start * bucket;
+            let n_full = buckets.len() * bucket;
+            let mut hop_bits = 0u64;
+            let mut max_bits = 0u64;
+            for w in 0..m {
+                self.writer.clear();
+                let bits = self.lanes[w].encode_shard_into(
+                    &self.session,
+                    buckets.clone(),
+                    include_tail,
+                    &mut self.writer,
+                );
+                self.writer.finish_ref();
+                let n_tail = if include_tail {
+                    self.lanes[w].tail_len()
+                } else {
+                    0
+                };
+                let view = EncodedView {
+                    bytes: self.writer.bytes(),
+                    bits,
+                    n_full,
+                    n_tail,
+                    bucket,
+                };
+                // Leader lane s decodes and reduces its shard, still in
+                // worker order — per-coordinate float ops identical to
+                // the flat reduction.
+                let ghat = self.dec_lane.decode_to_ghat(&self.session, view);
+                for (a, &g) in agg[coord_lo..coord_lo + n_full + n_tail]
+                    .iter_mut()
+                    .zip(ghat)
+                {
+                    *a += g * inv;
+                }
+                self.bits_scratch[w] += bits;
+                hop_bits += bits;
+                max_bits = max_bits.max(bits);
+            }
+            step_bits += hop_bits;
+            // Leader s: serialized fan-in of M−1 shard frames, then a
+            // serialized fan-out relaying the shard's frames down. The S
+            // leader lanes run in parallel → the step pays the slowest.
+            let seconds = net.fan_time(m.saturating_sub(1), max_bits)
+                + net.fan_time(m.saturating_sub(1), hop_bits);
+            step_seconds = step_seconds.max(seconds);
+            self.hops.push(Hop {
+                label: format!("shard{s}"),
+                bits: hop_bits,
+                seconds,
+            });
+        }
+
+        self.codec_seconds += t0.elapsed().as_secs_f64();
+        self.meter.record_raw(step_bits, step_seconds);
+        step_bits
+    }
+}
+
+impl ExchangeBackend for ShardedExchange {
+    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        self.exchange_impl(step, grads, agg)
+    }
+
+    fn adapt(&mut self, grads: &[Vec<f32>]) {
+        if !self.session.is_quantized() {
+            return;
+        }
+        // Same stream the flat engine draws its subsample seed from.
+        let mut rng = self.rngs[0].fork(0xE57);
+        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
+            self.session.refresh_book_from_counts();
+        }
+    }
+
+    fn quantizer(&self) -> Option<&Quantizer> {
+        self.session.quantizer()
+    }
+
+    fn active_workers(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn is_quantized(&self) -> bool {
+        self.session.is_quantized()
+    }
+
+    fn force_clip(&mut self, c: f32) {
+        self.session.force_clip(c);
+    }
+
+    fn meter(&self) -> &Meter {
+        &self.meter
+    }
+
+    fn codec_seconds(&self) -> f64 {
+        self.codec_seconds
+    }
+
+    fn final_levels(&self) -> Option<Vec<f64>> {
+        self.session.final_levels()
+    }
+
+    fn last_hops(&self) -> &[Hop] {
+        &self.hops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::engine::{GradientExchange, ParallelMode};
+    use super::*;
+    use crate::quant::Codec;
+    use crate::sim::NetworkModel;
+
+    fn config(method: Method, workers: usize) -> ExchangeConfig {
+        ExchangeConfig {
+            method,
+            workers,
+            bits: 3,
+            bucket: 64,
+            seed: 9,
+            network: NetworkModel::paper_testbed(),
+            parallel: ParallelMode::Serial,
+            codec: Codec::Huffman,
+        }
+    }
+
+    fn grads(workers: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..workers)
+            .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn sharded_aggregate_and_bits_match_flat_exactly() {
+        let d = 1000; // 15 buckets + tail of 40
+        let g = grads(4, d, 1);
+        for shards in [1usize, 2, 3, 5] {
+            let mut flat = GradientExchange::new(config(Method::Alq, 4));
+            let mut shrd = ShardedExchange::new(config(Method::Alq, 4), shards);
+            let mut agg_f = vec![0.0f32; d];
+            let mut agg_s = vec![0.0f32; d];
+            for step in 0..12 {
+                if step == 5 {
+                    ExchangeBackend::adapt(&mut flat, &g);
+                    shrd.adapt(&g);
+                }
+                let bf = flat.exchange(step, &g, &mut agg_f);
+                let bs = ExchangeBackend::exchange(&mut shrd, step, &g, &mut agg_s);
+                assert_eq!(bf, bs, "shards={shards} step={step} bits");
+                assert_eq!(flat.bits_per_worker(), shrd.bits_per_worker());
+                let fb: Vec<u32> = agg_f.iter().map(|x| x.to_bits()).collect();
+                let sb: Vec<u32> = agg_s.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(fb, sb, "shards={shards} step={step} aggregate");
+            }
+            assert_eq!(
+                ExchangeBackend::final_levels(&shrd),
+                flat.final_levels(),
+                "shards={shards}"
+            );
+            assert_eq!(shrd.meter().total_bits, flat.meter().total_bits);
+        }
+    }
+
+    #[test]
+    fn hop_bits_sum_to_step_total() {
+        let d = 2000;
+        let g = grads(4, d, 2);
+        let mut shrd = ShardedExchange::new(config(Method::NuqSgd, 4), 3);
+        let mut agg = vec![0.0f32; d];
+        for step in 0..5 {
+            let bits = ExchangeBackend::exchange(&mut shrd, step, &g, &mut agg);
+            let hop_sum: u64 = shrd.last_hops().iter().map(|h| h.bits).sum();
+            assert_eq!(hop_sum, bits, "step {step}");
+            assert_eq!(shrd.last_hops().len(), 3);
+        }
+    }
+
+    #[test]
+    fn full_precision_sharded_matches_flat_mean() {
+        let d = 333;
+        let g = grads(3, d, 3);
+        let mut flat = GradientExchange::new(config(Method::SuperSgd, 3));
+        let mut shrd = ShardedExchange::new(config(Method::SuperSgd, 3), 2);
+        let mut agg_f = vec![0.0f32; d];
+        let mut agg_s = vec![0.0f32; d];
+        let bf = flat.exchange(0, &g, &mut agg_f);
+        let bs = ExchangeBackend::exchange(&mut shrd, 0, &g, &mut agg_s);
+        assert_eq!(bf, bs);
+        assert_eq!(bs, 3 * 32 * d as u64);
+        for i in 0..d {
+            assert_eq!(agg_f[i].to_bits(), agg_s[i].to_bits());
+        }
+        let hop_sum: u64 = shrd.last_hops().iter().map(|h| h.bits).sum();
+        assert_eq!(hop_sum, bs);
+    }
+}

@@ -1,0 +1,398 @@
+//! Hierarchical two-level tree: G groups reduce locally, group leaders
+//! exchange encoded partial aggregates, then broadcast down.
+//!
+//! Schedule (quantized payloads at every hop, per-hop bit metering):
+//!
+//! 1. **up** — every worker quantizes + encodes its gradient (identical
+//!    per-worker RNG fork pattern and codebook lifecycle as the flat
+//!    engine); each group leader decodes its members' frames and forms
+//!    the group's partial mean contribution `Σ ĝ_w / M`.
+//! 2. **xchg** — each leader *re-quantizes* its partial aggregate with
+//!    its own RNG stream, encodes it, and the G leaders exchange these
+//!    frames all-to-all.
+//! 3. **down** — the G leader frames are broadcast to every member; all
+//!    workers decode them and sum the G partials into the aggregate.
+//!
+//! The up-level re-quantization necessarily changes the reduction
+//! numerics relative to the flat all-to-all (Σ_g Q(Σ_{w∈g} ĝ_w/M)
+//! instead of Σ_w ĝ_w/M), so the tree's determinism contract is a
+//! per-seed `params_hash` golden — bit-identical across runs and
+//! replicas, but a *different* fixed point than flat — asserted in
+//! `rust/tests/topology_parity.rs`. In exchange, the bits crossing the
+//! top level shrink from M to G frames: the schedule the QSGD lineage
+//! prescribes once M outgrows one switch.
+
+use super::super::engine::ExchangeConfig;
+use super::super::session::{CodecSession, ExchangeLane};
+use super::super::ExchangeBackend;
+use super::{group_members, Hop};
+use crate::quant::{Method, Quantizer};
+use crate::sim::network::Meter;
+use crate::util::Rng;
+
+/// The two-level tree exchange backend (`--topology tree:G`).
+pub struct HierarchicalExchange {
+    cfg: ExchangeConfig,
+    groups: usize,
+    session: CodecSession,
+    rngs: Vec<Rng>,
+    lanes: Vec<ExchangeLane>,
+    /// One codec lane per group leader (partial-aggregate frames).
+    leader_lanes: Vec<ExchangeLane>,
+    /// Scratch: one group's partial mean contribution.
+    partial: Vec<f32>,
+    hops: Vec<Hop>,
+    meter: Meter,
+    codec_seconds: f64,
+}
+
+impl HierarchicalExchange {
+    pub fn new(cfg: ExchangeConfig, groups: usize) -> Self {
+        assert!(groups >= 1, "tree topology needs at least one group");
+        let mut seeder = Rng::new(cfg.seed);
+        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
+        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
+        let active = if cfg.method == Method::SingleSgd {
+            1
+        } else {
+            cfg.workers
+        };
+        // A group needs at least one member; SingleSGD collapses to one
+        // lane, so clamp rather than reject (config validation already
+        // rejects tree:G > workers at the CLI).
+        let groups = groups.min(active);
+        let lanes = (0..active).map(|_| ExchangeLane::new(cfg.bucket)).collect();
+        let leader_lanes = (0..groups).map(|_| ExchangeLane::new(cfg.bucket)).collect();
+        HierarchicalExchange {
+            groups,
+            session,
+            rngs,
+            lanes,
+            leader_lanes,
+            partial: Vec::new(),
+            hops: Vec::new(),
+            meter: Meter::default(),
+            codec_seconds: 0.0,
+            cfg,
+        }
+    }
+
+    fn exchange_impl(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        let m = self.lanes.len();
+        assert!(
+            grads.len() >= m,
+            "exchange needs one gradient per active lane ({} < {m})",
+            grads.len()
+        );
+        agg.fill(0.0);
+        let d = agg.len();
+        if self.partial.len() != d {
+            self.partial.resize(d, 0.0);
+        }
+        let net = self.cfg.network;
+        let groups = self.groups;
+        let inv = 1.0 / m as f32;
+
+        if !self.session.is_quantized() {
+            // Full precision: raw fp32 frames up, fp32 partials across
+            // and down. The two-level association (Σ_g (Σ_{w∈g} g/M))
+            // differs from flat's flat sum — the same schedule change the
+            // quantized path makes, without codec noise.
+            for g in 0..groups {
+                let members = group_members(m, groups, g);
+                self.partial.fill(0.0);
+                for w in members {
+                    for (p, &x) in self.partial.iter_mut().zip(&grads[w]) {
+                        *p += x * inv;
+                    }
+                }
+                for (a, &p) in agg.iter_mut().zip(&self.partial) {
+                    *a += p;
+                }
+            }
+            let up_bits = 32 * d as u64 * m as u64;
+            let lead_bits = 32 * d as u64 * groups as u64;
+            let (up_s, xchg_s, down_s) = self.fp_hop_seconds(m, groups, 32 * d as u64, lead_bits);
+            self.push_level_hops(up_bits, lead_bits, up_s, xchg_s, down_s);
+            let step_bits = up_bits + 2 * lead_bits;
+            self.meter.record_raw(step_bits, up_s + xchg_s + down_s);
+            return step_bits;
+        }
+
+        let t0 = std::time::Instant::now();
+        // Member stage: identical codebook lifecycle to the flat engine.
+        let mut lane0_quantized = false;
+        if self.session.needs_book() && self.session.book().is_none() {
+            self.lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
+            self.session.build_empirical_book(self.lanes[0].quantized());
+            lane0_quantized = true;
+        }
+        let sample_counts = self.session.needs_book() && step % 10 == 0;
+
+        // 1. up — every member quantizes, encodes, and (loopback-)decodes
+        // its own frame; the leader reduces the decoded estimates.
+        let mut up_bits = 0u64;
+        let mut up_seconds = 0.0f64;
+        for (w, ((lane, rng), grad)) in self
+            .lanes
+            .iter_mut()
+            .zip(self.rngs.iter_mut())
+            .zip(grads)
+            .enumerate()
+        {
+            if !(w == 0 && lane0_quantized) {
+                lane.quantize(&self.session, grad, rng);
+            }
+            if sample_counts {
+                lane.count_symbols(&self.session);
+            }
+            up_bits += lane.encode(&self.session);
+            lane.decode_own(&self.session);
+        }
+        if sample_counts {
+            for w in 0..m {
+                self.session.accumulate_counts(self.lanes[w].counts());
+            }
+        }
+
+        // 2. xchg — leaders re-quantize group partials and exchange.
+        let mut lead_bits = 0u64;
+        let mut max_lead_bits = 0u64;
+        for g in 0..groups {
+            let members = group_members(m, groups, g);
+            let leader = members.start;
+            self.partial.fill(0.0);
+            let mut max_member_bits = 0u64;
+            for w in members.clone() {
+                max_member_bits = max_member_bits.max(self.lanes[w].bits());
+                for (p, &x) in self.partial.iter_mut().zip(self.lanes[w].ghat()) {
+                    *p += x * inv;
+                }
+            }
+            up_seconds =
+                up_seconds.max(net.fan_time(members.len().saturating_sub(1), max_member_bits));
+            // The leader's own RNG stream draws the partial's
+            // quantization noise; only the ciphertext is shared.
+            self.leader_lanes[g].quantize(&self.session, &self.partial, &mut self.rngs[leader]);
+            let bits = self.leader_lanes[g].encode(&self.session);
+            self.leader_lanes[g].decode_own(&self.session);
+            lead_bits += bits;
+            max_lead_bits = max_lead_bits.max(bits);
+        }
+
+        // 3. down — every worker sums the decoded leader partials; the
+        // sim performs the reduction once (all replicas would compute
+        // exactly this sum from exactly these frames).
+        for g in 0..groups {
+            for (a, &x) in agg.iter_mut().zip(self.leader_lanes[g].ghat()) {
+                *a += x;
+            }
+        }
+
+        let xchg_seconds = net.fan_time(groups.saturating_sub(1), max_lead_bits);
+        let mut down_seconds = 0.0f64;
+        for g in 0..groups {
+            let members = group_members(m, groups, g);
+            down_seconds =
+                down_seconds.max(net.fan_time(members.len().saturating_sub(1), lead_bits));
+        }
+        self.push_level_hops(up_bits, lead_bits, up_seconds, xchg_seconds, down_seconds);
+        let step_bits = up_bits + 2 * lead_bits;
+        self.codec_seconds += t0.elapsed().as_secs_f64();
+        self.meter
+            .record_raw(step_bits, up_seconds + xchg_seconds + down_seconds);
+        step_bits
+    }
+
+    /// Analytical hop times for the fp32 path (same shapes as the
+    /// quantized path, uniform frame sizes).
+    fn fp_hop_seconds(
+        &self,
+        m: usize,
+        groups: usize,
+        frame_bits: u64,
+        lead_total: u64,
+    ) -> (f64, f64, f64) {
+        let net = &self.cfg.network;
+        let mut up = 0.0f64;
+        let mut down = 0.0f64;
+        for g in 0..groups {
+            let members = group_members(m, groups, g);
+            up = up.max(net.fan_time(members.len().saturating_sub(1), frame_bits));
+            down = down.max(net.fan_time(members.len().saturating_sub(1), lead_total));
+        }
+        let xchg = net.fan_time(groups.saturating_sub(1), frame_bits);
+        (up, xchg, down)
+    }
+
+    fn push_level_hops(&mut self, up: u64, lead: u64, up_s: f64, xchg_s: f64, down_s: f64) {
+        self.hops.clear();
+        self.hops.push(Hop {
+            label: "up".to_string(),
+            bits: up,
+            seconds: up_s,
+        });
+        self.hops.push(Hop {
+            label: "leader-xchg".to_string(),
+            bits: lead,
+            seconds: xchg_s,
+        });
+        self.hops.push(Hop {
+            label: "down".to_string(),
+            bits: lead,
+            seconds: down_s,
+        });
+    }
+}
+
+impl ExchangeBackend for HierarchicalExchange {
+    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        self.exchange_impl(step, grads, agg)
+    }
+
+    fn adapt(&mut self, grads: &[Vec<f32>]) {
+        if !self.session.is_quantized() {
+            return;
+        }
+        let mut rng = self.rngs[0].fork(0xE57);
+        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
+            self.session.refresh_book_from_counts();
+        }
+    }
+
+    fn quantizer(&self) -> Option<&Quantizer> {
+        self.session.quantizer()
+    }
+
+    fn active_workers(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn is_quantized(&self) -> bool {
+        self.session.is_quantized()
+    }
+
+    fn force_clip(&mut self, c: f32) {
+        self.session.force_clip(c);
+    }
+
+    fn meter(&self) -> &Meter {
+        &self.meter
+    }
+
+    fn codec_seconds(&self) -> f64 {
+        self.codec_seconds
+    }
+
+    fn final_levels(&self) -> Option<Vec<f64>> {
+        self.session.final_levels()
+    }
+
+    fn last_hops(&self) -> &[Hop] {
+        &self.hops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::engine::ParallelMode;
+    use super::*;
+    use crate::quant::Codec;
+    use crate::sim::NetworkModel;
+
+    fn config(method: Method, workers: usize) -> ExchangeConfig {
+        ExchangeConfig {
+            method,
+            workers,
+            bits: 3,
+            bucket: 64,
+            seed: 9,
+            network: NetworkModel::paper_testbed(),
+            parallel: ParallelMode::Serial,
+            codec: Codec::Huffman,
+        }
+    }
+
+    fn grads(workers: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..workers)
+            .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn hop_bits_sum_to_step_total_and_leaders_compress() {
+        let d = 1000;
+        let g = grads(4, d, 1);
+        let mut tree = HierarchicalExchange::new(config(Method::Alq, 4), 2);
+        let mut agg = vec![0.0f32; d];
+        for step in 0..6 {
+            let bits = ExchangeBackend::exchange(&mut tree, step, &g, &mut agg);
+            let hops = tree.last_hops();
+            assert_eq!(hops.len(), 3);
+            assert_eq!(hops.iter().map(|h| h.bits).sum::<u64>(), bits);
+            // 2 leader frames cross the top level instead of 4 member
+            // frames: the tree's raison d'être.
+            assert!(hops[1].bits < hops[0].bits, "step {step}");
+            assert_eq!(hops[1].bits, hops[2].bits);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_but_distinct_from_flat() {
+        use super::super::super::engine::GradientExchange;
+        let d = 600;
+        let g = grads(4, d, 2);
+        let run = || {
+            let mut tree = HierarchicalExchange::new(config(Method::NuqSgd, 4), 2);
+            let mut agg = vec![0.0f32; d];
+            let mut total = 0u64;
+            for step in 0..5 {
+                total += ExchangeBackend::exchange(&mut tree, step, &g, &mut agg);
+            }
+            (total, agg.iter().map(|x| x.to_bits()).collect::<Vec<u32>>())
+        };
+        let (bits_a, agg_a) = run();
+        let (bits_b, agg_b) = run();
+        assert_eq!(bits_a, bits_b);
+        assert_eq!(agg_a, agg_b);
+        // Re-quantized partials ≠ flat's aggregate.
+        let mut flat = GradientExchange::new(config(Method::NuqSgd, 4));
+        let mut agg_f = vec![0.0f32; d];
+        for step in 0..5 {
+            flat.exchange(step, &g, &mut agg_f);
+        }
+        let agg_f: Vec<u32> = agg_f.iter().map(|x| x.to_bits()).collect();
+        assert_ne!(agg_a, agg_f);
+    }
+
+    #[test]
+    fn full_precision_tree_sums_partials() {
+        let d = 256;
+        let g = grads(4, d, 3);
+        let mut tree = HierarchicalExchange::new(config(Method::SuperSgd, 4), 2);
+        let mut agg = vec![0.0f32; d];
+        let bits = ExchangeBackend::exchange(&mut tree, 0, &g, &mut agg);
+        // up 4 frames + 2×2 leader frames of 32·d.
+        assert_eq!(bits, (4 + 4) * 32 * d as u64);
+        // Aggregate ≈ the mean (associativity differs, values agree).
+        for i in 0..d {
+            let want = (g[0][i] + g[1][i] + g[2][i] + g[3][i]) / 4.0;
+            assert!((agg[i] - want).abs() < 1e-5, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn group_of_one_is_allowed() {
+        let d = 300;
+        let g = grads(3, d, 4);
+        let mut tree = HierarchicalExchange::new(config(Method::QsgdInf, 3), 3);
+        let mut agg = vec![0.0f32; d];
+        let bits = ExchangeBackend::exchange(&mut tree, 0, &g, &mut agg);
+        assert!(bits > 0);
+        assert_eq!(
+            tree.last_hops().iter().map(|h| h.bits).sum::<u64>(),
+            bits
+        );
+    }
+}

@@ -122,6 +122,8 @@ pub fn cluster_config(
         variance_every: 0,
         network: NetworkModel::paper_testbed(),
         parallel: ParallelMode::Auto,
+        topology: crate::exchange::TopologySpec::Flat,
+        codec: crate::quant::Codec::Huffman,
     }
 }
 

@@ -67,10 +67,27 @@ const PAPER_MODELS: [(&str, usize, f64, f64); 2] = [
 
 pub fn run(args: &[String]) -> Result<()> {
     let a = ExpArgs::parse(args);
+    // `--topology flat|ring` picks the analytical interconnect charged
+    // for the comm term (ring is the paper's Appendix K.3 default; the
+    // *executable* schedules live in exchange::topology and are measured
+    // by benches/topology.rs).
+    let topology = match args
+        .iter()
+        .position(|x| x == "--topology")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+    {
+        None | Some("ring") => Topology::Ring,
+        Some("flat") => Topology::FlatAllToAll,
+        Some(other) => anyhow::bail!(
+            "bad --topology {other:?}: the timing tables use the analytical flat|ring \
+             closed forms (executable schedules are measured by `cargo bench --bench topology`)"
+        ),
+    };
     let net = NetworkModel {
         alpha: 50e-6,
         beta: 1e9,
-        topology: Topology::Ring,
+        topology,
     };
     let m = 4; // 4 nodes, as in Appendix K.3
     let bits_list: Vec<u32> = if a.full {

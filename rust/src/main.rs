@@ -24,10 +24,13 @@ aqsgd — Adaptive Gradient Quantization for Data-Parallel SGD (NeurIPS 2020)
 USAGE:
   aqsgd train [--method ALQ] [--workers 4] [--bits 3] [--bucket 8192]
               [--iters 3000] [--seed 1] [--model mlp] [--parallel auto|on|off]
+              [--topology flat|sharded:S|tree:G|ring] [--codec huffman|elias]
   aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
   aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
+              [--topology flat|sharded:S|tree:G]
   aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
               [--method ALQ --bits 3 --bucket 512 --seed 42]
+              [--topology flat|sharded:S|tree:G] [--codec huffman|elias]
   aqsgd inspect [--artifacts DIR]
 ";
 
@@ -57,14 +60,17 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     println!(
-        "training: method={} workers={} bits={} bucket={} iters={} model={} exchange={}",
+        "training: method={} workers={} bits={} bucket={} iters={} model={} exchange={} \
+         topology={} codec={}",
         cfg.method,
         cfg.workers,
         cfg.bits,
         cfg.bucket,
         cfg.iters,
         cfg.model,
-        cfg.parallel.name()
+        cfg.parallel.name(),
+        cfg.topology.name(),
+        cfg.codec.name()
     );
     if cfg.model != "mlp" {
         bail!("`train` runs the pure-Rust blobs task; for HLO models see examples/train_lm.rs");
@@ -114,13 +120,33 @@ fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
+fn parse_wire_topology(args: &[String]) -> Result<aqsgd::exchange::TopologySpec> {
+    use aqsgd::exchange::TopologySpec;
+    let topology = match flag(args, "--topology") {
+        Some(v) => TopologySpec::parse(v)
+            .with_context(|| format!("bad --topology {v:?} (flat|sharded:S|tree:G)"))?,
+        None => TopologySpec::Flat,
+    };
+    if topology == TopologySpec::Ring {
+        bail!("--topology ring is a simulation schedule; the TCP runtime supports flat|sharded:S|tree:G");
+    }
+    Ok(topology)
+}
+
 fn cmd_leader(args: &[String]) -> Result<()> {
     let cfg = LeaderConfig {
         bind: flag(args, "--bind").unwrap_or("127.0.0.1:7700").to_string(),
         world: flag(args, "--world").unwrap_or("4").parse()?,
         steps: flag(args, "--iters").unwrap_or("500").parse()?,
+        topology: parse_wire_topology(args)?,
     };
-    println!("leader on {} (world {}, {} steps)", cfg.bind, cfg.world, cfg.steps);
+    println!(
+        "leader on {} (world {}, {} steps, topology {})",
+        cfg.bind,
+        cfg.world,
+        cfg.steps,
+        cfg.topology.name()
+    );
     let bits = run_leader(&cfg)?;
     println!("relayed {bits} payload bits");
     Ok(())
@@ -130,12 +156,30 @@ fn cmd_worker(args: &[String]) -> Result<()> {
     let iters: usize = flag(args, "--iters").unwrap_or("500").parse()?;
     let method = aqsgd::quant::Method::parse(flag(args, "--method").unwrap_or("ALQ"))
         .context("bad --method")?;
+    let codec = match flag(args, "--codec") {
+        Some(v) => aqsgd::quant::Codec::parse(v)
+            .with_context(|| format!("bad --codec {v:?} (huffman|elias)"))?,
+        None => aqsgd::quant::Codec::Huffman,
+    };
+    let bits: u32 = flag(args, "--bits").unwrap_or("3").parse()?;
+    // Same validation the train path applies in RunConfig::validate —
+    // fail before connecting rather than panicking mid-handshake.
+    if codec == aqsgd::quant::Codec::Elias {
+        if let Some(levels) = method.initial_levels(bits) {
+            if !levels.has_zero() {
+                bail!(
+                    "--codec elias needs a zero level to run-length over; \
+                     {method} uses a no-zero level family (keep --codec huffman)"
+                );
+            }
+        }
+    }
     let cfg = WorkerConfig {
         addr: flag(args, "--addr").unwrap_or("127.0.0.1:7700").to_string(),
         worker: flag(args, "--worker").unwrap_or("0").parse()?,
         world: flag(args, "--world").unwrap_or("4").parse()?,
         method,
-        bits: flag(args, "--bits").unwrap_or("3").parse()?,
+        bits,
         bucket: flag(args, "--bucket").unwrap_or("512").parse()?,
         iters,
         lr: LrSchedule::paper_default(0.1, iters),
@@ -143,6 +187,8 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         momentum: 0.9,
         weight_decay: 1e-4,
         seed: flag(args, "--seed").unwrap_or("42").parse()?,
+        topology: parse_wire_topology(args)?,
+        codec,
     };
     let spec = aqsgd::exp::common::ModelSpec::resnet32_standin();
     let mut task = spec.task(cfg.world, 7);

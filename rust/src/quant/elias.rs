@@ -63,9 +63,25 @@ pub fn delta_decode(r: &mut BitReader) -> u64 {
 /// nonzero coordinate the γ-coded gap to the previous nonzero, the
 /// γ-coded magnitude index, and a sign bit. Returns total bits.
 pub fn encode_qsgd_style(q: &QuantizedGrad, levels: &Levels, w: &mut BitWriter) -> u64 {
+    encode_qsgd_style_range(q, levels, 0..q.norms.len(), true, w)
+}
+
+/// Bucket-range variant of [`encode_qsgd_style`] (the sharded topology's
+/// per-shard frames): encodes buckets `[buckets.start, buckets.end)`
+/// plus, iff `include_tail`, the fp32 tail. Like the Huffman layout the
+/// Elias stream is bucket-major, so shard frames of a bucket-aligned
+/// partition concatenate to exactly the whole-frame bits.
+pub fn encode_qsgd_style_range(
+    q: &QuantizedGrad,
+    levels: &Levels,
+    buckets: std::ops::Range<usize>,
+    include_tail: bool,
+    w: &mut BitWriter,
+) -> u64 {
     assert!(levels.has_zero(), "sparse coding needs a zero symbol");
     let start = w.bits_written();
-    for (b, &norm) in q.norms.iter().enumerate() {
+    for b in buckets {
+        let norm = q.norms[b];
         w.push_f32(norm);
         let syms = &q.qidx[b * q.bucket..(b + 1) * q.bucket];
         let mut last = 0usize; // gap baseline (1-indexed gaps)
@@ -87,8 +103,10 @@ pub fn encode_qsgd_style(q: &QuantizedGrad, levels: &Levels, w: &mut BitWriter) 
             last = i + 1;
         }
     }
-    for &t in &q.tail {
-        w.push_f32(t);
+    if include_tail {
+        for &t in &q.tail {
+            w.push_f32(t);
+        }
     }
     w.bits_written() - start
 }
@@ -100,14 +118,34 @@ pub fn decode_qsgd_style(
     n_tail: usize,
     bucket: usize,
 ) -> QuantizedGrad {
-    let mut r = BitReader::new(bytes);
-    let nb = if bucket == 0 { 0 } else { n_full / bucket };
     let mut q = QuantizedGrad {
-        qidx: vec![0i8; n_full],
-        norms: vec![0f32; nb],
-        tail: vec![0f32; n_tail],
+        qidx: Vec::new(),
+        norms: Vec::new(),
+        tail: Vec::new(),
         bucket,
     };
+    decode_qsgd_style_into(bytes, n_full, n_tail, bucket, &mut q);
+    q
+}
+
+/// Decode into a reusable buffer (the exchange lanes' hot path — no
+/// allocation once warm, mirroring `quant::decode_view_into`).
+pub fn decode_qsgd_style_into(
+    bytes: &[u8],
+    n_full: usize,
+    n_tail: usize,
+    bucket: usize,
+    q: &mut QuantizedGrad,
+) {
+    let mut r = BitReader::new(bytes);
+    let nb = if bucket == 0 { 0 } else { n_full / bucket };
+    q.qidx.clear();
+    q.qidx.resize(n_full, 0);
+    q.norms.clear();
+    q.norms.resize(nb, 0.0);
+    q.tail.clear();
+    q.tail.resize(n_tail, 0.0);
+    q.bucket = bucket;
     for b in 0..nb {
         q.norms[b] = r.read_f32();
         let nnz = gamma_decode(&mut r) - 1;
@@ -124,7 +162,6 @@ pub fn decode_qsgd_style(
     for t in q.tail.iter_mut() {
         *t = r.read_f32();
     }
-    q
 }
 
 #[cfg(test)]
@@ -201,6 +238,49 @@ mod tests {
         let bytes = w.finish();
         let got = decode_qsgd_style(&bytes, q.qidx.len(), q.tail.len(), 64);
         assert_eq!(got, q);
+    }
+
+    #[test]
+    fn qsgd_style_shard_frames_concatenate_and_decode() {
+        let levels = Levels::exponential(4, 0.5);
+        let quant = Quantizer::new(levels.clone(), NormType::L2, 64);
+        let mut rng = Rng::new(11);
+        let v: Vec<f32> = (0..700).map(|_| (rng.normal() * 0.01) as f32).collect(); // 10 buckets + tail 60
+        let q = quant.quantize(&v, &mut rng);
+        let mut w = BitWriter::new();
+        let whole = encode_qsgd_style(&q, &levels, &mut w);
+        for shards in [2usize, 3, 5] {
+            let nb = q.norms.len();
+            let mut total = 0u64;
+            for s in 0..shards {
+                let lo = s * nb / shards;
+                let hi = (s + 1) * nb / shards;
+                let last = s + 1 == shards;
+                let mut sw = BitWriter::new();
+                let bits = encode_qsgd_style_range(&q, &levels, lo..hi, last, &mut sw);
+                total += bits;
+                let bytes = sw.finish();
+                let mut dec = QuantizedGrad {
+                    qidx: Vec::new(),
+                    norms: Vec::new(),
+                    tail: Vec::new(),
+                    bucket: 0,
+                };
+                decode_qsgd_style_into(
+                    &bytes,
+                    (hi - lo) * q.bucket,
+                    if last { q.tail.len() } else { 0 },
+                    q.bucket,
+                    &mut dec,
+                );
+                assert_eq!(&dec.qidx[..], &q.qidx[lo * q.bucket..hi * q.bucket]);
+                assert_eq!(&dec.norms[..], &q.norms[lo..hi]);
+                if last {
+                    assert_eq!(dec.tail, q.tail);
+                }
+            }
+            assert_eq!(total, whole, "{shards} shards");
+        }
     }
 
     /// The codec tradeoff the paper's Appendix D navigates: Huffman wins

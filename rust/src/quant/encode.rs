@@ -90,9 +90,28 @@ pub fn encode_into(
     book: &HuffmanBook,
     w: &mut BitWriter,
 ) -> u64 {
+    encode_buckets_into(q, levels, book, 0..q.norms.len(), true, w)
+}
+
+/// Encode a bucket-aligned slice of a quantized gradient: buckets
+/// `[buckets.start, buckets.end)` plus, iff `include_tail`, the fp32
+/// tail. Because the wire layout is strictly bucket-major, the shard
+/// frames of a bucket-aligned partition concatenate to exactly the bits
+/// of the whole-frame [`encode_into`] — the invariant the sharded
+/// exchange topology's bit accounting rests on (asserted in
+/// `rust/tests/topology_parity.rs`).
+pub fn encode_buckets_into(
+    q: &QuantizedGrad,
+    levels: &Levels,
+    book: &HuffmanBook,
+    buckets: std::ops::Range<usize>,
+    include_tail: bool,
+    w: &mut BitWriter,
+) -> u64 {
     let start = w.bits_written();
     let has_zero = levels.has_zero();
-    for (b, &norm) in q.norms.iter().enumerate() {
+    for b in buckets {
+        let norm = q.norms[b];
         w.push_f32(norm);
         let syms = &q.qidx[b * q.bucket..(b + 1) * q.bucket];
         if has_zero {
@@ -115,8 +134,10 @@ pub fn encode_into(
             }
         }
     }
-    for &t in &q.tail {
-        w.push_f32(t);
+    if include_tail {
+        for &t in &q.tail {
+            w.push_f32(t);
+        }
     }
     w.bits_written() - start
 }
@@ -303,6 +324,48 @@ mod tests {
         };
         decode_view_into(e.view(), &levels, &book, &mut via_view);
         assert_eq!(owned, via_view);
+    }
+
+    #[test]
+    fn shard_frames_concatenate_to_whole_frame_bits() {
+        use super::super::bitio::BitWriter;
+        let levels = Levels::exponential(4, 0.5);
+        let quant = Quantizer::new(levels.clone(), NormType::L2, 32);
+        let mut rng = Rng::new(8);
+        let v: Vec<f32> = (0..330).map(|_| rng.normal() as f32).collect(); // 10 buckets + tail 10
+        let q = quant.quantize(&v, &mut rng);
+        let book = HuffmanBook::from_weights(&symbol_counts(&q, &levels));
+        let whole = encode(&q, &levels, &book);
+        for shards in [1usize, 2, 3, 4, 10] {
+            let nb = q.norms.len();
+            let mut total = 0u64;
+            for s in 0..shards {
+                let lo = s * nb / shards;
+                let hi = (s + 1) * nb / shards;
+                let mut w = BitWriter::new();
+                let bits =
+                    encode_buckets_into(&q, &levels, &book, lo..hi, s + 1 == shards, &mut w);
+                // Each shard frame is independently decodable.
+                let view = EncodedView {
+                    bytes: w.finish_ref(),
+                    bits,
+                    n_full: (hi - lo) * q.bucket,
+                    n_tail: if s + 1 == shards { q.tail.len() } else { 0 },
+                    bucket: q.bucket,
+                };
+                let mut dec = QuantizedGrad {
+                    qidx: vec![],
+                    norms: vec![],
+                    tail: vec![],
+                    bucket: 0,
+                };
+                decode_view_into(view, &levels, &book, &mut dec);
+                assert_eq!(&dec.qidx[..], &q.qidx[lo * q.bucket..hi * q.bucket]);
+                assert_eq!(&dec.norms[..], &q.norms[lo..hi]);
+                total += bits;
+            }
+            assert_eq!(total, whole.bits, "{shards} shards");
+        }
     }
 
     #[test]

@@ -22,13 +22,46 @@ pub mod schemes;
 pub mod theory;
 
 pub use encode::{
-    decode, decode_into, decode_view_into, encode, encode_into, symbol_counts, EncodedGrad,
-    EncodedView,
+    decode, decode_into, decode_view_into, encode, encode_buckets_into, encode_into,
+    symbol_counts, EncodedGrad, EncodedView,
 };
 pub use huffman::{smooth_weights, HuffmanBook};
 pub use levels::Levels;
 pub use quantizer::{QuantizedGrad, Quantizer};
 pub use schemes::Method;
+
+/// Entropy coder for the quantized symbol stream. The paper's Appendix D
+/// argues for Huffman codes over the level alphabet; the original QSGD
+/// [20] used Elias integer codes over nonzero positions. Both are
+/// implemented ([`huffman`] / [`elias`]) and selectable per run
+/// (`--codec`), so the coding choice is a runnable ablation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    /// Canonical Huffman over level symbols (Appendix D; needs a shared
+    /// codebook, wins whenever the symbol distribution is skewed).
+    #[default]
+    Huffman,
+    /// Elias-γ gap/magnitude coding of nonzeros (QSGD-style; needs no
+    /// codebook but a zero level, wins in the ultra-sparse regime).
+    Elias,
+}
+
+impl Codec {
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s.to_ascii_lowercase().as_str() {
+            "huffman" => Some(Codec::Huffman),
+            "elias" => Some(Codec::Elias),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Huffman => "huffman",
+            Codec::Elias => "elias",
+        }
+    }
+}
 
 /// Normalization applied per bucket before quantization.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,6 +89,14 @@ pub fn bucket_norm(v: &[f32], norm_type: NormType) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn codec_parses() {
+        assert_eq!(Codec::parse("huffman"), Some(Codec::Huffman));
+        assert_eq!(Codec::parse("Elias"), Some(Codec::Elias));
+        assert_eq!(Codec::parse("arithmetic"), None);
+        assert_eq!(Codec::default().name(), "huffman");
+    }
 
     #[test]
     fn norms() {

@@ -64,6 +64,20 @@ impl NetworkModel {
     pub fn fp32_step_time(&self, d: usize, m: usize) -> f64 {
         self.step_time(&vec![32 * d as u64; m])
     }
+
+    /// One message of `bits` over one link: α + bits/β. The primitive
+    /// the executable topology schedules charge per hop
+    /// (`exchange::topology`), in contrast to the closed-form
+    /// [`NetworkModel::step_time`] used by the flat engine.
+    pub fn link_time(&self, bits: u64) -> f64 {
+        self.alpha + bits as f64 / self.beta
+    }
+
+    /// Serialized fan-in (or fan-out) of `n` messages of worst-case
+    /// size `max_bits` through a single endpoint: n · (α + max/β).
+    pub fn fan_time(&self, n: usize, max_bits: u64) -> f64 {
+        n as f64 * self.link_time(max_bits)
+    }
 }
 
 /// Running communication meter for a training run.
@@ -78,6 +92,15 @@ impl Meter {
     pub fn record(&mut self, net: &NetworkModel, bits_per_worker: &[u64]) {
         self.total_bits += bits_per_worker.iter().sum::<u64>();
         self.total_time += net.step_time(bits_per_worker);
+        self.steps += 1;
+    }
+
+    /// Record a step whose bits and seconds were already metered per hop
+    /// by an executable topology schedule (the analytical closed-form
+    /// path is [`Meter::record`]).
+    pub fn record_raw(&mut self, bits: u64, seconds: f64) {
+        self.total_bits += bits;
+        self.total_time += seconds;
         self.steps += 1;
     }
 
@@ -145,6 +168,62 @@ mod tests {
         let t4 = n.step_time(&[8_000_000; 4]);
         let t16 = n.step_time(&[8_000_000; 16]);
         assert!(t16 < t4 * 1.4, "{t16} vs {t4}");
+    }
+
+    #[test]
+    fn flat_all_to_all_matches_hand_computation() {
+        // M = 4 workers of 1 Mbit each on the paper testbed
+        // (α = 50 µs, β = 1 Gbit/s):
+        //   (M−1) · (α + bits/β) = 3 · (50e-6 + 1e6/1e9) = 3.15 ms.
+        let n = NetworkModel {
+            alpha: 50e-6,
+            beta: 1e9,
+            topology: Topology::FlatAllToAll,
+        };
+        let t = n.step_time(&[1_000_000; 4]);
+        assert!((t - 3.15e-3).abs() < 1e-12, "{t}");
+        // Heterogeneous payloads are charged at the straggler's size.
+        let t = n.step_time(&[1_000_000, 250_000, 500_000, 100_000]);
+        assert!((t - 3.15e-3).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn ring_matches_hand_computation() {
+        // Ring, M = 4, 1 Mbit payloads: 2(M−1) = 6 stages of payload/M:
+        //   6·α + (6/4)·1e6/1e9 = 3.0e-4 + 1.5e-3 = 1.8 ms.
+        let n = NetworkModel {
+            alpha: 50e-6,
+            beta: 1e9,
+            topology: Topology::Ring,
+        };
+        let t = n.step_time(&[1_000_000; 4]);
+        assert!((t - 1.8e-3).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn link_and_fan_time_primitives() {
+        let n = NetworkModel {
+            alpha: 50e-6,
+            beta: 1e9,
+            topology: Topology::FlatAllToAll,
+        };
+        // α + bits/β = 50e-6 + 1e-3.
+        assert!((n.link_time(1_000_000) - 1.05e-3).abs() < 1e-15);
+        // 3 serialized messages through one endpoint.
+        assert!((n.fan_time(3, 1_000_000) - 3.15e-3).abs() < 1e-15);
+        assert_eq!(n.fan_time(0, 1_000_000), 0.0);
+        // The flat closed form is exactly a fan over M−1 links.
+        assert_eq!(n.step_time(&[1_000_000; 4]), n.fan_time(3, 1_000_000));
+    }
+
+    #[test]
+    fn meter_record_raw_accumulates() {
+        let mut m = Meter::default();
+        m.record_raw(1000, 0.25);
+        m.record_raw(500, 0.5);
+        assert_eq!(m.total_bits, 1500);
+        assert_eq!(m.steps, 2);
+        assert!((m.total_time - 0.75).abs() < 1e-15);
     }
 
     #[test]

@@ -262,6 +262,8 @@ fn engine_and_coordinator_bits_agree_qualitatively() {
                 momentum: 0.9,
                 weight_decay: 1e-4,
                 seed: 11,
+                topology: aqsgd::exchange::TopologySpec::Flat,
+                codec: aqsgd::quant::Codec::Huffman,
             };
             let mut t = task(world, 7);
             run_worker(&cfg, &mut t).unwrap()

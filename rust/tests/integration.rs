@@ -42,6 +42,8 @@ fn quantized_training_over_hlo_model() {
         variance_every: 0,
         network: NetworkModel::paper_testbed(),
         parallel: aqsgd::exchange::ParallelMode::Auto,
+        topology: aqsgd::exchange::TopologySpec::Flat,
+        codec: aqsgd::quant::Codec::Huffman,
     };
     let rec = Cluster::new(cfg).train(&mut task);
     let first = rec.steps.first().unwrap().train_loss;
@@ -161,6 +163,8 @@ fn cluster_and_coordinator_agree_qualitatively() {
                 momentum: 0.9,
                 weight_decay: 1e-4,
                 seed: 11,
+                topology: aqsgd::exchange::TopologySpec::Flat,
+                codec: aqsgd::quant::Codec::Huffman,
             };
             let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 11);
             let mut task = MlpTask::new(Mlp::new(vec![32, 64, 10]), blobs, 16, world, 11);

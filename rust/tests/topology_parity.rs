@@ -1,0 +1,310 @@
+//! Topology-subsystem parity and metering contracts (ISSUE 2):
+//!
+//! * **Sharded ≡ flat, bit for bit.** Sharding re-routes frames without
+//!   touching payload or reduction order, so `params_hash`, per-step
+//!   bits, adapted levels, and total bits must reproduce the flat
+//!   engine exactly — and the sharded hop meter must sum to the flat
+//!   engine's per-step totals.
+//! * **Tree and ring are per-seed goldens.** Their schedules re-quantize
+//!   partial aggregates (tree: at the leader level; ring: every
+//!   reduce-scatter hop), so the reduction order necessarily differs
+//!   from flat; the contract is bit-determinism per seed, replica
+//!   agreement, and a trajectory that still learns.
+//! * **Hop self-consistency.** For every topology, Σ per-hop metered
+//!   bits equals the step total returned by `exchange()` and
+//!   accumulated by the meter.
+//! * **Selectable everywhere.** `--topology` flows through the sim CLI
+//!   config and the TCP coordinator (leader relay modes + workers).
+
+use aqsgd::config::RunConfig;
+use aqsgd::coordinator::leader::run_leader_topo;
+use aqsgd::coordinator::{run_worker, WorkerConfig};
+use aqsgd::data::Blobs;
+use aqsgd::exchange::{
+    make_backend, ExchangeBackend, ExchangeConfig, ParallelMode, TopologySpec,
+};
+use aqsgd::model::{Mlp, MlpTask};
+use aqsgd::opt::{LrSchedule, UpdateSchedule};
+use aqsgd::quant::{Codec, Method};
+use aqsgd::sim::{Cluster, ClusterConfig, NetworkModel};
+use aqsgd::util::Rng;
+use std::net::TcpListener;
+
+fn task(workers: usize, seed: u64) -> MlpTask {
+    let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, seed);
+    MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, workers, seed)
+}
+
+fn config(method: Method, iters: usize, topology: TopologySpec) -> ClusterConfig {
+    let mut cfg = ClusterConfig::paper_default(method, iters);
+    cfg.bucket = 128;
+    cfg.eval_every = 0;
+    cfg.seed = 5;
+    cfg.updates = UpdateSchedule::at(vec![3, 15], 30, 15);
+    cfg.topology = topology;
+    cfg
+}
+
+#[test]
+fn sharded_reproduces_flat_bit_for_bit() {
+    for method in [Method::Alq, Method::NuqSgd] {
+        let flat = Cluster::new(config(method, 40, TopologySpec::Flat)).train(&mut task(4, 3));
+        for shards in [2usize, 3] {
+            let rec = Cluster::new(config(method, 40, TopologySpec::Sharded(shards)))
+                .train(&mut task(4, 3));
+            assert_eq!(rec.params_hash, flat.params_hash, "{method} S={shards}");
+            assert_eq!(rec.comm_bits, flat.comm_bits, "{method} S={shards}");
+            assert_eq!(
+                rec.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+                flat.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+                "{method} S={shards} per-step bits"
+            );
+            assert_eq!(rec.final_levels, flat.final_levels, "{method} S={shards}");
+        }
+    }
+}
+
+#[test]
+fn tree_and_ring_are_per_seed_goldens() {
+    for topology in [TopologySpec::Tree(2), TopologySpec::Ring] {
+        let a = Cluster::new(config(Method::QsgdInf, 30, topology)).train(&mut task(4, 3));
+        let b = Cluster::new(config(Method::QsgdInf, 30, topology)).train(&mut task(4, 3));
+        // Bit-deterministic per seed.
+        assert_eq!(a.params_hash, b.params_hash, "{}", topology.name());
+        assert_eq!(a.comm_bits, b.comm_bits, "{}", topology.name());
+        assert_eq!(a.final_levels, b.final_levels, "{}", topology.name());
+        // A different seed is a different run.
+        let mut cfg = config(Method::QsgdInf, 30, topology);
+        cfg.seed = 6;
+        let c = Cluster::new(cfg).train(&mut task(4, 3));
+        assert_ne!(a.params_hash, c.params_hash, "{}", topology.name());
+        // Re-quantized partials: a genuinely different reduction order
+        // than flat (which is why these are goldens, not flat parity).
+        let flat = Cluster::new(config(Method::QsgdInf, 30, TopologySpec::Flat))
+            .train(&mut task(4, 3));
+        assert_ne!(a.params_hash, flat.params_hash, "{}", topology.name());
+    }
+}
+
+#[test]
+fn tree_and_ring_still_learn() {
+    for topology in [TopologySpec::Tree(2), TopologySpec::Ring] {
+        let mut cfg = config(Method::QsgdInf, 300, topology);
+        cfg.updates = UpdateSchedule::at(vec![1, 25], 100, 25);
+        let rec = Cluster::new(cfg).train(&mut task(4, 7));
+        let first = rec.steps.first().unwrap().train_loss;
+        let last: f64 =
+            rec.steps.iter().rev().take(10).map(|s| s.train_loss).sum::<f64>() / 10.0;
+        assert!(
+            last < first * 0.7,
+            "{}: loss {first} -> {last}",
+            topology.name()
+        );
+        assert!(rec.final_eval.accuracy > 0.5, "{}", topology.name());
+    }
+}
+
+/// Σ per-hop bits == step total == meter accumulation, for every
+/// topology, on raw backends driven directly.
+#[test]
+fn hop_bits_sum_to_step_totals_for_every_topology() {
+    let d = 1500; // 11 buckets of 128 + tail 92
+    let workers = 4;
+    let mut rng = Rng::new(1);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+        .collect();
+    for topology in [
+        TopologySpec::Flat,
+        TopologySpec::Sharded(3),
+        TopologySpec::Tree(2),
+        TopologySpec::Ring,
+    ] {
+        let cfg = ExchangeConfig {
+            method: Method::Alq,
+            workers,
+            bits: 3,
+            bucket: 128,
+            seed: 9,
+            network: NetworkModel::paper_testbed(),
+            parallel: ParallelMode::Serial,
+            codec: Codec::Huffman,
+        };
+        let mut backend = make_backend(cfg, topology);
+        let mut agg = vec![0.0f32; d];
+        let mut accumulated = 0u64;
+        for step in 0..8 {
+            if step == 4 {
+                backend.adapt(&grads);
+            }
+            let bits = backend.exchange(step, &grads, &mut agg);
+            let hops = backend.last_hops();
+            assert!(!hops.is_empty(), "{}", topology.name());
+            assert_eq!(
+                hops.iter().map(|h| h.bits).sum::<u64>(),
+                bits,
+                "{} step {step}",
+                topology.name()
+            );
+            assert!(
+                hops.iter().all(|h| h.seconds >= 0.0),
+                "{}",
+                topology.name()
+            );
+            accumulated += bits;
+        }
+        assert_eq!(
+            backend.meter().total_bits,
+            accumulated,
+            "{}",
+            topology.name()
+        );
+        assert!(backend.meter().total_time > 0.0, "{}", topology.name());
+    }
+}
+
+/// The satellite requirement spelled out: the new sharded backend's
+/// per-hop meter sums to the *flat engine's* existing per-step totals.
+#[test]
+fn sharded_hops_sum_to_flat_engine_step_totals() {
+    let d = 2000;
+    let workers = 4;
+    let mut rng = Rng::new(2);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+        .collect();
+    let cfg = ExchangeConfig {
+        method: Method::NuqSgd,
+        workers,
+        bits: 3,
+        bucket: 128,
+        seed: 11,
+        network: NetworkModel::paper_testbed(),
+        parallel: ParallelMode::Serial,
+        codec: Codec::Huffman,
+    };
+    let mut flat = make_backend(cfg.clone(), TopologySpec::Flat);
+    let mut shrd = make_backend(cfg, TopologySpec::Sharded(4));
+    let mut agg = vec![0.0f32; d];
+    for step in 0..6 {
+        let flat_bits = flat.exchange(step, &grads, &mut agg);
+        let _ = shrd.exchange(step, &grads, &mut agg);
+        let shard_hop_sum: u64 = shrd.last_hops().iter().map(|h| h.bits).sum();
+        assert_eq!(shard_hop_sum, flat_bits, "step {step}");
+    }
+}
+
+#[test]
+fn ring_has_the_analytical_stage_structure() {
+    let d = 1280; // exactly 10 buckets, no tail
+    for workers in [4usize, 8] {
+        let mut rng = Rng::new(3);
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+            .collect();
+        let cfg = ExchangeConfig {
+            method: Method::QsgdInf,
+            workers,
+            bits: 3,
+            bucket: 128,
+            seed: 4,
+            network: NetworkModel::paper_testbed(),
+            parallel: ParallelMode::Serial,
+            codec: Codec::Huffman,
+        };
+        let mut ring = make_backend(cfg, TopologySpec::Ring);
+        let mut agg = vec![0.0f32; d];
+        ring.exchange(0, &grads, &mut agg);
+        let hops = ring.last_hops();
+        // 2(M−1) stages, half reduce-scatter, half all-gather.
+        assert_eq!(hops.len(), 2 * (workers - 1), "M={workers}");
+        assert_eq!(
+            hops.iter()
+                .filter(|h| h.label.starts_with("reduce-scatter"))
+                .count(),
+            workers - 1
+        );
+        assert_eq!(
+            hops.iter()
+                .filter(|h| h.label.starts_with("all-gather"))
+                .count(),
+            workers - 1
+        );
+    }
+}
+
+#[test]
+fn topology_selectable_from_the_sim_cli_config() {
+    let args = |s: &str| s.split_whitespace().map(String::from).collect::<Vec<_>>();
+    let c = RunConfig::from_args(&args("--topology sharded:4")).unwrap();
+    assert_eq!(c.cluster().topology, TopologySpec::Sharded(4));
+    let c = RunConfig::from_args(&args("--topology tree:2 --iters 1")).unwrap();
+    assert_eq!(c.cluster().topology, TopologySpec::Tree(2));
+    let c = RunConfig::from_args(&args("--topology ring")).unwrap();
+    assert_eq!(c.cluster().topology, TopologySpec::Ring);
+    assert!(RunConfig::from_args(&args("--topology hypercube")).is_err());
+    // The codec ablation rides the same config surface.
+    let c = RunConfig::from_args(&args("--codec elias")).unwrap();
+    assert_eq!(c.cluster().codec, Codec::Elias);
+}
+
+fn spawn_tcp(
+    method: Method,
+    iters: usize,
+    world: usize,
+    topology: TopologySpec,
+) -> Vec<aqsgd::coordinator::WorkerReport> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader =
+        std::thread::spawn(move || run_leader_topo(listener, world, iters, topology).unwrap());
+    let mut handles = Vec::new();
+    for w in 0..world {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                addr,
+                worker: w,
+                world,
+                method,
+                bits: 3,
+                bucket: 128,
+                iters,
+                lr: LrSchedule::paper_default(0.1, iters),
+                updates: UpdateSchedule::at(vec![3, 15], 30, 15),
+                momentum: 0.9,
+                weight_decay: 1e-4,
+                seed: 42,
+                topology,
+                codec: Codec::Huffman,
+            };
+            let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, 7);
+            let mut t = MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, world, 7);
+            run_worker(&cfg, &mut t).unwrap()
+        }));
+    }
+    let reports = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    leader.join().unwrap();
+    reports
+}
+
+/// `--topology` is selectable on the TCP coordinator, and the sharded
+/// relay reproduces the flat relay bit for bit (acceptance criterion).
+#[test]
+fn tcp_topologies_are_selectable_and_sharded_matches_flat() {
+    let flat = spawn_tcp(Method::Alq, 30, 4, TopologySpec::Flat);
+    let sharded = spawn_tcp(Method::Alq, 30, 4, TopologySpec::Sharded(3));
+    let tree = spawn_tcp(Method::Alq, 30, 4, TopologySpec::Tree(2));
+    for reports in [&flat, &sharded, &tree] {
+        for r in reports.iter() {
+            assert_eq!(r.params_hash, reports[0].params_hash, "replica divergence");
+        }
+    }
+    assert_eq!(flat[0].params_hash, sharded[0].params_hash);
+    assert_eq!(flat[0].final_levels, sharded[0].final_levels);
+    for (f, s) in flat.iter().zip(&sharded) {
+        assert_eq!(f.sent_bits, s.sent_bits);
+    }
+    // Tree replicas agree with each other but follow their own golden.
+    assert_ne!(tree[0].params_hash, flat[0].params_hash);
+}
