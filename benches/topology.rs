@@ -1,10 +1,17 @@
-//! Bench: the executable exchange topologies — wall-clock step time,
-//! total metered bits, and modeled α-β network seconds across
-//! M ∈ {4, 8, 16} workers for flat, sharded, tree, and ring schedules
-//! (the EXPERIMENTS.md topology scaling table).
+//! Bench: the executable exchange topologies — serial vs parallel
+//! wall-clock step time, total metered bits, and modeled α-β network
+//! seconds across M ∈ {4, 8, 16} workers for flat, sharded, tree, and
+//! ring schedules (the EXPERIMENTS.md topology + parallel scaling
+//! tables).
 //!
 //! What to look for:
 //! * sharded meters exactly the flat bit total (routing, not payload);
+//! * `--parallel on` (the "par µs" column) beats "ser µs" for flat,
+//!   sharded, and tree — the member stage and the shard/group leader
+//!   lanes fan out across threads with bit-identical results (the
+//!   bits/step column is asserted equal across modes);
+//! * ring's two columns match: its 2(M−1)-stage schedule is a serial
+//!   dependency chain, so `--parallel` is a documented no-op there;
 //! * tree's top-level hop carries G frames instead of M — its modeled
 //!   network time flattens as M grows;
 //! * ring's modeled time per worker stays near-constant in M while its
@@ -17,7 +24,7 @@ use aqsgd::sim::{NetworkModel, Topology};
 use aqsgd::util::Rng;
 use bench_util::{header, time_per_call};
 
-fn config(workers: usize, topo: TopologySpec) -> ExchangeConfig {
+fn config(workers: usize, topo: TopologySpec, parallel: ParallelMode) -> ExchangeConfig {
     // The flat engine charges the analytical closed form of
     // `network.topology`; pin it to the flat all-to-all fabric so the
     // flat row is comparable to the per-link-metered schedules (the
@@ -37,14 +44,42 @@ fn config(workers: usize, topo: TopologySpec) -> ExchangeConfig {
         bucket: 8192,
         seed: 1,
         network,
-        parallel: ParallelMode::Serial,
+        parallel,
         codec: Codec::Huffman,
     }
 }
 
+/// Measure one (topology, mode) cell: seconds per step plus the meter
+/// aggregates after the timed run.
+fn run_cell(
+    workers: usize,
+    topo: TopologySpec,
+    mode: ParallelMode,
+    grads: &[Vec<f32>],
+    agg: &mut [f32],
+) -> (f64, u64, f64, usize) {
+    let mut backend = make_backend(config(workers, topo, mode), topo);
+    let mut step = 0usize;
+    let wall = time_per_call(
+        || {
+            backend.exchange(step, grads, agg);
+            step += 1;
+        },
+        300,
+    );
+    let hops = backend.last_hops().len();
+    let steps = backend.meter().steps.max(1);
+    let bits_per_step = backend.meter().total_bits / steps;
+    let net_ms = backend.meter().total_time / steps as f64 * 1e3;
+    (wall, bits_per_step, net_ms, hops)
+}
+
 fn main() {
     let d = 1 << 18;
-    println!("topology scaling: ALQ @ 3 bits, d = 2^18, paper testbed network");
+    println!(
+        "topology scaling, serial vs parallel lanes: ALQ @ 3 bits, d = 2^18, \
+         paper testbed network"
+    );
     for &workers in &[4usize, 8, 16] {
         header(&format!("M = {workers}"));
         let mut rng = Rng::new(7);
@@ -59,32 +94,43 @@ fn main() {
             TopologySpec::Ring,
         ];
         println!(
-            "{:<12} {:>14} {:>16} {:>16} {:>8}",
-            "topology", "step wall (µs)", "bits/step", "net model (ms)", "hops"
+            "{:<12} {:>12} {:>12} {:>8} {:>16} {:>14} {:>6}",
+            "topology", "ser µs", "par µs", "speedup", "bits/step", "net model (ms)", "hops"
         );
         for topo in topologies {
-            let mut backend = make_backend(config(workers, topo), topo);
-            let mut step = 0usize;
-            let wall = time_per_call(
-                || {
-                    backend.exchange(step, &grads, &mut agg);
-                    step += 1;
-                },
-                300,
-            );
-            let hops = backend.last_hops().len();
-            let bits_per_step = backend.meter().total_bits / backend.meter().steps.max(1);
-            let net_ms =
-                backend.meter().total_time / backend.meter().steps.max(1) as f64 * 1e3;
+            // The BackendCore contract: lane scheduling never changes a
+            // metered bit. Verify on fresh backends over a fixed number
+            // of steps (the timed runs below execute different step
+            // counts, so their totals are not comparable).
+            {
+                let mut ser = make_backend(config(workers, topo, ParallelMode::Serial), topo);
+                let mut par = make_backend(config(workers, topo, ParallelMode::Parallel), topo);
+                for step in 0..4 {
+                    let bs = ser.exchange(step, &grads, &mut agg);
+                    let bp = par.exchange(step, &grads, &mut agg);
+                    assert_eq!(
+                        bs,
+                        bp,
+                        "{}: serial and parallel bits diverged at step {step}",
+                        topo.name()
+                    );
+                }
+            }
+            let (ser_wall, ser_bits, net_ms, hops) =
+                run_cell(workers, topo, ParallelMode::Serial, &grads, &mut agg);
+            let (par_wall, _, _, _) =
+                run_cell(workers, topo, ParallelMode::Parallel, &grads, &mut agg);
             println!(
-                "{:<12} {:>14.1} {:>16} {:>16.3} {:>8}",
+                "{:<12} {:>12.1} {:>12.1} {:>7.2}x {:>16} {:>14.3} {:>6}",
                 topo.name(),
-                wall * 1e6,
-                bits_per_step,
+                ser_wall * 1e6,
+                par_wall * 1e6,
+                ser_wall / par_wall,
+                ser_bits,
                 net_ms,
                 hops
             );
         }
     }
-    println!("\n(regenerate the EXPERIMENTS.md table from this output)");
+    println!("\n(regenerate the EXPERIMENTS.md tables from this output)");
 }

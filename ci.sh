@@ -46,4 +46,15 @@ step "smoke: one-iteration training run (serial + parallel exchange)"
 step "smoke: one-step hierarchical topology run"
 ./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --topology tree:2
 
+step "smoke: one-step sharded topology run with parallel lanes"
+./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --topology sharded:2 --parallel on
+
+step "docs build (cargo doc --no-deps; gate: no missing_docs warnings)"
+doc_out=$(cargo doc --no-deps 2>&1) || { printf '%s\n' "$doc_out"; exit 1; }
+printf '%s\n' "$doc_out"
+if printf '%s' "$doc_out" | grep -q "missing documentation"; then
+  echo "FAIL: missing_docs warnings (the exchange tree is #![warn(missing_docs)])"
+  exit 1
+fi
+
 step "ci.sh OK"

@@ -23,7 +23,9 @@ pub struct RunConfig {
     /// name ("mlp_tiny", "lm_small", …) for the PJRT path.
     pub model: String,
     pub out_dir: String,
-    /// Worker-lane scheduling in the exchange engine (auto|on|off).
+    /// Lane scheduling in the exchange backend (auto|on|off) — fans out
+    /// flat worker lanes, sharded shard-leader lanes, and tree group
+    /// reductions; bit-identical to serial (ring is inherently serial).
     pub parallel: ParallelMode,
     /// Exchange schedule (flat|sharded:S|tree:G|ring).
     pub topology: TopologySpec,

@@ -1,14 +1,43 @@
-//! The M-lane in-process exchange engine: worker fan-out across OS
-//! threads with a bit-for-bit deterministic reduction.
+//! The flat all-to-all exchange engine: M worker lanes over a shared
+//! [`BackendCore`], fanned out across OS threads with a bit-for-bit
+//! deterministic reduction.
+//!
+//! # Schedule
+//!
+//! One hop: every worker quantizes, entropy-encodes, and
+//! loopback-decodes its own gradient (the shared member stage,
+//! [`BackendCore::member_stage`]); the decoded estimates are then
+//! reduced per coordinate in worker order 0..M on the calling thread.
+//! This is the paper's Algorithm 1 all-to-all and the reference schedule
+//! every other topology is measured against.
+//!
+//! # Hop structure
+//!
+//! A single `"all-to-all"` [`Hop`](super::topology::Hop) carrying every
+//! worker frame once; its α-β seconds come from the analytical
+//! [`NetworkModel::step_time`] closed form.
+//!
+//! # Determinism
+//!
+//! Per-worker RNG streams are forked exactly as the seed serial loop
+//! forked them (by the embedded [`BackendCore`]), each lane consumes
+//! only its own stream, and the float aggregation runs on the calling
+//! thread in fixed worker order — so serial and parallel schedules
+//! produce bit-identical runs (`rust/tests/exchange_parity.rs`, and the
+//! cross-backend contract in DESIGN.md §8).
 
-use super::session::{CodecSession, ExchangeLane};
+use super::session::CodecSession;
+use super::topology::core::BackendCore;
 use super::topology::Hop;
 use super::ExchangeBackend;
 use crate::quant::{Codec, Method, Quantizer};
 use crate::sim::network::{Meter, NetworkModel};
-use crate::util::Rng;
 
-/// How the engine schedules worker lanes within one exchange.
+/// How a backend schedules its independent lane tasks within one
+/// exchange (`--parallel auto|on|off`). Applies to the flat engine's M
+/// worker lanes, the sharded backend's S shard-leader lanes, and the
+/// tree backend's member + per-group leader stages; the ring schedule is
+/// inherently serial (see `topology::ring`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ParallelMode {
     /// Fan out when it should pay off: ≥ 2 lanes and a gradient large
@@ -22,6 +51,7 @@ pub enum ParallelMode {
 }
 
 impl ParallelMode {
+    /// Parse a CLI value (`auto|on|parallel|off|serial`).
     pub fn parse(s: &str) -> Option<ParallelMode> {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Some(ParallelMode::Auto),
@@ -31,6 +61,7 @@ impl ParallelMode {
         }
     }
 
+    /// Canonical lowercase name for logs and banners.
     pub fn name(self) -> &'static str {
         match self {
             ParallelMode::Auto => "auto",
@@ -40,67 +71,48 @@ impl ParallelMode {
     }
 }
 
-/// Coordinate count below which `Auto` stays serial: spawning a scoped
-/// thread costs ~tens of µs, and quantize+code of fewer coordinates is
-/// cheaper than that (DESIGN.md §Perf).
-const AUTO_PARALLEL_MIN_COORDS: usize = 32_768;
-
-/// Everything the engine needs to stand up a simulated exchange.
+/// Everything a backend needs to stand up a simulated exchange.
 #[derive(Clone, Debug)]
 pub struct ExchangeConfig {
+    /// The quantization method (`Method::SuperSgd` = full precision).
     pub method: Method,
+    /// Configured worker count M (RNG streams are forked for all of
+    /// them even when SingleSGD collapses to one active lane).
     pub workers: usize,
+    /// Quantization bit width.
     pub bits: u32,
+    /// Bucket size (coordinates per normalization bucket).
     pub bucket: usize,
+    /// Run seed; every stochastic draw forks from it.
     pub seed: u64,
+    /// The α-β communication model hop seconds are charged against.
     pub network: NetworkModel,
+    /// Lane scheduling within one exchange (`--parallel auto|on|off`).
     pub parallel: ParallelMode,
     /// Entropy coder for the symbol stream (`--codec huffman|elias`).
     pub codec: Codec,
 }
 
-/// The unified in-process exchange: owns the codec session, one lane and
-/// one RNG stream per worker, and the communication meter.
-///
-/// Determinism contract: per-worker RNG streams are forked exactly as
-/// the seed serial loop forked them, each lane consumes only its own
-/// stream, and the float aggregation runs on the main thread in fixed
-/// worker order — so serial and parallel schedules produce bit-identical
-/// runs (see `rust/tests/exchange_parity.rs`).
+/// The flat in-process exchange backend (`--topology flat`): one
+/// reusable codec lane per active worker around the shared
+/// [`BackendCore`].
 pub struct GradientExchange {
-    cfg: ExchangeConfig,
-    session: CodecSession,
-    rngs: Vec<Rng>,
-    lanes: Vec<ExchangeLane>,
+    core: BackendCore,
+    lanes: Vec<super::session::ExchangeLane>,
     bits_scratch: Vec<u64>,
-    meter: Meter,
-    codec_seconds: f64,
-    hops: Vec<Hop>,
 }
 
 impl GradientExchange {
+    /// Stand up the engine: the shared core plus one codec lane and one
+    /// bit counter per active worker.
     pub fn new(cfg: ExchangeConfig) -> Self {
-        let mut seeder = Rng::new(cfg.seed);
-        // One stream per *configured* worker even when fewer lanes are
-        // active, so a seed maps to the same per-worker randomness
-        // regardless of method (and identically to the seed loop).
-        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
-        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
-        let active = if cfg.method == Method::SingleSgd {
-            1
-        } else {
-            cfg.workers
-        };
-        let lanes = (0..active).map(|_| ExchangeLane::new(cfg.bucket)).collect();
+        let core = BackendCore::new(cfg);
+        let lanes = core.new_lanes();
+        let bits_scratch = vec![0; lanes.len()];
         GradientExchange {
-            session,
-            rngs,
+            core,
             lanes,
-            bits_scratch: vec![0; active],
-            meter: Meter::default(),
-            codec_seconds: 0.0,
-            hops: Vec::new(),
-            cfg,
+            bits_scratch,
         }
     }
 
@@ -109,30 +121,37 @@ impl GradientExchange {
         self.lanes.len()
     }
 
+    /// The engine's codec session (shared with the TCP coordinator
+    /// path).
     pub fn session(&self) -> &CodecSession {
-        &self.session
+        self.core.session()
     }
 
+    /// Whether this exchange quantizes at all.
     pub fn is_quantized(&self) -> bool {
-        self.session.is_quantized()
+        self.core.is_quantized()
     }
 
+    /// Force TernGrad-style c·σ clipping regardless of method (the
+    /// Appendix K.2 / Fig. 14 ablation).
     pub fn force_clip(&mut self, c: f32) {
-        self.session.force_clip(c);
+        self.core.force_clip(c);
     }
 
+    /// The running communication meter (total bits + modeled seconds).
     pub fn meter(&self) -> &Meter {
-        &self.meter
+        self.core.meter()
     }
 
     /// Wall time spent inside quantize+encode+decode (the codec hot
     /// path; the parallel region is charged at its wall time).
     pub fn codec_seconds(&self) -> f64 {
-        self.codec_seconds
+        self.core.codec_seconds()
     }
 
+    /// The final (possibly adapted) quantization level magnitudes.
     pub fn final_levels(&self) -> Option<Vec<f64>> {
-        self.session.final_levels()
+        self.core.final_levels()
     }
 
     /// Encoded bits per worker for the last exchange.
@@ -140,50 +159,17 @@ impl GradientExchange {
         &self.bits_scratch
     }
 
-    fn use_parallel(&self, d: usize) -> bool {
-        match self.cfg.parallel {
-            ParallelMode::Serial => false,
-            ParallelMode::Parallel => self.lanes.len() > 1,
-            ParallelMode::Auto => self.lanes.len() > 1 && d >= AUTO_PARALLEL_MIN_COORDS,
-        }
+    /// The live quantizer, if this exchange quantizes at all.
+    pub fn quantizer(&self) -> Option<&Quantizer> {
+        self.core.quantizer()
     }
 
-    /// The flat schedule is one hop: every worker's frame crosses the
-    /// fabric once. Returns the hop's α-β seconds so the caller can feed
-    /// the meter without recomputing the closed form.
-    fn record_flat_hop(&mut self, step_bits: u64) -> f64 {
-        let seconds = self.cfg.network.step_time(&self.bits_scratch);
-        self.hops.clear();
-        self.hops.push(Hop {
-            label: "all-to-all".to_string(),
-            bits: step_bits,
-            seconds,
-        });
-        seconds
+    /// Re-fit the coordinate distribution and re-optimize levels and
+    /// codebook (Algorithm 1 line 4; see [`BackendCore::adapt`]).
+    pub fn adapt(&mut self, grads: &[Vec<f32>]) {
+        self.core.adapt(grads);
     }
-}
 
-/// One lane's codec work for a step. Free function so the parallel and
-/// serial schedules run literally the same code.
-fn run_lane(
-    session: &CodecSession,
-    lane: &mut ExchangeLane,
-    rng: &mut Rng,
-    grad: &[f32],
-    skip_quantize: bool,
-    sample_counts: bool,
-) {
-    if !skip_quantize {
-        lane.quantize(session, grad, rng);
-    }
-    if sample_counts {
-        lane.count_symbols(session);
-    }
-    lane.encode(session);
-    lane.decode_own(session);
-}
-
-impl GradientExchange {
     /// One synchronous exchange: quantize → entropy-encode → meter →
     /// decode → aggregate the mean estimate into `agg`. Returns the
     /// step's total encoded bits.
@@ -197,8 +183,9 @@ impl GradientExchange {
             grads.len()
         );
         agg.fill(0.0);
+        let net = self.core.cfg().network;
 
-        if !self.session.is_quantized() {
+        if !self.core.is_quantized() {
             // Full precision is charged at 32·d per worker.
             let mut step_bits = 0u64;
             for (w, grad) in grads.iter().take(m).enumerate() {
@@ -208,53 +195,25 @@ impl GradientExchange {
                     *a += g / m as f32;
                 }
             }
-            let seconds = self.record_flat_hop(step_bits);
-            self.meter.record_raw(step_bits, seconds);
+            let seconds = net.step_time(&self.bits_scratch);
+            self.core.finish_step(
+                vec![Hop {
+                    label: "all-to-all".to_string(),
+                    bits: step_bits,
+                    seconds,
+                }],
+                step_bits,
+                seconds,
+            );
             return step_bits;
         }
 
         let t0 = std::time::Instant::now();
-        // Lazy codebook: built from the first gradient's empirical symbol
-        // distribution before any lane encodes (skipped entirely by
-        // codebook-free coders).
-        let mut lane0_quantized = false;
-        if self.session.needs_book() && self.session.book().is_none() {
-            self.lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
-            self.session.build_empirical_book(self.lanes[0].quantized());
-            lane0_quantized = true;
-        }
-        let sample_counts = self.session.needs_book() && step % 10 == 0;
+        // Quantize + sampled counts + encode + loopback-decode, fanned
+        // out by the shared member stage.
+        self.core.member_stage(&mut self.lanes, grads, step, true);
 
-        if self.use_parallel(grads[0].len()) {
-            let session = &self.session;
-            std::thread::scope(|scope| {
-                for (w, ((lane, rng), grad)) in self
-                    .lanes
-                    .iter_mut()
-                    .zip(self.rngs.iter_mut())
-                    .zip(grads)
-                    .enumerate()
-                {
-                    let skip = w == 0 && lane0_quantized;
-                    scope.spawn(move || {
-                        run_lane(session, lane, rng, grad, skip, sample_counts)
-                    });
-                }
-            });
-        } else {
-            for (w, ((lane, rng), grad)) in self
-                .lanes
-                .iter_mut()
-                .zip(self.rngs.iter_mut())
-                .zip(grads)
-                .enumerate()
-            {
-                let skip = w == 0 && lane0_quantized;
-                run_lane(&self.session, lane, rng, grad, skip, sample_counts);
-            }
-        }
-
-        // Deterministic reduction: fixed worker order on the main
+        // Deterministic reduction: fixed worker order on the calling
         // thread, so the f32 accumulation matches the serial loop
         // bit-for-bit no matter how the lanes were scheduled.
         let inv = 1.0 / m as f32;
@@ -262,78 +221,38 @@ impl GradientExchange {
         for (w, lane) in self.lanes.iter().enumerate() {
             self.bits_scratch[w] = lane.bits();
             step_bits += self.bits_scratch[w];
-            if sample_counts {
-                self.session.accumulate_counts(lane.counts());
-            }
             for (a, &g) in agg.iter_mut().zip(lane.ghat()) {
                 *a += g * inv;
             }
         }
-        self.codec_seconds += t0.elapsed().as_secs_f64();
-        let seconds = self.record_flat_hop(step_bits);
-        self.meter.record_raw(step_bits, seconds);
+        self.core.add_codec_seconds(t0.elapsed().as_secs_f64());
+        // The flat schedule is one hop: every worker's frame crosses the
+        // fabric once, at the analytical closed-form step time.
+        let seconds = net.step_time(&self.bits_scratch);
+        self.core.finish_step(
+            vec![Hop {
+                label: "all-to-all".to_string(),
+                bits: step_bits,
+                seconds,
+            }],
+            step_bits,
+            seconds,
+        );
         step_bits
-    }
-
-    /// Algorithm 1 line 4 at the update schedule: re-fit the
-    /// distribution, re-optimize levels, refresh the codebook (adaptive
-    /// methods) or rebuild it from the sampled empirical counts
-    /// (non-adaptive). No-op for full precision.
-    pub fn adapt(&mut self, grads: &[Vec<f32>]) {
-        if !self.session.is_quantized() {
-            return;
-        }
-        // Same stream the seed loop drew its subsample seed from.
-        let mut rng = self.rngs[0].fork(0xE57);
-        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
-            self.session.refresh_book_from_counts();
-        }
-    }
-
-    pub fn quantizer(&self) -> Option<&Quantizer> {
-        self.session.quantizer()
     }
 }
 
 impl ExchangeBackend for GradientExchange {
+    fn core(&self) -> &BackendCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BackendCore {
+        &mut self.core
+    }
+
     fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
         GradientExchange::exchange(self, step, grads, agg)
-    }
-
-    fn adapt(&mut self, grads: &[Vec<f32>]) {
-        GradientExchange::adapt(self, grads)
-    }
-
-    fn quantizer(&self) -> Option<&Quantizer> {
-        GradientExchange::quantizer(self)
-    }
-
-    fn active_workers(&self) -> usize {
-        GradientExchange::active_workers(self)
-    }
-
-    fn is_quantized(&self) -> bool {
-        GradientExchange::is_quantized(self)
-    }
-
-    fn force_clip(&mut self, c: f32) {
-        GradientExchange::force_clip(self, c)
-    }
-
-    fn meter(&self) -> &Meter {
-        GradientExchange::meter(self)
-    }
-
-    fn codec_seconds(&self) -> f64 {
-        GradientExchange::codec_seconds(self)
-    }
-
-    fn final_levels(&self) -> Option<Vec<f64>> {
-        GradientExchange::final_levels(self)
-    }
-
-    fn last_hops(&self) -> &[Hop] {
-        &self.hops
     }
 }
 
@@ -341,6 +260,7 @@ impl ExchangeBackend for GradientExchange {
 mod tests {
     use super::*;
     use crate::sim::NetworkModel;
+    use crate::util::Rng;
 
     fn config(method: Method, workers: usize, parallel: ParallelMode) -> ExchangeConfig {
         ExchangeConfig {
@@ -428,6 +348,19 @@ mod tests {
         assert!(total > 0);
         assert!(total < 5 * 4 * 32 * d as u64 / 4, "{total}");
         assert!(eng.codec_seconds() > 0.0);
+    }
+
+    #[test]
+    fn flat_reports_a_single_all_to_all_hop() {
+        let d = 512;
+        let g = grads(4, d, 5);
+        let mut eng = GradientExchange::new(config(Method::QsgdInf, 4, ParallelMode::Auto));
+        let mut agg = vec![0.0f32; d];
+        let bits = eng.exchange(0, &g, &mut agg);
+        let hops = ExchangeBackend::last_hops(&eng);
+        assert_eq!(hops.len(), 1);
+        assert_eq!(hops[0].label, "all-to-all");
+        assert_eq!(hops[0].bits, bits);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The unified gradient-exchange engine (Algorithm 1's communication
-//! path, DESIGN.md §7).
+//! path, DESIGN.md §7) and its executable topology schedules.
 //!
 //! The paper's pipeline — quantize → entropy-encode → meter → decode →
 //! aggregate → adapt levels — used to be implemented twice: inline in
@@ -17,18 +17,24 @@
 //!   hot loop is allocation-free once warm, and the sim loopback
 //!   decodes straight out of the lane's writer through
 //!   [`crate::quant::EncodedView`] — no per-step ciphertext clone.
-//! * [`GradientExchange`] — the M-lane in-process engine: fans the
-//!   lanes out across OS threads ([`ParallelMode`]) while keeping the
-//!   float reduction order — and therefore every bit of the run —
-//!   identical to the serial loop.
+//! * [`BackendCore`] — the state block every backend embeds: the codec
+//!   session, the per-worker RNG fork pattern, the meter, per-hop
+//!   accounting, codec wall-time, the SingleSGD lane collapse, and the
+//!   generalized `std::thread::scope` lane fan-out ([`ParallelMode`],
+//!   CLI `--parallel`). The determinism contract is stated once, in
+//!   DESIGN.md §8, and enforced here instead of being restated per
+//!   backend.
+//! * [`GradientExchange`] — the flat M-lane engine (the reference
+//!   schedule). The [`topology`] subsystem provides the non-flat
+//!   executable schedules — sharded leaders, hierarchical two-level
+//!   trees, ring all-reduce — behind the same [`ExchangeBackend`] trait
+//!   (`--topology flat|sharded:S|tree:G|ring`).
 //!
 //! The TCP coordinator reuses [`CodecSession`] + [`ExchangeLane`]
-//! directly (its "exchange" is the leader relay), so both topologies
-//! share quantization, coding, codebooks, and adaptation by
-//! construction. The [`topology`] subsystem provides the non-flat
-//! executable schedules — sharded leaders, hierarchical two-level
-//! trees, ring all-reduce — behind the same [`ExchangeBackend`] trait
-//! (`--topology flat|sharded:S|tree:G|ring`).
+//! directly (its "exchange" is the leader relay), so both the simulated
+//! and wire-true runtimes share quantization, coding, codebooks, and
+//! adaptation by construction.
+#![warn(missing_docs)]
 
 pub mod engine;
 pub mod session;
@@ -36,6 +42,7 @@ pub mod topology;
 
 pub use engine::{ExchangeConfig, GradientExchange, ParallelMode};
 pub use session::{CodecSession, ExchangeLane};
+pub use topology::core::BackendCore;
 pub use topology::{make_backend, Hop, TopologySpec};
 
 use crate::quant::Quantizer;
@@ -46,43 +53,74 @@ use crate::sim::network::Meter;
 /// `agg`" (Algorithm 1 lines 5–9), with exact bit accounting.
 ///
 /// Implementors are the flat engine ([`GradientExchange`]) and the
-/// [`topology`] schedules; `Send` so a boxed backend can train inside a
-/// spawned thread (the multi-replica tests).
+/// [`topology`] schedules. Each embeds a [`BackendCore`] and implements
+/// only its schedule ([`ExchangeBackend::exchange`]); the shared state
+/// and the determinism contract (DESIGN.md §8) come from the default
+/// methods delegating to the core. `Send` so a boxed backend can train
+/// inside a spawned thread (the multi-replica tests).
 pub trait ExchangeBackend: Send {
+    /// The embedded shared state block (session, RNG forks, meter,
+    /// hops, codec time, lane collapse).
+    fn core(&self) -> &BackendCore;
+
+    /// Mutable access to the embedded shared state block.
+    fn core_mut(&mut self) -> &mut BackendCore;
+
     /// Exchange one step's gradients; writes the aggregated mean
     /// estimate into `agg` and returns the step's total encoded bits.
     fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64;
 
     /// Re-fit the coordinate distribution and re-optimize levels and
     /// codebook (Algorithm 1 line 4; a no-op for full precision).
-    fn adapt(&mut self, grads: &[Vec<f32>]);
+    /// Identical for every backend — see [`BackendCore::adapt`].
+    fn adapt(&mut self, grads: &[Vec<f32>]) {
+        self.core_mut().adapt(grads)
+    }
 
     /// The live quantizer, if this exchange quantizes at all.
-    fn quantizer(&self) -> Option<&Quantizer>;
+    fn quantizer(&self) -> Option<&Quantizer> {
+        self.core().quantizer()
+    }
 
     /// Lanes that actually compute and communicate (1 for SingleSGD).
-    fn active_workers(&self) -> usize;
+    fn active_workers(&self) -> usize {
+        self.core().active_workers()
+    }
 
     /// Whether this backend quantizes at all.
-    fn is_quantized(&self) -> bool;
+    fn is_quantized(&self) -> bool {
+        self.core().is_quantized()
+    }
 
     /// Force TernGrad-style c·σ clipping regardless of method (the
     /// Appendix K.2 / Fig. 14 ablation).
-    fn force_clip(&mut self, c: f32);
+    fn force_clip(&mut self, c: f32) {
+        self.core_mut().force_clip(c)
+    }
 
     /// The running communication meter (total bits + modeled seconds).
-    fn meter(&self) -> &Meter;
+    fn meter(&self) -> &Meter {
+        self.core().meter()
+    }
 
     /// Wall time spent inside quantize+encode+decode (the codec hot
     /// path).
-    fn codec_seconds(&self) -> f64;
+    fn codec_seconds(&self) -> f64 {
+        self.core().codec_seconds()
+    }
 
     /// The final (possibly adapted) quantization level magnitudes.
-    fn final_levels(&self) -> Option<Vec<f64>>;
+    fn final_levels(&self) -> Option<Vec<f64>> {
+        self.core().final_levels()
+    }
 
-    /// Per-hop accounting of the last exchange. Invariant (asserted in
-    /// `rust/tests/topology_parity.rs`): Σ hop bits equals the step
-    /// total returned by [`ExchangeBackend::exchange`] — every encoded
-    /// frame is charged on every hop it traverses, and nothing else is.
-    fn last_hops(&self) -> &[Hop];
+    /// Per-hop accounting of the last exchange, always in schedule
+    /// order (never thread-completion order). Invariant (asserted in
+    /// `rust/tests/topology_parity.rs` and debug-asserted by
+    /// [`BackendCore::finish_step`]): Σ hop bits equals the step total
+    /// returned by [`ExchangeBackend::exchange`] — every encoded frame
+    /// is charged on every hop it traverses, and nothing else is.
+    fn last_hops(&self) -> &[Hop] {
+        self.core().last_hops()
+    }
 }

@@ -43,6 +43,9 @@ pub struct CodecSession {
 }
 
 impl CodecSession {
+    /// Stand up one method's codec state: the quantizer seeded with the
+    /// method's initial levels (none for full precision), the mixture
+    /// estimator, and an empty codebook slot.
     pub fn new(method: Method, bits: u32, bucket: usize) -> Self {
         let quantizer = method.initial_levels(bits).map(|levels| {
             let mut q = Quantizer::new(levels, method.norm_type(), bucket);
@@ -87,6 +90,7 @@ impl CodecSession {
         self
     }
 
+    /// The selected entropy coder.
     pub fn codec(&self) -> Codec {
         self.codec
     }
@@ -97,14 +101,17 @@ impl CodecSession {
         self.quantizer.is_some() && self.codec == Codec::Huffman
     }
 
+    /// The quantization method this session codes for.
     pub fn method(&self) -> Method {
         self.method
     }
 
+    /// The bucket size (coordinates per normalization bucket).
     pub fn bucket(&self) -> usize {
         self.bucket
     }
 
+    /// The live quantizer, if this session quantizes at all.
     pub fn quantizer(&self) -> Option<&Quantizer> {
         self.quantizer.as_ref()
     }
@@ -115,10 +122,12 @@ impl CodecSession {
         self.quantizer.is_some()
     }
 
+    /// The current Huffman codebook, once one exists.
     pub fn book(&self) -> Option<&HuffmanBook> {
         self.book.as_ref()
     }
 
+    /// The current (possibly adapted) quantization level magnitudes.
     pub fn final_levels(&self) -> Option<Vec<f64>> {
         self.quantizer.as_ref().map(|q| q.levels().mags().to_vec())
     }
@@ -237,6 +246,8 @@ pub struct ExchangeLane {
 }
 
 impl ExchangeLane {
+    /// Allocate an empty lane for gradients bucketed at `bucket`
+    /// coordinates (buffers grow on first use and are reused after).
     pub fn new(bucket: usize) -> Self {
         let empty = || QuantizedGrad {
             qidx: Vec::new(),
@@ -277,6 +288,7 @@ impl ExchangeLane {
         self.counts = symbol_counts(&self.qbuf, q.levels());
     }
 
+    /// The last sampled symbol histogram.
     pub fn counts(&self) -> &[f64] {
         &self.counts
     }

@@ -1,0 +1,435 @@
+//! [`BackendCore`] — the state and contract every exchange backend
+//! embeds — plus the generalized lane fan-out primitives.
+//!
+//! Before this module existed, the four [`super::super::ExchangeBackend`]
+//! implementations each restated the same block of state and invariants:
+//! the [`CodecSession`], the per-worker RNG fork pattern, the [`Meter`],
+//! per-hop accounting, codec wall-time, and the SingleSGD lane collapse.
+//! That determinism contract (DESIGN.md §8) could drift four ways; now it
+//! lives here once:
+//!
+//! * **RNG forks** — one stream per *configured* worker, forked as
+//!   `Rng::new(seed).fork(w)` in worker order at construction, so a seed
+//!   maps to the same per-worker randomness regardless of method,
+//!   backend, or schedule. The level-update subsample stream is always
+//!   `rngs[0].fork(0xE57)`.
+//! * **SingleSGD lane collapse** — `Method::SingleSgd` runs one active
+//!   lane no matter how many workers are configured; every backend gets
+//!   the collapse from [`BackendCore::active_workers`].
+//! * **Member stage** — the quantize → (sampled count) → encode →
+//!   loopback-decode pass every gathered schedule starts with, including
+//!   the lazy empirical codebook bootstrap from lane 0's first
+//!   quantization and the every-10th-step symbol-count sampling
+//!   ([`BackendCore::member_stage`]).
+//! * **Hop + meter accounting** — [`BackendCore::finish_step`] installs
+//!   the step's [`Hop`] records (always in schedule order — see
+//!   [`fan_out`]) and feeds the [`Meter`], debug-asserting the hop-sum
+//!   invariant Σ hop bits == step bits.
+//!
+//! # Parallel fan-out
+//!
+//! [`fan_out`] is the `std::thread::scope` worker fan-out that used to be
+//! private to the flat engine, generalized so any backend can fan any
+//! stage of independent lane tasks across OS threads: the flat engine's
+//! M worker lanes, the sharded backend's S shard-leader lanes, and the
+//! tree backend's G per-group reductions. Results land at their schedule
+//! index, never in thread-completion order, so hop records and reduction
+//! inputs are deterministic by construction; all floating-point
+//! reductions stay on the calling thread in schedule order, which is why
+//! `--parallel on` and `--parallel off` are bit-identical for every
+//! backend (`rust/tests/topology_parity.rs`). The ring backend is the
+//! exception and stays serial — see `ring.rs` for why its schedule
+//! structure (a 2(M−1)-stage dependency chain that mutates the shared
+//! session's codebook statistics mid-stage) admits no lane fan-out.
+
+use super::super::engine::{ExchangeConfig, ParallelMode};
+use super::super::session::{CodecSession, ExchangeLane};
+use super::Hop;
+use crate::quant::{Method, Quantizer};
+use crate::sim::network::Meter;
+use crate::util::Rng;
+
+/// Coordinate count per lane below which `ParallelMode::Auto` stays
+/// serial: spawning a scoped thread costs ~tens of µs, and quantize+code
+/// of fewer coordinates is cheaper than that (DESIGN.md §Perf).
+const AUTO_PARALLEL_MIN_COORDS: usize = 32_768;
+
+/// The state block shared by every [`super::super::ExchangeBackend`]:
+/// codec session, per-worker RNG streams, communication meter, per-hop
+/// accounting, codec wall-time, and the SingleSGD lane collapse.
+///
+/// Backends embed a `BackendCore` and implement only their schedule
+/// (`exchange()`); everything else — `adapt`, `quantizer`,
+/// `active_workers`, `is_quantized`, `force_clip`, `meter`,
+/// `codec_seconds`, `final_levels`, `last_hops` — is provided by the
+/// trait's default methods delegating here (DESIGN.md §8).
+pub struct BackendCore {
+    cfg: ExchangeConfig,
+    session: CodecSession,
+    rngs: Vec<Rng>,
+    active: usize,
+    meter: Meter,
+    codec_seconds: f64,
+    hops: Vec<Hop>,
+}
+
+impl BackendCore {
+    /// Stand up the shared state: fork one RNG stream per configured
+    /// worker (in worker order — the fork pattern every backend must
+    /// preserve), build the codec session, and apply the SingleSGD lane
+    /// collapse.
+    pub fn new(cfg: ExchangeConfig) -> Self {
+        let mut seeder = Rng::new(cfg.seed);
+        // One stream per *configured* worker even when fewer lanes are
+        // active, so a seed maps to the same per-worker randomness
+        // regardless of method (and identically to the seed loop).
+        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
+        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
+        let active = if cfg.method == Method::SingleSgd {
+            1
+        } else {
+            cfg.workers
+        };
+        BackendCore {
+            session,
+            rngs,
+            active,
+            meter: Meter::default(),
+            codec_seconds: 0.0,
+            hops: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// The exchange configuration this core was built from.
+    pub fn cfg(&self) -> &ExchangeConfig {
+        &self.cfg
+    }
+
+    /// Lanes that actually compute and communicate (1 for SingleSGD).
+    pub fn active_workers(&self) -> usize {
+        self.active
+    }
+
+    /// Allocate one reusable codec lane per active worker.
+    pub fn new_lanes(&self) -> Vec<ExchangeLane> {
+        (0..self.active)
+            .map(|_| ExchangeLane::new(self.cfg.bucket))
+            .collect()
+    }
+
+    /// The shared codec session (read-only).
+    pub fn session(&self) -> &CodecSession {
+        &self.session
+    }
+
+    /// Split borrow for schedule stages that encode against the session
+    /// while drawing from worker RNG streams (the session stays
+    /// read-only so it can be shared across fanned-out lanes).
+    pub fn session_and_rngs_mut(&mut self) -> (&CodecSession, &mut [Rng]) {
+        (&self.session, &mut self.rngs)
+    }
+
+    /// Split borrow for schedules that mutate the session mid-stage
+    /// (the ring backend's lazy book build and count sampling happen on
+    /// chunk frames inside its stages — one reason ring stays serial).
+    pub fn codec_mut(&mut self) -> (&mut CodecSession, &mut [Rng]) {
+        (&mut self.session, &mut self.rngs)
+    }
+
+    /// Whether this exchange quantizes at all.
+    pub fn is_quantized(&self) -> bool {
+        self.session.is_quantized()
+    }
+
+    /// The live quantizer, if this exchange quantizes at all.
+    pub fn quantizer(&self) -> Option<&Quantizer> {
+        self.session.quantizer()
+    }
+
+    /// Force TernGrad-style c·σ clipping regardless of method (the
+    /// Appendix K.2 / Fig. 14 ablation).
+    pub fn force_clip(&mut self, c: f32) {
+        self.session.force_clip(c);
+    }
+
+    /// The final (possibly adapted) quantization level magnitudes.
+    pub fn final_levels(&self) -> Option<Vec<f64>> {
+        self.session.final_levels()
+    }
+
+    /// The running communication meter (total bits + modeled seconds).
+    pub fn meter(&self) -> &Meter {
+        &self.meter
+    }
+
+    /// Wall time spent inside quantize+encode+decode so far.
+    pub fn codec_seconds(&self) -> f64 {
+        self.codec_seconds
+    }
+
+    /// Charge codec wall time (a parallel region charges its wall time,
+    /// not the per-thread sum).
+    pub fn add_codec_seconds(&mut self, seconds: f64) {
+        self.codec_seconds += seconds;
+    }
+
+    /// Per-hop accounting of the last exchange, in schedule order.
+    pub fn last_hops(&self) -> &[Hop] {
+        &self.hops
+    }
+
+    /// Install the step's hop records (schedule order) and feed the
+    /// meter. Debug-asserts the hop-sum invariant: Σ hop bits equals the
+    /// step total every backend returns from `exchange()`.
+    pub fn finish_step(&mut self, hops: Vec<Hop>, step_bits: u64, step_seconds: f64) {
+        debug_assert_eq!(
+            hops.iter().map(|h| h.bits).sum::<u64>(),
+            step_bits,
+            "hop-sum invariant violated"
+        );
+        self.hops = hops;
+        self.meter.record_raw(step_bits, step_seconds);
+    }
+
+    /// Algorithm 1 line 4 at the update schedule, identical for every
+    /// backend: re-fit the distribution and re-optimize levels (adaptive
+    /// methods, subsampling from the `rngs[0].fork(0xE57)` stream the
+    /// seed loop used) or rebuild the codebook from the sampled
+    /// empirical counts (non-adaptive). No-op for full precision.
+    pub fn adapt(&mut self, grads: &[Vec<f32>]) {
+        if !self.session.is_quantized() {
+            return;
+        }
+        let mut rng = self.rngs[0].fork(0xE57);
+        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
+            self.session.refresh_book_from_counts();
+        }
+    }
+
+    /// Whether a stage of `lanes` independent tasks, each touching about
+    /// `lane_coords` coordinates of codec work, should fan out across
+    /// threads under the configured [`ParallelMode`].
+    pub fn use_parallel(&self, lanes: usize, lane_coords: usize) -> bool {
+        match self.cfg.parallel {
+            ParallelMode::Serial => false,
+            ParallelMode::Parallel => lanes > 1,
+            ParallelMode::Auto => lanes > 1 && lane_coords >= AUTO_PARALLEL_MIN_COORDS,
+        }
+    }
+
+    /// The member stage every gathered schedule starts with: bootstrap
+    /// the lazy empirical codebook from lane 0's first quantization if
+    /// the coder needs one, quantize every lane from its own RNG stream
+    /// (fanned out per [`BackendCore::use_parallel`]), sample symbol
+    /// counts every 10th step, and — when `encode` is set — entropy-encode
+    /// and loopback-decode each lane's frame. Sampled counts are folded
+    /// into the session on the calling thread in worker order, so
+    /// refreshed codebooks are bit-identical across schedules and modes.
+    ///
+    /// Must only be called on a quantized session.
+    pub fn member_stage(
+        &mut self,
+        lanes: &mut [ExchangeLane],
+        grads: &[Vec<f32>],
+        step: usize,
+        encode: bool,
+    ) {
+        let mut lane0_quantized = false;
+        if self.session.needs_book() && self.session.book().is_none() {
+            lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
+            self.session.build_empirical_book(lanes[0].quantized());
+            lane0_quantized = true;
+        }
+        let sample_counts = self.session.needs_book() && step % 10 == 0;
+        let parallel = self.use_parallel(lanes.len(), grads.first().map_or(0, |g| g.len()));
+        {
+            let session = &self.session;
+            let mut tasks: Vec<(&mut ExchangeLane, &mut Rng, &[f32])> = lanes
+                .iter_mut()
+                .zip(self.rngs.iter_mut())
+                .zip(grads)
+                .map(|((lane, rng), grad)| (lane, rng, grad.as_slice()))
+                .collect();
+            fan_out(parallel, &mut tasks, |w, task| {
+                let (lane, rng, grad) = task;
+                if !(w == 0 && lane0_quantized) {
+                    lane.quantize(session, grad, rng);
+                }
+                if sample_counts {
+                    lane.count_symbols(session);
+                }
+                if encode {
+                    lane.encode(session);
+                    lane.decode_own(session);
+                }
+            });
+        }
+        if sample_counts {
+            // Worker-order f64 accumulation on the calling thread, so
+            // refreshed codebooks never depend on lane scheduling.
+            for lane in lanes.iter() {
+                self.session.accumulate_counts(lane.counts());
+            }
+        }
+    }
+}
+
+/// Run one independent task per schedule slot, fanned out across scoped
+/// OS threads when `parallel` is set (serially in slot order otherwise),
+/// and return each task's result **at its schedule index** — never in
+/// thread-completion order.
+///
+/// This is the generalized form of the flat engine's worker fan-out:
+/// tasks share only `Sync` state (the read-only [`CodecSession`]), own
+/// their mutable lane state, and the caller performs every
+/// floating-point reduction over the returned slots in schedule order —
+/// which is what makes parallel and serial schedules bit-identical.
+pub fn fan_out<T, R, F>(parallel: bool, tasks: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    if parallel && tasks.len() > 1 {
+        let mut results: Vec<Option<R>> = Vec::with_capacity(tasks.len());
+        results.resize_with(tasks.len(), || None);
+        std::thread::scope(|scope| {
+            for ((i, task), slot) in tasks.iter_mut().enumerate().zip(results.iter_mut()) {
+                let f = &f;
+                scope.spawn(move || *slot = Some(f(i, task)));
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("fan-out task did not deliver a result"))
+            .collect()
+    } else {
+        tasks.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect()
+    }
+}
+
+/// Mutable references to the strictly increasing `idxs` of `slice`
+/// (panics otherwise) — how a fanned-out stage hands each task its own
+/// worker RNG stream (e.g. the tree backend's group leaders) without
+/// aliasing.
+pub fn disjoint_mut<'a, T>(
+    slice: &'a mut [T],
+    idxs: impl IntoIterator<Item = usize>,
+) -> Vec<&'a mut T> {
+    let mut out = Vec::new();
+    let mut rest = slice;
+    let mut base = 0usize;
+    for i in idxs {
+        assert!(i >= base, "disjoint_mut needs strictly increasing indices");
+        let tail = std::mem::take(&mut rest).split_at_mut(i - base).1;
+        let (first, tail) = tail
+            .split_first_mut()
+            .expect("disjoint_mut index out of bounds");
+        out.push(first);
+        rest = tail;
+        base = i + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Codec;
+    use crate::sim::NetworkModel;
+
+    fn cfg(method: Method, workers: usize, parallel: ParallelMode) -> ExchangeConfig {
+        ExchangeConfig {
+            method,
+            workers,
+            bits: 3,
+            bucket: 64,
+            seed: 9,
+            network: NetworkModel::paper_testbed(),
+            parallel,
+            codec: Codec::Huffman,
+        }
+    }
+
+    #[test]
+    fn single_sgd_collapses_to_one_lane() {
+        let core = BackendCore::new(cfg(Method::SingleSgd, 4, ParallelMode::Auto));
+        assert_eq!(core.active_workers(), 1);
+        assert_eq!(core.new_lanes().len(), 1);
+        let core = BackendCore::new(cfg(Method::Alq, 4, ParallelMode::Auto));
+        assert_eq!(core.active_workers(), 4);
+    }
+
+    #[test]
+    fn use_parallel_honors_mode_and_size() {
+        let auto = BackendCore::new(cfg(Method::Alq, 4, ParallelMode::Auto));
+        assert!(!auto.use_parallel(4, 1000));
+        assert!(auto.use_parallel(4, AUTO_PARALLEL_MIN_COORDS));
+        assert!(!auto.use_parallel(1, 1 << 20));
+        let on = BackendCore::new(cfg(Method::Alq, 4, ParallelMode::Parallel));
+        assert!(on.use_parallel(2, 1));
+        assert!(!on.use_parallel(1, 1 << 20));
+        let off = BackendCore::new(cfg(Method::Alq, 4, ParallelMode::Serial));
+        assert!(!off.use_parallel(16, 1 << 20));
+    }
+
+    #[test]
+    fn fan_out_results_land_at_schedule_indices() {
+        let mut tasks: Vec<usize> = (0..8).collect();
+        for parallel in [false, true] {
+            let out = fan_out(parallel, &mut tasks, |i, t| {
+                // Stagger completion so thread-finish order ≠ schedule
+                // order in the parallel case.
+                std::thread::sleep(std::time::Duration::from_micros(((8 - i) * 200) as u64));
+                *t * 10 + i
+            });
+            assert_eq!(out, (0..8).map(|i| i * 11).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_hands_out_the_right_elements() {
+        let mut v: Vec<u32> = (0..10).collect();
+        let picks = disjoint_mut(&mut v, [1usize, 4, 9]);
+        assert_eq!(picks.iter().map(|r| **r).collect::<Vec<_>>(), [1, 4, 9]);
+        for r in picks {
+            *r += 100;
+        }
+        assert_eq!(v[1], 101);
+        assert_eq!(v[4], 104);
+        assert_eq!(v[9], 109);
+        assert_eq!(v[0], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn disjoint_mut_rejects_unsorted_indices() {
+        let mut v = [0u8; 4];
+        let _ = disjoint_mut(&mut v, [2usize, 1]);
+    }
+
+    #[test]
+    fn finish_step_installs_hops_and_meters() {
+        let mut core = BackendCore::new(cfg(Method::Alq, 4, ParallelMode::Auto));
+        core.finish_step(
+            vec![
+                Hop {
+                    label: "a".to_string(),
+                    bits: 60,
+                    seconds: 0.5,
+                },
+                Hop {
+                    label: "b".to_string(),
+                    bits: 40,
+                    seconds: 0.25,
+                },
+            ],
+            100,
+            0.75,
+        );
+        assert_eq!(core.last_hops().len(), 2);
+        assert_eq!(core.meter().total_bits, 100);
+        assert_eq!(core.meter().steps, 1);
+    }
+}

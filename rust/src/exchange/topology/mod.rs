@@ -4,14 +4,17 @@
 //! all-to-all in one hop. This subsystem provides the schedules that
 //! matter once M grows past a single switch — each one a *real,
 //! executable* implementation of [`super::ExchangeBackend`] that moves
-//! encoded frames hop by hop, not an analytical formula:
+//! encoded frames hop by hop, not an analytical formula. All of them
+//! embed the shared [`core::BackendCore`] (session, RNG forks, meter,
+//! hop accounting, SingleSGD collapse — the DESIGN.md §8 determinism
+//! contract) and differ only in their schedule:
 //!
 //! * [`ShardedExchange`] (`--topology sharded:S`) — parameters are
 //!   partitioned into S bucket-aligned shards; each shard is gathered,
-//!   decoded, and reduced by a different leader lane in parallel.
-//!   Routing changes, payload content does not: the per-coordinate
-//!   reduction order and every encoded bit are identical to the flat
-//!   engine (`rust/tests/topology_parity.rs` asserts `params_hash` and
+//!   decoded, and reduced by a different leader lane. Routing changes,
+//!   payload content does not: the per-coordinate reduction order and
+//!   every encoded bit are identical to the flat engine
+//!   (`rust/tests/topology_parity.rs` asserts `params_hash` and
 //!   per-step bits match flat exactly).
 //! * [`HierarchicalExchange`] (`--topology tree:G`) — two-level tree: G
 //!   groups reduce locally, group leaders exchange *re-quantized*
@@ -25,6 +28,17 @@
 //!   M−1 all-gather stages relaying the reduced chunks. This turns the
 //!   analytical `sim::network::Topology::Ring` formula into an actual
 //!   schedule with the same 2(M−1)-stage shape.
+//!
+//! # Parallel lane fan-out
+//!
+//! `--parallel auto|on|off` applies to every gathered schedule, not just
+//! flat: the member stage (all backends), the S shard-leader lanes
+//! (sharded), and the G per-group leader reductions (tree) fan out via
+//! [`core::fan_out`], with results and hop records always landing in
+//! schedule order so parallel and serial runs are bit-identical
+//! (`rust/tests/topology_parity.rs`). Ring stays serial by schedule
+//! structure: its 2(M−1) stages form a sequential dependency chain and
+//! mutate shared session statistics mid-stage (see `ring.rs`).
 //!
 //! # Metering contract
 //!
@@ -45,6 +59,7 @@
 //! that run concurrently (the S shard lanes) contribute their max to
 //! the step's time; sequential hops (tree levels, ring stages) sum.
 
+pub mod core;
 pub mod ring;
 pub mod sharded;
 pub mod tree;
@@ -73,6 +88,7 @@ pub enum TopologySpec {
 }
 
 impl TopologySpec {
+    /// Parse a CLI value (`flat`, `ring`, `sharded:S`, `tree:G`).
     pub fn parse(s: &str) -> Option<TopologySpec> {
         let s = s.to_ascii_lowercase();
         match s.as_str() {
@@ -92,6 +108,7 @@ impl TopologySpec {
         }
     }
 
+    /// Canonical lowercase name for logs and banners.
     pub fn name(self) -> String {
         match self {
             TopologySpec::Flat => "flat".to_string(),
@@ -106,7 +123,7 @@ impl TopologySpec {
 /// links in the hop and the α-β time it was charged.
 #[derive(Clone, Debug)]
 pub struct Hop {
-    /// Human-readable hop name ("shard2-gather", "reduce-scatter[1]", …).
+    /// Human-readable hop name ("shard2", "reduce-scatter[1]", …).
     pub label: String,
     /// Total encoded bits that crossed links in this hop.
     pub bits: u64,

@@ -2,6 +2,8 @@
 //! `sim::network::Topology::Ring` formula turned into an actual,
 //! executable schedule.
 //!
+//! # Schedule
+//!
 //! The parameters are split into M bucket-aligned chunks (the fp32 tail
 //! rides with the last chunk). The classic 2(M−1)-stage schedule runs
 //! for real, with quantized payloads on every link:
@@ -17,31 +19,55 @@
 //!   chunks. The simulation decodes each final frame once (the loopback
 //!   convention: every replica would decode these exact bytes).
 //!
-//! Each of the 2(M−1) stages is one [`Hop`]: its bits are the chunk
-//! frames on the wire that stage (relays included — ring genuinely
-//! retransmits), its seconds one parallel link round `α + max/β`. That
-//! reproduces the analytical ring cost shape `2(M−1)·α +
-//! 2(M−1)/M·payload/β` from measured frames instead of a formula.
+//! # Hop structure
 //!
-//! Numerics: partial sums are re-quantized at every reduce-scatter hop,
-//! so quantization noise compounds along the ring — the documented,
-//! honest cost of quantized ring all-reduce. Runs are bit-deterministic
-//! per seed (`rust/tests/topology_parity.rs` asserts the golden), but
+//! Each of the 2(M−1) stages is one [`Hop`] (`"reduce-scatter[t]"` then
+//! `"all-gather[u]"`, in stage order): its bits are the chunk frames on
+//! the wire that stage (relays included — ring genuinely retransmits),
+//! its seconds one parallel link round `α + max/β`. That reproduces the
+//! analytical ring cost shape `2(M−1)·α + 2(M−1)/M·payload/β` from
+//! measured frames instead of a formula.
+//!
+//! # Why ring stays serial under `--parallel`
+//!
+//! Unlike the flat/sharded/tree lane stages, the ring schedule is not a
+//! set of independent lane tasks, so the generalized
+//! [`super::core::fan_out`] does not apply:
+//!
+//! * the 2(M−1) stages form a strict sequential dependency chain —
+//!   stage t+1 consumes the partial sums stage t produced, so only the
+//!   links *within* one stage could ever run concurrently;
+//! * within a stage, every transfer may mutate the shared
+//!   [`super::super::CodecSession`]: the lazy empirical codebook is
+//!   built from the first chunk frame encountered, and the every-10th
+//!   step symbol-count sampling folds each chunk's histogram into the
+//!   session — both order-sensitive session writes, not read-only lane
+//!   work;
+//! * each stage moves only d/M coordinates per link, so the per-stage
+//!   codec work is far below the spawn-amortization threshold that
+//!   makes fan-out pay elsewhere.
+//!
+//! The parallelism that matters for ring — all links active at once —
+//! is already charged in the α-β time model: each stage's [`Hop`]
+//! seconds are one parallel link round, not M serialized sends.
+//!
+//! # Determinism
+//!
+//! Partial sums are re-quantized at every reduce-scatter hop, so
+//! quantization noise compounds along the ring — the documented, honest
+//! cost of quantized ring all-reduce. Runs are bit-deterministic per
+//! seed (`rust/tests/topology_parity.rs` asserts the golden), but
 //! distinct from the flat engine's fixed point.
 
 use super::super::engine::ExchangeConfig;
-use super::super::session::{CodecSession, ExchangeLane};
+use super::super::session::ExchangeLane;
 use super::super::ExchangeBackend;
+use super::core::BackendCore;
 use super::Hop;
-use crate::quant::{Method, Quantizer};
-use crate::sim::network::Meter;
-use crate::util::Rng;
 
 /// The ring all-reduce exchange backend (`--topology ring`).
 pub struct RingExchange {
-    cfg: ExchangeConfig,
-    session: CodecSession,
-    rngs: Vec<Rng>,
+    core: BackendCore,
     /// Per-worker working copy of the gradient being ring-reduced.
     partials: Vec<Vec<f32>>,
     /// Scratch codec lane for the chunk in flight.
@@ -50,38 +76,33 @@ pub struct RingExchange {
     dec_lane: ExchangeLane,
     /// Scratch: a reduced chunk scaled to the mean.
     mean_buf: Vec<f32>,
-    hops: Vec<Hop>,
-    meter: Meter,
-    codec_seconds: f64,
 }
 
 impl RingExchange {
+    /// Stand up the backend over the shared exchange config (the ring
+    /// has no tunable arity: every active worker is a ring node).
     pub fn new(cfg: ExchangeConfig) -> Self {
-        let mut seeder = Rng::new(cfg.seed);
-        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
-        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
-        let active = if cfg.method == Method::SingleSgd {
-            1
-        } else {
-            cfg.workers
-        };
+        let bucket = cfg.bucket;
+        let core = BackendCore::new(cfg);
+        let active = core.active_workers();
         RingExchange {
-            session,
-            rngs,
+            core,
             partials: vec![Vec::new(); active],
-            chunk_lane: ExchangeLane::new(cfg.bucket),
-            dec_lane: ExchangeLane::new(cfg.bucket),
+            chunk_lane: ExchangeLane::new(bucket),
+            dec_lane: ExchangeLane::new(bucket),
             mean_buf: Vec::new(),
-            hops: Vec::new(),
-            meter: Meter::default(),
-            codec_seconds: 0.0,
-            cfg,
         }
     }
 
     /// Coordinate range of ring chunk `c` (bucket-aligned; the tail
     /// rides with the last chunk).
-    fn chunk_coords(c: usize, m: usize, nb: usize, bucket: usize, d: usize) -> std::ops::Range<usize> {
+    fn chunk_coords(
+        c: usize,
+        m: usize,
+        nb: usize,
+        bucket: usize,
+        d: usize,
+    ) -> std::ops::Range<usize> {
         let lo = (c * nb / m) * bucket;
         let hi = if c + 1 == m {
             d
@@ -100,15 +121,16 @@ impl RingExchange {
         );
         agg.fill(0.0);
         let d = agg.len();
-        let net = self.cfg.network;
-        let bucket = self.session.bucket();
+        let net = self.core.cfg().network;
+        let (session, rngs) = self.core.codec_mut();
+        let bucket = session.bucket();
         let nb = d / bucket;
-        let quantized = self.session.is_quantized();
+        let quantized = session.is_quantized();
         // Sampled symbol-count refresh on the same cadence as the other
         // topologies (every 10th step), measured on the chunk frames the
         // ring actually codes, so refresh_book_from_counts() has real
         // statistics for non-adaptive methods.
-        let sample_counts = self.session.needs_book() && step % 10 == 0;
+        let sample_counts = session.needs_book() && step % 10 == 0;
         let t0 = std::time::Instant::now();
 
         // Each worker starts from its own raw gradient; a worker's own
@@ -119,7 +141,7 @@ impl RingExchange {
             p.extend_from_slice(g);
         }
 
-        self.hops.clear();
+        let mut hops: Vec<Hop> = Vec::with_capacity(2 * m.saturating_sub(1));
         let mut step_bits = 0u64;
         let mut step_seconds = 0.0f64;
 
@@ -133,21 +155,20 @@ impl RingExchange {
                 let range = Self::chunk_coords(c, m, nb, bucket, d);
                 let bits = if quantized {
                     self.chunk_lane.quantize(
-                        &self.session,
+                        session,
                         &self.partials[w][range.clone()],
-                        &mut self.rngs[w],
+                        &mut rngs[w],
                     );
-                    if self.session.needs_book() && self.session.book().is_none() {
-                        self.session
-                            .build_empirical_book(self.chunk_lane.quantized());
+                    if session.needs_book() && session.book().is_none() {
+                        session.build_empirical_book(self.chunk_lane.quantized());
                     }
                     if sample_counts {
-                        self.chunk_lane.count_symbols(&self.session);
-                        self.session.accumulate_counts(self.chunk_lane.counts());
+                        self.chunk_lane.count_symbols(session);
+                        session.accumulate_counts(self.chunk_lane.counts());
                     }
-                    let bits = self.chunk_lane.encode(&self.session);
+                    let bits = self.chunk_lane.encode(session);
                     let view = self.chunk_lane.encoded();
-                    self.dec_lane.decode_to_ghat(&self.session, view);
+                    self.dec_lane.decode_to_ghat(session, view);
                     let dst = &mut self.partials[r][range.clone()];
                     for (a, &g) in dst.iter_mut().zip(self.dec_lane.ghat()) {
                         *a += g;
@@ -166,7 +187,7 @@ impl RingExchange {
             let seconds = net.link_time(stage_max);
             step_bits += stage_bits;
             step_seconds += seconds;
-            self.hops.push(Hop {
+            hops.push(Hop {
                 label: format!("reduce-scatter[{t}]"),
                 bits: stage_bits,
                 seconds,
@@ -186,20 +207,19 @@ impl RingExchange {
                 self.mean_buf
                     .extend(self.partials[o][range.clone()].iter().map(|&x| x * inv));
                 self.chunk_lane
-                    .quantize(&self.session, &self.mean_buf, &mut self.rngs[o]);
+                    .quantize(session, &self.mean_buf, &mut rngs[o]);
                 // Degenerate rings (M = 1) skip reduce-scatter, so the
                 // lazy book may not exist yet.
-                if self.session.needs_book() && self.session.book().is_none() {
-                    self.session
-                        .build_empirical_book(self.chunk_lane.quantized());
+                if session.needs_book() && session.book().is_none() {
+                    session.build_empirical_book(self.chunk_lane.quantized());
                 }
                 if sample_counts {
-                    self.chunk_lane.count_symbols(&self.session);
-                    self.session.accumulate_counts(self.chunk_lane.counts());
+                    self.chunk_lane.count_symbols(session);
+                    session.accumulate_counts(self.chunk_lane.counts());
                 }
-                let bits = self.chunk_lane.encode(&self.session);
+                let bits = self.chunk_lane.encode(session);
                 let view = self.chunk_lane.encoded();
-                let ghat = self.dec_lane.decode_to_ghat(&self.session, view);
+                let ghat = self.dec_lane.decode_to_ghat(session, view);
                 agg[range.clone()].copy_from_slice(ghat);
                 bits
             } else {
@@ -214,7 +234,7 @@ impl RingExchange {
         }
         if m == 1 {
             // Degenerate single-worker ring: nothing crosses a link.
-            self.hops.push(Hop {
+            hops.push(Hop {
                 label: "loopback".to_string(),
                 bits: final_bits,
                 seconds: 0.0,
@@ -225,7 +245,7 @@ impl RingExchange {
                 let seconds = net.link_time(final_max);
                 step_bits += final_bits;
                 step_seconds += seconds;
-                self.hops.push(Hop {
+                hops.push(Hop {
                     label: format!("all-gather[{u}]"),
                     bits: final_bits,
                     seconds,
@@ -234,58 +254,24 @@ impl RingExchange {
         }
 
         if quantized {
-            self.codec_seconds += t0.elapsed().as_secs_f64();
+            self.core.add_codec_seconds(t0.elapsed().as_secs_f64());
         }
-        self.meter.record_raw(step_bits, step_seconds);
+        self.core.finish_step(hops, step_bits, step_seconds);
         step_bits
     }
 }
 
 impl ExchangeBackend for RingExchange {
+    fn core(&self) -> &BackendCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BackendCore {
+        &mut self.core
+    }
+
     fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
         self.exchange_impl(step, grads, agg)
-    }
-
-    fn adapt(&mut self, grads: &[Vec<f32>]) {
-        if !self.session.is_quantized() {
-            return;
-        }
-        let mut rng = self.rngs[0].fork(0xE57);
-        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
-            self.session.refresh_book_from_counts();
-        }
-    }
-
-    fn quantizer(&self) -> Option<&Quantizer> {
-        self.session.quantizer()
-    }
-
-    fn active_workers(&self) -> usize {
-        self.partials.len()
-    }
-
-    fn is_quantized(&self) -> bool {
-        self.session.is_quantized()
-    }
-
-    fn force_clip(&mut self, c: f32) {
-        self.session.force_clip(c);
-    }
-
-    fn meter(&self) -> &Meter {
-        &self.meter
-    }
-
-    fn codec_seconds(&self) -> f64 {
-        self.codec_seconds
-    }
-
-    fn final_levels(&self) -> Option<Vec<f64>> {
-        self.session.final_levels()
-    }
-
-    fn last_hops(&self) -> &[Hop] {
-        &self.hops
     }
 }
 
@@ -293,8 +279,9 @@ impl ExchangeBackend for RingExchange {
 mod tests {
     use super::super::super::engine::ParallelMode;
     use super::*;
-    use crate::quant::Codec;
+    use crate::quant::{Codec, Method};
     use crate::sim::NetworkModel;
+    use crate::util::Rng;
 
     fn config(method: Method, workers: usize) -> ExchangeConfig {
         ExchangeConfig {
@@ -380,6 +367,29 @@ mod tests {
         }
         let corr = dot / (na.sqrt() * nb.sqrt()).max(1e-30);
         assert!(corr > 0.5, "ring estimate decorrelated: {corr}");
+    }
+
+    #[test]
+    fn ring_schedule_ignores_parallel_mode_bit_for_bit() {
+        // The ring schedule is serial by structure (see the module
+        // docs); `--parallel on` must not change a single bit.
+        let d = 640;
+        let m = 4;
+        let g = grads(m, d, 7);
+        let mut cfg_p = config(Method::QsgdInf, m);
+        cfg_p.parallel = ParallelMode::Parallel;
+        let mut serial = RingExchange::new(config(Method::QsgdInf, m));
+        let mut parallel = RingExchange::new(cfg_p);
+        let mut agg_s = vec![0.0f32; d];
+        let mut agg_p = vec![0.0f32; d];
+        for step in 0..4 {
+            let bs = ExchangeBackend::exchange(&mut serial, step, &g, &mut agg_s);
+            let bp = ExchangeBackend::exchange(&mut parallel, step, &g, &mut agg_p);
+            assert_eq!(bs, bp);
+            let sb: Vec<u32> = agg_s.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u32> = agg_p.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, pb, "step {step}");
+        }
     }
 
     #[test]

@@ -1,13 +1,26 @@
 //! Sharded leader lanes: S parameter shards, each gathered and reduced
 //! by its own leader.
 //!
+//! # Schedule
+//!
 //! The parameters are partitioned into S bucket-aligned shards
 //! ([`super::shard_buckets`]; the fp32 tail rides with the last shard).
 //! Every worker quantizes its full gradient exactly as the flat engine
-//! does (same per-worker RNG fork pattern, same codebook lifecycle),
-//! then encodes one frame *per shard*; leader lane `s` decodes the M
-//! shard-`s` frames and reduces its slice of the aggregate in worker
-//! order.
+//! does (the shared member stage,
+//! [`super::core::BackendCore::member_stage`] — same per-worker RNG fork
+//! pattern, same codebook lifecycle), then encodes one frame *per
+//! shard*; leader lane `s` decodes the M shard-`s` frames and reduces
+//! its slice of the aggregate in worker order.
+//!
+//! # Hop structure
+//!
+//! One [`Hop`] per shard (`"shard0"`, `"shard1"`, …, in shard order): a
+//! serialized fan-in of M−1 shard frames into the leader plus a
+//! serialized fan-out relaying them down. The S leader lanes run
+//! concurrently, so the step's modeled time is the slowest shard's, and
+//! Σ shard-hop bits equals the flat engine's step total exactly.
+//!
+//! # Determinism
 //!
 //! Because the wire layout is bucket-major, the S shard frames of a
 //! worker concatenate to exactly the bits of its whole-frame encode, and
@@ -15,61 +28,62 @@
 //! the same decoded values, the aggregate — and therefore the entire
 //! training run — is bit-identical to the flat engine. Sharding changes
 //! *routing* (S parallel leader lanes instead of one all-to-all), not
-//! payload or numerics. `rust/tests/topology_parity.rs` asserts
-//! `params_hash`, per-step bits, and total bits match flat exactly.
+//! payload or numerics. Under `--parallel`, the member stage fans out
+//! across worker lanes and the S shard-leader lanes fan out across
+//! threads ([`super::core::fan_out`]); each shard reduces a disjoint
+//! slice of the aggregate in worker order, so parallel and serial
+//! schedules are bit-identical too. `rust/tests/topology_parity.rs`
+//! asserts `params_hash`, per-step bits, and total bits match flat
+//! exactly in both modes.
 
 use super::super::engine::ExchangeConfig;
-use super::super::session::{CodecSession, ExchangeLane};
 use super::super::ExchangeBackend;
+use super::core::{fan_out, BackendCore};
 use super::{shard_buckets, Hop};
 use crate::quant::bitio::BitWriter;
-use crate::quant::{EncodedView, Method, Quantizer};
-use crate::sim::network::Meter;
-use crate::util::Rng;
+use crate::quant::EncodedView;
+
+/// Per-shard leader scratch: a frame writer and a decode lane, owned by
+/// exactly one shard lane so the S lanes can run on separate threads.
+struct ShardScratch {
+    writer: BitWriter,
+    dec: crate::exchange::ExchangeLane,
+}
 
 /// The sharded-leader exchange backend (`--topology sharded:S`).
 pub struct ShardedExchange {
-    cfg: ExchangeConfig,
+    core: BackendCore,
     shards: usize,
-    session: CodecSession,
-    rngs: Vec<Rng>,
-    lanes: Vec<ExchangeLane>,
-    /// Scratch lane decoding shard frames on behalf of the leaders.
-    dec_lane: ExchangeLane,
-    /// Scratch writer for per-shard frames (one in flight at a time).
-    writer: BitWriter,
+    lanes: Vec<crate::exchange::ExchangeLane>,
+    /// One scratch per shard so the shard-leader lanes can fan out.
+    scratch: Vec<ShardScratch>,
     bits_scratch: Vec<u64>,
-    hops: Vec<Hop>,
-    meter: Meter,
-    codec_seconds: f64,
 }
 
 impl ShardedExchange {
+    /// Stand up the backend with `shards` leader lanes over the shared
+    /// exchange config.
     pub fn new(cfg: ExchangeConfig, shards: usize) -> Self {
         assert!(shards >= 1, "sharded topology needs at least one shard");
-        let mut seeder = Rng::new(cfg.seed);
-        // Identical fork pattern to the flat engine: the determinism
-        // contract that makes sharded ≡ flat bit-for-bit.
-        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
-        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
-        let active = if cfg.method == Method::SingleSgd {
-            1
-        } else {
-            cfg.workers
-        };
-        let lanes = (0..active).map(|_| ExchangeLane::new(cfg.bucket)).collect();
+        let bucket = cfg.bucket;
+        // Identical core to the flat engine (RNG fork pattern, codebook
+        // lifecycle): the determinism contract that makes sharded ≡ flat
+        // bit-for-bit.
+        let core = BackendCore::new(cfg);
+        let lanes = core.new_lanes();
+        let bits_scratch = vec![0; lanes.len()];
+        let scratch = (0..shards)
+            .map(|_| ShardScratch {
+                writer: BitWriter::new(),
+                dec: crate::exchange::ExchangeLane::new(bucket),
+            })
+            .collect();
         ShardedExchange {
+            core,
             shards,
-            session,
-            rngs,
             lanes,
-            dec_lane: ExchangeLane::new(cfg.bucket),
-            writer: BitWriter::new(),
-            bits_scratch: vec![0; active],
-            hops: Vec::new(),
-            meter: Meter::default(),
-            codec_seconds: 0.0,
-            cfg,
+            scratch,
+            bits_scratch,
         }
     }
 
@@ -87,9 +101,10 @@ impl ShardedExchange {
             grads.len()
         );
         agg.fill(0.0);
-        let net = self.cfg.network;
+        let net = self.core.cfg().network;
+        let shards = self.shards;
 
-        if !self.session.is_quantized() {
+        if !self.core.is_quantized() {
             // Full precision: 32·d per worker, reduced in worker order
             // exactly as the flat engine does; shards split the fp32
             // payload coordinate-evenly for the hop accounting.
@@ -102,93 +117,84 @@ impl ShardedExchange {
                     *a += g / m as f32;
                 }
             }
-            self.hops.clear();
+            let mut hops = Vec::with_capacity(shards);
             let mut step_seconds = 0.0f64;
-            for s in 0..self.shards {
-                let lo = s * d / self.shards;
-                let hi = (s + 1) * d / self.shards;
+            for s in 0..shards {
+                let lo = s * d / shards;
+                let hi = (s + 1) * d / shards;
                 let per_worker = 32 * (hi - lo) as u64;
                 let hop_bits = per_worker * m as u64;
                 let seconds = net.fan_time(m.saturating_sub(1), per_worker)
                     + net.fan_time(m.saturating_sub(1), hop_bits);
                 step_seconds = step_seconds.max(seconds);
-                self.hops.push(Hop {
+                hops.push(Hop {
                     label: format!("shard{s}"),
                     bits: hop_bits,
                     seconds,
                 });
             }
-            self.meter.record_raw(step_bits, step_seconds);
+            self.core.finish_step(hops, step_bits, step_seconds);
             return step_bits;
         }
 
         let t0 = std::time::Instant::now();
-        // Codebook lifecycle identical to the flat engine: lazy empirical
-        // book from lane 0's first quantization, sampled symbol counts
-        // every 10th step.
-        let mut lane0_quantized = false;
-        if self.session.needs_book() && self.session.book().is_none() {
-            self.lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
-            self.session.build_empirical_book(self.lanes[0].quantized());
-            lane0_quantized = true;
-        }
-        let sample_counts = self.session.needs_book() && step % 10 == 0;
+        // Member stage (quantize + sampled counts, no whole-frame
+        // encode): identical to the flat engine by construction.
+        self.core.member_stage(&mut self.lanes, grads, step, false);
 
-        for (w, ((lane, rng), grad)) in self
-            .lanes
-            .iter_mut()
-            .zip(self.rngs.iter_mut())
-            .zip(grads)
-            .enumerate()
-        {
-            if !(w == 0 && lane0_quantized) {
-                lane.quantize(&self.session, grad, rng);
-            }
-            if sample_counts {
-                lane.count_symbols(&self.session);
-            }
-        }
-        if sample_counts {
-            // Same worker-order f64 accumulation as the flat engine, so
-            // refreshed codebooks stay bit-identical across topologies.
-            for w in 0..m {
-                self.session.accumulate_counts(self.lanes[w].counts());
-            }
-        }
-
-        let bucket = self.session.bucket();
+        let bucket = self.core.session().bucket();
         let nb = self.lanes[0].quantized().norms.len();
+        let d = agg.len();
         let inv = 1.0 / m as f32;
-        for b in self.bits_scratch.iter_mut() {
-            *b = 0;
-        }
-        let mut step_bits = 0u64;
-        let mut step_seconds = 0.0f64;
-        self.hops.clear();
 
-        for s in 0..self.shards {
-            let buckets = shard_buckets(nb, self.shards, s);
-            let include_tail = s + 1 == self.shards;
-            let coord_lo = buckets.start * bucket;
+        // Split the aggregate into the S disjoint shard slices, in
+        // shard (schedule) order.
+        let mut parts: Vec<&mut [f32]> = Vec::with_capacity(shards);
+        {
+            let mut rest: &mut [f32] = agg;
+            let mut consumed = 0usize;
+            for s in 0..shards {
+                let buckets = shard_buckets(nb, shards, s);
+                let hi = if s + 1 == shards {
+                    d
+                } else {
+                    buckets.end * bucket
+                };
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(hi - consumed);
+                parts.push(head);
+                rest = tail;
+                consumed = hi;
+            }
+        }
+
+        // Shard-leader lanes: each encodes, decodes, and reduces its own
+        // disjoint slice — embarrassingly parallel, reduction still in
+        // worker order 0..M per coordinate inside each shard.
+        let par = self.core.use_parallel(shards, (m * d) / shards);
+        let session = self.core.session();
+        let lanes = &self.lanes;
+        let mut tasks: Vec<(&mut ShardScratch, &mut [f32])> =
+            self.scratch.iter_mut().zip(parts).collect();
+        let results = fan_out(par, &mut tasks, |s, task| {
+            let (scratch, out) = task;
+            let buckets = shard_buckets(nb, shards, s);
+            let include_tail = s + 1 == shards;
             let n_full = buckets.len() * bucket;
+            let mut per_worker = vec![0u64; m];
             let mut hop_bits = 0u64;
             let mut max_bits = 0u64;
-            for w in 0..m {
-                self.writer.clear();
-                let bits = self.lanes[w].encode_shard_into(
-                    &self.session,
+            for (w, lane) in lanes.iter().enumerate() {
+                scratch.writer.clear();
+                let bits = lane.encode_shard_into(
+                    session,
                     buckets.clone(),
                     include_tail,
-                    &mut self.writer,
+                    &mut scratch.writer,
                 );
-                self.writer.finish_ref();
-                let n_tail = if include_tail {
-                    self.lanes[w].tail_len()
-                } else {
-                    0
-                };
+                scratch.writer.finish_ref();
+                let n_tail = if include_tail { lane.tail_len() } else { 0 };
                 let view = EncodedView {
-                    bytes: self.writer.bytes(),
+                    bytes: scratch.writer.bytes(),
                     bits,
                     n_full,
                     n_tail,
@@ -197,16 +203,29 @@ impl ShardedExchange {
                 // Leader lane s decodes and reduces its shard, still in
                 // worker order — per-coordinate float ops identical to
                 // the flat reduction.
-                let ghat = self.dec_lane.decode_to_ghat(&self.session, view);
-                for (a, &g) in agg[coord_lo..coord_lo + n_full + n_tail]
-                    .iter_mut()
-                    .zip(ghat)
-                {
+                let ghat = scratch.dec.decode_to_ghat(session, view);
+                for (a, &g) in out.iter_mut().zip(ghat) {
                     *a += g * inv;
                 }
-                self.bits_scratch[w] += bits;
+                per_worker[w] = bits;
                 hop_bits += bits;
                 max_bits = max_bits.max(bits);
+            }
+            (per_worker, hop_bits, max_bits)
+        });
+        drop(tasks);
+
+        // Fold the per-shard results back in shard (schedule) order —
+        // hop records never depend on thread-completion order.
+        for b in self.bits_scratch.iter_mut() {
+            *b = 0;
+        }
+        let mut step_bits = 0u64;
+        let mut step_seconds = 0.0f64;
+        let mut hops = Vec::with_capacity(shards);
+        for (s, (per_worker, hop_bits, max_bits)) in results.into_iter().enumerate() {
+            for (acc, bits) in self.bits_scratch.iter_mut().zip(per_worker) {
+                *acc += bits;
             }
             step_bits += hop_bits;
             // Leader s: serialized fan-in of M−1 shard frames, then a
@@ -215,65 +234,30 @@ impl ShardedExchange {
             let seconds = net.fan_time(m.saturating_sub(1), max_bits)
                 + net.fan_time(m.saturating_sub(1), hop_bits);
             step_seconds = step_seconds.max(seconds);
-            self.hops.push(Hop {
+            hops.push(Hop {
                 label: format!("shard{s}"),
                 bits: hop_bits,
                 seconds,
             });
         }
 
-        self.codec_seconds += t0.elapsed().as_secs_f64();
-        self.meter.record_raw(step_bits, step_seconds);
+        self.core.add_codec_seconds(t0.elapsed().as_secs_f64());
+        self.core.finish_step(hops, step_bits, step_seconds);
         step_bits
     }
 }
 
 impl ExchangeBackend for ShardedExchange {
+    fn core(&self) -> &BackendCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BackendCore {
+        &mut self.core
+    }
+
     fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
         self.exchange_impl(step, grads, agg)
-    }
-
-    fn adapt(&mut self, grads: &[Vec<f32>]) {
-        if !self.session.is_quantized() {
-            return;
-        }
-        // Same stream the flat engine draws its subsample seed from.
-        let mut rng = self.rngs[0].fork(0xE57);
-        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
-            self.session.refresh_book_from_counts();
-        }
-    }
-
-    fn quantizer(&self) -> Option<&Quantizer> {
-        self.session.quantizer()
-    }
-
-    fn active_workers(&self) -> usize {
-        self.lanes.len()
-    }
-
-    fn is_quantized(&self) -> bool {
-        self.session.is_quantized()
-    }
-
-    fn force_clip(&mut self, c: f32) {
-        self.session.force_clip(c);
-    }
-
-    fn meter(&self) -> &Meter {
-        &self.meter
-    }
-
-    fn codec_seconds(&self) -> f64 {
-        self.codec_seconds
-    }
-
-    fn final_levels(&self) -> Option<Vec<f64>> {
-        self.session.final_levels()
-    }
-
-    fn last_hops(&self) -> &[Hop] {
-        &self.hops
     }
 }
 
@@ -281,8 +265,9 @@ impl ExchangeBackend for ShardedExchange {
 mod tests {
     use super::super::super::engine::{GradientExchange, ParallelMode};
     use super::*;
-    use crate::quant::Codec;
+    use crate::quant::{Codec, Method};
     use crate::sim::NetworkModel;
+    use crate::util::Rng;
 
     fn config(method: Method, workers: usize) -> ExchangeConfig {
         ExchangeConfig {
@@ -333,6 +318,39 @@ mod tests {
             );
             assert_eq!(shrd.meter().total_bits, flat.meter().total_bits);
         }
+    }
+
+    #[test]
+    fn parallel_shard_lanes_match_serial_bit_for_bit() {
+        let d = 1000;
+        let g = grads(4, d, 6);
+        let mut cfg_p = config(Method::Alq, 4);
+        cfg_p.parallel = ParallelMode::Parallel;
+        let mut serial = ShardedExchange::new(config(Method::Alq, 4), 3);
+        let mut parallel = ShardedExchange::new(cfg_p, 3);
+        let mut agg_s = vec![0.0f32; d];
+        let mut agg_p = vec![0.0f32; d];
+        for step in 0..12 {
+            if step == 5 {
+                serial.adapt(&g);
+                parallel.adapt(&g);
+            }
+            let bs = ExchangeBackend::exchange(&mut serial, step, &g, &mut agg_s);
+            let bp = ExchangeBackend::exchange(&mut parallel, step, &g, &mut agg_p);
+            assert_eq!(bs, bp, "step {step} bits");
+            assert_eq!(serial.bits_per_worker(), parallel.bits_per_worker());
+            let sb: Vec<u32> = agg_s.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u32> = agg_p.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, pb, "step {step} aggregate");
+            // Hop records stay in shard (schedule) order under the
+            // parallel fan-out.
+            let labels: Vec<&str> = parallel.last_hops().iter().map(|h| h.label.as_str()).collect();
+            assert_eq!(labels, ["shard0", "shard1", "shard2"]);
+        }
+        assert_eq!(
+            serial.meter().total_bits,
+            parallel.meter().total_bits
+        );
     }
 
     #[test]

@@ -1,79 +1,82 @@
 //! Hierarchical two-level tree: G groups reduce locally, group leaders
 //! exchange encoded partial aggregates, then broadcast down.
 //!
-//! Schedule (quantized payloads at every hop, per-hop bit metering):
+//! # Schedule
 //!
-//! 1. **up** — every worker quantizes + encodes its gradient (identical
-//!    per-worker RNG fork pattern and codebook lifecycle as the flat
-//!    engine); each group leader decodes its members' frames and forms
-//!    the group's partial mean contribution `Σ ĝ_w / M`.
+//! Quantized payloads at every hop, per-hop bit metering:
+//!
+//! 1. **up** — every worker quantizes + encodes its gradient (the shared
+//!    member stage, [`super::core::BackendCore::member_stage`] —
+//!    identical per-worker RNG fork pattern and codebook lifecycle as
+//!    the flat engine); each group leader decodes its members' frames
+//!    and forms the group's partial mean contribution `Σ ĝ_w / M`.
 //! 2. **xchg** — each leader *re-quantizes* its partial aggregate with
 //!    its own RNG stream, encodes it, and the G leaders exchange these
 //!    frames all-to-all.
 //! 3. **down** — the G leader frames are broadcast to every member; all
 //!    workers decode them and sum the G partials into the aggregate.
 //!
+//! # Hop structure
+//!
+//! Three [`Hop`]s in schedule order: `"up"` (M member frames),
+//! `"leader-xchg"` (G re-quantized partial frames), `"down"` (the same G
+//! frames broadcast). The top level carries G frames instead of M — the
+//! schedule the QSGD lineage prescribes once M outgrows one switch.
+//!
+//! # Determinism
+//!
 //! The up-level re-quantization necessarily changes the reduction
 //! numerics relative to the flat all-to-all (Σ_g Q(Σ_{w∈g} ĝ_w/M)
 //! instead of Σ_w ĝ_w/M), so the tree's determinism contract is a
 //! per-seed `params_hash` golden — bit-identical across runs and
-//! replicas, but a *different* fixed point than flat — asserted in
-//! `rust/tests/topology_parity.rs`. In exchange, the bits crossing the
-//! top level shrink from M to G frames: the schedule the QSGD lineage
-//! prescribes once M outgrows one switch.
+//! replicas, but a *different* fixed point than flat. Under
+//! `--parallel`, the member stage fans out across worker lanes and the
+//! G per-group reductions fan out across threads
+//! ([`super::core::fan_out`]): each group reduces its members in member
+//! order on its own thread and quantizes with its own leader stream,
+//! and the down-level sum runs on the calling thread in group order —
+//! so parallel and serial schedules are bit-identical
+//! (`rust/tests/topology_parity.rs`).
 
 use super::super::engine::ExchangeConfig;
-use super::super::session::{CodecSession, ExchangeLane};
+use super::super::session::ExchangeLane;
 use super::super::ExchangeBackend;
+use super::core::{disjoint_mut, fan_out, BackendCore};
 use super::{group_members, Hop};
-use crate::quant::{Method, Quantizer};
-use crate::sim::network::Meter;
 use crate::util::Rng;
 
 /// The two-level tree exchange backend (`--topology tree:G`).
 pub struct HierarchicalExchange {
-    cfg: ExchangeConfig,
+    core: BackendCore,
     groups: usize,
-    session: CodecSession,
-    rngs: Vec<Rng>,
     lanes: Vec<ExchangeLane>,
     /// One codec lane per group leader (partial-aggregate frames).
     leader_lanes: Vec<ExchangeLane>,
-    /// Scratch: one group's partial mean contribution.
-    partial: Vec<f32>,
-    hops: Vec<Hop>,
-    meter: Meter,
-    codec_seconds: f64,
+    /// One partial-mean buffer per group so group reductions can fan
+    /// out across threads.
+    partials: Vec<Vec<f32>>,
 }
 
 impl HierarchicalExchange {
+    /// Stand up the backend with `groups` leader groups over the shared
+    /// exchange config.
     pub fn new(cfg: ExchangeConfig, groups: usize) -> Self {
         assert!(groups >= 1, "tree topology needs at least one group");
-        let mut seeder = Rng::new(cfg.seed);
-        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
-        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
-        let active = if cfg.method == Method::SingleSgd {
-            1
-        } else {
-            cfg.workers
-        };
+        let bucket = cfg.bucket;
+        let core = BackendCore::new(cfg);
+        let active = core.active_workers();
         // A group needs at least one member; SingleSGD collapses to one
         // lane, so clamp rather than reject (config validation already
         // rejects tree:G > workers at the CLI).
         let groups = groups.min(active);
-        let lanes = (0..active).map(|_| ExchangeLane::new(cfg.bucket)).collect();
-        let leader_lanes = (0..groups).map(|_| ExchangeLane::new(cfg.bucket)).collect();
+        let lanes = core.new_lanes();
+        let leader_lanes = (0..groups).map(|_| ExchangeLane::new(bucket)).collect();
         HierarchicalExchange {
+            core,
             groups,
-            session,
-            rngs,
             lanes,
             leader_lanes,
-            partial: Vec::new(),
-            hops: Vec::new(),
-            meter: Meter::default(),
-            codec_seconds: 0.0,
-            cfg,
+            partials: vec![Vec::new(); groups],
         }
     }
 
@@ -86,105 +89,107 @@ impl HierarchicalExchange {
         );
         agg.fill(0.0);
         let d = agg.len();
-        if self.partial.len() != d {
-            self.partial.resize(d, 0.0);
-        }
-        let net = self.cfg.network;
+        let net = self.core.cfg().network;
         let groups = self.groups;
         let inv = 1.0 / m as f32;
+        for p in self.partials.iter_mut() {
+            if p.len() != d {
+                p.resize(d, 0.0);
+            }
+        }
 
-        if !self.session.is_quantized() {
+        if !self.core.is_quantized() {
             // Full precision: raw fp32 frames up, fp32 partials across
             // and down. The two-level association (Σ_g (Σ_{w∈g} g/M))
             // differs from flat's flat sum — the same schedule change the
             // quantized path makes, without codec noise.
             for g in 0..groups {
                 let members = group_members(m, groups, g);
-                self.partial.fill(0.0);
+                self.partials[0].fill(0.0);
                 for w in members {
-                    for (p, &x) in self.partial.iter_mut().zip(&grads[w]) {
+                    for (p, &x) in self.partials[0].iter_mut().zip(&grads[w]) {
                         *p += x * inv;
                     }
                 }
-                for (a, &p) in agg.iter_mut().zip(&self.partial) {
+                for (a, &p) in agg.iter_mut().zip(&self.partials[0]) {
                     *a += p;
                 }
             }
             let up_bits = 32 * d as u64 * m as u64;
             let lead_bits = 32 * d as u64 * groups as u64;
             let (up_s, xchg_s, down_s) = self.fp_hop_seconds(m, groups, 32 * d as u64, lead_bits);
-            self.push_level_hops(up_bits, lead_bits, up_s, xchg_s, down_s);
             let step_bits = up_bits + 2 * lead_bits;
-            self.meter.record_raw(step_bits, up_s + xchg_s + down_s);
+            self.core.finish_step(
+                level_hops(up_bits, lead_bits, up_s, xchg_s, down_s),
+                step_bits,
+                up_s + xchg_s + down_s,
+            );
             return step_bits;
         }
 
         let t0 = std::time::Instant::now();
-        // Member stage: identical codebook lifecycle to the flat engine.
-        let mut lane0_quantized = false;
-        if self.session.needs_book() && self.session.book().is_none() {
-            self.lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
-            self.session.build_empirical_book(self.lanes[0].quantized());
-            lane0_quantized = true;
-        }
-        let sample_counts = self.session.needs_book() && step % 10 == 0;
-
         // 1. up — every member quantizes, encodes, and (loopback-)decodes
-        // its own frame; the leader reduces the decoded estimates.
-        let mut up_bits = 0u64;
-        let mut up_seconds = 0.0f64;
-        for (w, ((lane, rng), grad)) in self
-            .lanes
-            .iter_mut()
-            .zip(self.rngs.iter_mut())
-            .zip(grads)
-            .enumerate()
-        {
-            if !(w == 0 && lane0_quantized) {
-                lane.quantize(&self.session, grad, rng);
-            }
-            if sample_counts {
-                lane.count_symbols(&self.session);
-            }
-            up_bits += lane.encode(&self.session);
-            lane.decode_own(&self.session);
-        }
-        if sample_counts {
-            for w in 0..m {
-                self.session.accumulate_counts(self.lanes[w].counts());
-            }
-        }
+        // its own frame via the shared member stage; the codebook
+        // lifecycle is identical to the flat engine.
+        self.core.member_stage(&mut self.lanes, grads, step, true);
+        let up_bits: u64 = self.lanes.iter().map(|l| l.bits()).sum();
 
         // 2. xchg — leaders re-quantize group partials and exchange.
-        let mut lead_bits = 0u64;
-        let mut max_lead_bits = 0u64;
-        for g in 0..groups {
-            let members = group_members(m, groups, g);
-            let leader = members.start;
-            self.partial.fill(0.0);
+        // Each group owns its partial buffer, leader lane, and leader
+        // RNG stream, so the G reductions fan out across threads; the
+        // per-group member reduction stays in member order.
+        let par = self.core.use_parallel(groups, d);
+        let (session, rngs) = self.core.session_and_rngs_mut();
+        let lanes = &self.lanes;
+        let leader_rngs = disjoint_mut(
+            rngs,
+            (0..groups).map(|g| group_members(m, groups, g).start),
+        );
+        let mut tasks: Vec<(&mut Vec<f32>, &mut ExchangeLane, &mut Rng, std::ops::Range<usize>)> =
+            self.partials
+                .iter_mut()
+                .zip(self.leader_lanes.iter_mut())
+                .zip(leader_rngs)
+                .enumerate()
+                .map(|(g, ((partial, lane), rng))| (partial, lane, rng, group_members(m, groups, g)))
+                .collect();
+        let results = fan_out(par, &mut tasks, |_g, task| {
+            let (partial, lane, rng, members) = task;
+            partial.fill(0.0);
             let mut max_member_bits = 0u64;
             for w in members.clone() {
-                max_member_bits = max_member_bits.max(self.lanes[w].bits());
-                for (p, &x) in self.partial.iter_mut().zip(self.lanes[w].ghat()) {
+                let member = &lanes[w];
+                max_member_bits = max_member_bits.max(member.bits());
+                for (p, &x) in partial.iter_mut().zip(member.ghat()) {
                     *p += x * inv;
                 }
             }
-            up_seconds =
-                up_seconds.max(net.fan_time(members.len().saturating_sub(1), max_member_bits));
             // The leader's own RNG stream draws the partial's
             // quantization noise; only the ciphertext is shared.
-            self.leader_lanes[g].quantize(&self.session, &self.partial, &mut self.rngs[leader]);
-            let bits = self.leader_lanes[g].encode(&self.session);
-            self.leader_lanes[g].decode_own(&self.session);
+            lane.quantize(session, &partial[..], rng);
+            let bits = lane.encode(session);
+            lane.decode_own(session);
+            (bits, max_member_bits, members.len())
+        });
+        drop(tasks);
+
+        // Fold results back in group (schedule) order.
+        let mut lead_bits = 0u64;
+        let mut max_lead_bits = 0u64;
+        let mut up_seconds = 0.0f64;
+        for &(bits, max_member_bits, n_members) in &results {
             lead_bits += bits;
             max_lead_bits = max_lead_bits.max(bits);
+            up_seconds =
+                up_seconds.max(net.fan_time(n_members.saturating_sub(1), max_member_bits));
         }
 
-        // 3. down — every worker sums the decoded leader partials; the
-        // sim performs the reduction once (all replicas would compute
-        // exactly this sum from exactly these frames).
-        for g in 0..groups {
-            for (a, &x) in agg.iter_mut().zip(self.leader_lanes[g].ghat()) {
+        // 3. down — every worker sums the decoded leader partials in
+        // group order on the calling thread; the sim performs the
+        // reduction once (all replicas would compute exactly this sum
+        // from exactly these frames).
+        for lane in self.leader_lanes.iter() {
+            for (a, &x) in agg.iter_mut().zip(lane.ghat()) {
                 *a += x;
             }
         }
@@ -196,11 +201,13 @@ impl HierarchicalExchange {
             down_seconds =
                 down_seconds.max(net.fan_time(members.len().saturating_sub(1), lead_bits));
         }
-        self.push_level_hops(up_bits, lead_bits, up_seconds, xchg_seconds, down_seconds);
         let step_bits = up_bits + 2 * lead_bits;
-        self.codec_seconds += t0.elapsed().as_secs_f64();
-        self.meter
-            .record_raw(step_bits, up_seconds + xchg_seconds + down_seconds);
+        self.core.add_codec_seconds(t0.elapsed().as_secs_f64());
+        self.core.finish_step(
+            level_hops(up_bits, lead_bits, up_seconds, xchg_seconds, down_seconds),
+            step_bits,
+            up_seconds + xchg_seconds + down_seconds,
+        );
         step_bits
     }
 
@@ -213,7 +220,7 @@ impl HierarchicalExchange {
         frame_bits: u64,
         lead_total: u64,
     ) -> (f64, f64, f64) {
-        let net = &self.cfg.network;
+        let net = &self.core.cfg().network;
         let mut up = 0.0f64;
         let mut down = 0.0f64;
         for g in 0..groups {
@@ -224,72 +231,40 @@ impl HierarchicalExchange {
         let xchg = net.fan_time(groups.saturating_sub(1), frame_bits);
         (up, xchg, down)
     }
+}
 
-    fn push_level_hops(&mut self, up: u64, lead: u64, up_s: f64, xchg_s: f64, down_s: f64) {
-        self.hops.clear();
-        self.hops.push(Hop {
+/// The tree's three hops in schedule order: up, leader-xchg, down.
+fn level_hops(up: u64, lead: u64, up_s: f64, xchg_s: f64, down_s: f64) -> Vec<Hop> {
+    vec![
+        Hop {
             label: "up".to_string(),
             bits: up,
             seconds: up_s,
-        });
-        self.hops.push(Hop {
+        },
+        Hop {
             label: "leader-xchg".to_string(),
             bits: lead,
             seconds: xchg_s,
-        });
-        self.hops.push(Hop {
+        },
+        Hop {
             label: "down".to_string(),
             bits: lead,
             seconds: down_s,
-        });
-    }
+        },
+    ]
 }
 
 impl ExchangeBackend for HierarchicalExchange {
+    fn core(&self) -> &BackendCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut BackendCore {
+        &mut self.core
+    }
+
     fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
         self.exchange_impl(step, grads, agg)
-    }
-
-    fn adapt(&mut self, grads: &[Vec<f32>]) {
-        if !self.session.is_quantized() {
-            return;
-        }
-        let mut rng = self.rngs[0].fork(0xE57);
-        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
-            self.session.refresh_book_from_counts();
-        }
-    }
-
-    fn quantizer(&self) -> Option<&Quantizer> {
-        self.session.quantizer()
-    }
-
-    fn active_workers(&self) -> usize {
-        self.lanes.len()
-    }
-
-    fn is_quantized(&self) -> bool {
-        self.session.is_quantized()
-    }
-
-    fn force_clip(&mut self, c: f32) {
-        self.session.force_clip(c);
-    }
-
-    fn meter(&self) -> &Meter {
-        &self.meter
-    }
-
-    fn codec_seconds(&self) -> f64 {
-        self.codec_seconds
-    }
-
-    fn final_levels(&self) -> Option<Vec<f64>> {
-        self.session.final_levels()
-    }
-
-    fn last_hops(&self) -> &[Hop] {
-        &self.hops
     }
 }
 
@@ -297,7 +272,7 @@ impl ExchangeBackend for HierarchicalExchange {
 mod tests {
     use super::super::super::engine::ParallelMode;
     use super::*;
-    use crate::quant::Codec;
+    use crate::quant::{Codec, Method};
     use crate::sim::NetworkModel;
 
     fn config(method: Method, workers: usize) -> ExchangeConfig {
@@ -336,6 +311,38 @@ mod tests {
             assert!(hops[1].bits < hops[0].bits, "step {step}");
             assert_eq!(hops[1].bits, hops[2].bits);
         }
+    }
+
+    #[test]
+    fn parallel_group_reductions_match_serial_bit_for_bit() {
+        let d = 900;
+        let g = grads(6, d, 5);
+        let mut cfg_p = config(Method::Alq, 6);
+        cfg_p.parallel = ParallelMode::Parallel;
+        let mut serial = HierarchicalExchange::new(config(Method::Alq, 6), 3);
+        let mut parallel = HierarchicalExchange::new(cfg_p, 3);
+        let mut agg_s = vec![0.0f32; d];
+        let mut agg_p = vec![0.0f32; d];
+        for step in 0..12 {
+            if step == 5 {
+                serial.adapt(&g);
+                parallel.adapt(&g);
+            }
+            let bs = ExchangeBackend::exchange(&mut serial, step, &g, &mut agg_s);
+            let bp = ExchangeBackend::exchange(&mut parallel, step, &g, &mut agg_p);
+            assert_eq!(bs, bp, "step {step} bits");
+            let sb: Vec<u32> = agg_s.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u32> = agg_p.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, pb, "step {step} aggregate");
+            // Hop records stay in level (schedule) order.
+            let labels: Vec<&str> = parallel.last_hops().iter().map(|h| h.label.as_str()).collect();
+            assert_eq!(labels, ["up", "leader-xchg", "down"]);
+        }
+        assert_eq!(
+            ExchangeBackend::final_levels(&serial),
+            ExchangeBackend::final_levels(&parallel)
+        );
+        assert_eq!(serial.meter().total_bits, parallel.meter().total_bits);
     }
 
     #[test]
@@ -390,9 +397,6 @@ mod tests {
         let mut agg = vec![0.0f32; d];
         let bits = ExchangeBackend::exchange(&mut tree, 0, &g, &mut agg);
         assert!(bits > 0);
-        assert_eq!(
-            tree.last_hops().iter().map(|h| h.bits).sum::<u64>(),
-            bits
-        );
+        assert_eq!(tree.last_hops().iter().map(|h| h.bits).sum::<u64>(), bits);
     }
 }

@@ -25,6 +25,8 @@ USAGE:
   aqsgd train [--method ALQ] [--workers 4] [--bits 3] [--bucket 8192]
               [--iters 3000] [--seed 1] [--model mlp] [--parallel auto|on|off]
               [--topology flat|sharded:S|tree:G|ring] [--codec huffman|elias]
+              (--parallel fans out flat/sharded/tree lanes, bit-identical
+               to serial; the ring schedule is inherently serial)
   aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
   aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
               [--topology flat|sharded:S|tree:G]

@@ -131,7 +131,7 @@ impl Method {
     /// concentrate at ~1/√bucket with an unbounded-ratio tail, which at 3
     /// bits leaves any 4-magnitude level set variance-dominated by the
     /// top bin — an artifact of the substitute workload, not of the
-    /// method (deep-net gradients are heavy-tailed; see DESIGN.md §9).
+    /// method (deep-net gradients are heavy-tailed; see DESIGN.md §10).
     /// Under L∞ the adaptive-vs-fixed comparison reproduces the paper's
     /// shape, and ALQ/AMQ still optimize the exact variance objective.
     pub fn norm_type(&self) -> NormType {

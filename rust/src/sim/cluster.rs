@@ -10,10 +10,14 @@
 //! Single-process simulation of the M workers — exactly the paper's own
 //! methodology ("we simulate training with 4-GPUs on a single GPU by
 //! quantizing and dequantizing the gradient from 4 mini-batches"), plus
-//! real bit accounting. The whole codec path is delegated to
-//! [`crate::exchange::GradientExchange`] (shared with the wire-true
-//! distributed version in `crate::coordinator`), which fans the worker
-//! lanes out across threads without changing a single bit of the run.
+//! real bit accounting. The whole codec path is delegated to the
+//! exchange backend the configured `--topology` selects (the flat
+//! engine, sharded leaders, a two-level tree, or ring all-reduce —
+//! `crate::exchange::topology`), all sharing one
+//! [`crate::exchange::BackendCore`]; `--parallel` fans the flat worker
+//! lanes, the sharded shard-leader lanes, and the tree group reductions
+//! out across threads without changing a single bit of the run
+//! (DESIGN.md §8).
 
 use crate::exchange::{
     make_backend, ExchangeBackend, ExchangeConfig, ParallelMode, TopologySpec,
@@ -41,7 +45,8 @@ pub struct ClusterConfig {
     /// Record gradient/quantization variance every this many steps (0 = off).
     pub variance_every: usize,
     pub network: NetworkModel,
-    /// Worker-lane scheduling inside the exchange engine.
+    /// Lane scheduling inside the exchange backend (applies to flat,
+    /// sharded, and tree; the ring schedule is inherently serial).
     pub parallel: ParallelMode,
     /// Exchange schedule (`--topology flat|sharded:S|tree:G|ring`).
     pub topology: TopologySpec,

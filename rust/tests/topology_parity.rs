@@ -1,4 +1,5 @@
-//! Topology-subsystem parity and metering contracts (ISSUE 2):
+//! Topology-subsystem parity and metering contracts (ISSUE 2 + the
+//! BackendCore parallelization of ISSUE 3):
 //!
 //! * **Sharded ≡ flat, bit for bit.** Sharding re-routes frames without
 //!   touching payload or reduction order, so `params_hash`, per-step
@@ -10,9 +11,15 @@
 //!   reduce-scatter hop), so the reduction order necessarily differs
 //!   from flat; the contract is bit-determinism per seed, replica
 //!   agreement, and a trajectory that still learns.
+//! * **`--parallel` changes nothing but wall time.** Every backend must
+//!   produce bit-identical runs (`params_hash`, per-step bits, levels)
+//!   under `--parallel on` and `--parallel off` — the DESIGN.md §8
+//!   BackendCore contract.
 //! * **Hop self-consistency.** For every topology, Σ per-hop metered
 //!   bits equals the step total returned by `exchange()` and
-//!   accumulated by the meter.
+//!   accumulated by the meter — and hop records appear in schedule
+//!   order regardless of lane scheduling (never in thread-completion
+//!   order).
 //! * **Selectable everywhere.** `--topology` flows through the sim CLI
 //!   config and the TCP coordinator (leader relay modes + workers).
 
@@ -105,7 +112,10 @@ fn tree_and_ring_still_learn() {
 }
 
 /// Σ per-hop bits == step total == meter accumulation, for every
-/// topology, on raw backends driven directly.
+/// topology, on raw backends driven directly — in both lane-scheduling
+/// modes, with hop records in deterministic (schedule) order: the
+/// parallel run's hop label sequence and per-hop bits must equal the
+/// serial run's exactly, never thread-completion order.
 #[test]
 fn hop_bits_sum_to_step_totals_for_every_topology() {
     let d = 1500; // 11 buckets of 128 + tail 92
@@ -120,24 +130,28 @@ fn hop_bits_sum_to_step_totals_for_every_topology() {
         TopologySpec::Tree(2),
         TopologySpec::Ring,
     ] {
-        let cfg = ExchangeConfig {
+        let cfg = |parallel| ExchangeConfig {
             method: Method::Alq,
             workers,
             bits: 3,
             bucket: 128,
             seed: 9,
             network: NetworkModel::paper_testbed(),
-            parallel: ParallelMode::Serial,
+            parallel,
             codec: Codec::Huffman,
         };
-        let mut backend = make_backend(cfg, topology);
+        let mut backend = make_backend(cfg(ParallelMode::Serial), topology);
+        let mut par_backend = make_backend(cfg(ParallelMode::Parallel), topology);
         let mut agg = vec![0.0f32; d];
         let mut accumulated = 0u64;
         for step in 0..8 {
             if step == 4 {
                 backend.adapt(&grads);
+                par_backend.adapt(&grads);
             }
             let bits = backend.exchange(step, &grads, &mut agg);
+            let par_bits = par_backend.exchange(step, &grads, &mut agg);
+            assert_eq!(bits, par_bits, "{} step {step}", topology.name());
             let hops = backend.last_hops();
             assert!(!hops.is_empty(), "{}", topology.name());
             assert_eq!(
@@ -151,6 +165,21 @@ fn hop_bits_sum_to_step_totals_for_every_topology() {
                 "{}",
                 topology.name()
             );
+            // Hop determinism: parallel lanes must report the same hop
+            // sequence (labels AND bits) as the serial schedule.
+            let serial_hops: Vec<(&str, u64)> =
+                hops.iter().map(|h| (h.label.as_str(), h.bits)).collect();
+            let parallel_hops: Vec<(&str, u64)> = par_backend
+                .last_hops()
+                .iter()
+                .map(|h| (h.label.as_str(), h.bits))
+                .collect();
+            assert_eq!(
+                serial_hops,
+                parallel_hops,
+                "{} step {step}: hop records must be in schedule order",
+                topology.name()
+            );
             accumulated += bits;
         }
         assert_eq!(
@@ -160,6 +189,51 @@ fn hop_bits_sum_to_step_totals_for_every_topology() {
             topology.name()
         );
         assert!(backend.meter().total_time > 0.0, "{}", topology.name());
+    }
+}
+
+/// The ISSUE 3 acceptance criterion: every backend is bit-identical
+/// between `--parallel on` and `--parallel off` over a full training
+/// run — `params_hash`, per-step bits, total bits, and adapted levels.
+#[test]
+fn every_backend_is_bit_identical_across_parallel_modes() {
+    for topology in [
+        TopologySpec::Flat,
+        TopologySpec::Sharded(3),
+        TopologySpec::Tree(2),
+        TopologySpec::Ring,
+    ] {
+        let run = |mode| {
+            let mut cfg = config(Method::Alq, 40, topology);
+            cfg.parallel = mode;
+            Cluster::new(cfg).train(&mut task(4, 3))
+        };
+        let serial = run(ParallelMode::Serial);
+        let parallel = run(ParallelMode::Parallel);
+        assert_eq!(
+            serial.params_hash,
+            parallel.params_hash,
+            "{}: params_hash",
+            topology.name()
+        );
+        assert_eq!(
+            serial.comm_bits,
+            parallel.comm_bits,
+            "{}: comm_bits",
+            topology.name()
+        );
+        assert_eq!(
+            serial.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+            parallel.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+            "{}: per-step bits",
+            topology.name()
+        );
+        assert_eq!(
+            serial.final_levels,
+            parallel.final_levels,
+            "{}: levels",
+            topology.name()
+        );
     }
 }
 
