@@ -15,7 +15,7 @@ fn engine(method: Method, workers: usize, mode: ParallelMode) -> GradientExchang
     GradientExchange::new(ExchangeConfig {
         method,
         workers,
-        bits: 3,
+        bits: aqsgd::exchange::BitsPolicy::Fixed(3),
         bucket: 8192,
         seed: 1,
         network: NetworkModel::paper_testbed(),

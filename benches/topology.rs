@@ -18,7 +18,7 @@
 //!   total injected bits grow ~2(M−1)/M·flat.
 
 mod bench_util;
-use aqsgd::exchange::{make_backend, ExchangeConfig, ParallelMode, TopologySpec};
+use aqsgd::exchange::{make_backend, BitsPolicy, ExchangeConfig, ParallelMode, TopologySpec};
 use aqsgd::quant::{Codec, Method};
 use aqsgd::sim::{NetworkModel, Topology};
 use aqsgd::util::Rng;
@@ -40,7 +40,7 @@ fn config(workers: usize, topo: TopologySpec, parallel: ParallelMode) -> Exchang
     ExchangeConfig {
         method: Method::Alq,
         workers,
-        bits: 3,
+        bits: BitsPolicy::Fixed(3),
         bucket: 8192,
         seed: 1,
         network,
@@ -72,6 +72,56 @@ fn run_cell(
     let bits_per_step = backend.meter().total_bits / steps;
     let net_ms = backend.meter().total_time / steps as f64 * 1e3;
     (wall, bits_per_step, net_ms, hops)
+}
+
+/// Bits-policy savings: total metered bits (and mean width) each
+/// `--bits-policy` produces on the same gradients — the meter charges
+/// the *actual* per-step width, so the savings column is measured, not
+/// nominal. Verifies per backend that the hop-sum invariant holds while
+/// the width moves.
+fn bits_policy_section(workers: usize, grads: &[Vec<f32>], agg: &mut [f32]) {
+    header(&format!("bits-policy savings (M = {workers}, 24 steps)"));
+    let steps = 24usize;
+    let policies = [
+        BitsPolicy::Fixed(3),
+        BitsPolicy::parse("schedule:4@0,3@8,2@16").unwrap(),
+        BitsPolicy::parse("variance:2-4").unwrap(),
+    ];
+    println!(
+        "{:<12} {:<22} {:>14} {:>12} {:>10}",
+        "topology", "policy", "total bits", "mean width", "vs fixed"
+    );
+    for topo in [TopologySpec::Flat, TopologySpec::Tree(2)] {
+        let mut fixed_total = 0u64;
+        for policy in &policies {
+            let mut cfg = config(workers, topo, ParallelMode::Serial);
+            cfg.bits = policy.clone();
+            let mut backend = make_backend(cfg, topo);
+            let mut total = 0u64;
+            let mut width_sum = 0u64;
+            for step in 0..steps {
+                if step == 8 {
+                    backend.adapt(grads);
+                }
+                let bits = backend.exchange(step, grads, agg);
+                let hop_sum: u64 = backend.last_hops().iter().map(|h| h.bits).sum();
+                assert_eq!(hop_sum, bits, "{}: hop-sum under {}", topo.name(), policy);
+                total += bits;
+                width_sum += backend.step_width() as u64;
+            }
+            if policy.is_fixed() {
+                fixed_total = total;
+            }
+            println!(
+                "{:<12} {:<22} {:>14} {:>12.2} {:>9.1}%",
+                topo.name(),
+                policy.name(),
+                total,
+                width_sum as f64 / steps as f64,
+                100.0 * total as f64 / fixed_total.max(1) as f64
+            );
+        }
+    }
 }
 
 fn main() {
@@ -132,5 +182,12 @@ fn main() {
             );
         }
     }
+    let mut rng = Rng::new(11);
+    let grads: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..d).map(|_| (rng.normal() * 0.01) as f32).collect())
+        .collect();
+    let mut agg = vec![0.0f32; d];
+    bits_policy_section(4, &grads, &mut agg);
+
     println!("\n(regenerate the EXPERIMENTS.md tables from this output)");
 }

@@ -26,6 +26,14 @@ fi
 if cargo clippy --version >/dev/null 2>&1; then
   step "cargo clippy (advisory)"
   lint cargo clippy --all-targets
+  # The exchange tree is held to -D warnings: the bit-budget refactor
+  # keeps rust/src/exchange/ clippy-clean, and regressions there gate.
+  step "cargo clippy gate: rust/src/exchange must be warning-free"
+  clippy_out=$(cargo clippy --all-targets --message-format=short 2>&1 || true)
+  if printf '%s\n' "$clippy_out" | grep -E '^rust/src/exchange/[^ ]*: (warning|error)'; then
+    echo "FAIL: clippy findings in rust/src/exchange (held to -D warnings)"
+    exit 1
+  fi
 else
   step "cargo clippy not installed — skipping lints"
 fi
@@ -48,6 +56,12 @@ step "smoke: one-step hierarchical topology run"
 
 step "smoke: one-step sharded topology run with parallel lanes"
 ./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --topology sharded:2 --parallel on
+
+step "smoke: scheduled bit budget (width switches mid-run)"
+./target/release/aqsgd train --iters 12 --seeds 1 --bucket 512 --bits-policy schedule:4@0,2@6
+
+step "smoke: variance bit budget over the tree topology"
+./target/release/aqsgd train --iters 12 --seeds 1 --bucket 512 --topology tree:2 --bits-policy variance:2-4
 
 step "docs build (cargo doc --no-deps; gate: no missing_docs warnings)"
 doc_out=$(cargo doc --no-deps 2>&1) || { printf '%s\n' "$doc_out"; exit 1; }

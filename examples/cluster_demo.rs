@@ -32,7 +32,7 @@ fn main() -> Result<()> {
                 worker: w,
                 world,
                 method: Method::Alq,
-                bits: 3,
+                bits: aqsgd::exchange::BitsPolicy::Fixed(3),
                 bucket: 512,
                 iters,
                 lr: LrSchedule::paper_default(0.1, iters),

@@ -28,7 +28,7 @@ fn main() -> Result<()> {
     let cfg = ClusterConfig {
         method: Method::Alq,
         workers,
-        bits: 3,
+        bits: aqsgd::exchange::BitsPolicy::Fixed(3),
         bucket: 1024,
         iters,
         lr: LrSchedule::paper_default(0.05, iters),

@@ -43,7 +43,7 @@ fn main() -> Result<()> {
     let cfg = ClusterConfig {
         method: Method::Alq,
         workers,
-        bits: 3,
+        bits: aqsgd::exchange::BitsPolicy::Fixed(3),
         bucket: 8192, // the paper's ImageNet bucket size
         iters: steps,
         lr: LrSchedule {

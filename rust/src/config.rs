@@ -2,7 +2,7 @@
 //! Table 3-shaped defaults. Dependency-free (no TOML/serde in the image's
 //! vendored crate set); values are validated on parse.
 
-use crate::exchange::{ParallelMode, TopologySpec};
+use crate::exchange::{BitsPolicy, ParallelMode, TopologySpec};
 use crate::quant::{Codec, Method};
 use anyhow::{bail, Context, Result};
 
@@ -11,7 +11,12 @@ use anyhow::{bail, Context, Result};
 pub struct RunConfig {
     pub method: Method,
     pub workers: usize,
+    /// Constant bit width (`--bits B`, shorthand for `fixed:B`).
+    /// Superseded by `--bits-policy` when one is given.
     pub bits: u32,
+    /// Dynamic bit-budget policy
+    /// (`--bits-policy fixed:B|schedule:B1@s1,...|variance[:MIN-MAX[@T]]`).
+    pub bits_policy: Option<BitsPolicy>,
     pub bucket: usize,
     pub iters: usize,
     pub lr: f32,
@@ -39,6 +44,7 @@ impl Default for RunConfig {
             method: Method::Alq,
             workers: 4,
             bits: 3,
+            bits_policy: None,
             bucket: 8192,
             iters: 3000,
             lr: 0.1,
@@ -79,6 +85,14 @@ impl RunConfig {
                 }
                 "workers" | "m" => self.workers = val.parse()?,
                 "bits" => self.bits = val.parse()?,
+                "bits-policy" => {
+                    self.bits_policy = Some(BitsPolicy::parse(val).with_context(|| {
+                        format!(
+                            "bad --bits-policy {val:?} \
+                             (fixed:B | schedule:B1@s1,B2@s2,... | variance[:MIN-MAX[@T]])"
+                        )
+                    })?)
+                }
                 "bucket" => self.bucket = val.parse()?,
                 "iters" => self.iters = val.parse()?,
                 "lr" => self.lr = val.parse()?,
@@ -107,12 +121,36 @@ impl RunConfig {
         self.validate()
     }
 
+    /// The effective bit-budget policy: `--bits-policy` when given,
+    /// otherwise `fixed:--bits`.
+    pub fn effective_bits_policy(&self) -> BitsPolicy {
+        self.bits_policy
+            .clone()
+            .unwrap_or(BitsPolicy::Fixed(self.bits))
+    }
+
     pub fn validate(&self) -> Result<()> {
         if !(2..=8).contains(&self.bits) {
             bail!("bits must be in [2, 8], got {}", self.bits);
         }
         if self.workers == 0 || self.iters == 0 || self.bucket == 0 {
             bail!("workers, iters, bucket must be positive");
+        }
+        if let Some(policy) = &self.bits_policy {
+            // A dynamic budget over a width-insensitive level family
+            // (TRN is ternary at every width) would report fictitious
+            // width moves with zero payload effect — reject up front.
+            if !policy.is_fixed()
+                && self.method.is_quantized()
+                && self.method.effective_bits(2) == self.method.effective_bits(8)
+            {
+                bail!(
+                    "--bits-policy {} has no effect for {}: its level family ignores the \
+                     bit width (always ternary); use --bits B / fixed:B",
+                    policy.name(),
+                    self.method
+                );
+            }
         }
         if let TopologySpec::Tree(g) = self.topology {
             if g > self.workers {
@@ -142,7 +180,7 @@ impl RunConfig {
         crate::sim::ClusterConfig {
             method: self.method,
             workers: self.workers,
-            bits: self.bits,
+            bits: self.effective_bits_policy(),
             bucket: self.bucket,
             iters: self.iters,
             lr: LrSchedule::paper_default(self.lr, self.iters),
@@ -218,6 +256,35 @@ mod tests {
         assert!(RunConfig::from_args(&args("--topology tree:9 --workers 4")).is_err());
         assert!(RunConfig::from_args(&args("--codec elias --method amq")).is_err());
         assert!(RunConfig::from_args(&args("--codec morse")).is_err());
+    }
+
+    #[test]
+    fn parses_bits_policy() {
+        // Default: fixed at --bits.
+        let c = RunConfig::from_args(&args("--bits 4")).unwrap();
+        assert_eq!(c.effective_bits_policy(), BitsPolicy::Fixed(4));
+        assert_eq!(c.cluster().bits, BitsPolicy::Fixed(4));
+        // Explicit policies flow through to the cluster config.
+        let c = RunConfig::from_args(&args("--bits-policy schedule:4@0,2@100")).unwrap();
+        assert_eq!(
+            c.cluster().bits,
+            BitsPolicy::parse("schedule:4@0,2@100").unwrap()
+        );
+        let c = RunConfig::from_args(&args("--bits-policy variance:2-4@0.2")).unwrap();
+        assert!(matches!(c.cluster().bits, BitsPolicy::Variance(_)));
+        // --bits-policy wins over --bits.
+        let c = RunConfig::from_args(&args("--bits 8 --bits-policy fixed:2")).unwrap();
+        assert_eq!(c.cluster().bits, BitsPolicy::Fixed(2));
+        // Malformed policies are CLI errors.
+        assert!(RunConfig::from_args(&args("--bits-policy fixed:9")).is_err());
+        assert!(RunConfig::from_args(&args("--bits-policy schedule:3@5")).is_err());
+        assert!(RunConfig::from_args(&args("--bits-policy variance:4-2")).is_err());
+        assert!(RunConfig::from_args(&args("--bits-policy sometimes")).is_err());
+        // TRN's levels ignore the width: dynamic budgets are rejected,
+        // fixed is fine.
+        assert!(RunConfig::from_args(&args("--method trn --bits-policy variance:2-4")).is_err());
+        assert!(RunConfig::from_args(&args("--method trn --bits-policy schedule:3@0,2@5")).is_err());
+        assert!(RunConfig::from_args(&args("--method trn --bits-policy fixed:3")).is_ok());
     }
 
     #[test]

@@ -6,6 +6,9 @@ use crate::quant::{EncodedGrad, EncodedView};
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
 
+/// `WireGrad::width` value for raw fp32 frames (no quantizer).
+pub const WIDTH_FP32: u32 = 0;
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Worker announces itself: (worker_id, world_size).
@@ -32,20 +35,21 @@ pub enum Msg {
     Done,
 }
 
-/// Serializable form of [`EncodedGrad`].
+/// Serializable form of [`EncodedGrad`], plus the quantization width
+/// the frame was encoded at. Piggybacking the width on the frame is
+/// what lets a dynamic `--bits-policy` run over the relay with no extra
+/// round-trip: the leader stays a dumb switchboard, and every receiver
+/// decodes each peer frame with the bank slot the frame names.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireGrad {
     pub bits: u64,
     pub n_full: u32,
     pub n_tail: u32,
     pub bucket: u32,
+    /// Quantization bit-width of this frame ([`WIDTH_FP32`] for raw
+    /// fp32 payloads). Metadata, not charged as payload bits.
+    pub width: u32,
     pub bytes: Vec<u8>,
-}
-
-impl From<&EncodedGrad> for WireGrad {
-    fn from(e: &EncodedGrad) -> Self {
-        WireGrad::from_view(e.view())
-    }
 }
 
 impl WireGrad {
@@ -75,13 +79,15 @@ impl WireGrad {
     }
 
     /// Build a wire frame from a borrowed encoded frame (the one copy
-    /// the wire inherently needs: the frame must own its payload).
-    pub fn from_view(v: EncodedView<'_>) -> WireGrad {
+    /// the wire inherently needs: the frame must own its payload),
+    /// stamped with the width it was encoded at.
+    pub fn from_view(v: EncodedView<'_>, width: u32) -> WireGrad {
         WireGrad {
             bits: v.bits,
             n_full: v.n_full as u32,
             n_tail: v.n_tail as u32,
             bucket: v.bucket as u32,
+            width,
             bytes: v.bytes.to_vec(),
         }
     }
@@ -114,6 +120,7 @@ impl Buf {
         self.u32(g.n_full);
         self.u32(g.n_tail);
         self.u32(g.bucket);
+        self.u32(g.width);
         self.bytes(&g.bytes);
     }
 }
@@ -155,6 +162,7 @@ impl<'a> Cur<'a> {
             n_full: self.u32()?,
             n_tail: self.u32()?,
             bucket: self.u32()?,
+            width: self.u32()?,
             bytes: self.bytes()?,
         })
     }
@@ -311,6 +319,7 @@ mod tests {
             n_full: 128,
             n_tail: 5,
             bucket: 64,
+            width: 3,
             bytes: vec![1, 2, 3, 255, 0],
         };
         roundtrip(Msg::Grad { step: 7, grad: g.clone() });
@@ -364,15 +373,20 @@ mod tests {
             n_tail: 2,
             bucket: 5,
         };
-        let w = WireGrad::from(&e);
+        let w = WireGrad::from_view(e.view(), 4);
+        assert_eq!(w.width, 4);
         let back = w.to_encoded();
         assert_eq!(back.bytes, e.bytes);
         assert_eq!(back.bits, e.bits);
         assert_eq!(back.n_full, e.n_full);
-        // View paths agree with the owned conversion.
-        let via_view = WireGrad::from_view(e.view());
-        assert_eq!(via_view, w);
         let v = w.view();
         assert_eq!((v.bytes, v.bits, v.n_full, v.n_tail, v.bucket), (&e.bytes[..], 21, 10, 2, 5));
+        // The width survives a wire roundtrip on every frame kind.
+        let mut buf = Vec::new();
+        Msg::Grad { step: 1, grad: w.clone() }.write_to(&mut buf).unwrap();
+        match Msg::read_from(&mut buf.as_slice()).unwrap() {
+            Msg::Grad { grad, .. } => assert_eq!(grad.width, 4),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

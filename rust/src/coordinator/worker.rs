@@ -20,9 +20,10 @@
 //!   decode identical leader frames); the re-quantized partials make
 //!   the trajectory a distinct per-seed golden from flat.
 
-use super::messages::{Msg, WireGrad};
+use super::messages::{Msg, WireGrad, WIDTH_FP32};
+use crate::exchange::budget::select_width;
 use crate::exchange::topology::{group_members, group_of, shard_buckets, TopologySpec};
-use crate::exchange::{CodecSession, ExchangeLane};
+use crate::exchange::{BitsPolicy, CodecSession, ExchangeLane};
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
 use crate::quant::bitio::BitWriter;
@@ -38,7 +39,10 @@ pub struct WorkerConfig {
     pub worker: usize,
     pub world: usize,
     pub method: Method,
-    pub bits: u32,
+    /// Bit-budget policy (must be the same on every replica; each frame
+    /// self-describes its width on the wire, so replicas only need to
+    /// *hold* every reachable width, not agree per step).
+    pub bits: BitsPolicy,
     pub bucket: usize,
     pub iters: usize,
     pub lr: LrSchedule,
@@ -84,10 +88,16 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
         Box::new(Sgd::new(cfg.weight_decay))
     };
 
-    let mut session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
-    // Uniform initial codebook: identical on every replica by
-    // construction (no replica may depend on another's first batch).
+    let mut session =
+        CodecSession::with_policy(cfg.method, &cfg.bits, cfg.bucket).with_codec(cfg.codec);
+    // Uniform initial codebooks (one per reachable width): identical on
+    // every replica by construction (no replica may depend on another's
+    // first batch).
     session.init_uniform_book();
+    // Per-worker bit controller. Replicas need not pick the same width:
+    // every frame carries the width it was encoded at, so receivers
+    // always decode with the sender's bank slot.
+    let mut bitctl = cfg.bits.controller();
     let mut lane = ExchangeLane::new(cfg.bucket);
     let mut shard_writer = BitWriter::new();
 
@@ -113,7 +123,14 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
             let mut rng = Rng::new(cfg.seed ^ step as u64);
             if session.adapt(prev_decoded.iter().map(|g| g.as_slice()), &mut rng) {
                 level_updates += 1;
+                bitctl.observe_width_profile(session.width_profile());
             }
+        }
+
+        // Per-step width selection (a no-op for fixed:B): the shared
+        // controller protocol, observing this worker's own gradient.
+        if session.is_quantized() {
+            select_width(bitctl.as_mut(), &mut session, step, &grad);
         }
 
         match cfg.topology {
@@ -188,6 +205,36 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
     })
 }
 
+/// The width stamp for frames this session currently encodes
+/// ([`WIDTH_FP32`] when nothing quantizes).
+fn wire_width(s: &CodecSession) -> u32 {
+    s.active_bits().unwrap_or(WIDTH_FP32)
+}
+
+/// Decode one received wire frame with the bank slot the frame names
+/// (peers under a dynamic `--bits-policy` may encode at a different
+/// width than ours this step). Fails cleanly when the frame names a
+/// width our policy never declared — a job misconfiguration, not a
+/// codec bug.
+fn decode_wire<'a>(
+    lane: &'a mut ExchangeLane,
+    s: &CodecSession,
+    wire: &WireGrad,
+) -> Result<&'a [f32]> {
+    if s.is_quantized() {
+        if !s.has_width(wire.width) {
+            bail!(
+                "peer frame encoded at width {} which this worker's --bits-policy never \
+                 declares (all replicas must run the same policy)",
+                wire.width
+            );
+        }
+        Ok(lane.decode_to_ghat_at(s, wire.width, wire.view()))
+    } else {
+        Ok(lane.decode_to_ghat(s, wire.view()))
+    }
+}
+
 /// Flat all-to-all over the relay: one frame up, M frames down.
 #[allow(clippy::too_many_arguments)]
 fn exchange_flat(
@@ -213,7 +260,7 @@ fn exchange_flat(
     *sent_bits += bits;
     Msg::Grad {
         step: step as u32,
-        grad: WireGrad::from_view(lane.encoded()),
+        grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
     }
     .write_to(writer)?;
 
@@ -231,7 +278,7 @@ fn exchange_flat(
         *prev_decoded = vec![vec![0.0f32; d]; grads.len()];
     }
     for (w, wire) in grads.iter().enumerate() {
-        let ghat = lane.decode_to_ghat(session, wire.view());
+        let ghat = decode_wire(lane, session, wire)?;
         for (a, &g) in agg.iter_mut().zip(ghat) {
             *a += g / cfg.world as f32;
         }
@@ -284,7 +331,7 @@ fn exchange_sharded(
             Msg::ShardGrad {
                 step: step as u32,
                 shard: shard as u32,
-                grad: WireGrad::from_view(view),
+                grad: WireGrad::from_view(view, wire_width(session)),
             }
             .write_to(writer)?;
         }
@@ -297,7 +344,7 @@ fn exchange_sharded(
             Msg::ShardGrad {
                 step: step as u32,
                 shard: shard as u32,
-                grad: WireGrad::from_view(lane.encoded()),
+                grad: WireGrad::from_view(lane.encoded(), WIDTH_FP32),
             }
             .write_to(writer)?;
         }
@@ -338,7 +385,7 @@ fn exchange_sharded(
             bail!("shard broadcast has {} frames, world {}", grads.len(), cfg.world);
         }
         for (w, wire) in grads.iter().enumerate() {
-            let ghat = lane.decode_to_ghat(session, wire.view());
+            let ghat = decode_wire(lane, session, wire)?;
             for (a, &g) in agg[coord_lo..coord_hi].iter_mut().zip(ghat) {
                 *a += g / cfg.world as f32;
             }
@@ -381,7 +428,7 @@ fn exchange_tree(
     *sent_bits += bits;
     Msg::Grad {
         step: step as u32,
-        grad: WireGrad::from_view(lane.encoded()),
+        grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
     }
     .write_to(writer)?;
 
@@ -403,7 +450,7 @@ fn exchange_tree(
         partial.fill(0.0);
         let inv = 1.0 / cfg.world as f32;
         for wire in group.iter() {
-            let ghat = lane.decode_to_ghat(session, wire.view());
+            let ghat = decode_wire(lane, session, wire)?;
             for (p, &g) in partial.iter_mut().zip(ghat) {
                 *p += g * inv;
             }
@@ -418,7 +465,7 @@ fn exchange_tree(
         Msg::LeaderGrad {
             step: step as u32,
             group: my_group as u32,
-            grad: WireGrad::from_view(lane.encoded()),
+            grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
         }
         .write_to(writer)?;
     }
@@ -441,7 +488,7 @@ fn exchange_tree(
         *prev_decoded = vec![vec![0.0f32; d]; groups];
     }
     for (g, wire) in leads.iter().enumerate() {
-        let ghat = lane.decode_to_ghat(session, wire.view());
+        let ghat = decode_wire(lane, session, wire)?;
         for (a, &x) in agg.iter_mut().zip(ghat) {
             *a += x;
         }
@@ -458,12 +505,13 @@ mod tests {
     use crate::model::{Mlp, MlpTask};
     use std::net::TcpListener;
 
-    fn spawn_cluster_topo(
+    fn spawn_cluster_policy(
         method: Method,
         iters: usize,
         world: usize,
         topology: TopologySpec,
         codec: Codec,
+        bits: BitsPolicy,
     ) -> Vec<WorkerReport> {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
@@ -473,12 +521,13 @@ mod tests {
         let mut handles = Vec::new();
         for w in 0..world {
             let addr = addr.clone();
+            let bits = bits.clone();
             let cfg = WorkerConfig {
                 addr,
                 worker: w,
                 world,
                 method,
-                bits: 3,
+                bits,
                 bucket: 128,
                 iters,
                 lr: LrSchedule::paper_default(0.1, iters),
@@ -500,6 +549,16 @@ mod tests {
         let reports: Vec<WorkerReport> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         leader.join().unwrap();
         reports
+    }
+
+    fn spawn_cluster_topo(
+        method: Method,
+        iters: usize,
+        world: usize,
+        topology: TopologySpec,
+        codec: Codec,
+    ) -> Vec<WorkerReport> {
+        spawn_cluster_policy(method, iters, world, topology, codec, BitsPolicy::Fixed(3))
     }
 
     fn spawn_cluster(method: Method, iters: usize, world: usize) -> Vec<WorkerReport> {
@@ -576,6 +635,64 @@ mod tests {
         let flat = spawn_cluster_topo(Method::QsgdInf, 30, 4, TopologySpec::Flat, Codec::Huffman);
         assert!(a[0].sent_bits > flat[0].sent_bits, "worker 0 leads group 0");
         assert_ne!(a[0].params_hash, flat[0].params_hash);
+    }
+
+    /// Dynamic bit budgets over the relay: every frame self-describes
+    /// its width (piggybacked, no extra round-trip), so replicas stay
+    /// bit-identical even while the width moves mid-run — under the
+    /// deterministic schedule policy and the signal-driven variance
+    /// policy, for flat and tree relays alike.
+    #[test]
+    fn dynamic_bits_policies_keep_replicas_identical_over_the_wire() {
+        let schedule = BitsPolicy::parse("schedule:3@0,2@20").unwrap();
+        let variance = BitsPolicy::parse("variance:2-4").unwrap();
+        for (policy, topology) in [
+            (schedule.clone(), TopologySpec::Flat),
+            (variance.clone(), TopologySpec::Flat),
+            (variance.clone(), TopologySpec::Tree(2)),
+        ] {
+            let reports = spawn_cluster_policy(
+                Method::Alq,
+                40,
+                4,
+                topology,
+                Codec::Huffman,
+                policy.clone(),
+            );
+            for r in &reports {
+                assert_eq!(
+                    r.params_hash, reports[0].params_hash,
+                    "replica divergence under {} over {}",
+                    policy.name(),
+                    topology.name()
+                );
+                assert!(r.sent_bits > 0);
+            }
+        }
+        // The schedule's narrow tail really sends fewer payload bits
+        // than a fixed run at the starting width.
+        let fixed = spawn_cluster_policy(
+            Method::Alq,
+            40,
+            4,
+            TopologySpec::Flat,
+            Codec::Huffman,
+            BitsPolicy::Fixed(3),
+        );
+        let scheduled = spawn_cluster_policy(
+            Method::Alq,
+            40,
+            4,
+            TopologySpec::Flat,
+            Codec::Huffman,
+            schedule,
+        );
+        assert!(
+            scheduled[0].sent_bits < fixed[0].sent_bits,
+            "schedule:3@0,2@20 should undercut fixed:3 ({} vs {})",
+            scheduled[0].sent_bits,
+            fixed[0].sent_bits
+        );
     }
 
     #[test]

@@ -1,0 +1,816 @@
+//! Dynamic bit budgets: the per-step width controller and the per-width
+//! quantizer/codebook bank every exchange backend inherits.
+//!
+//! The paper's thesis is that gradient statistics drift during training
+//! and the quantizer should adapt. Until this module existed only the
+//! *levels* adapted (ALQ/AMQ); the bit-width itself was a constant
+//! threaded through [`super::CodecSession`] and every backend. DQ-SGD
+//! (PAPERS.md) shows the right bit budget also changes over training,
+//! and QSGD's variance bound gives the signal to drive it. This module
+//! supplies:
+//!
+//! * [`BitsPolicy`] — the CLI-selectable policy
+//!   (`--bits-policy fixed:B | schedule:B1@s1,B2@s2,... | variance[:MIN-MAX[@T]]`);
+//! * [`BitController`] — the per-step width decision, driven by the
+//!   normalized quantization-variance estimate the quantizer already
+//!   evaluates in closed form (Eq. 1–2) and, for adaptive methods, the
+//!   per-width Ψ(ℓ) predictions of the fitted mixture;
+//! * [`QuantizerBank`] — one pre-built quantizer + codebook +
+//!   symbol-count slot per reachable width, so switching widths mid-run
+//!   is an O(1) index move with no allocation and no history
+//!   contamination across widths.
+//!
+//! # Determinism contract (DESIGN.md §8, bit-budget row)
+//!
+//! `fixed:B` must be bit-identical to the pre-refactor constant-width
+//! path: a fixed policy builds a one-slot bank, the controller returns a
+//! constant, and no extra RNG is consumed anywhere — asserted against
+//! the seed-loop oracle in `rust/tests/exchange_parity.rs` and across
+//! topologies in `rust/tests/topology_parity.rs`. Dynamic policies are
+//! deterministic per seed: the variance signal is a closed-form
+//! evaluation (no sampling), and all width decisions happen on the
+//! calling thread before any lane fans out.
+
+use crate::adaptive::objective::{psi, symbol_probs};
+use crate::adaptive::update_levels;
+use crate::quant::{
+    smooth_weights, symbol_counts, Codec, HuffmanBook, Method, QuantizedGrad, Quantizer,
+};
+use crate::stats::Mixture;
+
+/// Bounds of the paper's `bits` hyperparameter (`Levels::mags_for_bits`).
+const MIN_WIDTH: u32 = 2;
+/// Upper bound of the representable widths.
+const MAX_WIDTH: u32 = 8;
+
+/// EMA smoothing factor for the variance controller's observed signal.
+const EMA_ALPHA: f64 = 0.2;
+/// Hysteresis: only shrink the width when the predicted variance clears
+/// the target by this margin, so the controller cannot oscillate on a
+/// signal that sits near the threshold.
+const DOWN_MARGIN: f64 = 0.7;
+
+/// How a run chooses its quantization bit-width per step
+/// (`--bits-policy`). `fixed:B` reproduces the historical constant-width
+/// behavior bit for bit; the other policies move the width over training
+/// and meter the actual per-step bits.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BitsPolicy {
+    /// Constant width B every step (the pre-refactor behavior).
+    Fixed(u32),
+    /// Piecewise-constant widths: `(start_step, bits)` segments in
+    /// ascending step order, first segment at step 0.
+    Schedule(Vec<(usize, u32)>),
+    /// Adaptive width driven by the per-step quantization-variance
+    /// estimate (see [`VarianceSpec`]).
+    Variance(VarianceSpec),
+}
+
+/// Parameters of the adaptive `variance` policy: keep the normalized
+/// quantization variance `E‖Q(v)−v‖² / ‖v‖²` near `target` using the
+/// narrowest width in `[min_bits, max_bits]` predicted to satisfy it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VarianceSpec {
+    /// Narrowest width the controller may select.
+    pub min_bits: u32,
+    /// Widest width the controller may select (also the starting width).
+    pub max_bits: u32,
+    /// Target normalized quantization variance.
+    pub target: f64,
+}
+
+impl Default for VarianceSpec {
+    fn default() -> Self {
+        VarianceSpec {
+            min_bits: 2,
+            max_bits: 4,
+            target: 0.25,
+        }
+    }
+}
+
+impl BitsPolicy {
+    /// Parse a CLI value:
+    /// `fixed:B`, `schedule:B1@s1,B2@s2,...` (s1 must be 0, steps
+    /// strictly increasing), `variance`, `variance:MIN-MAX`, or
+    /// `variance:MIN-MAX@TARGET`. Widths must lie in [2, 8].
+    pub fn parse(s: &str) -> Option<BitsPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        if let Some(rest) = s.strip_prefix("fixed:") {
+            let bits: u32 = rest.parse().ok()?;
+            if !(MIN_WIDTH..=MAX_WIDTH).contains(&bits) {
+                return None;
+            }
+            return Some(BitsPolicy::Fixed(bits));
+        }
+        if let Some(rest) = s.strip_prefix("schedule:") {
+            let mut segments: Vec<(usize, u32)> = Vec::new();
+            for seg in rest.split(',') {
+                let (bits, step) = seg.split_once('@')?;
+                let bits: u32 = bits.parse().ok()?;
+                let step: usize = step.parse().ok()?;
+                if !(MIN_WIDTH..=MAX_WIDTH).contains(&bits) {
+                    return None;
+                }
+                if let Some(&(prev, _)) = segments.last() {
+                    if step <= prev {
+                        return None;
+                    }
+                }
+                segments.push((step, bits));
+            }
+            if segments.first().map(|&(s0, _)| s0) != Some(0) {
+                return None;
+            }
+            return Some(BitsPolicy::Schedule(segments));
+        }
+        if s == "variance" {
+            return Some(BitsPolicy::Variance(VarianceSpec::default()));
+        }
+        if let Some(rest) = s.strip_prefix("variance:") {
+            let (range, target) = match rest.split_once('@') {
+                Some((r, t)) => (r, Some(t)),
+                None => (rest, None),
+            };
+            let (lo, hi) = range.split_once('-')?;
+            let min_bits: u32 = lo.parse().ok()?;
+            let max_bits: u32 = hi.parse().ok()?;
+            if !(MIN_WIDTH..=MAX_WIDTH).contains(&min_bits)
+                || !(MIN_WIDTH..=MAX_WIDTH).contains(&max_bits)
+                || min_bits > max_bits
+            {
+                return None;
+            }
+            let target = match target {
+                Some(t) => {
+                    let t: f64 = t.parse().ok()?;
+                    if !t.is_finite() || t <= 0.0 {
+                        return None;
+                    }
+                    t
+                }
+                None => VarianceSpec::default().target,
+            };
+            return Some(BitsPolicy::Variance(VarianceSpec {
+                min_bits,
+                max_bits,
+                target,
+            }));
+        }
+        None
+    }
+
+    /// Canonical lowercase name for logs and banners (re-parses to an
+    /// equal policy).
+    pub fn name(&self) -> String {
+        match self {
+            BitsPolicy::Fixed(b) => format!("fixed:{b}"),
+            BitsPolicy::Schedule(segs) => {
+                let parts: Vec<String> =
+                    segs.iter().map(|&(s, b)| format!("{b}@{s}")).collect();
+                format!("schedule:{}", parts.join(","))
+            }
+            BitsPolicy::Variance(v) => {
+                format!("variance:{}-{}@{}", v.min_bits, v.max_bits, v.target)
+            }
+        }
+    }
+
+    /// The width the run starts at (step 0, before any observation).
+    pub fn initial_bits(&self) -> u32 {
+        match self {
+            BitsPolicy::Fixed(b) => *b,
+            BitsPolicy::Schedule(segs) => segs[0].1,
+            BitsPolicy::Variance(v) => v.max_bits,
+        }
+    }
+
+    /// Every width this policy can reach, ascending and deduplicated —
+    /// the widths the [`QuantizerBank`] pre-builds.
+    pub fn widths(&self) -> Vec<u32> {
+        let mut w: Vec<u32> = match self {
+            BitsPolicy::Fixed(b) => vec![*b],
+            BitsPolicy::Schedule(segs) => segs.iter().map(|&(_, b)| b).collect(),
+            BitsPolicy::Variance(v) => (v.min_bits..=v.max_bits).collect(),
+        };
+        w.sort_unstable();
+        w.dedup();
+        w
+    }
+
+    /// Whether this is the inert constant-width policy.
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, BitsPolicy::Fixed(_))
+    }
+
+    /// Instantiate the per-run controller for this policy.
+    pub fn controller(&self) -> Box<dyn BitController> {
+        match self {
+            BitsPolicy::Fixed(b) => Box::new(FixedBits { bits: *b }),
+            BitsPolicy::Schedule(segs) => Box::new(ScheduledBits {
+                segments: segs.clone(),
+            }),
+            BitsPolicy::Variance(spec) => Box::new(VarianceBits {
+                spec: *spec,
+                cur: spec.max_bits,
+                ema: None,
+                profile: Vec::new(),
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for BitsPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// The per-step width decision. One controller instance lives in each
+/// [`super::BackendCore`] (sim) or TCP worker; all observations and
+/// decisions run on the calling thread before any lane fans out, so the
+/// chosen widths are deterministic per seed.
+pub trait BitController: Send {
+    /// The width to quantize with at `step`. Called exactly once per
+    /// step, after the step's observations.
+    fn bits_for_step(&mut self, step: usize) -> u32;
+
+    /// Whether this controller consumes the per-step variance signal
+    /// (policies that don't skip the O(d) closed-form evaluation
+    /// entirely, keeping `fixed:B` at zero overhead).
+    fn wants_variance(&self) -> bool {
+        false
+    }
+
+    /// Feed one step's measured normalized quantization variance
+    /// `E‖Q(v)−v‖² / ‖v‖²` of a representative gradient under the
+    /// *current* width.
+    fn observe_variance(&mut self, _step: usize, _normalized: f64) {}
+
+    /// Feed the per-width expected-variance profile `(bits, Ψ(ℓ_bits))`
+    /// the adaptive estimators compute at each level update (used to
+    /// predict how the variance moves across widths; non-adaptive
+    /// methods never produce one and the controller falls back to the
+    /// QSGD scaling law).
+    fn observe_width_profile(&mut self, _profile: &[(u32, f64)]) {}
+}
+
+/// `fixed:B` — the inert controller; the whole dynamic machinery reduces
+/// to a constant.
+#[derive(Clone, Debug)]
+struct FixedBits {
+    bits: u32,
+}
+
+impl BitController for FixedBits {
+    fn bits_for_step(&mut self, _step: usize) -> u32 {
+        self.bits
+    }
+}
+
+/// `schedule:B1@s1,...` — piecewise-constant widths over steps.
+#[derive(Clone, Debug)]
+struct ScheduledBits {
+    segments: Vec<(usize, u32)>,
+}
+
+impl BitController for ScheduledBits {
+    fn bits_for_step(&mut self, step: usize) -> u32 {
+        let mut bits = self.segments[0].1;
+        for &(start, b) in &self.segments {
+            if step >= start {
+                bits = b;
+            } else {
+                break;
+            }
+        }
+        bits
+    }
+}
+
+/// `variance[:MIN-MAX[@T]]` — grow/shrink the width so the normalized
+/// quantization variance tracks the target.
+///
+/// The controller smooths the measured signal with an EMA, predicts the
+/// variance each candidate width would produce — from the adaptive
+/// estimators' per-width Ψ profile when one exists, otherwise from
+/// QSGD's scaling law (doubling the level count quarters the variance,
+/// i.e. ×4 per bit) — and selects the narrowest width predicted at or
+/// under target, with a shrink-side hysteresis margin so it cannot
+/// oscillate.
+#[derive(Clone, Debug)]
+struct VarianceBits {
+    spec: VarianceSpec,
+    cur: u32,
+    ema: Option<f64>,
+    profile: Vec<(u32, f64)>,
+}
+
+impl VarianceBits {
+    /// Predicted normalized variance at width `w`, given the smoothed
+    /// observation `ema` made at the current width.
+    fn predict(&self, w: u32, ema: f64) -> f64 {
+        let lookup = |bits: u32| -> Option<f64> {
+            self.profile
+                .iter()
+                .find(|&&(b, _)| b == bits)
+                .map(|&(_, p)| p)
+        };
+        if let (Some(pw), Some(pc)) = (lookup(w), lookup(self.cur)) {
+            if pc > 0.0 && pw > 0.0 {
+                return ema * pw / pc;
+            }
+        }
+        // QSGD variance-bound scaling: one extra bit doubles the level
+        // count and quarters the variance.
+        ema * 4f64.powi(self.cur as i32 - w as i32)
+    }
+}
+
+impl BitController for VarianceBits {
+    fn wants_variance(&self) -> bool {
+        true
+    }
+
+    fn observe_variance(&mut self, _step: usize, normalized: f64) {
+        let prev = self.ema.unwrap_or(normalized);
+        self.ema = Some((1.0 - EMA_ALPHA) * prev + EMA_ALPHA * normalized);
+    }
+
+    fn observe_width_profile(&mut self, profile: &[(u32, f64)]) {
+        self.profile = profile.to_vec();
+    }
+
+    fn bits_for_step(&mut self, _step: usize) -> u32 {
+        let Some(ema) = self.ema else {
+            return self.cur;
+        };
+        if ema > self.spec.target && self.cur < self.spec.max_bits {
+            // Too noisy: widen until predicted back under target.
+            let mut w = self.cur;
+            while w < self.spec.max_bits && self.predict(w, ema) > self.spec.target {
+                w += 1;
+            }
+            self.cur = w;
+        } else {
+            // Room to save bits: shrink to the narrowest width whose
+            // prediction clears the target with margin.
+            let mut best = self.cur;
+            let mut w = self.cur;
+            while w > self.spec.min_bits {
+                w -= 1;
+                if self.predict(w, ema) <= DOWN_MARGIN * self.spec.target {
+                    best = w;
+                } else {
+                    break;
+                }
+            }
+            self.cur = best;
+        }
+        self.cur
+    }
+}
+
+/// The normalized quantization-variance signal the `variance` policy
+/// consumes: the exact Eq. (1)–(2) variance of quantizing `grad`,
+/// normalized by the gradient's energy. `None` when the gradient is
+/// identically zero (no signal).
+pub fn normalized_variance(q: &Quantizer, grad: &[f32]) -> Option<f64> {
+    let energy: f64 = grad.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if energy <= 0.0 {
+        return None;
+    }
+    Some(q.exact_variance(grad) / energy)
+}
+
+/// One step of the controller protocol, shared verbatim by the sim's
+/// `BackendCore::begin_step` and the TCP worker so the two runtimes
+/// cannot drift: observe the representative gradient's normalized
+/// variance (only when the policy consumes the signal — zero overhead
+/// for `fixed:B`/`schedule`), ask the controller for the step's width,
+/// switch the session's bank slot (O(1)), and return the width. Callers
+/// guard the full-precision case (no quantizer → no width).
+pub fn select_width(
+    ctl: &mut dyn BitController,
+    session: &mut super::session::CodecSession,
+    step: usize,
+    grad: &[f32],
+) -> u32 {
+    debug_assert!(session.is_quantized(), "select_width on full precision");
+    if ctl.wants_variance() {
+        if let Some(q) = session.quantizer() {
+            if let Some(v) = normalized_variance(q, grad) {
+                ctl.observe_variance(step, v);
+            }
+        }
+    }
+    let bits = ctl.bits_for_step(step);
+    session.set_active_bits(bits);
+    bits
+}
+
+/// One pre-built codec state per reachable width: the quantizer (levels
+/// adapt per width), the Huffman codebook slot, and the sampled
+/// symbol-count refresh statistics.
+///
+/// Pre-building every slot at construction is what makes a mid-run width
+/// switch O(1) and deterministic: activating a width is an index move,
+/// and a slot's state is a function of the *shared* adaptation history
+/// (every level update re-optimizes every slot from the same fitted
+/// mixture), never of which steps happened to run at which width — so
+/// switching away and back cannot contaminate a width's levels or
+/// model-based codebook (`rust/src/exchange/session.rs` tests).
+#[derive(Clone, Debug)]
+pub struct QuantizerBank {
+    slots: Vec<WidthSlot>,
+    active: usize,
+}
+
+/// Per-width codec state (one bank slot).
+#[derive(Clone, Debug)]
+struct WidthSlot {
+    bits: u32,
+    quantizer: Quantizer,
+    book: Option<HuffmanBook>,
+    sym_counts: Vec<f64>,
+}
+
+impl QuantizerBank {
+    /// Build one slot per policy width, active at the policy's initial
+    /// width. `None` for full-precision methods (no quantizer at any
+    /// width).
+    pub fn new(method: Method, policy: &BitsPolicy, bucket: usize) -> Option<QuantizerBank> {
+        let mut slots = Vec::new();
+        for bits in policy.widths() {
+            let levels = method.initial_levels(bits)?;
+            let mut quantizer = Quantizer::new(levels, method.norm_type(), bucket);
+            if let Some(c) = method.clip_factor() {
+                quantizer = quantizer.with_clip(c);
+            }
+            let n = quantizer.levels().num_symbols();
+            slots.push(WidthSlot {
+                bits,
+                quantizer,
+                book: None,
+                sym_counts: vec![0.0; n],
+            });
+        }
+        let start = policy.initial_bits();
+        let active = slots.iter().position(|s| s.bits == start)?;
+        Some(QuantizerBank { slots, active })
+    }
+
+    /// The currently active width.
+    pub fn active_bits(&self) -> u32 {
+        self.slots[self.active].bits
+    }
+
+    /// Whether the bank holds a slot for `bits`.
+    pub fn has_width(&self, bits: u32) -> bool {
+        self.slots.iter().any(|s| s.bits == bits)
+    }
+
+    /// Every width in the bank, ascending.
+    pub fn widths(&self) -> Vec<u32> {
+        self.slots.iter().map(|s| s.bits).collect()
+    }
+
+    /// Switch the active width — an O(1) index move. Panics on a width
+    /// the policy never declared (a controller bug, not a data error).
+    pub fn activate(&mut self, bits: u32) {
+        self.active = self
+            .slots
+            .iter()
+            .position(|s| s.bits == bits)
+            .unwrap_or_else(|| panic!("width {bits} is not in the quantizer bank"));
+    }
+
+    /// The active slot's quantizer.
+    pub fn quantizer(&self) -> &Quantizer {
+        &self.slots[self.active].quantizer
+    }
+
+    /// The quantizer for `bits`, if the bank holds that width.
+    pub fn quantizer_at(&self, bits: u32) -> Option<&Quantizer> {
+        self.slots
+            .iter()
+            .find(|s| s.bits == bits)
+            .map(|s| &s.quantizer)
+    }
+
+    /// The active slot's codebook, once one exists.
+    pub fn book(&self) -> Option<&HuffmanBook> {
+        self.slots[self.active].book.as_ref()
+    }
+
+    /// The codebook for `bits`, once one exists.
+    pub fn book_at(&self, bits: u32) -> Option<&HuffmanBook> {
+        self.slots
+            .iter()
+            .find(|s| s.bits == bits)
+            .and_then(|s| s.book.as_ref())
+    }
+
+    /// The (possibly adapted) level magnitudes for `bits`.
+    pub fn levels_at(&self, bits: u32) -> Option<Vec<f64>> {
+        self.quantizer_at(bits)
+            .map(|q| q.levels().mags().to_vec())
+    }
+
+    /// Uniform initial codebooks for every slot: identical on every
+    /// replica by construction (the TCP path's requirement, now per
+    /// width so replicas agree on every reachable width's first book).
+    pub fn init_uniform_books(&mut self) {
+        for slot in self.slots.iter_mut() {
+            slot.book = Some(HuffmanBook::from_weights(&vec![
+                1.0;
+                slot.quantizer
+                    .levels()
+                    .num_symbols()
+            ]));
+        }
+    }
+
+    /// Lazily build the *active* slot's codebook from the first
+    /// quantized gradient's empirical symbol distribution (smoothed).
+    /// No-op once that slot has a book.
+    pub fn install_empirical_book(&mut self, first: &QuantizedGrad) {
+        let slot = &mut self.slots[self.active];
+        if slot.book.is_some() {
+            return;
+        }
+        let counts = symbol_counts(first, slot.quantizer.levels());
+        slot.book = Some(HuffmanBook::from_weights(&smooth_weights(&counts)));
+    }
+
+    /// Fold one lane's sampled symbol histogram into the active slot's
+    /// refresh statistics.
+    pub fn accumulate_counts(&mut self, counts: &[f64]) {
+        let slot = &mut self.slots[self.active];
+        for (c, n) in slot.sym_counts.iter_mut().zip(counts) {
+            *c += n;
+        }
+    }
+
+    /// Refresh every slot that accumulated symbol counts since its last
+    /// refresh (the non-adaptive codebook update at the schedule 𝒰);
+    /// slots with nothing accumulated keep their book.
+    pub fn refresh_from_counts(&mut self) {
+        for slot in self.slots.iter_mut() {
+            if slot.sym_counts.iter().sum::<f64>() > 0.0 {
+                slot.book = Some(HuffmanBook::from_weights(&smooth_weights(&slot.sym_counts)));
+                for c in slot.sym_counts.iter_mut() {
+                    *c = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Algorithm 1 line 4 across the whole bank: re-optimize every
+    /// width's levels from the one fitted mixture, install the
+    /// model-based (Prop. 6) codebook per width (Huffman only), and
+    /// reset the refresh statistics. Returns the per-width expected
+    /// variance profile `(bits, Ψ(ℓ_bits))` — the prediction the
+    /// `variance` controller consumes.
+    pub fn adapt_all(&mut self, method: Method, mix: &Mixture, codec: Codec) -> Vec<(u32, f64)> {
+        let mut profile = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter_mut() {
+            let new_levels = update_levels(method, slot.quantizer.levels(), mix);
+            slot.quantizer.set_levels(new_levels);
+            if codec == Codec::Huffman {
+                let probs = symbol_probs(mix, slot.quantizer.levels());
+                slot.book = Some(HuffmanBook::from_weights(&smooth_weights(&probs)));
+            }
+            slot.sym_counts = vec![0.0; slot.quantizer.levels().num_symbols()];
+            profile.push((slot.bits, psi(mix, slot.quantizer.levels())));
+        }
+        profile
+    }
+
+    /// Force TernGrad-style c·σ clipping on every slot (the Appendix
+    /// K.2 / Fig. 14 ablation).
+    pub fn force_clip(&mut self, c: f32) {
+        for slot in self.slots.iter_mut() {
+            slot.quantizer = slot.quantizer.clone().with_clip(c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrips() {
+        for s in [
+            "fixed:3",
+            "fixed:8",
+            "schedule:4@0,3@100,2@500",
+            "variance:2-4@0.25",
+        ] {
+            let p = BitsPolicy::parse(s).unwrap();
+            assert_eq!(BitsPolicy::parse(&p.name()), Some(p.clone()), "{s}");
+        }
+        assert_eq!(
+            BitsPolicy::parse("variance"),
+            Some(BitsPolicy::Variance(VarianceSpec::default()))
+        );
+        assert_eq!(
+            BitsPolicy::parse("VARIANCE:3-5"),
+            Some(BitsPolicy::Variance(VarianceSpec {
+                min_bits: 3,
+                max_bits: 5,
+                target: VarianceSpec::default().target,
+            }))
+        );
+    }
+
+    #[test]
+    fn policy_parse_rejects_malformed() {
+        for s in [
+            "fixed:1",          // below the representable range
+            "fixed:9",          // above it
+            "fixed:",           // no width
+            "schedule:3@5",     // first segment must start at 0
+            "schedule:3@0,4@0", // steps must strictly increase
+            "schedule:9@0",     // width out of range
+            "schedule:",        // empty
+            "variance:4-2",     // inverted range
+            "variance:2-9",     // out of range
+            "variance:2-4@0",   // target must be positive
+            "variance:2-4@-1",
+            "bogus",
+            "3",
+        ] {
+            assert_eq!(BitsPolicy::parse(s), None, "{s:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn policy_widths_and_initial_bits() {
+        let p = BitsPolicy::parse("schedule:4@0,2@10,4@20").unwrap();
+        assert_eq!(p.widths(), vec![2, 4]);
+        assert_eq!(p.initial_bits(), 4);
+        let p = BitsPolicy::parse("variance:2-5").unwrap();
+        assert_eq!(p.widths(), vec![2, 3, 4, 5]);
+        assert_eq!(p.initial_bits(), 5);
+        let p = BitsPolicy::Fixed(3);
+        assert_eq!(p.widths(), vec![3]);
+        assert_eq!(p.initial_bits(), 3);
+        assert!(p.is_fixed());
+    }
+
+    #[test]
+    fn fixed_controller_is_constant_and_blind() {
+        let mut c = BitsPolicy::Fixed(3).controller();
+        assert!(!c.wants_variance());
+        c.observe_variance(0, 123.0);
+        for step in 0..100 {
+            assert_eq!(c.bits_for_step(step), 3);
+        }
+    }
+
+    #[test]
+    fn schedule_controller_switches_at_segment_starts() {
+        let mut c = BitsPolicy::parse("schedule:4@0,3@10,2@25").unwrap().controller();
+        assert_eq!(c.bits_for_step(0), 4);
+        assert_eq!(c.bits_for_step(9), 4);
+        assert_eq!(c.bits_for_step(10), 3);
+        assert_eq!(c.bits_for_step(24), 3);
+        assert_eq!(c.bits_for_step(25), 2);
+        assert_eq!(c.bits_for_step(1_000_000), 2);
+    }
+
+    #[test]
+    fn variance_controller_shrinks_on_calm_signal_and_grows_on_noise() {
+        let spec = VarianceSpec {
+            min_bits: 2,
+            max_bits: 4,
+            target: 0.25,
+        };
+        let mut c = BitsPolicy::Variance(spec).controller();
+        assert!(c.wants_variance());
+        // No observation yet: stays at the starting (max) width.
+        assert_eq!(c.bits_for_step(0), 4);
+        // Extremely calm signal: even ×16 (two widths down) clears the
+        // margin, so the controller walks to the floor.
+        for step in 1..20 {
+            c.observe_variance(step, 1e-4);
+            assert!(c.bits_for_step(step) >= 2);
+        }
+        assert_eq!(c.bits_for_step(20), 2);
+        // Signal explodes: the controller climbs back up.
+        for step in 21..60 {
+            c.observe_variance(step, 10.0);
+        }
+        assert_eq!(c.bits_for_step(60), 4);
+    }
+
+    #[test]
+    fn variance_controller_uses_the_width_profile_when_present() {
+        let spec = VarianceSpec {
+            min_bits: 2,
+            max_bits: 4,
+            target: 0.25,
+        };
+        let mut c = BitsPolicy::Variance(spec).controller();
+        // Profile says width 2 is barely worse than width 4 (adapted
+        // levels), so a moderately calm signal that the ×4-per-bit
+        // fallback would keep at 3+ bits drops straight to 2.
+        c.observe_width_profile(&[(2, 0.011), (3, 0.0105), (4, 0.01)]);
+        for step in 0..30 {
+            c.observe_variance(step, 0.12);
+        }
+        assert_eq!(c.bits_for_step(30), 2);
+    }
+
+    #[test]
+    fn variance_controller_is_deterministic() {
+        let run = || {
+            let mut c = BitsPolicy::parse("variance:2-4@0.2").unwrap().controller();
+            let mut widths = Vec::new();
+            for step in 0..50 {
+                c.observe_variance(step, 0.3 / (1.0 + step as f64 * 0.1));
+                widths.push(c.bits_for_step(step));
+            }
+            widths
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn bank_prebuilds_every_width_and_activates_in_o1() {
+        let policy = BitsPolicy::parse("variance:2-4").unwrap();
+        let mut bank = QuantizerBank::new(Method::Alq, &policy, 64).unwrap();
+        assert_eq!(bank.widths(), vec![2, 3, 4]);
+        assert_eq!(bank.active_bits(), 4);
+        assert!(bank.has_width(2) && !bank.has_width(5));
+        bank.activate(2);
+        assert_eq!(bank.active_bits(), 2);
+        assert_eq!(bank.quantizer().levels().num_symbols(), 2);
+        bank.activate(4);
+        assert_eq!(bank.quantizer().levels().num_symbols(), 8);
+        // Per-width quantizers are independent objects.
+        assert_eq!(bank.quantizer_at(3).unwrap().levels().num_symbols(), 4);
+        assert_eq!(bank.levels_at(2).unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in the quantizer bank")]
+    fn bank_rejects_undeclared_widths() {
+        let mut bank =
+            QuantizerBank::new(Method::Alq, &BitsPolicy::Fixed(3), 64).unwrap();
+        bank.activate(5);
+    }
+
+    #[test]
+    fn bank_is_none_for_full_precision() {
+        assert!(QuantizerBank::new(Method::SuperSgd, &BitsPolicy::Fixed(3), 64).is_none());
+        assert!(QuantizerBank::new(Method::SingleSgd, &BitsPolicy::Fixed(3), 64).is_none());
+    }
+
+    #[test]
+    fn uniform_books_cover_every_slot() {
+        let policy = BitsPolicy::parse("schedule:3@0,4@10").unwrap();
+        let mut bank = QuantizerBank::new(Method::Alq, &policy, 64).unwrap();
+        assert!(bank.book().is_none());
+        bank.init_uniform_books();
+        assert!(bank.book_at(3).is_some());
+        assert!(bank.book_at(4).is_some());
+        // Replica independence: a second bank builds the same books.
+        let mut other = QuantizerBank::new(Method::Alq, &policy, 64).unwrap();
+        other.init_uniform_books();
+        assert_eq!(bank.book_at(3), other.book_at(3));
+        assert_eq!(bank.book_at(4), other.book_at(4));
+    }
+
+    #[test]
+    fn select_width_drives_the_session_bank() {
+        use super::super::session::CodecSession;
+        let policy = BitsPolicy::parse("schedule:3@0,2@4").unwrap();
+        let mut s = CodecSession::with_policy(Method::QsgdInf, &policy, 64);
+        let mut ctl = policy.controller();
+        let g = [0.1f32; 64];
+        assert_eq!(select_width(ctl.as_mut(), &mut s, 0, &g), 3);
+        assert_eq!(s.active_bits(), Some(3));
+        assert_eq!(select_width(ctl.as_mut(), &mut s, 4, &g), 2);
+        assert_eq!(s.active_bits(), Some(2));
+    }
+
+    #[test]
+    fn normalized_variance_is_scale_free_and_none_on_zero() {
+        let q = Quantizer::new(
+            crate::quant::Levels::exponential(4, 0.5),
+            crate::quant::NormType::Linf,
+            64,
+        );
+        let mut rng = crate::util::Rng::new(7);
+        let g: Vec<f32> = (0..256).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let v = normalized_variance(&q, &g).unwrap();
+        assert!(v > 0.0);
+        let g2: Vec<f32> = g.iter().map(|&x| x * 100.0).collect();
+        let v2 = normalized_variance(&q, &g2).unwrap();
+        assert!((v - v2).abs() / v < 1e-3, "{v} vs {v2}");
+        assert!(normalized_variance(&q, &[0.0f32; 64]).is_none());
+    }
+}

@@ -26,6 +26,7 @@
 //! produce bit-identical runs (`rust/tests/exchange_parity.rs`, and the
 //! cross-backend contract in DESIGN.md §8).
 
+use super::budget::BitsPolicy;
 use super::session::CodecSession;
 use super::topology::core::BackendCore;
 use super::topology::Hop;
@@ -79,8 +80,12 @@ pub struct ExchangeConfig {
     /// Configured worker count M (RNG streams are forked for all of
     /// them even when SingleSGD collapses to one active lane).
     pub workers: usize,
-    /// Quantization bit width.
-    pub bits: u32,
+    /// The bit-budget policy (`--bits-policy fixed:B|schedule:…|variance`).
+    /// `BitsPolicy::Fixed(B)` reproduces the historical constant-width
+    /// behavior bit for bit; the other policies move the quantization
+    /// width per step through the backend's embedded bit controller
+    /// (`exchange::budget`).
+    pub bits: BitsPolicy,
     /// Bucket size (coordinates per normalization bucket).
     pub bucket: usize,
     /// Run seed; every stochastic draw forks from it.
@@ -170,10 +175,18 @@ impl GradientExchange {
         self.core.adapt(grads);
     }
 
-    /// One synchronous exchange: quantize → entropy-encode → meter →
-    /// decode → aggregate the mean estimate into `agg`. Returns the
-    /// step's total encoded bits.
+    /// One synchronous exchange: select the step's width via the bit
+    /// controller, then quantize → entropy-encode → meter → decode →
+    /// aggregate the mean estimate into `agg`. Returns the step's total
+    /// encoded bits.
     pub fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        ExchangeBackend::exchange(self, step, grads, agg)
+    }
+
+    /// The flat schedule body (width already selected by
+    /// [`BackendCore::begin_step`] through the trait's `exchange`
+    /// wrapper).
+    fn run_schedule_impl(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
         let m = self.lanes.len();
         // Hard assert: with fewer gradients the zip would silently skip
         // lanes while the reduction still added their stale estimates.
@@ -251,8 +264,8 @@ impl ExchangeBackend for GradientExchange {
         &mut self.core
     }
 
-    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
-        GradientExchange::exchange(self, step, grads, agg)
+    fn run_schedule(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        self.run_schedule_impl(step, grads, agg)
     }
 }
 
@@ -266,7 +279,7 @@ mod tests {
         ExchangeConfig {
             method,
             workers,
-            bits: 3,
+            bits: BitsPolicy::Fixed(3),
             bucket: 64,
             seed: 9,
             network: NetworkModel::paper_testbed(),
@@ -361,6 +374,32 @@ mod tests {
         assert_eq!(hops.len(), 1);
         assert_eq!(hops[0].label, "all-to-all");
         assert_eq!(hops[0].bits, bits);
+    }
+
+    #[test]
+    fn schedule_policy_switches_the_engine_width_mid_run() {
+        let d = 2048;
+        let g = grads(4, d, 6);
+        let mut cfg = config(Method::QsgdInf, 4, ParallelMode::Serial);
+        cfg.bits = BitsPolicy::parse("schedule:2@0,4@3").unwrap();
+        let mut eng = GradientExchange::new(cfg);
+        let mut agg = vec![0.0f32; d];
+        let mut bits_at = Vec::new();
+        for step in 0..6 {
+            bits_at.push(eng.exchange(step, &g, &mut agg));
+            let want = if step < 3 { 2 } else { 4 };
+            assert_eq!(ExchangeBackend::step_width(&eng), want, "step {step}");
+        }
+        // Wider symbols cost more payload bits on the same gradients.
+        assert!(
+            bits_at[5] > bits_at[2],
+            "4-bit frames should outweigh 2-bit frames: {bits_at:?}"
+        );
+        // The meter charged the actual per-step bits.
+        assert_eq!(
+            ExchangeBackend::meter(&eng).total_bits,
+            bits_at.iter().sum::<u64>()
+        );
     }
 
     #[test]

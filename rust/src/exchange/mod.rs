@@ -24,6 +24,11 @@
 //!   CLI `--parallel`). The determinism contract is stated once, in
 //!   DESIGN.md §8, and enforced here instead of being restated per
 //!   backend.
+//! * [`budget`] — the dynamic bit-budget subsystem ([`BitsPolicy`],
+//!   [`BitController`], [`QuantizerBank`], CLI `--bits-policy`): the
+//!   per-step quantization width lives here, selected once per step in
+//!   the [`ExchangeBackend::exchange`] wrapper and inherited by every
+//!   topology through `core()` with zero per-backend code.
 //! * [`GradientExchange`] — the flat M-lane engine (the reference
 //!   schedule). The [`topology`] subsystem provides the non-flat
 //!   executable schedules — sharded leaders, hierarchical two-level
@@ -36,10 +41,12 @@
 //! adaptation by construction.
 #![warn(missing_docs)]
 
+pub mod budget;
 pub mod engine;
 pub mod session;
 pub mod topology;
 
+pub use budget::{BitController, BitsPolicy, QuantizerBank, VarianceSpec};
 pub use engine::{ExchangeConfig, GradientExchange, ParallelMode};
 pub use session::{CodecSession, ExchangeLane};
 pub use topology::core::BackendCore;
@@ -66,9 +73,28 @@ pub trait ExchangeBackend: Send {
     /// Mutable access to the embedded shared state block.
     fn core_mut(&mut self) -> &mut BackendCore;
 
+    /// Run the backend's schedule for one step, with the step's
+    /// quantization width already selected on the session. Backends
+    /// implement only this; the bit-budget machinery lives in the
+    /// [`ExchangeBackend::exchange`] wrapper so every topology inherits
+    /// it with zero per-backend code.
+    fn run_schedule(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64;
+
     /// Exchange one step's gradients; writes the aggregated mean
     /// estimate into `agg` and returns the step's total encoded bits.
-    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64;
+    /// First lets the embedded bit controller pick the step's width
+    /// ([`BackendCore::begin_step`] — observation + O(1) bank switch,
+    /// a no-op for `fixed:B`), then runs the schedule.
+    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+        self.core_mut().begin_step(step, grads);
+        self.run_schedule(step, grads, agg)
+    }
+
+    /// The quantization width the last exchange ran at (32 for full
+    /// precision).
+    fn step_width(&self) -> u32 {
+        self.core().step_width()
+    }
 
     /// Re-fit the coordinate distribution and re-optimize levels and
     /// codebook (Algorithm 1 line 4; a no-op for full precision).

@@ -2,83 +2,87 @@
 //! method's quantize/encode/decode path, shared by the in-process
 //! engine and the TCP coordinator.
 
-use crate::adaptive::{update_levels, Estimator};
+use super::budget::{BitsPolicy, QuantizerBank};
+use crate::adaptive::Estimator;
 use crate::quant::bitio::{BitReader, BitWriter};
 use crate::quant::elias::{decode_qsgd_style_into, encode_qsgd_style, encode_qsgd_style_range};
-use crate::quant::{
-    decode_view_into, encode_buckets_into, encode_into, smooth_weights, symbol_counts, Codec,
-    EncodedView, HuffmanBook, Method, QuantizedGrad, Quantizer,
-};
+use crate::quant::{Codec, EncodedView, HuffmanBook, Method, QuantizedGrad, Quantizer};
 use crate::util::Rng;
 use std::ops::Range;
 
 /// App. K: mixture components retained for CIFAR-scale runs.
 const MAX_MIXTURE_COMPONENTS: usize = 20;
 
-/// One method's codec state: quantizer, Huffman codebook lifecycle, and
-/// the distribution estimator driving ALQ/AMQ level adaptation.
+/// One method's codec state: the per-width [`QuantizerBank`] (quantizer,
+/// Huffman codebook lifecycle, and symbol-count refresh statistics per
+/// reachable bit-width), the active width, and the distribution
+/// estimator driving ALQ/AMQ level adaptation.
 ///
-/// The codebook has three sources, all smoothed with
-/// [`smooth_weights`] so every symbol stays codable:
+/// A codebook has three sources, all smoothed with
+/// [`crate::quant::smooth_weights`] so every symbol stays codable:
 /// * **lazy empirical** — built from the first quantized gradient's
-///   symbol histogram ([`CodecSession::build_empirical_book`], the sim
-///   path);
-/// * **uniform** — identical on every replica by construction
-///   ([`CodecSession::init_uniform_book`], the distributed path, where
-///   no replica may depend on another's first batch);
+///   symbol histogram at that width
+///   ([`CodecSession::build_empirical_book`], the sim path);
+/// * **uniform** — identical on every replica by construction, for
+///   every reachable width ([`CodecSession::init_uniform_book`], the
+///   distributed path, where no replica may depend on another's first
+///   batch);
 /// * **model-based** — Prop. 6 closed-form symbol probabilities under
-///   the fitted mixture, installed on every successful level update
-///   ([`CodecSession::adapt`]), or refreshed from the sampled empirical
-///   counts for non-adaptive methods
+///   the fitted mixture, installed *per width* on every successful
+///   level update ([`CodecSession::adapt`]), or refreshed from the
+///   sampled empirical counts for non-adaptive methods
 ///   ([`CodecSession::refresh_book_from_counts`]).
+///
+/// With a `fixed:B` policy the bank holds one slot and every method
+/// below reduces exactly to the historical single-width behavior
+/// (`rust/tests/exchange_parity.rs` pins this against the seed loop).
 #[derive(Clone, Debug)]
 pub struct CodecSession {
     method: Method,
     bucket: usize,
     codec: Codec,
-    quantizer: Option<Quantizer>,
-    book: Option<HuffmanBook>,
-    sym_counts: Vec<f64>,
+    bank: Option<QuantizerBank>,
     estimator: Option<Estimator>,
+    /// Per-width `(bits, Ψ)` expected-variance profile from the last
+    /// successful level update (consumed by the `variance` policy).
+    width_profile: Vec<(u32, f64)>,
 }
 
 impl CodecSession {
-    /// Stand up one method's codec state: the quantizer seeded with the
-    /// method's initial levels (none for full precision), the mixture
-    /// estimator, and an empty codebook slot.
+    /// Stand up one method's codec state at a single fixed width — the
+    /// historical constructor, equivalent to
+    /// [`CodecSession::with_policy`] over `fixed:bits`.
     pub fn new(method: Method, bits: u32, bucket: usize) -> Self {
-        let quantizer = method.initial_levels(bits).map(|levels| {
-            let mut q = Quantizer::new(levels, method.norm_type(), bucket);
-            if let Some(c) = method.clip_factor() {
-                q = q.with_clip(c);
-            }
-            q
-        });
-        let estimator = quantizer
+        CodecSession::with_policy(method, &BitsPolicy::Fixed(bits), bucket)
+    }
+
+    /// Stand up one method's codec state over every width the bit
+    /// policy can reach: one pre-built bank slot per width (none for
+    /// full precision), the mixture estimator, and empty codebook
+    /// slots. The session starts at the policy's initial width.
+    pub fn with_policy(method: Method, policy: &BitsPolicy, bucket: usize) -> Self {
+        let bank = QuantizerBank::new(method, policy, bucket);
+        let estimator = bank
             .as_ref()
-            .map(|q| Estimator::new(bucket, q.norm_type(), MAX_MIXTURE_COMPONENTS));
-        let sym_counts = quantizer
-            .as_ref()
-            .map(|q| vec![0.0; q.levels().num_symbols()])
-            .unwrap_or_default();
+            .map(|b| Estimator::new(bucket, b.quantizer().norm_type(), MAX_MIXTURE_COMPONENTS));
         CodecSession {
             method,
             bucket,
             codec: Codec::Huffman,
-            quantizer,
-            book: None,
-            sym_counts,
+            bank,
             estimator,
+            width_profile: Vec::new(),
         }
     }
 
     /// Select the entropy coder (the QSGD-style coding ablation). Elias
     /// coding runs books-free but needs a zero level to run-length over —
     /// the no-zero AMQ level family must keep Huffman (validated again at
-    /// config parse time).
+    /// config parse time). Zero-ness is a property of the method's level
+    /// family, so checking the active width covers every bank slot.
     pub fn with_codec(mut self, codec: Codec) -> Self {
         if codec == Codec::Elias {
-            if let Some(q) = &self.quantizer {
+            if let Some(q) = self.quantizer() {
                 assert!(
                     q.levels().has_zero(),
                     "elias coding needs a zero level; {} has none",
@@ -98,7 +102,7 @@ impl CodecSession {
     /// Whether this session's coder needs a Huffman codebook at all
     /// (Elias coding is codebook-free; so is full precision).
     pub fn needs_book(&self) -> bool {
-        self.quantizer.is_some() && self.codec == Codec::Huffman
+        self.bank.is_some() && self.codec == Codec::Huffman
     }
 
     /// The quantization method this session codes for.
@@ -111,97 +115,146 @@ impl CodecSession {
         self.bucket
     }
 
-    /// The live quantizer, if this session quantizes at all.
+    /// The live quantizer at the active width, if this session
+    /// quantizes at all.
     pub fn quantizer(&self) -> Option<&Quantizer> {
-        self.quantizer.as_ref()
+        self.bank.as_ref().map(|b| b.quantizer())
+    }
+
+    /// The quantizer for an explicit width (decoding a peer frame that
+    /// self-describes its width on the wire).
+    pub fn quantizer_at(&self, bits: u32) -> Option<&Quantizer> {
+        self.bank.as_ref().and_then(|b| b.quantizer_at(bits))
     }
 
     /// Whether this session quantizes at all (full-precision methods
     /// carry raw fp32 and never touch the codebook).
     pub fn is_quantized(&self) -> bool {
-        self.quantizer.is_some()
+        self.bank.is_some()
     }
 
-    /// The current Huffman codebook, once one exists.
+    /// The active width's Huffman codebook, once one exists.
     pub fn book(&self) -> Option<&HuffmanBook> {
-        self.book.as_ref()
+        self.bank.as_ref().and_then(|b| b.book())
     }
 
-    /// The current (possibly adapted) quantization level magnitudes.
-    pub fn final_levels(&self) -> Option<Vec<f64>> {
-        self.quantizer.as_ref().map(|q| q.levels().mags().to_vec())
+    /// The codebook for an explicit width, once one exists.
+    pub fn book_at(&self, bits: u32) -> Option<&HuffmanBook> {
+        self.bank.as_ref().and_then(|b| b.book_at(bits))
     }
 
-    /// Force TernGrad-style c·σ clipping regardless of method (the
-    /// Appendix K.2 / Fig. 14 ablation).
-    pub fn force_clip(&mut self, c: f32) {
-        if let Some(q) = self.quantizer.take() {
-            self.quantizer = Some(q.with_clip(c));
+    /// The active quantization width, `None` for full precision.
+    pub fn active_bits(&self) -> Option<u32> {
+        self.bank.as_ref().map(|b| b.active_bits())
+    }
+
+    /// Whether the session's bank holds a slot for `bits` (i.e. the bit
+    /// policy declared that width reachable).
+    pub fn has_width(&self, bits: u32) -> bool {
+        self.bank.as_ref().is_some_and(|b| b.has_width(bits))
+    }
+
+    /// Every width the session's bank pre-built, ascending (empty for
+    /// full precision).
+    pub fn widths(&self) -> Vec<u32> {
+        self.bank.as_ref().map(|b| b.widths()).unwrap_or_default()
+    }
+
+    /// Switch the active width — an O(1) bank index move. No-op for
+    /// full precision; panics on a width the policy never declared.
+    pub fn set_active_bits(&mut self, bits: u32) {
+        if let Some(bank) = &mut self.bank {
+            bank.activate(bits);
         }
     }
 
-    /// Uniform initial codebook: identical on every replica by
-    /// construction (the TCP path's requirement). No-op for codebook-free
-    /// coders.
+    /// The current (possibly adapted) quantization level magnitudes at
+    /// the active width.
+    pub fn final_levels(&self) -> Option<Vec<f64>> {
+        self.quantizer().map(|q| q.levels().mags().to_vec())
+    }
+
+    /// The current level magnitudes at an explicit width.
+    pub fn final_levels_at(&self, bits: u32) -> Option<Vec<f64>> {
+        self.bank.as_ref().and_then(|b| b.levels_at(bits))
+    }
+
+    /// The per-width `(bits, Ψ)` expected-variance profile of the last
+    /// successful level update (empty before the first, and always for
+    /// non-adaptive methods).
+    pub fn width_profile(&self) -> &[(u32, f64)] {
+        &self.width_profile
+    }
+
+    /// Force TernGrad-style c·σ clipping regardless of method, on every
+    /// bank width (the Appendix K.2 / Fig. 14 ablation).
+    pub fn force_clip(&mut self, c: f32) {
+        if let Some(bank) = &mut self.bank {
+            bank.force_clip(c);
+        }
+    }
+
+    /// Uniform initial codebooks for every reachable width: identical
+    /// on every replica by construction (the TCP path's requirement).
+    /// No-op for codebook-free coders.
     pub fn init_uniform_book(&mut self) {
         if !self.needs_book() {
             return;
         }
-        if let Some(q) = &self.quantizer {
-            self.book = Some(HuffmanBook::from_weights(&vec![
-                1.0;
-                q.levels().num_symbols()
-            ]));
+        if let Some(bank) = &mut self.bank {
+            bank.init_uniform_books();
         }
     }
 
-    /// Lazily build the codebook from the first quantized gradient's
-    /// empirical symbol distribution (smoothed: later steps may emit
-    /// symbols unseen in the first batch). No-op once a book exists (or
-    /// for codebook-free coders).
+    /// Lazily build the active width's codebook from the first
+    /// quantized gradient's empirical symbol distribution (smoothed:
+    /// later steps may emit symbols unseen in the first batch). No-op
+    /// once that width has a book (or for codebook-free coders).
     pub fn build_empirical_book(&mut self, first: &QuantizedGrad) {
-        if self.book.is_some() || !self.needs_book() {
+        if !self.needs_book() {
             return;
         }
-        let q = self
-            .quantizer
-            .as_ref()
-            .expect("empirical codebook on a full-precision session");
-        let counts = symbol_counts(first, q.levels());
-        self.book = Some(HuffmanBook::from_weights(&smooth_weights(&counts)));
-    }
-
-    /// Fold one lane's sampled symbol histogram into the refresh
-    /// statistics.
-    pub fn accumulate_counts(&mut self, counts: &[f64]) {
-        for (c, n) in self.sym_counts.iter_mut().zip(counts) {
-            *c += n;
+        if let Some(bank) = &mut self.bank {
+            bank.install_empirical_book(first);
         }
     }
 
-    /// Refresh the codebook from the empirical symbol counts accumulated
-    /// since the last refresh (the non-adaptive methods' codebook update
-    /// at the schedule 𝒰). No-op when nothing was accumulated.
+    /// Fold one lane's sampled symbol histogram into the active width's
+    /// refresh statistics.
+    pub fn accumulate_counts(&mut self, counts: &[f64]) {
+        if let Some(bank) = &mut self.bank {
+            bank.accumulate_counts(counts);
+        }
+    }
+
+    /// Refresh the codebooks from the empirical symbol counts
+    /// accumulated since the last refresh (the non-adaptive methods'
+    /// codebook update at the schedule 𝒰), per width. No-op for widths
+    /// where nothing was accumulated.
     pub fn refresh_book_from_counts(&mut self) {
-        if self.needs_book() && self.sym_counts.iter().sum::<f64>() > 0.0 {
-            self.book = Some(HuffmanBook::from_weights(&smooth_weights(&self.sym_counts)));
-            for c in self.sym_counts.iter_mut() {
-                *c = 0.0;
-            }
+        if !self.needs_book() {
+            return;
+        }
+        if let Some(bank) = &mut self.bank {
+            bank.refresh_from_counts();
         }
     }
 
     /// Algorithm 1 line 4 for adaptive methods: fit the truncated-normal
-    /// mixture to the observed gradients, re-optimize the levels, and
-    /// install the model-based codebook (Prop. 6). Returns true iff the
-    /// levels were updated; non-adaptive methods (and an empty fit)
-    /// return false so the caller can fall back to
+    /// mixture to the observed gradients once, then re-optimize the
+    /// levels and install the model-based codebook (Prop. 6) for *every*
+    /// bank width from that one fit — so a width's adapted state depends
+    /// only on the shared adaptation history, never on which steps ran
+    /// at which width. Also records the per-width Ψ profile for the
+    /// `variance` bit controller. Returns true iff the levels were
+    /// updated; non-adaptive methods (and an empty fit) return false so
+    /// the caller can fall back to
     /// [`CodecSession::refresh_book_from_counts`].
     pub fn adapt<'a, I>(&mut self, grads: I, rng: &mut Rng) -> bool
     where
         I: IntoIterator<Item = &'a [f32]>,
     {
-        let (Some(q), Some(est)) = (&mut self.quantizer, &mut self.estimator) else {
+        let (Some(bank), Some(est)) = (&mut self.bank, &mut self.estimator) else {
             return false;
         };
         if !self.method.is_adaptive() {
@@ -216,15 +269,7 @@ impl CodecSession {
         let Some(mix) = est.fit(self.method.weighted_mixture(), rng) else {
             return false;
         };
-        let new_levels = update_levels(self.method, q.levels(), &mix);
-        q.set_levels(new_levels);
-        // Model-based codebook (Prop. 6) for the new levels (Elias
-        // coding is codebook-free — only the levels move).
-        if self.codec == Codec::Huffman {
-            let probs = crate::adaptive::objective::symbol_probs(&mix, q.levels());
-            self.book = Some(HuffmanBook::from_weights(&smooth_weights(&probs)));
-        }
-        self.sym_counts = vec![0.0; q.levels().num_symbols()];
+        self.width_profile = bank.adapt_all(self.method, &mix, self.codec);
         true
     }
 }
@@ -267,7 +312,8 @@ impl ExchangeLane {
         }
     }
 
-    /// Draw this worker's stochastic quantization of `grad`.
+    /// Draw this worker's stochastic quantization of `grad` at the
+    /// session's active width.
     pub fn quantize(&mut self, s: &CodecSession, grad: &[f32], rng: &mut Rng) {
         let q = s
             .quantizer()
@@ -285,7 +331,7 @@ impl ExchangeLane {
     /// time — DESIGN.md §Perf).
     pub fn count_symbols(&mut self, s: &CodecSession) {
         let q = s.quantizer().expect("counts on a full-precision session");
-        self.counts = symbol_counts(&self.qbuf, q.levels());
+        self.counts = crate::quant::symbol_counts(&self.qbuf, q.levels());
     }
 
     /// The last sampled symbol histogram.
@@ -294,7 +340,8 @@ impl ExchangeLane {
     }
 
     /// Entropy-encode the lane's quantized gradient into the reusable
-    /// writer with the session's coder (Huffman symbols or Elias-γ runs).
+    /// writer with the session's coder (Huffman symbols or Elias-γ runs)
+    /// at the session's active width.
     /// Returns the exact payload bits — the figure the network model is
     /// charged.
     pub fn encode(&mut self, s: &CodecSession) -> u64 {
@@ -303,7 +350,7 @@ impl ExchangeLane {
         self.bits = match s.codec() {
             Codec::Huffman => {
                 let book = s.book().expect("codebook not initialized");
-                encode_into(&self.qbuf, q.levels(), book, &mut self.writer)
+                crate::quant::encode_into(&self.qbuf, q.levels(), book, &mut self.writer)
             }
             Codec::Elias => encode_qsgd_style(&self.qbuf, q.levels(), &mut self.writer),
         };
@@ -330,7 +377,14 @@ impl ExchangeLane {
         match s.codec() {
             Codec::Huffman => {
                 let book = s.book().expect("codebook not initialized");
-                encode_buckets_into(&self.qbuf, q.levels(), book, buckets, include_tail, w)
+                crate::quant::encode_buckets_into(
+                    &self.qbuf,
+                    q.levels(),
+                    book,
+                    buckets,
+                    include_tail,
+                    w,
+                )
             }
             Codec::Elias => {
                 encode_qsgd_style_range(&self.qbuf, q.levels(), buckets, include_tail, w)
@@ -374,11 +428,35 @@ impl ExchangeLane {
         }
     }
 
-    /// Decode an encoded frame (own or a peer's) and dequantize into the
-    /// lane's `ghat`; returns the estimate.
+    /// Decode an encoded frame (own or a peer's) produced at the
+    /// session's *active* width and dequantize into the lane's `ghat`;
+    /// returns the estimate.
     pub fn decode_to_ghat(&mut self, s: &CodecSession, view: EncodedView<'_>) -> &[f32] {
-        if s.quantizer().is_some() {
-            decode_frame_into(view, s, &mut self.dec_buf, &mut self.ghat);
+        let width = s.active_bits();
+        self.decode_dispatch(s, width, view)
+    }
+
+    /// Decode a frame produced at an explicit width (the TCP path,
+    /// where every wire frame self-describes the width it was encoded
+    /// at so replicas decode with the right bank slot).
+    pub fn decode_to_ghat_at(
+        &mut self,
+        s: &CodecSession,
+        bits: u32,
+        view: EncodedView<'_>,
+    ) -> &[f32] {
+        let width = if s.is_quantized() { Some(bits) } else { None };
+        self.decode_dispatch(s, width, view)
+    }
+
+    fn decode_dispatch(
+        &mut self,
+        s: &CodecSession,
+        width: Option<u32>,
+        view: EncodedView<'_>,
+    ) -> &[f32] {
+        if let Some(bits) = width {
+            decode_frame_into(view, s, bits, &mut self.dec_buf, &mut self.ghat);
         } else {
             // Full precision: the payload is the raw fp32 stream.
             let n = view.n_full + view.n_tail;
@@ -398,10 +476,9 @@ impl ExchangeLane {
     /// once here is the paper's "simulate M GPUs on one" methodology
     /// with real bit accounting.
     pub fn decode_own(&mut self, s: &CodecSession) {
-        assert!(
-            s.quantizer().is_some(),
-            "loopback decode on a full-precision session"
-        );
+        let bits = s
+            .active_bits()
+            .expect("loopback decode on a full-precision session");
         let view = EncodedView {
             bytes: self.writer.bytes(),
             bits: self.bits,
@@ -409,7 +486,7 @@ impl ExchangeLane {
             n_tail: self.n_tail,
             bucket: self.qbuf.bucket,
         };
-        decode_frame_into(view, s, &mut self.dec_buf, &mut self.ghat);
+        decode_frame_into(view, s, bits, &mut self.dec_buf, &mut self.ghat);
     }
 
     /// The dequantized gradient estimate of the last decode.
@@ -419,25 +496,29 @@ impl ExchangeLane {
 }
 
 /// The single quantized-frame decode path: resize the estimate buffer,
-/// decode symbols + norms + tail with the session's coder, dequantize.
+/// decode symbols + norms + tail with the session's coder at the
+/// frame's width, dequantize.
 /// Free function over the lane's disjoint fields so `decode_own` (which
-/// also borrows the lane's writer for the view) and `decode_to_ghat`
-/// share one copy.
+/// also borrows the lane's writer for the view) and the `decode_to_ghat`
+/// entry points share one copy.
 fn decode_frame_into(
     view: EncodedView<'_>,
     s: &CodecSession,
+    width: u32,
     dec_buf: &mut QuantizedGrad,
     ghat: &mut Vec<f32>,
 ) {
-    let q = s.quantizer().expect("frame decode needs a quantizer");
+    let q = s
+        .quantizer_at(width)
+        .unwrap_or_else(|| panic!("frame decode needs a quantizer at width {width}"));
     let n = view.n_full + view.n_tail;
     if ghat.len() != n {
         ghat.resize(n, 0.0);
     }
     match s.codec() {
         Codec::Huffman => {
-            let book = s.book().expect("codebook not initialized");
-            decode_view_into(view, q.levels(), book, dec_buf);
+            let book = s.book_at(width).expect("codebook not initialized");
+            crate::quant::decode_view_into(view, q.levels(), book, dec_buf);
         }
         Codec::Elias => {
             decode_qsgd_style_into(view.bytes, view.n_full, view.n_tail, view.bucket, dec_buf);
@@ -505,6 +586,7 @@ mod tests {
     fn raw_encoding_roundtrips_without_quantizer() {
         let s = CodecSession::new(Method::SuperSgd, 3, 32);
         assert!(!s.is_quantized());
+        assert_eq!(s.active_bits(), None);
         let grad = randn(100, 4);
         let mut lane = ExchangeLane::new(32);
         let bits = lane.encode_raw(&grad);
@@ -570,6 +652,10 @@ mod tests {
         assert!(s.adapt(grads.iter().map(|g| g.as_slice()), &mut rng));
         assert_ne!(s.final_levels().unwrap(), before_levels);
         assert_ne!(s.book().unwrap(), &before_book);
+        // The fixed-width session records a one-entry Ψ profile.
+        assert_eq!(s.width_profile().len(), 1);
+        assert_eq!(s.width_profile()[0].0, 3);
+        assert!(s.width_profile()[0].1 > 0.0);
     }
 
     #[test]
@@ -592,5 +678,97 @@ mod tests {
         let book = s.book().unwrap().clone();
         s.refresh_book_from_counts();
         assert_eq!(s.book().unwrap(), &book);
+    }
+
+    #[test]
+    fn width_switch_roundtrips_at_both_widths() {
+        // A two-width session encodes/decodes correctly at whichever
+        // width is active, and an explicit-width decode matches the
+        // frame's width even after the active width moved on.
+        let policy = BitsPolicy::parse("schedule:3@0,4@10").unwrap();
+        let mut s = CodecSession::with_policy(Method::QsgdInf, &policy, 64);
+        s.init_uniform_book();
+        assert_eq!(s.active_bits(), Some(3));
+        assert_eq!(s.widths(), vec![3, 4]);
+        let grad = randn(320, 9);
+        let mut lane = ExchangeLane::new(64);
+        let mut rng = Rng::new(10);
+
+        lane.quantize(&s, &grad, &mut rng);
+        let bits3 = lane.encode(&s);
+        lane.decode_own(&s);
+        let ghat3 = lane.ghat().to_vec();
+
+        // Re-encode the same frame bytes through a peer lane pinned at
+        // width 3 while the session is active at width 4.
+        let frame: Vec<u8> = lane.encoded().bytes.to_vec();
+        let view = EncodedView {
+            bytes: &frame,
+            bits: bits3,
+            n_full: 320,
+            n_tail: 0,
+            bucket: 64,
+        };
+        s.set_active_bits(4);
+        assert_eq!(s.active_bits(), Some(4));
+        let mut peer = ExchangeLane::new(64);
+        let got = peer.decode_to_ghat_at(&s, 3, view);
+        assert_eq!(got, &ghat3[..]);
+
+        // And the session now quantizes with 8 magnitudes.
+        lane.quantize(&s, &grad, &mut rng);
+        s.build_empirical_book(lane.quantized());
+        let bits4 = lane.encode(&s);
+        assert!(bits4 > 0);
+        lane.decode_own(&s);
+        assert_eq!(lane.ghat().len(), grad.len());
+    }
+
+    /// QuantizerBank determinism (ISSUE 4 satellite): switching widths
+    /// mid-run and back yields the same per-width levels and codebooks
+    /// as a session that stayed pinned at that width the whole time,
+    /// for both the Huffman and Elias coders — a width's adapted state
+    /// is a function of the shared adaptation history only.
+    #[test]
+    fn bank_width_switching_matches_fresh_sessions_at_each_width() {
+        for codec in [Codec::Huffman, Codec::Elias] {
+            let policy = BitsPolicy::parse("schedule:3@0,4@5").unwrap();
+            let mut switching =
+                CodecSession::with_policy(Method::Alq, &policy, 64).with_codec(codec);
+            let mut fixed3 = CodecSession::new(Method::Alq, 3, 64).with_codec(codec);
+            let mut fixed4 = CodecSession::new(Method::Alq, 4, 64).with_codec(codec);
+            for s in [&mut switching, &mut fixed3, &mut fixed4] {
+                s.init_uniform_book();
+            }
+            // Two adaptation rounds on shared data, with a width switch
+            // and switch-back in between on the banked session.
+            for (round, seed) in [(0u64, 100u64), (1, 200)] {
+                let grads: Vec<Vec<f32>> =
+                    (0..4).map(|i| randn(640, seed + i)).collect();
+                switching.set_active_bits(if round == 0 { 4 } else { 3 });
+                for s in [&mut switching, &mut fixed3, &mut fixed4] {
+                    let mut rng = Rng::new(777 + round);
+                    assert!(s.adapt(grads.iter().map(|g| g.as_slice()), &mut rng));
+                }
+            }
+            switching.set_active_bits(3);
+            assert_eq!(
+                switching.final_levels_at(3),
+                fixed3.final_levels(),
+                "{codec:?} width-3 levels"
+            );
+            assert_eq!(
+                switching.final_levels_at(4),
+                fixed4.final_levels(),
+                "{codec:?} width-4 levels"
+            );
+            if codec == Codec::Huffman {
+                assert_eq!(switching.book_at(3), fixed3.book(), "{codec:?} width-3 book");
+                assert_eq!(switching.book_at(4), fixed4.book(), "{codec:?} width-4 book");
+            } else {
+                // Elias is codebook-free at every width.
+                assert!(switching.book_at(3).is_none() && switching.book_at(4).is_none());
+            }
+        }
     }
 }

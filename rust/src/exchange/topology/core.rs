@@ -42,6 +42,7 @@
 //! structure (a 2(M−1)-stage dependency chain that mutates the shared
 //! session's codebook statistics mid-stage) admits no lane fan-out.
 
+use super::super::budget::{select_width, BitController};
 use super::super::engine::{ExchangeConfig, ParallelMode};
 use super::super::session::{CodecSession, ExchangeLane};
 use super::Hop;
@@ -59,13 +60,20 @@ const AUTO_PARALLEL_MIN_COORDS: usize = 32_768;
 /// accounting, codec wall-time, and the SingleSGD lane collapse.
 ///
 /// Backends embed a `BackendCore` and implement only their schedule
-/// (`exchange()`); everything else — `adapt`, `quantizer`,
-/// `active_workers`, `is_quantized`, `force_clip`, `meter`,
-/// `codec_seconds`, `final_levels`, `last_hops` — is provided by the
-/// trait's default methods delegating here (DESIGN.md §8).
+/// (`run_schedule()`); everything else — the per-step bit-budget
+/// selection (`exchange()` → [`BackendCore::begin_step`]), `adapt`,
+/// `quantizer`, `active_workers`, `is_quantized`, `force_clip`,
+/// `meter`, `codec_seconds`, `final_levels`, `last_hops`, `step_width`
+/// — is provided by the trait's default methods delegating here
+/// (DESIGN.md §8).
 pub struct BackendCore {
     cfg: ExchangeConfig,
     session: CodecSession,
+    /// The per-step bit-width decision for the configured `BitsPolicy`
+    /// (the inert constant for `fixed:B`).
+    controller: Box<dyn BitController>,
+    /// Width the current/last step quantizes at (32 for full precision).
+    step_width: u32,
     rngs: Vec<Rng>,
     active: usize,
     meter: Meter,
@@ -84,7 +92,10 @@ impl BackendCore {
         // active, so a seed maps to the same per-worker randomness
         // regardless of method (and identically to the seed loop).
         let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
-        let session = CodecSession::new(cfg.method, cfg.bits, cfg.bucket).with_codec(cfg.codec);
+        let session =
+            CodecSession::with_policy(cfg.method, &cfg.bits, cfg.bucket).with_codec(cfg.codec);
+        let controller = cfg.bits.controller();
+        let step_width = session.active_bits().unwrap_or(32);
         let active = if cfg.method == Method::SingleSgd {
             1
         } else {
@@ -92,6 +103,8 @@ impl BackendCore {
         };
         BackendCore {
             session,
+            controller,
+            step_width,
             rngs,
             active,
             meter: Meter::default(),
@@ -99,6 +112,33 @@ impl BackendCore {
             hops: Vec::new(),
             cfg,
         }
+    }
+
+    /// Start one exchange step: feed the bit controller its per-step
+    /// variance observation (only when the policy consumes one — the
+    /// closed-form Eq. 1–2 evaluation is skipped entirely for `fixed:B`
+    /// and `schedule`, keeping them at zero overhead), ask it for the
+    /// step's width, and activate that width's bank slot (O(1)).
+    ///
+    /// Runs on the calling thread before any lane fans out, so width
+    /// decisions are deterministic per seed and identical across
+    /// `--parallel` modes.
+    pub fn begin_step(&mut self, step: usize, grads: &[Vec<f32>]) {
+        if !self.session.is_quantized() {
+            self.step_width = 32;
+            return;
+        }
+        // Worker 0's gradient is the representative observation (the
+        // same protocol the TCP worker runs on its own gradient —
+        // `budget::select_width` is the single shared implementation).
+        let grad = grads.first().map(|g| g.as_slice()).unwrap_or_default();
+        self.step_width = select_width(self.controller.as_mut(), &mut self.session, step, grad);
+    }
+
+    /// The quantization width the current/last step runs at (32 for
+    /// full precision).
+    pub fn step_width(&self) -> u32 {
+        self.step_width
     }
 
     /// The exchange configuration this core was built from.
@@ -204,6 +244,12 @@ impl BackendCore {
         let mut rng = self.rngs[0].fork(0xE57);
         if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
             self.session.refresh_book_from_counts();
+        } else {
+            // A successful fit refreshed every bank width's levels and
+            // produced the per-width Ψ profile; hand it to the bit
+            // controller (a no-op for fixed/schedule policies).
+            self.controller
+                .observe_width_profile(self.session.width_profile());
         }
     }
 
@@ -343,7 +389,7 @@ mod tests {
         ExchangeConfig {
             method,
             workers,
-            bits: 3,
+            bits: crate::exchange::BitsPolicy::Fixed(3),
             bucket: 64,
             seed: 9,
             network: NetworkModel::paper_testbed(),
@@ -407,6 +453,27 @@ mod tests {
     fn disjoint_mut_rejects_unsorted_indices() {
         let mut v = [0u8; 4];
         let _ = disjoint_mut(&mut v, [2usize, 1]);
+    }
+
+    #[test]
+    fn begin_step_moves_the_width_only_for_dynamic_policies() {
+        let grads = vec![vec![0.1f32; 128]; 2];
+        let mut c = cfg(Method::Alq, 2, ParallelMode::Serial);
+        c.bits = crate::exchange::BitsPolicy::parse("schedule:3@0,2@5").unwrap();
+        let mut core = BackendCore::new(c);
+        core.begin_step(0, &grads);
+        assert_eq!(core.step_width(), 3);
+        assert_eq!(core.session().active_bits(), Some(3));
+        core.begin_step(5, &grads);
+        assert_eq!(core.step_width(), 2);
+        assert_eq!(core.session().active_bits(), Some(2));
+        // Fixed stays put; full precision reports 32.
+        let mut fixed = BackendCore::new(cfg(Method::Alq, 2, ParallelMode::Serial));
+        fixed.begin_step(0, &grads);
+        assert_eq!(fixed.step_width(), 3);
+        let mut fp = BackendCore::new(cfg(Method::SuperSgd, 2, ParallelMode::Serial));
+        fp.begin_step(0, &grads);
+        assert_eq!(fp.step_width(), 32);
     }
 
     #[test]

@@ -270,7 +270,7 @@ impl ExchangeBackend for RingExchange {
         &mut self.core
     }
 
-    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+    fn run_schedule(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
         self.exchange_impl(step, grads, agg)
     }
 }
@@ -287,7 +287,7 @@ mod tests {
         ExchangeConfig {
             method,
             workers,
-            bits: 3,
+            bits: crate::exchange::BitsPolicy::Fixed(3),
             bucket: 64,
             seed: 9,
             network: NetworkModel::paper_testbed(),

@@ -256,7 +256,7 @@ impl ExchangeBackend for ShardedExchange {
         &mut self.core
     }
 
-    fn exchange(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
+    fn run_schedule(&mut self, step: usize, grads: &[Vec<f32>], agg: &mut [f32]) -> u64 {
         self.exchange_impl(step, grads, agg)
     }
 }
@@ -273,7 +273,7 @@ mod tests {
         ExchangeConfig {
             method,
             workers,
-            bits: 3,
+            bits: crate::exchange::BitsPolicy::Fixed(3),
             bucket: 64,
             seed: 9,
             network: NetworkModel::paper_testbed(),

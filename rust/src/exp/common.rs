@@ -1,7 +1,7 @@
 //! Shared experiment plumbing: model scales, task construction, runners.
 
 use crate::data::Blobs;
-use crate::exchange::ParallelMode;
+use crate::exchange::{BitsPolicy, ParallelMode};
 use crate::model::{Mlp, MlpTask};
 use crate::opt::{LrSchedule, UpdateSchedule};
 use crate::quant::Method;
@@ -110,7 +110,7 @@ pub fn cluster_config(
     ClusterConfig {
         method,
         workers,
-        bits,
+        bits: BitsPolicy::Fixed(bits),
         bucket,
         iters,
         lr: LrSchedule::paper_default(0.1, iters),
@@ -138,7 +138,42 @@ pub fn run_one(
     seed: u64,
     variance_every: usize,
 ) -> TrainRecord {
-    let mut cfg = cluster_config(method, spec, iters, workers, bits, bucket, seed);
+    run_policy(
+        method,
+        spec,
+        iters,
+        workers,
+        bucket,
+        seed,
+        variance_every,
+        BitsPolicy::Fixed(bits),
+    )
+}
+
+/// Run one training job under an explicit bit-budget policy (the same
+/// task/seed derivation as [`run_one`], so policy sweeps pair with the
+/// fixed-width runs step for step).
+#[allow(clippy::too_many_arguments)]
+pub fn run_policy(
+    method: Method,
+    spec: &ModelSpec,
+    iters: usize,
+    workers: usize,
+    bucket: usize,
+    seed: u64,
+    variance_every: usize,
+    policy: BitsPolicy,
+) -> TrainRecord {
+    let mut cfg = cluster_config(
+        method,
+        spec,
+        iters,
+        workers,
+        policy.initial_bits(),
+        bucket,
+        seed,
+    );
+    cfg.bits = policy;
     cfg.variance_every = variance_every;
     let mut task = spec.task(workers, seed.wrapping_mul(31).wrapping_add(7));
     Cluster::new(cfg).train(&mut task)

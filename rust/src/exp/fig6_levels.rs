@@ -1,8 +1,12 @@
-//! Fig. 6 — the quantization levels each method ends training with.
+//! Fig. 6 — the quantization levels each method ends training with,
+//! plus the per-step bit-width trajectory under each `--bits-policy`.
 //! Adaptive levels concentrate near zero (where normalized gradient
-//! coordinates live); the fixed baselines stay where they started.
+//! coordinates live); the fixed baselines stay where they started; and
+//! with a dynamic bit budget the *width* trajectory is plottable
+//! alongside the adaptive levels (the DQ-SGD-style companion curve).
 
-use super::common::{out_dir, run_one, ExpArgs, ModelSpec};
+use super::common::{out_dir, run_one, run_policy, ExpArgs, ModelSpec};
+use crate::exchange::BitsPolicy;
 use crate::metrics::Table;
 use anyhow::Result;
 
@@ -33,5 +37,55 @@ pub fn run(args: &[String]) -> Result<()> {
     println!("levels written to {path:?}");
     println!("\nPaper shape: ALQ/AMQ levels bunch toward 0; QSGDinf stays uniform;");
     println!("NUQSGD stays at powers of 1/2.");
+
+    // Adaptive-bits trajectory: the per-step width each bit policy
+    // selects for ALQ, recorded next to the adaptive levels so both
+    // adaptation axes plot from one CSV pair.
+    println!("\nBit-width trajectories (ALQ, per --bits-policy):");
+    let (s1, s2) = ((iters / 4).max(1), (iters / 2).max(2));
+    let policies = [
+        BitsPolicy::Fixed(bits),
+        BitsPolicy::parse(&format!("schedule:4@0,3@{s1},2@{s2}")).unwrap(),
+        BitsPolicy::parse("variance:2-4").unwrap(),
+    ];
+    let mut wtable = Table::new(
+        "Fig. 6b: per-step bit-width by policy",
+        &["policy", "mean width", "total Mbits", "final loss"],
+    );
+    let mut wcsv = Table::new("", &["policy", "step", "width", "bits"]);
+    for policy in policies {
+        // Same task/seed derivation as the Fig. 6a runs (run_one), so
+        // the two CSVs pair step for step.
+        let rec = run_policy(
+            crate::quant::Method::Alq,
+            &spec,
+            iters,
+            4,
+            spec.bucket,
+            8,
+            0,
+            policy.clone(),
+        );
+        let mean_width: f64 = rec.steps.iter().map(|s| s.width as f64).sum::<f64>()
+            / rec.steps.len().max(1) as f64;
+        wtable.row(vec![
+            policy.name(),
+            format!("{mean_width:.2}"),
+            format!("{:.2}", rec.comm_bits as f64 / 1e6),
+            format!("{:.4}", rec.final_eval.loss),
+        ]);
+        for s in &rec.steps {
+            wcsv.row(vec![
+                policy.name(),
+                s.step.to_string(),
+                s.width.to_string(),
+                s.bits.to_string(),
+            ]);
+        }
+    }
+    println!("{}", wtable.to_markdown());
+    let wpath = out_dir().join("fig6_bits_trajectory.csv");
+    wcsv.save_csv(&wpath)?;
+    println!("per-step widths written to {wpath:?}");
     Ok(())
 }

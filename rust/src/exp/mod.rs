@@ -28,7 +28,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig3", "Fig. 3 — validation loss curves"),
     ("fig4", "Fig. 4 — gradient variance during training"),
     ("fig5", "Fig. 5 — variance on the frozen SGD trajectory"),
-    ("fig6", "Fig. 6 — final quantization levels per method"),
+    ("fig6", "Fig. 6 — final quantization levels per method + per-step bit-width trajectories"),
     ("fig7", "Fig. 7 — bucket-size and bit-width sweeps"),
     ("fig8", "Fig. 8 — convergence of level-update methods"),
     ("fig14", "Fig. 14 (K.2) — gradient clipping ablation (fig7 --clip)"),

@@ -25,14 +25,20 @@ USAGE:
   aqsgd train [--method ALQ] [--workers 4] [--bits 3] [--bucket 8192]
               [--iters 3000] [--seed 1] [--model mlp] [--parallel auto|on|off]
               [--topology flat|sharded:S|tree:G|ring] [--codec huffman|elias]
+              [--bits-policy fixed:B|schedule:B1@s1,B2@s2,...|variance[:MIN-MAX[@T]]]
               (--parallel fans out flat/sharded/tree lanes, bit-identical
-               to serial; the ring schedule is inherently serial)
+               to serial; the ring schedule is inherently serial.
+               --bits-policy moves the quantization width per step:
+               fixed:B ≡ --bits B, schedule switches at the listed steps,
+               variance tracks the quantization-variance estimate)
   aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
   aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
               [--topology flat|sharded:S|tree:G]
   aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
               [--method ALQ --bits 3 --bucket 512 --seed 42]
               [--topology flat|sharded:S|tree:G] [--codec huffman|elias]
+              [--bits-policy ...]   (frames carry their width, so the
+               leader relay needs no flag and no extra round-trip)
   aqsgd inspect [--artifacts DIR]
 ";
 
@@ -62,11 +68,11 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     println!(
-        "training: method={} workers={} bits={} bucket={} iters={} model={} exchange={} \
+        "training: method={} workers={} bits-policy={} bucket={} iters={} model={} exchange={} \
          topology={} codec={}",
         cfg.method,
         cfg.workers,
-        cfg.bits,
+        cfg.effective_bits_policy(),
         cfg.bucket,
         cfg.iters,
         cfg.model,
@@ -164,10 +170,31 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         None => aqsgd::quant::Codec::Huffman,
     };
     let bits: u32 = flag(args, "--bits").unwrap_or("3").parse()?;
-    // Same validation the train path applies in RunConfig::validate —
-    // fail before connecting rather than panicking mid-handshake.
+    let bits_policy = match flag(args, "--bits-policy") {
+        Some(v) => aqsgd::exchange::BitsPolicy::parse(v).with_context(|| {
+            format!(
+                "bad --bits-policy {v:?} \
+                 (fixed:B | schedule:B1@s1,B2@s2,... | variance[:MIN-MAX[@T]])"
+            )
+        })?,
+        None => aqsgd::exchange::BitsPolicy::Fixed(bits),
+    };
+    // Same validations the train path applies in RunConfig::validate —
+    // fail before connecting rather than panicking mid-handshake. (The
+    // zero level is a property of the method's level family, so one
+    // width answers for every width the policy can reach.)
+    if !bits_policy.is_fixed()
+        && method.is_quantized()
+        && method.effective_bits(2) == method.effective_bits(8)
+    {
+        bail!(
+            "--bits-policy {} has no effect for {method}: its level family ignores the \
+             bit width (always ternary); use --bits B / fixed:B",
+            bits_policy.name()
+        );
+    }
     if codec == aqsgd::quant::Codec::Elias {
-        if let Some(levels) = method.initial_levels(bits) {
+        if let Some(levels) = method.initial_levels(bits_policy.initial_bits()) {
             if !levels.has_zero() {
                 bail!(
                     "--codec elias needs a zero level to run-length over; \
@@ -181,7 +208,7 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         worker: flag(args, "--worker").unwrap_or("0").parse()?,
         world: flag(args, "--world").unwrap_or("4").parse()?,
         method,
-        bits,
+        bits: bits_policy,
         bucket: flag(args, "--bucket").unwrap_or("512").parse()?,
         iters,
         lr: LrSchedule::paper_default(0.1, iters),

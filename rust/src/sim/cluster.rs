@@ -20,7 +20,7 @@
 //! (DESIGN.md §8).
 
 use crate::exchange::{
-    make_backend, ExchangeBackend, ExchangeConfig, ParallelMode, TopologySpec,
+    make_backend, BitsPolicy, ExchangeBackend, ExchangeConfig, ParallelMode, TopologySpec,
 };
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
@@ -31,7 +31,9 @@ use crate::sim::network::NetworkModel;
 pub struct ClusterConfig {
     pub method: Method,
     pub workers: usize,
-    pub bits: u32,
+    /// Bit-budget policy (`--bits B` is shorthand for `fixed:B`;
+    /// `--bits-policy` selects `schedule:…` or `variance`).
+    pub bits: BitsPolicy,
     pub bucket: usize,
     pub iters: usize,
     pub lr: LrSchedule,
@@ -60,7 +62,7 @@ impl ClusterConfig {
         ClusterConfig {
             method,
             workers: 4,
-            bits: 3,
+            bits: BitsPolicy::Fixed(3),
             bucket: 8192,
             iters,
             lr: LrSchedule::paper_default(0.1, iters),
@@ -81,7 +83,7 @@ impl ClusterConfig {
         ExchangeConfig {
             method: self.method,
             workers: self.workers,
-            bits: self.bits,
+            bits: self.bits.clone(),
             bucket: self.bucket,
             seed: self.seed,
             network: self.network,
@@ -100,6 +102,9 @@ pub struct StepStats {
     /// Encoded bits across all workers this step (0 for full precision…
     /// which is charged as 32·d·M).
     pub bits: u64,
+    /// Quantization bit-width this step ran at (the bit controller's
+    /// per-step choice; 32 for full precision).
+    pub width: u32,
 }
 
 /// Variance sample (Figs. 1/4/5): per-coordinate averages.
@@ -221,6 +226,7 @@ impl Cluster {
                 train_loss: mean_loss,
                 lr,
                 bits: step_bits,
+                width: self.engine.step_width(),
             });
 
             if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
@@ -451,6 +457,47 @@ mod tests {
         // training trajectory; only the coded bits differ.
         assert_eq!(elias.params_hash, huff.params_hash);
         assert_ne!(elias.comm_bits, huff.comm_bits);
+    }
+
+    #[test]
+    fn bits_policies_record_per_step_widths_and_meter_actual_bits() {
+        // fixed: constant width on every step record.
+        let mut cfg = small_cfg(Method::QsgdInf, 8);
+        cfg.bits = BitsPolicy::Fixed(3);
+        let rec = Cluster::new(cfg).train(&mut task(4, 21));
+        assert!(rec.steps.iter().all(|s| s.width == 3));
+
+        // schedule: the width moves exactly at the segment boundary and
+        // the per-step metered bits move with it.
+        let mut cfg = small_cfg(Method::QsgdInf, 12);
+        cfg.bits = BitsPolicy::parse("schedule:2@0,4@6").unwrap();
+        let rec = Cluster::new(cfg).train(&mut task(4, 21));
+        assert!(rec.steps[..6].iter().all(|s| s.width == 2));
+        assert!(rec.steps[6..].iter().all(|s| s.width == 4));
+        let narrow: u64 = rec.steps[..6].iter().map(|s| s.bits).sum();
+        let wide: u64 = rec.steps[6..].iter().map(|s| s.bits).sum();
+        assert!(wide > narrow, "4-bit steps must meter more bits: {narrow} vs {wide}");
+        assert_eq!(rec.comm_bits, narrow + wide);
+
+        // variance: stays inside its declared range and is a pure
+        // function of the seed.
+        let run = || {
+            let mut cfg = small_cfg(Method::Alq, 30);
+            cfg.bits = BitsPolicy::parse("variance:2-4").unwrap();
+            Cluster::new(cfg).train(&mut task(4, 23))
+        };
+        let a = run();
+        let b = run();
+        assert!(a.steps.iter().all(|s| (2..=4).contains(&s.width)));
+        assert_eq!(a.params_hash, b.params_hash);
+        assert_eq!(
+            a.steps.iter().map(|s| s.width).collect::<Vec<_>>(),
+            b.steps.iter().map(|s| s.width).collect::<Vec<_>>()
+        );
+
+        // Full precision reports width 32.
+        let rec = Cluster::new(small_cfg(Method::SuperSgd, 3)).train(&mut task(4, 21));
+        assert!(rec.steps.iter().all(|s| s.width == 32));
     }
 
     #[test]

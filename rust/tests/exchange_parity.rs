@@ -5,6 +5,13 @@
 //! one. The reference below is the seed's in-process loop re-implemented
 //! verbatim from public quant/adaptive/opt APIs: the oracle the engine is
 //! checked against.
+//!
+//! Since the dynamic bit-budget refactor (ISSUE 4) this file is also the
+//! pre-refactor pin for `--bits-policy fixed:B`: the oracle still
+//! threads one constant width through the primitive quant APIs exactly
+//! as the seed loop did, so `engine_matches_reference_serial_loop`
+//! passing means the banked `CodecSession` + per-step `BitController`
+//! machinery is provably inert at a fixed width.
 
 use aqsgd::adaptive::{update_levels, Estimator};
 use aqsgd::exchange::ParallelMode;
@@ -38,7 +45,10 @@ fn reference_train(cfg: &ClusterConfig, task: &mut dyn TrainTask) -> RefOutcome 
     } else {
         Box::new(Sgd::new(cfg.weight_decay))
     };
-    let mut quantizer = cfg.method.initial_levels(cfg.bits).map(|levels| {
+    // The oracle runs at the policy's (constant) width — reference
+    // parity is only claimed for fixed:B configurations.
+    assert!(cfg.bits.is_fixed(), "the reference oracle is fixed-width");
+    let mut quantizer = cfg.method.initial_levels(cfg.bits.initial_bits()).map(|levels| {
         let mut q = Quantizer::new(levels, cfg.method.norm_type(), cfg.bucket);
         if let Some(c) = cfg.method.clip_factor() {
             q = q.with_clip(c);
@@ -254,7 +264,7 @@ fn engine_and_coordinator_bits_agree_qualitatively() {
                 worker: w,
                 world,
                 method: Method::QsgdInf,
-                bits: 3,
+                bits: aqsgd::exchange::BitsPolicy::Fixed(3),
                 bucket: 128,
                 iters,
                 lr: LrSchedule::paper_default(0.1, iters),

@@ -30,7 +30,7 @@ fn quantized_training_over_hlo_model() {
     let cfg = ClusterConfig {
         method: Method::Alq,
         workers,
-        bits: 3,
+        bits: aqsgd::exchange::BitsPolicy::Fixed(3),
         bucket: 64,
         iters,
         lr: LrSchedule::paper_default(0.1, iters),
@@ -110,7 +110,7 @@ fn wire_roundtrip_preserves_gradients() {
     let book = quant::HuffmanBook::from_weights(&[4.0, 3.0, 2.0, 1.0]);
     let enc = quant::encode(&g, &levels, &book);
 
-    let msg = Msg::Grad { step: 3, grad: WireGrad::from(&enc) };
+    let msg = Msg::Grad { step: 3, grad: WireGrad::from_view(enc.view(), 3) };
     let mut buf = Vec::new();
     msg.write_to(&mut buf).unwrap();
     let got = Msg::read_from(&mut buf.as_slice()).unwrap();
@@ -155,7 +155,7 @@ fn cluster_and_coordinator_agree_qualitatively() {
                 worker: w,
                 world,
                 method: Method::QsgdInf,
-                bits: 3,
+                bits: aqsgd::exchange::BitsPolicy::Fixed(3),
                 bucket: 256,
                 iters,
                 lr: LrSchedule::paper_default(0.1, iters),

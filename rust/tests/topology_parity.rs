@@ -28,7 +28,7 @@ use aqsgd::coordinator::leader::run_leader_topo;
 use aqsgd::coordinator::{run_worker, WorkerConfig};
 use aqsgd::data::Blobs;
 use aqsgd::exchange::{
-    make_backend, ExchangeBackend, ExchangeConfig, ParallelMode, TopologySpec,
+    make_backend, BitsPolicy, ExchangeBackend, ExchangeConfig, ParallelMode, TopologySpec,
 };
 use aqsgd::model::{Mlp, MlpTask};
 use aqsgd::opt::{LrSchedule, UpdateSchedule};
@@ -133,7 +133,7 @@ fn hop_bits_sum_to_step_totals_for_every_topology() {
         let cfg = |parallel| ExchangeConfig {
             method: Method::Alq,
             workers,
-            bits: 3,
+            bits: BitsPolicy::Fixed(3),
             bucket: 128,
             seed: 9,
             network: NetworkModel::paper_testbed(),
@@ -250,7 +250,7 @@ fn sharded_hops_sum_to_flat_engine_step_totals() {
     let cfg = ExchangeConfig {
         method: Method::NuqSgd,
         workers,
-        bits: 3,
+        bits: BitsPolicy::Fixed(3),
         bucket: 128,
         seed: 11,
         network: NetworkModel::paper_testbed(),
@@ -279,7 +279,7 @@ fn ring_has_the_analytical_stage_structure() {
         let cfg = ExchangeConfig {
             method: Method::QsgdInf,
             workers,
-            bits: 3,
+            bits: BitsPolicy::Fixed(3),
             bucket: 128,
             seed: 4,
             network: NetworkModel::paper_testbed(),
@@ -341,7 +341,7 @@ fn spawn_tcp(
                 worker: w,
                 world,
                 method,
-                bits: 3,
+                bits: BitsPolicy::Fixed(3),
                 bucket: 128,
                 iters,
                 lr: LrSchedule::paper_default(0.1, iters),
@@ -381,4 +381,145 @@ fn tcp_topologies_are_selectable_and_sharded_matches_flat() {
     }
     // Tree replicas agree with each other but follow their own golden.
     assert_ne!(tree[0].params_hash, flat[0].params_hash);
+}
+
+/// ISSUE 4 acceptance: `--bits-policy fixed:B` is provably
+/// behavior-preserving. The flat engine is pinned to the pre-refactor
+/// seed loop by the oracle in `exchange_parity.rs`; here every topology
+/// × `--parallel` mode must produce the *same* trajectory whether the
+/// constant width is expressed as `fixed:3` or routed through the full
+/// dynamic machinery (`schedule:3@0`, `variance:3-3`) — params_hash,
+/// per-step bits, per-step widths, adapted levels, and total bits all
+/// equal, so the per-step controller + bank provably change nothing at
+/// constant width.
+#[test]
+fn fixed_policy_is_bit_identical_to_dynamic_machinery_at_constant_width() {
+    for topology in [
+        TopologySpec::Flat,
+        TopologySpec::Sharded(2),
+        TopologySpec::Tree(2),
+        TopologySpec::Ring,
+    ] {
+        for parallel in [ParallelMode::Serial, ParallelMode::Parallel] {
+            let run = |bits: BitsPolicy| {
+                let mut cfg = config(Method::Alq, 40, topology);
+                cfg.parallel = parallel;
+                cfg.bits = bits;
+                Cluster::new(cfg).train(&mut task(4, 3))
+            };
+            let fixed = run(BitsPolicy::Fixed(3));
+            let schedule = run(BitsPolicy::parse("schedule:3@0").unwrap());
+            let variance = run(BitsPolicy::parse("variance:3-3").unwrap());
+            for (name, rec) in [("schedule:3@0", &schedule), ("variance:3-3", &variance)] {
+                let ctx = format!("{} {} {name}", topology.name(), parallel.name());
+                assert_eq!(rec.params_hash, fixed.params_hash, "{ctx}: params_hash");
+                assert_eq!(rec.comm_bits, fixed.comm_bits, "{ctx}: comm_bits");
+                assert_eq!(
+                    rec.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+                    fixed.steps.iter().map(|s| s.bits).collect::<Vec<_>>(),
+                    "{ctx}: per-step bits"
+                );
+                assert_eq!(rec.final_levels, fixed.final_levels, "{ctx}: levels");
+            }
+            assert!(fixed.steps.iter().all(|s| s.width == 3));
+            assert!(variance.steps.iter().all(|s| s.width == 3));
+        }
+    }
+}
+
+/// The hop log is part of the fixed-width regression surface: expressing
+/// the same constant width through the dynamic machinery must reproduce
+/// the exact per-hop label/bit sequence on every topology.
+#[test]
+fn fixed_policy_hop_logs_match_dynamic_machinery_at_constant_width() {
+    let d = 1500;
+    let workers = 4;
+    let mut rng = Rng::new(4);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+        .collect();
+    for topology in [
+        TopologySpec::Flat,
+        TopologySpec::Sharded(3),
+        TopologySpec::Tree(2),
+        TopologySpec::Ring,
+    ] {
+        let cfg = |bits: BitsPolicy| ExchangeConfig {
+            method: Method::Alq,
+            workers,
+            bits,
+            bucket: 128,
+            seed: 9,
+            network: NetworkModel::paper_testbed(),
+            parallel: ParallelMode::Serial,
+            codec: Codec::Huffman,
+        };
+        let mut fixed = make_backend(cfg(BitsPolicy::Fixed(3)), topology);
+        let mut banked =
+            make_backend(cfg(BitsPolicy::parse("variance:3-3").unwrap()), topology);
+        let mut agg = vec![0.0f32; d];
+        for step in 0..6 {
+            if step == 4 {
+                fixed.adapt(&grads);
+                banked.adapt(&grads);
+            }
+            let bf = fixed.exchange(step, &grads, &mut agg);
+            let bb = banked.exchange(step, &grads, &mut agg);
+            assert_eq!(bf, bb, "{} step {step} bits", topology.name());
+            let hf: Vec<(String, u64)> = fixed
+                .last_hops()
+                .iter()
+                .map(|h| (h.label.clone(), h.bits))
+                .collect();
+            let hb: Vec<(String, u64)> = banked
+                .last_hops()
+                .iter()
+                .map(|h| (h.label.clone(), h.bits))
+                .collect();
+            assert_eq!(hf, hb, "{} step {step} hop log", topology.name());
+        }
+    }
+}
+
+/// The `variance` policy saves bits for real: pinned to a permissive
+/// target it settles on the narrowest width, and the run meters strictly
+/// fewer total bits than a fixed run at the widest width while still
+/// training (per-step bits are measured payload, not nominal width·d).
+#[test]
+fn variance_policy_meters_fewer_bits_than_fixed_at_max_width() {
+    let run = |bits: BitsPolicy| {
+        let mut cfg = config(Method::Alq, 100, TopologySpec::Flat);
+        cfg.bits = bits;
+        Cluster::new(cfg).train(&mut task(4, 3))
+    };
+    let fixed4 = run(BitsPolicy::Fixed(4));
+    let adaptive = run(BitsPolicy::parse("variance:2-4@1000000").unwrap());
+    // The permissive target lets the controller drop to the floor as
+    // soon as it has one observation.
+    assert!(adaptive.steps.iter().skip(1).all(|s| s.width == 2));
+    assert!(
+        adaptive.comm_bits < fixed4.comm_bits,
+        "variance policy should undercut fixed:4 ({} vs {})",
+        adaptive.comm_bits,
+        fixed4.comm_bits
+    );
+    // Still a working training run, not a degenerate one.
+    let first = adaptive.steps.first().unwrap().train_loss;
+    let last: f64 = adaptive.steps.iter().rev().take(10).map(|s| s.train_loss).sum::<f64>() / 10.0;
+    assert!(last < first, "loss should still fall: {first} -> {last}");
+}
+
+/// `--bits-policy` is selectable from the sim CLI config, and malformed
+/// policies are config errors.
+#[test]
+fn bits_policy_selectable_from_the_sim_cli_config() {
+    let args = |s: &str| s.split_whitespace().map(String::from).collect::<Vec<_>>();
+    let c = RunConfig::from_args(&args("--bits-policy schedule:4@0,2@50")).unwrap();
+    assert_eq!(
+        c.cluster().bits,
+        BitsPolicy::parse("schedule:4@0,2@50").unwrap()
+    );
+    let c = RunConfig::from_args(&args("--bits-policy variance:2-4")).unwrap();
+    assert_eq!(c.cluster().bits, BitsPolicy::parse("variance:2-4").unwrap());
+    assert!(RunConfig::from_args(&args("--bits-policy schedule:2@9")).is_err());
 }
