@@ -1,7 +1,27 @@
 //! Tiny shared bench harness (criterion is not in the offline vendor
-//! set): warmup + timed reps, median-of-runs, ns/item reporting.
+//! set): warmup + timed reps, median-of-runs, ns/item reporting, and the
+//! `BENCH_*.json` perf-trajectory emitter.
+//!
+//! Environment knobs (all optional — unset means interactive full run):
+//! * `BENCH_SMOKE=1`  — shrink problem sizes/measurement windows so the
+//!   whole bench suite finishes in CI-smoke time. Relative comparisons
+//!   (fast vs scalar, pack vs cursor) stay meaningful; absolute numbers
+//!   are noisy and must not be quoted.
+//! * `BENCH_JSON=path` — merge this bench's section into the JSON
+//!   document at `path` (created when absent, other sections preserved),
+//!   so quantize → encode → exchange can each run as a separate binary
+//!   and still produce one `BENCH_hotloop.json`.
+//!
+//! Each bench includes this file as a private module, so per-binary
+//! dead-code warnings on unused helpers are expected and allowed.
+#![allow(dead_code)]
 
+use aqsgd::util::json::Json;
 use std::time::Instant;
+
+/// Schema tag for the merged hot-loop perf artifact. Bump on any
+/// incompatible key change; ci.sh validates it.
+pub const BENCH_SCHEMA: &str = "aqsgd-bench-hotloop/v1";
 
 /// Run `f` repeatedly for ~`target_ms` and return seconds per call.
 pub fn time_per_call<F: FnMut()>(mut f: F, target_ms: u64) -> f64 {
@@ -34,4 +54,78 @@ pub fn report(name: &str, secs_per_call: f64, items: usize) {
 
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// True when `BENCH_SMOKE=1`: benches shrink sizes and timing windows.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `full` normally, `small` under `BENCH_SMOKE=1`.
+pub fn sized(full: usize, small: usize) -> usize {
+    if smoke() {
+        small
+    } else {
+        full
+    }
+}
+
+/// Measurement window in ms: `full` normally, 20 ms under smoke.
+pub fn window_ms(full: u64) -> u64 {
+    if smoke() {
+        20
+    } else {
+        full
+    }
+}
+
+/// Merge `section` into the JSON document named by `BENCH_JSON` and
+/// rewrite it (no-op when the variable is unset). The document root is
+/// an object carrying `schema`, `meta`, and one sub-object per bench
+/// binary; an existing file is parsed first so sections written by the
+/// other binaries survive, and an unparseable or wrong-schema file is
+/// restarted from empty rather than trusted.
+pub fn emit_section(name: &str, section: Json) {
+    let Some(path) = std::env::var_os("BENCH_JSON") else {
+        return;
+    };
+    let mut doc = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .filter(|j| j.get("schema").and_then(Json::as_str) == Some(BENCH_SCHEMA))
+        .unwrap_or_else(Json::obj);
+    doc.insert("schema", Json::Str(BENCH_SCHEMA.into()));
+    let mut meta = Json::obj();
+    meta.insert("smoke", Json::Bool(smoke()));
+    meta.insert(
+        "threads",
+        Json::Num(std::thread::available_parallelism().map_or(1, |n| n.get()) as f64),
+    );
+    doc.insert("meta", meta);
+    doc.insert(name, section);
+    let text = format!("{doc}\n");
+    if let Err(e) = std::fs::write(&path, text) {
+        eprintln!("[bench] cannot write {path:?}: {e}");
+        std::process::exit(1);
+    }
+    println!("\n[bench] wrote section {name:?} to {path:?}");
+}
+
+/// Load the `BENCH_JSON` document, if the variable is set and the file
+/// parses. Used by the last bench in the ci.sh chain to validate that
+/// every section landed.
+pub fn load_doc() -> Option<Json> {
+    let path = std::env::var_os("BENCH_JSON")?;
+    let text = std::fs::read_to_string(&path).ok()?;
+    Json::parse(&text).ok()
+}
+
+/// One measured throughput row: `{"secs_per_call": s, "items": n,
+/// "items_per_sec": n/s}` plus any extra keys the caller tacks on.
+pub fn throughput_row(secs_per_call: f64, items: usize) -> Json {
+    let mut row = Json::obj();
+    row.insert("secs_per_call", Json::Num(secs_per_call));
+    row.insert("items", Json::Num(items as f64));
+    row.insert("items_per_sec", Json::Num(items as f64 / secs_per_call));
+    row
 }

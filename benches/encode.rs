@@ -1,34 +1,196 @@
 //! Bench: the entropy codec (Appendix D) — Huffman encode/decode and
-//! the achieved bits/coordinate vs the Theorem 3 bound.
+//! the achieved bits/coordinate vs the Theorem 3 bound, plus the
+//! byte-aligned pow-2 fast path vs the bit-cursor reference:
+//! * raw `pack_pow2` u64-lane packing vs per-symbol `push_bits_lsb`
+//!   for every supported width {1, 2, 4, 8};
+//! * full fixed-width encode/decode (`encode_buckets_into`, which
+//!   auto-detects the pow-2 book) vs the forced cursor path.
+//!
+//! Emits the `encode` section of BENCH_hotloop.json and asserts the
+//! PR's acceptance bar: the fast path must encode at ≥ 2× the cursor
+//! throughput on the 4-bit fixed-width config. Both paths are pinned
+//! bit-identical by rust/src/quant/encode.rs tests; this binary only
+//! measures (and re-checks equality on one frame as a cheap sanity).
 
 mod bench_util;
-use aqsgd::quant::{decode, encode, encode_into, symbol_counts, theory, HuffmanBook, Levels, NormType, Quantizer};
 use aqsgd::quant::bitio::BitWriter;
+use aqsgd::quant::{
+    decode, decode_view_into, decode_view_into_cursor, encode, encode_buckets_into,
+    encode_buckets_into_cursor, encode_into, fixed_width, symbol_counts, theory, HuffmanBook,
+    Levels, NormType, Quantizer,
+};
+use aqsgd::util::json::Json;
 use aqsgd::util::Rng;
-use bench_util::{header, report, time_per_call};
+use bench_util::{emit_section, header, report, sized, throughput_row, time_per_call, window_ms};
+
+/// The (levels, book) pairs that admit each pow-2 fixed width. Width 1
+/// has no level family (a 1-bit record cannot carry magnitude + sign),
+/// so the full-encode sweep covers {2, 4, 8} and the raw packer sweep
+/// below covers {1, 2, 4, 8}.
+fn fixed_width_configs() -> Vec<(u32, Levels, HuffmanBook)> {
+    vec![
+        (2, Levels::amq(2, 0.5), HuffmanBook::from_weights(&[1.0; 2])),
+        (
+            4,
+            Levels::exponential(8, 0.5),
+            HuffmanBook::from_lengths(vec![4, 3, 3, 3, 3, 3, 3, 3]),
+        ),
+        (8, Levels::exponential(128, 0.5), {
+            let mut lens = vec![7u32; 128];
+            lens[0] = 8;
+            HuffmanBook::from_lengths(lens)
+        }),
+    ]
+}
 
 fn main() {
-    let n = 1 << 20;
+    let n = sized(1 << 20, 1 << 16);
+    let wms = window_ms(300);
     let mut rng = Rng::new(2);
     let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
 
+    let mut section = Json::obj();
+    section.insert("coords", Json::Num(n as f64));
+
+    // -- raw packer: u64 lanes vs per-symbol cursor pushes ---------------
+    header(&format!("pack_pow2 vs push_bits_lsb cursor, {n} symbols"));
+    let mut packs = Json::obj();
+    for width in [1u32, 2, 4, 8] {
+        let mask = (1u64 << width) - 1;
+        let syms: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+        let mut w = BitWriter::new();
+        let t_pack = time_per_call(
+            || {
+                w.clear();
+                w.pack_pow2(width, &syms);
+                std::hint::black_box(w.bits_written());
+            },
+            wms,
+        );
+        let t_cursor = time_per_call(
+            || {
+                w.clear();
+                for &s in &syms {
+                    w.push_bits_lsb(s, width);
+                }
+                std::hint::black_box(w.bits_written());
+            },
+            wms,
+        );
+        report(&format!("pack_pow2 width={width}"), t_pack, n);
+        report(&format!("cursor    width={width}"), t_cursor, n);
+        println!(
+            "    pack speedup at width={width}: {:.2}x",
+            t_cursor / t_pack
+        );
+        let mut row = Json::obj();
+        row.insert("pack", throughput_row(t_pack, n));
+        row.insert("cursor", throughput_row(t_cursor, n));
+        row.insert("speedup", Json::Num(t_cursor / t_pack));
+        packs.insert(&width.to_string(), row);
+    }
+    section.insert("pack_pow2", packs);
+
+    // -- full fixed-width encode/decode: fast vs forced cursor -----------
+    let mut fixed = Json::obj();
+    for (width, levels, book) in fixed_width_configs() {
+        assert_eq!(
+            fixed_width(&levels, &book),
+            Some(width),
+            "bench config must admit the pow-2 fast path"
+        );
+        let quant = Quantizer::new(levels.clone(), NormType::L2, 8192);
+        let g = quant.quantize(&v, &mut rng);
+        let nb = g.norms.len();
+
+        header(&format!(
+            "fixed-width codec: fast vs cursor, width={width}, {n} coords"
+        ));
+        let mut w = BitWriter::new();
+        let t_fast = time_per_call(
+            || {
+                w.clear();
+                std::hint::black_box(encode_buckets_into(&g, &levels, &book, 0..nb, true, &mut w));
+            },
+            wms,
+        );
+        let t_cursor = time_per_call(
+            || {
+                w.clear();
+                std::hint::black_box(encode_buckets_into_cursor(
+                    &g, &levels, &book, 0..nb, true, &mut w,
+                ));
+            },
+            wms,
+        );
+        report(&format!("fast encode   width={width}"), t_fast, n);
+        report(&format!("cursor encode width={width}"), t_cursor, n);
+        let speedup = t_cursor / t_fast;
+        println!("    fast encode speedup at width={width}: {speedup:.2}x");
+
+        // One frame through both paths: equal bits, equal symbols.
+        let e = encode(&g, &levels, &book);
+        let mut via_fast = g.clone();
+        let mut via_cursor = g.clone();
+        decode_view_into(e.view(), &levels, &book, &mut via_fast);
+        decode_view_into_cursor(e.view(), &levels, &book, &mut via_cursor);
+        assert_eq!(via_fast, via_cursor, "width={width}: decode paths diverged");
+        assert_eq!(via_fast, g, "width={width}: roundtrip corrupted symbols");
+
+        let t_dec_fast = time_per_call(
+            || {
+                decode_view_into(e.view(), &levels, &book, &mut via_fast);
+            },
+            wms,
+        );
+        let t_dec_cursor = time_per_call(
+            || {
+                decode_view_into_cursor(e.view(), &levels, &book, &mut via_cursor);
+            },
+            wms,
+        );
+        report(&format!("fast decode   width={width}"), t_dec_fast, n);
+        report(&format!("cursor decode width={width}"), t_dec_cursor, n);
+
+        let mut row = Json::obj();
+        row.insert("encode_fast", throughput_row(t_fast, n));
+        row.insert("encode_cursor", throughput_row(t_cursor, n));
+        row.insert("decode_fast", throughput_row(t_dec_fast, n));
+        row.insert("decode_cursor", throughput_row(t_dec_cursor, n));
+        row.insert("encode_speedup", Json::Num(speedup));
+        row.insert("bits_per_sec_fast", Json::Num(e.bits as f64 / t_fast));
+        fixed.insert(&width.to_string(), row);
+
+        // Acceptance bar (ISSUE 6): the byte-aligned path must encode at
+        // ≥ 2x cursor throughput on the 4-bit fixed-width config.
+        if width == 4 {
+            assert!(
+                speedup >= 2.0,
+                "4-bit fixed-width fast encode is only {speedup:.2}x the cursor path \
+                 (acceptance bar: >= 2x)"
+            );
+        }
+    }
+    section.insert("fixed_width", fixed);
+
+    // -- entropy codec sweep (Appendix D tables) -------------------------
+    let mut huffman = Json::obj();
     for bits in [2u32, 3, 4, 8] {
         let levels = Levels::exponential(Levels::mags_for_bits(bits), 0.5);
         let quant = Quantizer::new(levels.clone(), NormType::L2, 8192);
         let g = quant.quantize(&v, &mut rng);
         let counts = symbol_counts(&g, &levels);
-        let book = HuffmanBook::from_weights(
-            &counts.iter().map(|c| c + 1.0).collect::<Vec<_>>(),
-        );
+        let book =
+            HuffmanBook::from_weights(&counts.iter().map(|c| c + 1.0).collect::<Vec<_>>());
 
-        header(&format!("codec at bits={bits}, bucket=8192, 1M coords"));
+        header(&format!("codec at bits={bits}, bucket=8192, {n} coords"));
         let mut w = BitWriter::new();
         let t_enc = time_per_call(
             || {
                 w.clear();
                 std::hint::black_box(encode_into(&g, &levels, &book, &mut w));
             },
-            300,
+            wms,
         );
         report("huffman encode", t_enc, n);
 
@@ -37,7 +199,7 @@ fn main() {
             || {
                 std::hint::black_box(decode(&e, &levels, &book));
             },
-            300,
+            wms,
         );
         report("huffman decode", t_dec, n);
 
@@ -51,5 +213,15 @@ fn main() {
              (naive {} bits)",
             bits
         );
+
+        let mut row = Json::obj();
+        row.insert("encode", throughput_row(t_enc, n));
+        row.insert("decode", throughput_row(t_dec, n));
+        row.insert("bits_per_coord", Json::Num(achieved));
+        row.insert("bits_per_sec", Json::Num(e.bits as f64 / t_enc));
+        huffman.insert(&bits.to_string(), row);
     }
+    section.insert("huffman", huffman);
+
+    emit_section("encode", section);
 }

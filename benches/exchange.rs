@@ -3,16 +3,26 @@
 //! multi-lane refactor: parallel must beat the seed's serial loop for
 //! M ≥ 4). Both schedules are bit-identical by construction (see
 //! rust/tests/exchange_parity.rs); this measures only wall clock.
+//!
+//! Emits the `exchange` section of BENCH_hotloop.json (steps/s serial
+//! vs parallel per method × worker count, plus modeled per-hop seconds
+//! from the flat topology backend). This binary runs last in the ci.sh
+//! bench chain, so when `BENCH_JSON` is set it also validates that the
+//! full document carries every section the schema promises.
 
 mod bench_util;
-use aqsgd::exchange::{ExchangeConfig, GradientExchange, ParallelMode};
+use aqsgd::exchange::{make_backend, ExchangeConfig, GradientExchange, ParallelMode, TopologySpec};
 use aqsgd::quant::Method;
 use aqsgd::sim::NetworkModel;
+use aqsgd::util::json::Json;
 use aqsgd::util::Rng;
-use bench_util::{header, report, time_per_call};
+use bench_util::{
+    emit_section, header, load_doc, report, sized, throughput_row, time_per_call, window_ms,
+    BENCH_SCHEMA,
+};
 
-fn engine(method: Method, workers: usize, mode: ParallelMode) -> GradientExchange {
-    GradientExchange::new(ExchangeConfig {
+fn config(method: Method, workers: usize, mode: ParallelMode) -> ExchangeConfig {
+    ExchangeConfig {
         method,
         workers,
         bits: aqsgd::exchange::BitsPolicy::Fixed(3),
@@ -21,15 +31,27 @@ fn engine(method: Method, workers: usize, mode: ParallelMode) -> GradientExchang
         network: NetworkModel::paper_testbed(),
         parallel: mode,
         codec: aqsgd::quant::Codec::Huffman,
-    })
+        quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+    }
+}
+
+fn engine(method: Method, workers: usize, mode: ParallelMode) -> GradientExchange {
+    GradientExchange::new(config(method, workers, mode))
 }
 
 fn main() {
-    let d = 1 << 20;
+    let d = sized(1 << 20, 1 << 14);
+    let wms = window_ms(400);
+
+    let mut section = Json::obj();
+    section.insert("coords", Json::Num(d as f64));
+    let mut methods = Json::obj();
+
     for method in [Method::QsgdInf, Method::Alq] {
+        let mut per_workers = Json::obj();
         for &workers in &[2usize, 4, 8] {
             header(&format!(
-                "exchange step: {} @ 3 bits, d = 2^20, M = {workers}",
+                "exchange step: {} @ 3 bits, d = {d}, M = {workers}",
                 method.name()
             ));
             let mut rng = Rng::new(7);
@@ -50,7 +72,7 @@ fn main() {
                         eng.exchange(step, &grads, &mut agg);
                         step += 1;
                     },
-                    400,
+                    wms,
                 );
                 report(&format!("M={workers} {}", mode.name()), times[i], d * workers);
             }
@@ -66,6 +88,81 @@ fn main() {
             let bits_a = a.exchange(0, &grads, &mut agg);
             let bits_b = b.exchange(0, &grads, &mut agg);
             assert_eq!(bits_a, bits_b, "schedules must meter identical bits");
+
+            let mut row = Json::obj();
+            let mut serial = throughput_row(times[0], d * workers);
+            serial.insert("steps_per_sec", Json::Num(1.0 / times[0]));
+            let mut parallel = throughput_row(times[1], d * workers);
+            parallel.insert("steps_per_sec", Json::Num(1.0 / times[1]));
+            row.insert("serial", serial);
+            row.insert("parallel", parallel);
+            row.insert("speedup", Json::Num(times[0] / times[1]));
+            row.insert("bits_per_step", Json::Num(bits_a as f64));
+            per_workers.insert(&workers.to_string(), row);
         }
+        methods.insert(method.name(), per_workers);
+    }
+    section.insert("methods", methods);
+
+    // -- modeled per-hop cost on the flat topology backend ---------------
+    header("per-hop cost: flat topology backend, M = 4");
+    {
+        let workers = 4;
+        let mut rng = Rng::new(9);
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|_| (0..d).map(|_| (rng.normal() * 0.01) as f32).collect())
+            .collect();
+        let mut agg = vec![0.0f32; d];
+        let mut backend = make_backend(
+            config(Method::Alq, workers, ParallelMode::Serial),
+            TopologySpec::Flat,
+        );
+        let mut step = 0usize;
+        let wall = time_per_call(
+            || {
+                backend.exchange(step, &grads, &mut agg);
+                step += 1;
+            },
+            wms,
+        );
+        let hops = backend.last_hops().len().max(1);
+        let steps = backend.meter().steps.max(1);
+        let modeled_per_hop = backend.meter().total_time / steps as f64 / hops as f64;
+        println!(
+            "flat M={workers}: {hops} hops/step, wall {:.1} µs/hop, modeled net {:.3} ms/hop",
+            wall * 1e6 / hops as f64,
+            modeled_per_hop * 1e3
+        );
+        let mut hop = Json::obj();
+        hop.insert("topology", Json::Str("flat".into()));
+        hop.insert("workers", Json::Num(workers as f64));
+        hop.insert("hops_per_step", Json::Num(hops as f64));
+        hop.insert("wall_secs_per_hop", Json::Num(wall / hops as f64));
+        hop.insert("modeled_secs_per_hop", Json::Num(modeled_per_hop));
+        section.insert("per_hop", hop);
+    }
+
+    emit_section("exchange", section);
+
+    // -- final document validation (this binary runs last in ci.sh) ------
+    if std::env::var_os("BENCH_JSON").is_some() {
+        let doc = load_doc().expect("BENCH_JSON must exist and parse after emission");
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some(BENCH_SCHEMA),
+            "schema tag mismatch"
+        );
+        for key in ["meta", "quantize", "encode", "exchange"] {
+            assert!(
+                doc.get(key).is_some(),
+                "BENCH_JSON is missing section {key:?} — run the quantize and encode \
+                 benches before this one"
+            );
+        }
+        // Spot-check the keys the EXPERIMENTS.md tables read.
+        doc.req("quantize").req("widths").req("4").req("speedup");
+        doc.req("encode").req("fixed_width").req("4").req("encode_speedup");
+        doc.req("exchange").req("methods").req("ALQ").req("4").req("speedup");
+        println!("[bench] BENCH_JSON schema OK ({BENCH_SCHEMA})");
     }
 }

@@ -1,18 +1,64 @@
 //! Bench: the quantization hot path (L3 native + the HLO kernel).
-//! Source for the codec component of Tables 5–6.
+//! Source for the codec component of Tables 5–6, and for the
+//! `quantize` section of BENCH_hotloop.json (scalar reference vs the
+//! vectorized fast path, coords/s per width).
+//!
+//! The two host paths are bit-identical by contract (pinned by
+//! rust/src/quant/quantizer.rs tests and the lane/cluster parity
+//! tests); this binary measures only throughput.
 
 mod bench_util;
-use aqsgd::quant::{Levels, NormType, Quantizer};
+use aqsgd::quant::{Levels, NormType, QuantScratch, Quantizer};
+use aqsgd::util::json::Json;
 use aqsgd::util::Rng;
-use bench_util::{header, report, time_per_call};
+use bench_util::{emit_section, header, report, sized, throughput_row, time_per_call, window_ms};
 
 fn main() {
-    let n = 1 << 20;
+    let n = sized(1 << 20, 1 << 16);
     let mut rng = Rng::new(1);
     let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+    let coords = if n >= 1 << 20 {
+        format!("{}M", n >> 20)
+    } else {
+        format!("{}k", n >> 10)
+    };
+    let wms = window_ms(300);
 
-    header("quantize (stochastic rounding + norms), 1M coords");
+    let mut section = Json::obj();
+    section.insert("coords", Json::Num(n as f64));
+    section.insert("bucket", Json::Num(8192.0));
+    let mut widths = Json::obj();
+
+    header(&format!(
+        "quantize scalar vs fast (stochastic rounding + norms), {coords} coords, bucket 8192"
+    ));
     for bits in [2u32, 3, 4, 8] {
+        let q = Quantizer::new(
+            Levels::exponential(Levels::mags_for_bits(bits), 0.5),
+            NormType::L2,
+            8192,
+        );
+        let mut out = q.quantize(&v, &mut rng);
+        let mut scratch = QuantScratch::default();
+        let t_scalar = time_per_call(|| q.quantize_into_scalar(&v, &mut rng, &mut out), wms);
+        let t_fast = time_per_call(
+            || q.quantize_into_with(&v, &mut rng, &mut scratch, &mut out),
+            wms,
+        );
+        report(&format!("scalar bits={bits}"), t_scalar, n);
+        report(&format!("fast   bits={bits}"), t_fast, n);
+        println!("    fast speedup at bits={bits}: {:.2}x", t_scalar / t_fast);
+
+        let mut w = Json::obj();
+        w.insert("scalar", throughput_row(t_scalar, n));
+        w.insert("fast", throughput_row(t_fast, n));
+        w.insert("speedup", Json::Num(t_scalar / t_fast));
+        widths.insert(&bits.to_string(), w);
+    }
+    section.insert("widths", widths);
+
+    header(&format!("quantize per bucket size, {coords} coords"));
+    for bits in [3u32, 8] {
         for bucket in [64usize, 8192] {
             let q = Quantizer::new(
                 Levels::exponential(Levels::mags_for_bits(bits), 0.5),
@@ -20,12 +66,12 @@ fn main() {
                 bucket,
             );
             let mut out = q.quantize(&v, &mut rng);
-            let t = time_per_call(|| q.quantize_into(&v, &mut rng, &mut out), 300);
+            let t = time_per_call(|| q.quantize_into(&v, &mut rng, &mut out), wms);
             report(&format!("quantize bits={bits} bucket={bucket}"), t, n);
         }
     }
 
-    header("dequantize, 1M coords");
+    header(&format!("dequantize, {coords} coords"));
     for bits in [3u32, 8] {
         let q = Quantizer::new(
             Levels::exponential(Levels::mags_for_bits(bits), 0.5),
@@ -34,25 +80,27 @@ fn main() {
         );
         let g = q.quantize(&v, &mut rng);
         let mut out = vec![0.0f32; n];
-        let t = time_per_call(|| q.dequantize(&g, &mut out), 300);
+        let t = time_per_call(|| q.dequantize(&g, &mut out), wms);
         report(&format!("dequantize bits={bits} bucket=8192"), t, n);
     }
 
-    header("exact_variance (Eq. 1-2 closed form), 1M coords");
+    header(&format!("exact_variance (Eq. 1-2 closed form), {coords} coords"));
     let q = Quantizer::new(Levels::exponential(4, 0.5), NormType::L2, 8192);
     let t = time_per_call(
         || {
             std::hint::black_box(q.exact_variance(&v));
         },
-        300,
+        wms,
     );
     report("exact_variance bits=3 bucket=8192", t, n);
 
-    header("Linf vs L2 norms, 1M coords");
+    header(&format!("Linf vs L2 norms, {coords} coords"));
     for nt in [NormType::L2, NormType::Linf] {
         let q = Quantizer::new(Levels::uniform(4), nt, 8192);
         let mut out = q.quantize(&v, &mut rng);
-        let t = time_per_call(|| q.quantize_into(&v, &mut rng, &mut out), 300);
+        let t = time_per_call(|| q.quantize_into(&v, &mut rng, &mut out), wms);
         report(&format!("quantize {nt:?} bucket=8192"), t, n);
     }
+
+    emit_section("quantize", section);
 }

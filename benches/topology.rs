@@ -46,6 +46,7 @@ fn config(workers: usize, topo: TopologySpec, parallel: ParallelMode) -> Exchang
         network,
         parallel,
         codec: Codec::Huffman,
+        quantize_impl: aqsgd::quant::QuantizeImpl::default(),
     }
 }
 

@@ -26,12 +26,13 @@ fi
 if cargo clippy --version >/dev/null 2>&1; then
   step "cargo clippy (advisory)"
   lint cargo clippy --all-targets
-  # The exchange tree is held to -D warnings: the bit-budget refactor
-  # keeps rust/src/exchange/ clippy-clean, and regressions there gate.
-  step "cargo clippy gate: rust/src/exchange must be warning-free"
+  # The exchange and quant trees are held to -D warnings: the bit-budget
+  # refactor keeps rust/src/exchange/ clippy-clean and the hot-loop speed
+  # pass extends that to rust/src/quant/; regressions in either gate.
+  step "cargo clippy gate: rust/src/{exchange,quant} must be warning-free"
   clippy_out=$(cargo clippy --all-targets --message-format=short 2>&1 || true)
-  if printf '%s\n' "$clippy_out" | grep -E '^rust/src/exchange/[^ ]*: (warning|error)'; then
-    echo "FAIL: clippy findings in rust/src/exchange (held to -D warnings)"
+  if printf '%s\n' "$clippy_out" | grep -E '^rust/src/(exchange|quant)/[^ ]*: (warning|error)'; then
+    echo "FAIL: clippy findings in rust/src/{exchange,quant} (held to -D warnings)"
     exit 1
   fi
 else
@@ -46,6 +47,20 @@ cargo test -q
 
 step "bench targets compile (cargo bench --no-run)"
 cargo bench --no-run
+
+step "bench smoke: emit + validate BENCH_hotloop.json"
+# Small sizes/windows (BENCH_SMOKE=1): this checks the perf-artifact
+# plumbing and the fast-path speed floors, not absolute numbers. The
+# exchange bench runs last and validates every section landed; the
+# encode bench asserts the >= 2x fast-vs-cursor bar on 4-bit
+# fixed-width encode.
+rm -f BENCH_hotloop.json
+BENCH_SMOKE=1 BENCH_JSON=BENCH_hotloop.json cargo bench --bench quantize
+BENCH_SMOKE=1 BENCH_JSON=BENCH_hotloop.json cargo bench --bench encode
+BENCH_SMOKE=1 BENCH_JSON=BENCH_hotloop.json cargo bench --bench exchange
+test -s BENCH_hotloop.json || { echo "FAIL: BENCH_hotloop.json missing or empty"; exit 1; }
+grep -q '"schema":"aqsgd-bench-hotloop/v1"' BENCH_hotloop.json \
+  || { echo "FAIL: BENCH_hotloop.json lacks the aqsgd-bench-hotloop/v1 schema tag"; exit 1; }
 
 step "smoke: one-iteration training run (serial + parallel exchange)"
 ./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --parallel off

@@ -42,6 +42,7 @@ fn main() -> Result<()> {
                 seed: 42,
                 topology: aqsgd::exchange::TopologySpec::Flat,
                 codec: aqsgd::quant::Codec::Huffman,
+                quantize_impl: aqsgd::quant::QuantizeImpl::default(),
             };
             let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 7);
             let mut task = MlpTask::new(Mlp::new(vec![32, 128, 128, 10]), blobs, 16, world, 7);

@@ -42,6 +42,7 @@ fn main() -> Result<()> {
         parallel: aqsgd::exchange::ParallelMode::Auto,
         topology: aqsgd::exchange::TopologySpec::Flat,
         codec: aqsgd::quant::Codec::Huffman,
+        quantize_impl: aqsgd::quant::QuantizeImpl::default(),
     };
     let rec = Cluster::new(cfg).train(&mut task);
 

@@ -61,6 +61,7 @@ fn main() -> Result<()> {
         parallel: aqsgd::exchange::ParallelMode::Auto,
         topology: aqsgd::exchange::TopologySpec::Flat,
         codec: aqsgd::quant::Codec::Huffman,
+        quantize_impl: aqsgd::quant::QuantizeImpl::default(),
     };
 
     println!("\ntraining {steps} steps with ALQ @ 3 bits, bucket 8192 …");

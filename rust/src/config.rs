@@ -3,7 +3,7 @@
 //! vendored crate set); values are validated on parse.
 
 use crate::exchange::{BitsPolicy, ParallelMode, TopologySpec};
-use crate::quant::{Codec, Method};
+use crate::quant::{Codec, Method, QuantizeImpl};
 use anyhow::{bail, Context, Result};
 
 /// One training-run configuration (Table 3, scaled).
@@ -36,6 +36,9 @@ pub struct RunConfig {
     pub topology: TopologySpec,
     /// Entropy coder (huffman|elias — the QSGD-style coding ablation).
     pub codec: Codec,
+    /// Lane quantization implementation (scalar|fast|pallas — the ISSUE 6
+    /// hot-loop ablation; pallas downgrades to fast when unavailable).
+    pub quantize_impl: QuantizeImpl,
 }
 
 impl Default for RunConfig {
@@ -57,6 +60,7 @@ impl Default for RunConfig {
             parallel: ParallelMode::Auto,
             topology: TopologySpec::Flat,
             codec: Codec::Huffman,
+            quantize_impl: QuantizeImpl::default(),
         }
     }
 }
@@ -114,6 +118,11 @@ impl RunConfig {
                 "codec" => {
                     self.codec = Codec::parse(val)
                         .with_context(|| format!("bad --codec {val:?} (huffman|elias)"))?
+                }
+                "quantize-impl" => {
+                    self.quantize_impl = QuantizeImpl::parse(val).with_context(|| {
+                        format!("bad --quantize-impl {val:?} (scalar|fast|pallas)")
+                    })?
                 }
                 other => bail!("unknown option --{other}"),
             }
@@ -194,6 +203,7 @@ impl RunConfig {
             parallel: self.parallel,
             topology: self.topology,
             codec: self.codec,
+            quantize_impl: self.quantize_impl,
         }
     }
 }
@@ -285,6 +295,17 @@ mod tests {
         assert!(RunConfig::from_args(&args("--method trn --bits-policy variance:2-4")).is_err());
         assert!(RunConfig::from_args(&args("--method trn --bits-policy schedule:3@0,2@5")).is_err());
         assert!(RunConfig::from_args(&args("--method trn --bits-policy fixed:3")).is_ok());
+    }
+
+    #[test]
+    fn parses_quantize_impl() {
+        assert_eq!(RunConfig::default().quantize_impl, QuantizeImpl::Fast);
+        let c = RunConfig::from_args(&args("--quantize-impl scalar")).unwrap();
+        assert_eq!(c.quantize_impl, QuantizeImpl::Scalar);
+        assert_eq!(c.cluster().quantize_impl, QuantizeImpl::Scalar);
+        let c = RunConfig::from_args(&args("--quantize-impl pallas")).unwrap();
+        assert_eq!(c.quantize_impl, QuantizeImpl::Pallas);
+        assert!(RunConfig::from_args(&args("--quantize-impl gpu")).is_err());
     }
 
     #[test]

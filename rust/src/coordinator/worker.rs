@@ -27,7 +27,7 @@ use crate::exchange::{BitsPolicy, CodecSession, ExchangeLane};
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
 use crate::quant::bitio::BitWriter;
-use crate::quant::{Codec, EncodedView, Method};
+use crate::quant::{Codec, EncodedView, Method, QuantizeImpl};
 use crate::util::{hash_params, Rng};
 use anyhow::{bail, Context, Result};
 use std::io::BufReader;
@@ -54,6 +54,10 @@ pub struct WorkerConfig {
     pub topology: TopologySpec,
     /// Entropy coder (must match every replica).
     pub codec: Codec,
+    /// Lane quantization implementation. Replicas may differ here freely:
+    /// scalar and fast are bit-identical, and only the encoded frames
+    /// cross the wire.
+    pub quantize_impl: QuantizeImpl,
 }
 
 #[derive(Clone, Debug)]
@@ -88,8 +92,9 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
         Box::new(Sgd::new(cfg.weight_decay))
     };
 
-    let mut session =
-        CodecSession::with_policy(cfg.method, &cfg.bits, cfg.bucket).with_codec(cfg.codec);
+    let mut session = CodecSession::with_policy(cfg.method, &cfg.bits, cfg.bucket)
+        .with_codec(cfg.codec)
+        .with_quantize_impl(cfg.quantize_impl);
     // Uniform initial codebooks (one per reachable width): identical on
     // every replica by construction (no replica may depend on another's
     // first batch).
@@ -537,6 +542,7 @@ mod tests {
                 seed: 42,
                 topology,
                 codec,
+                quantize_impl: QuantizeImpl::default(),
             };
             handles.push(std::thread::spawn(move || {
                 // Same dataset seed on every worker: shards differ by

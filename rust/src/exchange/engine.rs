@@ -31,7 +31,7 @@ use super::session::CodecSession;
 use super::topology::core::BackendCore;
 use super::topology::Hop;
 use super::ExchangeBackend;
-use crate::quant::{Codec, Method, Quantizer};
+use crate::quant::{Codec, Method, QuantizeImpl, Quantizer};
 use crate::sim::network::{Meter, NetworkModel};
 
 /// How a backend schedules its independent lane tasks within one
@@ -96,6 +96,9 @@ pub struct ExchangeConfig {
     pub parallel: ParallelMode,
     /// Entropy coder for the symbol stream (`--codec huffman|elias`).
     pub codec: Codec,
+    /// Lane quantization implementation
+    /// (`--quantize-impl scalar|fast|pallas`).
+    pub quantize_impl: QuantizeImpl,
 }
 
 /// The flat in-process exchange backend (`--topology flat`): one
@@ -285,6 +288,7 @@ mod tests {
             network: NetworkModel::paper_testbed(),
             parallel,
             codec: Codec::Huffman,
+            quantize_impl: QuantizeImpl::default(),
         }
     }
 

@@ -6,9 +6,13 @@ use super::budget::{BitsPolicy, QuantizerBank};
 use crate::adaptive::Estimator;
 use crate::quant::bitio::{BitReader, BitWriter};
 use crate::quant::elias::{decode_qsgd_style_into, encode_qsgd_style, encode_qsgd_style_range};
-use crate::quant::{Codec, EncodedView, HuffmanBook, Method, QuantizedGrad, Quantizer};
+use crate::quant::{
+    Codec, EncodedView, HuffmanBook, Method, QuantScratch, QuantizeImpl, QuantizedGrad, Quantizer,
+};
+use crate::runtime::PallasQuantize;
 use crate::util::Rng;
 use std::ops::Range;
+use std::sync::Arc;
 
 /// App. K: mixture components retained for CIFAR-scale runs.
 const MAX_MIXTURE_COMPONENTS: usize = 20;
@@ -46,6 +50,12 @@ pub struct CodecSession {
     /// Per-width `(bits, Ψ)` expected-variance profile from the last
     /// successful level update (consumed by the `variance` policy).
     width_profile: Vec<(u32, f64)>,
+    /// Which stochastic-rounding implementation the lanes drive
+    /// (`--quantize-impl`), after any Pallas → Fast downgrade.
+    quantize_impl: QuantizeImpl,
+    /// The compiled Pallas kernel, shared across lanes; present only
+    /// when `quantize_impl` is `Pallas` and construction succeeded.
+    pallas: Option<Arc<PallasQuantize>>,
 }
 
 impl CodecSession {
@@ -72,7 +82,44 @@ impl CodecSession {
             bank,
             estimator,
             width_profile: Vec::new(),
+            quantize_impl: QuantizeImpl::default(),
+            pallas: None,
         }
+    }
+
+    /// Select the lane quantization implementation (`--quantize-impl
+    /// scalar|fast|pallas`). `Pallas` stands up the PJRT client and
+    /// compiles the kernel once, right here; when that fails (the
+    /// `pjrt` feature is off, artifacts are absent) the session warns
+    /// once on stderr and downgrades to the bit-identical host `Fast`
+    /// path so every configuration still runs everywhere.
+    pub fn with_quantize_impl(mut self, imp: QuantizeImpl) -> Self {
+        self.quantize_impl = imp;
+        self.pallas = None;
+        if imp == QuantizeImpl::Pallas && self.bank.is_some() {
+            match PallasQuantize::try_new() {
+                Ok(dev) => self.pallas = Some(Arc::new(dev)),
+                Err(e) => {
+                    eprintln!(
+                        "[aqsgd] --quantize-impl pallas unavailable ({e:#}); \
+                         falling back to the fast host path"
+                    );
+                    self.quantize_impl = QuantizeImpl::Fast;
+                }
+            }
+        }
+        self
+    }
+
+    /// The selected quantization implementation (after any downgrade).
+    pub fn quantize_impl(&self) -> QuantizeImpl {
+        self.quantize_impl
+    }
+
+    /// The shared Pallas kernel handle, when `--quantize-impl pallas`
+    /// is live on this session.
+    pub fn pallas_op(&self) -> Option<&PallasQuantize> {
+        self.pallas.as_deref()
     }
 
     /// Select the entropy coder (the QSGD-style coding ablation). Elias
@@ -288,6 +335,10 @@ pub struct ExchangeLane {
     bits: u64,
     n_full: usize,
     n_tail: usize,
+    /// Fast-path quantizer scratch (clip + uniforms), reused per step.
+    scratch: QuantScratch,
+    /// Whole-gradient uniforms buffer for the Pallas device path.
+    u_buf: Vec<f32>,
 }
 
 impl ExchangeLane {
@@ -309,16 +360,40 @@ impl ExchangeLane {
             bits: 0,
             n_full: 0,
             n_tail: 0,
+            scratch: QuantScratch::default(),
+            u_buf: Vec::new(),
         }
     }
 
     /// Draw this worker's stochastic quantization of `grad` at the
-    /// session's active width.
+    /// session's active width, through the session's selected
+    /// implementation (`--quantize-impl`): the scalar reference loop,
+    /// the bit-identical vectorizable fast path over the lane's reusable
+    /// scratch, or the Pallas kernel (which draws the same one uniform
+    /// per coordinate but consumes them device-side; incompatible
+    /// shapes/configs fall back to the fast path per call).
     pub fn quantize(&mut self, s: &CodecSession, grad: &[f32], rng: &mut Rng) {
         let q = s
             .quantizer()
             .expect("quantize on a full-precision session");
-        q.quantize_into(grad, rng, &mut self.qbuf);
+        match s.quantize_impl() {
+            QuantizeImpl::Scalar => q.quantize_into_scalar(grad, rng, &mut self.qbuf),
+            QuantizeImpl::Fast => {
+                q.quantize_into_with(grad, rng, &mut self.scratch, &mut self.qbuf)
+            }
+            QuantizeImpl::Pallas => {
+                if let Some(dev) = s.pallas_op() {
+                    if dev.compatible(q, grad.len()) {
+                        self.u_buf.resize(grad.len(), 0.0);
+                        rng.fill_uniform_f32(&mut self.u_buf);
+                        if dev.run_into(q, grad, &self.u_buf, &mut self.qbuf).is_ok() {
+                            return;
+                        }
+                    }
+                }
+                q.quantize_into_with(grad, rng, &mut self.scratch, &mut self.qbuf)
+            }
+        }
     }
 
     /// The last quantization (feeds the lazy codebook build).
@@ -563,6 +638,51 @@ mod tests {
         assert_eq!(lane.ghat(), &want[..]);
         // Tail is carried exactly.
         assert_eq!(&lane.ghat()[256..], &grad[256..]);
+    }
+
+    /// ISSUE 6 tentpole: the lane's `--quantize-impl scalar` and `fast`
+    /// paths draw the same uniforms and emit the same symbols, norms,
+    /// and post-call RNG state — so every parity golden holds with the
+    /// fast path enabled (the default).
+    #[test]
+    fn scalar_and_fast_lane_quantization_are_bit_identical() {
+        for method in [Method::Alq, Method::Amq, Method::Trn, Method::QsgdInf] {
+            let s_scalar =
+                CodecSession::new(method, 3, 32).with_quantize_impl(QuantizeImpl::Scalar);
+            let s_fast = CodecSession::new(method, 3, 32).with_quantize_impl(QuantizeImpl::Fast);
+            assert_eq!(s_scalar.quantize_impl(), QuantizeImpl::Scalar);
+            assert_eq!(s_fast.quantize_impl(), QuantizeImpl::Fast);
+            let mut lane_s = ExchangeLane::new(32);
+            let mut lane_f = ExchangeLane::new(32);
+            let mut rng_s = Rng::new(40);
+            let mut rng_f = Rng::new(40);
+            for step in 0..4 {
+                let mut grad = randn(170, 50 + step);
+                // A zero bucket exercises the draw-free / sign-only arm.
+                for x in &mut grad[32..64] {
+                    *x = 0.0;
+                }
+                lane_s.quantize(&s_scalar, &grad, &mut rng_s);
+                lane_f.quantize(&s_fast, &grad, &mut rng_f);
+                assert_eq!(lane_s.quantized(), lane_f.quantized(), "{method} step {step}");
+                assert_eq!(rng_s.next_u64(), rng_f.next_u64(), "{method} step {step} rng");
+            }
+        }
+    }
+
+    /// Without the PJRT runtime the Pallas implementation downgrades to
+    /// the fast host path at session construction and keeps running.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pallas_impl_downgrades_to_fast_without_a_runtime() {
+        let s = CodecSession::new(Method::Alq, 3, 64).with_quantize_impl(QuantizeImpl::Pallas);
+        assert_eq!(s.quantize_impl(), QuantizeImpl::Fast);
+        assert!(s.pallas_op().is_none());
+        let grad = randn(256, 33);
+        let mut lane = ExchangeLane::new(64);
+        let mut rng = Rng::new(34);
+        lane.quantize(&s, &grad, &mut rng);
+        assert_eq!(lane.quantized().qidx.len(), 256);
     }
 
     #[test]

@@ -92,8 +92,9 @@ impl BackendCore {
         // active, so a seed maps to the same per-worker randomness
         // regardless of method (and identically to the seed loop).
         let rngs: Vec<Rng> = (0..cfg.workers).map(|w| seeder.fork(w as u64)).collect();
-        let session =
-            CodecSession::with_policy(cfg.method, &cfg.bits, cfg.bucket).with_codec(cfg.codec);
+        let session = CodecSession::with_policy(cfg.method, &cfg.bits, cfg.bucket)
+            .with_codec(cfg.codec)
+            .with_quantize_impl(cfg.quantize_impl);
         let controller = cfg.bits.controller();
         let step_width = session.active_bits().unwrap_or(32);
         let active = if cfg.method == Method::SingleSgd {
@@ -395,6 +396,7 @@ mod tests {
             network: NetworkModel::paper_testbed(),
             parallel,
             codec: Codec::Huffman,
+            quantize_impl: crate::quant::QuantizeImpl::default(),
         }
     }
 

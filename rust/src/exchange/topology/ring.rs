@@ -293,6 +293,7 @@ mod tests {
             network: NetworkModel::paper_testbed(),
             parallel: ParallelMode::Serial,
             codec: Codec::Huffman,
+            quantize_impl: crate::quant::QuantizeImpl::default(),
         }
     }
 

@@ -124,6 +124,7 @@ pub fn cluster_config(
         parallel: ParallelMode::Auto,
         topology: crate::exchange::TopologySpec::Flat,
         codec: crate::quant::Codec::Huffman,
+        quantize_impl: crate::quant::QuantizeImpl::default(),
     }
 }
 

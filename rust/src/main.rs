@@ -26,19 +26,24 @@ USAGE:
               [--iters 3000] [--seed 1] [--model mlp] [--parallel auto|on|off]
               [--topology flat|sharded:S|tree:G|ring] [--codec huffman|elias]
               [--bits-policy fixed:B|schedule:B1@s1,B2@s2,...|variance[:MIN-MAX[@T]]]
+              [--quantize-impl scalar|fast|pallas]
               (--parallel fans out flat/sharded/tree lanes, bit-identical
                to serial; the ring schedule is inherently serial.
                --bits-policy moves the quantization width per step:
                fixed:B ≡ --bits B, schedule switches at the listed steps,
-               variance tracks the quantization-variance estimate)
+               variance tracks the quantization-variance estimate.
+               --quantize-impl picks the lane quantizer: scalar reference,
+               the bit-identical vectorized fast path (default), or the
+               Pallas kernel via PJRT, falling back to fast when absent)
   aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
   aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
               [--topology flat|sharded:S|tree:G]
   aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
               [--method ALQ --bits 3 --bucket 512 --seed 42]
               [--topology flat|sharded:S|tree:G] [--codec huffman|elias]
-              [--bits-policy ...]   (frames carry their width, so the
-               leader relay needs no flag and no extra round-trip)
+              [--bits-policy ...] [--quantize-impl scalar|fast|pallas]
+              (frames carry their width, so the leader relay needs no
+               flag and no extra round-trip)
   aqsgd inspect [--artifacts DIR]
 ";
 
@@ -80,6 +85,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.topology.name(),
         cfg.codec.name()
     );
+    if cfg.quantize_impl != aqsgd::quant::QuantizeImpl::default() {
+        println!("  quantize-impl={}", cfg.quantize_impl.name());
+    }
     if cfg.model != "mlp" {
         bail!("`train` runs the pure-Rust blobs task; for HLO models see examples/train_lm.rs");
     }
@@ -169,6 +177,11 @@ fn cmd_worker(args: &[String]) -> Result<()> {
             .with_context(|| format!("bad --codec {v:?} (huffman|elias)"))?,
         None => aqsgd::quant::Codec::Huffman,
     };
+    let quantize_impl = match flag(args, "--quantize-impl") {
+        Some(v) => aqsgd::quant::QuantizeImpl::parse(v)
+            .with_context(|| format!("bad --quantize-impl {v:?} (scalar|fast|pallas)"))?,
+        None => aqsgd::quant::QuantizeImpl::default(),
+    };
     let bits: u32 = flag(args, "--bits").unwrap_or("3").parse()?;
     let bits_policy = match flag(args, "--bits-policy") {
         Some(v) => aqsgd::exchange::BitsPolicy::parse(v).with_context(|| {
@@ -218,6 +231,7 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         seed: flag(args, "--seed").unwrap_or("42").parse()?,
         topology: parse_wire_topology(args)?,
         codec,
+        quantize_impl,
     };
     let spec = aqsgd::exp::common::ModelSpec::resnet32_standin();
     let mut task = spec.task(cfg.world, 7);

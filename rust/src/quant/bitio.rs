@@ -73,6 +73,47 @@ impl BitWriter {
         self.push_u32(v.to_bits());
     }
 
+    /// Push 64 bits already in stream order, bypassing the per-push
+    /// shift/mask dance. Relies on the `nacc < 8` invariant that
+    /// [`BitWriter::flush_bytes`] maintains: the staged bits plus the
+    /// chunk always cover at least 8 whole bytes, appended in a single
+    /// `extend_from_slice` instead of eight byte pushes.
+    #[inline]
+    pub fn push_u64_lsb(&mut self, chunk: u64) {
+        debug_assert!(self.nacc < 8, "flush_bytes invariant violated");
+        let combined = self.acc | (chunk << self.nacc);
+        // flush_bytes emits the low byte first, i.e. little-endian order.
+        self.buf.extend_from_slice(&combined.to_le_bytes());
+        self.acc = if self.nacc == 0 {
+            0
+        } else {
+            chunk >> (64 - self.nacc)
+        };
+        self.bits_written += 64;
+    }
+
+    /// Pack `syms` at a fixed power-of-two `width` ∈ {1, 2, 4, 8} bits
+    /// each, whole `u64` lanes (`64/width` symbols) at a time. Bit-
+    /// identical to calling [`BitWriter::push_bits_lsb`] per symbol —
+    /// pinned by the exhaustive property test below. Symbols must
+    /// already fit in `width` bits.
+    pub fn pack_pow2(&mut self, width: u32, syms: &[u64]) {
+        assert!(matches!(width, 1 | 2 | 4 | 8), "pow-2 width must be 1/2/4/8");
+        let per = (64 / width) as usize;
+        let mut chunks = syms.chunks_exact(per);
+        for chunk in &mut chunks {
+            let mut lane = 0u64;
+            for (i, &s) in chunk.iter().enumerate() {
+                debug_assert!(s < (1u64 << width));
+                lane |= s << (i as u32 * width);
+            }
+            self.push_u64_lsb(lane);
+        }
+        for &s in chunks.remainder() {
+            self.push_bits_lsb(s, width);
+        }
+    }
+
     pub fn bits_written(&self) -> u64 {
         self.bits_written
     }
@@ -172,6 +213,37 @@ impl<'a> BitReader<'a> {
     #[inline]
     pub fn read_f32(&mut self) -> f32 {
         f32::from_bits(self.read_u32())
+    }
+
+    /// Read 64 bits in stream order as two 32-bit halves through the
+    /// peek/consume cursor (missing past-the-end bits are 0).
+    #[inline]
+    pub fn read_u64_lsb(&mut self) -> u64 {
+        let lo = self.peek_bits(32);
+        self.consume(32);
+        let hi = self.peek_bits(32);
+        self.consume(32);
+        lo | (hi << 32)
+    }
+
+    /// Inverse of [`BitWriter::pack_pow2`]: fill `out` with fixed-width
+    /// symbols, whole `u64` lanes at a time.
+    pub fn unpack_pow2(&mut self, width: u32, out: &mut [u64]) {
+        assert!(matches!(width, 1 | 2 | 4 | 8), "pow-2 width must be 1/2/4/8");
+        let per = (64 / width) as usize;
+        let mask = (1u64 << width) - 1;
+        let mut chunks = out.chunks_exact_mut(per);
+        for chunk in &mut chunks {
+            let mut lane = self.read_u64_lsb();
+            for s in chunk.iter_mut() {
+                *s = lane & mask;
+                lane >>= width;
+            }
+        }
+        for s in chunks.into_remainder() {
+            *s = self.peek_bits(width);
+            self.consume(width);
+        }
     }
 
     pub fn bits_read(&self) -> u64 {
@@ -287,6 +359,87 @@ mod tests {
         let bytes = [0xFFu8];
         let mut r = BitReader::new(&bytes);
         assert_eq!(r.peek_bits(16), 0x00FF);
+    }
+
+    #[test]
+    fn push_u64_lsb_matches_cursor_at_every_alignment() {
+        let mut rng = crate::util::Rng::new(11);
+        for align in 0..8u32 {
+            for _ in 0..50 {
+                let chunk = rng.next_u64();
+                let prefix = rng.next_u64() & ((1u64 << align.max(1)) - 1);
+                let mut a = BitWriter::new();
+                let mut b = BitWriter::new();
+                if align > 0 {
+                    a.push_bits_lsb(prefix, align);
+                    b.push_bits_lsb(prefix, align);
+                }
+                a.push_u64_lsb(chunk);
+                b.push_bits_lsb(chunk & 0xFFFF_FFFF, 32);
+                b.push_bits_lsb(chunk >> 32, 32);
+                assert_eq!(a.bits_written(), b.bits_written());
+                assert_eq!(a.finish(), b.finish(), "align {align}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_pow2_matches_cursor_exhaustively() {
+        let mut rng = crate::util::Rng::new(12);
+        for width in [1u32, 2, 4, 8] {
+            let per = (64 / width) as usize;
+            let lens: Vec<usize> = (0..=2 * per + 3)
+                .chain([5 * per - 1, 5 * per, 5 * per + 1])
+                .collect();
+            for &len in &lens {
+                for align in [0u32, 1, 3, 7] {
+                    let syms: Vec<u64> = (0..len)
+                        .map(|_| rng.next_u64() & ((1u64 << width) - 1))
+                        .collect();
+                    let mut fast = BitWriter::new();
+                    let mut cursor = BitWriter::new();
+                    if align > 0 {
+                        fast.push_bits_lsb(1, align);
+                        cursor.push_bits_lsb(1, align);
+                    }
+                    fast.pack_pow2(width, &syms);
+                    for &s in &syms {
+                        cursor.push_bits_lsb(s, width);
+                    }
+                    assert_eq!(fast.bits_written(), cursor.bits_written());
+                    assert_eq!(
+                        fast.finish(),
+                        cursor.finish(),
+                        "width {width} len {len} align {align}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_pow2_roundtrips_through_unpack() {
+        let mut rng = crate::util::Rng::new(13);
+        for width in [1u32, 2, 4, 8] {
+            let per = (64 / width) as usize;
+            for len in [0, 1, per - 1, per, per + 1, 3 * per + 2] {
+                let syms: Vec<u64> = (0..len)
+                    .map(|_| rng.next_u64() & ((1u64 << width) - 1))
+                    .collect();
+                let mut w = BitWriter::new();
+                w.push_bits_lsb(0b101, 3); // misalign by 3 bits
+                w.pack_pow2(width, &syms);
+                w.push_u32(0xC0FFEE); // sentinel: cursor must land exactly here
+                let bytes = w.finish();
+                let mut r = BitReader::new(&bytes);
+                assert_eq!(r.peek_bits(3), 0b101);
+                r.consume(3);
+                let mut out = vec![0u64; len];
+                r.unpack_pow2(width, &mut out);
+                assert_eq!(out, syms, "width {width} len {len}");
+                assert_eq!(r.read_u32(), 0xC0FFEE);
+            }
+        }
     }
 
     #[test]

@@ -16,11 +16,18 @@ use super::Levels;
 pub fn gamma_encode(n: u64, w: &mut BitWriter) {
     debug_assert!(n >= 1);
     let bits = 64 - n.leading_zeros();
+    if bits <= 29 {
+        // Fused push (2·bits−1 ≤ 57 accumulator bits): in stream order
+        // the code is the bit-reversal of n shifted past the leading
+        // zeros. Bit-identical to the per-bit loop below, pinned by test.
+        let rev = n.reverse_bits() >> (64 - bits);
+        w.push_bits_lsb(rev << (bits - 1), 2 * bits - 1);
+        return;
+    }
+    // Per-bit fallback for n ≥ 2^29 (outside the fused range).
     for _ in 0..bits - 1 {
         w.push_bit(false);
     }
-    // Value bits MSB-first (loop keeps 64-bit values correct; the codec
-    // hot path is Huffman, Elias is the QSGD-ablation codec).
     for i in (0..bits).rev() {
         w.push_bit((n >> i) & 1 == 1);
     }
@@ -44,9 +51,20 @@ pub fn delta_encode(n: u64, w: &mut BitWriter) {
     debug_assert!(n >= 1);
     let bits = 64 - n.leading_zeros();
     gamma_encode(bits as u64, w);
-    // Low bits-1 bits, MSB-first.
-    for i in (0..bits.saturating_sub(1)).rev() {
-        w.push_bit((n >> i) & 1 == 1);
+    if bits < 2 {
+        return;
+    }
+    if bits - 1 <= 57 {
+        // Fused push of the low bits−1 bits MSB-first: reversing n and
+        // keeping the top bits−1 reversed bits drops the leading one and
+        // lands them in stream order.
+        let rev = n.reverse_bits() >> (64 - (bits - 1));
+        w.push_bits_lsb(rev, bits - 1);
+    } else {
+        // Per-bit fallback for n ≥ 2^58.
+        for i in (0..bits - 1).rev() {
+            w.push_bit((n >> i) & 1 == 1);
+        }
     }
 }
 
@@ -223,6 +241,58 @@ mod tests {
         for &v in &vals {
             assert_eq!(gamma_decode(&mut r), v);
             assert_eq!(delta_decode(&mut r), v);
+        }
+    }
+
+    /// Per-bit reference encoders: the semantics the fused pushes in
+    /// [`gamma_encode`] / [`delta_encode`] are pinned against.
+    fn gamma_encode_ref(n: u64, w: &mut BitWriter) {
+        let bits = 64 - n.leading_zeros();
+        for _ in 0..bits - 1 {
+            w.push_bit(false);
+        }
+        for i in (0..bits).rev() {
+            w.push_bit((n >> i) & 1 == 1);
+        }
+    }
+
+    fn delta_encode_ref(n: u64, w: &mut BitWriter) {
+        let bits = 64 - n.leading_zeros();
+        gamma_encode_ref(bits as u64, w);
+        for i in (0..bits.saturating_sub(1)).rev() {
+            w.push_bit((n >> i) & 1 == 1);
+        }
+    }
+
+    #[test]
+    fn fused_codes_bit_identical_to_per_bit_reference() {
+        let mut vals: Vec<u64> = vec![1, 2, 3, 7, 8, 100, 1023, 12345];
+        // Fused/fallback boundaries: 2^28..2^30 (γ), 2^57..2^59 (δ low bits).
+        for shift in [28u32, 29, 30, 57, 58, 59, 63] {
+            vals.push((1u64 << shift) - 1);
+            vals.push(1u64 << shift);
+            vals.push((1u64 << shift) + 1);
+        }
+        vals.push(u64::MAX);
+        let mut rng = Rng::new(21);
+        for _ in 0..500 {
+            vals.push(1 + (rng.next_u64() >> (rng.below(63) as u32)));
+        }
+        for align in [0u32, 1, 3, 7] {
+            let mut fused = BitWriter::new();
+            let mut reference = BitWriter::new();
+            if align > 0 {
+                fused.push_bits_lsb(1, align);
+                reference.push_bits_lsb(1, align);
+            }
+            for &v in &vals {
+                gamma_encode(v, &mut fused);
+                gamma_encode_ref(v, &mut reference);
+                delta_encode(v, &mut fused);
+                delta_encode_ref(v, &mut reference);
+            }
+            assert_eq!(fused.bits_written(), reference.bits_written());
+            assert_eq!(fused.finish(), reference.finish(), "align {align}");
         }
     }
 

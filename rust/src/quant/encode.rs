@@ -69,6 +69,133 @@ pub fn book_for(levels: &Levels, probs: &[f64]) -> HuffmanBook {
     HuffmanBook::from_weights(probs)
 }
 
+/// Width (bits per coordinate record) at which a level-family × book pair
+/// admits the fixed-width fast path: every `Huffman(|symbol|)` + sign
+/// record shares one length in {1, 2, 4, 8}. `None` ⇒ bit-cursor path.
+///
+/// A "record" is exactly the bits the cursor path emits per coordinate:
+/// for `has_zero` families magnitude 0 carries no sign bit (record length
+/// `len_of(0)`), every other magnitude is `len_of(m) + 1`; zero-free
+/// families always append the sign (`len_of(m) + 1`).
+pub fn fixed_width(levels: &Levels, book: &HuffmanBook) -> Option<u32> {
+    let k = levels.num_symbols();
+    if k == 0 || book.num_symbols() < k {
+        return None;
+    }
+    // Raw symbols must fit i8 when the table maps ±(mag+1).
+    if !levels.has_zero() && k > 127 {
+        return None;
+    }
+    let has_zero = levels.has_zero();
+    let rec_len = |mag: usize| {
+        let l = book.len_of(mag);
+        if l == 0 {
+            0 // absent symbol: no total fixed-width code
+        } else if has_zero && mag == 0 {
+            l
+        } else {
+            l + 1
+        }
+    };
+    let width = rec_len(0);
+    if !matches!(width, 1 | 2 | 4 | 8) {
+        return None;
+    }
+    if (1..k).all(|m| rec_len(m) == width) {
+        Some(width)
+    } else {
+        None
+    }
+}
+
+/// Precomputed fixed-width record tables for the pow-2 fast path.
+///
+/// `enc` maps a raw symbol byte (`s as u8`) to its stream-order record;
+/// `dec` maps a record back to the symbol the cursor decoder would
+/// produce. Records are distinct because equal-length Huffman codes are
+/// distinct (prefix-free) and the sign bit extends a complete code.
+struct Pow2Book {
+    width: u32,
+    enc: Vec<u64>,
+    dec: Vec<i8>,
+}
+
+impl Pow2Book {
+    /// Build the tables when [`fixed_width`] applies.
+    fn detect(levels: &Levels, book: &HuffmanBook) -> Option<Pow2Book> {
+        let width = fixed_width(levels, book)?;
+        let k = levels.num_symbols() as i32;
+        let has_zero = levels.has_zero();
+        let mut enc = vec![0u64; 256];
+        let mut dec = vec![0i8; 1usize << width];
+        let symbols: Vec<i32> = if has_zero {
+            ((1 - k)..k).collect()
+        } else {
+            // Includes 0: zero-norm AMQ buckets store 0 symbols, which the
+            // cursor path encodes as (mag 0, sign +) — an alias of +1.
+            (-k..=k).collect()
+        };
+        for s in symbols {
+            let (record, decoded) = if has_zero {
+                let mag = s.unsigned_abs() as usize;
+                let rec = if mag == 0 {
+                    book.rcode(0)
+                } else {
+                    book.rcode(mag) | ((s < 0) as u64) << book.len_of(mag)
+                };
+                (rec, s as i8)
+            } else {
+                let mag = (s.unsigned_abs() as usize).saturating_sub(1);
+                let rec = book.rcode(mag) | ((s < 0) as u64) << book.len_of(mag);
+                // The cursor decoder maps this record to ±(mag + 1).
+                let d = if s < 0 { -(mag as i32 + 1) } else { mag as i32 + 1 };
+                (rec, d as i8)
+            };
+            debug_assert!(record < (1u64 << width));
+            enc[(s as i8) as u8 as usize] = record;
+            dec[record as usize] = decoded;
+        }
+        Some(Pow2Book { width, enc, dec })
+    }
+
+    /// Encode one bucket's symbols, whole `u64` lanes at a time —
+    /// bit-identical to the per-symbol fused cursor pushes.
+    #[inline]
+    fn encode_bucket(&self, syms: &[i8], w: &mut BitWriter) {
+        let per = (64 / self.width) as usize;
+        let mut chunks = syms.chunks_exact(per);
+        for chunk in &mut chunks {
+            let mut lane = 0u64;
+            for (i, &s) in chunk.iter().enumerate() {
+                lane |= self.enc[s as u8 as usize] << (i as u32 * self.width);
+            }
+            w.push_u64_lsb(lane);
+        }
+        for &s in chunks.remainder() {
+            w.push_bits_lsb(self.enc[s as u8 as usize], self.width);
+        }
+    }
+
+    /// Decode one bucket's symbols, whole `u64` lanes at a time.
+    #[inline]
+    fn decode_bucket(&self, out: &mut [i8], r: &mut BitReader) {
+        let per = (64 / self.width) as usize;
+        let mask = (1u64 << self.width) - 1;
+        let mut chunks = out.chunks_exact_mut(per);
+        for chunk in &mut chunks {
+            let mut lane = r.read_u64_lsb();
+            for s in chunk.iter_mut() {
+                *s = self.dec[(lane & mask) as usize];
+                lane >>= self.width;
+            }
+        }
+        for s in chunks.into_remainder() {
+            *s = self.dec[r.peek_bits(self.width) as usize];
+            r.consume(self.width);
+        }
+    }
+}
+
 /// Encode a quantized gradient.
 pub fn encode(q: &QuantizedGrad, levels: &Levels, book: &HuffmanBook) -> EncodedGrad {
     let mut w = BitWriter::new();
@@ -101,6 +228,36 @@ pub fn encode_into(
 /// exchange topology's bit accounting rests on (asserted in
 /// `rust/tests/topology_parity.rs`).
 pub fn encode_buckets_into(
+    q: &QuantizedGrad,
+    levels: &Levels,
+    book: &HuffmanBook,
+    buckets: std::ops::Range<usize>,
+    include_tail: bool,
+    w: &mut BitWriter,
+) -> u64 {
+    match Pow2Book::detect(levels, book) {
+        Some(fast) => {
+            let start = w.bits_written();
+            for b in buckets {
+                w.push_f32(q.norms[b]);
+                fast.encode_bucket(&q.qidx[b * q.bucket..(b + 1) * q.bucket], w);
+            }
+            if include_tail {
+                for &t in &q.tail {
+                    w.push_f32(t);
+                }
+            }
+            w.bits_written() - start
+        }
+        None => encode_buckets_into_cursor(q, levels, book, buckets, include_tail, w),
+    }
+}
+
+/// The reference bit-cursor encode path: one fused `push_bits_lsb` per
+/// coordinate. [`encode_buckets_into`] dispatches away from this only
+/// when [`fixed_width`] holds, and the fast path is pinned bit-identical
+/// to this one by tests — keep it as the semantics of the wire format.
+pub fn encode_buckets_into_cursor(
     q: &QuantizedGrad,
     levels: &Levels,
     book: &HuffmanBook,
@@ -167,9 +324,25 @@ pub fn decode_view_into(
     book: &HuffmanBook,
     q: &mut QuantizedGrad,
 ) {
-    let mut r = BitReader::new(e.bytes);
+    match Pow2Book::detect(levels, book) {
+        Some(fast) => {
+            let mut r = BitReader::new(e.bytes);
+            let nb = prepare_decode(e, q);
+            for b in 0..nb {
+                q.norms[b] = r.read_f32();
+                fast.decode_bucket(&mut q.qidx[b * e.bucket..(b + 1) * e.bucket], &mut r);
+            }
+            for t in q.tail.iter_mut() {
+                *t = r.read_f32();
+            }
+        }
+        None => decode_view_into_cursor(e, levels, book, q),
+    }
+}
+
+/// Size the output buffers for a frame; returns the bucket count.
+fn prepare_decode(e: EncodedView<'_>, q: &mut QuantizedGrad) -> usize {
     let nb = if e.bucket == 0 { 0 } else { e.n_full / e.bucket };
-    let has_zero = levels.has_zero();
     q.qidx.clear();
     q.qidx.resize(e.n_full, 0);
     q.norms.clear();
@@ -177,6 +350,21 @@ pub fn decode_view_into(
     q.tail.clear();
     q.tail.resize(e.n_tail, 0.0);
     q.bucket = e.bucket;
+    nb
+}
+
+/// The reference bit-cursor decode path (see
+/// [`encode_buckets_into_cursor`]); the fixed-width decode table is
+/// pinned against this per-record walk.
+pub fn decode_view_into_cursor(
+    e: EncodedView<'_>,
+    levels: &Levels,
+    book: &HuffmanBook,
+    q: &mut QuantizedGrad,
+) {
+    let mut r = BitReader::new(e.bytes);
+    let nb = prepare_decode(e, q);
+    let has_zero = levels.has_zero();
     for b in 0..nb {
         q.norms[b] = r.read_f32();
         for i in 0..e.bucket {
@@ -365,6 +553,104 @@ mod tests {
                 total += bits;
             }
             assert_eq!(total, whole.bits, "{shards} shards");
+        }
+    }
+
+    /// Books that trigger the fixed-width fast path, with the level
+    /// family each pairs with.
+    fn fixed_width_cases() -> Vec<(Levels, HuffmanBook, u32)> {
+        vec![
+            // AMQ (zero-free): uniform 8-symbol book → 3-bit codes + sign.
+            (Levels::amq(8, 0.5), HuffmanBook::from_weights(&[1.0; 8]), 4),
+            // has_zero: mag 0 has no sign bit, so its code is one longer.
+            (
+                Levels::exponential(8, 0.5),
+                HuffmanBook::from_lengths(vec![4, 3, 3, 3, 3, 3, 3, 3]),
+                4,
+            ),
+            // AMQ 2-symbol: 1-bit codes + sign.
+            (Levels::amq(2, 0.5), HuffmanBook::from_weights(&[1.0; 2]), 2),
+            // has_zero 128-symbol: 7-bit codes + sign, 8-bit mag-0 code.
+            (Levels::exponential(128, 0.5), {
+                let mut lens = vec![7u32; 128];
+                lens[0] = 8;
+                HuffmanBook::from_lengths(lens)
+            }, 8),
+        ]
+    }
+
+    #[test]
+    fn fixed_width_detection() {
+        for (levels, book, want) in fixed_width_cases() {
+            assert_eq!(fixed_width(&levels, &book), Some(want));
+        }
+        // Skewed books have variable record lengths → cursor path.
+        let levels = Levels::exponential(4, 0.5);
+        let book = HuffmanBook::from_weights(&[100.0, 10.0, 5.0, 1.0]);
+        assert_eq!(fixed_width(&levels, &book), None);
+        // Uniform has_zero book: mag-0 records are 1 bit shorter.
+        let book = HuffmanBook::from_weights(&[1.0; 4]);
+        assert_eq!(fixed_width(&levels, &book), None);
+        // Non-pow-2 record width (3 symbols → lens {1,2,2} + sign).
+        let levels = Levels::amq(3, 0.5);
+        let book = HuffmanBook::from_weights(&[1.0; 3]);
+        assert_eq!(fixed_width(&levels, &book), None);
+    }
+
+    #[test]
+    fn fast_encode_bit_identical_to_cursor() {
+        for (case, (levels, book, width)) in fixed_width_cases().into_iter().enumerate() {
+            let quant = Quantizer::new(levels.clone(), NormType::L2, 32);
+            let mut rng = Rng::new(100 + case as u64);
+            // 11 buckets + 7-coord tail, with one all-zero bucket so the
+            // zero-norm symbol conventions are exercised on both paths.
+            let mut v: Vec<f32> = (0..359).map(|_| rng.normal() as f32).collect();
+            for x in &mut v[64..96] {
+                *x = 0.0;
+            }
+            let q = quant.quantize(&v, &mut rng);
+            let fast = encode(&q, &levels, &book);
+            let mut w = BitWriter::new();
+            let bits =
+                encode_buckets_into_cursor(&q, &levels, &book, 0..q.norms.len(), true, &mut w);
+            assert_eq!(fast.bits, bits, "case {case} width {width}");
+            assert_eq!(fast.bytes, w.finish(), "case {case} width {width}");
+        }
+    }
+
+    #[test]
+    fn fast_decode_matches_cursor_decode() {
+        for (case, (levels, book, _)) in fixed_width_cases().into_iter().enumerate() {
+            let quant = Quantizer::new(levels.clone(), NormType::Linf, 32);
+            let mut rng = Rng::new(200 + case as u64);
+            let mut v: Vec<f32> = (0..200).map(|_| rng.normal() as f32).collect();
+            for x in &mut v[32..64] {
+                *x = 0.0;
+            }
+            let q = quant.quantize(&v, &mut rng);
+            let e = encode(&q, &levels, &book);
+            let via_fast = decode(&e, &levels, &book);
+            let mut via_cursor = QuantizedGrad {
+                qidx: vec![],
+                norms: vec![],
+                tail: vec![],
+                bucket: 0,
+            };
+            decode_view_into_cursor(e.view(), &levels, &book, &mut via_cursor);
+            assert_eq!(via_fast, via_cursor, "case {case}");
+        }
+    }
+
+    #[test]
+    fn fast_path_roundtrips() {
+        for (case, (levels, book, _)) in fixed_width_cases().into_iter().enumerate() {
+            let quant = Quantizer::new(levels.clone(), NormType::L2, 64);
+            let mut rng = Rng::new(300 + case as u64);
+            let v: Vec<f32> = (0..300).map(|_| rng.normal() as f32).collect();
+            let q = quant.quantize(&v, &mut rng);
+            let e = encode(&q, &levels, &book);
+            let q2 = decode(&e, &levels, &book);
+            assert_eq!(q, q2, "case {case}");
         }
     }
 

@@ -22,12 +22,12 @@ pub mod schemes;
 pub mod theory;
 
 pub use encode::{
-    decode, decode_into, decode_view_into, encode, encode_buckets_into, encode_into,
-    symbol_counts, EncodedGrad, EncodedView,
+    decode, decode_into, decode_view_into, decode_view_into_cursor, encode, encode_buckets_into,
+    encode_buckets_into_cursor, encode_into, fixed_width, symbol_counts, EncodedGrad, EncodedView,
 };
 pub use huffman::{smooth_weights, HuffmanBook};
 pub use levels::Levels;
-pub use quantizer::{QuantizedGrad, Quantizer};
+pub use quantizer::{QuantScratch, QuantizedGrad, Quantizer};
 pub use schemes::Method;
 
 /// Entropy coder for the quantized symbol stream. The paper's Appendix D
@@ -59,6 +59,46 @@ impl Codec {
         match self {
             Codec::Huffman => "huffman",
             Codec::Elias => "elias",
+        }
+    }
+}
+
+/// Which stochastic-rounding implementation the exchange lanes drive
+/// (`--quantize-impl scalar|fast|pallas`). All three share the RNG draw
+/// contract (one uniform per coordinate in a nonzero-norm bucket), so
+/// `Scalar` and `Fast` are bit-identical; `Pallas` offloads to the L1
+/// quantize kernel when the `pjrt` runtime and artifacts are available
+/// and silently falls back to `Fast` otherwise.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuantizeImpl {
+    /// The seed per-coordinate scalar loop (the parity oracle).
+    Scalar,
+    /// Branch-light bucket-sliced kernels with a reusable scratch
+    /// (bit-identical to `Scalar`; the default).
+    #[default]
+    Fast,
+    /// The AOT-compiled Pallas/XLA quantize kernel via PJRT, inheriting
+    /// the lane fan-out; downgraded to `Fast` when unavailable.
+    Pallas,
+}
+
+impl QuantizeImpl {
+    /// Parse a CLI value (`scalar|fast|pallas`).
+    pub fn parse(s: &str) -> Option<QuantizeImpl> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(QuantizeImpl::Scalar),
+            "fast" => Some(QuantizeImpl::Fast),
+            "pallas" => Some(QuantizeImpl::Pallas),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name for logs and banners.
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantizeImpl::Scalar => "scalar",
+            QuantizeImpl::Fast => "fast",
+            QuantizeImpl::Pallas => "pallas",
         }
     }
 }
@@ -96,6 +136,15 @@ mod tests {
         assert_eq!(Codec::parse("Elias"), Some(Codec::Elias));
         assert_eq!(Codec::parse("arithmetic"), None);
         assert_eq!(Codec::default().name(), "huffman");
+    }
+
+    #[test]
+    fn quantize_impl_parses() {
+        assert_eq!(QuantizeImpl::parse("scalar"), Some(QuantizeImpl::Scalar));
+        assert_eq!(QuantizeImpl::parse("Fast"), Some(QuantizeImpl::Fast));
+        assert_eq!(QuantizeImpl::parse("PALLAS"), Some(QuantizeImpl::Pallas));
+        assert_eq!(QuantizeImpl::parse("simd"), None);
+        assert_eq!(QuantizeImpl::default().name(), "fast");
     }
 
     #[test]

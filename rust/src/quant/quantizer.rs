@@ -40,6 +40,16 @@ impl QuantizedGrad {
     }
 }
 
+/// Reusable scratch for [`Quantizer::quantize_into_with`]: one clip
+/// buffer and one uniform-variates buffer shared across buckets — and
+/// across steps when owned by an exchange lane — so the hot path does no
+/// per-bucket allocation once warm.
+#[derive(Clone, Debug, Default)]
+pub struct QuantScratch {
+    clipped: Vec<f32>,
+    uniforms: Vec<f32>,
+}
+
 /// Stochastic quantizer for one scheme configuration.
 #[derive(Clone, Debug)]
 pub struct Quantizer {
@@ -88,21 +98,40 @@ impl Quantizer {
 
     /// Quantize `v`, drawing one uniform variate per coordinate from `rng`.
     pub fn quantize(&self, v: &[f32], rng: &mut Rng) -> QuantizedGrad {
-        let nb = v.len() / self.bucket;
-        let full = nb * self.bucket;
+        // Empty buffers: quantize_into's resize/extend does the one-shot
+        // fill, with no redundant zero-init-then-overwrite.
         let mut q = QuantizedGrad {
-            qidx: vec![0i8; full],
-            norms: vec![0f32; nb],
-            tail: v[full..].to_vec(),
+            qidx: Vec::new(),
+            norms: Vec::new(),
+            tail: Vec::new(),
             bucket: self.bucket,
         };
         self.quantize_into(v, rng, &mut q);
         q
     }
 
-    /// Quantize into a preallocated `QuantizedGrad` (hot-path entry; no
-    /// allocation when the shapes already match).
+    /// Quantize into a preallocated `QuantizedGrad` (no allocation when
+    /// the shapes already match, aside from a transient local scratch —
+    /// steady-state callers hold a [`QuantScratch`] and use
+    /// [`Quantizer::quantize_into_with`]).
     pub fn quantize_into(&self, v: &[f32], rng: &mut Rng, out: &mut QuantizedGrad) {
+        let mut scratch = QuantScratch::default();
+        self.quantize_into_with(v, rng, &mut scratch, out);
+    }
+
+    /// The vectorizable fast path: identical draws, symbols, and
+    /// subsequent RNG state to [`Quantizer::quantize_into_scalar`]
+    /// (pinned by tests), but with the per-bucket uniforms drawn up
+    /// front into `scratch` so the per-coordinate loop is a branch-light
+    /// threshold sum the autovectorizer can chew in 8–16 coordinate
+    /// chunks, and with the clip buffer reused across buckets and steps.
+    pub fn quantize_into_with(
+        &self,
+        v: &[f32],
+        rng: &mut Rng,
+        scratch: &mut QuantScratch,
+        out: &mut QuantizedGrad,
+    ) {
         let nb = v.len() / self.bucket;
         let full = nb * self.bucket;
         out.qidx.resize(full, 0);
@@ -111,12 +140,13 @@ impl Quantizer {
         out.tail.extend_from_slice(&v[full..]);
         out.bucket = self.bucket;
 
-        let mut clipped_buf: Vec<f32>;
+        let QuantScratch { clipped, uniforms } = scratch;
+        uniforms.resize(self.bucket, 0.0);
         for b in 0..nb {
             let raw = &v[b * self.bucket..(b + 1) * self.bucket];
             let src: &[f32] = if let Some(c) = self.clip_factor {
-                clipped_buf = clip_bucket(raw, c);
-                &clipped_buf
+                clip_bucket_into(raw, c, clipped);
+                clipped
             } else {
                 raw
             };
@@ -126,10 +156,54 @@ impl Quantizer {
             if norm == 0.0 {
                 // All-zero bucket: symbol 0 (has_zero) / smallest mag with
                 // random sign is unnecessary — keep deterministic floor.
+                // Draw order matches the scalar path: no draws for the
+                // has_zero fill, one per coordinate for the AMQ signs.
                 if self.levels.has_zero() {
                     dst.fill(0);
                 } else {
-                    for (d, _x) in dst.iter_mut().zip(src) {
+                    for d in dst.iter_mut() {
+                        *d = if rng.f32() < 0.5 { 1 } else { -1 };
+                    }
+                }
+                continue;
+            }
+            // One uniform per coordinate, same order the scalar path
+            // draws them inline — the determinism contract.
+            rng.fill_uniform_f32(uniforms);
+            let inv = 1.0 / norm;
+            self.quantize_bucket_fast(src, uniforms, dst, inv);
+        }
+    }
+
+    /// The reference per-coordinate path: one inline `rng.f32()` draw and
+    /// one `quantize_coord_*` call per coordinate. Kept as the semantics
+    /// the fast path is pinned against (and as `--quantize-impl scalar`).
+    pub fn quantize_into_scalar(&self, v: &[f32], rng: &mut Rng, out: &mut QuantizedGrad) {
+        let nb = v.len() / self.bucket;
+        let full = nb * self.bucket;
+        out.qidx.resize(full, 0);
+        out.norms.resize(nb, 0.0);
+        out.tail.clear();
+        out.tail.extend_from_slice(&v[full..]);
+        out.bucket = self.bucket;
+
+        let mut clipped_buf: Vec<f32> = Vec::new();
+        for b in 0..nb {
+            let raw = &v[b * self.bucket..(b + 1) * self.bucket];
+            let src: &[f32] = if let Some(c) = self.clip_factor {
+                clip_bucket_into(raw, c, &mut clipped_buf);
+                &clipped_buf
+            } else {
+                raw
+            };
+            let norm = bucket_norm(src, self.norm_type);
+            out.norms[b] = norm;
+            let dst = &mut out.qidx[b * self.bucket..(b + 1) * self.bucket];
+            if norm == 0.0 {
+                if self.levels.has_zero() {
+                    dst.fill(0);
+                } else {
+                    for d in dst.iter_mut() {
                         *d = if rng.f32() < 0.5 { 1 } else { -1 };
                     }
                 }
@@ -145,6 +219,100 @@ impl Quantizer {
                     *d = self.quantize_coord_nozero(x, inv, rng.f32());
                 }
             }
+        }
+    }
+
+    /// Dispatch one bucket to the branch-light kernel monomorphized for
+    /// its level count (K ∈ 2..=8 covers bits ≤ 4; larger alphabets fall
+    /// back to the binary-search coordinate path, fed the same pre-drawn
+    /// uniforms so results stay bit-identical either way).
+    fn quantize_bucket_fast(&self, src: &[f32], u: &[f32], dst: &mut [i8], inv: f32) {
+        let k = self.mags.len();
+        if self.levels.has_zero() {
+            match k {
+                2 => self.bucket_zero_fast::<2>(src, u, dst, inv),
+                3 => self.bucket_zero_fast::<3>(src, u, dst, inv),
+                4 => self.bucket_zero_fast::<4>(src, u, dst, inv),
+                5 => self.bucket_zero_fast::<5>(src, u, dst, inv),
+                6 => self.bucket_zero_fast::<6>(src, u, dst, inv),
+                7 => self.bucket_zero_fast::<7>(src, u, dst, inv),
+                8 => self.bucket_zero_fast::<8>(src, u, dst, inv),
+                _ => {
+                    for ((d, &x), &ui) in dst.iter_mut().zip(src).zip(u) {
+                        *d = self.quantize_coord_zero_u(x, inv, ui);
+                    }
+                }
+            }
+        } else {
+            match k {
+                2 => self.bucket_nozero_fast::<2>(src, u, dst, inv),
+                3 => self.bucket_nozero_fast::<3>(src, u, dst, inv),
+                4 => self.bucket_nozero_fast::<4>(src, u, dst, inv),
+                5 => self.bucket_nozero_fast::<5>(src, u, dst, inv),
+                6 => self.bucket_nozero_fast::<6>(src, u, dst, inv),
+                7 => self.bucket_nozero_fast::<7>(src, u, dst, inv),
+                8 => self.bucket_nozero_fast::<8>(src, u, dst, inv),
+                _ => {
+                    for ((d, &x), &ui) in dst.iter_mut().zip(src).zip(u) {
+                        *d = self.quantize_coord_nozero(x, inv, ui);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Branch-light has_zero kernel: the level search is an unrolled
+    /// threshold sum `tau = Σ_j [r ≥ ℓ_j]` over the K−2 interior levels —
+    /// equivalent to the early-exit scan because the levels are sorted —
+    /// so the loop body has no data-dependent branches.
+    #[inline]
+    fn bucket_zero_fast<const K: usize>(&self, src: &[f32], u: &[f32], dst: &mut [i8], inv: f32) {
+        let mut m = [0f32; K];
+        m.copy_from_slice(&self.mags[..K]);
+        for ((d, &x), &ui) in dst.iter_mut().zip(src).zip(u) {
+            let r = (x.abs() * inv).clamp(0.0, 1.0);
+            let mut tau = 0usize;
+            for &level in &m[1..K - 1] {
+                tau += (r >= level) as usize;
+            }
+            let lo = m[tau];
+            let hi = m[tau + 1];
+            let rho = (r - lo) / (hi - lo).max(1e-30);
+            let idx = tau + usize::from(ui < rho);
+            let sign = if x < 0.0 { -1i8 } else { 1 };
+            *d = sign * idx as i8;
+        }
+    }
+
+    /// Branch-light AMQ kernel: both the first-bin and far-bin results
+    /// are computed, then selected on `r < ℓ_1` — same draws and outputs
+    /// as the early-return scalar path.
+    #[inline]
+    fn bucket_nozero_fast<const K: usize>(
+        &self,
+        src: &[f32],
+        u: &[f32],
+        dst: &mut [i8],
+        inv: f32,
+    ) {
+        let mut m = [0f32; K];
+        m.copy_from_slice(&self.mags[..K]);
+        let l1 = m[0];
+        for ((d, &x), &ui) in dst.iter_mut().zip(src).zip(u) {
+            let theta = (x * inv).clamp(-1.0, 1.0);
+            let r = theta.abs();
+            let near = if ui < (theta + l1) / (2.0 * l1) { 1i8 } else { -1 };
+            let mut tau = 0usize;
+            for &level in &m[1..K - 1] {
+                tau += (r >= level) as usize;
+            }
+            let lo = m[tau];
+            let hi = m[tau + 1];
+            let rho = (r - lo) / (hi - lo).max(1e-30);
+            let idx = tau + usize::from(ui < rho);
+            let sign = if theta < 0.0 { -1i8 } else { 1 };
+            let far = sign * (idx as i8 + 1);
+            *d = if r < l1 { near } else { far };
         }
     }
 
@@ -276,11 +444,11 @@ impl Quantizer {
         let nb = v.len() / self.bucket;
         let mut total = 0.0f64;
         let mut total_bias = 0.0f64;
-        let mut clipped_buf: Vec<f32>;
+        let mut clipped_buf: Vec<f32> = Vec::new();
         for b in 0..nb {
             let raw = &v[b * self.bucket..(b + 1) * self.bucket];
             let src: &[f32] = if let Some(c) = self.clip_factor {
-                clipped_buf = clip_bucket(raw, c);
+                clip_bucket_into(raw, c, &mut clipped_buf);
                 &clipped_buf
             } else {
                 raw
@@ -328,16 +496,19 @@ impl Quantizer {
 }
 
 /// TernGrad-style clipping (Eq. 49): clamp coordinates to ±c·σ where σ is
-/// the standard deviation of the bucket's coordinates.
-fn clip_bucket(v: &[f32], c: f32) -> Vec<f32> {
+/// the standard deviation of the bucket's coordinates. Writes into a
+/// caller-owned buffer so the hot path allocates nothing once warm.
+fn clip_bucket_into(v: &[f32], c: f32, out: &mut Vec<f32>) {
     let n = v.len() as f64;
     let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / n;
     let var: f64 = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
     let lim = (c as f64 * var.sqrt()) as f32;
+    out.clear();
     if lim == 0.0 {
-        return v.to_vec();
+        out.extend_from_slice(v);
+        return;
     }
-    v.iter().map(|&x| x.clamp(-lim, lim)).collect()
+    out.extend(v.iter().map(|&x| x.clamp(-lim, lim)));
 }
 
 #[cfg(test)]
@@ -511,6 +682,77 @@ mod tests {
         let mut out = vec![1.0f32; 32];
         q.dequantize(&g, &mut out);
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fast_path_matches_scalar_bit_for_bit() {
+        // Every level family × K (monomorphized 2..=8 plus the >8
+        // fallback) × clip setting, on data with a zero bucket and a
+        // tail: identical symbols, norms, tails, AND subsequent RNG
+        // state — the determinism contract of quantize_into_with.
+        let families: Vec<Levels> = vec![
+            Levels::ternary(),
+            Levels::uniform(4),
+            Levels::exponential(8, 0.5),
+            Levels::exponential(16, 0.5),
+            Levels::uniform(128),
+            Levels::amq(2, 0.5),
+            Levels::amq(4, 0.5),
+            Levels::amq(8, 0.5),
+            Levels::amq(16, 0.9),
+        ];
+        for (fi, levels) in families.into_iter().enumerate() {
+            for clip in [None, Some(2.5f32)] {
+                for norm_type in [NormType::L2, NormType::Linf] {
+                    let mut q = Quantizer::new(levels.clone(), norm_type, 32);
+                    if let Some(c) = clip {
+                        q = q.with_clip(c);
+                    }
+                    let mut v = randn(170, 40 + fi as u64); // 5 buckets + tail 10
+                    for x in &mut v[32..64] {
+                        *x = 0.0; // zero-norm bucket: distinct draw rules
+                    }
+                    let mut rng_fast = Rng::new(1000 + fi as u64);
+                    let mut rng_scalar = rng_fast.clone();
+                    let mut fast = QuantizedGrad {
+                        qidx: vec![],
+                        norms: vec![],
+                        tail: vec![],
+                        bucket: 0,
+                    };
+                    let mut scalar = fast.clone();
+                    let mut scratch = QuantScratch::default();
+                    q.quantize_into_with(&v, &mut rng_fast, &mut scratch, &mut fast);
+                    q.quantize_into_scalar(&v, &mut rng_scalar, &mut scalar);
+                    assert_eq!(fast, scalar, "family {fi} clip {clip:?} {norm_type:?}");
+                    assert_eq!(
+                        rng_fast.next_u64(),
+                        rng_scalar.next_u64(),
+                        "RNG state diverged: family {fi} clip {clip:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_calls_is_transparent() {
+        let q = Quantizer::new(Levels::exponential(8, 0.5), NormType::L2, 64).with_clip(3.0);
+        let mut scratch = QuantScratch::default();
+        let mut with_reuse = QuantizedGrad {
+            qidx: vec![],
+            norms: vec![],
+            tail: vec![],
+            bucket: 0,
+        };
+        for step in 0..5u64 {
+            let v = randn(300, 50 + step);
+            let mut rng_a = Rng::new(60 + step);
+            let mut rng_b = rng_a.clone();
+            q.quantize_into_with(&v, &mut rng_a, &mut scratch, &mut with_reuse);
+            let fresh = q.quantize(&v, &mut rng_b);
+            assert_eq!(with_reuse, fresh, "step {step}");
+        }
     }
 
     #[test]

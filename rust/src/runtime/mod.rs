@@ -14,6 +14,7 @@
 //! is compiled so the rest of the stack builds and tests everywhere.
 
 pub mod artifacts;
+pub mod pallas;
 #[cfg(feature = "pjrt")]
 pub mod client;
 #[cfg(feature = "pjrt")]
@@ -22,6 +23,7 @@ pub mod executable;
 pub mod stub;
 
 pub use artifacts::{LayoutEntry, Manifest, ModelEntry};
+pub use pallas::PallasQuantize;
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,103 @@
+//! Lane-facing handle for the L1 Pallas quantize kernel
+//! (`--quantize-impl pallas`).
+//!
+//! [`PallasQuantize::try_new`] stands up the PJRT client and compiles the
+//! manifest's main quantize artifact once; the exchange layer shares the
+//! handle across lanes behind an `Arc` so the device path inherits the
+//! lane fan-out. Construction errors — the `pjrt` feature is off (the
+//! stub [`Runtime`] always errors), artifacts are absent, compilation
+//! fails — are returned to the caller, which downgrades the session to
+//! the fast host path with a one-time warning. A live handle still only
+//! covers gradients that match the AOT-fixed shape and kernel semantics
+//! (see [`PallasQuantize::compatible`]); incompatible calls fall back
+//! per-call.
+
+use super::{Manifest, QuantizeOp, Runtime};
+use crate::quant::{NormType, QuantizedGrad, Quantizer};
+use anyhow::{bail, Context, Result};
+use std::fmt;
+
+/// A compiled, ready-to-run quantize kernel plus the client that owns
+/// its device buffers.
+pub struct PallasQuantize {
+    // The PJRT client must outlive the loaded executable.
+    _rt: Runtime,
+    op: QuantizeOp,
+}
+
+impl fmt::Debug for PallasQuantize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PallasQuantize")
+            .field("n", &self.op.n)
+            .field("bucket", &self.op.bucket)
+            .field("k", &self.op.k)
+            .finish()
+    }
+}
+
+impl PallasQuantize {
+    /// Create the PJRT client, load the default artifact manifest, and
+    /// compile its `quantize_main` op. Every failure mode (stub runtime,
+    /// missing artifacts, bad HLO) surfaces as an error the session
+    /// layer turns into a fast-path downgrade.
+    pub fn try_new() -> Result<PallasQuantize> {
+        let rt = Runtime::cpu().context("pallas quantize: creating the PJRT client")?;
+        let manifest =
+            Manifest::load_default().context("pallas quantize: loading the artifact manifest")?;
+        let entry = match manifest.quantize.get("quantize_main") {
+            Some(e) => e,
+            None => bail!("pallas quantize: manifest has no `quantize_main` op"),
+        };
+        let op = QuantizeOp::load(&rt, entry).context("pallas quantize: compiling the HLO")?;
+        Ok(PallasQuantize { _rt: rt, op })
+    }
+
+    /// Coordinate count the artifact was AOT-compiled for.
+    pub fn n(&self) -> usize {
+        self.op.n
+    }
+
+    /// Whether this artifact can stand in for `q` on a gradient of `len`
+    /// coordinates: the AOT shape matches and the kernel's fixed
+    /// semantics (zero level, L2 bucket norms, no clipping) apply.
+    pub fn compatible(&self, q: &Quantizer, len: usize) -> bool {
+        len == self.op.n
+            && q.bucket() == self.op.bucket
+            && q.levels().k() == self.op.k
+            && q.levels().has_zero()
+            && q.norm_type() == NormType::L2
+            && q.clip_factor().is_none()
+    }
+
+    /// Run the kernel on one gradient with caller-supplied uniform
+    /// variates (one per coordinate), writing symbols, norms, and the
+    /// raw tail into `out`. Semantics match
+    /// [`Quantizer::quantize_with_u`] on the same inputs.
+    pub fn run_into(
+        &self,
+        q: &Quantizer,
+        v: &[f32],
+        u: &[f32],
+        out: &mut QuantizedGrad,
+    ) -> Result<()> {
+        if !self.compatible(q, v.len()) {
+            bail!(
+                "pallas quantize: artifact (n={}, bucket={}, k={}) does not cover this call",
+                self.op.n,
+                self.op.bucket,
+                self.op.k
+            );
+        }
+        let levels = q.levels().mags_f32();
+        let (qidx, norms) = self.op.run(v, &levels, u)?;
+        let nb = self.op.n / self.op.bucket;
+        let full = nb * self.op.bucket;
+        out.qidx.clear();
+        out.qidx.extend_from_slice(&qidx[..full]);
+        out.norms = norms;
+        out.tail.clear();
+        out.tail.extend_from_slice(&v[full..]);
+        out.bucket = self.op.bucket;
+        Ok(())
+    }
+}

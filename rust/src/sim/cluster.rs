@@ -24,7 +24,7 @@ use crate::exchange::{
 };
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
-use crate::quant::{Codec, Method, Quantizer};
+use crate::quant::{Codec, Method, QuantizeImpl, Quantizer};
 use crate::sim::network::NetworkModel;
 
 #[derive(Clone, Debug)]
@@ -54,6 +54,9 @@ pub struct ClusterConfig {
     pub topology: TopologySpec,
     /// Entropy coder for the symbol stream (`--codec huffman|elias`).
     pub codec: Codec,
+    /// Lane quantization implementation
+    /// (`--quantize-impl scalar|fast|pallas`).
+    pub quantize_impl: QuantizeImpl,
 }
 
 impl ClusterConfig {
@@ -76,6 +79,7 @@ impl ClusterConfig {
             parallel: ParallelMode::Auto,
             topology: TopologySpec::Flat,
             codec: Codec::Huffman,
+            quantize_impl: QuantizeImpl::default(),
         }
     }
 
@@ -89,6 +93,7 @@ impl ClusterConfig {
             network: self.network,
             parallel: self.parallel,
             codec: self.codec,
+            quantize_impl: self.quantize_impl,
         }
     }
 }
@@ -498,6 +503,23 @@ mod tests {
         // Full precision reports width 32.
         let rec = Cluster::new(small_cfg(Method::SuperSgd, 3)).train(&mut task(4, 21));
         assert!(rec.steps.iter().all(|s| s.width == 32));
+    }
+
+    #[test]
+    fn quantize_impl_scalar_matches_fast_trajectory() {
+        // End-to-end pin of the ISSUE 6 tentpole contract: the scalar
+        // reference and the vectorizable fast path draw the same RNG
+        // stream, so whole training runs are bit-identical.
+        let run = |imp: QuantizeImpl| {
+            let mut cfg = small_cfg(Method::Alq, 20);
+            cfg.quantize_impl = imp;
+            Cluster::new(cfg).train(&mut task(4, 25))
+        };
+        let scalar = run(QuantizeImpl::Scalar);
+        let fast = run(QuantizeImpl::Fast);
+        assert_eq!(scalar.params_hash, fast.params_hash);
+        assert_eq!(scalar.comm_bits, fast.comm_bits);
+        assert_eq!(scalar.final_levels, fast.final_levels);
     }
 
     #[test]

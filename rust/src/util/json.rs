@@ -1,8 +1,11 @@
-//! Minimal JSON parser (RFC 8259 subset sufficient for `manifest.json`).
+//! Minimal JSON parser + serializer (RFC 8259 subset sufficient for
+//! `manifest.json` and the `BENCH_*.json` perf artifacts).
 //!
 //! Dependency-free by necessity (the image vendors only the `xla` crate
 //! closure); ~recursive-descent with proper string escapes and number
-//! parsing. Only parsing is needed — the manifest is produced by Python.
+//! parsing. `Display` emits compact deterministic JSON (object keys are
+//! sorted by the `BTreeMap`), so `parse(x.to_string()) == x` for every
+//! finite tree.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -96,6 +99,82 @@ impl Json {
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
+
+    /// Insert into an object (creating the map entry or overwriting it).
+    /// Panics on non-objects — callers build documents top-down.
+    pub fn insert(&mut self, key: &str, v: Json) {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), v);
+            }
+            other => panic!("Json::insert on non-object {other:?}"),
+        }
+    }
+
+    /// Empty object — the usual starting point for building a document.
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+}
+
+impl fmt::Display for Json {
+    /// Compact serialization. Numbers use the shortest round-trip `f64`
+    /// form, except integral values in the exactly-representable range,
+    /// which print without a fractional part; non-finite values have no
+    /// JSON spelling and become `null`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    f.write_str("null")
+                } else if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                f.write_str("[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => f.write_fmt(format_args!("{c}"))?,
+        }
+    }
+    f.write_str("\"")
 }
 
 struct Parser<'a> {
@@ -344,6 +423,48 @@ mod tests {
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"open").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        let src = r#"{"a": [1, 2.5, {"b": null}], "c": "x\ny\t\"q\\", "d": true, "e": -3}"#;
+        let j = Json::parse(src).unwrap();
+        let out = j.to_string();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+        // Deterministic + compact: sorted keys, no whitespace, bare ints.
+        assert_eq!(
+            out,
+            r#"{"a":[1,2.5,{"b":null}],"c":"x\ny\t\"q\\","d":true,"e":-3}"#
+        );
+    }
+
+    #[test]
+    fn display_numbers() {
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+        assert_eq!(Json::Num(-17.0).to_string(), "-17");
+        assert_eq!(Json::Num(0.125).to_string(), "0.125");
+        assert_eq!(Json::Num(1.5e300).to_string(), "1.5e300");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let n = Json::Num(1.5e300).to_string();
+        assert_eq!(Json::parse(&n).unwrap(), Json::Num(1.5e300));
+    }
+
+    #[test]
+    fn display_control_chars_roundtrip() {
+        let j = Json::Str("a\u{1}b\u{8}c".into());
+        assert_eq!(j.to_string(), "\"a\\u0001b\\u0008c\"");
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn insert_builds_objects() {
+        let mut doc = Json::obj();
+        doc.insert("schema", Json::Str("v1".into()));
+        doc.insert("n", Json::Num(3.0));
+        assert_eq!(doc.to_string(), r#"{"n":3,"schema":"v1"}"#);
+        doc.insert("n", Json::Num(4.0));
+        assert_eq!(doc.req("n").as_f64(), Some(4.0));
     }
 
     #[test]

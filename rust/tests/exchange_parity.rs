@@ -274,6 +274,7 @@ fn engine_and_coordinator_bits_agree_qualitatively() {
                 seed: 11,
                 topology: aqsgd::exchange::TopologySpec::Flat,
                 codec: aqsgd::quant::Codec::Huffman,
+                quantize_impl: aqsgd::quant::QuantizeImpl::default(),
             };
             let mut t = task(world, 7);
             run_worker(&cfg, &mut t).unwrap()

@@ -139,6 +139,7 @@ fn hop_bits_sum_to_step_totals_for_every_topology() {
             network: NetworkModel::paper_testbed(),
             parallel,
             codec: Codec::Huffman,
+            quantize_impl: aqsgd::quant::QuantizeImpl::default(),
         };
         let mut backend = make_backend(cfg(ParallelMode::Serial), topology);
         let mut par_backend = make_backend(cfg(ParallelMode::Parallel), topology);
@@ -256,6 +257,7 @@ fn sharded_hops_sum_to_flat_engine_step_totals() {
         network: NetworkModel::paper_testbed(),
         parallel: ParallelMode::Serial,
         codec: Codec::Huffman,
+        quantize_impl: aqsgd::quant::QuantizeImpl::default(),
     };
     let mut flat = make_backend(cfg.clone(), TopologySpec::Flat);
     let mut shrd = make_backend(cfg, TopologySpec::Sharded(4));
@@ -285,6 +287,7 @@ fn ring_has_the_analytical_stage_structure() {
             network: NetworkModel::paper_testbed(),
             parallel: ParallelMode::Serial,
             codec: Codec::Huffman,
+            quantize_impl: aqsgd::quant::QuantizeImpl::default(),
         };
         let mut ring = make_backend(cfg, TopologySpec::Ring);
         let mut agg = vec![0.0f32; d];
@@ -351,6 +354,7 @@ fn spawn_tcp(
                 seed: 42,
                 topology,
                 codec: Codec::Huffman,
+                quantize_impl: aqsgd::quant::QuantizeImpl::default(),
             };
             let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, 7);
             let mut t = MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, world, 7);
@@ -453,6 +457,7 @@ fn fixed_policy_hop_logs_match_dynamic_machinery_at_constant_width() {
             network: NetworkModel::paper_testbed(),
             parallel: ParallelMode::Serial,
             codec: Codec::Huffman,
+            quantize_impl: aqsgd::quant::QuantizeImpl::default(),
         };
         let mut fixed = make_backend(cfg(BitsPolicy::Fixed(3)), topology);
         let mut banked =
