@@ -26,13 +26,14 @@ fi
 if cargo clippy --version >/dev/null 2>&1; then
   step "cargo clippy (advisory)"
   lint cargo clippy --all-targets
-  # The exchange and quant trees are held to -D warnings: the bit-budget
-  # refactor keeps rust/src/exchange/ clippy-clean and the hot-loop speed
-  # pass extends that to rust/src/quant/; regressions in either gate.
-  step "cargo clippy gate: rust/src/{exchange,quant} must be warning-free"
+  # The exchange, quant, and trace trees are held to -D warnings: the
+  # bit-budget refactor keeps rust/src/exchange/ clippy-clean, the
+  # hot-loop speed pass extends that to rust/src/quant/, and the
+  # telemetry subsystem to rust/src/trace/; regressions in any gate.
+  step "cargo clippy gate: rust/src/{exchange,quant,trace} must be warning-free"
   clippy_out=$(cargo clippy --all-targets --message-format=short 2>&1 || true)
-  if printf '%s\n' "$clippy_out" | grep -E '^rust/src/(exchange|quant)/[^ ]*: (warning|error)'; then
-    echo "FAIL: clippy findings in rust/src/{exchange,quant} (held to -D warnings)"
+  if printf '%s\n' "$clippy_out" | grep -E '^rust/src/(exchange|quant|trace)/[^ ]*: (warning|error)'; then
+    echo "FAIL: clippy findings in rust/src/{exchange,quant,trace} (held to -D warnings)"
     exit 1
   fi
 else
@@ -77,6 +78,36 @@ step "smoke: scheduled bit budget (width switches mid-run)"
 
 step "smoke: variance bit budget over the tree topology"
 ./target/release/aqsgd train --iters 12 --seeds 1 --bucket 512 --topology tree:2 --bits-policy variance:2-4
+
+step "smoke: traced train run + trace-summarize validation"
+# The summarizer validates every line against the event schema and
+# fails if any step's hop bits do not sum to the step total, so this
+# smoke is a real end-to-end check of the telemetry contract.
+rm -f trace_smoke.jsonl trace_smoke_summary.json
+./target/release/aqsgd train --iters 6 --seeds 1 --bucket 512 \
+  --bits-policy variance:2-4 --trace trace_smoke.jsonl:debug
+./target/release/aqsgd trace-summarize trace_smoke.jsonl --json trace_smoke_summary.json
+grep -q '"schema":"aqsgd-trace-summary/v1"' trace_smoke_summary.json \
+  || { echo "FAIL: trace summary lacks the aqsgd-trace-summary/v1 schema tag"; exit 1; }
+
+step "smoke: traced tree-over-TCP run (leader + 4 workers)"
+rm -f trace_leader.jsonl trace_worker0.jsonl
+./target/release/aqsgd leader --bind 127.0.0.1:7719 --world 4 --iters 4 \
+  --topology tree:2 --trace trace_leader.jsonl:debug &
+leader_pid=$!
+sleep 1
+./target/release/aqsgd worker --addr 127.0.0.1:7719 --worker 0 --world 4 --iters 4 \
+  --topology tree:2 --trace trace_worker0.jsonl:debug &
+worker_pids=($!)
+for w in 1 2 3; do
+  ./target/release/aqsgd worker --addr 127.0.0.1:7719 --worker "$w" --world 4 --iters 4 \
+    --topology tree:2 &
+  worker_pids+=($!)
+done
+for pid in "${worker_pids[@]}"; do wait "$pid"; done
+wait "$leader_pid"
+./target/release/aqsgd trace-summarize trace_leader.jsonl >/dev/null
+./target/release/aqsgd trace-summarize trace_worker0.jsonl >/dev/null
 
 step "docs build (cargo doc --no-deps; gate: no missing_docs warnings)"
 doc_out=$(cargo doc --no-deps 2>&1) || { printf '%s\n' "$doc_out"; exit 1; }

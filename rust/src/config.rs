@@ -4,6 +4,7 @@
 
 use crate::exchange::{BitsPolicy, ParallelMode, TopologySpec};
 use crate::quant::{Codec, Method, QuantizeImpl};
+use crate::trace::TraceSpec;
 use anyhow::{bail, Context, Result};
 
 /// One training-run configuration (Table 3, scaled).
@@ -39,6 +40,9 @@ pub struct RunConfig {
     /// Lane quantization implementation (scalar|fast|pallas — the ISSUE 6
     /// hot-loop ablation; pallas downgrades to fast when unavailable).
     pub quantize_impl: QuantizeImpl,
+    /// Structured-telemetry sink (`--trace PATH[:warn|info|debug]`);
+    /// `None` keeps tracing compiled out of the hot path entirely.
+    pub trace: Option<TraceSpec>,
 }
 
 impl Default for RunConfig {
@@ -61,6 +65,7 @@ impl Default for RunConfig {
             topology: TopologySpec::Flat,
             codec: Codec::Huffman,
             quantize_impl: QuantizeImpl::default(),
+            trace: None,
         }
     }
 }
@@ -123,6 +128,11 @@ impl RunConfig {
                     self.quantize_impl = QuantizeImpl::parse(val).with_context(|| {
                         format!("bad --quantize-impl {val:?} (scalar|fast|pallas)")
                     })?
+                }
+                "trace" => {
+                    self.trace = Some(TraceSpec::parse(val).with_context(|| {
+                        format!("bad --trace {val:?} (PATH[:warn|info|debug])")
+                    })?)
                 }
                 other => bail!("unknown option --{other}"),
             }
@@ -316,6 +326,19 @@ mod tests {
         let c = RunConfig::from_args(&args("--parallel off")).unwrap();
         assert_eq!(c.parallel, ParallelMode::Serial);
         assert_eq!(c.cluster().parallel, ParallelMode::Serial);
+    }
+
+    #[test]
+    fn parses_trace_spec() {
+        use crate::trace::Level;
+        assert!(RunConfig::default().trace.is_none());
+        let c = RunConfig::from_args(&args("--trace out/run.jsonl")).unwrap();
+        let spec = c.trace.unwrap();
+        assert_eq!(spec.path, "out/run.jsonl");
+        assert_eq!(spec.level, Level::Debug);
+        let c = RunConfig::from_args(&args("--trace out/run.jsonl:info")).unwrap();
+        assert_eq!(c.trace.unwrap().level, Level::Info);
+        assert!(RunConfig::from_args(&args("--trace :debug")).is_err());
     }
 
     #[test]

@@ -25,9 +25,12 @@
 
 use super::messages::{Msg, WireGrad};
 use crate::exchange::topology::{group_members, TopologySpec};
+use crate::trace::{Level, Tracer};
+use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
 
 #[derive(Clone, Debug)]
 pub struct LeaderConfig {
@@ -44,8 +47,14 @@ type Conn = (BufReader<TcpStream>, TcpStream);
 /// Run the leader until `steps` exchanges have completed.
 /// Returns total relayed payload bits.
 pub fn run_leader(cfg: &LeaderConfig) -> Result<u64> {
+    run_leader_traced(cfg, &Tracer::disabled())
+}
+
+/// [`run_leader`] with structured telemetry (`--trace`): connect
+/// lifecycle plus per-step relay records (frames, bits, latency).
+pub fn run_leader_traced(cfg: &LeaderConfig, tracer: &Tracer) -> Result<u64> {
     let listener = TcpListener::bind(&cfg.bind).context("leader bind")?;
-    run_leader_topo(listener, cfg.world, cfg.steps, cfg.topology)
+    run_leader_topo_traced(listener, cfg.world, cfg.steps, cfg.topology, tracer)
 }
 
 /// Flat leader loop over an already-bound listener (lets tests use
@@ -62,6 +71,23 @@ pub fn run_leader_topo(
     steps: usize,
     topology: TopologySpec,
 ) -> Result<u64> {
+    run_leader_topo_traced(listener, world, steps, topology, &Tracer::disabled())
+}
+
+/// [`run_leader_topo`] with structured telemetry.
+pub fn run_leader_topo_traced(
+    listener: TcpListener,
+    world: usize,
+    steps: usize,
+    topology: TopologySpec,
+    tracer: &Tracer,
+) -> Result<u64> {
+    tracer.event(Level::Info, "run_start", |o| {
+        o.insert("runtime", Json::Str("leader".into()));
+        o.insert("world", Json::Num(world as f64));
+        o.insert("steps", Json::Num(steps as f64));
+        o.insert("topology", Json::Str(topology.name()));
+    });
     let mut conns: Vec<Option<Conn>> = (0..world).map(|_| None).collect();
     for _ in 0..world {
         let (stream, _) = listener.accept().context("accept")?;
@@ -76,6 +102,10 @@ pub fn run_leader_topo(
                 if slot >= world || conns[slot].is_some() {
                     bail!("bad or duplicate worker id {worker}");
                 }
+                tracer.event(Level::Info, "connect", |o| {
+                    o.insert("worker", Json::Num(f64::from(worker)));
+                    o.insert("world", Json::Num(world as f64));
+                });
                 conns[slot] = Some((reader, stream));
             }
             other => bail!("expected Hello, got {other:?}"),
@@ -84,13 +114,13 @@ pub fn run_leader_topo(
     let mut conns: Vec<Conn> = conns.into_iter().map(|c| c.unwrap()).collect();
 
     let relayed = match topology {
-        TopologySpec::Flat => relay_flat(&mut conns, steps)?,
-        TopologySpec::Sharded(s) => relay_sharded(&mut conns, steps, s)?,
+        TopologySpec::Flat => relay_flat(&mut conns, steps, tracer)?,
+        TopologySpec::Sharded(s) => relay_sharded(&mut conns, steps, s, tracer)?,
         TopologySpec::Tree(g) => {
             if g > world {
                 bail!("tree:{g} needs at most {world} groups");
             }
-            relay_tree(&mut conns, steps, g)?
+            relay_tree(&mut conns, steps, g, tracer)?
         }
         TopologySpec::Ring => {
             bail!("ring is a simulation schedule; the TCP relay supports flat|sharded:S|tree:G")
@@ -99,12 +129,29 @@ pub fn run_leader_topo(
     for (_, stream) in conns.iter_mut() {
         Msg::Done.write_to(stream)?;
     }
+    tracer.event(Level::Info, "run_end", |o| {
+        o.insert("steps", Json::Num(steps as f64));
+        o.insert("total_bits", Json::Num(relayed as f64));
+    });
     Ok(relayed)
 }
 
-fn relay_flat(conns: &mut [Conn], steps: usize) -> Result<u64> {
+/// Per-step `relay` record: frames barriered + payload bits moved this
+/// step, with the step's wall-clock relay latency.
+fn trace_relay(tracer: &Tracer, step: usize, frames: usize, bits: u64, t0: Instant) {
+    tracer.event(Level::Debug, "relay", |o| {
+        o.insert("step", Json::Num(step as f64));
+        o.insert("frames", Json::Num(frames as f64));
+        o.insert("bits", Json::Num(bits as f64));
+        o.insert("wall_seconds", Json::Num(t0.elapsed().as_secs_f64()));
+    });
+}
+
+fn relay_flat(conns: &mut [Conn], steps: usize, tracer: &Tracer) -> Result<u64> {
     let mut relayed_bits = 0u64;
     for step in 0..steps {
+        let t0 = Instant::now();
+        let step_bits0 = relayed_bits;
         let mut grads: Vec<Option<WireGrad>> = vec![None; conns.len()];
         for (w, (reader, _)) in conns.iter_mut().enumerate() {
             match Msg::read_from(reader)? {
@@ -125,13 +172,16 @@ fn relay_flat(conns: &mut [Conn], steps: usize) -> Result<u64> {
         for (_, stream) in conns.iter_mut() {
             all.write_to(stream)?;
         }
+        trace_relay(tracer, step, conns.len(), relayed_bits - step_bits0, t0);
     }
     Ok(relayed_bits)
 }
 
-fn relay_sharded(conns: &mut [Conn], steps: usize, shards: usize) -> Result<u64> {
+fn relay_sharded(conns: &mut [Conn], steps: usize, shards: usize, tracer: &Tracer) -> Result<u64> {
     let mut relayed_bits = 0u64;
     for step in 0..steps {
+        let t0 = Instant::now();
+        let step_bits0 = relayed_bits;
         // Drain every worker's full shard set before writing anything:
         // workers write all S frames then switch to reading, so reading
         // everything first makes the socket flow one-directional and
@@ -168,14 +218,17 @@ fn relay_sharded(conns: &mut [Conn], steps: usize, shards: usize) -> Result<u64>
                 all.write_to(stream)?;
             }
         }
+        trace_relay(tracer, step, conns.len() * shards, relayed_bits - step_bits0, t0);
     }
     Ok(relayed_bits)
 }
 
-fn relay_tree(conns: &mut [Conn], steps: usize, groups: usize) -> Result<u64> {
+fn relay_tree(conns: &mut [Conn], steps: usize, groups: usize, tracer: &Tracer) -> Result<u64> {
     let world = conns.len();
     let mut relayed_bits = 0u64;
     for step in 0..steps {
+        let t0 = Instant::now();
+        let step_bits0 = relayed_bits;
         // 1. Barrier on every worker's frame.
         let mut grads: Vec<Option<WireGrad>> = vec![None; world];
         for (w, (reader, _)) in conns.iter_mut().enumerate() {
@@ -231,6 +284,7 @@ fn relay_tree(conns: &mut [Conn], steps: usize, groups: usize) -> Result<u64> {
         for (_, stream) in conns.iter_mut() {
             all.write_to(stream)?;
         }
+        trace_relay(tracer, step, world + groups, relayed_bits - step_bits0, t0);
     }
     Ok(relayed_bits)
 }

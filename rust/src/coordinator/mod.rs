@@ -28,5 +28,5 @@ pub mod leader;
 pub mod messages;
 pub mod worker;
 
-pub use leader::{run_leader, LeaderConfig};
-pub use worker::{run_worker, WorkerConfig, WorkerReport};
+pub use leader::{run_leader, run_leader_traced, LeaderConfig};
+pub use worker::{run_worker, run_worker_traced, WorkerConfig, WorkerReport};

@@ -28,6 +28,8 @@ use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
 use crate::quant::bitio::BitWriter;
 use crate::quant::{Codec, EncodedView, Method, QuantizeImpl};
+use crate::trace::{Level, Tracer};
+use crate::util::json::Json;
 use crate::util::{hash_params, Rng};
 use anyhow::{bail, Context, Result};
 use std::io::BufReader;
@@ -72,6 +74,26 @@ pub struct WorkerReport {
 
 /// Run one worker to completion against the leader at `cfg.addr`.
 pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<WorkerReport> {
+    run_worker_traced(cfg, task, &Tracer::disabled())
+}
+
+/// [`run_worker`] with structured telemetry: run lifecycle, connect,
+/// per-step width decisions, per-frame wire events (`--trace`).
+pub fn run_worker_traced(
+    cfg: &WorkerConfig,
+    task: &mut dyn TrainTask,
+    tracer: &Tracer,
+) -> Result<WorkerReport> {
+    tracer.event(Level::Info, "run_start", |o| {
+        o.insert("runtime", Json::Str("worker".into()));
+        o.insert("worker", Json::Num(cfg.worker as f64));
+        o.insert("world", Json::Num(cfg.world as f64));
+        o.insert("method", Json::Str(cfg.method.name().into()));
+        o.insert("topology", Json::Str(cfg.topology.name()));
+        o.insert("policy", Json::Str(cfg.bits.name()));
+        o.insert("codec", Json::Str(cfg.codec.name().into()));
+        o.insert("seed", Json::Num(cfg.seed as f64));
+    });
     let stream = TcpStream::connect(&cfg.addr)
         .with_context(|| format!("connecting to leader {}", cfg.addr))?;
     stream.set_nodelay(true).ok();
@@ -82,6 +104,10 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
         world: cfg.world as u32,
     }
     .write_to(&mut writer)?;
+    tracer.event(Level::Info, "connect", |o| {
+        o.insert("worker", Json::Num(cfg.worker as f64));
+        o.insert("world", Json::Num(cfg.world as f64));
+    });
 
     let d = task.param_count();
     // All replicas must initialize identically.
@@ -126,17 +152,25 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
         if cfg.updates.is_update_step(step) && !prev_decoded.is_empty() {
             // Deterministic subsample seed shared by all replicas.
             let mut rng = Rng::new(cfg.seed ^ step as u64);
-            if session.adapt(prev_decoded.iter().map(|g| g.as_slice()), &mut rng) {
+            let updated = session.adapt(prev_decoded.iter().map(|g| g.as_slice()), &mut rng);
+            if updated {
                 level_updates += 1;
                 bitctl.observe_width_profile(session.width_profile());
             }
+            tracer.event(Level::Info, "adapt", |o| {
+                o.insert("step", Json::Num(step as f64));
+                o.insert("updated", Json::Bool(updated));
+                o.insert("width", Json::Num(f64::from(wire_width(&session))));
+            });
         }
 
         // Per-step width selection (a no-op for fixed:B): the shared
         // controller protocol, observing this worker's own gradient.
         if session.is_quantized() {
-            select_width(bitctl.as_mut(), &mut session, step, &grad);
+            select_width(bitctl.as_mut(), &mut session, step, &grad, tracer);
         }
+
+        let step_sent_before = sent_bits;
 
         match cfg.topology {
             TopologySpec::Flat => {
@@ -152,6 +186,7 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
                     &mut agg,
                     &mut prev_decoded,
                     &mut sent_bits,
+                    tracer,
                 )?;
             }
             TopologySpec::Sharded(shards) => {
@@ -169,6 +204,7 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
                     &mut agg,
                     &mut prev_decoded,
                     &mut sent_bits,
+                    tracer,
                 )?;
             }
             TopologySpec::Tree(groups) => {
@@ -186,12 +222,19 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
                     &mut agg,
                     &mut prev_decoded,
                     &mut sent_bits,
+                    tracer,
                 )?;
             }
             TopologySpec::Ring => {
                 bail!("ring is a simulation schedule; TCP workers support flat|sharded:S|tree:G")
             }
         }
+
+        tracer.event(Level::Info, "step", |o| {
+            o.insert("step", Json::Num(step as f64));
+            o.insert("bits", Json::Num((sent_bits - step_sent_before) as f64));
+            o.insert("width", Json::Num(f64::from(wire_width(&session))));
+        });
 
         optimizer.step(&mut params, &agg, cfg.lr.lr(step));
     }
@@ -200,6 +243,11 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
         Msg::Done => {}
         other => bail!("expected Done, got {other:?}"),
     }
+
+    tracer.event(Level::Info, "run_end", |o| {
+        o.insert("steps", Json::Num(cfg.iters as f64));
+        o.insert("total_bits", Json::Num(sent_bits as f64));
+    });
 
     Ok(WorkerReport {
         final_eval: task.eval(&params),
@@ -214,6 +262,28 @@ pub fn run_worker(cfg: &WorkerConfig, task: &mut dyn TrainTask) -> Result<Worker
 /// ([`WIDTH_FP32`] when nothing quantizes).
 fn wire_width(s: &CodecSession) -> u32 {
     s.active_bits().unwrap_or(WIDTH_FP32)
+}
+
+/// `frame_send` wire event: one outgoing payload frame.
+fn trace_send(tracer: &Tracer, step: usize, kind: &str, bytes: usize, width: u32) {
+    tracer.event(Level::Debug, "frame_send", |o| {
+        o.insert("step", Json::Num(step as f64));
+        o.insert("kind", Json::Str(kind.to_string()));
+        o.insert("bytes", Json::Num(bytes as f64));
+        o.insert("width", Json::Num(f64::from(width)));
+    });
+}
+
+/// `frame_recv` wire event: one relay broadcast (frame count + total
+/// payload bytes).
+fn trace_recv(tracer: &Tracer, step: usize, kind: &str, grads: &[WireGrad]) {
+    tracer.event(Level::Debug, "frame_recv", |o| {
+        o.insert("step", Json::Num(step as f64));
+        o.insert("kind", Json::Str(kind.to_string()));
+        o.insert("frames", Json::Num(grads.len() as f64));
+        let bytes: usize = grads.iter().map(|g| g.bytes.len()).sum();
+        o.insert("bytes", Json::Num(bytes as f64));
+    });
 }
 
 /// Decode one received wire frame with the bank slot the frame names
@@ -254,6 +324,7 @@ fn exchange_flat(
     agg: &mut [f32],
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
+    tracer: &Tracer,
 ) -> Result<()> {
     let d = grad.len();
     let bits = if session.is_quantized() {
@@ -263,6 +334,7 @@ fn exchange_flat(
         lane.encode_raw(grad)
     };
     *sent_bits += bits;
+    trace_send(tracer, step, "grad", lane.encoded().bytes.len(), wire_width(session));
     Msg::Grad {
         step: step as u32,
         grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
@@ -278,6 +350,7 @@ fn exchange_flat(
         }
         other => bail!("expected AllGrads, got {other:?}"),
     };
+    trace_recv(tracer, step, "all_grads", &grads);
     agg.fill(0.0);
     if prev_decoded.len() != grads.len() {
         *prev_decoded = vec![vec![0.0f32; d]; grads.len()];
@@ -309,6 +382,7 @@ fn exchange_sharded(
     agg: &mut [f32],
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
+    tracer: &Tracer,
 ) -> Result<()> {
     let d = grad.len();
     let quantized = session.is_quantized();
@@ -333,6 +407,7 @@ fn exchange_sharded(
                 bucket,
             };
             *sent_bits += bits;
+            trace_send(tracer, step, "shard", view.bytes.len(), wire_width(session));
             Msg::ShardGrad {
                 step: step as u32,
                 shard: shard as u32,
@@ -346,6 +421,7 @@ fn exchange_sharded(
             let hi = (shard + 1) * d / shards;
             let bits = lane.encode_raw(&grad[lo..hi]);
             *sent_bits += bits;
+            trace_send(tracer, step, "shard", lane.encoded().bytes.len(), WIDTH_FP32);
             Msg::ShardGrad {
                 step: step as u32,
                 shard: shard as u32,
@@ -386,6 +462,7 @@ fn exchange_sharded(
             }
             other => bail!("expected AllShardGrads, got {other:?}"),
         };
+        trace_recv(tracer, step, "all_shard_grads", &grads);
         if grads.len() != cfg.world {
             bail!("shard broadcast has {} frames, world {}", grads.len(), cfg.world);
         }
@@ -417,6 +494,7 @@ fn exchange_tree(
     agg: &mut [f32],
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
+    tracer: &Tracer,
 ) -> Result<()> {
     let d = grad.len();
     let my_group = group_of(cfg.worker, cfg.world, groups);
@@ -431,6 +509,7 @@ fn exchange_tree(
         lane.encode_raw(grad)
     };
     *sent_bits += bits;
+    trace_send(tracer, step, "grad", lane.encoded().bytes.len(), wire_width(session));
     Msg::Grad {
         step: step as u32,
         grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
@@ -449,6 +528,7 @@ fn exchange_tree(
             }
             other => bail!("expected AllGrads (group frames), got {other:?}"),
         };
+        trace_recv(tracer, step, "all_grads", &group);
         if group.len() != members.len() {
             bail!("group broadcast has {} frames, group size {}", group.len(), members.len());
         }
@@ -467,6 +547,7 @@ fn exchange_tree(
             lane.encode_raw(partial)
         };
         *sent_bits += bits;
+        trace_send(tracer, step, "leader", lane.encoded().bytes.len(), wire_width(session));
         Msg::LeaderGrad {
             step: step as u32,
             group: my_group as u32,
@@ -485,6 +566,7 @@ fn exchange_tree(
         }
         other => bail!("expected AllLeaderGrads, got {other:?}"),
     };
+    trace_recv(tracer, step, "all_leader_grads", &leads);
     if leads.len() != groups {
         bail!("leader broadcast has {} frames, groups {}", leads.len(), groups);
     }

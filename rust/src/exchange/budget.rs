@@ -37,6 +37,8 @@ use crate::quant::{
     smooth_weights, symbol_counts, Codec, HuffmanBook, Method, QuantizedGrad, Quantizer,
 };
 use crate::stats::Mixture;
+use crate::trace::{Level, Tracer};
+use crate::util::json::Json;
 
 /// Bounds of the paper's `bits` hyperparameter (`Levels::mags_for_bits`).
 const MIN_WIDTH: u32 = 2;
@@ -253,6 +255,11 @@ pub trait BitController: Send {
     /// methods never produce one and the controller falls back to the
     /// QSGD scaling law).
     fn observe_width_profile(&mut self, _profile: &[(u32, f64)]) {}
+
+    /// Append the controller's internal state to a `bit_decision` trace
+    /// event (the "what did the controller see" record). Stateless
+    /// controllers add nothing.
+    fn trace_state(&self, _out: &mut Json) {}
 }
 
 /// `fixed:B` — the inert controller; the whole dynamic machinery reduces
@@ -341,6 +348,27 @@ impl BitController for VarianceBits {
         self.profile = profile.to_vec();
     }
 
+    fn trace_state(&self, out: &mut Json) {
+        out.insert("target", Json::Num(self.spec.target));
+        out.insert("min_width", Json::Num(self.spec.min_bits as f64));
+        out.insert("max_width", Json::Num(self.spec.max_bits as f64));
+        out.insert("down_margin", Json::Num(DOWN_MARGIN));
+        if let Some(e) = self.ema {
+            out.insert("ema", Json::Num(e));
+        }
+        if !self.profile.is_empty() {
+            out.insert(
+                "psi_profile",
+                Json::Arr(
+                    self.profile
+                        .iter()
+                        .map(|&(b, p)| Json::Arr(vec![Json::Num(b as f64), Json::Num(p)]))
+                        .collect(),
+                ),
+            );
+        }
+    }
+
     fn bits_for_step(&mut self, _step: usize) -> u32 {
         let Some(ema) = self.ema else {
             return self.cur;
@@ -390,22 +418,45 @@ pub fn normalized_variance(q: &Quantizer, grad: &[f32]) -> Option<f64> {
 /// for `fixed:B`/`schedule`), ask the controller for the step's width,
 /// switch the session's bank slot (O(1)), and return the width. Callers
 /// guard the full-precision case (no quantizer → no width).
+///
+/// Because this is the single shared decision point, it is also the
+/// single instrumentation point: an enabled `tracer` records one
+/// `bit_decision` event per step — the observed normalized variance
+/// (when the policy consumes it), the previous and chosen widths, and
+/// whatever internal state the controller exposes via
+/// [`BitController::trace_state`] (EMA, target, Ψ profile, hysteresis
+/// margin for the `variance` policy).
 pub fn select_width(
     ctl: &mut dyn BitController,
     session: &mut super::session::CodecSession,
     step: usize,
     grad: &[f32],
+    tracer: &Tracer,
 ) -> u32 {
     debug_assert!(session.is_quantized(), "select_width on full precision");
+    let mut observed = None;
     if ctl.wants_variance() {
         if let Some(q) = session.quantizer() {
             if let Some(v) = normalized_variance(q, grad) {
                 ctl.observe_variance(step, v);
+                observed = Some(v);
             }
         }
     }
+    let prev = session.active_bits();
     let bits = ctl.bits_for_step(step);
     session.set_active_bits(bits);
+    tracer.event(Level::Info, "bit_decision", |o| {
+        o.insert("step", Json::Num(step as f64));
+        o.insert("width", Json::Num(bits as f64));
+        if let Some(p) = prev {
+            o.insert("prev_width", Json::Num(p as f64));
+        }
+        if let Some(v) = observed {
+            o.insert("observed_variance", Json::Num(v));
+        }
+        ctl.trace_state(o);
+    });
     bits
 }
 
@@ -791,10 +842,29 @@ mod tests {
         let mut s = CodecSession::with_policy(Method::QsgdInf, &policy, 64);
         let mut ctl = policy.controller();
         let g = [0.1f32; 64];
-        assert_eq!(select_width(ctl.as_mut(), &mut s, 0, &g), 3);
+        let off = Tracer::disabled();
+        assert_eq!(select_width(ctl.as_mut(), &mut s, 0, &g, &off), 3);
         assert_eq!(s.active_bits(), Some(3));
-        assert_eq!(select_width(ctl.as_mut(), &mut s, 4, &g), 2);
+        assert_eq!(select_width(ctl.as_mut(), &mut s, 4, &g, &off), 2);
         assert_eq!(s.active_bits(), Some(2));
+    }
+
+    #[test]
+    fn select_width_emits_bit_decision_with_controller_state() {
+        use super::super::session::CodecSession;
+        let policy = BitsPolicy::parse("variance:2-4").unwrap();
+        let mut s = CodecSession::with_policy(Method::Alq, &policy, 64);
+        let mut ctl = policy.controller();
+        let (tracer, buf) = Tracer::memory(Level::Info);
+        let g = [0.1f32; 64];
+        let w = select_width(ctl.as_mut(), &mut s, 0, &g, &tracer);
+        let text = buf.lock().unwrap().clone();
+        assert!(text.contains(r#""e":"bit_decision""#), "{text}");
+        assert!(text.contains(&format!("\"width\":{w}")));
+        assert!(text.contains("\"observed_variance\":"));
+        assert!(text.contains("\"target\":"));
+        assert!(text.contains("\"ema\":"));
+        assert!(text.contains("\"prev_width\":4"));
     }
 
     #[test]

@@ -232,6 +232,7 @@ impl GradientExchange {
         // Deterministic reduction: fixed worker order on the calling
         // thread, so the f32 accumulation matches the serial loop
         // bit-for-bit no matter how the lanes were scheduled.
+        let t_agg = std::time::Instant::now();
         let inv = 1.0 / m as f32;
         let mut step_bits = 0u64;
         for (w, lane) in self.lanes.iter().enumerate() {
@@ -241,6 +242,8 @@ impl GradientExchange {
                 *a += g * inv;
             }
         }
+        self.core
+            .trace_phase("aggregate", t_agg.elapsed().as_secs_f64());
         self.core.add_codec_seconds(t0.elapsed().as_secs_f64());
         // The flat schedule is one hop: every worker's frame crosses the
         // fabric once, at the analytical closed-form step time.

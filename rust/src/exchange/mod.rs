@@ -49,7 +49,7 @@ pub mod topology;
 pub use budget::{BitController, BitsPolicy, QuantizerBank, VarianceSpec};
 pub use engine::{ExchangeConfig, GradientExchange, ParallelMode};
 pub use session::{CodecSession, ExchangeLane};
-pub use topology::core::BackendCore;
+pub use topology::core::{BackendCore, CodecPhase};
 pub use topology::{make_backend, Hop, TopologySpec};
 
 use crate::quant::Quantizer;
@@ -133,6 +133,13 @@ pub trait ExchangeBackend: Send {
     /// path).
     fn codec_seconds(&self) -> f64 {
         self.core().codec_seconds()
+    }
+
+    /// Cumulative per-phase codec time (quantize vs encode vs decode —
+    /// the un-opaqued split of [`ExchangeBackend::codec_seconds`]; see
+    /// [`CodecPhase`] for attribution caveats).
+    fn codec_phase(&self) -> CodecPhase {
+        self.core().codec_phase()
     }
 
     /// The final (possibly adapted) quantization level magnitudes.

@@ -90,9 +90,11 @@ impl CodecSession {
     /// Select the lane quantization implementation (`--quantize-impl
     /// scalar|fast|pallas`). `Pallas` stands up the PJRT client and
     /// compiles the kernel once, right here; when that fails (the
-    /// `pjrt` feature is off, artifacts are absent) the session warns
-    /// once on stderr and downgrades to the bit-identical host `Fast`
-    /// path so every configuration still runs everywhere.
+    /// `pjrt` feature is off, artifacts are absent) the session reports
+    /// the downgrade once through [`crate::trace::warn`] (stderr plus
+    /// the installed tracer's `warning` event) and downgrades to the
+    /// bit-identical host `Fast` path so every configuration still runs
+    /// everywhere.
     pub fn with_quantize_impl(mut self, imp: QuantizeImpl) -> Self {
         self.quantize_impl = imp;
         self.pallas = None;
@@ -100,9 +102,12 @@ impl CodecSession {
             match PallasQuantize::try_new() {
                 Ok(dev) => self.pallas = Some(Arc::new(dev)),
                 Err(e) => {
-                    eprintln!(
-                        "[aqsgd] --quantize-impl pallas unavailable ({e:#}); \
-                         falling back to the fast host path"
+                    crate::trace::warn(
+                        "pallas",
+                        &format!(
+                            "--quantize-impl pallas unavailable ({e:#}); \
+                             falling back to the fast host path"
+                        ),
                     );
                     self.quantize_impl = QuantizeImpl::Fast;
                 }

@@ -48,12 +48,34 @@ use super::super::session::{CodecSession, ExchangeLane};
 use super::Hop;
 use crate::quant::{Method, Quantizer};
 use crate::sim::network::Meter;
+use crate::trace::{Level, Tracer};
+use crate::util::json::Json;
 use crate::util::Rng;
+use std::time::Instant;
 
 /// Coordinate count per lane below which `ParallelMode::Auto` stays
 /// serial: spawning a scoped thread costs ~tens of µs, and quantize+code
 /// of fewer coordinates is cheaper than that (DESIGN.md §Perf).
 const AUTO_PARALLEL_MIN_COORDS: usize = 32_768;
+
+/// Cumulative per-phase codec wall time, split the way `TrainRecord`
+/// reports it (the un-opaqued view of `codec_seconds`).
+///
+/// Values are per-lane sums measured inside [`BackendCore::member_stage`]
+/// — under parallel lanes they can exceed the region's wall time (which
+/// is what `codec_seconds` charges). Schedule work a backend runs
+/// *outside* the member stage (sharded/tree leader-side decode and
+/// re-quantization, the whole ring schedule) is not attributed here;
+/// those backends still report the total in `codec_seconds`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CodecPhase {
+    /// Seconds spent quantizing (including sampled symbol counting).
+    pub quantize: f64,
+    /// Seconds spent entropy-encoding.
+    pub encode: f64,
+    /// Seconds spent decoding (the loopback decode of own frames).
+    pub decode: f64,
+}
 
 /// The state block shared by every [`super::super::ExchangeBackend`]:
 /// codec session, per-worker RNG streams, communication meter, per-hop
@@ -78,7 +100,16 @@ pub struct BackendCore {
     active: usize,
     meter: Meter,
     codec_seconds: f64,
+    phase: CodecPhase,
     hops: Vec<Hop>,
+    /// Telemetry handle (disabled by default; installed via
+    /// [`BackendCore::set_tracer`]). All event emission happens on the
+    /// calling thread in schedule order, which is what keeps traced
+    /// event sequences bit-identical across `--parallel` modes.
+    tracer: Tracer,
+    /// The step `begin_step` last started — the step every event this
+    /// core emits is stamped with.
+    cur_step: usize,
 }
 
 impl BackendCore {
@@ -110,9 +141,23 @@ impl BackendCore {
             active,
             meter: Meter::default(),
             codec_seconds: 0.0,
+            phase: CodecPhase::default(),
             hops: Vec::new(),
+            tracer: Tracer::disabled(),
+            cur_step: 0,
             cfg,
         }
+    }
+
+    /// Install the telemetry handle every subsequent step reports to
+    /// (replacing the default disabled tracer).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The telemetry handle (disabled unless one was installed).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// Start one exchange step: feed the bit controller its per-step
@@ -125,15 +170,23 @@ impl BackendCore {
     /// decisions are deterministic per seed and identical across
     /// `--parallel` modes.
     pub fn begin_step(&mut self, step: usize, grads: &[Vec<f32>]) {
+        self.cur_step = step;
         if !self.session.is_quantized() {
             self.step_width = 32;
             return;
         }
         // Worker 0's gradient is the representative observation (the
         // same protocol the TCP worker runs on its own gradient —
-        // `budget::select_width` is the single shared implementation).
+        // `budget::select_width` is the single shared implementation,
+        // and the single `bit_decision` trace point).
         let grad = grads.first().map(|g| g.as_slice()).unwrap_or_default();
-        self.step_width = select_width(self.controller.as_mut(), &mut self.session, step, grad);
+        self.step_width = select_width(
+            self.controller.as_mut(),
+            &mut self.session,
+            step,
+            grad,
+            &self.tracer,
+        );
     }
 
     /// The quantization width the current/last step runs at (32 for
@@ -215,6 +268,25 @@ impl BackendCore {
         self.codec_seconds += seconds;
     }
 
+    /// Cumulative per-phase codec time (see [`CodecPhase`] for the
+    /// attribution caveats).
+    pub fn codec_phase(&self) -> CodecPhase {
+        self.phase
+    }
+
+    /// Emit one `phase` span event for the current step (a wall-clock
+    /// measurement, hence the `wall_seconds` key — masked by the
+    /// determinism tests). Backends use this for schedule stages the
+    /// core cannot see, e.g. the flat engine's aggregate reduction.
+    pub fn trace_phase(&self, phase: &str, wall_seconds: f64) {
+        let step = self.cur_step;
+        self.tracer.event(Level::Debug, "phase", |o| {
+            o.insert("step", Json::Num(step as f64));
+            o.insert("phase", Json::Str(phase.to_string()));
+            o.insert("wall_seconds", Json::Num(wall_seconds));
+        });
+    }
+
     /// Per-hop accounting of the last exchange, in schedule order.
     pub fn last_hops(&self) -> &[Hop] {
         &self.hops
@@ -223,12 +295,42 @@ impl BackendCore {
     /// Install the step's hop records (schedule order) and feed the
     /// meter. Debug-asserts the hop-sum invariant: Σ hop bits equals the
     /// step total every backend returns from `exchange()`.
+    ///
+    /// This is the single trace point for per-hop records and the step
+    /// total, inherited by every topology: one `hop` event per schedule
+    /// hop and a `wire` phase span (both carrying the *modeled* α-β
+    /// `seconds`, which are deterministic and stay unmasked), then the
+    /// `step` roll-up event whose `bits` is exactly the `StepStats.bits`
+    /// the sim records.
     pub fn finish_step(&mut self, hops: Vec<Hop>, step_bits: u64, step_seconds: f64) {
         debug_assert_eq!(
             hops.iter().map(|h| h.bits).sum::<u64>(),
             step_bits,
             "hop-sum invariant violated"
         );
+        let step = self.cur_step;
+        if self.tracer.on(Level::Debug) {
+            for (i, h) in hops.iter().enumerate() {
+                self.tracer.event(Level::Debug, "hop", |o| {
+                    o.insert("step", Json::Num(step as f64));
+                    o.insert("index", Json::Num(i as f64));
+                    o.insert("label", Json::Str(h.label.clone()));
+                    o.insert("bits", Json::Num(h.bits as f64));
+                    o.insert("seconds", Json::Num(h.seconds));
+                });
+            }
+            self.tracer.event(Level::Debug, "phase", |o| {
+                o.insert("step", Json::Num(step as f64));
+                o.insert("phase", Json::Str("wire".to_string()));
+                o.insert("seconds", Json::Num(step_seconds));
+            });
+        }
+        let width = self.step_width;
+        self.tracer.event(Level::Info, "step", |o| {
+            o.insert("step", Json::Num(step as f64));
+            o.insert("bits", Json::Num(step_bits as f64));
+            o.insert("width", Json::Num(width as f64));
+        });
         self.hops = hops;
         self.meter.record_raw(step_bits, step_seconds);
     }
@@ -242,8 +344,10 @@ impl BackendCore {
         if !self.session.is_quantized() {
             return;
         }
+        let t0 = Instant::now();
         let mut rng = self.rngs[0].fork(0xE57);
-        if !self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng) {
+        let updated = self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng);
+        if !updated {
             self.session.refresh_book_from_counts();
         } else {
             // A successful fit refreshed every bank width's levels and
@@ -252,6 +356,13 @@ impl BackendCore {
             self.controller
                 .observe_width_profile(self.session.width_profile());
         }
+        let wall = t0.elapsed().as_secs_f64();
+        let width = self.session.active_bits().unwrap_or(32);
+        self.tracer.event(Level::Info, "adapt", |o| {
+            o.insert("updated", Json::Bool(updated));
+            o.insert("width", Json::Num(width as f64));
+            o.insert("wall_seconds", Json::Num(wall));
+        });
     }
 
     /// Whether a stage of `lanes` independent tasks, each touching about
@@ -290,7 +401,7 @@ impl BackendCore {
         }
         let sample_counts = self.session.needs_book() && step % 10 == 0;
         let parallel = self.use_parallel(lanes.len(), grads.first().map_or(0, |g| g.len()));
-        {
+        let timings = {
             let session = &self.session;
             let mut tasks: Vec<(&mut ExchangeLane, &mut Rng, &[f32])> = lanes
                 .iter_mut()
@@ -300,23 +411,53 @@ impl BackendCore {
                 .collect();
             fan_out(parallel, &mut tasks, |w, task| {
                 let (lane, rng, grad) = task;
+                let t0 = Instant::now();
                 if !(w == 0 && lane0_quantized) {
                     lane.quantize(session, grad, rng);
                 }
                 if sample_counts {
                     lane.count_symbols(session);
                 }
+                let t_quantize = t0.elapsed().as_secs_f64();
+                let (mut t_encode, mut t_decode) = (0.0, 0.0);
                 if encode {
+                    let t1 = Instant::now();
                     lane.encode(session);
+                    t_encode = t1.elapsed().as_secs_f64();
+                    let t2 = Instant::now();
                     lane.decode_own(session);
+                    t_decode = t2.elapsed().as_secs_f64();
                 }
-            });
-        }
+                (t_quantize, t_encode, t_decode)
+            })
+        };
         if sample_counts {
             // Worker-order f64 accumulation on the calling thread, so
             // refreshed codebooks never depend on lane scheduling.
             for lane in lanes.iter() {
                 self.session.accumulate_counts(lane.counts());
+            }
+        }
+        // Per-lane timings fold in worker order on the calling thread:
+        // the per-phase attribution behind `codec_phase()` and the
+        // member-stage span events. Which spans exist is structural
+        // (quantize always, encode/decode iff this schedule encodes
+        // here), never a function of measured time — so the masked
+        // event sequence is identical across `--parallel` modes.
+        let (mut t_q, mut t_e, mut t_d) = (0.0f64, 0.0f64, 0.0f64);
+        for &(q, e, d) in &timings {
+            t_q += q;
+            t_e += e;
+            t_d += d;
+        }
+        self.phase.quantize += t_q;
+        self.phase.encode += t_e;
+        self.phase.decode += t_d;
+        if self.tracer.on(Level::Debug) {
+            self.trace_phase("quantize", t_q);
+            if encode {
+                self.trace_phase("encode", t_e);
+                self.trace_phase("decode", t_d);
             }
         }
     }

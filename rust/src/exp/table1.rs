@@ -39,7 +39,20 @@ pub fn run(args: &[String]) -> Result<()> {
         "Table 1: validation accuracy (paper: Tab. 1)",
         &["Method", specs[0].name, specs[1].name],
     );
-    let mut csv = Table::new("", &["method", "model", "seed", "val_acc", "val_loss", "bits_per_step"]);
+    let mut csv = Table::new(
+        "",
+        &[
+            "method",
+            "model",
+            "seed",
+            "val_acc",
+            "val_loss",
+            "bits_per_step",
+            "quantize_s",
+            "encode_s",
+            "decode_s",
+        ],
+    );
 
     let mut rows: Vec<Vec<String>> = Vec::new();
     for method in METHODS {
@@ -57,6 +70,9 @@ pub fn run(args: &[String]) -> Result<()> {
                     format!("{:.4}", rec.final_eval.accuracy),
                     format!("{:.4}", rec.final_eval.loss),
                     format!("{bits_per_step:.0}"),
+                    format!("{:.4}", rec.codec_phase.quantize),
+                    format!("{:.4}", rec.codec_phase.encode),
+                    format!("{:.4}", rec.codec_phase.decode),
                 ]);
             }
             let (m, s) = mean_std(&accs);

@@ -6,8 +6,10 @@
 //!   step(bits, bucket) = compute_base + ring_allreduce(encoded bits)
 //!                      + measured_codec(bits, bucket)
 //!
-//! with the codec cost *measured on this CPU* (quantize + Huffman encode
-//! + decode + dequantize per coordinate), encoded sizes measured exactly,
+//! with the codec cost *measured on this CPU* and reported per phase
+//! (quantize | Huffman encode | decode+dequantize per coordinate — the
+//! same split `TrainRecord.codec_phase` attributes on real runs),
+//! encoded sizes measured exactly,
 //! the α-β ring model at 1 Gbit/s, and compute_base calibrated from the
 //! paper's fp32 step time. Absolute numbers differ from V100s; the shape
 //! (ratios to FP32/FP16, monotonicity in bits, weak bucket dependence)
@@ -22,10 +24,20 @@ use crate::util::Rng;
 use anyhow::Result;
 use std::time::Instant;
 
-/// Measured codec cost + encoded size for one (bits, bucket) cell.
+/// Measured codec cost + encoded size for one (bits, bucket) cell,
+/// split into the three codec phases (the same quantize/encode/decode
+/// attribution `TrainRecord.codec_phase` reports for real runs).
 struct CodecProfile {
-    ns_per_coord: f64,
+    quantize_ns_per_coord: f64,
+    encode_ns_per_coord: f64,
+    decode_ns_per_coord: f64,
     bits_per_coord: f64,
+}
+
+impl CodecProfile {
+    fn ns_per_coord(&self) -> f64 {
+        self.quantize_ns_per_coord + self.encode_ns_per_coord + self.decode_ns_per_coord
+    }
 }
 
 fn profile_codec(bits: u32, bucket: usize, n: usize) -> CodecProfile {
@@ -44,17 +56,26 @@ fn profile_codec(bits: u32, bucket: usize, n: usize) -> CodecProfile {
     let mut out = vec![0.0f32; n];
     let reps = 3;
     let mut total_bits = 0u64;
-    let t0 = Instant::now();
+    let (mut t_quantize, mut t_encode, mut t_decode) = (0.0f64, 0.0f64, 0.0f64);
     for _ in 0..reps {
+        let t0 = Instant::now();
         let q = quant.quantize(&v, &mut rng);
+        t_quantize += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
         let e = encode(&q, &levels, &book);
+        t_encode += t0.elapsed().as_secs_f64();
         total_bits += e.bits;
+        // Decode covers entropy-decode + dequantize (the receive side).
+        let t0 = Instant::now();
         let d = crate::quant::decode(&e, &levels, &book);
         quant.dequantize(&d, &mut out);
+        t_decode += t0.elapsed().as_secs_f64();
     }
-    let dt = t0.elapsed().as_secs_f64();
+    let per_coord = 1e9 / (reps * n) as f64;
     CodecProfile {
-        ns_per_coord: dt * 1e9 / (reps * n) as f64,
+        quantize_ns_per_coord: t_quantize * per_coord,
+        encode_ns_per_coord: t_encode * per_coord,
+        decode_ns_per_coord: t_decode * per_coord,
         bits_per_coord: total_bits as f64 / (reps * n) as f64,
     }
 }
@@ -108,19 +129,32 @@ pub fn run(args: &[String]) -> Result<()> {
         );
         let mut t = Table::new(
             &format!("Per-step time, {model} (paper: Tables 5–6)"),
-            &["Bits", "Bucket", "Time/step (s)", "Ratio FP32", "Ratio FP16"],
+            &[
+                "Bits",
+                "Bucket",
+                "Time/step (s)",
+                "Quantize (ms)",
+                "Encode (ms)",
+                "Decode (ms)",
+                "Ratio FP32",
+                "Ratio FP16",
+            ],
         );
         for &bits in &bits_list {
             for &bucket in &buckets {
                 let prof = profile_codec(bits, bucket, probe_n);
                 let enc_bits = (prof.bits_per_coord * d as f64) as u64;
                 let comm = net.step_time(&vec![enc_bits; m]);
-                let codec = prof.ns_per_coord * 1e-9 * d as f64;
+                let codec = prof.ns_per_coord() * 1e-9 * d as f64;
                 let step = compute + comm + codec;
+                let phase_ms = |ns: f64| format!("{:.1}", ns * 1e-6 * d as f64);
                 t.row(vec![
                     bits.to_string(),
                     bucket.to_string(),
                     format!("{step:.3}"),
+                    phase_ms(prof.quantize_ns_per_coord),
+                    phase_ms(prof.encode_ns_per_coord),
+                    phase_ms(prof.decode_ns_per_coord),
                     format!("{:.2}", step / fp32_step),
                     format!("{:.2}", step / fp16_step),
                 ]);

@@ -33,4 +33,5 @@ pub mod quant;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod trace;
 pub mod util;

@@ -12,11 +12,12 @@
 
 use anyhow::{bail, Context, Result};
 use aqsgd::config::RunConfig;
-use aqsgd::coordinator::{run_leader, run_worker, LeaderConfig, WorkerConfig};
+use aqsgd::coordinator::{run_leader_traced, run_worker_traced, LeaderConfig, WorkerConfig};
 use aqsgd::exp;
 use aqsgd::opt::{LrSchedule, UpdateSchedule};
 use aqsgd::runtime::{Manifest, Runtime};
 use aqsgd::sim::Cluster;
+use aqsgd::trace::{self, summary::TraceSummary, TraceSpec, Tracer};
 
 const USAGE: &str = "\
 aqsgd — Adaptive Gradient Quantization for Data-Parallel SGD (NeurIPS 2020)
@@ -27,6 +28,7 @@ USAGE:
               [--topology flat|sharded:S|tree:G|ring] [--codec huffman|elias]
               [--bits-policy fixed:B|schedule:B1@s1,B2@s2,...|variance[:MIN-MAX[@T]]]
               [--quantize-impl scalar|fast|pallas]
+              [--trace PATH[:warn|info|debug]]
               (--parallel fans out flat/sharded/tree lanes, bit-identical
                to serial; the ring schedule is inherently serial.
                --bits-policy moves the quantization width per step:
@@ -38,12 +40,18 @@ USAGE:
   aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
   aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
               [--topology flat|sharded:S|tree:G]
+              [--trace PATH[:warn|info|debug]]
   aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
               [--method ALQ --bits 3 --bucket 512 --seed 42]
               [--topology flat|sharded:S|tree:G] [--codec huffman|elias]
               [--bits-policy ...] [--quantize-impl scalar|fast|pallas]
+              [--trace PATH[:warn|info|debug]]
               (frames carry their width, so the leader relay needs no
                flag and no extra round-trip)
+  aqsgd trace-summarize FILE [--json PATH]
+              (validate a --trace JSONL file against the event schema
+               and fold it into per-phase/per-hop/per-width tables;
+               --json writes the machine-readable summary document)
   aqsgd inspect [--artifacts DIR]
 ";
 
@@ -61,6 +69,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("exp") => cmd_exp(&args[1..]),
         Some("leader") => cmd_leader(&args[1..]),
         Some("worker") => cmd_worker(&args[1..]),
+        Some("trace-summarize") => cmd_trace_summarize(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("help") | None => {
             print!("{USAGE}");
@@ -91,6 +100,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if cfg.model != "mlp" {
         bail!("`train` runs the pure-Rust blobs task; for HLO models see examples/train_lm.rs");
     }
+    // One tracer shared across the seed loop: each seed's run_start
+    // event marks the run boundary in the JSONL stream.
+    let tracer = open_tracer(cfg.trace.as_ref())?;
     let spec = aqsgd::exp::common::ModelSpec::resnet32_standin();
     let mut accs = Vec::new();
     for seed in 0..cfg.seeds as u64 {
@@ -98,7 +110,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         ccfg.seed = cfg.seed + seed;
         ccfg.bucket = cfg.bucket.min(spec.param_count() / 2);
         let mut task = spec.task(cfg.workers, cfg.seed + seed);
-        let rec = Cluster::new(ccfg).train(&mut task);
+        let mut cluster = Cluster::new(ccfg);
+        cluster.set_tracer(tracer.clone());
+        let rec = cluster.train(&mut task);
         println!(
             "  seed {}: val acc {:.4}, val loss {:.4}, bits/step {:.0}, levels {:?}",
             seed,
@@ -136,6 +150,64 @@ fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
+/// Open the `--trace` sink (disabled when absent) and install it as the
+/// process-global warning tracer so library degradations land in the
+/// trace file too.
+fn open_tracer(spec: Option<&TraceSpec>) -> Result<Tracer> {
+    match spec {
+        Some(spec) => {
+            let t = spec.tracer()?;
+            trace::install_global(t.clone());
+            println!("  tracing → {} (level {})", spec.path, spec.level.name());
+            Ok(t)
+        }
+        None => Ok(Tracer::disabled()),
+    }
+}
+
+/// Parse an optional `--trace PATH[:level]` flag (leader/worker CLIs).
+fn parse_trace_flag(args: &[String]) -> Result<Option<TraceSpec>> {
+    match flag(args, "--trace") {
+        Some(v) => Ok(Some(TraceSpec::parse(v).with_context(|| {
+            format!("bad --trace {v:?} (PATH[:warn|info|debug])")
+        })?)),
+        None => Ok(None),
+    }
+}
+
+fn cmd_trace_summarize(args: &[String]) -> Result<()> {
+    let Some(file) = args.first().filter(|a| !a.starts_with("--")) else {
+        bail!("usage: aqsgd trace-summarize FILE [--json PATH]");
+    };
+    let text = std::fs::read_to_string(file).with_context(|| format!("reading {file:?}"))?;
+    let summary = TraceSummary::from_jsonl(&text)
+        .map_err(|e| anyhow::anyhow!("invalid trace {file:?}: {e}"))?;
+    println!(
+        "{file}: {} events, {} steps, {} warnings",
+        summary.events,
+        summary.steps.len(),
+        summary.warnings.len()
+    );
+    for table in summary.tables() {
+        println!("\n{}", table.to_markdown());
+    }
+    if !summary.hop_bits_mismatches.is_empty() {
+        for m in &summary.hop_bits_mismatches {
+            eprintln!("hop/step bit mismatch: {m}");
+        }
+        bail!(
+            "{} step(s) whose hop bits do not sum to the step total",
+            summary.hop_bits_mismatches.len()
+        );
+    }
+    if let Some(path) = flag(args, "--json") {
+        std::fs::write(path, format!("{}\n", summary.to_json()))
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("summary JSON → {path}");
+    }
+    Ok(())
+}
+
 fn parse_wire_topology(args: &[String]) -> Result<aqsgd::exchange::TopologySpec> {
     use aqsgd::exchange::TopologySpec;
     let topology = match flag(args, "--topology") {
@@ -163,7 +235,8 @@ fn cmd_leader(args: &[String]) -> Result<()> {
         cfg.steps,
         cfg.topology.name()
     );
-    let bits = run_leader(&cfg)?;
+    let tracer = open_tracer(parse_trace_flag(args)?.as_ref())?;
+    let bits = run_leader_traced(&cfg, &tracer)?;
     println!("relayed {bits} payload bits");
     Ok(())
 }
@@ -236,7 +309,8 @@ fn cmd_worker(args: &[String]) -> Result<()> {
     let spec = aqsgd::exp::common::ModelSpec::resnet32_standin();
     let mut task = spec.task(cfg.world, 7);
     println!("worker {}/{} → {}", cfg.worker, cfg.world, cfg.addr);
-    let report = run_worker(&cfg, &mut task)?;
+    let tracer = open_tracer(parse_trace_flag(args)?.as_ref())?;
+    let report = run_worker_traced(&cfg, &mut task, &tracer)?;
     println!(
         "done: val acc {:.4}, params hash {:016x}, sent {} bits, {} level updates",
         report.final_eval.accuracy, report.params_hash, report.sent_bits, report.level_updates

@@ -34,7 +34,10 @@ impl Table {
             let escaped: Vec<String> = r
                 .iter()
                 .map(|c| {
-                    if c.contains(',') || c.contains('"') {
+                    // RFC 4180: quote fields containing separators,
+                    // quotes, or line breaks (LF *and* CR — a bare CR
+                    // also corrupts the record framing).
+                    if c.contains(',') || c.contains('"') || c.contains('\n') || c.contains('\r') {
                         format!("\"{}\"", c.replace('"', "\"\""))
                     } else {
                         c.clone()
@@ -155,6 +158,22 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.contains("\"x,y\""));
         assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn csv_escapes_embedded_line_breaks() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["multi\nline".into(), "carriage\rreturn".into()]);
+        t.row(vec!["crlf\r\nboth".into(), "plain".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"multi\nline\""));
+        assert!(csv.contains("\"carriage\rreturn\""));
+        assert!(csv.contains("\"crlf\r\nboth\""));
+        assert!(csv.contains(",plain\n"));
+        // Quoted line breaks leave exactly header + 2 records once the
+        // quoted segments are accounted for: the file still ends in one
+        // trailing newline per record.
+        assert_eq!(csv.matches("\"multi").count(), 1);
     }
 
     #[test]

@@ -209,7 +209,7 @@ mod tests {
     #[test]
     fn loads_manifest() {
         if !have_artifacts() {
-            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            crate::trace::warn("artifacts", "skipping: no artifacts (run `make artifacts`)");
             return;
         }
         let m = Manifest::load_default().unwrap();

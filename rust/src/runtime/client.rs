@@ -55,7 +55,7 @@ mod tests {
     fn compiles_every_artifact() {
         let dir = Manifest::default_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: no artifacts");
+            crate::trace::warn("artifacts", "skipping: no artifacts");
             return;
         }
         let m = Manifest::load(&dir).unwrap();

@@ -244,7 +244,7 @@ mod tests {
     fn setup() -> Option<(Runtime, Manifest)> {
         let dir = Manifest::default_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: no artifacts");
+            crate::trace::warn("artifacts", "skipping: no artifacts");
             return None;
         }
         Some((Runtime::cpu().unwrap(), Manifest::load(&dir).unwrap()))

@@ -20,12 +20,15 @@
 //! (DESIGN.md §8).
 
 use crate::exchange::{
-    make_backend, BitsPolicy, ExchangeBackend, ExchangeConfig, ParallelMode, TopologySpec,
+    make_backend, BitsPolicy, CodecPhase, ExchangeBackend, ExchangeConfig, ParallelMode,
+    TopologySpec,
 };
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
 use crate::quant::{Codec, Method, QuantizeImpl, Quantizer};
 use crate::sim::network::NetworkModel;
+use crate::trace::{Level, Tracer};
+use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -138,6 +141,9 @@ pub struct TrainRecord {
     pub comm_time: f64,
     /// Wall time spent inside quantize+encode+decode (the codec hot path).
     pub codec_seconds: f64,
+    /// Per-phase split of `codec_seconds` (quantize vs encode vs decode;
+    /// per-lane sums, so totals can exceed wall time under `--parallel`).
+    pub codec_phase: CodecPhase,
     /// Number of level updates performed.
     pub level_updates: usize,
     /// FNV-1a over the final parameter bits (parity fingerprint shared
@@ -152,12 +158,24 @@ pub struct TrainRecord {
 pub struct Cluster {
     cfg: ClusterConfig,
     engine: Box<dyn ExchangeBackend>,
+    tracer: Tracer,
 }
 
 impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
         let engine = make_backend(cfg.exchange(), cfg.topology);
-        Cluster { cfg, engine }
+        Cluster {
+            cfg,
+            engine,
+            tracer: Tracer::disabled(),
+        }
+    }
+
+    /// Attach a tracer; the exchange backend inherits it, so per-step
+    /// phase/hop/width events flow to the same sink as run lifecycle.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.engine.core_mut().set_tracer(tracer.clone());
+        self.tracer = tracer;
     }
 
     pub fn quantizer(&self) -> Option<&Quantizer> {
@@ -194,9 +212,22 @@ impl Cluster {
             comm_bits: 0,
             comm_time: 0.0,
             codec_seconds: 0.0,
+            codec_phase: CodecPhase::default(),
             level_updates: 0,
             params_hash: 0,
         };
+
+        self.tracer.event(Level::Info, "run_start", |o| {
+            o.insert("runtime", Json::Str("sim".into()));
+            o.insert("method", Json::Str(self.cfg.method.name().into()));
+            o.insert("topology", Json::Str(self.cfg.topology.name()));
+            o.insert("policy", Json::Str(self.cfg.bits.name()));
+            o.insert("codec", Json::Str(self.cfg.codec.name().into()));
+            o.insert("workers", Json::Num(self.cfg.workers as f64));
+            o.insert("bucket", Json::Num(self.cfg.bucket as f64));
+            o.insert("seed", Json::Num(self.cfg.seed as f64));
+            o.insert("parallel", Json::Str(self.cfg.parallel.name().into()));
+        });
 
         for step in 0..self.cfg.iters {
             // 1. Local gradients.
@@ -244,7 +275,12 @@ impl Cluster {
         rec.comm_bits = self.engine.meter().total_bits;
         rec.comm_time = self.engine.meter().total_time;
         rec.codec_seconds = self.engine.codec_seconds();
+        rec.codec_phase = self.engine.codec_phase();
         rec.params_hash = crate::util::hash_params(&params);
+        self.tracer.event(Level::Info, "run_end", |o| {
+            o.insert("steps", Json::Num(rec.steps.len() as f64));
+            o.insert("total_bits", Json::Num(rec.comm_bits as f64));
+        });
         rec
     }
 

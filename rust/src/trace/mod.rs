@@ -1,0 +1,345 @@
+//! Structured run telemetry: a zero-dependency tracing subsystem shared
+//! by the simulated cluster, the exchange backends, and the TCP
+//! coordinator (`--trace <path>[:level]`).
+//!
+//! # Design
+//!
+//! A [`Tracer`] is a cheap handle (one `Option<Arc<..>>`): cloning it
+//! costs a refcount, and a disabled tracer costs one branch per call
+//! site — no event object is ever built unless the event's level is
+//! enabled, which is what keeps the codec hot loop at zero overhead when
+//! tracing is off (the ISSUE 7 `< 2%` budget on `BENCH_hotloop.json`).
+//!
+//! Events are typed JSON objects serialized one per line (JSONL) through
+//! [`crate::util::json::Json`], whose `Display` is deterministic (sorted
+//! keys, canonical numbers). Every event carries:
+//!
+//! * `e` — the event type (see [`summary::EVENT_TYPES`] for the schema),
+//! * `seq` — a per-sink monotone sequence number.
+//!
+//! # Determinism contract
+//!
+//! All emission happens on the thread that owns the schedule — the
+//! [`crate::exchange::BackendCore`] sequences events from parallel lanes
+//! in schedule order (after `fan_out` returns results at schedule
+//! indices), never in thread-completion order. Wall-clock measurements
+//! are confined to fields whose key starts with `wall_`; with those
+//! fields masked ([`summary::mask_wall`]), a `fixed:B` run's event
+//! stream is bit-identical across `--parallel on|off`
+//! (`rust/tests/trace_determinism.rs`). Modeled α-β times (hop seconds,
+//! wire phase) are deterministic and stay unmasked under `seconds`.
+//!
+//! # Warnings
+//!
+//! Degradations that used to be stderr-only (`--quantize-impl pallas`
+//! downgrades, artifact-skip notices) route through [`warn`], which
+//! still prints to stderr *and* forwards a `warning` event to the
+//! process-global tracer installed by [`install_global`] — so they are
+//! machine-visible in the trace, not just console noise.
+#![warn(missing_docs)]
+
+pub mod summary;
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::{Arc, Mutex};
+
+/// Event verbosity. `Warn` events are always emitted by an enabled
+/// tracer; `Info` adds per-step decisions and lifecycle; `Debug` adds
+/// per-phase spans, per-hop records, and per-frame wire events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Degradations and anomalies only.
+    Warn,
+    /// Decisions + lifecycle (bit decisions, step totals, adapt, run
+    /// start/end).
+    Info,
+    /// Full detail (phase spans, hops, wire frames). The default for
+    /// `--trace <path>` without an explicit level.
+    Debug,
+}
+
+impl Level {
+    /// Parse a level name (`warn|info|debug`, case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// A parsed `--trace <path>[:level]` CLI value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// Destination JSONL file.
+    pub path: String,
+    /// Verbosity ceiling (default [`Level::Debug`]).
+    pub level: Level,
+}
+
+impl TraceSpec {
+    /// Parse `<path>[:level]`. A trailing `:warn|:info|:debug` names the
+    /// level; any other `:suffix` is part of the path.
+    pub fn parse(s: &str) -> Result<TraceSpec> {
+        if let Some((path, suffix)) = s.rsplit_once(':') {
+            if let Some(level) = Level::parse(suffix) {
+                if path.is_empty() {
+                    bail!("--trace {s:?}: empty path before :{suffix}");
+                }
+                return Ok(TraceSpec {
+                    path: path.to_string(),
+                    level,
+                });
+            }
+        }
+        if s.is_empty() {
+            bail!("--trace needs a file path (<path>[:warn|info|debug])");
+        }
+        Ok(TraceSpec {
+            path: s.to_string(),
+            level: Level::Debug,
+        })
+    }
+
+    /// Open the spec's file sink.
+    pub fn tracer(&self) -> Result<Tracer> {
+        Tracer::to_file(&self.path, self.level)
+    }
+}
+
+/// Shared in-memory JSONL buffer (the test sink): lock and read the
+/// accumulated lines.
+pub type TraceBuffer = Arc<Mutex<String>>;
+
+enum Sink {
+    File(BufWriter<File>),
+    Memory(TraceBuffer),
+}
+
+struct SinkState {
+    seq: u64,
+    out: Sink,
+}
+
+struct Inner {
+    level: Level,
+    sink: Mutex<SinkState>,
+}
+
+/// A cheap, cloneable telemetry handle. Disabled tracers ([`Tracer::disabled`])
+/// are a no-op at every call site; enabled tracers serialize typed events
+/// as deterministic JSONL.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            None => write!(f, "Tracer(disabled)"),
+            Some(i) => write!(f, "Tracer({})", i.level.name()),
+        }
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::disabled()
+    }
+}
+
+impl Tracer {
+    /// The no-op tracer: every call site reduces to one branch.
+    pub fn disabled() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// Trace to a JSONL file, creating (truncating) it.
+    pub fn to_file(path: &str, level: Level) -> Result<Tracer> {
+        let f = File::create(path).with_context(|| format!("creating trace file {path:?}"))?;
+        Ok(Tracer {
+            inner: Some(Arc::new(Inner {
+                level,
+                sink: Mutex::new(SinkState {
+                    seq: 0,
+                    out: Sink::File(BufWriter::new(f)),
+                }),
+            })),
+        })
+    }
+
+    /// Trace into a shared in-memory buffer (tests): returns the tracer
+    /// and the buffer its JSONL lines accumulate in.
+    pub fn memory(level: Level) -> (Tracer, TraceBuffer) {
+        let buf: TraceBuffer = Arc::new(Mutex::new(String::new()));
+        let tracer = Tracer {
+            inner: Some(Arc::new(Inner {
+                level,
+                sink: Mutex::new(SinkState {
+                    seq: 0,
+                    out: Sink::Memory(buf.clone()),
+                }),
+            })),
+        };
+        (tracer, buf)
+    }
+
+    /// Whether events at `level` would be emitted. Use to skip building
+    /// expensive event payloads.
+    pub fn on(&self, level: Level) -> bool {
+        self.inner.as_ref().is_some_and(|i| level <= i.level)
+    }
+
+    /// Whether the tracer is enabled at all.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Emit one typed event. `fill` runs only when `level` is enabled,
+    /// so a disabled tracer builds nothing. The event object gains `e`
+    /// (the type) and `seq` (per-sink monotone counter).
+    pub fn event<F: FnOnce(&mut Json)>(&self, level: Level, kind: &str, fill: F) {
+        let Some(inner) = &self.inner else { return };
+        if level > inner.level {
+            return;
+        }
+        let mut o = Json::obj();
+        fill(&mut o);
+        o.insert("e", Json::Str(kind.to_string()));
+        let mut sink = inner.sink.lock().expect("trace sink poisoned");
+        o.insert("seq", Json::Num(sink.seq as f64));
+        sink.seq += 1;
+        let line = format!("{o}\n");
+        match &mut sink.out {
+            Sink::File(w) => {
+                // Per-line flush: traces must survive abrupt exits and be
+                // readable while the run is still going; trace-on runs
+                // accept the syscall.
+                let _ = w.write_all(line.as_bytes());
+                let _ = w.flush();
+            }
+            Sink::Memory(buf) => buf.lock().expect("trace buffer poisoned").push_str(&line),
+        }
+    }
+
+    /// Emit a `warning` event (always on for an enabled tracer).
+    pub fn warn_event(&self, component: &str, message: &str) {
+        self.event(Level::Warn, "warning", |o| {
+            o.insert("component", Json::Str(component.to_string()));
+            o.insert("message", Json::Str(message.to_string()));
+        });
+    }
+}
+
+static GLOBAL: Mutex<Option<Tracer>> = Mutex::new(None);
+
+/// Install the process-global tracer [`warn`] forwards to (the CLI
+/// installs the `--trace` tracer here so library-level degradations are
+/// machine-visible).
+pub fn install_global(t: Tracer) {
+    *GLOBAL.lock().expect("global tracer poisoned") = Some(t);
+}
+
+/// Report a degradation: prints to stderr (the historical behavior) and
+/// forwards a `warning` event to the global tracer when one is
+/// installed. Components are short slugs (`pallas`, `artifacts`, …).
+pub fn warn(component: &str, message: &str) {
+    eprintln!("[aqsgd] {component}: {message}");
+    if let Some(t) = GLOBAL.lock().expect("global tracer poisoned").as_ref() {
+        t.warn_event(component, message);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("Debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), None);
+        assert!(Level::Warn < Level::Info && Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn trace_spec_parses_path_and_level() {
+        let s = TraceSpec::parse("run.jsonl").unwrap();
+        assert_eq!(s.path, "run.jsonl");
+        assert_eq!(s.level, Level::Debug);
+        let s = TraceSpec::parse("/tmp/t.jsonl:info").unwrap();
+        assert_eq!(s.path, "/tmp/t.jsonl");
+        assert_eq!(s.level, Level::Info);
+        // A non-level suffix is part of the path.
+        let s = TraceSpec::parse("dir:with:colons").unwrap();
+        assert_eq!(s.path, "dir:with:colons");
+        assert!(TraceSpec::parse("").is_err());
+        assert!(TraceSpec::parse(":debug").is_err());
+    }
+
+    #[test]
+    fn disabled_tracer_never_builds_events() {
+        let t = Tracer::disabled();
+        assert!(!t.on(Level::Warn));
+        let mut built = false;
+        t.event(Level::Warn, "warning", |_| built = true);
+        assert!(!built);
+    }
+
+    #[test]
+    fn memory_sink_emits_deterministic_jsonl_with_seq() {
+        let (t, buf) = Tracer::memory(Level::Info);
+        assert!(t.on(Level::Info) && !t.on(Level::Debug));
+        t.event(Level::Info, "step", |o| {
+            o.insert("step", Json::Num(0.0));
+            o.insert("bits", Json::Num(120.0));
+            o.insert("width", Json::Num(3.0));
+        });
+        t.event(Level::Debug, "hop", |o| {
+            o.insert("step", Json::Num(0.0));
+        });
+        t.event(Level::Info, "step", |o| {
+            o.insert("step", Json::Num(1.0));
+            o.insert("bits", Json::Num(130.0));
+            o.insert("width", Json::Num(3.0));
+        });
+        let text = buf.lock().unwrap().clone();
+        let lines: Vec<&str> = text.lines().collect();
+        // The debug hop was filtered; seq is monotone over emitted events.
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            r#"{"bits":120,"e":"step","seq":0,"step":0,"width":3}"#
+        );
+        assert!(lines[1].contains(r#""seq":1"#));
+    }
+
+    #[test]
+    fn global_warn_routes_to_installed_tracer() {
+        let (t, buf) = Tracer::memory(Level::Warn);
+        install_global(t);
+        warn("pallas", "downgrade test message");
+        let text = buf.lock().unwrap().clone();
+        assert!(text.contains(r#""e":"warning""#), "{text}");
+        assert!(text.contains("downgrade test message"));
+        assert!(text.contains(r#""component":"pallas""#));
+        // Leave the slot empty for other tests.
+        *GLOBAL.lock().unwrap() = None;
+    }
+}

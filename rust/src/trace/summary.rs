@@ -1,0 +1,568 @@
+//! Trace post-processing: schema validation, wall-clock masking, and the
+//! `trace-summarize` fold from a JSONL event stream into per-phase /
+//! per-hop / per-width tables plus a machine-readable summary JSON.
+
+use crate::metrics::Table;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Required-field kinds for schema validation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Field {
+    /// Must be a JSON string.
+    Str,
+    /// Must be a JSON number.
+    Num,
+    /// Must be a JSON boolean.
+    Bool,
+    /// A number under this key *or* under `wall_` + this key (used for
+    /// span durations that are wall-clock in some runtimes and modeled
+    /// in others).
+    NumOrWall,
+}
+
+/// One event type's schema: its `e` tag and required typed fields.
+/// Extra fields are always allowed (they carry runtime-specific
+/// context); missing or mistyped required fields fail validation.
+pub struct EventSchema {
+    /// Value of the event's `e` field.
+    pub kind: &'static str,
+    /// Required fields and their kinds.
+    pub required: &'static [(&'static str, Field)],
+}
+
+/// Registry of every event type the tracer emits. `validate_event`
+/// rejects unknown `e` tags, so this list *is* the schema contract the
+/// determinism tests pin.
+pub const EVENT_TYPES: &[EventSchema] = &[
+    EventSchema {
+        kind: "run_start",
+        required: &[("runtime", Field::Str)],
+    },
+    EventSchema {
+        kind: "bit_decision",
+        required: &[("step", Field::Num), ("width", Field::Num)],
+    },
+    EventSchema {
+        kind: "phase",
+        required: &[
+            ("step", Field::Num),
+            ("phase", Field::Str),
+            ("seconds", Field::NumOrWall),
+        ],
+    },
+    EventSchema {
+        kind: "hop",
+        required: &[
+            ("step", Field::Num),
+            ("index", Field::Num),
+            ("label", Field::Str),
+            ("bits", Field::Num),
+            ("seconds", Field::Num),
+        ],
+    },
+    EventSchema {
+        kind: "step",
+        required: &[
+            ("step", Field::Num),
+            ("bits", Field::Num),
+            ("width", Field::Num),
+        ],
+    },
+    EventSchema {
+        kind: "adapt",
+        required: &[("updated", Field::Bool)],
+    },
+    EventSchema {
+        kind: "warning",
+        required: &[("component", Field::Str), ("message", Field::Str)],
+    },
+    EventSchema {
+        kind: "connect",
+        required: &[("worker", Field::Num), ("world", Field::Num)],
+    },
+    EventSchema {
+        kind: "frame_send",
+        required: &[
+            ("step", Field::Num),
+            ("kind", Field::Str),
+            ("bytes", Field::Num),
+            ("width", Field::Num),
+        ],
+    },
+    EventSchema {
+        kind: "frame_recv",
+        required: &[
+            ("step", Field::Num),
+            ("kind", Field::Str),
+            ("frames", Field::Num),
+            ("bytes", Field::Num),
+        ],
+    },
+    EventSchema {
+        kind: "relay",
+        required: &[
+            ("step", Field::Num),
+            ("frames", Field::Num),
+            ("bits", Field::Num),
+        ],
+    },
+    EventSchema {
+        kind: "run_end",
+        required: &[("steps", Field::Num), ("total_bits", Field::Num)],
+    },
+];
+
+/// The phase names a `phase` event may carry.
+pub const PHASES: &[&str] = &["quantize", "encode", "wire", "decode", "aggregate", "adapt"];
+
+/// Validate one parsed event against [`EVENT_TYPES`]: must be an object
+/// with a known `e` tag, a numeric `seq`, and every required field
+/// present with the right type.
+pub fn validate_event(ev: &Json) -> Result<(), String> {
+    let obj = ev
+        .as_obj()
+        .ok_or_else(|| format!("event is not an object: {ev}"))?;
+    let kind = ev
+        .get("e")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("event lacks string \"e\": {ev}"))?;
+    if ev.get("seq").and_then(|v| v.as_f64()).is_none() {
+        return Err(format!("event lacks numeric \"seq\": {ev}"));
+    }
+    let schema = EVENT_TYPES
+        .iter()
+        .find(|s| s.kind == kind)
+        .ok_or_else(|| format!("unknown event type {kind:?}: {ev}"))?;
+    for (name, field) in schema.required {
+        let ok = match field {
+            Field::Str => matches!(obj.get(*name), Some(Json::Str(_))),
+            Field::Num => matches!(obj.get(*name), Some(Json::Num(_))),
+            Field::Bool => matches!(obj.get(*name), Some(Json::Bool(_))),
+            Field::NumOrWall => {
+                matches!(obj.get(*name), Some(Json::Num(_)))
+                    || matches!(obj.get(format!("wall_{name}").as_str()), Some(Json::Num(_)))
+            }
+        };
+        if !ok {
+            return Err(format!("{kind}: missing/mistyped field {name:?}: {ev}"));
+        }
+    }
+    if kind == "phase" {
+        let p = obj.get("phase").and_then(|v| v.as_str()).unwrap_or("");
+        if !PHASES.contains(&p) {
+            return Err(format!("phase event with unknown phase {p:?}: {ev}"));
+        }
+    }
+    Ok(())
+}
+
+/// Drop every field whose key starts with `wall_` (the only fields
+/// allowed to carry wall-clock measurements). What remains is the
+/// deterministic projection the parallel-mode bit-identity tests
+/// compare.
+pub fn mask_wall(ev: &mut Json) {
+    if let Json::Obj(m) = ev {
+        m.retain(|k, _| !k.starts_with("wall_"));
+    }
+}
+
+/// Parse a JSONL trace, validate every event, mask wall-clock fields,
+/// and return the canonical re-serialized lines. This is the projection
+/// under which traced runs must be bit-identical across `--parallel
+/// on|off` (DESIGN.md §Observability).
+pub fn masked_lines(text: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut ev = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        validate_event(&ev).map_err(|e| format!("line {}: {e}", i + 1))?;
+        mask_wall(&mut ev);
+        out.push(ev.to_string());
+    }
+    Ok(out)
+}
+
+/// Per-step totals reconstructed from `step` events.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepRow {
+    /// 1-based run index (increments at each `run_start`; 0 before any).
+    pub run: usize,
+    /// Step number within the run.
+    pub step: usize,
+    /// Total bits the step put on the wire.
+    pub bits: u64,
+    /// Quantization width used (32 = FP32).
+    pub width: u32,
+}
+
+/// Accumulated totals for one phase name.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseTotal {
+    /// Number of `phase` events.
+    pub events: usize,
+    /// Summed span seconds (modeled `seconds` or measured
+    /// `wall_seconds`, whichever each event carries).
+    pub seconds: f64,
+}
+
+/// Accumulated totals for one hop label.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HopTotal {
+    /// Number of `hop` events.
+    pub events: usize,
+    /// Summed hop bits.
+    pub bits: u64,
+    /// Summed modeled α-β seconds.
+    pub seconds: f64,
+}
+
+/// Accumulated totals for one quantization width.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WidthTotal {
+    /// Steps that ran at this width.
+    pub steps: usize,
+    /// Total bits those steps sent.
+    pub bits: u64,
+}
+
+/// The fold of a whole trace file: everything `trace-summarize` prints.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    /// Total validated events.
+    pub events: usize,
+    /// Event count per `e` tag.
+    pub by_type: BTreeMap<String, usize>,
+    /// Per-step totals, in stream order.
+    pub steps: Vec<StepRow>,
+    /// Totals per phase name.
+    pub phase_totals: BTreeMap<String, PhaseTotal>,
+    /// Totals per hop label.
+    pub hop_totals: BTreeMap<String, HopTotal>,
+    /// Totals per quantization width.
+    pub width_totals: BTreeMap<u32, WidthTotal>,
+    /// `(component, message)` of every warning event.
+    pub warnings: Vec<(String, String)>,
+    /// Steps whose `step.bits` ≠ Σ hop bits (should always be empty:
+    /// `BackendCore::finish_step` debug-asserts the same invariant).
+    pub hop_bits_mismatches: Vec<String>,
+}
+
+impl TraceSummary {
+    /// Fold a JSONL trace (validating every line) into totals.
+    pub fn from_jsonl(text: &str) -> Result<TraceSummary, String> {
+        let mut s = TraceSummary::default();
+        let mut run = 0usize;
+        // Hop bits accumulated per step, awaiting that step's `step`
+        // event (hops are always emitted before their step total).
+        let mut pending_hops: BTreeMap<usize, u64> = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let ev = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+            validate_event(&ev).map_err(|e| format!("line {}: {e}", i + 1))?;
+            let kind = ev.req("e").as_str().unwrap().to_string();
+            s.events += 1;
+            *s.by_type.entry(kind.clone()).or_insert(0) += 1;
+            let num = |k: &str| ev.get(k).and_then(|v| v.as_f64());
+            match kind.as_str() {
+                "run_start" => {
+                    run += 1;
+                    pending_hops.clear();
+                }
+                "phase" => {
+                    let name = ev.req("phase").as_str().unwrap().to_string();
+                    let secs = num("seconds").or_else(|| num("wall_seconds")).unwrap_or(0.0);
+                    let t = s.phase_totals.entry(name).or_default();
+                    t.events += 1;
+                    t.seconds += secs;
+                }
+                "hop" => {
+                    let label = ev.req("label").as_str().unwrap().to_string();
+                    let bits = num("bits").unwrap_or(0.0) as u64;
+                    let t = s.hop_totals.entry(label).or_default();
+                    t.events += 1;
+                    t.bits += bits;
+                    t.seconds += num("seconds").unwrap_or(0.0);
+                    let step = num("step").unwrap_or(0.0) as usize;
+                    *pending_hops.entry(step).or_insert(0) += bits;
+                }
+                "step" => {
+                    let row = StepRow {
+                        run,
+                        step: num("step").unwrap_or(0.0) as usize,
+                        bits: num("bits").unwrap_or(0.0) as u64,
+                        width: num("width").unwrap_or(0.0) as u32,
+                    };
+                    if let Some(hop_bits) = pending_hops.remove(&row.step) {
+                        if hop_bits != row.bits {
+                            s.hop_bits_mismatches.push(format!(
+                                "run {} step {}: step.bits={} but Σ hop bits={}",
+                                row.run, row.step, row.bits, hop_bits
+                            ));
+                        }
+                    }
+                    let w = s.width_totals.entry(row.width).or_default();
+                    w.steps += 1;
+                    w.bits += row.bits;
+                    s.steps.push(row);
+                }
+                "warning" => s.warnings.push((
+                    ev.req("component").as_str().unwrap().to_string(),
+                    ev.req("message").as_str().unwrap().to_string(),
+                )),
+                _ => {}
+            }
+        }
+        Ok(s)
+    }
+
+    /// Render the summary as `metrics::Table`s (what `trace-summarize`
+    /// prints as markdown).
+    pub fn tables(&self) -> Vec<Table> {
+        let mut out = Vec::new();
+
+        let mut t = Table::new("Events by type", &["Event", "Count"]);
+        for (k, n) in &self.by_type {
+            t.row(vec![k.clone(), n.to_string()]);
+        }
+        out.push(t);
+
+        if !self.phase_totals.is_empty() {
+            let mut t = Table::new("Per-phase time", &["Phase", "Spans", "Seconds"]);
+            for (k, p) in &self.phase_totals {
+                t.row(vec![
+                    k.clone(),
+                    p.events.to_string(),
+                    format!("{:.6}", p.seconds),
+                ]);
+            }
+            out.push(t);
+        }
+
+        if !self.hop_totals.is_empty() {
+            let mut t = Table::new(
+                "Per-hop traffic",
+                &["Hop", "Count", "Bits", "Modeled seconds"],
+            );
+            for (k, h) in &self.hop_totals {
+                t.row(vec![
+                    k.clone(),
+                    h.events.to_string(),
+                    h.bits.to_string(),
+                    format!("{:.6}", h.seconds),
+                ]);
+            }
+            out.push(t);
+        }
+
+        if !self.width_totals.is_empty() {
+            let mut t = Table::new("Per-width usage", &["Width (bits)", "Steps", "Bits sent"]);
+            for (w, u) in &self.width_totals {
+                t.row(vec![w.to_string(), u.steps.to_string(), u.bits.to_string()]);
+            }
+            out.push(t);
+        }
+
+        if !self.warnings.is_empty() {
+            let mut t = Table::new("Warnings", &["Component", "Message"]);
+            for (c, m) in &self.warnings {
+                t.row(vec![c.clone(), m.clone()]);
+            }
+            out.push(t);
+        }
+
+        out
+    }
+
+    /// Machine-readable summary document (`--json` output of
+    /// `trace-summarize`).
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.insert("schema", Json::Str("aqsgd-trace-summary/v1".into()));
+        doc.insert("events", Json::Num(self.events as f64));
+
+        let mut by_type = Json::obj();
+        for (k, n) in &self.by_type {
+            by_type.insert(k, Json::Num(*n as f64));
+        }
+        doc.insert("by_type", by_type);
+
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.insert("run", Json::Num(r.run as f64));
+                o.insert("step", Json::Num(r.step as f64));
+                o.insert("bits", Json::Num(r.bits as f64));
+                o.insert("width", Json::Num(r.width as f64));
+                o
+            })
+            .collect();
+        doc.insert("steps", Json::Arr(steps));
+
+        let mut phases = Json::obj();
+        for (k, p) in &self.phase_totals {
+            let mut o = Json::obj();
+            o.insert("spans", Json::Num(p.events as f64));
+            o.insert("seconds", Json::Num(p.seconds));
+            phases.insert(k, o);
+        }
+        doc.insert("phases", phases);
+
+        let mut hops = Json::obj();
+        for (k, h) in &self.hop_totals {
+            let mut o = Json::obj();
+            o.insert("count", Json::Num(h.events as f64));
+            o.insert("bits", Json::Num(h.bits as f64));
+            o.insert("seconds", Json::Num(h.seconds));
+            hops.insert(k, o);
+        }
+        doc.insert("hops", hops);
+
+        let mut widths = Json::obj();
+        for (w, u) in &self.width_totals {
+            let mut o = Json::obj();
+            o.insert("steps", Json::Num(u.steps as f64));
+            o.insert("bits", Json::Num(u.bits as f64));
+            widths.insert(&w.to_string(), o);
+        }
+        doc.insert("widths", widths);
+
+        let warnings: Vec<Json> = self
+            .warnings
+            .iter()
+            .map(|(c, m)| {
+                let mut o = Json::obj();
+                o.insert("component", Json::Str(c.clone()));
+                o.insert("message", Json::Str(m.clone()));
+                o
+            })
+            .collect();
+        doc.insert("warnings", Json::Arr(warnings));
+
+        doc.insert(
+            "hop_bits_mismatches",
+            Json::Arr(
+                self.hop_bits_mismatches
+                    .iter()
+                    .map(|m| Json::Str(m.clone()))
+                    .collect(),
+            ),
+        );
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn validate_accepts_wellformed_and_rejects_unknown() {
+        let ok = line(r#"{"e":"step","seq":4,"step":0,"bits":120,"width":3}"#);
+        assert!(validate_event(&ok).is_ok());
+        let unknown = line(r#"{"e":"mystery","seq":0}"#);
+        assert!(validate_event(&unknown).is_err());
+        let missing = line(r#"{"e":"step","seq":4,"step":0}"#);
+        assert!(validate_event(&missing).is_err());
+        let no_seq = line(r#"{"e":"warning","component":"x","message":"y"}"#);
+        assert!(validate_event(&no_seq).is_err());
+        let bad_phase = line(r#"{"e":"phase","seq":0,"step":0,"phase":"nope","seconds":1}"#);
+        assert!(validate_event(&bad_phase).is_err());
+    }
+
+    #[test]
+    fn phase_accepts_wall_or_modeled_seconds() {
+        let wall = line(r#"{"e":"phase","seq":0,"step":0,"phase":"encode","wall_seconds":0.1}"#);
+        assert!(validate_event(&wall).is_ok());
+        let modeled = line(r#"{"e":"phase","seq":0,"step":0,"phase":"wire","seconds":0.2}"#);
+        assert!(validate_event(&modeled).is_ok());
+        let neither = line(r#"{"e":"phase","seq":0,"step":0,"phase":"wire"}"#);
+        assert!(validate_event(&neither).is_err());
+    }
+
+    #[test]
+    fn mask_wall_strips_only_wall_fields() {
+        let mut ev =
+            line(r#"{"e":"phase","seq":1,"step":0,"phase":"encode","wall_seconds":0.5,"x":2}"#);
+        mask_wall(&mut ev);
+        assert_eq!(
+            ev.to_string(),
+            r#"{"e":"phase","phase":"encode","seq":1,"step":0,"x":2}"#
+        );
+    }
+
+    #[test]
+    fn summarize_folds_steps_hops_phases() {
+        let trace = r#"{"e":"run_start","seq":0,"runtime":"sim"}
+{"e":"bit_decision","seq":1,"step":0,"width":3}
+{"e":"phase","seq":2,"step":0,"phase":"quantize","wall_seconds":0.01}
+{"e":"hop","seq":3,"step":0,"index":0,"label":"all-to-all","bits":100,"seconds":0.5}
+{"e":"step","seq":4,"step":0,"bits":100,"width":3}
+{"e":"hop","seq":5,"step":1,"index":0,"label":"all-to-all","bits":140,"seconds":0.6}
+{"e":"step","seq":6,"step":1,"bits":140,"width":4}
+{"e":"warning","seq":7,"component":"pallas","message":"downgraded"}
+{"e":"run_end","seq":8,"steps":2,"total_bits":240}
+"#;
+        let s = TraceSummary::from_jsonl(trace).unwrap();
+        assert_eq!(s.events, 9);
+        assert_eq!(s.by_type["step"], 2);
+        assert_eq!(
+            s.steps,
+            vec![
+                StepRow {
+                    run: 1,
+                    step: 0,
+                    bits: 100,
+                    width: 3
+                },
+                StepRow {
+                    run: 1,
+                    step: 1,
+                    bits: 140,
+                    width: 4
+                },
+            ]
+        );
+        assert!(s.hop_bits_mismatches.is_empty());
+        assert_eq!(s.hop_totals["all-to-all"].bits, 240);
+        assert_eq!(s.width_totals[&3].steps, 1);
+        assert_eq!(s.width_totals[&4].bits, 140);
+        assert_eq!(s.warnings.len(), 1);
+        assert!((s.phase_totals["quantize"].seconds - 0.01).abs() < 1e-12);
+        let tables = s.tables();
+        assert!(tables.iter().any(|t| t.title == "Per-width usage"));
+        let doc = s.to_json().to_string();
+        assert!(doc.contains(r#""schema":"aqsgd-trace-summary/v1""#));
+    }
+
+    #[test]
+    fn summarize_flags_hop_bit_mismatch() {
+        let trace = r#"{"e":"hop","seq":0,"step":0,"index":0,"label":"up","bits":90,"seconds":0.5}
+{"e":"step","seq":1,"step":0,"bits":100,"width":3}
+"#;
+        let s = TraceSummary::from_jsonl(trace).unwrap();
+        assert_eq!(s.hop_bits_mismatches.len(), 1);
+        assert!(s.hop_bits_mismatches[0].contains("Σ hop bits=90"));
+    }
+
+    #[test]
+    fn masked_lines_roundtrip() {
+        let trace = "{\"e\":\"step\",\"seq\":0,\"step\":0,\"bits\":10,\"width\":2}\n\
+                     {\"e\":\"adapt\",\"seq\":1,\"step\":0,\"updated\":true,\"wall_seconds\":0.3}\n";
+        let lines = masked_lines(trace).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert!(!lines[1].contains("wall_seconds"));
+        assert!(masked_lines("{\"e\":\"zzz\",\"seq\":0}\n").is_err());
+        assert!(masked_lines("not json\n").is_err());
+    }
+}

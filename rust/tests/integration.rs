@@ -18,7 +18,7 @@ fn artifacts_ready() -> bool {
 #[test]
 fn quantized_training_over_hlo_model() {
     if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts`");
+        aqsgd::trace::warn("artifacts", "skipping: run `make artifacts`");
         return;
     }
     let rt = Runtime::cpu().unwrap();

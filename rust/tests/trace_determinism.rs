@@ -1,0 +1,210 @@
+//! Trace-determinism contract (DESIGN.md §Observability): a traced run's
+//! masked event sequence is bit-identical across `--parallel on|off`,
+//! sim and TCP runs agree on the (event, step, width) projection for
+//! `fixed:3`, every event type the tracers emit validates against the
+//! schema registry (and the registry has no dead entries), and the
+//! `trace-summarize` fold reconstructs per-step bits exactly.
+
+use aqsgd::coordinator::leader::run_leader_topo_traced;
+use aqsgd::coordinator::{run_worker_traced, WorkerConfig};
+use aqsgd::data::Blobs;
+use aqsgd::exchange::{BitsPolicy, ParallelMode, TopologySpec};
+use aqsgd::model::{Mlp, MlpTask};
+use aqsgd::opt::{LrSchedule, UpdateSchedule};
+use aqsgd::quant::{Codec, Method, QuantizeImpl};
+use aqsgd::sim::{Cluster, ClusterConfig, NetworkModel, TrainRecord};
+use aqsgd::trace::summary::{masked_lines, validate_event, TraceSummary, EVENT_TYPES};
+use aqsgd::trace::{Level, Tracer};
+use aqsgd::util::json::Json;
+use std::collections::BTreeSet;
+use std::net::TcpListener;
+
+const ITERS: usize = 24;
+const WORLD: usize = 4;
+
+fn sim_cfg(topology: TopologySpec, parallel: ParallelMode) -> ClusterConfig {
+    ClusterConfig {
+        method: Method::Alq,
+        workers: WORLD,
+        bits: BitsPolicy::Fixed(3),
+        bucket: 64,
+        iters: ITERS,
+        lr: LrSchedule::paper_default(0.1, ITERS),
+        updates: UpdateSchedule::at(vec![3, 20], 50, 20),
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        seed: 42,
+        eval_every: 0,
+        variance_every: 0,
+        network: NetworkModel::paper_testbed(),
+        parallel,
+        topology,
+        codec: Codec::Huffman,
+        quantize_impl: QuantizeImpl::default(),
+    }
+}
+
+fn sim_task() -> MlpTask {
+    let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, 7);
+    MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, WORLD, 7)
+}
+
+/// One traced sim training: the raw JSONL the tracer wrote + the record.
+fn sim_trace(
+    topology: TopologySpec,
+    parallel: ParallelMode,
+    level: Level,
+) -> (String, TrainRecord) {
+    let mut cluster = Cluster::new(sim_cfg(topology, parallel));
+    let (tracer, buf) = Tracer::memory(level);
+    cluster.set_tracer(tracer);
+    let rec = cluster.train(&mut sim_task());
+    let text = buf.lock().unwrap().clone();
+    (text, rec)
+}
+
+/// One traced TCP run (flat, fixed:3, same horizon as the sim): worker
+/// 0's JSONL and the leader's JSONL.
+fn tcp_trace(level: Level) -> (String, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (leader_tracer, leader_buf) = Tracer::memory(level);
+    let leader = std::thread::spawn(move || {
+        run_leader_topo_traced(listener, WORLD, ITERS, TopologySpec::Flat, &leader_tracer).unwrap()
+    });
+    let (w0_tracer, w0_buf) = Tracer::memory(level);
+    let mut handles = Vec::new();
+    for w in 0..WORLD {
+        let addr = addr.clone();
+        // Only worker 0 traces: the projection contract is per-replica.
+        let tracer = if w == 0 { w0_tracer.clone() } else { Tracer::disabled() };
+        handles.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                addr,
+                worker: w,
+                world: WORLD,
+                method: Method::Alq,
+                bits: BitsPolicy::Fixed(3),
+                bucket: 64,
+                iters: ITERS,
+                lr: LrSchedule::paper_default(0.1, ITERS),
+                updates: UpdateSchedule::at(vec![3, 20], 50, 20),
+                momentum: 0.9,
+                weight_decay: 1e-4,
+                seed: 42,
+                topology: TopologySpec::Flat,
+                codec: Codec::Huffman,
+                quantize_impl: QuantizeImpl::default(),
+            };
+            run_worker_traced(&cfg, &mut sim_task(), &tracer).unwrap()
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    leader.join().unwrap();
+    let w0 = w0_buf.lock().unwrap().clone();
+    let lead = leader_buf.lock().unwrap().clone();
+    (w0, lead)
+}
+
+/// The deterministic projection sim and TCP runs must share: the
+/// (event, step, width) sequence of `bit_decision` and `step` events.
+fn width_projection(text: &str) -> Vec<(String, usize, u32)> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| {
+            let ev = Json::parse(l).unwrap();
+            let e = ev.get("e").and_then(|v| v.as_str()).unwrap().to_string();
+            if e != "bit_decision" && e != "step" {
+                return None;
+            }
+            let num = |k: &str| ev.get(k).and_then(|v| v.as_f64()).unwrap();
+            Some((e, num("step") as usize, num("width") as u32))
+        })
+        .collect()
+}
+
+/// The tentpole determinism contract: with wall-clock fields masked, the
+/// event sequence is byte-identical across `--parallel on|off` — span
+/// presence is structural and emission happens on the calling thread in
+/// schedule order, so threading must not reorder or reshape the trace.
+#[test]
+fn masked_event_sequence_identical_across_parallel_modes() {
+    for topology in [TopologySpec::Flat, TopologySpec::Tree(2)] {
+        let (on, _) = sim_trace(topology, ParallelMode::Parallel, Level::Debug);
+        let (off, _) = sim_trace(topology, ParallelMode::Serial, Level::Debug);
+        let on = masked_lines(&on).unwrap();
+        let off = masked_lines(&off).unwrap();
+        assert!(!on.is_empty());
+        assert_eq!(
+            on,
+            off,
+            "masked trace diverges across --parallel on|off over {}",
+            topology.name()
+        );
+    }
+}
+
+/// `trace-summarize` must reconstruct per-step totals exactly: every
+/// `step` event's bits equals the sim's `StepStats.bits`, Σ hop bits
+/// matches every step, and the fold's total equals `comm_bits`.
+#[test]
+fn summary_reconstructs_per_step_bits_exactly() {
+    let (text, rec) = sim_trace(TopologySpec::Flat, ParallelMode::Auto, Level::Debug);
+    let s = TraceSummary::from_jsonl(&text).unwrap();
+    assert!(s.hop_bits_mismatches.is_empty(), "{:?}", s.hop_bits_mismatches);
+    assert_eq!(s.steps.len(), rec.steps.len());
+    for (row, stat) in s.steps.iter().zip(&rec.steps) {
+        assert_eq!(row.step, stat.step);
+        assert_eq!(row.bits, stat.bits, "step {} bits diverge", stat.step);
+        assert_eq!(row.width, stat.width);
+    }
+    let total: u64 = s.steps.iter().map(|r| r.bits).sum();
+    assert_eq!(total, rec.comm_bits);
+    // The sim traced hops for every step and attributed codec phases.
+    assert!(s.by_type["hop"] >= ITERS);
+    assert!(s.phase_totals.contains_key("quantize"));
+    assert!(s.phase_totals.contains_key("wire"));
+}
+
+/// Sim and TCP runtimes share the width-decision protocol
+/// (`budget::select_width`) and the step roll-up, so for `fixed:3` a
+/// worker's (event, step, width) projection matches the sim's exactly.
+/// (Bits are excluded: a sim step meters all workers, a TCP worker only
+/// its own frames; quantization RNG streams also differ by design.)
+#[test]
+fn sim_and_tcp_flat_agree_on_width_and_step_projection() {
+    let (sim_text, _) = sim_trace(TopologySpec::Flat, ParallelMode::Auto, Level::Info);
+    let (worker_text, _) = tcp_trace(Level::Info);
+    let sim_proj = width_projection(&sim_text);
+    let tcp_proj = width_projection(&worker_text);
+    assert_eq!(sim_proj.len(), 2 * ITERS, "one bit_decision + one step per step");
+    assert_eq!(
+        sim_proj, tcp_proj,
+        "sim and TCP flat disagree on the (event, step, width) sequence for fixed:3"
+    );
+}
+
+/// Every line of real sim, worker, and leader traces validates against
+/// the schema registry — and together they exercise every registered
+/// event type, so the registry carries no dead entries.
+#[test]
+fn every_event_type_appears_and_validates() {
+    let (sim_text, _) = sim_trace(TopologySpec::Flat, ParallelMode::Auto, Level::Debug);
+    let (worker_text, leader_text) = tcp_trace(Level::Debug);
+    let (warn_tracer, warn_buf) = Tracer::memory(Level::Warn);
+    warn_tracer.warn_event("test", "synthetic degradation notice");
+    let warn_text = warn_buf.lock().unwrap().clone();
+
+    let mut seen = BTreeSet::new();
+    for text in [&sim_text, &worker_text, &leader_text, &warn_text] {
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let ev = Json::parse(line).unwrap();
+            validate_event(&ev).unwrap_or_else(|e| panic!("{e}"));
+            seen.insert(ev.get("e").and_then(|v| v.as_str()).unwrap().to_string());
+        }
+    }
+    let expected: BTreeSet<String> = EVENT_TYPES.iter().map(|s| s.kind.to_string()).collect();
+    assert_eq!(seen, expected, "trace coverage drifted from the schema registry");
+}
