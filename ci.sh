@@ -109,6 +109,30 @@ wait "$leader_pid"
 ./target/release/aqsgd trace-summarize trace_leader.jsonl >/dev/null
 ./target/release/aqsgd trace-summarize trace_worker0.jsonl >/dev/null
 
+step "smoke: elastic membership — kill 1 of 4 workers mid-run over TCP"
+# Every worker gets the same fault plan and acts only on its own
+# entries: worker 3 exits at the top of step 2, the leader detects the
+# EOF, drops it (exactly one member_drop, survivor weights summing to
+# 1), and the tree run completes on the remaining three workers.
+rm -f trace_fault_leader.jsonl
+./target/release/aqsgd leader --bind 127.0.0.1:7720 --world 4 --iters 6 \
+  --topology tree:2 --trace trace_fault_leader.jsonl:info &
+leader_pid=$!
+sleep 1
+worker_pids=()
+for w in 0 1 2 3; do
+  ./target/release/aqsgd worker --addr 127.0.0.1:7720 --worker "$w" --world 4 \
+    --iters 6 --topology tree:2 --faults kill:3@2 &
+  worker_pids+=($!)
+done
+for pid in "${worker_pids[@]}"; do wait "$pid"; done
+wait "$leader_pid"
+drops=$(grep -c '"e":"member_drop"' trace_fault_leader.jsonl || true)
+[ "$drops" = "1" ] || { echo "FAIL: expected exactly one member_drop, got $drops"; exit 1; }
+grep -q '"e":"member_drop".*"weight_sum":1' trace_fault_leader.jsonl \
+  || { echo "FAIL: member_drop event lacks weight_sum 1"; exit 1; }
+./target/release/aqsgd trace-summarize trace_fault_leader.jsonl >/dev/null
+
 step "docs build (cargo doc --no-deps; gate: no missing_docs warnings)"
 doc_out=$(cargo doc --no-deps 2>&1) || { printf '%s\n' "$doc_out"; exit 1; }
 printf '%s\n' "$doc_out"

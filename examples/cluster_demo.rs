@@ -43,6 +43,7 @@ fn main() -> Result<()> {
                 topology: aqsgd::exchange::TopologySpec::Flat,
                 codec: aqsgd::quant::Codec::Huffman,
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+                faults: aqsgd::sim::FaultPlan::default(),
             };
             let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 7);
             let mut task = MlpTask::new(Mlp::new(vec![32, 128, 128, 10]), blobs, 16, world, 7);

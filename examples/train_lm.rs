@@ -62,6 +62,7 @@ fn main() -> Result<()> {
         topology: aqsgd::exchange::TopologySpec::Flat,
         codec: aqsgd::quant::Codec::Huffman,
         quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+        faults: aqsgd::sim::FaultPlan::default(),
     };
 
     println!("\ntraining {steps} steps with ALQ @ 3 bits, bucket 8192 …");

@@ -4,6 +4,7 @@
 
 use crate::exchange::{BitsPolicy, ParallelMode, TopologySpec};
 use crate::quant::{Codec, Method, QuantizeImpl};
+use crate::sim::FaultPlan;
 use crate::trace::TraceSpec;
 use anyhow::{bail, Context, Result};
 
@@ -43,6 +44,9 @@ pub struct RunConfig {
     /// Structured-telemetry sink (`--trace PATH[:warn|info|debug]`);
     /// `None` keeps tracing compiled out of the hot path entirely.
     pub trace: Option<TraceSpec>,
+    /// Deterministic mid-run churn
+    /// (`--faults kill:W@S,delay:W@S:MS,join:W@S` or `none`).
+    pub faults: FaultPlan,
 }
 
 impl Default for RunConfig {
@@ -66,6 +70,7 @@ impl Default for RunConfig {
             codec: Codec::Huffman,
             quantize_impl: QuantizeImpl::default(),
             trace: None,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -134,6 +139,14 @@ impl RunConfig {
                         format!("bad --trace {val:?} (PATH[:warn|info|debug])")
                     })?)
                 }
+                "faults" => {
+                    self.faults = FaultPlan::parse(val).map_err(|e| {
+                        anyhow::anyhow!(
+                            "bad --faults {val:?}: {e} \
+                             (kill:W@S | delay:W@S:MS | join:W@S, comma-separated, or 'none')"
+                        )
+                    })?
+                }
                 other => bail!("unknown option --{other}"),
             }
         }
@@ -179,6 +192,9 @@ impl RunConfig {
                 );
             }
         }
+        if let Err(e) = self.faults.validate(self.workers) {
+            bail!("bad --faults: {e}");
+        }
         if self.codec == Codec::Elias {
             if let Some(levels) = self.method.initial_levels(self.bits) {
                 if !levels.has_zero() {
@@ -214,6 +230,7 @@ impl RunConfig {
             topology: self.topology,
             codec: self.codec,
             quantize_impl: self.quantize_impl,
+            faults: self.faults.clone(),
         }
     }
 }
@@ -339,6 +356,19 @@ mod tests {
         let c = RunConfig::from_args(&args("--trace out/run.jsonl:info")).unwrap();
         assert_eq!(c.trace.unwrap().level, Level::Info);
         assert!(RunConfig::from_args(&args("--trace :debug")).is_err());
+    }
+
+    #[test]
+    fn parses_faults() {
+        assert!(RunConfig::default().faults.is_empty());
+        let c = RunConfig::from_args(&args("--faults none")).unwrap();
+        assert!(c.faults.is_empty());
+        let c = RunConfig::from_args(&args("--faults kill:1@3,join:2@8")).unwrap();
+        assert_eq!(c.faults, FaultPlan::parse("kill:1@3,join:2@8").unwrap());
+        assert_eq!(c.cluster().faults, c.faults);
+        // Malformed specs and out-of-world targets are CLI errors.
+        assert!(RunConfig::from_args(&args("--faults zap:1@3")).is_err());
+        assert!(RunConfig::from_args(&args("--faults kill:9@3 --workers 4")).is_err());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The leader: a barrier + relay for encoded gradients.
+//! The leader: a barrier + relay for encoded gradients, with elastic
+//! membership.
 //!
 //! The leader never decodes gradients — it is a pure switchboard, so its
 //! per-step cost is O(total encoded bytes). All model math stays on the
@@ -8,29 +9,50 @@
 //! Three relay modes mirror the sim's exchange topologies
 //! (`--topology`, see `exchange::topology`):
 //!
-//! * **flat** — barrier on M `Grad` frames, broadcast `AllGrads`.
-//! * **sharded:S** — S relay lanes: drain every worker's S `ShardGrad`
-//!   frames (workers send all their shards up front), then broadcast
-//!   one `AllShardGrads` per shard. Draining fully before broadcasting
-//!   keeps the write/read transition one-directional — no
+//! * **flat** — barrier on the active workers' `Grad` frames, broadcast
+//!   `AllGrads`.
+//! * **sharded:S** — S relay lanes: drain every active worker's S
+//!   `ShardGrad` frames (workers send all their shards up front), then
+//!   broadcast one `AllShardGrads` per shard. Draining fully before
+//!   broadcasting keeps the write/read transition one-directional — no
 //!   worker-writing-while-leader-writing cycle, so large frames cannot
 //!   deadlock on socket buffers. Workers decode every peer's shards,
 //!   so replicas stay bit-identical to the flat relay.
-//! * **tree:G** — collect all M `Grad` frames, hand each group leader
-//!   its members' frames, collect the G `LeaderGrad` partial-aggregate
+//! * **tree:G** — collect the active workers' `Grad` frames, hand each
+//!   non-empty group's first active member (the group leader) its
+//!   members' frames, collect the partial-aggregate `LeaderGrad`
 //!   frames, broadcast `AllLeaderGrads` to everyone. All replicas
-//!   aggregate the same G decoded partials, so they stay bit-identical
+//!   aggregate the same decoded partials, so they stay bit-identical
 //!   to each other (though not to the flat run — the partials are
 //!   re-quantized).
+//!
+//! # Elastic membership (timeout-and-drop)
+//!
+//! Every per-worker receive runs under a per-frame deadline
+//! ([`ElasticPolicy::deadline_ms`], 0 = block forever). A deadline miss
+//! emits a `timeout` trace event and retries with a doubled deadline,
+//! up to [`ElasticPolicy::retries`] extra attempts; exhaustion — or a
+//! clean EOF, or any socket error — drops the worker (`member_drop`
+//! event + `trace::warn` notice) and the relay continues with the
+//! survivors. Every broadcast carries the frame senders (`members`) and
+//! the post-transition active set (`active`), so receivers aggregate
+//! exactly the surviving contributions and weight by `1/active.len()` —
+//! weighted partial aggregation as a protocol-level contract (survivor
+//! weights always sum to 1).
+//!
+//! Late joiners announce their join step in `Hello` (they connect up
+//! front, replicate silently from step 0, and start sending at their
+//! join step — the leader activates them there with a `member_join`
+//! event).
 
 use super::messages::{Msg, WireGrad};
 use crate::exchange::topology::{group_members, TopologySpec};
 use crate::trace::{Level, Tracer};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::io::BufReader;
+use std::io::{BufRead, BufReader};
 use std::net::{TcpListener, TcpStream};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
 pub struct LeaderConfig {
@@ -40,6 +62,49 @@ pub struct LeaderConfig {
     pub steps: usize,
     /// Relay schedule (flat | sharded:S | tree:G; ring is sim-only).
     pub topology: TopologySpec,
+    /// Timeout-and-drop policy for per-worker receives.
+    pub elastic: ElasticPolicy,
+}
+
+/// Per-frame deadline + bounded-retry policy for the elastic relay.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticPolicy {
+    /// Per-frame receive deadline in milliseconds; 0 blocks forever
+    /// (no timeout-and-drop, the pre-elastic behavior).
+    pub deadline_ms: u64,
+    /// Extra attempts after the first deadline miss; the deadline
+    /// doubles on every retry (exponential backoff).
+    pub retries: u32,
+}
+
+impl Default for ElasticPolicy {
+    fn default() -> Self {
+        ElasticPolicy {
+            deadline_ms: 5000,
+            retries: 3,
+        }
+    }
+}
+
+/// Per-step relay record: the post-transition active set and the
+/// payload bits barriered this step — the leader-side projection the
+/// fault-parity tests compare against the sim's `StepStats`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeaderStepRecord {
+    pub step: u32,
+    /// Bit w set ⇔ worker w was active after this step's joins/drops.
+    pub active_mask: u64,
+    /// Payload bits received (relayed upward) this step.
+    pub bits: u64,
+}
+
+/// Everything an elastic leader run produces.
+#[derive(Clone, Debug)]
+pub struct LeaderReport {
+    /// Total relayed payload bits across the run.
+    pub total_bits: u64,
+    /// One record per step, in step order.
+    pub steps: Vec<LeaderStepRecord>,
 }
 
 type Conn = (BufReader<TcpStream>, TcpStream);
@@ -54,7 +119,8 @@ pub fn run_leader(cfg: &LeaderConfig) -> Result<u64> {
 /// lifecycle plus per-step relay records (frames, bits, latency).
 pub fn run_leader_traced(cfg: &LeaderConfig, tracer: &Tracer) -> Result<u64> {
     let listener = TcpListener::bind(&cfg.bind).context("leader bind")?;
-    run_leader_topo_traced(listener, cfg.world, cfg.steps, cfg.topology, tracer)
+    run_leader_elastic(listener, cfg.world, cfg.steps, cfg.topology, cfg.elastic, tracer)
+        .map(|r| r.total_bits)
 }
 
 /// Flat leader loop over an already-bound listener (lets tests use
@@ -82,6 +148,27 @@ pub fn run_leader_topo_traced(
     topology: TopologySpec,
     tracer: &Tracer,
 ) -> Result<u64> {
+    run_leader_elastic(
+        listener,
+        world,
+        steps,
+        topology,
+        ElasticPolicy::default(),
+        tracer,
+    )
+    .map(|r| r.total_bits)
+}
+
+/// The full elastic leader loop: timeout-and-drop relay with per-step
+/// membership records. All other entry points delegate here.
+pub fn run_leader_elastic(
+    listener: TcpListener,
+    world: usize,
+    steps: usize,
+    topology: TopologySpec,
+    policy: ElasticPolicy,
+    tracer: &Tracer,
+) -> Result<LeaderReport> {
     tracer.event(Level::Info, "run_start", |o| {
         o.insert("runtime", Json::Str("leader".into()));
         o.insert("world", Json::Num(world as f64));
@@ -89,12 +176,13 @@ pub fn run_leader_topo_traced(
         o.insert("topology", Json::Str(topology.name()));
     });
     let mut conns: Vec<Option<Conn>> = (0..world).map(|_| None).collect();
+    let mut join_step = vec![0usize; world];
     for _ in 0..world {
         let (stream, _) = listener.accept().context("accept")?;
         stream.set_nodelay(true).ok();
         let mut reader = BufReader::new(stream.try_clone()?);
         match Msg::read_from(&mut reader)? {
-            Msg::Hello { worker, world: w } => {
+            Msg::Hello { worker, world: w, join } => {
                 if w as usize != world {
                     bail!("worker announced world {w}, leader has {world}");
                 }
@@ -106,34 +194,229 @@ pub fn run_leader_topo_traced(
                     o.insert("worker", Json::Num(f64::from(worker)));
                     o.insert("world", Json::Num(world as f64));
                 });
+                join_step[slot] = join as usize;
                 conns[slot] = Some((reader, stream));
             }
             other => bail!("expected Hello, got {other:?}"),
         }
     }
-    let mut conns: Vec<Conn> = conns.into_iter().map(|c| c.unwrap()).collect();
 
-    let relayed = match topology {
-        TopologySpec::Flat => relay_flat(&mut conns, steps, tracer)?,
-        TopologySpec::Sharded(s) => relay_sharded(&mut conns, steps, s, tracer)?,
+    let active = (0..world).map(|w| join_step[w] == 0).collect();
+    let mut st = ElasticState {
+        conns,
+        active,
+        join_step,
+        bits: 0,
+        records: Vec::with_capacity(steps),
+    };
+
+    match topology {
+        TopologySpec::Flat => relay_flat(&mut st, steps, policy, tracer)?,
+        TopologySpec::Sharded(s) => relay_sharded(&mut st, steps, s, policy, tracer)?,
         TopologySpec::Tree(g) => {
             if g > world {
                 bail!("tree:{g} needs at most {world} groups");
             }
-            relay_tree(&mut conns, steps, g, tracer)?
+            relay_tree(&mut st, steps, g, policy, tracer)?
         }
         TopologySpec::Ring => {
             bail!("ring is a simulation schedule; the TCP relay supports flat|sharded:S|tree:G")
         }
     };
-    for (_, stream) in conns.iter_mut() {
-        Msg::Done.write_to(stream)?;
+    for conn in st.conns.iter_mut().flatten() {
+        Msg::Done.write_to(&mut conn.1).ok();
     }
     tracer.event(Level::Info, "run_end", |o| {
         o.insert("steps", Json::Num(steps as f64));
-        o.insert("total_bits", Json::Num(relayed as f64));
+        o.insert("total_bits", Json::Num(st.bits as f64));
     });
-    Ok(relayed)
+    Ok(LeaderReport {
+        total_bits: st.bits,
+        steps: st.records,
+    })
+}
+
+/// Leader-side membership + connection state for one elastic run.
+struct ElasticState {
+    conns: Vec<Option<Conn>>,
+    active: Vec<bool>,
+    join_step: Vec<usize>,
+    bits: u64,
+    records: Vec<LeaderStepRecord>,
+}
+
+impl ElasticState {
+    /// Activate scheduled joiners whose join step is `step` (founding
+    /// members are active from the start and never pass through here).
+    fn begin_step(&mut self, step: usize, tracer: &Tracer) {
+        for w in 0..self.active.len() {
+            if self.join_step[w] == step && step > 0 && !self.active[w] && self.conns[w].is_some() {
+                self.active[w] = true;
+                let n = self.n_active();
+                tracer.event(Level::Info, "member_join", |o| {
+                    o.insert("step", Json::Num(step as f64));
+                    o.insert("worker", Json::Num(w as f64));
+                    o.insert("active", Json::Num(n as f64));
+                    o.insert("weight_sum", Json::Num(1.0));
+                });
+            }
+        }
+    }
+
+    fn n_active(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Active worker ids, ascending.
+    fn active_ids(&self) -> Vec<u32> {
+        (0..self.active.len() as u32)
+            .filter(|&w| self.active[w as usize])
+            .collect()
+    }
+
+    fn active_mask(&self) -> u64 {
+        self.active
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a)
+            .fold(0u64, |m, (w, _)| m | (1u64 << w))
+    }
+
+    /// Drop a worker from the relay: close its slot, shrink the active
+    /// set, emit the `member_drop` event, and warn. Idempotent.
+    fn drop_worker(&mut self, step: usize, w: usize, reason: &str, tracer: &Tracer) {
+        let was_active = self.active[w];
+        self.conns[w] = None;
+        self.active[w] = false;
+        if !was_active {
+            return;
+        }
+        let n = self.n_active();
+        tracer.event(Level::Info, "member_drop", |o| {
+            o.insert("step", Json::Num(step as f64));
+            o.insert("worker", Json::Num(w as f64));
+            o.insert("active", Json::Num(n as f64));
+            o.insert("weight_sum", Json::Num(1.0));
+        });
+        crate::trace::warn(
+            "leader",
+            &format!("worker {w} dropped at step {step} ({reason}); {n} active"),
+        );
+    }
+
+    /// Receive one frame from worker `w` under the timeout-and-drop
+    /// policy. Returns `Ok(None)` when the worker was dropped instead
+    /// (deadline exhausted, EOF, or socket error); protocol violations
+    /// from a live worker still fail the run.
+    fn recv(
+        &mut self,
+        step: usize,
+        w: usize,
+        policy: ElasticPolicy,
+        tracer: &Tracer,
+    ) -> Result<Option<Msg>> {
+        enum Wait {
+            Eof,
+            Ready,
+            Timeout,
+            Error,
+        }
+        if self.conns[w].is_none() {
+            return Ok(None);
+        }
+        if policy.deadline_ms == 0 {
+            // Pre-elastic blocking behavior: any read error is fatal.
+            let conn = self.conns[w].as_mut().expect("conn present");
+            return Msg::read_from(&mut conn.0).map(Some);
+        }
+        let mut deadline_ms = policy.deadline_ms;
+        for attempt in 0..=policy.retries {
+            // A non-consuming readiness wait: BufReader::fill_buf
+            // returns buffered or freshly-read bytes without consuming
+            // them, `Ok(&[])` on clean EOF, and a WouldBlock/TimedOut
+            // error on deadline miss — so a timed-out wait never
+            // desyncs mid-frame.
+            let wait = {
+                let conn = self.conns[w].as_mut().expect("conn present");
+                conn.1
+                    .set_read_timeout(Some(Duration::from_millis(deadline_ms)))
+                    .ok();
+                match conn.0.fill_buf() {
+                    Ok(buf) if buf.is_empty() => Wait::Eof,
+                    Ok(_) => Wait::Ready,
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        Wait::Timeout
+                    }
+                    Err(_) => Wait::Error,
+                }
+            };
+            match wait {
+                Wait::Eof => {
+                    self.drop_worker(step, w, "connection closed", tracer);
+                    return Ok(None);
+                }
+                Wait::Ready => {
+                    let conn = self.conns[w].as_mut().expect("conn present");
+                    return match Msg::read_from(&mut conn.0) {
+                        Ok(msg) => Ok(Some(msg)),
+                        Err(_) => {
+                            self.drop_worker(step, w, "read error", tracer);
+                            Ok(None)
+                        }
+                    };
+                }
+                Wait::Timeout => {
+                    tracer.event(Level::Info, "timeout", |o| {
+                        o.insert("step", Json::Num(step as f64));
+                        o.insert("worker", Json::Num(w as f64));
+                        o.insert("attempt", Json::Num(f64::from(attempt)));
+                        o.insert("deadline_ms", Json::Num(deadline_ms as f64));
+                    });
+                    crate::trace::warn(
+                        "leader",
+                        &format!(
+                            "worker {w} missed the {deadline_ms}ms deadline at step {step} \
+                             (attempt {attempt})"
+                        ),
+                    );
+                    deadline_ms = deadline_ms.saturating_mul(2);
+                }
+                Wait::Error => {
+                    self.drop_worker(step, w, "socket error", tracer);
+                    return Ok(None);
+                }
+            }
+        }
+        self.drop_worker(step, w, "deadline exhausted", tracer);
+        Ok(None)
+    }
+
+    /// Broadcast a message to every connected worker (active and
+    /// standby — late joiners replicate from the broadcasts). A write
+    /// error drops the worker.
+    fn broadcast(&mut self, step: usize, msg: &Msg, tracer: &Tracer) {
+        for w in 0..self.conns.len() {
+            let ok = match self.conns[w].as_mut() {
+                Some(conn) => msg.write_to(&mut conn.1).is_ok(),
+                None => continue,
+            };
+            if !ok {
+                self.drop_worker(step, w, "write error", tracer);
+            }
+        }
+    }
+
+    fn finish_step(&mut self, step: usize, step_bits: u64) {
+        self.bits += step_bits;
+        self.records.push(LeaderStepRecord {
+            step: step as u32,
+            active_mask: self.active_mask(),
+            bits: step_bits,
+        });
+    }
 }
 
 /// Per-step `relay` record: frames barriered + payload bits moved this
@@ -147,144 +430,214 @@ fn trace_relay(tracer: &Tracer, step: usize, frames: usize, bits: u64, t0: Insta
     });
 }
 
-fn relay_flat(conns: &mut [Conn], steps: usize, tracer: &Tracer) -> Result<u64> {
-    let mut relayed_bits = 0u64;
-    for step in 0..steps {
-        let t0 = Instant::now();
-        let step_bits0 = relayed_bits;
-        let mut grads: Vec<Option<WireGrad>> = vec![None; conns.len()];
-        for (w, (reader, _)) in conns.iter_mut().enumerate() {
-            match Msg::read_from(reader)? {
-                Msg::Grad { step: s, grad } => {
-                    if s as usize != step {
-                        bail!("worker {w} sent step {s}, expected {step}");
-                    }
-                    relayed_bits += grad.bits;
-                    grads[w] = Some(grad);
+/// Barrier on the expected senders' `Grad` frames; returns the senders
+/// and their frames, in ascending worker order, with drops applied.
+fn barrier_grads(
+    st: &mut ElasticState,
+    step: usize,
+    policy: ElasticPolicy,
+    tracer: &Tracer,
+) -> Result<(Vec<u32>, Vec<WireGrad>)> {
+    let expected = st.active_ids();
+    let mut members = Vec::with_capacity(expected.len());
+    let mut grads = Vec::with_capacity(expected.len());
+    for w in expected {
+        match st.recv(step, w as usize, policy, tracer)? {
+            Some(Msg::Grad { step: s, grad }) => {
+                if s as usize != step {
+                    bail!("worker {w} sent step {s}, expected {step}");
                 }
-                other => bail!("expected Grad, got {other:?}"),
+                members.push(w);
+                grads.push(grad);
             }
+            Some(other) => bail!("expected Grad, got {other:?}"),
+            None => {} // dropped
         }
-        let all = Msg::AllGrads {
-            step: step as u32,
-            grads: grads.into_iter().map(|g| g.unwrap()).collect(),
-        };
-        for (_, stream) in conns.iter_mut() {
-            all.write_to(stream)?;
-        }
-        trace_relay(tracer, step, conns.len(), relayed_bits - step_bits0, t0);
     }
-    Ok(relayed_bits)
+    Ok((members, grads))
 }
 
-fn relay_sharded(conns: &mut [Conn], steps: usize, shards: usize, tracer: &Tracer) -> Result<u64> {
-    let mut relayed_bits = 0u64;
+fn relay_flat(
+    st: &mut ElasticState,
+    steps: usize,
+    policy: ElasticPolicy,
+    tracer: &Tracer,
+) -> Result<()> {
     for step in 0..steps {
         let t0 = Instant::now();
-        let step_bits0 = relayed_bits;
-        // Drain every worker's full shard set before writing anything:
-        // workers write all S frames then switch to reading, so reading
-        // everything first makes the socket flow one-directional and
-        // immune to buffer-full deadlocks at any frame size.
-        let mut frames: Vec<Vec<Option<WireGrad>>> =
-            (0..shards).map(|_| vec![None; conns.len()]).collect();
-        for (w, (reader, _)) in conns.iter_mut().enumerate() {
+        st.begin_step(step, tracer);
+        let (members, grads) = barrier_grads(st, step, policy, tracer)?;
+        let step_bits: u64 = grads.iter().map(|g| g.bits).sum();
+        let frames = grads.len();
+        let all = Msg::AllGrads {
+            step: step as u32,
+            members,
+            active: st.active_ids(),
+            grads,
+        };
+        st.broadcast(step, &all, tracer);
+        trace_relay(tracer, step, frames, step_bits, t0);
+        st.finish_step(step, step_bits);
+    }
+    Ok(())
+}
+
+fn relay_sharded(
+    st: &mut ElasticState,
+    steps: usize,
+    shards: usize,
+    policy: ElasticPolicy,
+    tracer: &Tracer,
+) -> Result<()> {
+    for step in 0..steps {
+        let t0 = Instant::now();
+        st.begin_step(step, tracer);
+        // Drain every expected worker's full shard set before writing
+        // anything: workers write all S frames then switch to reading,
+        // so reading everything first makes the socket flow
+        // one-directional and immune to buffer-full deadlocks at any
+        // frame size. A worker that drops mid-set contributes nothing
+        // this step (its partial shards are discarded — receivers need
+        // a worker's full shard set to use any of it).
+        let expected = st.active_ids();
+        let mut members: Vec<u32> = Vec::with_capacity(expected.len());
+        let mut frames: Vec<Vec<WireGrad>> = Vec::with_capacity(expected.len());
+        'worker: for w in expected {
+            let mut set = Vec::with_capacity(shards);
             for shard in 0..shards {
-                match Msg::read_from(reader)? {
-                    Msg::ShardGrad {
+                match st.recv(step, w as usize, policy, tracer)? {
+                    Some(Msg::ShardGrad {
                         step: s,
                         shard: sh,
                         grad,
-                    } => {
+                    }) => {
                         if s as usize != step || sh as usize != shard {
-                            bail!(
-                                "worker {w} sent step {s} shard {sh}, expected {step}/{shard}"
-                            );
+                            bail!("worker {w} sent step {s} shard {sh}, expected {step}/{shard}");
                         }
-                        relayed_bits += grad.bits;
-                        frames[shard][w] = Some(grad);
+                        set.push(grad);
                     }
-                    other => bail!("expected ShardGrad, got {other:?}"),
+                    Some(other) => bail!("expected ShardGrad, got {other:?}"),
+                    None => continue 'worker, // dropped; discard partial set
                 }
             }
+            members.push(w);
+            frames.push(set);
         }
-        for (shard, grads) in frames.into_iter().enumerate() {
-            let all = Msg::AllShardGrads {
+        let step_bits: u64 = frames.iter().flatten().map(|g| g.bits).sum();
+        let n_frames = frames.len() * shards;
+        let active = st.active_ids();
+        // Pop each worker's shard frames off the back (so the per-shard
+        // broadcasts own their frames without cloning payloads), then
+        // send in ascending shard order — the order workers read them.
+        let mut shard_msgs: Vec<Msg> = Vec::with_capacity(shards);
+        for shard in (0..shards).rev() {
+            let grads: Vec<WireGrad> = frames
+                .iter_mut()
+                .map(|set| set.pop().expect("full shard set"))
+                .collect();
+            shard_msgs.push(Msg::AllShardGrads {
                 step: step as u32,
                 shard: shard as u32,
-                grads: grads.into_iter().map(|g| g.unwrap()).collect(),
-            };
-            for (_, stream) in conns.iter_mut() {
-                all.write_to(stream)?;
-            }
+                members: members.clone(),
+                active: active.clone(),
+                grads,
+            });
         }
-        trace_relay(tracer, step, conns.len() * shards, relayed_bits - step_bits0, t0);
+        shard_msgs.reverse();
+        for msg in &shard_msgs {
+            st.broadcast(step, msg, tracer);
+        }
+        trace_relay(tracer, step, n_frames, step_bits, t0);
+        st.finish_step(step, step_bits);
     }
-    Ok(relayed_bits)
+    Ok(())
 }
 
-fn relay_tree(conns: &mut [Conn], steps: usize, groups: usize, tracer: &Tracer) -> Result<u64> {
-    let world = conns.len();
-    let mut relayed_bits = 0u64;
+fn relay_tree(
+    st: &mut ElasticState,
+    steps: usize,
+    groups: usize,
+    policy: ElasticPolicy,
+    tracer: &Tracer,
+) -> Result<()> {
+    let world = st.conns.len();
     for step in 0..steps {
         let t0 = Instant::now();
-        let step_bits0 = relayed_bits;
-        // 1. Barrier on every worker's frame.
-        let mut grads: Vec<Option<WireGrad>> = vec![None; world];
-        for (w, (reader, _)) in conns.iter_mut().enumerate() {
-            match Msg::read_from(reader)? {
-                Msg::Grad { step: s, grad } => {
-                    if s as usize != step {
-                        bail!("worker {w} sent step {s}, expected {step}");
-                    }
-                    relayed_bits += grad.bits;
-                    grads[w] = Some(grad);
-                }
-                other => bail!("expected Grad, got {other:?}"),
-            }
-        }
-        let grads: Vec<WireGrad> = grads.into_iter().map(|g| g.unwrap()).collect();
+        st.begin_step(step, tracer);
+        // 1. Barrier on the active workers' frames.
+        let (members, grads) = barrier_grads(st, step, policy, tracer)?;
+        let up_bits: u64 = grads.iter().map(|g| g.bits).sum();
+        let active = st.active_ids();
 
-        // 2. Hand each group leader its members' frames.
+        // 2. Hand each non-empty group's first active member (the
+        // group leader under churn) its members' frames.
+        let mut group_leaders: Vec<(u32, u32)> = Vec::with_capacity(groups); // (group, leader)
         for g in 0..groups {
-            let members = group_members(world, groups, g);
-            let leader = members.start;
+            let range = group_members(world, groups, g);
+            let idx: Vec<usize> = members
+                .iter()
+                .enumerate()
+                .filter(|(_, &w)| range.contains(&(w as usize)))
+                .map(|(i, _)| i)
+                .collect();
+            let Some(&first) = idx.first() else {
+                continue; // no active member: the group is silent this step
+            };
+            let leader = members[first] as usize;
             let msg = Msg::AllGrads {
                 step: step as u32,
-                grads: grads[members].to_vec(),
+                members: idx.iter().map(|&i| members[i]).collect(),
+                active: active.clone(),
+                grads: idx.iter().map(|&i| grads[i].clone()).collect(),
             };
-            msg.write_to(&mut conns[leader].1)?;
+            let ok = match st.conns[leader].as_mut() {
+                Some(conn) => msg.write_to(&mut conn.1).is_ok(),
+                None => false,
+            };
+            if ok {
+                group_leaders.push((g as u32, leader as u32));
+            } else {
+                st.drop_worker(step, leader, "write error", tracer);
+            }
         }
 
-        // 3. Collect the G partial-aggregate frames.
-        let mut lead: Vec<Option<WireGrad>> = vec![None; groups];
-        for g in 0..groups {
-            let leader = group_members(world, groups, g).start;
-            match Msg::read_from(&mut conns[leader].0)? {
-                Msg::LeaderGrad {
+        // 3. Collect the partial-aggregate frames from the group
+        // leaders that got their frames; a leader dying here silences
+        // its group for this step (drop-and-continue).
+        let mut lead_groups: Vec<u32> = Vec::with_capacity(group_leaders.len());
+        let mut lead: Vec<WireGrad> = Vec::with_capacity(group_leaders.len());
+        let mut lead_bits = 0u64;
+        for (g, leader) in group_leaders {
+            match st.recv(step, leader as usize, policy, tracer)? {
+                Some(Msg::LeaderGrad {
                     step: s,
                     group,
                     grad,
-                } => {
-                    if s as usize != step || group as usize != g {
+                }) => {
+                    if s as usize != step || group != g {
                         bail!("leader {leader} sent step {s} group {group}, expected {step}/{g}");
                     }
-                    relayed_bits += grad.bits;
-                    lead[g] = Some(grad);
+                    lead_bits += grad.bits;
+                    lead_groups.push(g);
+                    lead.push(grad);
                 }
-                other => bail!("expected LeaderGrad, got {other:?}"),
+                Some(other) => bail!("expected LeaderGrad, got {other:?}"),
+                None => {} // dropped; the group is silent this step
             }
         }
 
         // 4. Broadcast the partials down to everyone.
+        let n_frames = members.len() + lead.len();
         let all = Msg::AllLeaderGrads {
             step: step as u32,
-            grads: lead.into_iter().map(|g| g.unwrap()).collect(),
+            groups: lead_groups,
+            active: st.active_ids(),
+            grads: lead,
         };
-        for (_, stream) in conns.iter_mut() {
-            all.write_to(stream)?;
-        }
-        trace_relay(tracer, step, world + groups, relayed_bits - step_bits0, t0);
+        st.broadcast(step, &all, tracer);
+        let step_bits = up_bits + lead_bits;
+        trace_relay(tracer, step, n_frames, step_bits, t0);
+        st.finish_step(step, step_bits);
     }
-    Ok(relayed_bits)
+    Ok(())
 }

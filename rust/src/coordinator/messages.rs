@@ -11,26 +11,49 @@ pub const WIDTH_FP32: u32 = 0;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
-    /// Worker announces itself: (worker_id, world_size).
-    Hello { worker: u32, world: u32 },
+    /// Worker announces itself: (worker_id, world_size, join_step).
+    /// `join` is the step at which the worker enters the active set
+    /// (0 = founding member, active from the first step).
+    Hello { worker: u32, world: u32, join: u32 },
     /// One encoded gradient for a step.
     Grad { step: u32, grad: WireGrad },
-    /// Leader broadcast: every worker's encoded gradient for a step.
-    AllGrads { step: u32, grads: Vec<WireGrad> },
+    /// Leader broadcast for a step: `grads[i]` is the frame sent by
+    /// worker `members[i]`; `active` is the full active worker set
+    /// after this step's membership transitions (joins, drops). Every
+    /// receiver aggregates over `members` and weights by
+    /// `active.len()`, so partial aggregation under churn is a
+    /// protocol-level contract, not a per-worker heuristic.
+    AllGrads {
+        step: u32,
+        members: Vec<u32>,
+        active: Vec<u32>,
+        grads: Vec<WireGrad>,
+    },
     /// One bucket-aligned shard of a worker's encoded gradient
     /// (sharded leader mode: the relay barriers and broadcasts per
     /// shard lane).
     ShardGrad { step: u32, shard: u32, grad: WireGrad },
-    /// Relay broadcast: every worker's frame for one shard.
+    /// Relay broadcast: every surviving worker's frame for one shard
+    /// (`grads[i]` from worker `members[i]`; `active` as in
+    /// [`Msg::AllGrads`]).
     AllShardGrads {
         step: u32,
         shard: u32,
+        members: Vec<u32>,
+        active: Vec<u32>,
         grads: Vec<WireGrad>,
     },
     /// A group leader's encoded partial aggregate (hierarchical mode).
     LeaderGrad { step: u32, group: u32, grad: WireGrad },
-    /// Relay broadcast: every group's encoded partial aggregate.
-    AllLeaderGrads { step: u32, grads: Vec<WireGrad> },
+    /// Relay broadcast: `grads[i]` is the partial aggregate of group
+    /// `groups[i]` (groups with no active member are absent; `active`
+    /// as in [`Msg::AllGrads`]).
+    AllLeaderGrads {
+        step: u32,
+        groups: Vec<u32>,
+        active: Vec<u32>,
+        grads: Vec<WireGrad>,
+    },
     /// Orderly end of training.
     Done,
 }
@@ -123,6 +146,12 @@ impl Buf {
         self.u32(g.width);
         self.bytes(&g.bytes);
     }
+    fn ids(&mut self, ids: &[u32]) {
+        self.u32(ids.len() as u32);
+        for &id in ids {
+            self.u32(id);
+        }
+    }
 }
 
 struct Cur<'a> {
@@ -166,15 +195,24 @@ impl<'a> Cur<'a> {
             bytes: self.bytes()?,
         })
     }
+    fn ids(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(self.u32()?);
+        }
+        Ok(ids)
+    }
 }
 
 impl Msg {
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         let (tag, payload) = match self {
-            Msg::Hello { worker, world } => {
-                let mut b = Buf(Vec::with_capacity(8));
+            Msg::Hello { worker, world, join } => {
+                let mut b = Buf(Vec::with_capacity(12));
                 b.u32(*worker);
                 b.u32(*world);
+                b.u32(*join);
                 (TAG_HELLO, b.0)
             }
             Msg::Grad { step, grad } => {
@@ -183,9 +221,16 @@ impl Msg {
                 b.grad(grad);
                 (TAG_GRAD, b.0)
             }
-            Msg::AllGrads { step, grads } => {
+            Msg::AllGrads {
+                step,
+                members,
+                active,
+                grads,
+            } => {
                 let mut b = Buf(Vec::new());
                 b.u32(*step);
+                b.ids(members);
+                b.ids(active);
                 b.u32(grads.len() as u32);
                 for g in grads {
                     b.grad(g);
@@ -199,10 +244,18 @@ impl Msg {
                 b.grad(grad);
                 (TAG_SHARD, b.0)
             }
-            Msg::AllShardGrads { step, shard, grads } => {
+            Msg::AllShardGrads {
+                step,
+                shard,
+                members,
+                active,
+                grads,
+            } => {
                 let mut b = Buf(Vec::new());
                 b.u32(*step);
                 b.u32(*shard);
+                b.ids(members);
+                b.ids(active);
                 b.u32(grads.len() as u32);
                 for g in grads {
                     b.grad(g);
@@ -216,9 +269,16 @@ impl Msg {
                 b.grad(grad);
                 (TAG_LEADER, b.0)
             }
-            Msg::AllLeaderGrads { step, grads } => {
+            Msg::AllLeaderGrads {
+                step,
+                groups,
+                active,
+                grads,
+            } => {
                 let mut b = Buf(Vec::new());
                 b.u32(*step);
+                b.ids(groups);
+                b.ids(active);
                 b.u32(grads.len() as u32);
                 for g in grads {
                     b.grad(g);
@@ -246,6 +306,7 @@ impl Msg {
             TAG_HELLO => Msg::Hello {
                 worker: c.u32()?,
                 world: c.u32()?,
+                join: c.u32()?,
             },
             TAG_GRAD => Msg::Grad {
                 step: c.u32()?,
@@ -253,12 +314,19 @@ impl Msg {
             },
             TAG_ALL => {
                 let step = c.u32()?;
+                let members = c.ids()?;
+                let active = c.ids()?;
                 let n = c.u32()? as usize;
                 let mut grads = Vec::with_capacity(n);
                 for _ in 0..n {
                     grads.push(c.grad()?);
                 }
-                Msg::AllGrads { step, grads }
+                Msg::AllGrads {
+                    step,
+                    members,
+                    active,
+                    grads,
+                }
             }
             TAG_SHARD => Msg::ShardGrad {
                 step: c.u32()?,
@@ -268,12 +336,20 @@ impl Msg {
             TAG_ALL_SHARD => {
                 let step = c.u32()?;
                 let shard = c.u32()?;
+                let members = c.ids()?;
+                let active = c.ids()?;
                 let n = c.u32()? as usize;
                 let mut grads = Vec::with_capacity(n);
                 for _ in 0..n {
                     grads.push(c.grad()?);
                 }
-                Msg::AllShardGrads { step, shard, grads }
+                Msg::AllShardGrads {
+                    step,
+                    shard,
+                    members,
+                    active,
+                    grads,
+                }
             }
             TAG_LEADER => Msg::LeaderGrad {
                 step: c.u32()?,
@@ -282,12 +358,19 @@ impl Msg {
             },
             TAG_ALL_LEADER => {
                 let step = c.u32()?;
+                let groups = c.ids()?;
+                let active = c.ids()?;
                 let n = c.u32()? as usize;
                 let mut grads = Vec::with_capacity(n);
                 for _ in 0..n {
                     grads.push(c.grad()?);
                 }
-                Msg::AllLeaderGrads { step, grads }
+                Msg::AllLeaderGrads {
+                    step,
+                    groups,
+                    active,
+                    grads,
+                }
             }
             TAG_DONE => Msg::Done,
             t => bail!("unknown frame tag {t}"),
@@ -312,7 +395,16 @@ mod tests {
 
     #[test]
     fn all_variants_roundtrip() {
-        roundtrip(Msg::Hello { worker: 3, world: 8 });
+        roundtrip(Msg::Hello {
+            worker: 3,
+            world: 8,
+            join: 0,
+        });
+        roundtrip(Msg::Hello {
+            worker: 5,
+            world: 8,
+            join: 12,
+        });
         roundtrip(Msg::Done);
         let g = WireGrad {
             bits: 12345,
@@ -325,6 +417,8 @@ mod tests {
         roundtrip(Msg::Grad { step: 7, grad: g.clone() });
         roundtrip(Msg::AllGrads {
             step: 9,
+            members: vec![0, 2],
+            active: vec![0, 2, 3],
             grads: vec![g.clone(), g.clone()],
         });
         roundtrip(Msg::ShardGrad {
@@ -335,6 +429,8 @@ mod tests {
         roundtrip(Msg::AllShardGrads {
             step: 4,
             shard: 1,
+            members: vec![0, 1, 3],
+            active: vec![0, 1, 3],
             grads: vec![g.clone(), g.clone(), g.clone()],
         });
         roundtrip(Msg::LeaderGrad {
@@ -344,14 +440,48 @@ mod tests {
         });
         roundtrip(Msg::AllLeaderGrads {
             step: 6,
-            grads: vec![g],
+            groups: vec![0, 1],
+            active: vec![0, 1, 2, 3],
+            grads: vec![g.clone(), g],
+        });
+    }
+
+    #[test]
+    fn membership_lists_survive_the_wire_empty_and_nonempty() {
+        // A shrunken broadcast (one survivor) and a degenerate empty
+        // member list both roundtrip — the partial-aggregation contract
+        // is carried entirely by these lists.
+        roundtrip(Msg::AllGrads {
+            step: 2,
+            members: vec![1],
+            active: vec![1],
+            grads: vec![WireGrad {
+                bits: 8,
+                n_full: 1,
+                n_tail: 0,
+                bucket: 1,
+                width: 0,
+                bytes: vec![0, 0, 128, 63],
+            }],
+        });
+        roundtrip(Msg::AllGrads {
+            step: 3,
+            members: Vec::new(),
+            active: Vec::new(),
+            grads: Vec::new(),
         });
     }
 
     #[test]
     fn multiple_messages_stream() {
         let mut buf = Vec::new();
-        Msg::Hello { worker: 0, world: 2 }.write_to(&mut buf).unwrap();
+        Msg::Hello {
+            worker: 0,
+            world: 2,
+            join: 0,
+        }
+        .write_to(&mut buf)
+        .unwrap();
         Msg::Done.write_to(&mut buf).unwrap();
         let mut r = buf.as_slice();
         assert!(matches!(Msg::read_from(&mut r).unwrap(), Msg::Hello { .. }));

@@ -23,10 +23,24 @@
 //! sharded:S|tree:G`): S shard relay lanes with bit-identical-to-flat
 //! replicas, or a two-level tree whose group leaders re-quantize and
 //! relay partial aggregates (replica-identical, per-seed golden).
+//!
+//! Membership is **elastic**: the leader tracks the active worker set
+//! per step, drops workers that miss their per-frame deadline (bounded
+//! retries with doubling timeouts, [`ElasticPolicy`]) or hang up, and
+//! activates scheduled late joiners. Every broadcast names its senders
+//! and the post-transition active set, so survivors renormalize to a
+//! weighted partial aggregate (each survivor contributes `1/n_active`)
+//! without any out-of-band signaling. Deterministic churn is injected
+//! with `--faults` (see [`crate::sim::FaultPlan`]).
 
 pub mod leader;
 pub mod messages;
 pub mod worker;
 
-pub use leader::{run_leader, run_leader_traced, LeaderConfig};
-pub use worker::{run_worker, run_worker_traced, WorkerConfig, WorkerReport};
+pub use leader::{
+    run_leader, run_leader_elastic, run_leader_traced, ElasticPolicy, LeaderConfig, LeaderReport,
+    LeaderStepRecord,
+};
+pub use worker::{
+    run_worker, run_worker_traced, WorkerConfig, WorkerReport, WorkerStepRecord,
+};

@@ -22,12 +22,13 @@
 
 use super::messages::{Msg, WireGrad, WIDTH_FP32};
 use crate::exchange::budget::select_width;
-use crate::exchange::topology::{group_members, group_of, shard_buckets, TopologySpec};
+use crate::exchange::topology::{group_of, shard_buckets, TopologySpec};
 use crate::exchange::{BitsPolicy, CodecSession, ExchangeLane};
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
 use crate::quant::bitio::BitWriter;
 use crate::quant::{Codec, EncodedView, Method, QuantizeImpl};
+use crate::sim::FaultPlan;
 use crate::trace::{Level, Tracer};
 use crate::util::json::Json;
 use crate::util::{hash_params, Rng};
@@ -60,6 +61,27 @@ pub struct WorkerConfig {
     /// scalar and fast are bit-identical, and only the encoded frames
     /// cross the wire.
     pub quantize_impl: QuantizeImpl,
+    /// Deterministic fault plan (the same `--faults` spec every process
+    /// in the run gets). Each worker applies only its own entries:
+    /// `kill:W@S` exits cleanly at the top of step S, `join:W@S` stays
+    /// a silent standby replica until step S, `delay:W@S:MS` sleeps
+    /// before sending at step S.
+    pub faults: FaultPlan,
+}
+
+/// Per-step worker-side projection for the fault-parity tests: the
+/// broadcast active set, the step's wire width, and the post-update
+/// replica fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerStepRecord {
+    pub step: u32,
+    /// Bit w set ⇔ worker w was in the broadcast `active` list.
+    pub active_mask: u64,
+    /// Wire width this step (32 for full precision, matching the sim's
+    /// `StepStats::width` convention).
+    pub width: u32,
+    /// FNV-1a over the parameter bits after this step's update.
+    pub params_hash: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -70,6 +92,8 @@ pub struct WorkerReport {
     pub sent_bits: u64,
     pub final_levels: Option<Vec<f64>>,
     pub level_updates: usize,
+    /// One record per completed step (a killed worker stops early).
+    pub step_records: Vec<WorkerStepRecord>,
 }
 
 /// Run one worker to completion against the leader at `cfg.addr`.
@@ -99,9 +123,11 @@ pub fn run_worker_traced(
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    let my_join = cfg.faults.join_step(cfg.worker).unwrap_or(0);
     Msg::Hello {
         worker: cfg.worker as u32,
         world: cfg.world as u32,
+        join: my_join as u32,
     }
     .write_to(&mut writer)?;
     tracer.event(Level::Info, "connect", |o| {
@@ -142,8 +168,39 @@ pub fn run_worker_traced(
     let mut prev_decoded: Vec<Vec<f32>> = Vec::new();
     let mut sent_bits = 0u64;
     let mut level_updates = 0usize;
+    let mut step_records: Vec<WorkerStepRecord> = Vec::with_capacity(cfg.iters);
+    // Local view of the active set, diffed against every broadcast to
+    // surface churn in this worker's trace. Founding members are
+    // everyone without a scheduled join.
+    let mut known_active: Vec<u32> = (0..cfg.world as u32)
+        .filter(|&w| cfg.faults.join_step(w as usize).unwrap_or(0) == 0)
+        .collect();
 
     for step in 0..cfg.iters {
+        // kill:W@S — exit cleanly at the top of step S, before sending
+        // anything; the leader sees EOF at its barrier and drops us.
+        if cfg.faults.kill_step(cfg.worker) == Some(step) {
+            crate::trace::warn(
+                "worker",
+                &format!("worker {} killed by fault plan at step {step}", cfg.worker),
+            );
+            tracer.event(Level::Info, "run_end", |o| {
+                o.insert("steps", Json::Num(step as f64));
+                o.insert("total_bits", Json::Num(sent_bits as f64));
+            });
+            return Ok(WorkerReport {
+                final_eval: task.eval(&params),
+                params_hash: hash_params(&params),
+                sent_bits,
+                final_levels: session.final_levels(),
+                level_updates,
+                step_records,
+            });
+        }
+        // join:W@S — a standby replica computes, adapts, and decodes
+        // every broadcast (staying bit-identical to the survivors) but
+        // sends nothing until its join step.
+        let sending = step >= my_join;
         task.grad(&params, cfg.worker, step, &mut grad);
 
         // Adapt from last exchange's decoded gradients — M frames under
@@ -170,65 +227,98 @@ pub fn run_worker_traced(
             select_width(bitctl.as_mut(), &mut session, step, &grad, tracer);
         }
 
+        // delay:W@S:MS — a real straggler: sleep before sending so the
+        // leader's per-frame deadline machinery gets exercised.
+        if sending {
+            if let Some(ms) = cfg.faults.delay_ms(cfg.worker, step) {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+
         let step_sent_before = sent_bits;
 
-        match cfg.topology {
-            TopologySpec::Flat => {
-                exchange_flat(
-                    cfg,
-                    step,
-                    &grad,
-                    &session,
-                    &mut lane,
-                    &mut qrng,
-                    &mut writer,
-                    &mut reader,
-                    &mut agg,
-                    &mut prev_decoded,
-                    &mut sent_bits,
-                    tracer,
-                )?;
-            }
-            TopologySpec::Sharded(shards) => {
-                exchange_sharded(
-                    cfg,
-                    step,
-                    shards,
-                    &grad,
-                    &session,
-                    &mut lane,
-                    &mut shard_writer,
-                    &mut qrng,
-                    &mut writer,
-                    &mut reader,
-                    &mut agg,
-                    &mut prev_decoded,
-                    &mut sent_bits,
-                    tracer,
-                )?;
-            }
-            TopologySpec::Tree(groups) => {
-                exchange_tree(
-                    cfg,
-                    step,
-                    groups,
-                    &grad,
-                    &session,
-                    &mut lane,
-                    &mut partial,
-                    &mut qrng,
-                    &mut writer,
-                    &mut reader,
-                    &mut agg,
-                    &mut prev_decoded,
-                    &mut sent_bits,
-                    tracer,
-                )?;
-            }
+        let active = match cfg.topology {
+            TopologySpec::Flat => exchange_flat(
+                cfg,
+                step,
+                sending,
+                &grad,
+                &session,
+                &mut lane,
+                &mut qrng,
+                &mut writer,
+                &mut reader,
+                &mut agg,
+                &mut prev_decoded,
+                &mut sent_bits,
+                tracer,
+            )?,
+            TopologySpec::Sharded(shards) => exchange_sharded(
+                cfg,
+                step,
+                shards,
+                sending,
+                &grad,
+                &session,
+                &mut lane,
+                &mut shard_writer,
+                &mut qrng,
+                &mut writer,
+                &mut reader,
+                &mut agg,
+                &mut prev_decoded,
+                &mut sent_bits,
+                tracer,
+            )?,
+            TopologySpec::Tree(groups) => exchange_tree(
+                cfg,
+                step,
+                groups,
+                sending,
+                &grad,
+                &session,
+                &mut lane,
+                &mut partial,
+                &mut qrng,
+                &mut writer,
+                &mut reader,
+                &mut agg,
+                &mut prev_decoded,
+                &mut sent_bits,
+                tracer,
+            )?,
             TopologySpec::Ring => {
                 bail!("ring is a simulation schedule; TCP workers support flat|sharded:S|tree:G")
             }
+        };
+
+        // Surface churn in this replica's own trace by diffing the
+        // broadcast active set against our last view of it.
+        for &w in &known_active {
+            if !active.contains(&w) {
+                crate::trace::warn(
+                    "worker",
+                    &format!("worker {w} left the active set at step {step}"),
+                );
+                tracer.event(Level::Info, "member_drop", |o| {
+                    o.insert("step", Json::Num(step as f64));
+                    o.insert("worker", Json::Num(f64::from(w)));
+                    o.insert("active", Json::Num(active.len() as f64));
+                    o.insert("weight_sum", Json::Num(1.0));
+                });
+            }
         }
+        for &w in &active {
+            if !known_active.contains(&w) {
+                tracer.event(Level::Info, "member_join", |o| {
+                    o.insert("step", Json::Num(step as f64));
+                    o.insert("worker", Json::Num(f64::from(w)));
+                    o.insert("active", Json::Num(active.len() as f64));
+                    o.insert("weight_sum", Json::Num(1.0));
+                });
+            }
+        }
+        known_active.clone_from(&active);
 
         tracer.event(Level::Info, "step", |o| {
             o.insert("step", Json::Num(step as f64));
@@ -237,6 +327,19 @@ pub fn run_worker_traced(
         });
 
         optimizer.step(&mut params, &agg, cfg.lr.lr(step));
+        step_records.push(WorkerStepRecord {
+            step: step as u32,
+            active_mask: active.iter().fold(0u64, |m, &w| m | (1u64 << w)),
+            width: {
+                let w = wire_width(&session);
+                if w == WIDTH_FP32 {
+                    32
+                } else {
+                    w
+                }
+            },
+            params_hash: hash_params(&params),
+        });
     }
 
     match Msg::read_from(&mut reader)? {
@@ -255,6 +358,7 @@ pub fn run_worker_traced(
         sent_bits,
         final_levels: session.final_levels(),
         level_updates,
+        step_records,
     })
 }
 
@@ -310,11 +414,13 @@ fn decode_wire<'a>(
     }
 }
 
-/// Flat all-to-all over the relay: one frame up, M frames down.
+/// Flat all-to-all over the relay: one frame up (when active), one
+/// frame per surviving sender down. Returns the broadcast active set.
 #[allow(clippy::too_many_arguments)]
 fn exchange_flat(
-    cfg: &WorkerConfig,
+    _cfg: &WorkerConfig,
     step: usize,
+    sending: bool,
     grad: &[f32],
     session: &CodecSession,
     lane: &mut ExchangeLane,
@@ -325,53 +431,68 @@ fn exchange_flat(
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
     tracer: &Tracer,
-) -> Result<()> {
+) -> Result<Vec<u32>> {
     let d = grad.len();
-    let bits = if session.is_quantized() {
-        lane.quantize(session, grad, qrng);
-        lane.encode(session)
-    } else {
-        lane.encode_raw(grad)
-    };
-    *sent_bits += bits;
-    trace_send(tracer, step, "grad", lane.encoded().bytes.len(), wire_width(session));
-    Msg::Grad {
-        step: step as u32,
-        grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
+    if sending {
+        let bits = if session.is_quantized() {
+            lane.quantize(session, grad, qrng);
+            lane.encode(session)
+        } else {
+            lane.encode_raw(grad)
+        };
+        *sent_bits += bits;
+        trace_send(tracer, step, "grad", lane.encoded().bytes.len(), wire_width(session));
+        Msg::Grad {
+            step: step as u32,
+            grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
+        }
+        .write_to(writer)?;
     }
-    .write_to(writer)?;
 
-    let grads = match Msg::read_from(reader)? {
-        Msg::AllGrads { step: s, grads } => {
+    let (members, active, grads) = match Msg::read_from(reader)? {
+        Msg::AllGrads {
+            step: s,
+            members,
+            active,
+            grads,
+        } => {
             if s as usize != step {
                 bail!("leader sent step {s}, expected {step}");
             }
-            grads
+            (members, active, grads)
         }
         other => bail!("expected AllGrads, got {other:?}"),
     };
     trace_recv(tracer, step, "all_grads", &grads);
+    if grads.len() != members.len() {
+        bail!("broadcast has {} frames for {} members", grads.len(), members.len());
+    }
+    // Weighted partial aggregation: each survivor contributes
+    // 1/n_active, the same rule the in-process sim applies.
+    let n_active = active.len().max(1);
     agg.fill(0.0);
     if prev_decoded.len() != grads.len() {
         *prev_decoded = vec![vec![0.0f32; d]; grads.len()];
     }
-    for (w, wire) in grads.iter().enumerate() {
+    for (i, wire) in grads.iter().enumerate() {
         let ghat = decode_wire(lane, session, wire)?;
         for (a, &g) in agg.iter_mut().zip(ghat) {
-            *a += g / cfg.world as f32;
+            *a += g / n_active as f32;
         }
-        prev_decoded[w].copy_from_slice(ghat);
+        prev_decoded[i].copy_from_slice(ghat);
     }
-    Ok(())
+    Ok(active)
 }
 
-/// Sharded leader lanes over the relay: S shard frames up, M·S shard
-/// frames down, reassembled per peer. Bit-identical to the flat mode.
+/// Sharded leader lanes over the relay: S shard frames up (when
+/// active), survivors' shard frames down, reassembled per peer.
+/// Bit-identical to the flat mode. Returns the broadcast active set.
 #[allow(clippy::too_many_arguments)]
 fn exchange_sharded(
-    cfg: &WorkerConfig,
+    _cfg: &WorkerConfig,
     step: usize,
     shards: usize,
+    sending: bool,
     grad: &[f32],
     session: &CodecSession,
     lane: &mut ExchangeLane,
@@ -383,7 +504,7 @@ fn exchange_sharded(
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
     tracer: &Tracer,
-) -> Result<()> {
+) -> Result<Vec<u32>> {
     let d = grad.len();
     let quantized = session.is_quantized();
     let bucket = session.bucket();
@@ -391,7 +512,7 @@ fn exchange_sharded(
 
     // Send our S shard frames (bucket-aligned for quantized payloads,
     // coordinate-even fp32 slices otherwise).
-    if quantized {
+    if sending && quantized {
         lane.quantize(session, grad, qrng);
         for shard in 0..shards {
             let buckets = shard_buckets(nb, shards, shard);
@@ -415,7 +536,7 @@ fn exchange_sharded(
             }
             .write_to(writer)?;
         }
-    } else {
+    } else if sending {
         for shard in 0..shards {
             let lo = shard * d / shards;
             let hi = (shard + 1) * d / shards;
@@ -433,9 +554,7 @@ fn exchange_sharded(
 
     // Receive each shard's relay broadcast and reassemble per peer.
     agg.fill(0.0);
-    if prev_decoded.len() != cfg.world {
-        *prev_decoded = vec![vec![0.0f32; d]; cfg.world];
-    }
+    let mut active_out: Vec<u32> = Vec::new();
     for shard in 0..shards {
         let (coord_lo, coord_hi) = if quantized {
             let buckets = shard_buckets(nb, shards, shard);
@@ -449,41 +568,62 @@ fn exchange_sharded(
         } else {
             (shard * d / shards, (shard + 1) * d / shards)
         };
-        let grads = match Msg::read_from(reader)? {
+        let (members, active, grads) = match Msg::read_from(reader)? {
             Msg::AllShardGrads {
                 step: s,
                 shard: sh,
+                members,
+                active,
                 grads,
             } => {
                 if s as usize != step || sh as usize != shard {
                     bail!("leader sent step {s} shard {sh}, expected {step}/{shard}");
                 }
-                grads
+                (members, active, grads)
             }
             other => bail!("expected AllShardGrads, got {other:?}"),
         };
         trace_recv(tracer, step, "all_shard_grads", &grads);
-        if grads.len() != cfg.world {
-            bail!("shard broadcast has {} frames, world {}", grads.len(), cfg.world);
+        if grads.len() != members.len() {
+            bail!(
+                "shard broadcast has {} frames for {} members",
+                grads.len(),
+                members.len()
+            );
         }
-        for (w, wire) in grads.iter().enumerate() {
+        // The member list is the same for every shard of a step, so
+        // resizing at the first shard keeps peer rows consistent; each
+        // coordinate range is fully rewritten below.
+        if prev_decoded.len() != members.len() {
+            *prev_decoded = vec![vec![0.0f32; d]; members.len()];
+        }
+        let n_active = active.len().max(1);
+        for (i, wire) in grads.iter().enumerate() {
             let ghat = decode_wire(lane, session, wire)?;
             for (a, &g) in agg[coord_lo..coord_hi].iter_mut().zip(ghat) {
-                *a += g / cfg.world as f32;
+                *a += g / n_active as f32;
             }
-            prev_decoded[w][coord_lo..coord_hi].copy_from_slice(ghat);
+            prev_decoded[i][coord_lo..coord_hi].copy_from_slice(ghat);
         }
+        active_out = active;
     }
-    Ok(())
+    Ok(active_out)
 }
 
-/// Two-level tree over the relay: frame up, leaders re-quantize group
-/// partials, everyone aggregates the G decoded partials.
+/// Two-level tree over the relay: frame up (when active), elected
+/// group leaders re-quantize their group's partial, everyone aggregates
+/// the surviving groups' partials. Returns the broadcast active set.
+///
+/// Leadership is *reactive*: the relay elects the first active member
+/// of each group every step (so leadership fails over when a leader is
+/// killed) and we learn we lead by receiving the group's `AllGrads`
+/// before the `AllLeaderGrads` broadcast.
 #[allow(clippy::too_many_arguments)]
 fn exchange_tree(
     cfg: &WorkerConfig,
     step: usize,
     groups: usize,
+    sending: bool,
     grad: &[f32],
     session: &CodecSession,
     lane: &mut ExchangeLane,
@@ -495,93 +635,111 @@ fn exchange_tree(
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
     tracer: &Tracer,
-) -> Result<()> {
+) -> Result<Vec<u32>> {
     let d = grad.len();
     let my_group = group_of(cfg.worker, cfg.world, groups);
-    let members = group_members(cfg.world, groups, my_group);
-    let is_leader = cfg.worker == members.start;
 
-    // 1. Everyone sends its frame up.
-    let bits = if session.is_quantized() {
-        lane.quantize(session, grad, qrng);
-        lane.encode(session)
-    } else {
-        lane.encode_raw(grad)
-    };
-    *sent_bits += bits;
-    trace_send(tracer, step, "grad", lane.encoded().bytes.len(), wire_width(session));
-    Msg::Grad {
-        step: step as u32,
-        grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
-    }
-    .write_to(writer)?;
-
-    // 2. Group leaders reduce their members and send the re-quantized
-    // partial mean contribution (Σ ĝ_w / world) up.
-    if is_leader {
-        let group = match Msg::read_from(reader)? {
-            Msg::AllGrads { step: s, grads } => {
-                if s as usize != step {
-                    bail!("leader sent step {s}, expected {step}");
-                }
-                grads
-            }
-            other => bail!("expected AllGrads (group frames), got {other:?}"),
-        };
-        trace_recv(tracer, step, "all_grads", &group);
-        if group.len() != members.len() {
-            bail!("group broadcast has {} frames, group size {}", group.len(), members.len());
-        }
-        partial.fill(0.0);
-        let inv = 1.0 / cfg.world as f32;
-        for wire in group.iter() {
-            let ghat = decode_wire(lane, session, wire)?;
-            for (p, &g) in partial.iter_mut().zip(ghat) {
-                *p += g * inv;
-            }
-        }
+    // 1. Active members send their frame up.
+    if sending {
         let bits = if session.is_quantized() {
-            lane.quantize(session, partial, qrng);
+            lane.quantize(session, grad, qrng);
             lane.encode(session)
         } else {
-            lane.encode_raw(partial)
+            lane.encode_raw(grad)
         };
         *sent_bits += bits;
-        trace_send(tracer, step, "leader", lane.encoded().bytes.len(), wire_width(session));
-        Msg::LeaderGrad {
+        trace_send(tracer, step, "grad", lane.encoded().bytes.len(), wire_width(session));
+        Msg::Grad {
             step: step as u32,
-            group: my_group as u32,
             grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
         }
         .write_to(writer)?;
     }
 
-    // 3. Everyone aggregates the G decoded partials.
-    let leads = match Msg::read_from(reader)? {
-        Msg::AllLeaderGrads { step: s, grads } => {
+    // 2. If the relay elected us group leader this step, it sends our
+    // group's frames first: reduce them into the partial mean
+    // contribution (Σ ĝ_w / n_active) and send it back up.
+    let first = Msg::read_from(reader)?;
+    let down = match first {
+        Msg::AllGrads {
+            step: s,
+            members,
+            active,
+            grads,
+        } => {
             if s as usize != step {
                 bail!("leader sent step {s}, expected {step}");
             }
-            grads
+            trace_recv(tracer, step, "all_grads", &grads);
+            if grads.len() != members.len() {
+                bail!(
+                    "group broadcast has {} frames for {} members",
+                    grads.len(),
+                    members.len()
+                );
+            }
+            partial.fill(0.0);
+            let inv = 1.0 / active.len().max(1) as f32;
+            for wire in grads.iter() {
+                let ghat = decode_wire(lane, session, wire)?;
+                for (p, &g) in partial.iter_mut().zip(ghat) {
+                    *p += g * inv;
+                }
+            }
+            let bits = if session.is_quantized() {
+                lane.quantize(session, partial, qrng);
+                lane.encode(session)
+            } else {
+                lane.encode_raw(partial)
+            };
+            *sent_bits += bits;
+            trace_send(tracer, step, "leader", lane.encoded().bytes.len(), wire_width(session));
+            Msg::LeaderGrad {
+                step: step as u32,
+                group: my_group as u32,
+                grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
+            }
+            .write_to(writer)?;
+            Msg::read_from(reader)?
+        }
+        other => other,
+    };
+
+    // 3. Everyone aggregates the surviving groups' decoded partials.
+    let (group_ids, active, leads) = match down {
+        Msg::AllLeaderGrads {
+            step: s,
+            groups: group_ids,
+            active,
+            grads,
+        } => {
+            if s as usize != step {
+                bail!("leader sent step {s}, expected {step}");
+            }
+            (group_ids, active, grads)
         }
         other => bail!("expected AllLeaderGrads, got {other:?}"),
     };
     trace_recv(tracer, step, "all_leader_grads", &leads);
-    if leads.len() != groups {
-        bail!("leader broadcast has {} frames, groups {}", leads.len(), groups);
+    if leads.len() != group_ids.len() {
+        bail!(
+            "leader broadcast has {} frames for {} groups",
+            leads.len(),
+            group_ids.len()
+        );
     }
     agg.fill(0.0);
-    if prev_decoded.len() != groups {
-        *prev_decoded = vec![vec![0.0f32; d]; groups];
+    if prev_decoded.len() != leads.len() {
+        *prev_decoded = vec![vec![0.0f32; d]; leads.len()];
     }
-    for (g, wire) in leads.iter().enumerate() {
+    for (i, wire) in leads.iter().enumerate() {
         let ghat = decode_wire(lane, session, wire)?;
         for (a, &x) in agg.iter_mut().zip(ghat) {
             *a += x;
         }
-        prev_decoded[g].copy_from_slice(ghat);
+        prev_decoded[i].copy_from_slice(ghat);
     }
-    Ok(())
+    Ok(active)
 }
 
 #[cfg(test)]
@@ -625,6 +783,7 @@ mod tests {
                 topology,
                 codec,
                 quantize_impl: QuantizeImpl::default(),
+                faults: FaultPlan::default(),
             };
             handles.push(std::thread::spawn(move || {
                 // Same dataset seed on every worker: shards differ by

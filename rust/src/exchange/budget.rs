@@ -91,75 +91,125 @@ impl Default for VarianceSpec {
     }
 }
 
+/// Reject a width outside the representable `[MIN_WIDTH, MAX_WIDTH]`
+/// range with a message naming both the width and the bounds.
+fn check_width(bits: u32) -> Result<(), String> {
+    if (MIN_WIDTH..=MAX_WIDTH).contains(&bits) {
+        Ok(())
+    } else {
+        Err(format!(
+            "width {bits} is out of range [{MIN_WIDTH}, {MAX_WIDTH}]"
+        ))
+    }
+}
+
 impl BitsPolicy {
     /// Parse a CLI value:
     /// `fixed:B`, `schedule:B1@s1,B2@s2,...` (s1 must be 0, steps
     /// strictly increasing), `variance`, `variance:MIN-MAX`, or
     /// `variance:MIN-MAX@TARGET`. Widths must lie in [2, 8].
+    /// `None` on any malformation; [`BitsPolicy::parse_strict`] reports
+    /// *why* a spec was rejected.
     pub fn parse(s: &str) -> Option<BitsPolicy> {
+        Self::parse_strict(s).ok()
+    }
+
+    /// [`BitsPolicy::parse`] with diagnostics: the same grammar, but a
+    /// rejection explains itself (empty spec, out-of-range width,
+    /// duplicate or out-of-order schedule steps, malformed segment).
+    pub fn parse_strict(s: &str) -> Result<BitsPolicy, String> {
         let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() {
+            return Err(
+                "empty bits policy (expected fixed:B | schedule:B1@s1,... | variance[:MIN-MAX[@T]])"
+                    .to_string(),
+            );
+        }
         if let Some(rest) = s.strip_prefix("fixed:") {
-            let bits: u32 = rest.parse().ok()?;
-            if !(MIN_WIDTH..=MAX_WIDTH).contains(&bits) {
-                return None;
-            }
-            return Some(BitsPolicy::Fixed(bits));
+            let bits: u32 = rest
+                .parse()
+                .map_err(|_| format!("invalid width {rest:?} in fixed policy"))?;
+            check_width(bits)?;
+            return Ok(BitsPolicy::Fixed(bits));
         }
         if let Some(rest) = s.strip_prefix("schedule:") {
+            if rest.is_empty() {
+                return Err("empty schedule (expected B1@s1,B2@s2,...)".to_string());
+            }
             let mut segments: Vec<(usize, u32)> = Vec::new();
             for seg in rest.split(',') {
-                let (bits, step) = seg.split_once('@')?;
-                let bits: u32 = bits.parse().ok()?;
-                let step: usize = step.parse().ok()?;
-                if !(MIN_WIDTH..=MAX_WIDTH).contains(&bits) {
-                    return None;
-                }
+                let (bits, step) = seg
+                    .split_once('@')
+                    .ok_or_else(|| format!("schedule segment {seg:?} is missing '@step'"))?;
+                let bits: u32 = bits
+                    .parse()
+                    .map_err(|_| format!("invalid width {bits:?} in schedule segment {seg:?}"))?;
+                let step: usize = step
+                    .parse()
+                    .map_err(|_| format!("invalid step {step:?} in schedule segment {seg:?}"))?;
+                check_width(bits)?;
                 if let Some(&(prev, _)) = segments.last() {
-                    if step <= prev {
-                        return None;
+                    if step == prev {
+                        return Err(format!("duplicate step {step} in schedule"));
+                    }
+                    if step < prev {
+                        return Err(format!(
+                            "schedule steps must be strictly increasing (step {step} after {prev})"
+                        ));
                     }
                 }
                 segments.push((step, bits));
             }
             if segments.first().map(|&(s0, _)| s0) != Some(0) {
-                return None;
+                return Err("schedule must start with a segment at step 0".to_string());
             }
-            return Some(BitsPolicy::Schedule(segments));
+            return Ok(BitsPolicy::Schedule(segments));
         }
         if s == "variance" {
-            return Some(BitsPolicy::Variance(VarianceSpec::default()));
+            return Ok(BitsPolicy::Variance(VarianceSpec::default()));
         }
         if let Some(rest) = s.strip_prefix("variance:") {
             let (range, target) = match rest.split_once('@') {
                 Some((r, t)) => (r, Some(t)),
                 None => (rest, None),
             };
-            let (lo, hi) = range.split_once('-')?;
-            let min_bits: u32 = lo.parse().ok()?;
-            let max_bits: u32 = hi.parse().ok()?;
-            if !(MIN_WIDTH..=MAX_WIDTH).contains(&min_bits)
-                || !(MIN_WIDTH..=MAX_WIDTH).contains(&max_bits)
-                || min_bits > max_bits
-            {
-                return None;
+            let (lo, hi) = range
+                .split_once('-')
+                .ok_or_else(|| format!("variance range {range:?} is missing '-' (expected MIN-MAX)"))?;
+            let min_bits: u32 = lo
+                .parse()
+                .map_err(|_| format!("invalid width {lo:?} in variance range"))?;
+            let max_bits: u32 = hi
+                .parse()
+                .map_err(|_| format!("invalid width {hi:?} in variance range"))?;
+            check_width(min_bits)?;
+            check_width(max_bits)?;
+            if min_bits > max_bits {
+                return Err(format!("inverted variance range {min_bits}-{max_bits}"));
             }
             let target = match target {
                 Some(t) => {
-                    let t: f64 = t.parse().ok()?;
+                    let t: f64 = t
+                        .parse()
+                        .map_err(|_| format!("invalid variance target {t:?}"))?;
                     if !t.is_finite() || t <= 0.0 {
-                        return None;
+                        return Err(format!(
+                            "variance target must be positive and finite, got {t}"
+                        ));
                     }
                     t
                 }
                 None => VarianceSpec::default().target,
             };
-            return Some(BitsPolicy::Variance(VarianceSpec {
+            return Ok(BitsPolicy::Variance(VarianceSpec {
                 min_bits,
                 max_bits,
                 target,
             }));
         }
-        None
+        Err(format!(
+            "unknown bits policy {s:?} (expected fixed:B | schedule:B1@s1,... | variance[:MIN-MAX[@T]])"
+        ))
     }
 
     /// Canonical lowercase name for logs and banners (re-parses to an
@@ -694,6 +744,36 @@ mod tests {
             "3",
         ] {
             assert_eq!(BitsPolicy::parse(s), None, "{s:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn policy_parse_strict_explains_rejections() {
+        for (spec, needle) in [
+            ("", "empty bits policy"),
+            ("   ", "empty bits policy"),
+            ("fixed:9", "out of range"),
+            ("fixed:x", "invalid width"),
+            ("schedule:", "empty schedule"),
+            ("schedule:3@0,4@0", "duplicate step 0"),
+            ("schedule:3@0,4@10,2@5", "strictly increasing"),
+            ("schedule:3@5", "start with a segment at step 0"),
+            ("schedule:3", "missing '@step'"),
+            ("variance:4-2", "inverted variance range"),
+            ("variance:2-4@0", "must be positive"),
+            ("variance:24", "missing '-'"),
+            ("bogus", "unknown bits policy"),
+        ] {
+            let err = BitsPolicy::parse_strict(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec:?}: {err:?} lacks {needle:?}");
+        }
+        // The strict and lossy parsers agree on acceptance.
+        for spec in ["fixed:3", "schedule:4@0,2@9", "variance:2-4@0.25"] {
+            assert_eq!(
+                BitsPolicy::parse(spec),
+                BitsPolicy::parse_strict(spec).ok(),
+                "{spec}"
+            );
         }
     }
 

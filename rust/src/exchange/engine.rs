@@ -200,18 +200,30 @@ impl GradientExchange {
         );
         agg.fill(0.0);
         let net = self.core.cfg().network;
+        // The elastic active set: at full strength this is 0..M and the
+        // schedule below is byte-identical to the fixed-membership one;
+        // under churn only active lanes contribute frames and weight.
+        let ids = self.core.membership().active_ids();
+        let n = ids.len();
+        if n == 0 {
+            self.core.finish_step(Vec::new(), 0, 0.0);
+            return 0;
+        }
+        self.bits_scratch.iter_mut().for_each(|b| *b = 0);
 
         if !self.core.is_quantized() {
             // Full precision is charged at 32·d per worker.
             let mut step_bits = 0u64;
-            for (w, grad) in grads.iter().take(m).enumerate() {
+            for &w in &ids {
+                let grad = &grads[w];
                 self.bits_scratch[w] = 32 * grad.len() as u64;
                 step_bits += self.bits_scratch[w];
                 for (a, &g) in agg.iter_mut().zip(grad) {
-                    *a += g / m as f32;
+                    *a += g / n as f32;
                 }
             }
-            let seconds = net.step_time(&self.bits_scratch);
+            let active_bits: Vec<u64> = ids.iter().map(|&w| self.bits_scratch[w]).collect();
+            let seconds = net.step_time(&active_bits);
             self.core.finish_step(
                 vec![Hop {
                     label: "all-to-all".to_string(),
@@ -233,9 +245,10 @@ impl GradientExchange {
         // thread, so the f32 accumulation matches the serial loop
         // bit-for-bit no matter how the lanes were scheduled.
         let t_agg = std::time::Instant::now();
-        let inv = 1.0 / m as f32;
+        let inv = 1.0 / n as f32;
         let mut step_bits = 0u64;
-        for (w, lane) in self.lanes.iter().enumerate() {
+        for &w in &ids {
+            let lane = &self.lanes[w];
             self.bits_scratch[w] = lane.bits();
             step_bits += self.bits_scratch[w];
             for (a, &g) in agg.iter_mut().zip(lane.ghat()) {
@@ -245,9 +258,11 @@ impl GradientExchange {
         self.core
             .trace_phase("aggregate", t_agg.elapsed().as_secs_f64());
         self.core.add_codec_seconds(t0.elapsed().as_secs_f64());
-        // The flat schedule is one hop: every worker's frame crosses the
-        // fabric once, at the analytical closed-form step time.
-        let seconds = net.step_time(&self.bits_scratch);
+        // The flat schedule is one hop: every active worker's frame
+        // crosses the fabric once, at the analytical closed-form step
+        // time.
+        let active_bits: Vec<u64> = ids.iter().map(|&w| self.bits_scratch[w]).collect();
+        let seconds = net.step_time(&active_bits);
         self.core.finish_step(
             vec![Hop {
                 label: "all-to-all".to_string(),

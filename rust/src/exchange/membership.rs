@@ -1,0 +1,176 @@
+//! Elastic membership: the active worker set every topology inherits.
+//!
+//! A [`Membership`] tracks which of the configured `world` workers are
+//! currently participating, each worker's aggregation share, and the
+//! join/leave epochs. All four topology backends read the active set
+//! through [`super::BackendCore`], so churn (driven by a
+//! `sim::FaultPlan` or by the TCP leader's timeout-and-drop path)
+//! changes *who* is averaged without touching any schedule's code path.
+//!
+//! Invariants (DESIGN.md §Membership):
+//!
+//! * The active set only changes at step boundaries, never mid-step.
+//! * Weights are shares normalized over the active set, so
+//!   [`Membership::weight_sum`] is exactly 1.0 whenever anyone is
+//!   active — survivors absorb a dropped worker's share instead of
+//!   silently down-scaling the mean.
+//! * A worker that leaves never rejoins (its join epoch is recorded
+//!   once; `left_at` is terminal).
+
+/// The active set, per-worker shares, and join/leave epochs for one run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Membership {
+    active: Vec<bool>,
+    /// Step each worker became active (0 for founding members).
+    joined_at: Vec<usize>,
+    /// Step each worker left, once it has (terminal).
+    left_at: Vec<Option<usize>>,
+    /// Aggregation shares; uniform today, but the weighting rule is
+    /// written against shares so heterogeneous contributions slot in.
+    shares: Vec<u32>,
+}
+
+impl Membership {
+    /// A full-strength membership: all `world` workers active from
+    /// step 0 with uniform shares.
+    pub fn new(world: usize) -> Self {
+        Membership {
+            active: vec![true; world],
+            joined_at: vec![0; world],
+            left_at: vec![None; world],
+            shares: vec![1; world],
+        }
+    }
+
+    /// The configured world size (active or not).
+    pub fn world(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Whether `worker` currently participates in aggregation.
+    pub fn is_active(&self, worker: usize) -> bool {
+        self.active[worker]
+    }
+
+    /// Number of currently active workers.
+    pub fn n_active(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Ascending ids of the currently active workers.
+    pub fn active_ids(&self) -> Vec<usize> {
+        (0..self.active.len()).filter(|&w| self.active[w]).collect()
+    }
+
+    /// The active set as a bitmask (bit `w` set ⇔ worker `w` active).
+    /// Worlds are far below 64 workers throughout the repo.
+    pub fn active_mask(&self) -> u64 {
+        self.active_ids().iter().fold(0u64, |m, &w| m | (1u64 << w))
+    }
+
+    /// Mark `worker` as a standby replica before the run starts (it has
+    /// a pending `join` fault). Records no leave epoch: the worker has
+    /// simply not joined yet.
+    pub fn deactivate_from_start(&mut self, worker: usize) {
+        self.active[worker] = false;
+    }
+
+    /// Activate `worker` at `step` (a standby replica joining).
+    pub fn activate(&mut self, worker: usize, step: usize) {
+        self.active[worker] = true;
+        self.joined_at[worker] = step;
+    }
+
+    /// Permanently remove `worker` at `step`.
+    pub fn deactivate(&mut self, worker: usize, step: usize) {
+        self.active[worker] = false;
+        self.left_at[worker] = Some(step);
+    }
+
+    /// The step `worker` became (or will have become) active.
+    pub fn joined_at(&self, worker: usize) -> usize {
+        self.joined_at[worker]
+    }
+
+    /// The step `worker` left, if it has.
+    pub fn left_at(&self, worker: usize) -> Option<usize> {
+        self.left_at[worker]
+    }
+
+    /// `worker`'s normalized aggregation weight: its share over the
+    /// active total (0 when inactive).
+    pub fn weight(&self, worker: usize) -> f32 {
+        if !self.active[worker] {
+            return 0.0;
+        }
+        let total: u32 = self
+            .active
+            .iter()
+            .zip(&self.shares)
+            .filter_map(|(&a, &s)| a.then_some(s))
+            .sum();
+        self.shares[worker] as f32 / total as f32
+    }
+
+    /// Σ weights over the active set: exactly 1.0 whenever any worker
+    /// is active (0.0 for an empty set). The weighted-partial-
+    /// aggregation invariant the CI fault smoke asserts.
+    pub fn weight_sum(&self) -> f32 {
+        if self.n_active() == 0 {
+            return 0.0;
+        }
+        let total: u32 = self
+            .active
+            .iter()
+            .zip(&self.shares)
+            .filter_map(|(&a, &s)| a.then_some(s))
+            .sum();
+        total as f32 / total as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_strength_defaults() {
+        let m = Membership::new(4);
+        assert_eq!(m.world(), 4);
+        assert_eq!(m.n_active(), 4);
+        assert_eq!(m.active_ids(), vec![0, 1, 2, 3]);
+        assert_eq!(m.active_mask(), 0b1111);
+        assert_eq!(m.weight_sum(), 1.0);
+        assert_eq!(m.weight(2), 0.25);
+    }
+
+    #[test]
+    fn drop_and_join_keep_weights_normalized() {
+        let mut m = Membership::new(4);
+        m.deactivate(1, 3);
+        assert_eq!(m.n_active(), 3);
+        assert_eq!(m.active_mask(), 0b1101);
+        assert_eq!(m.left_at(1), Some(3));
+        assert_eq!(m.weight(1), 0.0);
+        assert_eq!(m.weight_sum(), 1.0, "survivors absorb the dropped share");
+        assert!((m.weight(0) - 1.0 / 3.0).abs() < 1e-7);
+
+        let mut m = Membership::new(4);
+        m.deactivate_from_start(2);
+        assert_eq!(m.n_active(), 3);
+        assert_eq!(m.left_at(2), None, "standby, not departed");
+        m.activate(2, 5);
+        assert_eq!(m.joined_at(2), 5);
+        assert_eq!(m.n_active(), 4);
+        assert_eq!(m.weight_sum(), 1.0);
+    }
+
+    #[test]
+    fn empty_active_set_has_zero_weight() {
+        let mut m = Membership::new(1);
+        m.deactivate(0, 0);
+        assert_eq!(m.n_active(), 0);
+        assert_eq!(m.weight_sum(), 0.0);
+        assert_eq!(m.active_mask(), 0);
+    }
+}

@@ -43,11 +43,13 @@
 
 pub mod budget;
 pub mod engine;
+pub mod membership;
 pub mod session;
 pub mod topology;
 
 pub use budget::{BitController, BitsPolicy, QuantizerBank, VarianceSpec};
 pub use engine::{ExchangeConfig, GradientExchange, ParallelMode};
+pub use membership::Membership;
 pub use session::{CodecSession, ExchangeLane};
 pub use topology::core::{BackendCore, CodecPhase};
 pub use topology::{make_backend, Hop, TopologySpec};

@@ -44,6 +44,7 @@
 
 use super::super::budget::{select_width, BitController};
 use super::super::engine::{ExchangeConfig, ParallelMode};
+use super::super::membership::Membership;
 use super::super::session::{CodecSession, ExchangeLane};
 use super::Hop;
 use crate::quant::{Method, Quantizer};
@@ -98,6 +99,11 @@ pub struct BackendCore {
     step_width: u32,
     rngs: Vec<Rng>,
     active: usize,
+    /// The elastic active set over the `active` lanes: which lanes
+    /// currently participate in aggregation, their weights, and their
+    /// join/leave epochs. Full strength unless churn is injected
+    /// (`sim::FaultPlan`, TCP timeout-and-drop).
+    membership: Membership,
     meter: Meter,
     codec_seconds: f64,
     phase: CodecPhase,
@@ -138,6 +144,7 @@ impl BackendCore {
             controller,
             step_width,
             rngs,
+            membership: Membership::new(active),
             active,
             meter: Meter::default(),
             codec_seconds: 0.0,
@@ -175,11 +182,13 @@ impl BackendCore {
             self.step_width = 32;
             return;
         }
-        // Worker 0's gradient is the representative observation (the
-        // same protocol the TCP worker runs on its own gradient —
-        // `budget::select_width` is the single shared implementation,
-        // and the single `bit_decision` trace point).
-        let grad = grads.first().map(|g| g.as_slice()).unwrap_or_default();
+        // The first active worker's gradient is the representative
+        // observation (worker 0 at full strength — the same protocol
+        // the TCP worker runs on its own gradient; `budget::select_width`
+        // is the single shared implementation, and the single
+        // `bit_decision` trace point).
+        let w0 = self.membership.active_ids().first().copied().unwrap_or(0);
+        let grad = grads.get(w0).map(|g| g.as_slice()).unwrap_or_default();
         self.step_width = select_width(
             self.controller.as_mut(),
             &mut self.session,
@@ -201,8 +210,54 @@ impl BackendCore {
     }
 
     /// Lanes that actually compute and communicate (1 for SingleSGD).
+    /// This is the *configured* lane count; the churn-aware subset that
+    /// participates in aggregation is [`BackendCore::membership`].
     pub fn active_workers(&self) -> usize {
         self.active
+    }
+
+    /// The elastic active set every topology schedule aggregates over.
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// Mutable membership access (run setup: standby marking for
+    /// workers with a pending `join` fault).
+    pub fn membership_mut(&mut self) -> &mut Membership {
+        &mut self.membership
+    }
+
+    /// Permanently remove `worker` from the active set at the top of
+    /// `step`: emits a `member_drop` event and a [`crate::trace::warn`]
+    /// notice. Survivor weights renormalize to sum to exactly 1.
+    pub fn drop_worker(&mut self, step: usize, worker: usize) {
+        self.membership.deactivate(worker, step);
+        let active = self.membership.n_active();
+        let weight_sum = self.membership.weight_sum();
+        self.tracer.event(Level::Info, "member_drop", |o| {
+            o.insert("step", Json::Num(step as f64));
+            o.insert("worker", Json::Num(worker as f64));
+            o.insert("active", Json::Num(active as f64));
+            o.insert("weight_sum", Json::Num(f64::from(weight_sum)));
+        });
+        crate::trace::warn(
+            "membership",
+            &format!("worker {worker} dropped at step {step}; {active} active (weight_sum {weight_sum})"),
+        );
+    }
+
+    /// Activate standby `worker` at the top of `step` (its scripted
+    /// `join` fault fired): emits a `member_join` event.
+    pub fn join_worker(&mut self, step: usize, worker: usize) {
+        self.membership.activate(worker, step);
+        let active = self.membership.n_active();
+        let weight_sum = self.membership.weight_sum();
+        self.tracer.event(Level::Info, "member_join", |o| {
+            o.insert("step", Json::Num(step as f64));
+            o.insert("worker", Json::Num(worker as f64));
+            o.insert("active", Json::Num(active as f64));
+            o.insert("weight_sum", Json::Num(f64::from(weight_sum)));
+        });
     }
 
     /// Allocate one reusable codec lane per active worker.
@@ -255,6 +310,12 @@ impl BackendCore {
     /// The running communication meter (total bits + modeled seconds).
     pub fn meter(&self) -> &Meter {
         &self.meter
+    }
+
+    /// Mutable meter access — fault injection charges straggler delays
+    /// (`delay:W@S:MS`) here without a step or any bits.
+    pub fn meter_mut(&mut self) -> &mut Meter {
+        &mut self.meter
     }
 
     /// Wall time spent inside quantize+encode+decode so far.
@@ -346,7 +407,12 @@ impl BackendCore {
         }
         let t0 = Instant::now();
         let mut rng = self.rngs[0].fork(0xE57);
-        let updated = self.session.adapt(grads.iter().map(|g| g.as_slice()), &mut rng);
+        // Only active members contribute to the fit: a dropped or
+        // standby lane's gradients must not shape the shared levels.
+        let ids = self.membership.active_ids();
+        let updated = self
+            .session
+            .adapt(ids.iter().map(|&w| grads[w].as_slice()), &mut rng);
         if !updated {
             self.session.refresh_book_from_counts();
         } else {
@@ -377,11 +443,14 @@ impl BackendCore {
     }
 
     /// The member stage every gathered schedule starts with: bootstrap
-    /// the lazy empirical codebook from lane 0's first quantization if
-    /// the coder needs one, quantize every lane from its own RNG stream
-    /// (fanned out per [`BackendCore::use_parallel`]), sample symbol
-    /// counts every 10th step, and — when `encode` is set — entropy-encode
-    /// and loopback-decode each lane's frame. Sampled counts are folded
+    /// the lazy empirical codebook from the first *active* lane's first
+    /// quantization if the coder needs one, quantize every active lane
+    /// from its own RNG stream (fanned out per
+    /// [`BackendCore::use_parallel`]), sample symbol counts every 10th
+    /// step, and — when `encode` is set — entropy-encode and
+    /// loopback-decode each lane's frame. Inactive lanes (dropped or
+    /// standby members) are skipped entirely: they contribute no
+    /// symbols, no counts, and no frames. Sampled counts are folded
     /// into the session on the calling thread in worker order, so
     /// refreshed codebooks are bit-identical across schedules and modes.
     ///
@@ -393,26 +462,30 @@ impl BackendCore {
         step: usize,
         encode: bool,
     ) {
-        let mut lane0_quantized = false;
+        let ids = self.membership.active_ids();
+        let Some(&first) = ids.first() else { return };
+        let mut first_quantized = false;
         if self.session.needs_book() && self.session.book().is_none() {
-            lanes[0].quantize(&self.session, &grads[0], &mut self.rngs[0]);
-            self.session.build_empirical_book(lanes[0].quantized());
-            lane0_quantized = true;
+            lanes[first].quantize(&self.session, &grads[first], &mut self.rngs[first]);
+            self.session.build_empirical_book(lanes[first].quantized());
+            first_quantized = true;
         }
         let sample_counts = self.session.needs_book() && step % 10 == 0;
-        let parallel = self.use_parallel(lanes.len(), grads.first().map_or(0, |g| g.len()));
+        let parallel = self.use_parallel(ids.len(), grads.first().map_or(0, |g| g.len()));
         let timings = {
             let session = &self.session;
-            let mut tasks: Vec<(&mut ExchangeLane, &mut Rng, &[f32])> = lanes
-                .iter_mut()
-                .zip(self.rngs.iter_mut())
-                .zip(grads)
-                .map(|((lane, rng), grad)| (lane, rng, grad.as_slice()))
+            let lane_refs = disjoint_mut(lanes, ids.iter().copied());
+            let rng_refs = disjoint_mut(&mut self.rngs, ids.iter().copied());
+            let mut tasks: Vec<(&mut ExchangeLane, &mut Rng, &[f32])> = lane_refs
+                .into_iter()
+                .zip(rng_refs)
+                .zip(ids.iter())
+                .map(|((lane, rng), &w)| (lane, rng, grads[w].as_slice()))
                 .collect();
-            fan_out(parallel, &mut tasks, |w, task| {
+            fan_out(parallel, &mut tasks, |i, task| {
                 let (lane, rng, grad) = task;
                 let t0 = Instant::now();
-                if !(w == 0 && lane0_quantized) {
+                if !(i == 0 && first_quantized) {
                     lane.quantize(session, grad, rng);
                 }
                 if sample_counts {
@@ -434,8 +507,8 @@ impl BackendCore {
         if sample_counts {
             // Worker-order f64 accumulation on the calling thread, so
             // refreshed codebooks never depend on lane scheduling.
-            for lane in lanes.iter() {
-                self.session.accumulate_counts(lane.counts());
+            for &w in &ids {
+                self.session.accumulate_counts(lanes[w].counts());
             }
         }
         // Per-lane timings fold in worker order on the calling thread:

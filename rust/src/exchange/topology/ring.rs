@@ -120,6 +120,16 @@ impl RingExchange {
             grads.len()
         );
         agg.fill(0.0);
+        // The ring is formed over the active membership: position i on
+        // the ring is worker `ids[i]`, and chunks split the parameter
+        // vector `n` ways (not `m`), so a shrunken ring stays a valid
+        // 2(n−1)-stage schedule.
+        let ids = self.core.membership().active_ids();
+        let n = ids.len();
+        if n == 0 {
+            self.core.finish_step(Vec::new(), 0, 0.0);
+            return 0;
+        }
         let d = agg.len();
         let net = self.core.cfg().network;
         let (session, rngs) = self.core.codec_mut();
@@ -141,18 +151,18 @@ impl RingExchange {
             p.extend_from_slice(g);
         }
 
-        let mut hops: Vec<Hop> = Vec::with_capacity(2 * m.saturating_sub(1));
+        let mut hops: Vec<Hop> = Vec::with_capacity(2 * n.saturating_sub(1));
         let mut step_bits = 0u64;
         let mut step_seconds = 0.0f64;
 
-        // Reduce-scatter: M−1 stages, every link active in parallel.
-        for t in 0..m.saturating_sub(1) {
+        // Reduce-scatter: N−1 stages, every link active in parallel.
+        for t in 0..n.saturating_sub(1) {
             let mut stage_bits = 0u64;
             let mut stage_max = 0u64;
-            for w in 0..m {
-                let c = (w + m - t) % m;
-                let r = (w + 1) % m;
-                let range = Self::chunk_coords(c, m, nb, bucket, d);
+            for (i, &w) in ids.iter().enumerate() {
+                let c = (i + n - t) % n;
+                let r = ids[(i + 1) % n];
+                let range = Self::chunk_coords(c, n, nb, bucket, d);
                 let bits = if quantized {
                     self.chunk_lane.quantize(
                         session,
@@ -195,13 +205,13 @@ impl RingExchange {
         }
 
         // Finalize: chunk owners scale to the mean, re-quantize once, and
-        // the reduced frames circle the ring M−1 more stages.
-        let inv = 1.0 / m as f32;
+        // the reduced frames circle the ring N−1 more stages.
+        let inv = 1.0 / n as f32;
         let mut final_bits = 0u64;
         let mut final_max = 0u64;
-        for c in 0..m {
-            let o = (c + m - 1) % m;
-            let range = Self::chunk_coords(c, m, nb, bucket, d);
+        for c in 0..n {
+            let o = ids[(c + n - 1) % n];
+            let range = Self::chunk_coords(c, n, nb, bucket, d);
             let bits = if quantized {
                 self.mean_buf.clear();
                 self.mean_buf
@@ -232,7 +242,7 @@ impl RingExchange {
             final_bits += bits;
             final_max = final_max.max(bits);
         }
-        if m == 1 {
+        if n == 1 {
             // Degenerate single-worker ring: nothing crosses a link.
             hops.push(Hop {
                 label: "loopback".to_string(),
@@ -241,7 +251,7 @@ impl RingExchange {
             });
             step_bits += final_bits;
         } else {
-            for u in 0..m - 1 {
+            for u in 0..n - 1 {
                 let seconds = net.link_time(final_max);
                 step_bits += final_bits;
                 step_seconds += seconds;

@@ -103,18 +103,28 @@ impl ShardedExchange {
         agg.fill(0.0);
         let net = self.core.cfg().network;
         let shards = self.shards;
+        // The elastic active set: 0..M at full strength (byte-identical
+        // to the fixed-membership schedule), a subset under churn.
+        let ids = self.core.membership().active_ids();
+        let n = ids.len();
+        if n == 0 {
+            self.core.finish_step(Vec::new(), 0, 0.0);
+            return 0;
+        }
+        self.bits_scratch.iter_mut().for_each(|b| *b = 0);
 
         if !self.core.is_quantized() {
-            // Full precision: 32·d per worker, reduced in worker order
-            // exactly as the flat engine does; shards split the fp32
-            // payload coordinate-evenly for the hop accounting.
+            // Full precision: 32·d per active worker, reduced in worker
+            // order exactly as the flat engine does; shards split the
+            // fp32 payload coordinate-evenly for the hop accounting.
             let d = agg.len();
             let mut step_bits = 0u64;
-            for (w, grad) in grads.iter().take(m).enumerate() {
+            for &w in &ids {
+                let grad = &grads[w];
                 self.bits_scratch[w] = 32 * grad.len() as u64;
                 step_bits += self.bits_scratch[w];
                 for (a, &g) in agg.iter_mut().zip(grad) {
-                    *a += g / m as f32;
+                    *a += g / n as f32;
                 }
             }
             let mut hops = Vec::with_capacity(shards);
@@ -123,9 +133,9 @@ impl ShardedExchange {
                 let lo = s * d / shards;
                 let hi = (s + 1) * d / shards;
                 let per_worker = 32 * (hi - lo) as u64;
-                let hop_bits = per_worker * m as u64;
-                let seconds = net.fan_time(m.saturating_sub(1), per_worker)
-                    + net.fan_time(m.saturating_sub(1), hop_bits);
+                let hop_bits = per_worker * n as u64;
+                let seconds = net.fan_time(n.saturating_sub(1), per_worker)
+                    + net.fan_time(n.saturating_sub(1), hop_bits);
                 step_seconds = step_seconds.max(seconds);
                 hops.push(Hop {
                     label: format!("shard{s}"),
@@ -143,9 +153,9 @@ impl ShardedExchange {
         self.core.member_stage(&mut self.lanes, grads, step, false);
 
         let bucket = self.core.session().bucket();
-        let nb = self.lanes[0].quantized().norms.len();
+        let nb = self.lanes[ids[0]].quantized().norms.len();
         let d = agg.len();
-        let inv = 1.0 / m as f32;
+        let inv = 1.0 / n as f32;
 
         // Split the aggregate into the S disjoint shard slices, in
         // shard (schedule) order.
@@ -183,7 +193,8 @@ impl ShardedExchange {
             let mut per_worker = vec![0u64; m];
             let mut hop_bits = 0u64;
             let mut max_bits = 0u64;
-            for (w, lane) in lanes.iter().enumerate() {
+            for &w in &ids {
+                let lane = &lanes[w];
                 scratch.writer.clear();
                 let bits = lane.encode_shard_into(
                     session,
@@ -217,9 +228,6 @@ impl ShardedExchange {
 
         // Fold the per-shard results back in shard (schedule) order —
         // hop records never depend on thread-completion order.
-        for b in self.bits_scratch.iter_mut() {
-            *b = 0;
-        }
         let mut step_bits = 0u64;
         let mut step_seconds = 0.0f64;
         let mut hops = Vec::with_capacity(shards);
@@ -228,11 +236,12 @@ impl ShardedExchange {
                 *acc += bits;
             }
             step_bits += hop_bits;
-            // Leader s: serialized fan-in of M−1 shard frames, then a
-            // serialized fan-out relaying the shard's frames down. The S
-            // leader lanes run in parallel → the step pays the slowest.
-            let seconds = net.fan_time(m.saturating_sub(1), max_bits)
-                + net.fan_time(m.saturating_sub(1), hop_bits);
+            // Leader s: serialized fan-in of N−1 shard frames (N active
+            // members), then a serialized fan-out relaying the shard's
+            // frames down. The S leader lanes run in parallel → the step
+            // pays the slowest.
+            let seconds = net.fan_time(n.saturating_sub(1), max_bits)
+                + net.fan_time(n.saturating_sub(1), hop_bits);
             step_seconds = step_seconds.max(seconds);
             hops.push(Hop {
                 label: format!("shard{s}"),

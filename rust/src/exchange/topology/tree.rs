@@ -91,7 +91,24 @@ impl HierarchicalExchange {
         let d = agg.len();
         let net = self.core.cfg().network;
         let groups = self.groups;
-        let inv = 1.0 / m as f32;
+        // The elastic active set, projected onto the *fixed* group
+        // partition over the configured lanes: membership changes who
+        // participates in each group, never the partition itself. Groups
+        // whose members are all gone contribute no leader frame.
+        let ids = self.core.membership().active_ids();
+        let n = ids.len();
+        if n == 0 {
+            self.core.finish_step(Vec::new(), 0, 0.0);
+            return 0;
+        }
+        let group_ids: Vec<Vec<usize>> = (0..groups)
+            .map(|g| {
+                let r = group_members(m, groups, g);
+                ids.iter().copied().filter(|w| r.contains(w)).collect()
+            })
+            .collect();
+        let present: Vec<usize> = (0..groups).filter(|&g| !group_ids[g].is_empty()).collect();
+        let inv = 1.0 / n as f32;
         for p in self.partials.iter_mut() {
             if p.len() != d {
                 p.resize(d, 0.0);
@@ -100,13 +117,12 @@ impl HierarchicalExchange {
 
         if !self.core.is_quantized() {
             // Full precision: raw fp32 frames up, fp32 partials across
-            // and down. The two-level association (Σ_g (Σ_{w∈g} g/M))
+            // and down. The two-level association (Σ_g (Σ_{w∈g} g/N))
             // differs from flat's flat sum — the same schedule change the
             // quantized path makes, without codec noise.
-            for g in 0..groups {
-                let members = group_members(m, groups, g);
+            for &g in &present {
                 self.partials[0].fill(0.0);
-                for w in members {
+                for &w in &group_ids[g] {
                     for (p, &x) in self.partials[0].iter_mut().zip(&grads[w]) {
                         *p += x * inv;
                     }
@@ -115,8 +131,8 @@ impl HierarchicalExchange {
                     *a += p;
                 }
             }
-            let up_bits = 32 * d as u64 * m as u64;
-            let lead_bits = 32 * d as u64 * groups as u64;
+            let up_bits = 32 * d as u64 * n as u64;
+            let lead_bits = 32 * d as u64 * present.len() as u64;
             let (up_s, xchg_s, down_s) = self.fp_hop_seconds(m, groups, 32 * d as u64, lead_bits);
             let step_bits = up_bits + 2 * lead_bits;
             self.core.finish_step(
@@ -132,32 +148,32 @@ impl HierarchicalExchange {
         // its own frame via the shared member stage; the codebook
         // lifecycle is identical to the flat engine.
         self.core.member_stage(&mut self.lanes, grads, step, true);
-        let up_bits: u64 = self.lanes.iter().map(|l| l.bits()).sum();
+        let up_bits: u64 = ids.iter().map(|&w| self.lanes[w].bits()).sum();
 
         // 2. xchg — leaders re-quantize group partials and exchange.
-        // Each group owns its partial buffer, leader lane, and leader
-        // RNG stream, so the G reductions fan out across threads; the
-        // per-group member reduction stays in member order.
-        let par = self.core.use_parallel(groups, d);
+        // Each *present* group's leader is its first active member (the
+        // fixed `members.start` at full strength). Each group owns its
+        // partial buffer, leader lane, and leader RNG stream, so the
+        // reductions fan out across threads; the per-group member
+        // reduction stays in member order.
+        let par = self.core.use_parallel(present.len(), d);
         let (session, rngs) = self.core.session_and_rngs_mut();
         let lanes = &self.lanes;
-        let leader_rngs = disjoint_mut(
-            rngs,
-            (0..groups).map(|g| group_members(m, groups, g).start),
-        );
-        let mut tasks: Vec<(&mut Vec<f32>, &mut ExchangeLane, &mut Rng, std::ops::Range<usize>)> =
-            self.partials
-                .iter_mut()
-                .zip(self.leader_lanes.iter_mut())
-                .zip(leader_rngs)
-                .enumerate()
-                .map(|(g, ((partial, lane), rng))| (partial, lane, rng, group_members(m, groups, g)))
-                .collect();
+        let leader_rngs = disjoint_mut(rngs, present.iter().map(|&g| group_ids[g][0]));
+        let partials = disjoint_mut(&mut self.partials, present.iter().copied());
+        let leader_lanes = disjoint_mut(&mut self.leader_lanes, present.iter().copied());
+        let mut tasks: Vec<(&mut Vec<f32>, &mut ExchangeLane, &mut Rng, &[usize])> = partials
+            .into_iter()
+            .zip(leader_lanes)
+            .zip(leader_rngs)
+            .zip(present.iter())
+            .map(|(((partial, lane), rng), &g)| (partial, lane, rng, group_ids[g].as_slice()))
+            .collect();
         let results = fan_out(par, &mut tasks, |_g, task| {
             let (partial, lane, rng, members) = task;
             partial.fill(0.0);
             let mut max_member_bits = 0u64;
-            for w in members.clone() {
+            for &w in members.iter() {
                 let member = &lanes[w];
                 max_member_bits = max_member_bits.max(member.bits());
                 for (p, &x) in partial.iter_mut().zip(member.ghat()) {
@@ -184,22 +200,21 @@ impl HierarchicalExchange {
                 up_seconds.max(net.fan_time(n_members.saturating_sub(1), max_member_bits));
         }
 
-        // 3. down — every worker sums the decoded leader partials in
-        // group order on the calling thread; the sim performs the
-        // reduction once (all replicas would compute exactly this sum
-        // from exactly these frames).
-        for lane in self.leader_lanes.iter() {
-            for (a, &x) in agg.iter_mut().zip(lane.ghat()) {
+        // 3. down — every worker sums the decoded leader partials of the
+        // present groups in group order on the calling thread; the sim
+        // performs the reduction once (all replicas would compute
+        // exactly this sum from exactly these frames).
+        for &g in &present {
+            for (a, &x) in agg.iter_mut().zip(self.leader_lanes[g].ghat()) {
                 *a += x;
             }
         }
 
-        let xchg_seconds = net.fan_time(groups.saturating_sub(1), max_lead_bits);
+        let xchg_seconds = net.fan_time(present.len().saturating_sub(1), max_lead_bits);
         let mut down_seconds = 0.0f64;
-        for g in 0..groups {
-            let members = group_members(m, groups, g);
+        for &g in &present {
             down_seconds =
-                down_seconds.max(net.fan_time(members.len().saturating_sub(1), lead_bits));
+                down_seconds.max(net.fan_time(group_ids[g].len().saturating_sub(1), lead_bits));
         }
         let step_bits = up_bits + 2 * lead_bits;
         self.core.add_codec_seconds(t0.elapsed().as_secs_f64());

@@ -28,6 +28,7 @@ USAGE:
               [--topology flat|sharded:S|tree:G|ring] [--codec huffman|elias]
               [--bits-policy fixed:B|schedule:B1@s1,B2@s2,...|variance[:MIN-MAX[@T]]]
               [--quantize-impl scalar|fast|pallas]
+              [--faults kill:W@S,delay:W@S:MS,join:W@S|none]
               [--trace PATH[:warn|info|debug]]
               (--parallel fans out flat/sharded/tree lanes, bit-identical
                to serial; the ring schedule is inherently serial.
@@ -40,14 +41,22 @@ USAGE:
   aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
   aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
               [--topology flat|sharded:S|tree:G]
+              [--deadline-ms 5000] [--retries 3]
               [--trace PATH[:warn|info|debug]]
+              (--deadline-ms/--retries tune timeout-and-drop: a worker
+               missing its per-frame deadline is retried with doubled
+               deadlines, then dropped; survivors renormalize to a
+               weighted partial aggregate. --deadline-ms 0 blocks forever)
   aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
               [--method ALQ --bits 3 --bucket 512 --seed 42]
               [--topology flat|sharded:S|tree:G] [--codec huffman|elias]
               [--bits-policy ...] [--quantize-impl scalar|fast|pallas]
+              [--faults kill:W@S,delay:W@S:MS,join:W@S|none]
               [--trace PATH[:warn|info|debug]]
               (frames carry their width, so the leader relay needs no
-               flag and no extra round-trip)
+               flag and no extra round-trip; --faults is the shared
+               deterministic churn script — each worker acts only on
+               its own entries)
   aqsgd trace-summarize FILE [--json PATH]
               (validate a --trace JSONL file against the event schema
                and fold it into per-phase/per-hop/per-width tables;
@@ -222,18 +231,32 @@ fn parse_wire_topology(args: &[String]) -> Result<aqsgd::exchange::TopologySpec>
 }
 
 fn cmd_leader(args: &[String]) -> Result<()> {
+    let defaults = aqsgd::coordinator::ElasticPolicy::default();
+    let elastic = aqsgd::coordinator::ElasticPolicy {
+        deadline_ms: match flag(args, "--deadline-ms") {
+            Some(v) => v.parse().context("bad --deadline-ms")?,
+            None => defaults.deadline_ms,
+        },
+        retries: match flag(args, "--retries") {
+            Some(v) => v.parse().context("bad --retries")?,
+            None => defaults.retries,
+        },
+    };
     let cfg = LeaderConfig {
         bind: flag(args, "--bind").unwrap_or("127.0.0.1:7700").to_string(),
         world: flag(args, "--world").unwrap_or("4").parse()?,
         steps: flag(args, "--iters").unwrap_or("500").parse()?,
         topology: parse_wire_topology(args)?,
+        elastic,
     };
     println!(
-        "leader on {} (world {}, {} steps, topology {})",
+        "leader on {} (world {}, {} steps, topology {}, deadline {}ms × {} retries)",
         cfg.bind,
         cfg.world,
         cfg.steps,
-        cfg.topology.name()
+        cfg.topology.name(),
+        cfg.elastic.deadline_ms,
+        cfg.elastic.retries
     );
     let tracer = open_tracer(parse_trace_flag(args)?.as_ref())?;
     let bits = run_leader_traced(&cfg, &tracer)?;
@@ -289,6 +312,15 @@ fn cmd_worker(args: &[String]) -> Result<()> {
             }
         }
     }
+    let faults = match flag(args, "--faults") {
+        Some(v) => aqsgd::sim::FaultPlan::parse(v).map_err(|e| {
+            anyhow::anyhow!(
+                "bad --faults {v:?}: {e} \
+                 (kill:W@S | delay:W@S:MS | join:W@S, comma-separated, or 'none')"
+            )
+        })?,
+        None => aqsgd::sim::FaultPlan::default(),
+    };
     let cfg = WorkerConfig {
         addr: flag(args, "--addr").unwrap_or("127.0.0.1:7700").to_string(),
         worker: flag(args, "--worker").unwrap_or("0").parse()?,
@@ -305,7 +337,11 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         topology: parse_wire_topology(args)?,
         codec,
         quantize_impl,
+        faults,
     };
+    if let Err(e) = cfg.faults.validate(cfg.world) {
+        bail!("bad --faults: {e}");
+    }
     let spec = aqsgd::exp::common::ModelSpec::resnet32_standin();
     let mut task = spec.task(cfg.world, 7);
     println!("worker {}/{} → {}", cfg.worker, cfg.world, cfg.addr);

@@ -26,6 +26,7 @@ use crate::exchange::{
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
 use crate::quant::{Codec, Method, QuantizeImpl, Quantizer};
+use crate::sim::faults::FaultPlan;
 use crate::sim::network::NetworkModel;
 use crate::trace::{Level, Tracer};
 use crate::util::json::Json;
@@ -60,6 +61,11 @@ pub struct ClusterConfig {
     /// Lane quantization implementation
     /// (`--quantize-impl scalar|fast|pallas`).
     pub quantize_impl: QuantizeImpl,
+    /// Deterministic fault plan (`--faults kill:W@S,delay:W@S:MS,join:W@S`;
+    /// empty = no faults). Kills and joins mutate the membership before
+    /// the step's gradients; delays charge straggler seconds to the
+    /// meter.
+    pub faults: FaultPlan,
 }
 
 impl ClusterConfig {
@@ -83,6 +89,7 @@ impl ClusterConfig {
             topology: TopologySpec::Flat,
             codec: Codec::Huffman,
             quantize_impl: QuantizeImpl::default(),
+            faults: FaultPlan::default(),
         }
     }
 
@@ -113,6 +120,12 @@ pub struct StepStats {
     /// Quantization bit-width this step ran at (the bit controller's
     /// per-step choice; 32 for full precision).
     pub width: u32,
+    /// Active-membership bitmask this step (bit w set ⇔ worker w
+    /// contributed to the aggregate). All-ones for fault-free runs.
+    pub active: u64,
+    /// FNV-1a over the parameter bits after this step's update — the
+    /// per-step replica fingerprint fault-parity tests project on.
+    pub params_hash: u64,
 }
 
 /// Variance sample (Figs. 1/4/5): per-coordinate averages.
@@ -163,7 +176,13 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
-        let engine = make_backend(cfg.exchange(), cfg.topology);
+        let mut engine = make_backend(cfg.exchange(), cfg.topology);
+        // Workers with a `join:W@S` fault start as standby: their lane
+        // exists (they compute gradients and track the replica) but they
+        // are outside the active set until their join step.
+        for w in cfg.faults.initially_inactive() {
+            engine.core_mut().membership_mut().deactivate_from_start(w);
+        }
         Cluster {
             cfg,
             engine,
@@ -230,6 +249,25 @@ impl Cluster {
         });
 
         for step in 0..self.cfg.iters {
+            // 0. Membership churn from the fault plan, applied before the
+            // step's gradients so the step runs against the new active
+            // set (joins before kills, matching the plan's canonical
+            // within-step order).
+            for w in self.cfg.faults.joins_at(step) {
+                self.engine.core_mut().join_worker(step, w);
+            }
+            for w in self.cfg.faults.kills_at(step) {
+                self.engine.core_mut().drop_worker(step, w);
+            }
+            for (w, ms) in self.cfg.faults.delays_at(step) {
+                // A straggler stretches the step's modeled wall time but
+                // moves no extra bits; delays on inactive workers are
+                // inert.
+                if self.engine.core().membership().is_active(w) {
+                    self.engine.core_mut().meter_mut().add_seconds(ms as f64 / 1000.0);
+                }
+            }
+
             // 1. Local gradients.
             let mut mean_loss = 0.0f64;
             for (w, grad) in grads.iter_mut().enumerate() {
@@ -263,6 +301,8 @@ impl Cluster {
                 lr,
                 bits: step_bits,
                 width: self.engine.step_width(),
+                active: self.engine.core().membership().active_mask(),
+                params_hash: crate::util::hash_params(&params),
             });
 
             if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {

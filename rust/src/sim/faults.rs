@@ -1,0 +1,347 @@
+//! Deterministic fault scripts for elastic-membership runs.
+//!
+//! A [`FaultPlan`] is a seedless, fully scripted schedule of membership
+//! churn and network misbehaviour, parsed from `--faults SPEC`:
+//!
+//! * `kill:W@S` — worker `W` leaves permanently at the top of step `S`
+//!   (it contributes nothing from step `S` onward).
+//! * `join:W@S` — worker `W` is a standby replica until step `S`: it
+//!   mirrors the model lockstep but sends no frames before `S`.
+//! * `delay:W@S:MS` — worker `W`'s frame for step `S` is late by `MS`
+//!   milliseconds (charged to the simulated network clock; realized as
+//!   a real sleep over TCP, where it exercises the leader's
+//!   timeout-and-retry path).
+//!
+//! Events are comma-separated (`kill:1@3,join:2@8`); the literal `none`
+//! is the empty plan. The same plan drives both the in-process
+//! simulator and a loopback TCP cluster, which is what lets
+//! `tests/fault_parity.rs` pin sim ≡ TCP under identical churn.
+
+use std::fmt;
+
+/// What happens to a worker at a scheduled step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Permanent departure at the top of the step.
+    Kill,
+    /// Late frame: the worker's step contribution lags by this many
+    /// milliseconds.
+    Delay(u64),
+    /// Standby replica activates at this step.
+    Join,
+}
+
+impl FaultKind {
+    /// Stable ordering rank used by the canonical event sort.
+    fn rank(self) -> u8 {
+        match self {
+            FaultKind::Join => 0,
+            FaultKind::Delay(_) => 1,
+            FaultKind::Kill => 2,
+        }
+    }
+}
+
+/// One scripted fault: `kind` applied to `worker` at `step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Target worker id (validated against the world size at run setup).
+    pub worker: usize,
+    /// Training step the fault fires at.
+    pub step: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            FaultKind::Kill => write!(f, "kill:{}@{}", self.worker, self.step),
+            FaultKind::Join => write!(f, "join:{}@{}", self.worker, self.step),
+            FaultKind::Delay(ms) => write!(f, "delay:{}@{}:{}", self.worker, self.step, ms),
+        }
+    }
+}
+
+/// A deterministic, order-canonical schedule of [`FaultEvent`]s.
+///
+/// The default plan is empty (no faults); `parse("none")` also yields
+/// it. Events are kept sorted by `(step, worker, kind)` so
+/// `parse(name()) == self` holds for every valid plan.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a `--faults` spec. Returns a human-readable error for
+    /// malformed specs (empty string, unknown kinds, bad numbers,
+    /// duplicate `(worker, step)` pairs, or a rejoin-after-kill).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty fault spec (use 'none' for no faults)".into());
+        }
+        if spec == "none" {
+            return Ok(FaultPlan::default());
+        }
+        let mut events = Vec::new();
+        for item in spec.split(',') {
+            events.push(parse_event(item.trim())?);
+        }
+        let mut plan = FaultPlan { events };
+        plan.events.sort_by_key(|e| (e.step, e.worker, e.kind.rank()));
+        plan.check()?;
+        Ok(plan)
+    }
+
+    /// Structural validity: no duplicate `(worker, step)`, at most one
+    /// kill and one join per worker, and no join scheduled at or after
+    /// a kill (a dead worker cannot rejoin — over TCP its process is
+    /// gone).
+    fn check(&self) -> Result<(), String> {
+        for (i, a) in self.events.iter().enumerate() {
+            for b in &self.events[i + 1..] {
+                if a.worker == b.worker && a.step == b.step {
+                    return Err(format!(
+                        "duplicate fault for worker {} at step {}",
+                        a.worker, a.step
+                    ));
+                }
+            }
+        }
+        let world = self.events.iter().map(|e| e.worker + 1).max().unwrap_or(0);
+        for w in 0..world {
+            let kills: Vec<usize> = self
+                .events
+                .iter()
+                .filter(|e| e.worker == w && e.kind == FaultKind::Kill)
+                .map(|e| e.step)
+                .collect();
+            let joins: Vec<usize> = self
+                .events
+                .iter()
+                .filter(|e| e.worker == w && e.kind == FaultKind::Join)
+                .map(|e| e.step)
+                .collect();
+            if kills.len() > 1 {
+                return Err(format!("worker {w} has more than one kill fault"));
+            }
+            if joins.len() > 1 {
+                return Err(format!("worker {w} has more than one join fault"));
+            }
+            if let (Some(&kill), Some(&join)) = (kills.first(), joins.first()) {
+                if join >= kill {
+                    return Err(format!(
+                        "worker {w} cannot rejoin after a kill (join@{join} is not before kill@{kill})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical spec string; `parse(name()) == self` for every valid
+    /// plan (the empty plan prints `none`).
+    pub fn name(&self) -> String {
+        if self.events.is_empty() {
+            return "none".into();
+        }
+        self.events
+            .iter()
+            .map(|e| e.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// All scripted events in canonical `(step, worker, kind)` order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Reject plans that target workers outside `0..world`.
+    pub fn validate(&self, world: usize) -> Result<(), String> {
+        for e in &self.events {
+            if e.worker >= world {
+                return Err(format!(
+                    "fault '{e}' targets worker {} but the run has {world} workers",
+                    e.worker
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Workers that start the run as standby replicas (they have a
+    /// `join` event, so they are inactive until it fires).
+    pub fn initially_inactive(&self) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Join)
+            .map(|e| e.worker)
+            .collect()
+    }
+
+    /// Workers killed at the top of `step`.
+    pub fn kills_at(&self, step: usize) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter(|e| e.step == step && e.kind == FaultKind::Kill)
+            .map(|e| e.worker)
+            .collect()
+    }
+
+    /// Workers joining at the top of `step`.
+    pub fn joins_at(&self, step: usize) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter(|e| e.step == step && e.kind == FaultKind::Join)
+            .map(|e| e.worker)
+            .collect()
+    }
+
+    /// `(worker, ms)` delays scheduled for `step`.
+    pub fn delays_at(&self, step: usize) -> Vec<(usize, u64)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::Delay(ms) if e.step == step => Some((e.worker, ms)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The step `worker` is killed at, if any.
+    pub fn kill_step(&self, worker: usize) -> Option<usize> {
+        self.events
+            .iter()
+            .find(|e| e.worker == worker && e.kind == FaultKind::Kill)
+            .map(|e| e.step)
+    }
+
+    /// The step `worker` joins at, if any.
+    pub fn join_step(&self, worker: usize) -> Option<usize> {
+        self.events
+            .iter()
+            .find(|e| e.worker == worker && e.kind == FaultKind::Join)
+            .map(|e| e.step)
+    }
+
+    /// The delay (ms) scheduled for `worker` at `step`, if any.
+    pub fn delay_ms(&self, worker: usize, step: usize) -> Option<u64> {
+        self.events.iter().find_map(|e| match e.kind {
+            FaultKind::Delay(ms) if e.worker == worker && e.step == step => Some(ms),
+            _ => None,
+        })
+    }
+}
+
+fn parse_event(item: &str) -> Result<FaultEvent, String> {
+    if item.is_empty() {
+        return Err("empty fault entry (stray comma?)".into());
+    }
+    let (kind, rest) = item
+        .split_once(':')
+        .ok_or_else(|| format!("fault '{item}' is missing ':worker@step'"))?;
+    let (worker_s, tail) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("fault '{item}' is missing '@step'"))?;
+    let worker: usize = worker_s
+        .parse()
+        .map_err(|_| format!("fault '{item}' has an invalid worker id '{worker_s}'"))?;
+    match kind {
+        "kill" | "join" => {
+            let step: usize = tail
+                .parse()
+                .map_err(|_| format!("fault '{item}' has an invalid step '{tail}'"))?;
+            let kind = if kind == "kill" { FaultKind::Kill } else { FaultKind::Join };
+            Ok(FaultEvent { worker, step, kind })
+        }
+        "delay" => {
+            let (step_s, ms_s) = tail
+                .split_once(':')
+                .ok_or_else(|| format!("delay fault '{item}' is missing ':ms'"))?;
+            let step: usize = step_s
+                .parse()
+                .map_err(|_| format!("fault '{item}' has an invalid step '{step_s}'"))?;
+            let ms: u64 = ms_s
+                .parse()
+                .map_err(|_| format!("fault '{item}' has an invalid delay '{ms_s}'"))?;
+            Ok(FaultEvent {
+                worker,
+                step,
+                kind: FaultKind::Delay(ms),
+            })
+        }
+        other => Err(format!("unknown fault kind '{other}' (expected kill|delay|join)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_canonicalizes() {
+        let plan = FaultPlan::parse("kill:1@3,join:2@1,delay:0@3:250").unwrap();
+        assert_eq!(plan.events().len(), 3);
+        // Canonical order is (step, worker, kind).
+        assert_eq!(plan.name(), "join:2@1,delay:0@3:250,kill:1@3");
+        assert_eq!(FaultPlan::parse(&plan.name()).unwrap(), plan);
+        assert_eq!(plan.kills_at(3), vec![1]);
+        assert_eq!(plan.joins_at(1), vec![2]);
+        assert_eq!(plan.delays_at(3), vec![(0, 250)]);
+        assert_eq!(plan.kill_step(1), Some(3));
+        assert_eq!(plan.join_step(2), Some(1));
+        assert_eq!(plan.delay_ms(0, 3), Some(250));
+        assert_eq!(plan.initially_inactive(), vec![2]);
+    }
+
+    #[test]
+    fn none_is_the_empty_plan() {
+        let plan = FaultPlan::parse("none").unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::default());
+        assert_eq!(plan.name(), "none");
+        assert_eq!(FaultPlan::parse(&plan.name()).unwrap(), plan);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for (spec, needle) in [
+            ("", "empty fault spec"),
+            ("   ", "empty fault spec"),
+            ("kill:1@3,", "empty fault entry"),
+            ("kill", "missing ':worker@step'"),
+            ("kill:1", "missing '@step'"),
+            ("kill:x@3", "invalid worker id"),
+            ("kill:1@x", "invalid step"),
+            ("delay:1@3", "missing ':ms'"),
+            ("delay:1@3:x", "invalid delay"),
+            ("zap:1@3", "unknown fault kind 'zap'"),
+            ("kill:1@3,delay:1@3:10", "duplicate fault for worker 1 at step 3"),
+            ("kill:1@3,kill:1@5", "more than one kill"),
+            ("join:1@2,join:1@5", "more than one join"),
+            ("kill:1@3,join:1@8", "cannot rejoin after a kill"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(
+                err.contains(needle),
+                "spec {spec:?}: error {err:?} lacks {needle:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_bounds_workers() {
+        let plan = FaultPlan::parse("kill:3@2").unwrap();
+        assert!(plan.validate(4).is_ok());
+        let err = plan.validate(3).unwrap_err();
+        assert!(err.contains("worker 3"), "{err}");
+    }
+}

@@ -2,7 +2,9 @@
 //! cost model (DESIGN.md §Hardware-Adaptation).
 
 pub mod cluster;
+pub mod faults;
 pub mod network;
 
 pub use cluster::{Cluster, ClusterConfig, StepStats, TrainRecord, VarianceSample};
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 pub use network::{NetworkModel, Topology};

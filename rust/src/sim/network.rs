@@ -104,6 +104,13 @@ impl Meter {
         self.steps += 1;
     }
 
+    /// Charge extra modeled wall time without a step or any bits — used
+    /// by fault injection (`delay:W@S:MS`) to stretch a straggler's
+    /// step.
+    pub fn add_seconds(&mut self, seconds: f64) {
+        self.total_time += seconds;
+    }
+
     pub fn bits_per_step(&self) -> f64 {
         if self.steps == 0 {
             0.0

@@ -108,6 +108,33 @@ pub const EVENT_TYPES: &[EventSchema] = &[
         ],
     },
     EventSchema {
+        kind: "member_join",
+        required: &[
+            ("step", Field::Num),
+            ("worker", Field::Num),
+            ("active", Field::Num),
+            ("weight_sum", Field::Num),
+        ],
+    },
+    EventSchema {
+        kind: "member_drop",
+        required: &[
+            ("step", Field::Num),
+            ("worker", Field::Num),
+            ("active", Field::Num),
+            ("weight_sum", Field::Num),
+        ],
+    },
+    EventSchema {
+        kind: "timeout",
+        required: &[
+            ("step", Field::Num),
+            ("worker", Field::Num),
+            ("attempt", Field::Num),
+            ("deadline_ms", Field::Num),
+        ],
+    },
+    EventSchema {
         kind: "run_end",
         required: &[("steps", Field::Num), ("total_bits", Field::Num)],
     },
@@ -478,6 +505,24 @@ mod tests {
         assert!(validate_event(&no_seq).is_err());
         let bad_phase = line(r#"{"e":"phase","seq":0,"step":0,"phase":"nope","seconds":1}"#);
         assert!(validate_event(&bad_phase).is_err());
+    }
+
+    #[test]
+    fn validate_covers_membership_and_timeout_events() {
+        let join =
+            line(r#"{"e":"member_join","seq":0,"step":8,"worker":2,"active":4,"weight_sum":1}"#);
+        assert!(validate_event(&join).is_ok());
+        let drop =
+            line(r#"{"e":"member_drop","seq":1,"step":3,"worker":1,"active":3,"weight_sum":1}"#);
+        assert!(validate_event(&drop).is_ok());
+        let timeout =
+            line(r#"{"e":"timeout","seq":2,"step":3,"worker":1,"attempt":0,"deadline_ms":50}"#);
+        assert!(validate_event(&timeout).is_ok());
+        let missing = line(r#"{"e":"member_drop","seq":3,"step":3,"worker":1}"#);
+        assert!(validate_event(&missing).is_err());
+        let mistyped =
+            line(r#"{"e":"timeout","seq":4,"step":3,"worker":1,"attempt":"x","deadline_ms":50}"#);
+        assert!(validate_event(&mistyped).is_err());
     }
 
     #[test]

@@ -1,0 +1,12 @@
+//! Shared helpers for integration tests.
+
+use std::net::TcpListener;
+
+/// Bind a listener on a kernel-assigned free port and return it with
+/// its dialable address. Every TCP test goes through this instead of
+/// hardcoding ports, so parallel test binaries never collide.
+pub fn free_listener() -> (TcpListener, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind 127.0.0.1:0");
+    let addr = listener.local_addr().expect("local_addr").to_string();
+    (listener, addr)
+}

@@ -1,0 +1,374 @@
+//! Fault parity: the deterministic fault-injection contract
+//! (DESIGN.md §Membership). One `FaultPlan` drives both runtimes, and
+//! they must agree step-for-step on the elastic-membership projection:
+//!
+//! * **Full parity (fp32):** for `super-sgd` the sim and the TCP
+//!   cluster agree on (step, active-set, width, bits, params_hash) —
+//!   aggregation order and the `1/n_active` weighting are op-identical,
+//!   so replica hashes match bit-for-bit every step, under a kill and
+//!   under a kill+join plan, over flat and tree topologies.
+//! * **Projection parity (quantized):** for ALQ the two runtimes use
+//!   different RNG derivations by design, but (step, active-set,
+//!   width) still match, and all TCP survivors stay bit-identical.
+//! * **Inertness:** an empty plan changes nothing — the elastic leader
+//!   with its default deadlines reproduces the pre-elastic blocking
+//!   leader (`deadline_ms: 0`) exactly.
+//! * **Timeout-and-drop:** a real straggler (injected `delay`) misses
+//!   its per-frame deadline, is dropped after bounded retries, and the
+//!   survivors' run equals the sim run with that worker killed at the
+//!   same step; a short delay inside the retry budget survives.
+//!
+//! Tree bits are pinned analytically rather than cross-checked: the
+//! sim meters the down-broadcast (up + 2·lead per present group) while
+//! the leader meters received frames only (up + lead) — both must
+//! equal their closed forms `32·d·(n_active + 2·present)` and
+//! `32·d·(n_active + present)`.
+
+mod common;
+
+use aqsgd::coordinator::{
+    run_leader_elastic, run_worker, ElasticPolicy, LeaderReport, WorkerConfig, WorkerReport,
+};
+use aqsgd::data::Blobs;
+use aqsgd::exchange::{BitsPolicy, ParallelMode, TopologySpec};
+use aqsgd::model::{Mlp, MlpTask};
+use aqsgd::opt::{LrSchedule, UpdateSchedule};
+use aqsgd::quant::{Codec, Method, QuantizeImpl};
+use aqsgd::sim::{Cluster, ClusterConfig, FaultPlan, NetworkModel, TrainRecord};
+use aqsgd::trace::{Level, Tracer};
+
+const WORLD: usize = 4;
+const ITERS: usize = 12;
+
+/// The two seeded plans every parity test runs under: a plain kill and
+/// a kill plus a late join (worker 2 starts as a standby replica).
+const PLANS: [&str; 2] = ["kill:1@3", "kill:1@3,join:2@8"];
+
+fn task() -> MlpTask {
+    let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, 7);
+    MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, WORLD, 7)
+}
+
+fn dims() -> u64 {
+    Mlp::new(vec![8, 32, 4]).param_count() as u64
+}
+
+fn sim_run(method: Method, topology: TopologySpec, faults: &str, iters: usize) -> TrainRecord {
+    let cfg = ClusterConfig {
+        method,
+        workers: WORLD,
+        bits: BitsPolicy::Fixed(3),
+        bucket: 128,
+        iters,
+        lr: LrSchedule::paper_default(0.1, iters),
+        updates: UpdateSchedule::at(vec![3, 20], 50, 20),
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        seed: 42,
+        eval_every: 0,
+        variance_every: 0,
+        network: NetworkModel::paper_testbed(),
+        parallel: ParallelMode::Auto,
+        topology,
+        codec: Codec::Huffman,
+        quantize_impl: QuantizeImpl::default(),
+        faults: FaultPlan::parse(faults).unwrap(),
+    };
+    Cluster::new(cfg).train(&mut task())
+}
+
+struct TcpRun {
+    leader: LeaderReport,
+    leader_trace: String,
+    /// One slot per worker; a dropped worker's thread errors out when
+    /// the leader closes its socket, which parity tests ignore.
+    workers: Vec<Result<WorkerReport, String>>,
+}
+
+fn tcp_run(
+    method: Method,
+    topology: TopologySpec,
+    faults: &str,
+    iters: usize,
+    policy: ElasticPolicy,
+) -> TcpRun {
+    let (listener, addr) = common::free_listener();
+    let (tracer, buf) = Tracer::memory(Level::Info);
+    let leader = std::thread::spawn(move || {
+        run_leader_elastic(listener, WORLD, iters, topology, policy, &tracer).unwrap()
+    });
+    let plan = FaultPlan::parse(faults).unwrap();
+    let mut handles = Vec::new();
+    for w in 0..WORLD {
+        let addr = addr.clone();
+        let plan = plan.clone();
+        handles.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                addr,
+                worker: w,
+                world: WORLD,
+                method,
+                bits: BitsPolicy::Fixed(3),
+                bucket: 128,
+                iters,
+                lr: LrSchedule::paper_default(0.1, iters),
+                updates: UpdateSchedule::at(vec![3, 20], 50, 20),
+                momentum: 0.9,
+                weight_decay: 1e-4,
+                seed: 42,
+                topology,
+                codec: Codec::Huffman,
+                quantize_impl: QuantizeImpl::default(),
+                faults: plan,
+            };
+            run_worker(&cfg, &mut task()).map_err(|e| e.to_string())
+        }));
+    }
+    let workers = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let leader = leader.join().unwrap();
+    let leader_trace = buf.lock().unwrap().clone();
+    TcpRun {
+        leader,
+        leader_trace,
+        workers,
+    }
+}
+
+/// Groups for `tree:2` over 4 workers are {0,1} and {2,3}; a group is
+/// present when any of its members is active.
+fn tree_present(mask: u64) -> u64 {
+    u64::from(mask & 0b0011 != 0) + u64::from(mask & 0b1100 != 0)
+}
+
+/// Tentpole: full (step, active-set, width, bits, params_hash) parity
+/// for fp32 under both seeded plans over flat and tree.
+#[test]
+fn fp32_sim_tcp_full_parity_under_churn() {
+    let d = dims();
+    for faults in PLANS {
+        for topology in [TopologySpec::Flat, TopologySpec::Tree(2)] {
+            let ctx = format!("{faults} over {}", topology.name());
+            let sim = sim_run(Method::SuperSgd, topology, faults, ITERS);
+            let tcp = tcp_run(
+                Method::SuperSgd,
+                topology,
+                faults,
+                ITERS,
+                ElasticPolicy::default(),
+            );
+            let w0 = tcp.workers[0].as_ref().expect("worker 0 survives");
+            assert_eq!(sim.steps.len(), ITERS, "{ctx}");
+            assert_eq!(tcp.leader.steps.len(), ITERS, "{ctx}");
+            assert_eq!(w0.step_records.len(), ITERS, "{ctx}");
+            for s in 0..ITERS {
+                let st = &sim.steps[s];
+                let lr = &tcp.leader.steps[s];
+                let wr = &w0.step_records[s];
+                assert_eq!(st.step, s, "{ctx}");
+                assert_eq!(wr.step as usize, s, "{ctx}");
+                assert_eq!(st.active, wr.active_mask, "{ctx}: active diverges at step {s}");
+                assert_eq!(st.active, lr.active_mask, "{ctx}: leader mask at step {s}");
+                assert_eq!(st.width, 32, "{ctx}");
+                assert_eq!(wr.width, 32, "{ctx}");
+                assert_eq!(
+                    st.params_hash, wr.params_hash,
+                    "{ctx}: replica hash diverges at step {s}"
+                );
+                let n_active = u64::from(st.active.count_ones());
+                match topology {
+                    TopologySpec::Flat => {
+                        assert_eq!(st.bits, 32 * d * n_active, "{ctx}: sim bits at step {s}");
+                        assert_eq!(lr.bits, 32 * d * n_active, "{ctx}: leader bits at step {s}");
+                    }
+                    _ => {
+                        let present = tree_present(st.active);
+                        assert_eq!(
+                            st.bits,
+                            32 * d * (n_active + 2 * present),
+                            "{ctx}: sim bits at step {s}"
+                        );
+                        assert_eq!(
+                            lr.bits,
+                            32 * d * (n_active + present),
+                            "{ctx}: leader bits at step {s}"
+                        );
+                    }
+                }
+            }
+            // The killed worker exits at the top of its kill step with
+            // exactly the pre-kill prefix of the shared record stream.
+            let w1 = tcp.workers[1].as_ref().expect("killed worker exits cleanly");
+            assert_eq!(w1.step_records.len(), 3, "{ctx}");
+            assert_eq!(w1.step_records[..], w0.step_records[..3], "{ctx}");
+            // Survivors — including the standby joiner — stay replicas.
+            for w in 2..WORLD {
+                let wr = tcp.workers[w].as_ref().expect("survivor");
+                assert_eq!(wr.step_records, w0.step_records, "{ctx}: worker {w}");
+            }
+            assert_eq!(sim.params_hash, w0.params_hash, "{ctx}: final hash");
+        }
+    }
+}
+
+/// Quantized runs derive their dither RNGs differently per runtime, so
+/// only the membership projection is pinned: (step, active-set, width)
+/// match, and TCP survivors stay bit-identical to each other.
+#[test]
+fn quantized_sim_tcp_agree_on_membership_projection() {
+    for faults in PLANS {
+        for topology in [TopologySpec::Flat, TopologySpec::Tree(2)] {
+            let ctx = format!("{faults} over {}", topology.name());
+            let sim = sim_run(Method::Alq, topology, faults, ITERS);
+            let tcp = tcp_run(Method::Alq, topology, faults, ITERS, ElasticPolicy::default());
+            let w0 = tcp.workers[0].as_ref().expect("worker 0 survives");
+            for s in 0..ITERS {
+                let st = &sim.steps[s];
+                let wr = &w0.step_records[s];
+                assert_eq!(st.active, wr.active_mask, "{ctx}: active at step {s}");
+                assert_eq!(st.active, tcp.leader.steps[s].active_mask, "{ctx}: step {s}");
+                assert_eq!(st.width, wr.width, "{ctx}: width at step {s}");
+            }
+            for w in 2..WORLD {
+                let wr = tcp.workers[w].as_ref().expect("survivor");
+                assert_eq!(wr.step_records, w0.step_records, "{ctx}: worker {w}");
+            }
+        }
+    }
+}
+
+/// An empty fault plan is inert: the elastic leader (default deadlines)
+/// and the pre-elastic blocking leader (`deadline_ms: 0`) produce
+/// identical runs, both matching the sim, with a full mask throughout
+/// and no membership events in the leader trace.
+#[test]
+fn empty_fault_plan_is_inert() {
+    let sim = sim_run(Method::SuperSgd, TopologySpec::Flat, "none", ITERS);
+    let elastic = tcp_run(
+        Method::SuperSgd,
+        TopologySpec::Flat,
+        "none",
+        ITERS,
+        ElasticPolicy::default(),
+    );
+    let blocking = tcp_run(
+        Method::SuperSgd,
+        TopologySpec::Flat,
+        "none",
+        ITERS,
+        ElasticPolicy {
+            deadline_ms: 0,
+            retries: 0,
+        },
+    );
+    for (name, run) in [("elastic", &elastic), ("blocking", &blocking)] {
+        let w0 = run.workers[0].as_ref().expect("fault-free worker");
+        for s in 0..ITERS {
+            assert_eq!(run.leader.steps[s].active_mask, 0b1111, "{name}: step {s}");
+            assert_eq!(w0.step_records[s].active_mask, 0b1111, "{name}: step {s}");
+            assert_eq!(
+                w0.step_records[s].params_hash, sim.steps[s].params_hash,
+                "{name}: step {s}"
+            );
+        }
+        for kind in ["member_drop", "member_join", "timeout"] {
+            assert!(
+                !run.leader_trace.contains(&format!("\"e\":\"{kind}\"")),
+                "{name}: fault-free run emitted a {kind} event"
+            );
+        }
+    }
+    assert_eq!(elastic.leader.total_bits, blocking.leader.total_bits);
+    for w in 0..WORLD {
+        assert_eq!(
+            elastic.workers[w].as_ref().unwrap().step_records,
+            blocking.workers[w].as_ref().unwrap().step_records,
+            "worker {w}: elastic vs blocking leader"
+        );
+    }
+}
+
+/// Timeout-and-drop: a worker stalling 2 s against a 50 ms deadline
+/// (one retry) is dropped mid-run, the leader traces the timeout, the
+/// drop, and a survivor weight sum of exactly 1 — and the survivors'
+/// run equals the sim with that worker killed at the same step.
+#[test]
+fn deadline_miss_drops_straggler_and_survivors_renormalize() {
+    let iters = 6;
+    let sim = sim_run(Method::SuperSgd, TopologySpec::Flat, "kill:1@2", iters);
+    let tcp = tcp_run(
+        Method::SuperSgd,
+        TopologySpec::Flat,
+        "delay:1@2:2000",
+        iters,
+        ElasticPolicy {
+            deadline_ms: 50,
+            retries: 1,
+        },
+    );
+    assert!(
+        tcp.leader_trace.matches("\"e\":\"timeout\"").count() >= 1,
+        "no timeout event in leader trace"
+    );
+    assert_eq!(
+        tcp.leader_trace.matches("\"e\":\"member_drop\"").count(),
+        1,
+        "expected exactly one drop"
+    );
+    assert!(
+        tcp.leader_trace.contains("\"weight_sum\":1"),
+        "drop event must certify survivor weights sum to 1"
+    );
+    // Worker 1's socket is closed under it mid-run; its error (or
+    // truncated report) is not part of the contract.
+    for w in [0, 2, 3] {
+        let wr = tcp.workers[w].as_ref().expect("survivor");
+        assert_eq!(wr.step_records.len(), iters, "worker {w}");
+        for s in 0..iters {
+            assert_eq!(
+                wr.step_records[s].active_mask, sim.steps[s].active,
+                "worker {w}: active at step {s}"
+            );
+            assert_eq!(
+                wr.step_records[s].params_hash, sim.steps[s].params_hash,
+                "worker {w}: replica hash at step {s}"
+            );
+        }
+    }
+}
+
+/// A transient stall inside the retry budget is absorbed: the first
+/// attempt times out, a doubled-deadline retry succeeds, nobody is
+/// dropped, and all four workers finish bit-identical with full masks.
+#[test]
+fn transient_delay_survives_within_retry_budget() {
+    let iters = 6;
+    let tcp = tcp_run(
+        Method::SuperSgd,
+        TopologySpec::Flat,
+        "delay:1@2:500",
+        iters,
+        ElasticPolicy {
+            deadline_ms: 200,
+            retries: 3,
+        },
+    );
+    assert!(
+        tcp.leader_trace.matches("\"e\":\"timeout\"").count() >= 1,
+        "the 500 ms stall must miss the 200 ms first deadline"
+    );
+    assert_eq!(
+        tcp.leader_trace.matches("\"e\":\"member_drop\"").count(),
+        0,
+        "retry budget covers the stall; nobody should be dropped"
+    );
+    let w0 = tcp.workers[0].as_ref().expect("worker 0");
+    assert_eq!(w0.step_records.len(), iters);
+    for w in 0..WORLD {
+        let wr = tcp.workers[w].as_ref().expect("no worker should fail");
+        assert_eq!(wr.step_records, w0.step_records, "worker {w}");
+        assert!(
+            wr.step_records.iter().all(|r| r.active_mask == 0b1111),
+            "worker {w}: mask must stay full"
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Golden-file test for `trace-summarize --json`: the machine-readable
+//! summary document (`aqsgd-trace-summary/v1`) is byte-stable. A fixed
+//! fixture trace — one line per interesting event kind, including the
+//! elastic-membership events — is summarized by the real binary, and
+//! the output must match `rust/tests/golden/trace_summary.json` byte
+//! for byte.
+//!
+//! Regenerate after an intentional schema change with
+//! `UPDATE_GOLDEN=1 cargo test --test golden_summary`; the golden is
+//! also bootstrapped on first run if missing (then committed, so CI
+//! diffs catch any later drift).
+//!
+//! All `seconds` values in the fixture are dyadic rationals, so their
+//! sums are exact in f64 and the JSON rendering is portable.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+/// The fixture: a deterministic JSONL trace with every summary-relevant
+/// event kind. Hop bits sum to each step's total (`trace-summarize`
+/// hard-fails otherwise), and the churn events mirror what the elastic
+/// leader emits on a deadline miss and a scheduled join.
+const FIXTURE: &str = r#"{"e":"run_start","seq":0,"runtime":"sim"}
+{"e":"connect","seq":1,"worker":0,"world":4}
+{"e":"bit_decision","seq":2,"step":0,"width":3}
+{"e":"phase","seq":3,"step":0,"phase":"quantize","seconds":0.5}
+{"e":"phase","seq":4,"step":0,"phase":"wire","wall_seconds":0.25}
+{"e":"hop","seq":5,"step":0,"index":0,"label":"up","bits":960,"seconds":0.125}
+{"e":"hop","seq":6,"step":0,"index":1,"label":"down","bits":320,"seconds":0.125}
+{"e":"frame_send","seq":7,"step":0,"kind":"grad","bytes":120,"width":3}
+{"e":"frame_recv","seq":8,"step":0,"kind":"all_grads","frames":4,"bytes":480}
+{"e":"relay","seq":9,"step":0,"frames":4,"bits":960}
+{"e":"step","seq":10,"step":0,"bits":1280,"width":3}
+{"e":"adapt","seq":11,"step":0,"updated":true}
+{"e":"timeout","seq":12,"step":1,"worker":1,"attempt":0,"deadline_ms":50}
+{"e":"member_drop","seq":13,"step":1,"worker":1,"active":3,"weight_sum":1}
+{"e":"warning","seq":14,"component":"leader","message":"worker 1 dropped at step 1 (deadline); 3 active"}
+{"e":"member_join","seq":15,"step":2,"worker":2,"active":4,"weight_sum":1}
+{"e":"hop","seq":16,"step":1,"index":0,"label":"up","bits":720,"seconds":0.0625}
+{"e":"step","seq":17,"step":1,"bits":720,"width":4}
+{"e":"run_end","seq":18,"steps":2,"total_bits":2000}
+"#;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join("trace_summary.json")
+}
+
+#[test]
+fn trace_summarize_json_matches_golden() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let fixture = dir.join(format!("aqsgd_golden_fixture_{pid}.jsonl"));
+    let out = dir.join(format!("aqsgd_golden_out_{pid}.json"));
+    std::fs::write(&fixture, FIXTURE).unwrap();
+
+    let status = Command::new(env!("CARGO_BIN_EXE_aqsgd"))
+        .arg("trace-summarize")
+        .arg(&fixture)
+        .arg("--json")
+        .arg(&out)
+        .status()
+        .expect("running the aqsgd binary");
+    assert!(status.success(), "trace-summarize failed on the fixture");
+    let produced = std::fs::read_to_string(&out).unwrap();
+    std::fs::remove_file(&fixture).ok();
+    std::fs::remove_file(&out).ok();
+
+    // The CLI and the library must agree before the golden is consulted.
+    let folded = aqsgd::trace::summary::TraceSummary::from_jsonl(FIXTURE).unwrap();
+    assert_eq!(
+        produced,
+        format!("{}\n", folded.to_json()),
+        "CLI output diverges from TraceSummary::to_json"
+    );
+    assert!(produced.contains("\"schema\":\"aqsgd-trace-summary/v1\""));
+
+    let golden = golden_path();
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !golden.exists() {
+        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        std::fs::write(&golden, &produced).unwrap();
+        eprintln!("golden regenerated: {}", golden.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&golden).unwrap();
+    assert_eq!(
+        produced, expected,
+        "summary JSON drifted from {} — if intentional, regenerate with UPDATE_GOLDEN=1",
+        golden.display()
+    );
+}

@@ -45,6 +45,7 @@ fn quantized_training_over_hlo_model() {
         topology: aqsgd::exchange::TopologySpec::Flat,
         codec: aqsgd::quant::Codec::Huffman,
         quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+        faults: aqsgd::sim::FaultPlan::default(),
     };
     let rec = Cluster::new(cfg).train(&mut task);
     let first = rec.steps.first().unwrap().train_loss;
@@ -167,6 +168,7 @@ fn cluster_and_coordinator_agree_qualitatively() {
                 topology: aqsgd::exchange::TopologySpec::Flat,
                 codec: aqsgd::quant::Codec::Huffman,
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+                faults: aqsgd::sim::FaultPlan::default(),
             };
             let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 11);
             let mut task = MlpTask::new(Mlp::new(vec![32, 64, 10]), blobs, 16, world, 11);

@@ -1,0 +1,161 @@
+//! Property tests for the two user-facing spec grammars,
+//! `BitsPolicy::parse` and `FaultPlan::parse`: randomly generated valid
+//! values round-trip through their canonical `name()` strings
+//! (`parse(name()) == self`), and malformed specs are rejected with
+//! error messages that actually explain the problem. Generators are
+//! hand-rolled over the repo's own seeded [`aqsgd::util::Rng`] — no
+//! external property-testing dependency, fully deterministic.
+
+use aqsgd::exchange::BitsPolicy;
+use aqsgd::sim::FaultPlan;
+use aqsgd::util::Rng;
+use std::collections::BTreeSet;
+
+const CASES: usize = 200;
+
+/// A random valid `--bits-policy` value across all three variants.
+fn gen_policy(rng: &mut Rng) -> BitsPolicy {
+    match rng.below(3) {
+        0 => BitsPolicy::parse_strict(&format!("fixed:{}", 2 + rng.below(7))).unwrap(),
+        1 => {
+            let mut segs = Vec::new();
+            let mut step = 0usize;
+            for i in 0..1 + rng.below(4) {
+                if i > 0 {
+                    step += 1 + rng.below(50);
+                }
+                segs.push(format!("{}@{}", 2 + rng.below(7), step));
+            }
+            BitsPolicy::parse_strict(&format!("schedule:{}", segs.join(","))).unwrap()
+        }
+        _ => {
+            let min = 2 + rng.below(7) as u32;
+            let max = min + rng.below((8 - min as usize) + 1) as u32;
+            // Two-decimal targets round-trip exactly through f64
+            // Display, which is all name() relies on.
+            let target = (1 + rng.below(99)) as f64 / 100.0;
+            BitsPolicy::parse_strict(&format!("variance:{min}-{max}@{target}")).unwrap()
+        }
+    }
+}
+
+/// A random valid `--faults` spec: per worker, an optional join, an
+/// optional kill strictly after it, and scattered delays — never two
+/// events on the same `(worker, step)`.
+fn gen_fault_spec(rng: &mut Rng) -> String {
+    let mut entries: Vec<String> = Vec::new();
+    let mut used: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let world = 2 + rng.below(5);
+    for w in 0..world {
+        let join = if rng.below(3) == 0 {
+            let s = 1 + rng.below(8);
+            used.insert((w, s));
+            entries.push(format!("join:{w}@{s}"));
+            Some(s)
+        } else {
+            None
+        };
+        if rng.below(3) == 0 {
+            let s = join.unwrap_or(0) + 1 + rng.below(8);
+            if used.insert((w, s)) {
+                entries.push(format!("kill:{w}@{s}"));
+            }
+        }
+        for _ in 0..rng.below(3) {
+            let s = rng.below(20);
+            if used.insert((w, s)) {
+                entries.push(format!("delay:{w}@{s}:{}", 1 + rng.below(500)));
+            }
+        }
+    }
+    if entries.is_empty() {
+        return "none".to_string();
+    }
+    // Feed the parser a shuffled order: canonicalization is its job.
+    for i in (1..entries.len()).rev() {
+        entries.swap(i, rng.below(i + 1));
+    }
+    entries.join(",")
+}
+
+#[test]
+fn bits_policy_roundtrips_through_name() {
+    let mut rng = Rng::new(0xB1757);
+    for case in 0..CASES {
+        let p = gen_policy(&mut rng);
+        let name = p.name();
+        let back = BitsPolicy::parse_strict(&name)
+            .unwrap_or_else(|e| panic!("case {case}: {name:?} failed to re-parse: {e}"));
+        assert_eq!(back, p, "case {case}: parse(name()) != self for {name:?}");
+        // The lossy and strict parsers agree.
+        assert_eq!(BitsPolicy::parse(&name), Some(p), "case {case}: {name:?}");
+    }
+}
+
+#[test]
+fn fault_plan_roundtrips_through_name() {
+    let mut rng = Rng::new(0xFA017);
+    let mut nonempty = 0;
+    for case in 0..CASES {
+        let spec = gen_fault_spec(&mut rng);
+        let plan = FaultPlan::parse(&spec)
+            .unwrap_or_else(|e| panic!("case {case}: generated spec {spec:?} rejected: {e}"));
+        let name = plan.name();
+        let back = FaultPlan::parse(&name)
+            .unwrap_or_else(|e| panic!("case {case}: canonical {name:?} rejected: {e}"));
+        assert_eq!(back, plan, "case {case}: parse(name()) != self for {name:?}");
+        // Canonical order is (step, worker, kind-rank) — verify sorted.
+        let keys: Vec<(usize, usize)> =
+            plan.events().iter().map(|e| (e.step, e.worker)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "case {case}: events not in canonical order");
+        if !plan.is_empty() {
+            nonempty += 1;
+        }
+    }
+    assert!(nonempty > CASES / 2, "generator produced mostly empty plans");
+}
+
+#[test]
+fn bits_policy_rejections_carry_diagnostics() {
+    for (spec, needle) in [
+        ("", "empty bits policy"),
+        ("fixed:1", "out of range"),
+        ("fixed:9", "out of range"),
+        ("fixed:three", "invalid width"),
+        ("schedule:", "empty schedule"),
+        ("schedule:3@0,3@0", "duplicate step"),
+        ("schedule:3@0,4@9,2@4", "strictly increasing"),
+        ("schedule:3@2", "step 0"),
+        ("variance:5-3", "inverted variance range"),
+        ("variance:2-4@nan", "positive and finite"),
+        ("warp:4", "unknown bits policy"),
+    ] {
+        let err = BitsPolicy::parse_strict(spec).unwrap_err();
+        assert!(err.contains(needle), "{spec:?}: {err:?} lacks {needle:?}");
+        assert_eq!(BitsPolicy::parse(spec), None, "{spec:?} must not parse");
+    }
+}
+
+#[test]
+fn fault_plan_rejections_carry_diagnostics() {
+    for (spec, needle) in [
+        ("", "empty fault spec"),
+        ("kill:0@1,", "empty fault entry"),
+        ("kill", "missing ':worker@step'"),
+        ("kill:0", "missing '@step'"),
+        ("kill:zero@1", "invalid worker id"),
+        ("kill:0@one", "invalid step"),
+        ("delay:0@1", "missing ':ms'"),
+        ("delay:0@1:soon", "invalid delay"),
+        ("frob:0@1", "unknown fault kind 'frob'"),
+        ("kill:2@4,join:2@4", "duplicate fault for worker 2 at step 4"),
+        ("kill:2@4,kill:2@9", "more than one kill"),
+        ("join:2@4,join:2@9", "more than one join"),
+        ("kill:2@4,join:2@6", "cannot rejoin after a kill"),
+    ] {
+        let err = FaultPlan::parse(spec).unwrap_err();
+        assert!(err.contains(needle), "{spec:?}: {err:?} lacks {needle:?}");
+    }
+}

@@ -23,6 +23,8 @@
 //! * **Selectable everywhere.** `--topology` flows through the sim CLI
 //!   config and the TCP coordinator (leader relay modes + workers).
 
+mod common;
+
 use aqsgd::config::RunConfig;
 use aqsgd::coordinator::leader::run_leader_topo;
 use aqsgd::coordinator::{run_worker, WorkerConfig};
@@ -33,9 +35,8 @@ use aqsgd::exchange::{
 use aqsgd::model::{Mlp, MlpTask};
 use aqsgd::opt::{LrSchedule, UpdateSchedule};
 use aqsgd::quant::{Codec, Method};
-use aqsgd::sim::{Cluster, ClusterConfig, NetworkModel};
+use aqsgd::sim::{Cluster, ClusterConfig, FaultPlan, NetworkModel};
 use aqsgd::util::Rng;
-use std::net::TcpListener;
 
 fn task(workers: usize, seed: u64) -> MlpTask {
     let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, seed);
@@ -331,8 +332,7 @@ fn spawn_tcp(
     world: usize,
     topology: TopologySpec,
 ) -> Vec<aqsgd::coordinator::WorkerReport> {
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
+    let (listener, addr) = common::free_listener();
     let leader =
         std::thread::spawn(move || run_leader_topo(listener, world, iters, topology).unwrap());
     let mut handles = Vec::new();
@@ -355,6 +355,7 @@ fn spawn_tcp(
                 topology,
                 codec: Codec::Huffman,
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+                faults: FaultPlan::default(),
             };
             let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, 7);
             let mut t = MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, world, 7);

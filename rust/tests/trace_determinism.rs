@@ -5,6 +5,8 @@
 //! schema registry (and the registry has no dead entries), and the
 //! `trace-summarize` fold reconstructs per-step bits exactly.
 
+mod common;
+
 use aqsgd::coordinator::leader::run_leader_topo_traced;
 use aqsgd::coordinator::{run_worker_traced, WorkerConfig};
 use aqsgd::data::Blobs;
@@ -12,12 +14,11 @@ use aqsgd::exchange::{BitsPolicy, ParallelMode, TopologySpec};
 use aqsgd::model::{Mlp, MlpTask};
 use aqsgd::opt::{LrSchedule, UpdateSchedule};
 use aqsgd::quant::{Codec, Method, QuantizeImpl};
-use aqsgd::sim::{Cluster, ClusterConfig, NetworkModel, TrainRecord};
+use aqsgd::sim::{Cluster, ClusterConfig, FaultPlan, NetworkModel, TrainRecord};
 use aqsgd::trace::summary::{masked_lines, validate_event, TraceSummary, EVENT_TYPES};
 use aqsgd::trace::{Level, Tracer};
 use aqsgd::util::json::Json;
 use std::collections::BTreeSet;
-use std::net::TcpListener;
 
 const ITERS: usize = 24;
 const WORLD: usize = 4;
@@ -41,6 +42,7 @@ fn sim_cfg(topology: TopologySpec, parallel: ParallelMode) -> ClusterConfig {
         topology,
         codec: Codec::Huffman,
         quantize_impl: QuantizeImpl::default(),
+        faults: FaultPlan::default(),
     }
 }
 
@@ -66,8 +68,7 @@ fn sim_trace(
 /// One traced TCP run (flat, fixed:3, same horizon as the sim): worker
 /// 0's JSONL and the leader's JSONL.
 fn tcp_trace(level: Level) -> (String, String) {
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
+    let (listener, addr) = common::free_listener();
     let (leader_tracer, leader_buf) = Tracer::memory(level);
     let leader = std::thread::spawn(move || {
         run_leader_topo_traced(listener, WORLD, ITERS, TopologySpec::Flat, &leader_tracer).unwrap()
@@ -95,6 +96,7 @@ fn tcp_trace(level: Level) -> (String, String) {
                 topology: TopologySpec::Flat,
                 codec: Codec::Huffman,
                 quantize_impl: QuantizeImpl::default(),
+                faults: FaultPlan::default(),
             };
             run_worker_traced(&cfg, &mut sim_task(), &tracer).unwrap()
         }));
@@ -188,7 +190,10 @@ fn sim_and_tcp_flat_agree_on_width_and_step_projection() {
 
 /// Every line of real sim, worker, and leader traces validates against
 /// the schema registry — and together they exercise every registered
-/// event type, so the registry carries no dead entries.
+/// event type, so the registry carries no dead entries. A faulted sim
+/// run covers the membership events (`member_drop`, `member_join`); a
+/// synthetic deadline miss covers `timeout` (the leader only emits it
+/// under real wall-clock stalls, which this test must not depend on).
 #[test]
 fn every_event_type_appears_and_validates() {
     let (sim_text, _) = sim_trace(TopologySpec::Flat, ParallelMode::Auto, Level::Debug);
@@ -197,8 +202,41 @@ fn every_event_type_appears_and_validates() {
     warn_tracer.warn_event("test", "synthetic degradation notice");
     let warn_text = warn_buf.lock().unwrap().clone();
 
+    // Churn coverage: kill one worker and activate a standby mid-run.
+    let mut faulted_cfg = sim_cfg(TopologySpec::Flat, ParallelMode::Auto);
+    faulted_cfg.faults = FaultPlan::parse("kill:1@3,join:2@8").unwrap();
+    let mut cluster = Cluster::new(faulted_cfg);
+    let (fault_tracer, fault_buf) = Tracer::memory(Level::Info);
+    cluster.set_tracer(fault_tracer);
+    cluster.train(&mut sim_task());
+    let fault_text = fault_buf.lock().unwrap().clone();
+    for kind in ["member_drop", "member_join"] {
+        assert!(
+            fault_text.contains(&format!("\"e\":\"{kind}\"")),
+            "faulted sim run emitted no {kind} event"
+        );
+    }
+
+    // Timeout coverage: the exact event shape the leader's
+    // timeout-and-drop path emits on a deadline miss.
+    let (timeout_tracer, timeout_buf) = Tracer::memory(Level::Info);
+    timeout_tracer.event(Level::Info, "timeout", |o| {
+        o.insert("step", Json::Num(3.0));
+        o.insert("worker", Json::Num(1.0));
+        o.insert("attempt", Json::Num(0.0));
+        o.insert("deadline_ms", Json::Num(50.0));
+    });
+    let timeout_text = timeout_buf.lock().unwrap().clone();
+
     let mut seen = BTreeSet::new();
-    for text in [&sim_text, &worker_text, &leader_text, &warn_text] {
+    for text in [
+        &sim_text,
+        &worker_text,
+        &leader_text,
+        &warn_text,
+        &fault_text,
+        &timeout_text,
+    ] {
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
             let ev = Json::parse(line).unwrap();
             validate_event(&ev).unwrap_or_else(|e| panic!("{e}"));
