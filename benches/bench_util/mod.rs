@@ -111,6 +111,30 @@ pub fn emit_section(name: &str, section: Json) {
     println!("\n[bench] wrote section {name:?} to {path:?}");
 }
 
+/// Write a standalone single-binary perf document (the pipeline
+/// trajectory, say) to the path named by `env_var`, tagged with
+/// `schema` plus the same `meta` block the merged document carries.
+/// No-op when the variable is unset.
+pub fn emit_doc(env_var: &str, schema: &str, mut doc: Json) {
+    let Some(path) = std::env::var_os(env_var) else {
+        return;
+    };
+    doc.insert("schema", Json::Str(schema.into()));
+    let mut meta = Json::obj();
+    meta.insert("smoke", Json::Bool(smoke()));
+    meta.insert(
+        "threads",
+        Json::Num(std::thread::available_parallelism().map_or(1, |n| n.get()) as f64),
+    );
+    doc.insert("meta", meta);
+    let text = format!("{doc}\n");
+    if let Err(e) = std::fs::write(&path, text) {
+        eprintln!("[bench] cannot write {path:?}: {e}");
+        std::process::exit(1);
+    }
+    println!("\n[bench] wrote {schema} document to {path:?}");
+}
+
 /// Load the `BENCH_JSON` document, if the variable is set and the file
 /// parses. Used by the last bench in the ci.sh chain to validate that
 /// every section landed.

@@ -2,7 +2,7 @@
 //! the achieved bits/coordinate vs the Theorem 3 bound, plus the
 //! byte-aligned pow-2 fast path vs the bit-cursor reference:
 //! * raw `pack_pow2` u64-lane packing vs per-symbol `push_bits_lsb`
-//!   for every supported width {1, 2, 4, 8};
+//!   for every supported width {1, 2, 3, 4, 8};
 //! * full fixed-width encode/decode (`encode_buckets_into`, which
 //!   auto-detects the pow-2 book) vs the forced cursor path.
 //!
@@ -23,13 +23,15 @@ use aqsgd::util::json::Json;
 use aqsgd::util::Rng;
 use bench_util::{emit_section, header, report, sized, throughput_row, time_per_call, window_ms};
 
-/// The (levels, book) pairs that admit each pow-2 fixed width. Width 1
-/// has no level family (a 1-bit record cannot carry magnitude + sign),
-/// so the full-encode sweep covers {2, 4, 8} and the raw packer sweep
-/// below covers {1, 2, 4, 8}.
+/// The (levels, book) pairs that admit each fixed width. Width 1 has no
+/// level family (a 1-bit record cannot carry magnitude + sign), so the
+/// full-encode sweep covers {2, 3, 4, 8} and the raw packer sweep below
+/// covers {1, 2, 3, 4, 8} — width 3 is the 21-records-per-63-bit-lane
+/// odd case added by the pipeline PR.
 fn fixed_width_configs() -> Vec<(u32, Levels, HuffmanBook)> {
     vec![
         (2, Levels::amq(2, 0.5), HuffmanBook::from_weights(&[1.0; 2])),
+        (3, Levels::amq(4, 0.5), HuffmanBook::from_weights(&[1.0; 4])),
         (
             4,
             Levels::exponential(8, 0.5),
@@ -55,7 +57,7 @@ fn main() {
     // -- raw packer: u64 lanes vs per-symbol cursor pushes ---------------
     header(&format!("pack_pow2 vs push_bits_lsb cursor, {n} symbols"));
     let mut packs = Json::obj();
-    for width in [1u32, 2, 4, 8] {
+    for width in [1u32, 2, 3, 4, 8] {
         let mask = (1u64 << width) - 1;
         let syms: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
         let mut w = BitWriter::new();

@@ -9,17 +9,34 @@
 //! from the flat topology backend). This binary runs last in the ci.sh
 //! bench chain, so when `BENCH_JSON` is set it also validates that the
 //! full document carries every section the schema promises.
+//!
+//! It also measures the `--pipeline` schedules (ISSUE 9): the modeled
+//! overlap ledger on a raw sharded backend (deterministic — hidden
+//! seconds must be nonzero and wall strictly below off), real TCP
+//! wire-path steps/s off vs overlap, and the stale:1 sim schedule.
+//! These land in a separate `BENCH_pipeline.json` document when
+//! `BENCH_PIPELINE_JSON` is set.
 
 mod bench_util;
-use aqsgd::exchange::{make_backend, ExchangeConfig, GradientExchange, ParallelMode, TopologySpec};
+use aqsgd::coordinator::leader::run_leader_topo;
+use aqsgd::coordinator::{run_worker, WorkerConfig};
+use aqsgd::data::Blobs;
+use aqsgd::exchange::{
+    make_backend, ExchangeConfig, GradientExchange, ParallelMode, PipelineMode, TopologySpec,
+};
+use aqsgd::model::{Mlp, MlpTask};
+use aqsgd::opt::{LrSchedule, UpdateSchedule};
 use aqsgd::quant::Method;
 use aqsgd::sim::NetworkModel;
 use aqsgd::util::json::Json;
 use aqsgd::util::Rng;
 use bench_util::{
-    emit_section, header, load_doc, report, sized, throughput_row, time_per_call, window_ms,
-    BENCH_SCHEMA,
+    emit_doc, emit_section, header, load_doc, report, sized, throughput_row, time_per_call,
+    window_ms, BENCH_SCHEMA,
 };
+
+/// Schema tag for the standalone pipeline perf artifact.
+const PIPELINE_SCHEMA: &str = "aqsgd-bench-pipeline/v1";
 
 fn config(method: Method, workers: usize, mode: ParallelMode) -> ExchangeConfig {
     ExchangeConfig {
@@ -143,6 +160,162 @@ fn main() {
     }
 
     emit_section("exchange", section);
+
+    // -- pipeline schedules (ISSUE 9) -------------------------------------
+    let mut pipe_doc = Json::obj();
+
+    header("pipeline: overlap ledger on the sharded backend (modeled)");
+    {
+        let workers = 4;
+        let mut rng = Rng::new(11);
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|_| (0..d).map(|_| (rng.normal() * 0.01) as f32).collect())
+            .collect();
+        let mut agg = vec![0.0f32; d];
+        let mut measure = |pipeline: PipelineMode| {
+            let mut backend = make_backend(
+                config(Method::Alq, workers, ParallelMode::Serial),
+                TopologySpec::Sharded(3),
+            );
+            backend.core_mut().set_pipeline(pipeline);
+            for step in 0..6 {
+                backend.exchange(step, &grads, &mut agg);
+            }
+            let m = backend.meter();
+            (m.total_time, m.hidden_seconds)
+        };
+        let (comm_off, hidden_off) = measure(PipelineMode::Off);
+        let (comm_ov, hidden_ov) = measure(PipelineMode::Overlap);
+        // Deterministic contract, not a noisy wall-clock race: overlap
+        // must not re-price the modeled wire, must hide nonzero encode
+        // seconds, and therefore must report strictly less wall time.
+        assert_eq!(
+            comm_off.to_bits(),
+            comm_ov.to_bits(),
+            "overlap re-priced the modeled wire time"
+        );
+        assert_eq!(hidden_off, 0.0, "off must hide nothing");
+        assert!(hidden_ov > 0.0, "overlap hid no encode time");
+        println!(
+            "sharded:3 M={workers}: modeled comm {:.3} ms, hidden {:.3} ms -> wall {:.3} ms \
+             (off {:.3} ms)",
+            comm_ov * 1e3,
+            hidden_ov * 1e3,
+            (comm_ov - hidden_ov) * 1e3,
+            comm_off * 1e3,
+        );
+        let mut sim = Json::obj();
+        sim.insert("modeled_comm_secs", Json::Num(comm_ov));
+        sim.insert("hidden_secs", Json::Num(hidden_ov));
+        sim.insert("wall_secs_overlap", Json::Num(comm_ov - hidden_ov));
+        sim.insert("wall_secs_off", Json::Num(comm_off));
+        pipe_doc.insert("sim_overlap", sim);
+    }
+
+    header("pipeline: TCP wire path, sharded:3, M = 4, off vs overlap");
+    {
+        let world = 4usize;
+        let iters = sized(60, 16);
+        let tcp_secs = |pipeline: PipelineMode| -> f64 {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let t0 = std::time::Instant::now();
+            let leader = std::thread::spawn(move || {
+                run_leader_topo(listener, world, iters, TopologySpec::Sharded(3)).unwrap()
+            });
+            let mut handles = Vec::new();
+            for w in 0..world {
+                let addr = addr.clone();
+                handles.push(std::thread::spawn(move || {
+                    let cfg = WorkerConfig {
+                        addr,
+                        worker: w,
+                        world,
+                        method: Method::Alq,
+                        bits: aqsgd::exchange::BitsPolicy::Fixed(3),
+                        bucket: 256,
+                        iters,
+                        lr: LrSchedule::paper_default(0.1, iters),
+                        updates: UpdateSchedule::at(vec![3, 15], 30, 15),
+                        momentum: 0.9,
+                        weight_decay: 1e-4,
+                        seed: 42,
+                        topology: TopologySpec::Sharded(3),
+                        codec: aqsgd::quant::Codec::Huffman,
+                        quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+                        pipeline,
+                        faults: aqsgd::sim::FaultPlan::default(),
+                    };
+                    let blobs = Blobs::generate(64, 16, 2048, 256, 1.0, 7);
+                    let mut task =
+                        MlpTask::new(Mlp::new(vec![64, 256, 16]), blobs, 32, world, 7);
+                    run_worker(&cfg, &mut task).unwrap()
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            leader.join().unwrap();
+            t0.elapsed().as_secs_f64()
+        };
+        // Min of two runs per mode: whole-run wall over loopback is
+        // noisy; the relative order is the measurement.
+        let t_off = tcp_secs(PipelineMode::Off).min(tcp_secs(PipelineMode::Off));
+        let t_ov = tcp_secs(PipelineMode::Overlap).min(tcp_secs(PipelineMode::Overlap));
+        let sps_off = iters as f64 / t_off;
+        let sps_ov = iters as f64 / t_ov;
+        println!(
+            "TCP sharded:3 M={world}: off {sps_off:.1} steps/s, overlap {sps_ov:.1} steps/s \
+             ({:.2}x)",
+            sps_ov / sps_off
+        );
+        // The acceptance bar: overlap must not lose throughput on the
+        // wire path (the slack absorbs scheduler noise on loopback,
+        // where wire time is nearly free and there is little to hide).
+        assert!(
+            sps_ov >= 0.8 * sps_off,
+            "overlap lost wire throughput: {sps_ov:.1} vs {sps_off:.1} steps/s"
+        );
+        let mut tcp = Json::obj();
+        tcp.insert("iters", Json::Num(iters as f64));
+        tcp.insert("steps_per_sec_off", Json::Num(sps_off));
+        tcp.insert("steps_per_sec_overlap", Json::Num(sps_ov));
+        tcp.insert("overlap_speedup", Json::Num(sps_ov / sps_off));
+        pipe_doc.insert("tcp", tcp);
+    }
+
+    header("pipeline: stale:1 sim schedule (hidden compute ledger)");
+    {
+        let iters = sized(40, 12);
+        let run = |pipeline: PipelineMode| {
+            let mut cfg = aqsgd::sim::ClusterConfig::paper_default(Method::Alq, iters);
+            cfg.bucket = 256;
+            cfg.eval_every = 0;
+            cfg.pipeline = pipeline;
+            let blobs = Blobs::generate(16, 8, 1600, 200, 1.0, 9);
+            let mut task = MlpTask::new(Mlp::new(vec![16, 64, 8]), blobs, 32, cfg.workers, 9);
+            aqsgd::sim::Cluster::new(cfg).train(&mut task)
+        };
+        let off = run(PipelineMode::Off);
+        let stale = run(PipelineMode::Stale);
+        assert_eq!(off.hidden_time, 0.0, "off must hide nothing");
+        assert!(stale.hidden_time > 0.0, "stale:1 hid nothing");
+        println!(
+            "stale:1 wall {:.3} s vs off {:.3} s (hidden {:.4} s of {:.3} s modeled comm)",
+            stale.wall_time(),
+            off.wall_time(),
+            stale.hidden_time,
+            stale.comm_time
+        );
+        let mut st = Json::obj();
+        st.insert("wall_secs_off", Json::Num(off.wall_time()));
+        st.insert("wall_secs_stale", Json::Num(stale.wall_time()));
+        st.insert("hidden_secs", Json::Num(stale.hidden_time));
+        st.insert("comm_secs", Json::Num(stale.comm_time));
+        pipe_doc.insert("stale", st);
+    }
+
+    emit_doc("BENCH_PIPELINE_JSON", PIPELINE_SCHEMA, pipe_doc);
 
     // -- final document validation (this binary runs last in ci.sh) ------
     if std::env::var_os("BENCH_JSON").is_some() {

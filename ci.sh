@@ -49,19 +49,41 @@ cargo test -q
 step "bench targets compile (cargo bench --no-run)"
 cargo bench --no-run
 
-step "bench smoke: emit + validate BENCH_hotloop.json"
+step "perf trajectories are committed (BENCH_hotloop.json, BENCH_pipeline.json)"
+# The perf-trajectory artifacts live in the repo root so regressions
+# are reviewable diffs. Fail loudly BEFORE regeneration if either is
+# missing — a bench refactor that silently stops emitting them would
+# otherwise pass CI while erasing the trajectory.
+test -s BENCH_hotloop.json || {
+  echo "FAIL: BENCH_hotloop.json is missing from the repo root. Regenerate with the"
+  echo "      bench-smoke chain below and commit the updated artifact."
+  exit 1
+}
+test -s BENCH_pipeline.json || {
+  echo "FAIL: BENCH_pipeline.json is missing from the repo root. Regenerate with"
+  echo "      BENCH_SMOKE=1 BENCH_PIPELINE_JSON=BENCH_pipeline.json cargo bench --bench exchange"
+  echo "      and commit the updated artifact."
+  exit 1
+}
+
+step "bench smoke: emit + validate BENCH_hotloop.json + BENCH_pipeline.json"
 # Small sizes/windows (BENCH_SMOKE=1): this checks the perf-artifact
 # plumbing and the fast-path speed floors, not absolute numbers. The
-# exchange bench runs last and validates every section landed; the
-# encode bench asserts the >= 2x fast-vs-cursor bar on 4-bit
-# fixed-width encode.
-rm -f BENCH_hotloop.json
+# exchange bench runs last, validates every hotloop section landed, and
+# emits the pipeline document (overlap ledger, TCP wire steps/s off vs
+# overlap, stale:1); the encode bench asserts the >= 2x fast-vs-cursor
+# bar on 4-bit fixed-width encode.
+rm -f BENCH_hotloop.json BENCH_pipeline.json
 BENCH_SMOKE=1 BENCH_JSON=BENCH_hotloop.json cargo bench --bench quantize
 BENCH_SMOKE=1 BENCH_JSON=BENCH_hotloop.json cargo bench --bench encode
-BENCH_SMOKE=1 BENCH_JSON=BENCH_hotloop.json cargo bench --bench exchange
+BENCH_SMOKE=1 BENCH_JSON=BENCH_hotloop.json BENCH_PIPELINE_JSON=BENCH_pipeline.json \
+  cargo bench --bench exchange
 test -s BENCH_hotloop.json || { echo "FAIL: BENCH_hotloop.json missing or empty"; exit 1; }
 grep -q '"schema":"aqsgd-bench-hotloop/v1"' BENCH_hotloop.json \
   || { echo "FAIL: BENCH_hotloop.json lacks the aqsgd-bench-hotloop/v1 schema tag"; exit 1; }
+test -s BENCH_pipeline.json || { echo "FAIL: BENCH_pipeline.json missing or empty"; exit 1; }
+grep -q '"schema":"aqsgd-bench-pipeline/v1"' BENCH_pipeline.json \
+  || { echo "FAIL: BENCH_pipeline.json lacks the aqsgd-bench-pipeline/v1 schema tag"; exit 1; }
 
 step "smoke: one-iteration training run (serial + parallel exchange)"
 ./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --parallel off
@@ -72,6 +94,10 @@ step "smoke: one-step hierarchical topology run"
 
 step "smoke: one-step sharded topology run with parallel lanes"
 ./target/release/aqsgd train --iters 1 --seeds 1 --bucket 512 --topology sharded:2 --parallel on
+
+step "smoke: pipelined exchange — overlap (bit-identical) and stale:1 (one step late)"
+./target/release/aqsgd train --iters 2 --seeds 1 --bucket 512 --pipeline overlap
+./target/release/aqsgd train --iters 2 --seeds 1 --bucket 512 --pipeline stale:1
 
 step "smoke: scheduled bit budget (width switches mid-run)"
 ./target/release/aqsgd train --iters 12 --seeds 1 --bucket 512 --bits-policy schedule:4@0,2@6
@@ -132,6 +158,23 @@ drops=$(grep -c '"e":"member_drop"' trace_fault_leader.jsonl || true)
 grep -q '"e":"member_drop".*"weight_sum":1' trace_fault_leader.jsonl \
   || { echo "FAIL: member_drop event lacks weight_sum 1"; exit 1; }
 ./target/release/aqsgd trace-summarize trace_fault_leader.jsonl >/dev/null
+
+step "smoke: overlap pipeline over TCP (tree:2 leader + 4 workers, --pipeline overlap)"
+# The worker accepts --pipeline overlap on any relay topology (it only
+# double-buffers the sharded sender; elsewhere it is a structural
+# no-op) — this pins the flag end to end through the real coordinator.
+./target/release/aqsgd leader --bind 127.0.0.1:7721 --world 4 --iters 4 \
+  --topology tree:2 &
+leader_pid=$!
+sleep 1
+worker_pids=()
+for w in 0 1 2 3; do
+  ./target/release/aqsgd worker --addr 127.0.0.1:7721 --worker "$w" --world 4 \
+    --iters 4 --topology tree:2 --pipeline overlap &
+  worker_pids+=($!)
+done
+for pid in "${worker_pids[@]}"; do wait "$pid"; done
+wait "$leader_pid"
 
 step "docs build (cargo doc --no-deps; gate: no missing_docs warnings)"
 doc_out=$(cargo doc --no-deps 2>&1) || { printf '%s\n' "$doc_out"; exit 1; }

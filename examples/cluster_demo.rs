@@ -43,6 +43,7 @@ fn main() -> Result<()> {
                 topology: aqsgd::exchange::TopologySpec::Flat,
                 codec: aqsgd::quant::Codec::Huffman,
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+                pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: aqsgd::sim::FaultPlan::default(),
             };
             let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 7);

@@ -43,6 +43,7 @@ fn main() -> Result<()> {
         topology: aqsgd::exchange::TopologySpec::Flat,
         codec: aqsgd::quant::Codec::Huffman,
         quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+        pipeline: aqsgd::exchange::PipelineMode::Off,
         faults: aqsgd::sim::FaultPlan::default(),
     };
     let rec = Cluster::new(cfg).train(&mut task);

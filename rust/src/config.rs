@@ -2,7 +2,7 @@
 //! Table 3-shaped defaults. Dependency-free (no TOML/serde in the image's
 //! vendored crate set); values are validated on parse.
 
-use crate::exchange::{BitsPolicy, ParallelMode, TopologySpec};
+use crate::exchange::{BitsPolicy, ParallelMode, PipelineMode, TopologySpec};
 use crate::quant::{Codec, Method, QuantizeImpl};
 use crate::sim::FaultPlan;
 use crate::trace::TraceSpec;
@@ -34,6 +34,11 @@ pub struct RunConfig {
     /// flat worker lanes, sharded shard-leader lanes, and tree group
     /// reductions; bit-identical to serial (ring is inherently serial).
     pub parallel: ParallelMode,
+    /// Pipeline schedule (off|overlap|stale:1) — overlap hides wire
+    /// time behind encode bit-identically; stale:1 overlaps compute
+    /// with the previous step's exchange, applying aggregates one step
+    /// late.
+    pub pipeline: PipelineMode,
     /// Exchange schedule (flat|sharded:S|tree:G|ring).
     pub topology: TopologySpec,
     /// Entropy coder (huffman|elias — the QSGD-style coding ablation).
@@ -66,6 +71,7 @@ impl Default for RunConfig {
             model: "mlp".to_string(),
             out_dir: "runs".to_string(),
             parallel: ParallelMode::Auto,
+            pipeline: PipelineMode::Off,
             topology: TopologySpec::Flat,
             codec: Codec::Huffman,
             quantize_impl: QuantizeImpl::default(),
@@ -119,6 +125,10 @@ impl RunConfig {
                 "parallel" => {
                     self.parallel = ParallelMode::parse(val)
                         .with_context(|| format!("bad --parallel {val:?} (auto|on|off)"))?
+                }
+                "pipeline" => {
+                    self.pipeline = PipelineMode::parse(val)
+                        .with_context(|| format!("bad --pipeline {val:?} (off|overlap|stale:1)"))?
                 }
                 "topology" => {
                     self.topology = TopologySpec::parse(val).with_context(|| {
@@ -227,6 +237,7 @@ impl RunConfig {
             variance_every: 0,
             network: crate::sim::NetworkModel::paper_testbed(),
             parallel: self.parallel,
+            pipeline: self.pipeline,
             topology: self.topology,
             codec: self.codec,
             quantize_impl: self.quantize_impl,
@@ -343,6 +354,20 @@ mod tests {
         let c = RunConfig::from_args(&args("--parallel off")).unwrap();
         assert_eq!(c.parallel, ParallelMode::Serial);
         assert_eq!(c.cluster().parallel, ParallelMode::Serial);
+    }
+
+    #[test]
+    fn parses_pipeline_mode() {
+        assert_eq!(RunConfig::default().pipeline, PipelineMode::Off);
+        let c = RunConfig::from_args(&args("--pipeline overlap")).unwrap();
+        assert_eq!(c.pipeline, PipelineMode::Overlap);
+        assert_eq!(c.cluster().pipeline, PipelineMode::Overlap);
+        let c = RunConfig::from_args(&args("--pipeline stale:1")).unwrap();
+        assert_eq!(c.pipeline, PipelineMode::Stale);
+        assert_eq!(c.cluster().pipeline, PipelineMode::Stale);
+        // Unknown modes and unsupported staleness depths are CLI errors.
+        assert!(RunConfig::from_args(&args("--pipeline async")).is_err());
+        assert!(RunConfig::from_args(&args("--pipeline stale:2")).is_err());
     }
 
     #[test]

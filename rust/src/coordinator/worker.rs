@@ -23,7 +23,7 @@
 use super::messages::{Msg, WireGrad, WIDTH_FP32};
 use crate::exchange::budget::select_width;
 use crate::exchange::topology::{group_of, shard_buckets, TopologySpec};
-use crate::exchange::{BitsPolicy, CodecSession, ExchangeLane};
+use crate::exchange::{BitsPolicy, CodecSession, ExchangeLane, PipelineMode};
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
 use crate::quant::bitio::BitWriter;
@@ -61,6 +61,14 @@ pub struct WorkerConfig {
     /// scalar and fast are bit-identical, and only the encoded frames
     /// cross the wire.
     pub quantize_impl: QuantizeImpl,
+    /// Pipeline schedule for the send path. `Overlap` double-buffers the
+    /// sharded sender: a dedicated thread drains finished frames onto the
+    /// wire in FIFO order while the main thread encodes the next shard,
+    /// so encode(k+1) overlaps the write of frame k. Frames, their order,
+    /// and every decoded bit stay identical to `Off` — only wall clock
+    /// moves. Replicas may disagree on this knob freely. `Stale` is a
+    /// simulation-only schedule and is rejected by the CLI for workers.
+    pub pipeline: PipelineMode,
     /// Deterministic fault plan (the same `--faults` spec every process
     /// in the run gets). Each worker applies only its own entries:
     /// `kill:W@S` exits cleanly at the top of step S, `join:W@S` stays
@@ -116,6 +124,7 @@ pub fn run_worker_traced(
         o.insert("topology", Json::Str(cfg.topology.name()));
         o.insert("policy", Json::Str(cfg.bits.name()));
         o.insert("codec", Json::Str(cfg.codec.name().into()));
+        o.insert("pipeline", Json::Str(cfg.pipeline.name().into()));
         o.insert("seed", Json::Num(cfg.seed as f64));
     });
     let stream = TcpStream::connect(&cfg.addr)
@@ -484,12 +493,46 @@ fn exchange_flat(
     Ok(active)
 }
 
+/// Encode one bucket-aligned shard of the already-quantized lane into
+/// an owned wire frame. Shared by the serial and overlapped sharded
+/// senders so the two paths cannot drift: same symbols, same bits, same
+/// frame metadata.
+fn encode_shard_frame(
+    shard: usize,
+    shards: usize,
+    nb: usize,
+    session: &CodecSession,
+    lane: &mut ExchangeLane,
+    shard_writer: &mut BitWriter,
+) -> (u64, WireGrad) {
+    let bucket = session.bucket();
+    let buckets = shard_buckets(nb, shards, shard);
+    let include_tail = shard + 1 == shards;
+    shard_writer.clear();
+    let bits = lane.encode_shard_into(session, buckets.clone(), include_tail, shard_writer);
+    shard_writer.finish_ref();
+    let view = EncodedView {
+        bytes: shard_writer.bytes(),
+        bits,
+        n_full: buckets.len() * bucket,
+        n_tail: if include_tail { lane.tail_len() } else { 0 },
+        bucket,
+    };
+    (bits, WireGrad::from_view(view, wire_width(session)))
+}
+
 /// Sharded leader lanes over the relay: S shard frames up (when
 /// active), survivors' shard frames down, reassembled per peer.
 /// Bit-identical to the flat mode. Returns the broadcast active set.
+///
+/// Under `--pipeline overlap` the quantized send loop double-buffers:
+/// a scoped sender thread owns the TCP writer and drains an in-order
+/// channel of finished frames while the main thread encodes the next
+/// shard. The FIFO channel preserves the exact serial frame order, so
+/// the leader relay and every receiver see byte-identical traffic.
 #[allow(clippy::too_many_arguments)]
 fn exchange_sharded(
-    _cfg: &WorkerConfig,
+    cfg: &WorkerConfig,
     step: usize,
     shards: usize,
     sending: bool,
@@ -514,27 +557,54 @@ fn exchange_sharded(
     // coordinate-even fp32 slices otherwise).
     if sending && quantized {
         lane.quantize(session, grad, qrng);
-        for shard in 0..shards {
-            let buckets = shard_buckets(nb, shards, shard);
-            let include_tail = shard + 1 == shards;
-            shard_writer.clear();
-            let bits = lane.encode_shard_into(session, buckets.clone(), include_tail, shard_writer);
-            shard_writer.finish_ref();
-            let view = EncodedView {
-                bytes: shard_writer.bytes(),
-                bits,
-                n_full: buckets.len() * bucket,
-                n_tail: if include_tail { lane.tail_len() } else { 0 },
-                bucket,
-            };
-            *sent_bits += bits;
-            trace_send(tracer, step, "shard", view.bytes.len(), wire_width(session));
-            Msg::ShardGrad {
-                step: step as u32,
-                shard: shard as u32,
-                grad: WireGrad::from_view(view, wire_width(session)),
+        if cfg.pipeline == PipelineMode::Overlap && shards > 1 {
+            // Double-buffered send: the sender thread writes frame k to
+            // the wire while we encode shard k+1. Joining before any
+            // receive keeps the step lockstep with the serial path.
+            let writer = &mut *writer;
+            std::thread::scope(|scope| -> Result<()> {
+                let (tx, rx) = std::sync::mpsc::channel::<Msg>();
+                let sender = scope.spawn(move || -> Result<()> {
+                    for msg in rx {
+                        msg.write_to(writer)?;
+                    }
+                    Ok(())
+                });
+                for shard in 0..shards {
+                    let (bits, frame) =
+                        encode_shard_frame(shard, shards, nb, session, lane, shard_writer);
+                    *sent_bits += bits;
+                    trace_send(tracer, step, "shard", frame.bytes.len(), frame.width);
+                    let msg = Msg::ShardGrad {
+                        step: step as u32,
+                        shard: shard as u32,
+                        grad: frame,
+                    };
+                    if tx.send(msg).is_err() {
+                        // Sender died mid-step; its join reports the
+                        // underlying io error below.
+                        break;
+                    }
+                }
+                drop(tx);
+                match sender.join() {
+                    Ok(res) => res,
+                    Err(_) => bail!("overlap sender thread panicked"),
+                }
+            })?;
+        } else {
+            for shard in 0..shards {
+                let (bits, frame) =
+                    encode_shard_frame(shard, shards, nb, session, lane, shard_writer);
+                *sent_bits += bits;
+                trace_send(tracer, step, "shard", frame.bytes.len(), frame.width);
+                Msg::ShardGrad {
+                    step: step as u32,
+                    shard: shard as u32,
+                    grad: frame,
+                }
+                .write_to(writer)?;
             }
-            .write_to(writer)?;
         }
     } else if sending {
         for shard in 0..shards {
@@ -758,6 +828,19 @@ mod tests {
         codec: Codec,
         bits: BitsPolicy,
     ) -> Vec<WorkerReport> {
+        spawn_cluster_pipeline(method, iters, world, topology, codec, bits, PipelineMode::Off)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_cluster_pipeline(
+        method: Method,
+        iters: usize,
+        world: usize,
+        topology: TopologySpec,
+        codec: Codec,
+        bits: BitsPolicy,
+        pipeline: PipelineMode,
+    ) -> Vec<WorkerReport> {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let leader =
@@ -783,6 +866,7 @@ mod tests {
                 topology,
                 codec,
                 quantize_impl: QuantizeImpl::default(),
+                pipeline,
                 faults: FaultPlan::default(),
             };
             handles.push(std::thread::spawn(move || {
@@ -866,6 +950,38 @@ mod tests {
         assert_eq!(flat[0].final_levels, sharded[0].final_levels);
         for (f, s) in flat.iter().zip(&sharded) {
             assert_eq!(f.sent_bits, s.sent_bits);
+        }
+    }
+
+    /// The overlapped sharded sender is a wall-clock change only: the
+    /// sender thread drains the same frames in the same order the
+    /// serial loop writes, so every replica's trajectory, payload bits,
+    /// step records, and adapted levels match `--pipeline off` exactly.
+    #[test]
+    fn overlap_sharded_sender_is_bit_identical_to_off() {
+        let off = spawn_cluster_pipeline(
+            Method::Alq,
+            40,
+            4,
+            TopologySpec::Sharded(3),
+            Codec::Huffman,
+            BitsPolicy::Fixed(3),
+            PipelineMode::Off,
+        );
+        let overlap = spawn_cluster_pipeline(
+            Method::Alq,
+            40,
+            4,
+            TopologySpec::Sharded(3),
+            Codec::Huffman,
+            BitsPolicy::Fixed(3),
+            PipelineMode::Overlap,
+        );
+        for (o, p) in off.iter().zip(&overlap) {
+            assert_eq!(o.params_hash, p.params_hash, "overlap diverged from off");
+            assert_eq!(o.sent_bits, p.sent_bits);
+            assert_eq!(o.final_levels, p.final_levels);
+            assert_eq!(o.step_records, p.step_records);
         }
     }
 

@@ -72,6 +72,57 @@ impl ParallelMode {
     }
 }
 
+/// How a step's communication is scheduled against the work around it
+/// (`--pipeline off|overlap|stale:1`).
+///
+/// All three modes move exactly the same bits: `Overlap` changes only
+/// *when* already-encoded frames sit on the wire relative to the
+/// remaining encode work, and `Stale` changes only *when* the aggregate
+/// is applied. The determinism contract (DESIGN.md §8) therefore holds
+/// per mode: `Overlap` is bit-identical to `Off`, and `Stale` is a
+/// per-seed deterministic trajectory of its own.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Strictly serial phases: compute → quantize → encode → wire →
+    /// decode → apply (the seed behavior; also the parity oracle).
+    #[default]
+    Off,
+    /// Overlap encode with wire I/O inside a step: frame k is on the
+    /// wire while bucket-range k+1 encodes. In the simulation the
+    /// modeled wire seconds hidden behind encode wall time are credited
+    /// to [`crate::sim::network::Meter::hide`]; on the TCP path the
+    /// worker really does hand frame k to a sender thread while
+    /// encoding shard k+1 (`coordinator::worker`). Byte-identical
+    /// frames in identical order either way.
+    Overlap,
+    /// Classic pipelined-SGD staleness, depth 1: `sim::Cluster::train`
+    /// computes step t+1's gradients while step t's exchange completes
+    /// and applies the aggregate one step late. Simulation-only.
+    Stale,
+}
+
+impl PipelineMode {
+    /// Parse a CLI value (`off|overlap|stale:1`). Only staleness depth 1
+    /// is supported; any other depth is rejected.
+    pub fn parse(s: &str) -> Option<PipelineMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Some(PipelineMode::Off),
+            "overlap" => Some(PipelineMode::Overlap),
+            "stale:1" => Some(PipelineMode::Stale),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name for logs and banners.
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineMode::Off => "off",
+            PipelineMode::Overlap => "overlap",
+            PipelineMode::Stale => "stale:1",
+        }
+    }
+}
+
 /// Everything a backend needs to stand up a simulated exchange.
 #[derive(Clone, Debug)]
 pub struct ExchangeConfig {
@@ -432,5 +483,19 @@ mod tests {
         assert_eq!(ParallelMode::parse("serial"), Some(ParallelMode::Serial));
         assert_eq!(ParallelMode::parse("nope"), None);
         assert_eq!(ParallelMode::default().name(), "auto");
+    }
+
+    #[test]
+    fn pipeline_mode_parses() {
+        assert_eq!(PipelineMode::parse("off"), Some(PipelineMode::Off));
+        assert_eq!(PipelineMode::parse("OVERLAP"), Some(PipelineMode::Overlap));
+        assert_eq!(PipelineMode::parse("stale:1"), Some(PipelineMode::Stale));
+        // Only depth-1 staleness exists; other depths are rejected, not
+        // silently clamped.
+        assert_eq!(PipelineMode::parse("stale:2"), None);
+        assert_eq!(PipelineMode::parse("stale"), None);
+        assert_eq!(PipelineMode::parse("async"), None);
+        assert_eq!(PipelineMode::default(), PipelineMode::Off);
+        assert_eq!(PipelineMode::Stale.name(), "stale:1");
     }
 }

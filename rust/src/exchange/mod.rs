@@ -48,7 +48,7 @@ pub mod session;
 pub mod topology;
 
 pub use budget::{BitController, BitsPolicy, QuantizerBank, VarianceSpec};
-pub use engine::{ExchangeConfig, GradientExchange, ParallelMode};
+pub use engine::{ExchangeConfig, GradientExchange, ParallelMode, PipelineMode};
 pub use membership::Membership;
 pub use session::{CodecSession, ExchangeLane};
 pub use topology::core::{BackendCore, CodecPhase};

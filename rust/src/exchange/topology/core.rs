@@ -43,7 +43,7 @@
 //! session's codebook statistics mid-stage) admits no lane fan-out.
 
 use super::super::budget::{select_width, BitController};
-use super::super::engine::{ExchangeConfig, ParallelMode};
+use super::super::engine::{ExchangeConfig, ParallelMode, PipelineMode};
 use super::super::membership::Membership;
 use super::super::session::{CodecSession, ExchangeLane};
 use super::Hop;
@@ -107,6 +107,17 @@ pub struct BackendCore {
     meter: Meter,
     codec_seconds: f64,
     phase: CodecPhase,
+    /// Pipeline schedule (`--pipeline off|overlap|stale:1`). `Overlap`
+    /// makes [`BackendCore::finish_step`] credit the modeled wire
+    /// seconds hidden behind the step's encode wall time; `Stale`'s
+    /// hiding happens in `sim::Cluster::train` (compute overlaps the
+    /// previous step's exchange). Neither moves a single bit.
+    pipeline: PipelineMode,
+    /// Encode wall seconds of the in-flight step — what `Overlap` can
+    /// hide wire time behind. Reset by [`BackendCore::begin_step`],
+    /// accumulated by the member stage and by backends whose encode runs
+    /// outside it ([`BackendCore::note_encode_seconds`]).
+    step_encode_seconds: f64,
     hops: Vec<Hop>,
     /// Telemetry handle (disabled by default; installed via
     /// [`BackendCore::set_tracer`]). All event emission happens on the
@@ -149,6 +160,8 @@ impl BackendCore {
             meter: Meter::default(),
             codec_seconds: 0.0,
             phase: CodecPhase::default(),
+            pipeline: PipelineMode::Off,
+            step_encode_seconds: 0.0,
             hops: Vec::new(),
             tracer: Tracer::disabled(),
             cur_step: 0,
@@ -178,6 +191,7 @@ impl BackendCore {
     /// `--parallel` modes.
     pub fn begin_step(&mut self, step: usize, grads: &[Vec<f32>]) {
         self.cur_step = step;
+        self.step_encode_seconds = 0.0;
         if !self.session.is_quantized() {
             self.step_width = 32;
             return;
@@ -323,6 +337,27 @@ impl BackendCore {
         self.codec_seconds
     }
 
+    /// Select the pipeline schedule (default [`PipelineMode::Off`]).
+    /// `Overlap` only changes the [`Meter`]'s hidden-time accounting —
+    /// frames, bits, hops, and the aggregate stay bit-identical.
+    pub fn set_pipeline(&mut self, pipeline: PipelineMode) {
+        self.pipeline = pipeline;
+    }
+
+    /// The configured pipeline schedule.
+    pub fn pipeline(&self) -> PipelineMode {
+        self.pipeline
+    }
+
+    /// Attribute encode wall seconds to the in-flight step. The member
+    /// stage does this for every lane it encodes; backends whose encode
+    /// runs outside it (the sharded per-shard encode, the tree leader
+    /// re-encode) report theirs here so `Overlap` can hide wire time
+    /// behind the full encode phase.
+    pub fn note_encode_seconds(&mut self, seconds: f64) {
+        self.step_encode_seconds += seconds;
+    }
+
     /// Charge codec wall time (a parallel region charges its wall time,
     /// not the per-thread sum).
     pub fn add_codec_seconds(&mut self, seconds: f64) {
@@ -394,6 +429,16 @@ impl BackendCore {
         });
         self.hops = hops;
         self.meter.record_raw(step_bits, step_seconds);
+        if self.pipeline == PipelineMode::Overlap {
+            // Frame k sits on the wire while bucket-range k+1 encodes,
+            // so up to the step's encode wall time of modeled wire
+            // seconds is hidden; the remainder still serializes. This
+            // touches only the meter's hidden-time ledger — bits, hops,
+            // and `total_time` are untouched, which is why `overlap` is
+            // bit-identical to `off` (DESIGN.md §Pipeline).
+            self.meter.hide(self.step_encode_seconds.min(step_seconds));
+        }
+        self.step_encode_seconds = 0.0;
     }
 
     /// Algorithm 1 line 4 at the update schedule, identical for every
@@ -526,6 +571,7 @@ impl BackendCore {
         self.phase.quantize += t_q;
         self.phase.encode += t_e;
         self.phase.decode += t_d;
+        self.step_encode_seconds += t_e;
         if self.tracer.on(Level::Debug) {
             self.trace_phase("quantize", t_q);
             if encode {
@@ -690,6 +736,38 @@ mod tests {
         let mut fp = BackendCore::new(cfg(Method::SuperSgd, 2, ParallelMode::Serial));
         fp.begin_step(0, &grads);
         assert_eq!(fp.step_width(), 32);
+    }
+
+    #[test]
+    fn overlap_pipeline_hides_wire_time_behind_encode() {
+        let grads = vec![vec![0.1f32; 64]; 4];
+        let mut core = BackendCore::new(cfg(Method::Alq, 4, ParallelMode::Auto));
+        core.set_pipeline(PipelineMode::Overlap);
+        assert_eq!(core.pipeline(), PipelineMode::Overlap);
+        let hop = |bits, seconds| Hop {
+            label: "a".to_string(),
+            bits,
+            seconds,
+        };
+        // Encode shorter than the wire: the whole encode is hidden.
+        core.begin_step(0, &grads);
+        core.note_encode_seconds(0.25);
+        core.finish_step(vec![hop(10, 1.0)], 10, 1.0);
+        assert!((core.meter().hidden_seconds - 0.25).abs() < 1e-12);
+        // Encode longer than the wire: hiding clamps at the wire time,
+        // and the ledger resets between steps.
+        core.begin_step(1, &grads);
+        core.note_encode_seconds(5.0);
+        core.finish_step(vec![hop(10, 1.0)], 10, 1.0);
+        assert!((core.meter().hidden_seconds - 1.25).abs() < 1e-12);
+        // `total_time` is untouched by hiding.
+        assert!((core.meter().total_time - 2.0).abs() < 1e-12);
+        // `off` never hides, even with encode time on the ledger.
+        let mut off = BackendCore::new(cfg(Method::Alq, 4, ParallelMode::Auto));
+        off.begin_step(0, &grads);
+        off.note_encode_seconds(0.25);
+        off.finish_step(vec![hop(10, 1.0)], 10, 1.0);
+        assert_eq!(off.meter().hidden_seconds, 0.0);
     }
 
     #[test]

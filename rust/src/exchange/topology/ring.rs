@@ -51,6 +51,13 @@
 //! is already charged in the α-β time model: each stage's [`Hop`]
 //! seconds are one parallel link round, not M serialized sends.
 //!
+//! The same dependency chain makes `--pipeline overlap` structurally
+//! inert here: stage t+1's encode consumes the partial sums stage t's
+//! wire transfer delivered, so there is no encode that could run while
+//! a frame is in flight. Ring therefore reports nothing to the pipeline
+//! encode ledger and hides zero seconds — `overlap` runs are still
+//! bit-identical to `off` (nothing moves), they just gain no wall time.
+//!
 //! # Determinism
 //!
 //! Partial sums are re-quantized at every reduce-scatter hop, so

@@ -193,9 +193,11 @@ impl ShardedExchange {
             let mut per_worker = vec![0u64; m];
             let mut hop_bits = 0u64;
             let mut max_bits = 0u64;
+            let mut encode_seconds = 0.0f64;
             for &w in &ids {
                 let lane = &lanes[w];
                 scratch.writer.clear();
+                let t_enc = std::time::Instant::now();
                 let bits = lane.encode_shard_into(
                     session,
                     buckets.clone(),
@@ -203,6 +205,7 @@ impl ShardedExchange {
                     &mut scratch.writer,
                 );
                 scratch.writer.finish_ref();
+                encode_seconds += t_enc.elapsed().as_secs_f64();
                 let n_tail = if include_tail { lane.tail_len() } else { 0 };
                 let view = EncodedView {
                     bytes: scratch.writer.bytes(),
@@ -222,7 +225,7 @@ impl ShardedExchange {
                 hop_bits += bits;
                 max_bits = max_bits.max(bits);
             }
-            (per_worker, hop_bits, max_bits)
+            (per_worker, hop_bits, max_bits, encode_seconds)
         });
         drop(tasks);
 
@@ -230,8 +233,12 @@ impl ShardedExchange {
         // hop records never depend on thread-completion order.
         let mut step_bits = 0u64;
         let mut step_seconds = 0.0f64;
+        let mut encode_total = 0.0f64;
         let mut hops = Vec::with_capacity(shards);
-        for (s, (per_worker, hop_bits, max_bits)) in results.into_iter().enumerate() {
+        for (s, (per_worker, hop_bits, max_bits, encode_seconds)) in
+            results.into_iter().enumerate()
+        {
+            encode_total += encode_seconds;
             for (acc, bits) in self.bits_scratch.iter_mut().zip(per_worker) {
                 *acc += bits;
             }
@@ -251,6 +258,11 @@ impl ShardedExchange {
         }
 
         self.core.add_codec_seconds(t0.elapsed().as_secs_f64());
+        // The per-shard encode runs outside the member stage, so report
+        // it to the pipeline ledger: under `--pipeline overlap`, frame k
+        // sits on the wire while bucket-range k+1 encodes, and this is
+        // the wall time the hidden-communication credit is bounded by.
+        self.core.note_encode_seconds(encode_total);
         self.core.finish_step(hops, step_bits, step_seconds);
         step_bits
     }

@@ -183,22 +183,30 @@ impl HierarchicalExchange {
             // The leader's own RNG stream draws the partial's
             // quantization noise; only the ciphertext is shared.
             lane.quantize(session, &partial[..], rng);
+            let t_enc = std::time::Instant::now();
             let bits = lane.encode(session);
+            let encode_seconds = t_enc.elapsed().as_secs_f64();
             lane.decode_own(session);
-            (bits, max_member_bits, members.len())
+            (bits, max_member_bits, members.len(), encode_seconds)
         });
         drop(tasks);
 
-        // Fold results back in group (schedule) order.
+        // Fold results back in group (schedule) order. The leader
+        // re-encode runs outside the member stage, so its wall time is
+        // reported to the pipeline ledger separately (what `--pipeline
+        // overlap` can hide wire seconds behind).
         let mut lead_bits = 0u64;
         let mut max_lead_bits = 0u64;
         let mut up_seconds = 0.0f64;
-        for &(bits, max_member_bits, n_members) in &results {
+        let mut leader_encode_seconds = 0.0f64;
+        for &(bits, max_member_bits, n_members, encode_seconds) in &results {
             lead_bits += bits;
             max_lead_bits = max_lead_bits.max(bits);
+            leader_encode_seconds += encode_seconds;
             up_seconds =
                 up_seconds.max(net.fan_time(n_members.saturating_sub(1), max_member_bits));
         }
+        self.core.note_encode_seconds(leader_encode_seconds);
 
         // 3. down — every worker sums the decoded leader partials of the
         // present groups in group order on the calling thread; the sim

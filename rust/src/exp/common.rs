@@ -125,6 +125,7 @@ pub fn cluster_config(
         topology: crate::exchange::TopologySpec::Flat,
         codec: crate::quant::Codec::Huffman,
         quantize_impl: crate::quant::QuantizeImpl::default(),
+        pipeline: crate::exchange::PipelineMode::Off,
         faults: crate::sim::FaultPlan::default(),
     }
 }

@@ -14,6 +14,13 @@
 //! paper's fp32 step time. Absolute numbers differ from V100s; the shape
 //! (ratios to FP32/FP16, monotonicity in bits, weak bucket dependence)
 //! is the reproduction target.
+//!
+//! The tables also charge the `--pipeline` schedules (ISSUE 9): a
+//! depth-1 pipeline hides step t's wire seconds behind step t+1's
+//! gradient compute, so each cell reports its compute/comm split, the
+//! hidden share `min(compute, comm)`, and the pipelined step
+//! `max(compute, comm) + codec` — the same ledger the simulator's
+//! `Meter` keeps (`wall = compute + comm − hidden`).
 
 use super::common::{out_dir, ExpArgs};
 use crate::adaptive::{update_levels, Estimator};
@@ -133,6 +140,10 @@ pub fn run(args: &[String]) -> Result<()> {
                 "Bits",
                 "Bucket",
                 "Time/step (s)",
+                "Compute (s)",
+                "Comm (s)",
+                "Hidden (s)",
+                "Pipelined (s)",
                 "Quantize (ms)",
                 "Encode (ms)",
                 "Decode (ms)",
@@ -147,11 +158,21 @@ pub fn run(args: &[String]) -> Result<()> {
                 let comm = net.step_time(&vec![enc_bits; m]);
                 let codec = prof.ns_per_coord() * 1e-9 * d as f64;
                 let step = compute + comm + codec;
+                // Depth-1 pipeline ledger: the wire transfer runs while
+                // the next step's gradients compute, so the hidden share
+                // is bounded by both phases and the pipelined step is
+                // max(compute, comm) + codec.
+                let hidden = comm.min(compute);
+                let pipelined = step - hidden;
                 let phase_ms = |ns: f64| format!("{:.1}", ns * 1e-6 * d as f64);
                 t.row(vec![
                     bits.to_string(),
                     bucket.to_string(),
                     format!("{step:.3}"),
+                    format!("{compute:.3}"),
+                    format!("{comm:.3}"),
+                    format!("{hidden:.3}"),
+                    format!("{pipelined:.3}"),
                     phase_ms(prof.quantize_ns_per_coord),
                     phase_ms(prof.encode_ns_per_coord),
                     phase_ms(prof.decode_ns_per_coord),

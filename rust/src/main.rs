@@ -25,6 +25,7 @@ aqsgd — Adaptive Gradient Quantization for Data-Parallel SGD (NeurIPS 2020)
 USAGE:
   aqsgd train [--method ALQ] [--workers 4] [--bits 3] [--bucket 8192]
               [--iters 3000] [--seed 1] [--model mlp] [--parallel auto|on|off]
+              [--pipeline off|overlap|stale:1]
               [--topology flat|sharded:S|tree:G|ring] [--codec huffman|elias]
               [--bits-policy fixed:B|schedule:B1@s1,B2@s2,...|variance[:MIN-MAX[@T]]]
               [--quantize-impl scalar|fast|pallas]
@@ -32,6 +33,10 @@ USAGE:
               [--trace PATH[:warn|info|debug]]
               (--parallel fans out flat/sharded/tree lanes, bit-identical
                to serial; the ring schedule is inherently serial.
+               --pipeline overlaps communication: overlap hides wire time
+               behind encode inside a step (bit-identical to off);
+               stale:1 computes step t+1 while step t's exchange lands,
+               applying aggregates one step late.
                --bits-policy moves the quantization width per step:
                fixed:B ≡ --bits B, schedule switches at the listed steps,
                variance tracks the quantization-variance estimate.
@@ -50,13 +55,16 @@ USAGE:
   aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
               [--method ALQ --bits 3 --bucket 512 --seed 42]
               [--topology flat|sharded:S|tree:G] [--codec huffman|elias]
+              [--pipeline off|overlap]
               [--bits-policy ...] [--quantize-impl scalar|fast|pallas]
               [--faults kill:W@S,delay:W@S:MS,join:W@S|none]
               [--trace PATH[:warn|info|debug]]
               (frames carry their width, so the leader relay needs no
-               flag and no extra round-trip; --faults is the shared
-               deterministic churn script — each worker acts only on
-               its own entries)
+               flag and no extra round-trip; --pipeline overlap hands
+               frame k to a sender thread while shard k+1 encodes —
+               byte-identical frames in identical order; --faults is the
+               shared deterministic churn script — each worker acts only
+               on its own entries)
   aqsgd trace-summarize FILE [--json PATH]
               (validate a --trace JSONL file against the event schema
                and fold it into per-phase/per-hop/per-width tables;
@@ -105,6 +113,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     if cfg.quantize_impl != aqsgd::quant::QuantizeImpl::default() {
         println!("  quantize-impl={}", cfg.quantize_impl.name());
+    }
+    if cfg.pipeline != aqsgd::exchange::PipelineMode::Off {
+        println!("  pipeline={}", cfg.pipeline.name());
     }
     if cfg.model != "mlp" {
         bail!("`train` runs the pure-Rust blobs task; for HLO models see examples/train_lm.rs");
@@ -312,6 +323,20 @@ fn cmd_worker(args: &[String]) -> Result<()> {
             }
         }
     }
+    let pipeline = match flag(args, "--pipeline") {
+        Some(v) => {
+            let p = aqsgd::exchange::PipelineMode::parse(v)
+                .with_context(|| format!("bad --pipeline {v:?} (off|overlap)"))?;
+            if p == aqsgd::exchange::PipelineMode::Stale {
+                bail!(
+                    "--pipeline stale:1 is a simulation schedule (aqsgd train); \
+                     the TCP worker supports off|overlap"
+                );
+            }
+            p
+        }
+        None => aqsgd::exchange::PipelineMode::Off,
+    };
     let faults = match flag(args, "--faults") {
         Some(v) => aqsgd::sim::FaultPlan::parse(v).map_err(|e| {
             anyhow::anyhow!(
@@ -337,6 +362,7 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         topology: parse_wire_topology(args)?,
         codec,
         quantize_impl,
+        pipeline,
         faults,
     };
     if let Err(e) = cfg.faults.validate(cfg.world) {

@@ -92,13 +92,20 @@ impl BitWriter {
         self.bits_written += 64;
     }
 
-    /// Pack `syms` at a fixed power-of-two `width` ∈ {1, 2, 4, 8} bits
-    /// each, whole `u64` lanes (`64/width` symbols) at a time. Bit-
-    /// identical to calling [`BitWriter::push_bits_lsb`] per symbol —
-    /// pinned by the exhaustive property test below. Symbols must
-    /// already fit in `width` bits.
+    /// Pack `syms` at a fixed `width` ∈ {1, 2, 3, 4, 8} bits each, whole
+    /// `u64` lanes (`64/width` symbols) at a time. Bit-identical to
+    /// calling [`BitWriter::push_bits_lsb`] per symbol — pinned by the
+    /// exhaustive property test below. Symbols must already fit in
+    /// `width` bits.
+    ///
+    /// Width 3 is the odd one out: 21 symbols fill only 63 bits, so its
+    /// lane is split across two accumulator pushes (32 + 31) instead of
+    /// the whole-u64 append — still one shift+or per symbol.
     pub fn pack_pow2(&mut self, width: u32, syms: &[u64]) {
-        assert!(matches!(width, 1 | 2 | 4 | 8), "pow-2 width must be 1/2/4/8");
+        assert!(
+            matches!(width, 1 | 2 | 3 | 4 | 8),
+            "fixed lane width must be 1/2/3/4/8"
+        );
         let per = (64 / width) as usize;
         let mut chunks = syms.chunks_exact(per);
         for chunk in &mut chunks {
@@ -107,7 +114,12 @@ impl BitWriter {
                 debug_assert!(s < (1u64 << width));
                 lane |= s << (i as u32 * width);
             }
-            self.push_u64_lsb(lane);
+            if width == 3 {
+                self.push_bits_lsb(lane & 0xFFFF_FFFF, 32);
+                self.push_bits_lsb(lane >> 32, 31);
+            } else {
+                self.push_u64_lsb(lane);
+            }
         }
         for &s in chunks.remainder() {
             self.push_bits_lsb(s, width);
@@ -227,14 +239,25 @@ impl<'a> BitReader<'a> {
     }
 
     /// Inverse of [`BitWriter::pack_pow2`]: fill `out` with fixed-width
-    /// symbols, whole `u64` lanes at a time.
+    /// symbols, whole `u64` lanes at a time (63-bit lanes for width 3).
     pub fn unpack_pow2(&mut self, width: u32, out: &mut [u64]) {
-        assert!(matches!(width, 1 | 2 | 4 | 8), "pow-2 width must be 1/2/4/8");
+        assert!(
+            matches!(width, 1 | 2 | 3 | 4 | 8),
+            "fixed lane width must be 1/2/3/4/8"
+        );
         let per = (64 / width) as usize;
         let mask = (1u64 << width) - 1;
         let mut chunks = out.chunks_exact_mut(per);
         for chunk in &mut chunks {
-            let mut lane = self.read_u64_lsb();
+            let mut lane = if width == 3 {
+                let lo = self.peek_bits(32);
+                self.consume(32);
+                let hi = self.peek_bits(31);
+                self.consume(31);
+                lo | (hi << 32)
+            } else {
+                self.read_u64_lsb()
+            };
             for s in chunk.iter_mut() {
                 *s = lane & mask;
                 lane >>= width;
@@ -386,7 +409,7 @@ mod tests {
     #[test]
     fn pack_pow2_matches_cursor_exhaustively() {
         let mut rng = crate::util::Rng::new(12);
-        for width in [1u32, 2, 4, 8] {
+        for width in [1u32, 2, 3, 4, 8] {
             let per = (64 / width) as usize;
             let lens: Vec<usize> = (0..=2 * per + 3)
                 .chain([5 * per - 1, 5 * per, 5 * per + 1])
@@ -420,7 +443,7 @@ mod tests {
     #[test]
     fn pack_pow2_roundtrips_through_unpack() {
         let mut rng = crate::util::Rng::new(13);
-        for width in [1u32, 2, 4, 8] {
+        for width in [1u32, 2, 3, 4, 8] {
             let per = (64 / width) as usize;
             for len in [0, 1, per - 1, per, per + 1, 3 * per + 2] {
                 let syms: Vec<u64> = (0..len)

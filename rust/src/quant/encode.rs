@@ -71,7 +71,7 @@ pub fn book_for(levels: &Levels, probs: &[f64]) -> HuffmanBook {
 
 /// Width (bits per coordinate record) at which a level-family × book pair
 /// admits the fixed-width fast path: every `Huffman(|symbol|)` + sign
-/// record shares one length in {1, 2, 4, 8}. `None` ⇒ bit-cursor path.
+/// record shares one length in {1, 2, 3, 4, 8}. `None` ⇒ bit-cursor path.
 ///
 /// A "record" is exactly the bits the cursor path emits per coordinate:
 /// for `has_zero` families magnitude 0 carries no sign bit (record length
@@ -98,7 +98,7 @@ pub fn fixed_width(levels: &Levels, book: &HuffmanBook) -> Option<u32> {
         }
     };
     let width = rec_len(0);
-    if !matches!(width, 1 | 2 | 4 | 8) {
+    if !matches!(width, 1 | 2 | 3 | 4 | 8) {
         return None;
     }
     if (1..k).all(|m| rec_len(m) == width) {
@@ -159,7 +159,9 @@ impl Pow2Book {
     }
 
     /// Encode one bucket's symbols, whole `u64` lanes at a time —
-    /// bit-identical to the per-symbol fused cursor pushes.
+    /// bit-identical to the per-symbol fused cursor pushes. Width-3
+    /// lanes hold 21 records (63 bits) and are split across two
+    /// accumulator pushes; every other width fills the u64 exactly.
     #[inline]
     fn encode_bucket(&self, syms: &[i8], w: &mut BitWriter) {
         let per = (64 / self.width) as usize;
@@ -169,7 +171,12 @@ impl Pow2Book {
             for (i, &s) in chunk.iter().enumerate() {
                 lane |= self.enc[s as u8 as usize] << (i as u32 * self.width);
             }
-            w.push_u64_lsb(lane);
+            if self.width == 3 {
+                w.push_bits_lsb(lane & 0xFFFF_FFFF, 32);
+                w.push_bits_lsb(lane >> 32, 31);
+            } else {
+                w.push_u64_lsb(lane);
+            }
         }
         for &s in chunks.remainder() {
             w.push_bits_lsb(self.enc[s as u8 as usize], self.width);
@@ -183,7 +190,15 @@ impl Pow2Book {
         let mask = (1u64 << self.width) - 1;
         let mut chunks = out.chunks_exact_mut(per);
         for chunk in &mut chunks {
-            let mut lane = r.read_u64_lsb();
+            let mut lane = if self.width == 3 {
+                let lo = r.peek_bits(32);
+                r.consume(32);
+                let hi = r.peek_bits(31);
+                r.consume(31);
+                lo | (hi << 32)
+            } else {
+                r.read_u64_lsb()
+            };
             for s in chunk.iter_mut() {
                 *s = self.dec[(lane & mask) as usize];
                 lane >>= self.width;
@@ -570,6 +585,16 @@ mod tests {
             ),
             // AMQ 2-symbol: 1-bit codes + sign.
             (Levels::amq(2, 0.5), HuffmanBook::from_weights(&[1.0; 2]), 2),
+            // AMQ 4-symbol: 2-bit codes + sign → 3-bit records, the
+            // 21-records-per-lane odd width.
+            (Levels::amq(4, 0.5), HuffmanBook::from_weights(&[1.0; 4]), 3),
+            // has_zero at width 3: mag 0 takes the lone 3-bit code, the
+            // other magnitudes 2-bit codes + sign.
+            (
+                Levels::exponential(4, 0.5),
+                HuffmanBook::from_lengths(vec![3, 2, 2, 2]),
+                3,
+            ),
             // has_zero 128-symbol: 7-bit codes + sign, 8-bit mag-0 code.
             (Levels::exponential(128, 0.5), {
                 let mut lens = vec![7u32; 128];
@@ -591,7 +616,8 @@ mod tests {
         // Uniform has_zero book: mag-0 records are 1 bit shorter.
         let book = HuffmanBook::from_weights(&[1.0; 4]);
         assert_eq!(fixed_width(&levels, &book), None);
-        // Non-pow-2 record width (3 symbols → lens {1,2,2} + sign).
+        // Mixed record lengths (3 symbols → lens {1,2,2} + sign): no
+        // single width, even though 3-bit records are now supported.
         let levels = Levels::amq(3, 0.5);
         let book = HuffmanBook::from_weights(&[1.0; 3]);
         assert_eq!(fixed_width(&levels, &book), None);

@@ -21,7 +21,7 @@
 
 use crate::exchange::{
     make_backend, BitsPolicy, CodecPhase, ExchangeBackend, ExchangeConfig, ParallelMode,
-    TopologySpec,
+    PipelineMode, TopologySpec,
 };
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
@@ -54,6 +54,11 @@ pub struct ClusterConfig {
     /// Lane scheduling inside the exchange backend (applies to flat,
     /// sharded, and tree; the ring schedule is inherently serial).
     pub parallel: ParallelMode,
+    /// Pipeline schedule (`--pipeline off|overlap|stale:1`): `overlap`
+    /// hides wire time behind encode inside a step (bit-identical to
+    /// `off`); `stale:1` computes step t+1's gradients while step t's
+    /// exchange completes and applies the aggregate one step late.
+    pub pipeline: PipelineMode,
     /// Exchange schedule (`--topology flat|sharded:S|tree:G|ring`).
     pub topology: TopologySpec,
     /// Entropy coder for the symbol stream (`--codec huffman|elias`).
@@ -86,6 +91,7 @@ impl ClusterConfig {
             variance_every: 0,
             network: NetworkModel::paper_testbed(),
             parallel: ParallelMode::Auto,
+            pipeline: PipelineMode::Off,
             topology: TopologySpec::Flat,
             codec: Codec::Huffman,
             quantize_impl: QuantizeImpl::default(),
@@ -152,6 +158,12 @@ pub struct TrainRecord {
     pub variance: Vec<VarianceSample>,
     pub comm_bits: u64,
     pub comm_time: f64,
+    /// Measured wall seconds of the local-gradient compute phase,
+    /// summed over steps.
+    pub compute_time: f64,
+    /// Modeled communication seconds hidden behind overlapped work by
+    /// the configured `--pipeline` schedule (0 for `off`).
+    pub hidden_time: f64,
     /// Wall time spent inside quantize+encode+decode (the codec hot path).
     pub codec_seconds: f64,
     /// Per-phase split of `codec_seconds` (quantize vs encode vs decode;
@@ -162,6 +174,16 @@ pub struct TrainRecord {
     /// FNV-1a over the final parameter bits (parity fingerprint shared
     /// with the distributed workers' replica hash).
     pub params_hash: u64,
+}
+
+impl TrainRecord {
+    /// End-to-end modeled wall time of the run: compute plus the
+    /// communication that could not be hidden behind it — per-step
+    /// `max(compute, comm)` plus the unhidden remainder, accumulated
+    /// (see [`crate::sim::network::Meter::wall_time`]).
+    pub fn wall_time(&self) -> f64 {
+        self.compute_time + self.comm_time - self.hidden_time
+    }
 }
 
 /// The simulated cluster: local gradients + optimizer around the
@@ -177,6 +199,7 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
         let mut engine = make_backend(cfg.exchange(), cfg.topology);
+        engine.core_mut().set_pipeline(cfg.pipeline);
         // Workers with a `join:W@S` fault start as standby: their lane
         // exists (they compute gradients and track the replica) but they
         // are outside the active set until their join step.
@@ -230,11 +253,20 @@ impl Cluster {
             variance: Vec::new(),
             comm_bits: 0,
             comm_time: 0.0,
+            compute_time: 0.0,
+            hidden_time: 0.0,
             codec_seconds: 0.0,
             codec_phase: CodecPhase::default(),
             level_updates: 0,
             params_hash: 0,
         };
+
+        // stale:1 double buffer: the aggregate (and the lr of its step)
+        // waiting to be applied one step late, plus the previous step's
+        // modeled comm seconds that this step's compute overlaps.
+        let stale = self.cfg.pipeline == PipelineMode::Stale;
+        let mut pending: Option<(Vec<f32>, f32)> = None;
+        let mut prev_comm_seconds = 0.0f64;
 
         self.tracer.event(Level::Info, "run_start", |o| {
             o.insert("runtime", Json::Str("sim".into()));
@@ -246,6 +278,7 @@ impl Cluster {
             o.insert("bucket", Json::Num(self.cfg.bucket as f64));
             o.insert("seed", Json::Num(self.cfg.seed as f64));
             o.insert("parallel", Json::Str(self.cfg.parallel.name().into()));
+            o.insert("pipeline", Json::Str(self.cfg.pipeline.name().into()));
         });
 
         for step in 0..self.cfg.iters {
@@ -268,11 +301,34 @@ impl Cluster {
                 }
             }
 
-            // 1. Local gradients.
+            // 1. Local gradients (the compute phase; wall-clocked so
+            // pipelined schedules can hide communication behind it).
+            let t_compute = std::time::Instant::now();
             let mut mean_loss = 0.0f64;
             for (w, grad) in grads.iter_mut().enumerate() {
                 let loss = task.grad(&params, w, step, grad);
                 mean_loss += loss as f64 / active_workers as f64;
+            }
+            let compute_seconds = t_compute.elapsed().as_secs_f64();
+            self.engine
+                .core_mut()
+                .meter_mut()
+                .record_compute(compute_seconds);
+            if self.tracer.on(Level::Debug) {
+                self.tracer.event(Level::Debug, "phase", |o| {
+                    o.insert("step", Json::Num(step as f64));
+                    o.insert("phase", Json::Str("compute".into()));
+                    o.insert("wall_seconds", Json::Num(compute_seconds));
+                });
+            }
+            if stale && step > 0 {
+                // Step t−1's exchange completes while this step's
+                // gradients compute: up to this step's compute wall
+                // time of its modeled comm seconds is hidden.
+                self.engine
+                    .core_mut()
+                    .meter_mut()
+                    .hide(compute_seconds.min(prev_comm_seconds));
             }
 
             // 2. Level adaptation + codebook refresh (Algorithm 1 line 4).
@@ -283,7 +339,9 @@ impl Cluster {
 
             // 3. Quantize → encode → meter → decode → aggregate, fanned
             // out across the worker lanes by the exchange engine.
+            let comm_before = self.engine.meter().total_time;
             let step_bits = self.engine.exchange(step, &grads, &mut agg);
+            prev_comm_seconds = self.engine.meter().total_time - comm_before;
 
             // 4. Variance telemetry (Figs. 1/4/5).
             if self.cfg.variance_every > 0 && step % self.cfg.variance_every == 0 {
@@ -291,9 +349,19 @@ impl Cluster {
                     .push(self.variance_sample(step, &grads, active_workers, d));
             }
 
-            // 5. Update.
+            // 5. Update. Under stale:1 the aggregate lands one step
+            // late: apply step t−1's buffered exchange (at its own lr),
+            // then buffer this step's — classic pipelined-SGD
+            // staleness, double-buffered through `pending`.
             let lr = self.cfg.lr.lr(step);
-            optimizer.step(&mut params, &agg, lr);
+            if stale {
+                if let Some((stale_agg, stale_lr)) = pending.take() {
+                    optimizer.step(&mut params, &stale_agg, stale_lr);
+                }
+                pending = Some((agg.clone(), lr));
+            } else {
+                optimizer.step(&mut params, &agg, lr);
+            }
 
             rec.steps.push(StepStats {
                 step,
@@ -310,10 +378,18 @@ impl Cluster {
             }
         }
 
+        // Drain the stale pipeline: the last step's exchange still has
+        // to land, so every run applies exactly `iters` updates.
+        if let Some((stale_agg, stale_lr)) = pending {
+            optimizer.step(&mut params, &stale_agg, stale_lr);
+        }
+
         rec.final_eval = task.eval(&params);
         rec.final_levels = self.engine.final_levels();
         rec.comm_bits = self.engine.meter().total_bits;
         rec.comm_time = self.engine.meter().total_time;
+        rec.compute_time = self.engine.meter().compute_seconds;
+        rec.hidden_time = self.engine.meter().hidden_seconds;
         rec.codec_seconds = self.engine.codec_seconds();
         rec.codec_phase = self.engine.codec_phase();
         rec.params_hash = crate::util::hash_params(&params);
@@ -579,6 +655,66 @@ mod tests {
         // Full precision reports width 32.
         let rec = Cluster::new(small_cfg(Method::SuperSgd, 3)).train(&mut task(4, 21));
         assert!(rec.steps.iter().all(|s| s.width == 32));
+    }
+
+    #[test]
+    fn overlap_pipeline_is_bit_identical_to_off_and_hides_time() {
+        let run = |pipeline: PipelineMode| {
+            let mut cfg = small_cfg(Method::Alq, 30);
+            cfg.pipeline = pipeline;
+            Cluster::new(cfg).train(&mut task(4, 27))
+        };
+        let off = run(PipelineMode::Off);
+        let overlap = run(PipelineMode::Overlap);
+        // Bit-identical run: same per-step bits, same per-step replica
+        // hashes, same final parameters and meter bits.
+        assert_eq!(off.params_hash, overlap.params_hash);
+        assert_eq!(off.comm_bits, overlap.comm_bits);
+        assert_eq!(
+            off.steps
+                .iter()
+                .map(|s| (s.bits, s.params_hash))
+                .collect::<Vec<_>>(),
+            overlap
+                .steps
+                .iter()
+                .map(|s| (s.bits, s.params_hash))
+                .collect::<Vec<_>>()
+        );
+        // Modeled comm time is untouched; only the hidden ledger moves.
+        assert_eq!(off.comm_time.to_bits(), overlap.comm_time.to_bits());
+        assert_eq!(off.hidden_time, 0.0);
+        assert!(overlap.hidden_time > 0.0, "overlap hid nothing");
+        assert!(overlap.hidden_time <= overlap.comm_time + 1e-12);
+        assert!(overlap.wall_time() < overlap.compute_time + overlap.comm_time);
+    }
+
+    #[test]
+    fn stale_pipeline_is_deterministic_and_lags_one_step() {
+        let run = || {
+            let mut cfg = small_cfg(Method::Alq, 30);
+            cfg.pipeline = PipelineMode::Stale;
+            Cluster::new(cfg).train(&mut task(4, 27))
+        };
+        let a = run();
+        let b = run();
+        // Per-seed deterministic trajectory of its own.
+        assert_eq!(a.params_hash, b.params_hash);
+        assert_eq!(a.comm_bits, b.comm_bits);
+        assert_eq!(
+            a.steps.iter().map(|s| s.params_hash).collect::<Vec<_>>(),
+            b.steps.iter().map(|s| s.params_hash).collect::<Vec<_>>()
+        );
+        let off = Cluster::new(small_cfg(Method::Alq, 30)).train(&mut task(4, 27));
+        // Step 0 sees identical parameters (no update has landed yet in
+        // either schedule), so its gradients and bits agree; from step 1
+        // the lagged replica diverges.
+        assert_eq!(a.steps[0].bits, off.steps[0].bits);
+        assert_ne!(a.params_hash, off.params_hash);
+        assert_ne!(a.steps[0].params_hash, off.steps[0].params_hash);
+        // The overlapped compute hides some of the previous step's comm.
+        assert!(a.hidden_time > 0.0, "stale:1 hid nothing");
+        assert!(a.hidden_time <= a.comm_time + 1e-12);
     }
 
     #[test]

@@ -85,6 +85,14 @@ impl NetworkModel {
 pub struct Meter {
     pub total_bits: u64,
     pub total_time: f64,
+    /// Measured gradient-compute wall seconds charged alongside the
+    /// modeled communication (`sim::Cluster::train` reports its compute
+    /// phase here so step wall time can be reconstructed honestly).
+    pub compute_seconds: f64,
+    /// Modeled communication seconds hidden behind overlapped work by
+    /// an active `--pipeline` schedule. Never exceeds `total_time`;
+    /// always 0 for `--pipeline off`.
+    pub hidden_seconds: f64,
     pub steps: u64,
 }
 
@@ -109,6 +117,26 @@ impl Meter {
     /// step.
     pub fn add_seconds(&mut self, seconds: f64) {
         self.total_time += seconds;
+    }
+
+    /// Charge measured gradient-compute wall seconds (kept out of
+    /// `total_time`, whose semantics stay pure modeled communication).
+    pub fn record_compute(&mut self, seconds: f64) {
+        self.compute_seconds += seconds;
+    }
+
+    /// Mark `seconds` of already-recorded communication time as hidden
+    /// behind overlapped work (an active `--pipeline` schedule).
+    /// Clamped so hidden time never exceeds the recorded total.
+    pub fn hide(&mut self, seconds: f64) {
+        self.hidden_seconds = (self.hidden_seconds + seconds.max(0.0)).min(self.total_time);
+    }
+
+    /// End-to-end modeled wall time: compute plus the communication
+    /// that could not be hidden behind it — `max(compute, comm)` plus
+    /// the unhidden remainder, accumulated per step.
+    pub fn wall_time(&self) -> f64 {
+        self.compute_seconds + self.total_time - self.hidden_seconds
     }
 
     pub fn bits_per_step(&self) -> f64 {
@@ -231,6 +259,25 @@ mod tests {
         assert_eq!(m.total_bits, 1500);
         assert_eq!(m.steps, 2);
         assert!((m.total_time - 0.75).abs() < 1e-15);
+    }
+
+    #[test]
+    fn meter_pipeline_ledger() {
+        let mut m = Meter::default();
+        m.record_raw(1000, 2.0);
+        m.record_compute(3.0);
+        // Nothing hidden yet: wall time is plain compute + comm.
+        assert!((m.wall_time() - 5.0).abs() < 1e-15);
+        m.hide(0.5);
+        assert!((m.hidden_seconds - 0.5).abs() < 1e-15);
+        assert!((m.wall_time() - 4.5).abs() < 1e-15);
+        // Hiding clamps at the recorded communication total.
+        m.hide(100.0);
+        assert!((m.hidden_seconds - 2.0).abs() < 1e-15);
+        assert!((m.wall_time() - 3.0).abs() < 1e-15);
+        // Negative requests are inert.
+        m.hide(-1.0);
+        assert!((m.hidden_seconds - 2.0).abs() < 1e-15);
     }
 
     #[test]

@@ -140,8 +140,18 @@ pub const EVENT_TYPES: &[EventSchema] = &[
     },
 ];
 
-/// The phase names a `phase` event may carry.
-pub const PHASES: &[&str] = &["quantize", "encode", "wire", "decode", "aggregate", "adapt"];
+/// The phase names a `phase` event may carry. `compute` is the local
+/// gradient phase (`sim::Cluster::train` / the TCP worker's backward
+/// pass) — the span pipelined schedules hide communication behind.
+pub const PHASES: &[&str] = &[
+    "compute",
+    "quantize",
+    "encode",
+    "wire",
+    "decode",
+    "aggregate",
+    "adapt",
+];
 
 /// Validate one parsed event against [`EVENT_TYPES`]: must be an object
 /// with a known `e` tag, a numeric `seq`, and every required field
@@ -529,6 +539,9 @@ mod tests {
     fn phase_accepts_wall_or_modeled_seconds() {
         let wall = line(r#"{"e":"phase","seq":0,"step":0,"phase":"encode","wall_seconds":0.1}"#);
         assert!(validate_event(&wall).is_ok());
+        let compute =
+            line(r#"{"e":"phase","seq":0,"step":0,"phase":"compute","wall_seconds":0.3}"#);
+        assert!(validate_event(&compute).is_ok());
         let modeled = line(r#"{"e":"phase","seq":0,"step":0,"phase":"wire","seconds":0.2}"#);
         assert!(validate_event(&modeled).is_ok());
         let neither = line(r#"{"e":"phase","seq":0,"step":0,"phase":"wire"}"#);

@@ -275,6 +275,7 @@ fn engine_and_coordinator_bits_agree_qualitatively() {
                 topology: aqsgd::exchange::TopologySpec::Flat,
                 codec: aqsgd::quant::Codec::Huffman,
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+                pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: aqsgd::sim::FaultPlan::default(),
             };
             let mut t = task(world, 7);

@@ -72,6 +72,7 @@ fn sim_run(method: Method, topology: TopologySpec, faults: &str, iters: usize) -
         topology,
         codec: Codec::Huffman,
         quantize_impl: QuantizeImpl::default(),
+        pipeline: aqsgd::exchange::PipelineMode::Off,
         faults: FaultPlan::parse(faults).unwrap(),
     };
     Cluster::new(cfg).train(&mut task())
@@ -119,6 +120,7 @@ fn tcp_run(
                 topology,
                 codec: Codec::Huffman,
                 quantize_impl: QuantizeImpl::default(),
+                pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: plan,
             };
             run_worker(&cfg, &mut task()).map_err(|e| e.to_string())

@@ -45,6 +45,7 @@ fn quantized_training_over_hlo_model() {
         topology: aqsgd::exchange::TopologySpec::Flat,
         codec: aqsgd::quant::Codec::Huffman,
         quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+        pipeline: aqsgd::exchange::PipelineMode::Off,
         faults: aqsgd::sim::FaultPlan::default(),
     };
     let rec = Cluster::new(cfg).train(&mut task);
@@ -168,6 +169,7 @@ fn cluster_and_coordinator_agree_qualitatively() {
                 topology: aqsgd::exchange::TopologySpec::Flat,
                 codec: aqsgd::quant::Codec::Huffman,
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+                pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: aqsgd::sim::FaultPlan::default(),
             };
             let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 11);

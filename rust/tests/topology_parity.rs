@@ -22,6 +22,14 @@
 //!   order).
 //! * **Selectable everywhere.** `--topology` flows through the sim CLI
 //!   config and the TCP coordinator (leader relay modes + workers).
+//! * **`--pipeline overlap ≡ off`, bit for bit (ISSUE 9).** Overlap only
+//!   moves wall clock: on every topology × `--parallel` mode the
+//!   trajectory (`params_hash`, per-step bits + hashes, comm_bits),
+//!   the modeled `comm_time`, and the raw-backend hop logs must equal
+//!   the serial schedule exactly; only `hidden_time` may differ. The
+//!   same holds on the TCP wire path. `stale:1` is a per-seed golden:
+//!   deterministic, step-0 bits equal to `off`, trajectory diverging
+//!   from step 1 once the one-step-late aggregate lands.
 
 mod common;
 
@@ -30,7 +38,8 @@ use aqsgd::coordinator::leader::run_leader_topo;
 use aqsgd::coordinator::{run_worker, WorkerConfig};
 use aqsgd::data::Blobs;
 use aqsgd::exchange::{
-    make_backend, BitsPolicy, ExchangeBackend, ExchangeConfig, ParallelMode, TopologySpec,
+    make_backend, BitsPolicy, ExchangeBackend, ExchangeConfig, ParallelMode, PipelineMode,
+    TopologySpec,
 };
 use aqsgd::model::{Mlp, MlpTask};
 use aqsgd::opt::{LrSchedule, UpdateSchedule};
@@ -326,11 +335,12 @@ fn topology_selectable_from_the_sim_cli_config() {
     assert_eq!(c.cluster().codec, Codec::Elias);
 }
 
-fn spawn_tcp(
+fn spawn_tcp_pipeline(
     method: Method,
     iters: usize,
     world: usize,
     topology: TopologySpec,
+    pipeline: PipelineMode,
 ) -> Vec<aqsgd::coordinator::WorkerReport> {
     let (listener, addr) = common::free_listener();
     let leader =
@@ -355,6 +365,7 @@ fn spawn_tcp(
                 topology,
                 codec: Codec::Huffman,
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+                pipeline,
                 faults: FaultPlan::default(),
             };
             let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, 7);
@@ -365,6 +376,15 @@ fn spawn_tcp(
     let reports = handles.into_iter().map(|h| h.join().unwrap()).collect();
     leader.join().unwrap();
     reports
+}
+
+fn spawn_tcp(
+    method: Method,
+    iters: usize,
+    world: usize,
+    topology: TopologySpec,
+) -> Vec<aqsgd::coordinator::WorkerReport> {
+    spawn_tcp_pipeline(method, iters, world, topology, PipelineMode::Off)
 }
 
 /// `--topology` is selectable on the TCP coordinator, and the sharded
@@ -528,4 +548,218 @@ fn bits_policy_selectable_from_the_sim_cli_config() {
     let c = RunConfig::from_args(&args("--bits-policy variance:2-4")).unwrap();
     assert_eq!(c.cluster().bits, BitsPolicy::parse("variance:2-4").unwrap());
     assert!(RunConfig::from_args(&args("--bits-policy schedule:2@9")).is_err());
+}
+
+/// The ISSUE 9 acceptance criterion: `--pipeline overlap` moves only
+/// wall clock. On every topology × `--parallel` mode the trajectory
+/// (`params_hash`, per-step bits + per-step hashes, total bits, adapted
+/// levels) and the modeled `comm_time` are bit-identical to `off`; the
+/// only permitted difference is the hidden-seconds ledger — nonzero
+/// wherever an encode phase exists to hide wire time behind (flat,
+/// sharded, tree), and exactly zero on ring, whose strict stage chain
+/// has no independent encode to overlap (see `topology/ring.rs` docs).
+#[test]
+fn overlap_is_bit_identical_to_off_for_every_topology_and_parallel_mode() {
+    for topology in [
+        TopologySpec::Flat,
+        TopologySpec::Sharded(3),
+        TopologySpec::Tree(2),
+        TopologySpec::Ring,
+    ] {
+        for parallel in [ParallelMode::Serial, ParallelMode::Parallel] {
+            let run = |pipeline: PipelineMode| {
+                let mut cfg = config(Method::Alq, 40, topology);
+                cfg.parallel = parallel;
+                cfg.pipeline = pipeline;
+                Cluster::new(cfg).train(&mut task(4, 3))
+            };
+            let off = run(PipelineMode::Off);
+            let overlap = run(PipelineMode::Overlap);
+            let ctx = format!("{} {}", topology.name(), parallel.name());
+            assert_eq!(overlap.params_hash, off.params_hash, "{ctx}: params_hash");
+            assert_eq!(overlap.comm_bits, off.comm_bits, "{ctx}: comm_bits");
+            assert_eq!(
+                overlap
+                    .steps
+                    .iter()
+                    .map(|s| (s.bits, s.params_hash, s.width))
+                    .collect::<Vec<_>>(),
+                off.steps
+                    .iter()
+                    .map(|s| (s.bits, s.params_hash, s.width))
+                    .collect::<Vec<_>>(),
+                "{ctx}: per-step trajectory"
+            );
+            assert_eq!(overlap.final_levels, off.final_levels, "{ctx}: levels");
+            // The modeled wire time is untouched — overlap hides
+            // seconds, it does not re-price them.
+            assert_eq!(
+                overlap.comm_time.to_bits(),
+                off.comm_time.to_bits(),
+                "{ctx}: comm_time"
+            );
+            assert_eq!(off.hidden_time, 0.0, "{ctx}: off must hide nothing");
+            if topology == TopologySpec::Ring {
+                assert_eq!(overlap.hidden_time, 0.0, "{ctx}: ring overlap is inert");
+            } else {
+                assert!(overlap.hidden_time > 0.0, "{ctx}: overlap hid nothing");
+            }
+            assert!(
+                overlap.hidden_time <= overlap.comm_time + 1e-12,
+                "{ctx}: hidden exceeds modeled comm"
+            );
+            assert!(
+                overlap.wall_time() <= overlap.compute_time + overlap.comm_time + 1e-12,
+                "{ctx}: wall time accounting"
+            );
+        }
+    }
+}
+
+/// Hop logs are part of the overlap-parity surface: raw backends driven
+/// directly must report the exact same per-hop (label, bits, modeled
+/// seconds) sequence with the pipeline on, and the wire meter must
+/// price every step identically — only the hidden ledger may move.
+#[test]
+fn overlap_hop_logs_match_off_on_raw_backends() {
+    let d = 1500;
+    let workers = 4;
+    let mut rng = Rng::new(6);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|_| (0..d).map(|_| (rng.normal() * 0.1) as f32).collect())
+        .collect();
+    for topology in [
+        TopologySpec::Flat,
+        TopologySpec::Sharded(3),
+        TopologySpec::Tree(2),
+        TopologySpec::Ring,
+    ] {
+        let cfg = ExchangeConfig {
+            method: Method::Alq,
+            workers,
+            bits: BitsPolicy::Fixed(3),
+            bucket: 128,
+            seed: 9,
+            network: NetworkModel::paper_testbed(),
+            parallel: ParallelMode::Serial,
+            codec: Codec::Huffman,
+            quantize_impl: aqsgd::quant::QuantizeImpl::default(),
+        };
+        let mut off = make_backend(cfg.clone(), topology);
+        let mut overlap = make_backend(cfg, topology);
+        overlap.core_mut().set_pipeline(PipelineMode::Overlap);
+        let mut agg = vec![0.0f32; d];
+        for step in 0..8 {
+            if step == 4 {
+                off.adapt(&grads);
+                overlap.adapt(&grads);
+            }
+            let b_off = off.exchange(step, &grads, &mut agg);
+            let b_ov = overlap.exchange(step, &grads, &mut agg);
+            assert_eq!(b_off, b_ov, "{} step {step} bits", topology.name());
+            let log = |b: &Box<dyn ExchangeBackend>| {
+                b.last_hops()
+                    .iter()
+                    .map(|h| (h.label.clone(), h.bits, h.seconds.to_bits()))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(
+                log(&off),
+                log(&overlap),
+                "{} step {step} hop log",
+                topology.name()
+            );
+        }
+        assert_eq!(off.meter().total_bits, overlap.meter().total_bits);
+        assert_eq!(
+            off.meter().total_time.to_bits(),
+            overlap.meter().total_time.to_bits(),
+            "{}: modeled wire seconds must not be re-priced",
+            topology.name()
+        );
+        assert_eq!(off.meter().hidden_seconds, 0.0, "{}", topology.name());
+        if topology == TopologySpec::Ring {
+            assert_eq!(overlap.meter().hidden_seconds, 0.0, "ring hides nothing");
+        } else {
+            assert!(
+                overlap.meter().hidden_seconds > 0.0,
+                "{}: encode ledger never fed the meter",
+                topology.name()
+            );
+        }
+    }
+}
+
+/// `stale:1` is a per-seed golden, not an `off`-parity mode: two runs at
+/// one seed are bit-identical, step 0 meters the same bits as `off`
+/// (the first gradients see identical parameters), and the trajectory
+/// diverges from step 0's update on — the aggregate lands a step late.
+#[test]
+fn stale_pipeline_is_a_per_seed_golden_trajectory() {
+    for topology in [TopologySpec::Flat, TopologySpec::Tree(2)] {
+        let run = |pipeline: PipelineMode, seed: u64| {
+            let mut cfg = config(Method::Alq, 40, topology);
+            cfg.pipeline = pipeline;
+            cfg.seed = seed;
+            Cluster::new(cfg).train(&mut task(4, 3))
+        };
+        let a = run(PipelineMode::Stale, 5);
+        let b = run(PipelineMode::Stale, 5);
+        let ctx = topology.name();
+        assert_eq!(a.params_hash, b.params_hash, "{ctx}: stale determinism");
+        assert_eq!(a.comm_bits, b.comm_bits, "{ctx}");
+        assert_eq!(
+            a.steps
+                .iter()
+                .map(|s| (s.bits, s.params_hash))
+                .collect::<Vec<_>>(),
+            b.steps
+                .iter()
+                .map(|s| (s.bits, s.params_hash))
+                .collect::<Vec<_>>(),
+            "{ctx}: stale per-step golden"
+        );
+        assert_eq!(a.final_levels, b.final_levels, "{ctx}");
+        // A different seed is a different golden.
+        let c = run(PipelineMode::Stale, 6);
+        assert_ne!(a.params_hash, c.params_hash, "{ctx}");
+        // Step 0 quantizes the same gradients as off (identical initial
+        // params), so it meters the same bits — but its update is
+        // deferred, so the post-step hashes already differ.
+        let off = run(PipelineMode::Off, 5);
+        assert_eq!(a.steps[0].bits, off.steps[0].bits, "{ctx}: step-0 bits");
+        assert_ne!(
+            a.steps[0].params_hash, off.steps[0].params_hash,
+            "{ctx}: stale defers the first update"
+        );
+        assert_ne!(a.params_hash, off.params_hash, "{ctx}: stale is its own run");
+        // Staleness buys real overlap: comm hides behind next-step
+        // compute.
+        assert!(a.hidden_time > 0.0, "{ctx}: stale hid nothing");
+        assert!(a.hidden_time <= a.comm_time + 1e-12, "{ctx}");
+    }
+}
+
+/// TCP wire-path parity: the overlap sender (encode shard k+1 while
+/// frame k is on the wire) must leave every replica's trajectory,
+/// frame accounting, and per-step fingerprints bit-identical to the
+/// serial sender — on the sharded relay where it actually double
+/// buffers, and on flat where it is structurally a no-op.
+#[test]
+fn tcp_overlap_is_bit_identical_to_off() {
+    let off = spawn_tcp_pipeline(Method::Alq, 30, 4, TopologySpec::Sharded(3), PipelineMode::Off);
+    let overlap =
+        spawn_tcp_pipeline(Method::Alq, 30, 4, TopologySpec::Sharded(3), PipelineMode::Overlap);
+    for (w, (o, v)) in off.iter().zip(&overlap).enumerate() {
+        assert_eq!(o.params_hash, v.params_hash, "worker {w}: params_hash");
+        assert_eq!(o.sent_bits, v.sent_bits, "worker {w}: sent_bits");
+        assert_eq!(o.final_levels, v.final_levels, "worker {w}: levels");
+        assert_eq!(o.step_records, v.step_records, "worker {w}: step records");
+    }
+    // Overlap on the flat relay (single frame per step — nothing to
+    // pipeline) still runs and still matches: sharded ≡ flat composes
+    // with overlap ≡ off.
+    let flat = spawn_tcp_pipeline(Method::Alq, 30, 4, TopologySpec::Flat, PipelineMode::Overlap);
+    assert_eq!(flat[0].params_hash, off[0].params_hash);
+    assert_eq!(flat[0].final_levels, off[0].final_levels);
 }

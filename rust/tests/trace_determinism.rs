@@ -42,6 +42,7 @@ fn sim_cfg(topology: TopologySpec, parallel: ParallelMode) -> ClusterConfig {
         topology,
         codec: Codec::Huffman,
         quantize_impl: QuantizeImpl::default(),
+        pipeline: aqsgd::exchange::PipelineMode::Off,
         faults: FaultPlan::default(),
     }
 }
@@ -96,6 +97,7 @@ fn tcp_trace(level: Level) -> (String, String) {
                 topology: TopologySpec::Flat,
                 codec: Codec::Huffman,
                 quantize_impl: QuantizeImpl::default(),
+                pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: FaultPlan::default(),
             };
             run_worker_traced(&cfg, &mut sim_task(), &tracer).unwrap()
