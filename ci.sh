@@ -27,9 +27,11 @@ if cargo clippy --version >/dev/null 2>&1; then
   step "cargo clippy (advisory)"
   lint cargo clippy --all-targets
   # The exchange, quant, and trace trees are held to -D warnings: the
-  # bit-budget refactor keeps rust/src/exchange/ clippy-clean, the
-  # hot-loop speed pass extends that to rust/src/quant/, and the
-  # telemetry subsystem to rust/src/trace/; regressions in any gate.
+  # bit-budget refactor keeps rust/src/exchange/ clippy-clean (which
+  # covers the error-feedback + lazy-aggregation subsystem in
+  # rust/src/exchange/feedback.rs), the hot-loop speed pass extends
+  # that to rust/src/quant/, and the telemetry subsystem to
+  # rust/src/trace/; regressions in any gate.
   step "cargo clippy gate: rust/src/{exchange,quant,trace} must be warning-free"
   clippy_out=$(cargo clippy --all-targets --message-format=short 2>&1 || true)
   if printf '%s\n' "$clippy_out" | grep -E '^rust/src/(exchange|quant|trace)/[^ ]*: (warning|error)'; then
@@ -98,6 +100,15 @@ step "smoke: one-step sharded topology run with parallel lanes"
 step "smoke: pipelined exchange — overlap (bit-identical) and stale:1 (one step late)"
 ./target/release/aqsgd train --iters 2 --seeds 1 --bucket 512 --pipeline overlap
 ./target/release/aqsgd train --iters 2 --seeds 1 --bucket 512 --pipeline stale:1
+
+step "smoke: error-feedback + lazy skip rounds in the sim"
+# thresh:1e30 is unreachable, so every worker-step skips (the marker
+# bits and skipped-frame count surface in the per-seed summary); the
+# plain --error-feedback run keeps residual memory with every frame
+# still sent.
+./target/release/aqsgd train --iters 4 --seeds 1 --bucket 512 --error-feedback on
+./target/release/aqsgd train --iters 4 --seeds 1 --bucket 512 \
+  --error-feedback on --lazy thresh:1e30
 
 step "smoke: scheduled bit budget (width switches mid-run)"
 ./target/release/aqsgd train --iters 12 --seeds 1 --bucket 512 --bits-policy schedule:4@0,2@6
@@ -175,6 +186,35 @@ for w in 0 1 2 3; do
 done
 for pid in "${worker_pids[@]}"; do wait "$pid"; done
 wait "$leader_pid"
+
+step "smoke: error-feedback + lazy skip rounds over TCP (tree:2 leader + 4 workers)"
+# Gating is per-worker local state, so workers need not agree on a lazy
+# policy: worker 3 runs an unreachable threshold (skips every round,
+# sending only 104-bit markers) while workers 0-2 send compensated
+# frames. The leader needs no flag — it counts the markers, relays the
+# surviving frames, and every skip event must report the senders'
+# renormalized weights summing to exactly 1.
+rm -f trace_lazy_leader.jsonl
+./target/release/aqsgd leader --bind 127.0.0.1:7722 --world 4 --iters 4 \
+  --topology tree:2 --trace trace_lazy_leader.jsonl:info &
+leader_pid=$!
+sleep 1
+worker_pids=()
+for w in 0 1 2; do
+  ./target/release/aqsgd worker --addr 127.0.0.1:7722 --worker "$w" --world 4 \
+    --iters 4 --topology tree:2 --error-feedback on &
+  worker_pids+=($!)
+done
+./target/release/aqsgd worker --addr 127.0.0.1:7722 --worker 3 --world 4 \
+  --iters 4 --topology tree:2 --error-feedback on --lazy thresh:1e30 &
+worker_pids+=($!)
+for pid in "${worker_pids[@]}"; do wait "$pid"; done
+wait "$leader_pid"
+skips=$(grep -c '"e":"skip"' trace_lazy_leader.jsonl || true)
+[ "$skips" -ge 1 ] || { echo "FAIL: expected at least one skip event, got $skips"; exit 1; }
+grep -q '"e":"skip".*"weight_sum":1' trace_lazy_leader.jsonl \
+  || { echo "FAIL: skip event lacks weight_sum 1 (senders must renormalize)"; exit 1; }
+./target/release/aqsgd trace-summarize trace_lazy_leader.jsonl >/dev/null
 
 step "docs build (cargo doc --no-deps; gate: no missing_docs warnings)"
 doc_out=$(cargo doc --no-deps 2>&1) || { printf '%s\n' "$doc_out"; exit 1; }

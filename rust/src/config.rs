@@ -2,7 +2,7 @@
 //! Table 3-shaped defaults. Dependency-free (no TOML/serde in the image's
 //! vendored crate set); values are validated on parse.
 
-use crate::exchange::{BitsPolicy, ParallelMode, PipelineMode, TopologySpec};
+use crate::exchange::{BitsPolicy, LazyPolicy, ParallelMode, PipelineMode, TopologySpec};
 use crate::quant::{Codec, Method, QuantizeImpl};
 use crate::sim::FaultPlan;
 use crate::trace::TraceSpec;
@@ -52,6 +52,12 @@ pub struct RunConfig {
     /// Deterministic mid-run churn
     /// (`--faults kill:W@S,delay:W@S:MS,join:W@S` or `none`).
     pub faults: FaultPlan,
+    /// Error-feedback residual memory (`--error-feedback on|off`).
+    /// Incompatible with `--topology ring` (partials are re-quantized
+    /// per ring stage, so no per-worker decode error exists).
+    pub error_feedback: bool,
+    /// Lazy skip-round policy (`--lazy off|thresh:T|laq:C@K`).
+    pub lazy: LazyPolicy,
 }
 
 impl Default for RunConfig {
@@ -77,6 +83,8 @@ impl Default for RunConfig {
             quantize_impl: QuantizeImpl::default(),
             trace: None,
             faults: FaultPlan::default(),
+            error_feedback: false,
+            lazy: LazyPolicy::Off,
         }
     }
 }
@@ -157,6 +165,17 @@ impl RunConfig {
                         )
                     })?
                 }
+                "error-feedback" => {
+                    self.error_feedback = match val.to_ascii_lowercase().as_str() {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        _ => bail!("bad --error-feedback {val:?} (on|off)"),
+                    }
+                }
+                "lazy" => {
+                    self.lazy = LazyPolicy::parse_strict(val)
+                        .map_err(|e| anyhow::anyhow!("bad --lazy: {e}"))?
+                }
                 other => bail!("unknown option --{other}"),
             }
         }
@@ -216,6 +235,14 @@ impl RunConfig {
                 }
             }
         }
+        if self.error_feedback && self.topology == TopologySpec::Ring {
+            bail!(
+                "--error-feedback is unsupported over --topology ring: ring re-quantizes \
+                 partial sums at every stage, so no per-worker decode error exists to feed \
+                 back (use flat, sharded:S, or tree:G, or keep --error-feedback off)"
+            );
+        }
+        validate_pipeline_transport(self.pipeline, false).map_err(|e| anyhow::anyhow!(e))?;
         Ok(())
     }
 
@@ -242,8 +269,27 @@ impl RunConfig {
             codec: self.codec,
             quantize_impl: self.quantize_impl,
             faults: self.faults.clone(),
+            error_feedback: self.error_feedback,
+            lazy: self.lazy,
         }
     }
+}
+
+/// Validate a `--pipeline` mode against the runtime that will execute it
+/// — the single parse-time check both the simulation (`tcp = false`) and
+/// the TCP worker (`tcp = true`) call, instead of a rejection buried in
+/// the worker's runtime setup. `stale:1` is a simulation schedule: the
+/// sim's training loop double-buffers the aggregate, which has no wire
+/// equivalent in the current worker protocol.
+pub fn validate_pipeline_transport(pipeline: PipelineMode, tcp: bool) -> Result<(), String> {
+    if tcp && pipeline == PipelineMode::Stale {
+        return Err(
+            "--pipeline stale:1 is a simulation schedule (aqsgd train); the TCP worker \
+             supports off|overlap"
+                .to_string(),
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -394,6 +440,45 @@ mod tests {
         // Malformed specs and out-of-world targets are CLI errors.
         assert!(RunConfig::from_args(&args("--faults zap:1@3")).is_err());
         assert!(RunConfig::from_args(&args("--faults kill:9@3 --workers 4")).is_err());
+    }
+
+    #[test]
+    fn parses_error_feedback_and_lazy() {
+        let c = RunConfig::default();
+        assert!(!c.error_feedback);
+        assert_eq!(c.lazy, LazyPolicy::Off);
+        let c = RunConfig::from_args(&args("--error-feedback on --lazy thresh:0.5")).unwrap();
+        assert!(c.error_feedback);
+        assert_eq!(c.lazy, LazyPolicy::Thresh(0.5));
+        assert!(c.cluster().error_feedback);
+        assert_eq!(c.cluster().lazy, LazyPolicy::Thresh(0.5));
+        let c = RunConfig::from_args(&args("--lazy laq:0.8@5")).unwrap();
+        assert_eq!(c.lazy, LazyPolicy::Laq { c: 0.8, k: 5 });
+        // Rejections carry the grammar.
+        let err = RunConfig::from_args(&args("--lazy sometimes")).unwrap_err();
+        assert!(err.to_string().contains("thresh:T"), "{err}");
+        assert!(RunConfig::from_args(&args("--error-feedback maybe")).is_err());
+        assert!(RunConfig::from_args(&args("--lazy thresh:-1")).is_err());
+        assert!(RunConfig::from_args(&args("--lazy laq:0.5@0")).is_err());
+        // Ring × feedback is a config-time error; ring × lazy is fine.
+        let err =
+            RunConfig::from_args(&args("--error-feedback on --topology ring")).unwrap_err();
+        assert!(err.to_string().contains("unsupported over --topology ring"), "{err}");
+        assert!(RunConfig::from_args(&args("--lazy thresh:2 --topology ring")).is_ok());
+    }
+
+    #[test]
+    fn pipeline_transport_validation_is_parse_time() {
+        // The sim accepts every pipeline mode; the TCP worker rejects
+        // stale:1 with a pointer at the sim — one shared check for both.
+        for p in [PipelineMode::Off, PipelineMode::Overlap, PipelineMode::Stale] {
+            assert!(validate_pipeline_transport(p, false).is_ok());
+        }
+        assert!(validate_pipeline_transport(PipelineMode::Off, true).is_ok());
+        assert!(validate_pipeline_transport(PipelineMode::Overlap, true).is_ok());
+        let err = validate_pipeline_transport(PipelineMode::Stale, true).unwrap_err();
+        assert!(err.contains("simulation schedule"), "{err}");
+        assert!(err.contains("off|overlap"), "{err}");
     }
 
     #[test]

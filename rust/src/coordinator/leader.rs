@@ -36,17 +36,29 @@
 //! event + `trace::warn` notice) and the relay continues with the
 //! survivors. Every broadcast carries the frame senders (`members`) and
 //! the post-transition active set (`active`), so receivers aggregate
-//! exactly the surviving contributions and weight by `1/active.len()` —
-//! weighted partial aggregation as a protocol-level contract (survivor
-//! weights always sum to 1).
+//! exactly the surviving contributions and weight by `1/members.len()`
+//! (== `1/active.len()` whenever `--lazy` is off) — weighted partial
+//! aggregation as a protocol-level contract (survivor weights always
+//! sum to 1).
 //!
 //! Late joiners announce their join step in `Hello` (they connect up
 //! front, replicate silently from step 0, and start sending at their
 //! join step — the leader activates them there with a `member_join`
 //! event).
+//!
+//! # Lazy aggregation (`--lazy`)
+//!
+//! An active worker whose update is below its `--lazy` gate sends a
+//! 13-byte [`Msg::Skip`] marker instead of a frame. The leader counts
+//! the marker toward the barrier (the worker is alive, not dropped),
+//! emits a `skip` event, charges [`SKIP_MARKER_BITS`], and excludes
+//! the worker from the broadcast's `members` — so receivers renormalize
+//! over the senders exactly as they do for dropped workers. Skip
+//! markers are never relayed downstream.
 
 use super::messages::{Msg, WireGrad};
 use crate::exchange::topology::{group_members, TopologySpec};
+use crate::exchange::SKIP_MARKER_BITS;
 use crate::trace::{Level, Tracer};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -431,16 +443,18 @@ fn trace_relay(tracer: &Tracer, step: usize, frames: usize, bits: u64, t0: Insta
 }
 
 /// Barrier on the expected senders' `Grad` frames; returns the senders
-/// and their frames, in ascending worker order, with drops applied.
+/// and their frames, in ascending worker order, plus the workers that
+/// sent a lazy [`Msg::Skip`] marker instead, with drops applied.
 fn barrier_grads(
     st: &mut ElasticState,
     step: usize,
     policy: ElasticPolicy,
     tracer: &Tracer,
-) -> Result<(Vec<u32>, Vec<WireGrad>)> {
+) -> Result<(Vec<u32>, Vec<WireGrad>, Vec<u32>)> {
     let expected = st.active_ids();
     let mut members = Vec::with_capacity(expected.len());
     let mut grads = Vec::with_capacity(expected.len());
+    let mut skipped: Vec<u32> = Vec::new();
     for w in expected {
         match st.recv(step, w as usize, policy, tracer)? {
             Some(Msg::Grad { step: s, grad }) => {
@@ -450,11 +464,33 @@ fn barrier_grads(
                 members.push(w);
                 grads.push(grad);
             }
+            Some(Msg::Skip { step: s, worker: ww }) => {
+                if s as usize != step || ww != w {
+                    bail!("worker {w} sent skip for step {s}/worker {ww}, expected {step}/{w}");
+                }
+                skipped.push(w);
+            }
             Some(other) => bail!("expected Grad, got {other:?}"),
             None => {} // dropped
         }
     }
-    Ok((members, grads))
+    trace_skips(tracer, step, &members, &skipped);
+    Ok((members, grads, skipped))
+}
+
+/// One `skip` event per zero-frame worker, mirroring the sim's
+/// planning-path events: the survivors' renormalized weights sum to 1
+/// (0 when every sender skipped and the step moves no frames at all).
+fn trace_skips(tracer: &Tracer, step: usize, members: &[u32], skipped: &[u32]) {
+    let weight_sum = if members.is_empty() { 0.0 } else { 1.0 };
+    for &w in skipped {
+        tracer.event(Level::Info, "skip", |o| {
+            o.insert("step", Json::Num(step as f64));
+            o.insert("worker", Json::Num(f64::from(w)));
+            o.insert("bits", Json::Num(SKIP_MARKER_BITS as f64));
+            o.insert("weight_sum", Json::Num(weight_sum));
+        });
+    }
 }
 
 fn relay_flat(
@@ -466,8 +502,9 @@ fn relay_flat(
     for step in 0..steps {
         let t0 = Instant::now();
         st.begin_step(step, tracer);
-        let (members, grads) = barrier_grads(st, step, policy, tracer)?;
-        let step_bits: u64 = grads.iter().map(|g| g.bits).sum();
+        let (members, grads, skipped) = barrier_grads(st, step, policy, tracer)?;
+        let step_bits: u64 =
+            grads.iter().map(|g| g.bits).sum::<u64>() + skipped.len() as u64 * SKIP_MARKER_BITS;
         let frames = grads.len();
         let all = Msg::AllGrads {
             step: step as u32,
@@ -502,6 +539,7 @@ fn relay_sharded(
         let expected = st.active_ids();
         let mut members: Vec<u32> = Vec::with_capacity(expected.len());
         let mut frames: Vec<Vec<WireGrad>> = Vec::with_capacity(expected.len());
+        let mut skipped: Vec<u32> = Vec::new();
         'worker: for w in expected {
             let mut set = Vec::with_capacity(shards);
             for shard in 0..shards {
@@ -516,6 +554,18 @@ fn relay_sharded(
                         }
                         set.push(grad);
                     }
+                    // A lazy skipper ships ONE marker for the whole
+                    // shard set, in place of its first shard frame.
+                    Some(Msg::Skip { step: s, worker: ww }) if shard == 0 => {
+                        if s as usize != step || ww != w {
+                            bail!(
+                                "worker {w} sent skip for step {s}/worker {ww}, \
+                                 expected {step}/{w}"
+                            );
+                        }
+                        skipped.push(w);
+                        continue 'worker;
+                    }
                     Some(other) => bail!("expected ShardGrad, got {other:?}"),
                     None => continue 'worker, // dropped; discard partial set
                 }
@@ -523,7 +573,9 @@ fn relay_sharded(
             members.push(w);
             frames.push(set);
         }
-        let step_bits: u64 = frames.iter().flatten().map(|g| g.bits).sum();
+        trace_skips(tracer, step, &members, &skipped);
+        let step_bits: u64 = frames.iter().flatten().map(|g| g.bits).sum::<u64>()
+            + skipped.len() as u64 * SKIP_MARKER_BITS;
         let n_frames = frames.len() * shards;
         let active = st.active_ids();
         // Pop each worker's shard frames off the back (so the per-shard
@@ -564,10 +616,11 @@ fn relay_tree(
     for step in 0..steps {
         let t0 = Instant::now();
         st.begin_step(step, tracer);
-        // 1. Barrier on the active workers' frames.
-        let (members, grads) = barrier_grads(st, step, policy, tracer)?;
-        let up_bits: u64 = grads.iter().map(|g| g.bits).sum();
-        let active = st.active_ids();
+        // 1. Barrier on the active workers' frames (lazy skippers
+        // send markers and stay out of `members`).
+        let (members, grads, skipped) = barrier_grads(st, step, policy, tracer)?;
+        let up_bits: u64 =
+            grads.iter().map(|g| g.bits).sum::<u64>() + skipped.len() as u64 * SKIP_MARKER_BITS;
 
         // 2. Hand each non-empty group's first active member (the
         // group leader under churn) its members' frames.
@@ -587,7 +640,11 @@ fn relay_tree(
             let msg = Msg::AllGrads {
                 step: step as u32,
                 members: idx.iter().map(|&i| members[i]).collect(),
-                active: active.clone(),
+                // The group leader scales its partial by the *global*
+                // sender count, so this hop carries the global senders
+                // (identical to the active set when lazy is off — the
+                // post-barrier invariant active_ids() == members).
+                active: members.clone(),
                 grads: idx.iter().map(|&i| grads[i].clone()).collect(),
             };
             let ok = match st.conns[leader].as_mut() {
@@ -631,6 +688,7 @@ fn relay_tree(
         let all = Msg::AllLeaderGrads {
             step: step as u32,
             groups: lead_groups,
+            members: members.clone(),
             active: st.active_ids(),
             grads: lead,
         };

@@ -47,13 +47,23 @@ pub enum Msg {
     LeaderGrad { step: u32, group: u32, grad: WireGrad },
     /// Relay broadcast: `grads[i]` is the partial aggregate of group
     /// `groups[i]` (groups with no active member are absent; `active`
-    /// as in [`Msg::AllGrads`]).
+    /// as in [`Msg::AllGrads`]). `members` lists the *global* workers
+    /// whose frames were folded into the partials — under `--lazy`,
+    /// receivers weight by `1/members.len()`, the senders-only count.
     AllLeaderGrads {
         step: u32,
         groups: Vec<u32>,
+        members: Vec<u32>,
         active: Vec<u32>,
         grads: Vec<WireGrad>,
     },
+    /// Lazy-aggregation skip marker: the worker is alive and at the
+    /// barrier for `step`, but its update is below the `--lazy` gate so
+    /// it ships no frame. The leader counts it toward the barrier and
+    /// excludes it from the broadcast's `members`; this frame is never
+    /// relayed. Wire cost is `SKIP_MARKER_BITS` (13 bytes) on both
+    /// runtimes.
+    Skip { step: u32, worker: u32 },
     /// Orderly end of training.
     Done,
 }
@@ -124,6 +134,7 @@ const TAG_SHARD: u8 = 5;
 const TAG_ALL_SHARD: u8 = 6;
 const TAG_LEADER: u8 = 7;
 const TAG_ALL_LEADER: u8 = 8;
+const TAG_SKIP: u8 = 9;
 
 struct Buf(Vec<u8>);
 
@@ -272,18 +283,26 @@ impl Msg {
             Msg::AllLeaderGrads {
                 step,
                 groups,
+                members,
                 active,
                 grads,
             } => {
                 let mut b = Buf(Vec::new());
                 b.u32(*step);
                 b.ids(groups);
+                b.ids(members);
                 b.ids(active);
                 b.u32(grads.len() as u32);
                 for g in grads {
                     b.grad(g);
                 }
                 (TAG_ALL_LEADER, b.0)
+            }
+            Msg::Skip { step, worker } => {
+                let mut b = Buf(Vec::with_capacity(8));
+                b.u32(*step);
+                b.u32(*worker);
+                (TAG_SKIP, b.0)
             }
             Msg::Done => (TAG_DONE, Vec::new()),
         };
@@ -359,6 +378,7 @@ impl Msg {
             TAG_ALL_LEADER => {
                 let step = c.u32()?;
                 let groups = c.ids()?;
+                let members = c.ids()?;
                 let active = c.ids()?;
                 let n = c.u32()? as usize;
                 let mut grads = Vec::with_capacity(n);
@@ -368,10 +388,15 @@ impl Msg {
                 Msg::AllLeaderGrads {
                     step,
                     groups,
+                    members,
                     active,
                     grads,
                 }
             }
+            TAG_SKIP => Msg::Skip {
+                step: c.u32()?,
+                worker: c.u32()?,
+            },
             TAG_DONE => Msg::Done,
             t => bail!("unknown frame tag {t}"),
         };
@@ -441,8 +466,44 @@ mod tests {
         roundtrip(Msg::AllLeaderGrads {
             step: 6,
             groups: vec![0, 1],
+            members: vec![0, 1, 2, 3],
             active: vec![0, 1, 2, 3],
             grads: vec![g.clone(), g],
+        });
+        roundtrip(Msg::Skip { step: 11, worker: 2 });
+    }
+
+    #[test]
+    fn skip_marker_frame_is_thirteen_bytes() {
+        // SKIP_MARKER_BITS = 104 charges exactly this frame:
+        // [tag u8][len u32][step u32][worker u32].
+        let mut buf = Vec::new();
+        Msg::Skip { step: 42, worker: 7 }.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len(), 13);
+        assert_eq!(
+            buf.len() as u64 * 8,
+            crate::exchange::SKIP_MARKER_BITS
+        );
+    }
+
+    #[test]
+    fn leader_broadcast_members_can_be_a_strict_subset_of_active() {
+        // Under --lazy, a tree broadcast's `members` (the global
+        // senders) may exclude active-but-silent workers.
+        let g = WireGrad {
+            bits: 16,
+            n_full: 2,
+            n_tail: 0,
+            bucket: 2,
+            width: 2,
+            bytes: vec![4, 5],
+        };
+        roundtrip(Msg::AllLeaderGrads {
+            step: 8,
+            groups: vec![0],
+            members: vec![0, 3],
+            active: vec![0, 1, 2, 3],
+            grads: vec![g],
         });
     }
 

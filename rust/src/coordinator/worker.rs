@@ -23,7 +23,10 @@
 use super::messages::{Msg, WireGrad, WIDTH_FP32};
 use crate::exchange::budget::select_width;
 use crate::exchange::topology::{group_of, shard_buckets, TopologySpec};
-use crate::exchange::{BitsPolicy, CodecSession, ExchangeLane, PipelineMode};
+use crate::exchange::{
+    BitsPolicy, CodecSession, ErrorFeedback, ExchangeLane, LazyPolicy, LazyWorker, PipelineMode,
+    SKIP_MARKER_BITS,
+};
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
 use crate::quant::bitio::BitWriter;
@@ -75,6 +78,13 @@ pub struct WorkerConfig {
     /// a silent standby replica until step S, `delay:W@S:MS` sleeps
     /// before sending at step S.
     pub faults: FaultPlan,
+    /// Error-feedback residual memory (`--error-feedback`): the
+    /// residual changes this worker's outgoing frames, so every replica
+    /// must run the same setting (like `--bits-policy`).
+    pub error_feedback: bool,
+    /// Lazy-aggregation skip policy (`--lazy`; must match the fleet —
+    /// receivers renormalize over the broadcast's senders).
+    pub lazy: LazyPolicy,
 }
 
 /// Per-step worker-side projection for the fault-parity tests: the
@@ -85,6 +95,9 @@ pub struct WorkerStepRecord {
     pub step: u32,
     /// Bit w set ⇔ worker w was in the broadcast `active` list.
     pub active_mask: u64,
+    /// Bit w set ⇔ worker w shipped a frame this step (== `active_mask`
+    /// unless `--lazy` skipped it); part of the sim ≡ TCP projection.
+    pub sent_mask: u64,
     /// Wire width this step (32 for full precision, matching the sim's
     /// `StepStats::width` convention).
     pub width: u32,
@@ -125,6 +138,8 @@ pub fn run_worker_traced(
         o.insert("policy", Json::Str(cfg.bits.name()));
         o.insert("codec", Json::Str(cfg.codec.name().into()));
         o.insert("pipeline", Json::Str(cfg.pipeline.name().into()));
+        o.insert("error_feedback", Json::Bool(cfg.error_feedback));
+        o.insert("lazy", Json::Str(cfg.lazy.name()));
         o.insert("seed", Json::Num(cfg.seed as f64));
     });
     let stream = TcpStream::connect(&cfg.addr)
@@ -170,6 +185,16 @@ pub fn run_worker_traced(
     // Per-worker quantization randomness (replicas need not share this —
     // only the ciphertext is shared).
     let mut qrng = Rng::new(cfg.seed ^ (cfg.worker as u64).wrapping_mul(0x9E3779B97F4A7C15));
+
+    // Error-feedback residual (slot 0 — this process is exactly one
+    // worker) and this worker's private lazy skip-rule state.
+    let mut feedback = if cfg.error_feedback {
+        Some(ErrorFeedback::new(1))
+    } else {
+        None
+    };
+    let mut lazy_worker = LazyWorker::default();
+    let mut ghat_scratch: Vec<f32> = Vec::new();
 
     let mut grad = vec![0.0f32; d];
     let mut agg = vec![0.0f32; d];
@@ -244,13 +269,47 @@ pub fn run_worker_traced(
             }
         }
 
+        // Error-feedback + lazy planning, mirroring the sim's serial
+        // planning path: correct with the residual, gate the *corrected*
+        // message, absorb a skipped message back into the residual. A
+        // skipped step consumes no quantization randomness, so the skip
+        // decisions are bit-reproducible against the sim.
+        if sending {
+            if let Some(fb) = feedback.as_mut() {
+                fb.correct(0, &grad);
+            }
+        }
+        let send_frame = sending && {
+            let msg: &[f32] = match feedback.as_ref() {
+                Some(fb) => fb.corrected(0),
+                None => &grad,
+            };
+            lazy_worker.decide(&cfg.lazy, msg)
+        };
+        if sending && !send_frame {
+            if let Some(fb) = feedback.as_mut() {
+                fb.absorb(0);
+            }
+        }
+        if sending {
+            if let Some(fb) = feedback.as_ref() {
+                let norm = fb.residual_norm(0);
+                tracer.event(Level::Debug, "feedback_norm", |o| {
+                    o.insert("step", Json::Num(step as f64));
+                    o.insert("worker", Json::Num(cfg.worker as f64));
+                    o.insert("norm", Json::Num(norm));
+                });
+            }
+        }
+
         let step_sent_before = sent_bits;
 
-        let active = match cfg.topology {
+        let (sent_members, active) = match cfg.topology {
             TopologySpec::Flat => exchange_flat(
                 cfg,
                 step,
                 sending,
+                send_frame,
                 &grad,
                 &session,
                 &mut lane,
@@ -260,6 +319,8 @@ pub fn run_worker_traced(
                 &mut agg,
                 &mut prev_decoded,
                 &mut sent_bits,
+                feedback.as_mut(),
+                &mut ghat_scratch,
                 tracer,
             )?,
             TopologySpec::Sharded(shards) => exchange_sharded(
@@ -267,6 +328,7 @@ pub fn run_worker_traced(
                 step,
                 shards,
                 sending,
+                send_frame,
                 &grad,
                 &session,
                 &mut lane,
@@ -277,6 +339,8 @@ pub fn run_worker_traced(
                 &mut agg,
                 &mut prev_decoded,
                 &mut sent_bits,
+                feedback.as_mut(),
+                &mut ghat_scratch,
                 tracer,
             )?,
             TopologySpec::Tree(groups) => exchange_tree(
@@ -284,6 +348,7 @@ pub fn run_worker_traced(
                 step,
                 groups,
                 sending,
+                send_frame,
                 &grad,
                 &session,
                 &mut lane,
@@ -294,6 +359,8 @@ pub fn run_worker_traced(
                 &mut agg,
                 &mut prev_decoded,
                 &mut sent_bits,
+                feedback.as_mut(),
+                &mut ghat_scratch,
                 tracer,
             )?,
             TopologySpec::Ring => {
@@ -339,6 +406,7 @@ pub fn run_worker_traced(
         step_records.push(WorkerStepRecord {
             step: step as u32,
             active_mask: active.iter().fold(0u64, |m, &w| m | (1u64 << w)),
+            sent_mask: sent_members.iter().fold(0u64, |m, &w| m | (1u64 << w)),
             width: {
                 let w = wire_width(&session);
                 if w == WIDTH_FP32 {
@@ -423,13 +491,59 @@ fn decode_wire<'a>(
     }
 }
 
-/// Flat all-to-all over the relay: one frame up (when active), one
-/// frame per surviving sender down. Returns the broadcast active set.
+/// After a sent frame, update the error-feedback residual with what the
+/// wire failed to carry: `corrected − ĝ` for quantized sessions (ĝ is
+/// decoded from our own lane's symbols — the entropy coder is lossless
+/// over them, so this equals what every peer decodes), exactly zero for
+/// fp32 frames.
+fn settle_feedback(
+    feedback: Option<&mut ErrorFeedback>,
+    session: &CodecSession,
+    lane: &ExchangeLane,
+    ghat_scratch: &mut Vec<f32>,
+    d: usize,
+) {
+    let Some(fb) = feedback else { return };
+    if session.is_quantized() {
+        ghat_scratch.resize(d, 0.0);
+        session
+            .quantizer()
+            .expect("quantized session has an active quantizer")
+            .dequantize(lane.quantized(), ghat_scratch);
+        fb.settle(0, ghat_scratch);
+    } else {
+        fb.clear_residual(0);
+    }
+}
+
+/// Write the lazy skip marker for this step: 13 wire bytes, charged as
+/// [`SKIP_MARKER_BITS`]. The residual (if any) was already absorbed on
+/// the planning path.
+fn send_skip(
+    cfg: &WorkerConfig,
+    step: usize,
+    writer: &mut TcpStream,
+    sent_bits: &mut u64,
+    tracer: &Tracer,
+) -> Result<()> {
+    *sent_bits += SKIP_MARKER_BITS;
+    trace_send(tracer, step, "skip", 8, WIDTH_FP32);
+    Msg::Skip {
+        step: step as u32,
+        worker: cfg.worker as u32,
+    }
+    .write_to(writer)
+}
+
+/// Flat all-to-all over the relay: one frame up (when active and not
+/// lazily skipped), one frame per surviving sender down. Returns the
+/// broadcast senders and active set.
 #[allow(clippy::too_many_arguments)]
 fn exchange_flat(
-    _cfg: &WorkerConfig,
+    cfg: &WorkerConfig,
     step: usize,
     sending: bool,
+    send_frame: bool,
     grad: &[f32],
     session: &CodecSession,
     lane: &mut ExchangeLane,
@@ -439,15 +553,23 @@ fn exchange_flat(
     agg: &mut [f32],
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
+    mut feedback: Option<&mut ErrorFeedback>,
+    ghat_scratch: &mut Vec<f32>,
     tracer: &Tracer,
-) -> Result<Vec<u32>> {
+) -> Result<(Vec<u32>, Vec<u32>)> {
     let d = grad.len();
-    if sending {
+    if sending && !send_frame {
+        send_skip(cfg, step, writer, sent_bits, tracer)?;
+    } else if sending {
+        let msg: &[f32] = match feedback.as_deref() {
+            Some(fb) => fb.corrected(0),
+            None => grad,
+        };
         let bits = if session.is_quantized() {
-            lane.quantize(session, grad, qrng);
+            lane.quantize(session, msg, qrng);
             lane.encode(session)
         } else {
-            lane.encode_raw(grad)
+            lane.encode_raw(msg)
         };
         *sent_bits += bits;
         trace_send(tracer, step, "grad", lane.encoded().bytes.len(), wire_width(session));
@@ -456,6 +578,7 @@ fn exchange_flat(
             grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
         }
         .write_to(writer)?;
+        settle_feedback(feedback.as_deref_mut(), session, lane, ghat_scratch, d);
     }
 
     let (members, active, grads) = match Msg::read_from(reader)? {
@@ -476,9 +599,11 @@ fn exchange_flat(
     if grads.len() != members.len() {
         bail!("broadcast has {} frames for {} members", grads.len(), members.len());
     }
-    // Weighted partial aggregation: each survivor contributes
-    // 1/n_active, the same rule the in-process sim applies.
-    let n_active = active.len().max(1);
+    // Weighted partial aggregation: each *sender* contributes
+    // 1/members.len() — the senders-renormalized rule the in-process
+    // sim applies, and identical to the old active-set weighting
+    // whenever --lazy is off (post-barrier, members == active).
+    let n = members.len().max(1);
     agg.fill(0.0);
     if prev_decoded.len() != grads.len() {
         *prev_decoded = vec![vec![0.0f32; d]; grads.len()];
@@ -486,11 +611,11 @@ fn exchange_flat(
     for (i, wire) in grads.iter().enumerate() {
         let ghat = decode_wire(lane, session, wire)?;
         for (a, &g) in agg.iter_mut().zip(ghat) {
-            *a += g / n_active as f32;
+            *a += g / n as f32;
         }
         prev_decoded[i].copy_from_slice(ghat);
     }
-    Ok(active)
+    Ok((members, active))
 }
 
 /// Encode one bucket-aligned shard of the already-quantized lane into
@@ -536,6 +661,7 @@ fn exchange_sharded(
     step: usize,
     shards: usize,
     sending: bool,
+    send_frame: bool,
     grad: &[f32],
     session: &CodecSession,
     lane: &mut ExchangeLane,
@@ -546,17 +672,26 @@ fn exchange_sharded(
     agg: &mut [f32],
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
+    mut feedback: Option<&mut ErrorFeedback>,
+    ghat_scratch: &mut Vec<f32>,
     tracer: &Tracer,
-) -> Result<Vec<u32>> {
+) -> Result<(Vec<u32>, Vec<u32>)> {
     let d = grad.len();
     let quantized = session.is_quantized();
     let bucket = session.bucket();
     let nb = if quantized { d / bucket } else { 0 };
 
     // Send our S shard frames (bucket-aligned for quantized payloads,
-    // coordinate-even fp32 slices otherwise).
-    if sending && quantized {
-        lane.quantize(session, grad, qrng);
+    // coordinate-even fp32 slices otherwise). A lazy skipper ships ONE
+    // marker in place of its whole shard set.
+    if sending && !send_frame {
+        send_skip(cfg, step, writer, sent_bits, tracer)?;
+    } else if sending && quantized {
+        let msg: &[f32] = match feedback.as_deref() {
+            Some(fb) => fb.corrected(0),
+            None => grad,
+        };
+        lane.quantize(session, msg, qrng);
         if cfg.pipeline == PipelineMode::Overlap && shards > 1 {
             // Double-buffered send: the sender thread writes frame k to
             // the wire while we encode shard k+1. Joining before any
@@ -607,10 +742,14 @@ fn exchange_sharded(
             }
         }
     } else if sending {
+        let msg: &[f32] = match feedback.as_deref() {
+            Some(fb) => fb.corrected(0),
+            None => grad,
+        };
         for shard in 0..shards {
             let lo = shard * d / shards;
             let hi = (shard + 1) * d / shards;
-            let bits = lane.encode_raw(&grad[lo..hi]);
+            let bits = lane.encode_raw(&msg[lo..hi]);
             *sent_bits += bits;
             trace_send(tracer, step, "shard", lane.encoded().bytes.len(), WIDTH_FP32);
             Msg::ShardGrad {
@@ -621,9 +760,15 @@ fn exchange_sharded(
             .write_to(writer)?;
         }
     }
+    if sending && send_frame {
+        // The shard frames encode the lane's one quantization pass, so
+        // the residual settles from the same symbols every peer decodes.
+        settle_feedback(feedback.as_deref_mut(), session, lane, ghat_scratch, d);
+    }
 
     // Receive each shard's relay broadcast and reassemble per peer.
     agg.fill(0.0);
+    let mut members_out: Vec<u32> = Vec::new();
     let mut active_out: Vec<u32> = Vec::new();
     for shard in 0..shards {
         let (coord_lo, coord_hi) = if quantized {
@@ -667,17 +812,20 @@ fn exchange_sharded(
         if prev_decoded.len() != members.len() {
             *prev_decoded = vec![vec![0.0f32; d]; members.len()];
         }
-        let n_active = active.len().max(1);
+        // Senders-renormalized weighting (== active-set weighting when
+        // --lazy is off; see exchange_flat).
+        let n = members.len().max(1);
         for (i, wire) in grads.iter().enumerate() {
             let ghat = decode_wire(lane, session, wire)?;
             for (a, &g) in agg[coord_lo..coord_hi].iter_mut().zip(ghat) {
-                *a += g / n_active as f32;
+                *a += g / n as f32;
             }
             prev_decoded[i][coord_lo..coord_hi].copy_from_slice(ghat);
         }
+        members_out = members;
         active_out = active;
     }
-    Ok(active_out)
+    Ok((members_out, active_out))
 }
 
 /// Two-level tree over the relay: frame up (when active), elected
@@ -694,6 +842,7 @@ fn exchange_tree(
     step: usize,
     groups: usize,
     sending: bool,
+    send_frame: bool,
     grad: &[f32],
     session: &CodecSession,
     lane: &mut ExchangeLane,
@@ -704,18 +853,29 @@ fn exchange_tree(
     agg: &mut [f32],
     prev_decoded: &mut Vec<Vec<f32>>,
     sent_bits: &mut u64,
+    mut feedback: Option<&mut ErrorFeedback>,
+    ghat_scratch: &mut Vec<f32>,
     tracer: &Tracer,
-) -> Result<Vec<u32>> {
+) -> Result<(Vec<u32>, Vec<u32>)> {
     let d = grad.len();
     let my_group = group_of(cfg.worker, cfg.world, groups);
 
-    // 1. Active members send their frame up.
-    if sending {
+    // 1. Active members send their frame up (or a skip marker — a
+    // skipper is never elected group leader, since the relay elects
+    // among the step's senders). The residual settles here, before the
+    // leader path below reuses the lane for the partial.
+    if sending && !send_frame {
+        send_skip(cfg, step, writer, sent_bits, tracer)?;
+    } else if sending {
+        let msg: &[f32] = match feedback.as_deref() {
+            Some(fb) => fb.corrected(0),
+            None => grad,
+        };
         let bits = if session.is_quantized() {
-            lane.quantize(session, grad, qrng);
+            lane.quantize(session, msg, qrng);
             lane.encode(session)
         } else {
-            lane.encode_raw(grad)
+            lane.encode_raw(msg)
         };
         *sent_bits += bits;
         trace_send(tracer, step, "grad", lane.encoded().bytes.len(), wire_width(session));
@@ -724,6 +884,7 @@ fn exchange_tree(
             grad: WireGrad::from_view(lane.encoded(), wire_width(session)),
         }
         .write_to(writer)?;
+        settle_feedback(feedback.as_deref_mut(), session, lane, ghat_scratch, d);
     }
 
     // 2. If the relay elected us group leader this step, it sends our
@@ -749,6 +910,10 @@ fn exchange_tree(
                 );
             }
             partial.fill(0.0);
+            // `active` on this hop carries the step's *global* senders
+            // (the relay's repurposing under --lazy; == the active set
+            // when lazy is off), so the partial is already scaled for a
+            // plain sum at the bottom of the tree.
             let inv = 1.0 / active.len().max(1) as f32;
             for wire in grads.iter() {
                 let ghat = decode_wire(lane, session, wire)?;
@@ -776,17 +941,18 @@ fn exchange_tree(
     };
 
     // 3. Everyone aggregates the surviving groups' decoded partials.
-    let (group_ids, active, leads) = match down {
+    let (group_ids, members, active, leads) = match down {
         Msg::AllLeaderGrads {
             step: s,
             groups: group_ids,
+            members,
             active,
             grads,
         } => {
             if s as usize != step {
                 bail!("leader sent step {s}, expected {step}");
             }
-            (group_ids, active, grads)
+            (group_ids, members, active, grads)
         }
         other => bail!("expected AllLeaderGrads, got {other:?}"),
     };
@@ -809,7 +975,7 @@ fn exchange_tree(
         }
         prev_decoded[i].copy_from_slice(ghat);
     }
-    Ok(active)
+    Ok((members, active))
 }
 
 #[cfg(test)]
@@ -841,6 +1007,31 @@ mod tests {
         bits: BitsPolicy,
         pipeline: PipelineMode,
     ) -> Vec<WorkerReport> {
+        spawn_cluster_feedback(
+            method,
+            iters,
+            world,
+            topology,
+            codec,
+            bits,
+            pipeline,
+            false,
+            LazyPolicy::Off,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_cluster_feedback(
+        method: Method,
+        iters: usize,
+        world: usize,
+        topology: TopologySpec,
+        codec: Codec,
+        bits: BitsPolicy,
+        pipeline: PipelineMode,
+        error_feedback: bool,
+        lazy: LazyPolicy,
+    ) -> Vec<WorkerReport> {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let leader =
@@ -868,6 +1059,8 @@ mod tests {
                 quantize_impl: QuantizeImpl::default(),
                 pipeline,
                 faults: FaultPlan::default(),
+                error_feedback,
+                lazy,
             };
             handles.push(std::thread::spawn(move || {
                 // Same dataset seed on every worker: shards differ by
@@ -1056,6 +1249,138 @@ mod tests {
             scheduled[0].sent_bits,
             fixed[0].sent_bits
         );
+    }
+
+    /// Error-feedback over the relay: every replica runs the residual
+    /// loop on its own uplink, frames stay self-describing, and the
+    /// trajectory remains bit-identical across replicas — over both the
+    /// flat relay and the re-quantizing tree.
+    #[test]
+    fn error_feedback_replicas_stay_bit_identical_over_the_wire() {
+        for topology in [TopologySpec::Flat, TopologySpec::Tree(2)] {
+            let reports = spawn_cluster_feedback(
+                Method::Alq,
+                40,
+                4,
+                topology,
+                Codec::Huffman,
+                BitsPolicy::Fixed(2),
+                PipelineMode::Off,
+                true,
+                LazyPolicy::Off,
+            );
+            let h0 = reports[0].params_hash;
+            for r in &reports {
+                assert_eq!(r.params_hash, h0, "feedback divergence over {topology:?}");
+            }
+            // Feedback changes the frames, so the trajectory differs
+            // from the plain run at the same width.
+            let plain = spawn_cluster_feedback(
+                Method::Alq,
+                40,
+                4,
+                topology,
+                Codec::Huffman,
+                BitsPolicy::Fixed(2),
+                PipelineMode::Off,
+                false,
+                LazyPolicy::Off,
+            );
+            assert_ne!(plain[0].params_hash, h0);
+        }
+    }
+
+    /// An unreachable threshold makes every worker ship only 13-byte
+    /// skip markers: zero frames move, replicas stay identical, and the
+    /// step records expose the empty sent-mask next to the full active
+    /// mask. A reachable threshold reduces to the plain run.
+    #[test]
+    fn lazy_threshold_skips_frames_over_the_wire() {
+        let skipping = spawn_cluster_feedback(
+            Method::QsgdInf,
+            6,
+            4,
+            TopologySpec::Flat,
+            Codec::Huffman,
+            BitsPolicy::Fixed(3),
+            PipelineMode::Off,
+            false,
+            LazyPolicy::Thresh(1e30),
+        );
+        for r in &skipping {
+            assert_eq!(r.sent_bits, 6 * SKIP_MARKER_BITS, "only markers should move");
+            for rec in &r.step_records {
+                assert_eq!(rec.sent_mask, 0, "no frames at step {}", rec.step);
+                assert_eq!(rec.active_mask, 0b1111, "skippers stay active");
+            }
+            assert_eq!(r.params_hash, skipping[0].params_hash);
+        }
+        // A tiny threshold never skips: the sent mask tracks the active
+        // mask and the run matches --lazy off bit for bit.
+        let always = spawn_cluster_feedback(
+            Method::QsgdInf,
+            6,
+            4,
+            TopologySpec::Flat,
+            Codec::Huffman,
+            BitsPolicy::Fixed(3),
+            PipelineMode::Off,
+            false,
+            LazyPolicy::Thresh(1e-30),
+        );
+        let off = spawn_cluster_feedback(
+            Method::QsgdInf,
+            6,
+            4,
+            TopologySpec::Flat,
+            Codec::Huffman,
+            BitsPolicy::Fixed(3),
+            PipelineMode::Off,
+            false,
+            LazyPolicy::Off,
+        );
+        assert_eq!(always[0].params_hash, off[0].params_hash);
+        assert_eq!(always[0].sent_bits, off[0].sent_bits);
+        for rec in &always[0].step_records {
+            assert_eq!(rec.sent_mask, rec.active_mask);
+        }
+    }
+
+    /// Feedback composes with the LAQ gate over the sharded relay: a
+    /// skipped step's whole corrected message survives in the residual,
+    /// and replicas agree bit for bit.
+    #[test]
+    fn feedback_with_laq_gate_stays_identical_over_sharded_relay() {
+        let reports = spawn_cluster_feedback(
+            Method::Alq,
+            30,
+            4,
+            TopologySpec::Sharded(2),
+            Codec::Huffman,
+            BitsPolicy::Fixed(3),
+            PipelineMode::Off,
+            true,
+            LazyPolicy::parse("laq:1.0@4").unwrap(),
+        );
+        for r in &reports {
+            assert_eq!(r.params_hash, reports[0].params_hash);
+            assert!(r.sent_bits > 0);
+        }
+        // The LAQ patience bound (K=4) forces each worker to ship a
+        // frame at least every fifth step.
+        for r in &reports {
+            let mut streak = [0u32; 4];
+            for rec in &r.step_records {
+                for (w, s) in streak.iter_mut().enumerate() {
+                    if rec.sent_mask & (1u64 << w) != 0 {
+                        *s = 0;
+                    } else {
+                        *s += 1;
+                        assert!(*s <= 4, "worker {w} patience violated at step {}", rec.step);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -251,22 +251,27 @@ impl GradientExchange {
         );
         agg.fill(0.0);
         let net = self.core.cfg().network;
-        // The elastic active set: at full strength this is 0..M and the
+        // The step's frame plan: at full strength with feedback and lazy
+        // off this is the active set (and at no churn, 0..M), and the
         // schedule below is byte-identical to the fixed-membership one;
-        // under churn only active lanes contribute frames and weight.
-        let ids = self.core.membership().active_ids();
+        // under churn or skip rounds only sending lanes contribute
+        // frames and weight. Skip markers are charged once for every
+        // topology by `finish_step`.
+        let ids = self.core.sent_ids();
         let n = ids.len();
         if n == 0 {
-            self.core.finish_step(Vec::new(), 0, 0.0);
-            return 0;
+            return self.core.finish_step(Vec::new(), 0, 0.0);
         }
         self.bits_scratch.iter_mut().for_each(|b| *b = 0);
 
         if !self.core.is_quantized() {
-            // Full precision is charged at 32·d per worker.
+            // Full precision is charged at 32·d per worker; the outgoing
+            // message is the feedback-corrected gradient when residual
+            // memory is on (and the residual then settles to zero —
+            // lossless frames carry it exactly).
             let mut step_bits = 0u64;
             for &w in &ids {
-                let grad = &grads[w];
+                let grad = self.core.outgoing(w, grads);
                 self.bits_scratch[w] = 32 * grad.len() as u64;
                 step_bits += self.bits_scratch[w];
                 for (a, &g) in agg.iter_mut().zip(grad) {
@@ -275,7 +280,7 @@ impl GradientExchange {
             }
             let active_bits: Vec<u64> = ids.iter().map(|&w| self.bits_scratch[w]).collect();
             let seconds = net.step_time(&active_bits);
-            self.core.finish_step(
+            return self.core.finish_step(
                 vec![Hop {
                     label: "all-to-all".to_string(),
                     bits: step_bits,
@@ -284,7 +289,6 @@ impl GradientExchange {
                 step_bits,
                 seconds,
             );
-            return step_bits;
         }
 
         let t0 = std::time::Instant::now();
@@ -322,8 +326,7 @@ impl GradientExchange {
             }],
             step_bits,
             seconds,
-        );
-        step_bits
+        )
     }
 }
 

@@ -1,0 +1,354 @@
+//! Error-feedback residual memory + lazy-aggregation skip policy.
+//!
+//! Two composable mechanisms that make per-worker frames *optional*:
+//!
+//! * [`ErrorFeedback`] — the EF-SGD residual accumulator. Before
+//!   quantizing, a worker adds the residual left over from previous
+//!   steps to its raw gradient (`corrected = grad + residual`); after
+//!   the exchange it stores what the wire failed to carry
+//!   (`residual = corrected − ĝ` on a sent frame, `residual =
+//!   corrected` on a skipped one). Nothing is ever silently dropped —
+//!   a skipped or coarsely-quantized update is retransmitted, smeared
+//!   over later steps, which is what makes aggressive 1–2 bit widths
+//!   trainable.
+//! * [`LazyPolicy`] / [`LazyWorker`] — the LAQ-style skip rule. A
+//!   worker whose (corrected) update is small sends a
+//!   [`SKIP_MARKER_BITS`]-bit skip marker instead of a frame; the
+//!   survivors are aggregated with renormalized weights (the same
+//!   partial-aggregation contract elastic membership uses, so "silent
+//!   this step" rides the "absent this run" path).
+//!
+//! # Determinism contract
+//!
+//! Skip decisions are pure functions of the worker's own message and
+//! its private `LazyWorker` state: norms accumulate sequentially in
+//! `f64`, no RNG is consumed, and a skipped worker draws *nothing*
+//! from its quantization stream — so the sim and the TCP runtime make
+//! identical decisions on identical gradients, and `--error-feedback
+//! off --lazy off` leaves every existing trajectory bit-identical
+//! (the fast path never touches these types). See DESIGN.md §Feedback.
+
+use std::fmt;
+
+/// Wire cost charged for a skip marker, in bits: the `SkipGrad` frame
+/// is `[tag u8][len u32][step u32][worker u32]` = 13 bytes on the TCP
+/// wire, and the sim charges the same 104 bits so zero-frame steps
+/// meter identically on both runtimes.
+pub const SKIP_MARKER_BITS: u64 = 104;
+
+/// When a worker may keep its update to itself (`--lazy`).
+///
+/// The grammar mirrors `--bits-policy`: `off`, `thresh:T`, or
+/// `laq:C@K`, with [`LazyPolicy::parse`] accepting exactly what
+/// [`LazyPolicy::name`] prints.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum LazyPolicy {
+    /// Every active worker sends every step (the default; bit-identical
+    /// to the pre-feedback engine).
+    #[default]
+    Off,
+    /// Send iff the L2 norm of the outgoing message is at least `T`
+    /// (stateless magnitude gate).
+    Thresh(f64),
+    /// LAQ reference-gradient rule: send iff the squared distance to
+    /// the last *sent* message exceeds `C·‖reference‖²`, or `K`
+    /// consecutive skips have accumulated (bounded staleness). The
+    /// first step always sends (no reference yet).
+    Laq {
+        /// Gain on the reference-norm threshold (`C`).
+        c: f64,
+        /// Patience: maximum consecutive skips before a forced send.
+        k: u32,
+    },
+}
+
+impl LazyPolicy {
+    /// Parse a `--lazy` spec; `None` on anything malformed.
+    pub fn parse(s: &str) -> Option<LazyPolicy> {
+        LazyPolicy::parse_strict(s).ok()
+    }
+
+    /// Parse a `--lazy` spec with a diagnostic explaining the rejection.
+    pub fn parse_strict(s: &str) -> Result<LazyPolicy, String> {
+        let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() {
+            return Err("empty lazy policy (expected off | thresh:T | laq:C@K)".to_string());
+        }
+        if s == "off" {
+            return Ok(LazyPolicy::Off);
+        }
+        if let Some(spec) = s.strip_prefix("thresh:") {
+            let t: f64 = spec
+                .parse()
+                .map_err(|_| format!("invalid lazy threshold {spec:?}"))?;
+            if !(t.is_finite() && t > 0.0) {
+                return Err(format!(
+                    "lazy threshold must be positive and finite, got {spec:?}"
+                ));
+            }
+            return Ok(LazyPolicy::Thresh(t));
+        }
+        if let Some(spec) = s.strip_prefix("laq:") {
+            let (c_str, k_str) = spec
+                .split_once('@')
+                .ok_or_else(|| format!("lazy policy {spec:?} missing '@K' patience"))?;
+            let c: f64 = c_str
+                .parse()
+                .map_err(|_| format!("invalid laq gain {c_str:?}"))?;
+            if !(c.is_finite() && c > 0.0) {
+                return Err(format!("laq gain must be positive and finite, got {c_str:?}"));
+            }
+            let k: u32 = k_str
+                .parse()
+                .map_err(|_| format!("invalid laq patience {k_str:?}"))?;
+            if k == 0 {
+                return Err(format!("laq patience must be at least 1, got {k_str:?}"));
+            }
+            return Ok(LazyPolicy::Laq { c, k });
+        }
+        Err(format!(
+            "unknown lazy policy {s:?} (expected off | thresh:T | laq:C@K)"
+        ))
+    }
+
+    /// Canonical spec string; `LazyPolicy::parse(p.name()) == Some(p)`
+    /// for every constructible policy (f64 `Display` is the shortest
+    /// round-trippable decimal).
+    pub fn name(&self) -> String {
+        match self {
+            LazyPolicy::Off => "off".to_string(),
+            LazyPolicy::Thresh(t) => format!("thresh:{t}"),
+            LazyPolicy::Laq { c, k } => format!("laq:{c}@{k}"),
+        }
+    }
+
+    /// Whether this policy never skips (the bit-identity fast path).
+    pub fn is_off(&self) -> bool {
+        matches!(self, LazyPolicy::Off)
+    }
+}
+
+impl fmt::Display for LazyPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// One worker's private skip-rule state (the LAQ reference message and
+/// skip streak). Cheap and inert under `LazyPolicy::Off`/`Thresh`.
+#[derive(Clone, Debug, Default)]
+pub struct LazyWorker {
+    /// The last message this worker actually sent (LAQ's comparison
+    /// model); empty until the first send.
+    reference: Vec<f32>,
+    /// Consecutive skips since the last send.
+    streak: u32,
+}
+
+impl LazyWorker {
+    /// Decide whether to send `msg` this step under `policy`, updating
+    /// the reference/streak state to match the decision. Returns `true`
+    /// to send a frame, `false` to send a skip marker.
+    pub fn decide(&mut self, policy: &LazyPolicy, msg: &[f32]) -> bool {
+        let send = match policy {
+            LazyPolicy::Off => true,
+            LazyPolicy::Thresh(t) => norm2(msg).sqrt() >= *t,
+            LazyPolicy::Laq { c, k } => {
+                self.reference.is_empty()
+                    || self.streak >= *k
+                    || diff_norm2(msg, &self.reference) > c * norm2(&self.reference)
+            }
+        };
+        if send {
+            self.streak = 0;
+            if matches!(policy, LazyPolicy::Laq { .. }) {
+                self.reference.clear();
+                self.reference.extend_from_slice(msg);
+            }
+        } else {
+            self.streak = self.streak.saturating_add(1);
+        }
+        send
+    }
+
+    /// Consecutive skips since this worker last sent a frame.
+    pub fn streak(&self) -> u32 {
+        self.streak
+    }
+}
+
+/// Per-worker error-feedback residual memory.
+///
+/// Buffers are lazily sized on first use, so a world-sized
+/// `ErrorFeedback` costs nothing for workers that never participate.
+/// All arithmetic is element-wise `f32` in coordinate order — identical
+/// on the sim and TCP runtimes by construction.
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    /// What the wire has not carried yet, per worker.
+    residual: Vec<Vec<f32>>,
+    /// This step's outgoing message per worker: `grad + residual`.
+    corrected: Vec<Vec<f32>>,
+}
+
+impl ErrorFeedback {
+    /// Residual memory for `world` workers, all starting at zero.
+    pub fn new(world: usize) -> Self {
+        ErrorFeedback {
+            residual: vec![Vec::new(); world],
+            corrected: vec![Vec::new(); world],
+        }
+    }
+
+    /// Compute worker `w`'s outgoing message for this step:
+    /// `corrected = grad + residual` (an empty residual reads as zero).
+    pub fn correct(&mut self, w: usize, grad: &[f32]) {
+        let out = &mut self.corrected[w];
+        out.clear();
+        out.extend_from_slice(grad);
+        let res = &self.residual[w];
+        debug_assert!(res.is_empty() || res.len() == grad.len());
+        for (o, &r) in out.iter_mut().zip(res.iter()) {
+            *o += r;
+        }
+    }
+
+    /// Worker `w`'s corrected message from the last [`ErrorFeedback::correct`].
+    pub fn corrected(&self, w: usize) -> &[f32] {
+        &self.corrected[w]
+    }
+
+    /// Skip path: the whole corrected message becomes the residual
+    /// (nothing crossed the wire, nothing is lost).
+    pub fn absorb(&mut self, w: usize) {
+        let res = &mut self.residual[w];
+        res.clear();
+        res.extend_from_slice(&self.corrected[w]);
+    }
+
+    /// Send path: store what quantization failed to carry,
+    /// `residual = corrected − ĝ`.
+    pub fn settle(&mut self, w: usize, ghat: &[f32]) {
+        let cor = &self.corrected[w];
+        assert_eq!(cor.len(), ghat.len(), "settle needs the decoded estimate");
+        let res = &mut self.residual[w];
+        res.clear();
+        res.extend(cor.iter().zip(ghat).map(|(&c, &g)| c - g));
+    }
+
+    /// Send path for lossless (fp32) sessions: `ĝ == corrected`, so the
+    /// residual is exactly zero.
+    pub fn clear_residual(&mut self, w: usize) {
+        self.residual[w].clear();
+    }
+
+    /// L2 norm of worker `w`'s current residual (telemetry:
+    /// `feedback_norm` events).
+    pub fn residual_norm(&self, w: usize) -> f64 {
+        norm2(&self.residual[w]).sqrt()
+    }
+}
+
+/// Σ x² accumulated sequentially in f64: deterministic across runtimes
+/// and `--parallel` modes (skip decisions happen on the serial planning
+/// path in both).
+fn norm2(x: &[f32]) -> f64 {
+    x.iter().fold(0.0f64, |acc, &v| acc + (v as f64) * (v as f64))
+}
+
+/// Σ (a−b)², sequential f64 (LAQ's distance to the reference message).
+fn diff_norm2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .fold(0.0f64, |acc, (&x, &y)| acc + ((x - y) as f64) * ((x - y) as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_grammar_roundtrips() {
+        for spec in ["off", "thresh:0.5", "thresh:12", "laq:0.1@4", "laq:2@1"] {
+            let p = LazyPolicy::parse(spec).unwrap_or_else(|| panic!("parse {spec}"));
+            assert_eq!(LazyPolicy::parse(&p.name()), Some(p), "{spec}");
+        }
+        assert_eq!(LazyPolicy::parse("OFF"), Some(LazyPolicy::Off));
+        assert_eq!(LazyPolicy::parse(" thresh:1.5 "), Some(LazyPolicy::Thresh(1.5)));
+    }
+
+    #[test]
+    fn policy_rejections_explain_themselves() {
+        for (spec, needle) in [
+            ("", "empty lazy policy"),
+            ("thresh:", "invalid lazy threshold"),
+            ("thresh:abc", "invalid lazy threshold"),
+            ("thresh:-1", "must be positive"),
+            ("thresh:inf", "must be positive and finite"),
+            ("laq:0.5", "missing '@K'"),
+            ("laq:x@3", "invalid laq gain"),
+            ("laq:-2@3", "laq gain must be positive"),
+            ("laq:0.5@x", "invalid laq patience"),
+            ("laq:0.5@0", "patience must be at least 1"),
+            ("always", "unknown lazy policy"),
+        ] {
+            let err = LazyPolicy::parse_strict(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec:?}: {err}");
+            assert_eq!(LazyPolicy::parse(spec), None, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn thresh_gates_on_message_norm() {
+        let mut w = LazyWorker::default();
+        let policy = LazyPolicy::Thresh(1.0);
+        assert!(w.decide(&policy, &[1.0, 0.0, 0.0])); // ‖msg‖ = 1 ≥ 1
+        assert!(!w.decide(&policy, &[0.5, 0.5, 0.0])); // ‖msg‖ < 1
+        assert_eq!(w.streak(), 1);
+    }
+
+    #[test]
+    fn laq_sends_first_then_skips_until_drift_or_patience() {
+        let mut w = LazyWorker::default();
+        let policy = LazyPolicy::Laq { c: 0.25, k: 3 };
+        let base = [1.0f32, 0.0, 0.0];
+        assert!(w.decide(&policy, &base), "no reference yet: must send");
+        // Same message: distance 0 ≤ 0.25·1 → skip, three times.
+        assert!(!w.decide(&policy, &base));
+        assert!(!w.decide(&policy, &base));
+        assert!(!w.decide(&policy, &base));
+        // Patience exhausted: forced send even with zero drift.
+        assert!(w.decide(&policy, &base));
+        // Large drift sends immediately.
+        assert!(w.decide(&policy, &[2.0, 0.0, 0.0]));
+    }
+
+    #[test]
+    fn feedback_residual_accumulates_and_settles() {
+        let mut fb = ErrorFeedback::new(2);
+        fb.correct(0, &[1.0, -2.0]);
+        assert_eq!(fb.corrected(0), &[1.0, -2.0]);
+        // Skip: whole message retained.
+        fb.absorb(0);
+        assert!((fb.residual_norm(0) - (5.0f64).sqrt()).abs() < 1e-12);
+        // Next step the residual rides along.
+        fb.correct(0, &[1.0, 1.0]);
+        assert_eq!(fb.corrected(0), &[2.0, -1.0]);
+        // Send: residual is the quantization error.
+        fb.settle(0, &[1.5, -1.5]);
+        fb.correct(0, &[0.0, 0.0]);
+        assert_eq!(fb.corrected(0), &[0.5, 0.5]);
+        // Lossless send: residual clears.
+        fb.clear_residual(0);
+        assert_eq!(fb.residual_norm(0), 0.0);
+        // Worker 1 untouched throughout.
+        assert_eq!(fb.residual_norm(1), 0.0);
+    }
+
+    #[test]
+    fn skip_marker_is_the_wire_frame_size() {
+        // [tag u8][len u32][step u32][worker u32] = 13 bytes.
+        assert_eq!(SKIP_MARKER_BITS, 8 * 13);
+    }
+}

@@ -29,6 +29,11 @@
 //!   per-step quantization width lives here, selected once per step in
 //!   the [`ExchangeBackend::exchange`] wrapper and inherited by every
 //!   topology through `core()` with zero per-backend code.
+//! * [`feedback`] — error-feedback residual memory + the lazy
+//!   skip-round policy ([`ErrorFeedback`], [`LazyPolicy`], CLI
+//!   `--error-feedback` / `--lazy`): frames become optional per worker
+//!   per step, planned once in [`BackendCore::begin_step`] and
+//!   inherited by every topology through the core's sent-set.
 //! * [`GradientExchange`] — the flat M-lane engine (the reference
 //!   schedule). The [`topology`] subsystem provides the non-flat
 //!   executable schedules — sharded leaders, hierarchical two-level
@@ -43,12 +48,14 @@
 
 pub mod budget;
 pub mod engine;
+pub mod feedback;
 pub mod membership;
 pub mod session;
 pub mod topology;
 
 pub use budget::{BitController, BitsPolicy, QuantizerBank, VarianceSpec};
 pub use engine::{ExchangeConfig, GradientExchange, ParallelMode, PipelineMode};
+pub use feedback::{ErrorFeedback, LazyPolicy, LazyWorker, SKIP_MARKER_BITS};
 pub use membership::Membership;
 pub use session::{CodecSession, ExchangeLane};
 pub use topology::core::{BackendCore, CodecPhase};

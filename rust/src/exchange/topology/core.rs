@@ -44,6 +44,7 @@
 
 use super::super::budget::{select_width, BitController};
 use super::super::engine::{ExchangeConfig, ParallelMode, PipelineMode};
+use super::super::feedback::{ErrorFeedback, LazyPolicy, LazyWorker, SKIP_MARKER_BITS};
 use super::super::membership::Membership;
 use super::super::session::{CodecSession, ExchangeLane};
 use super::Hop;
@@ -104,6 +105,22 @@ pub struct BackendCore {
     /// join/leave epochs. Full strength unless churn is injected
     /// (`sim::FaultPlan`, TCP timeout-and-drop).
     membership: Membership,
+    /// Error-feedback residual memory (`--error-feedback on`); `None`
+    /// keeps the pre-feedback bit-identical fast path.
+    feedback: Option<ErrorFeedback>,
+    /// The skip-round policy (`--lazy`); [`LazyPolicy::Off`] by default.
+    lazy: LazyPolicy,
+    /// Per-lane skip-rule state (LAQ reference + streak).
+    lazy_workers: Vec<LazyWorker>,
+    /// The step's frame plan: active lanes that send a frame this step,
+    /// ascending. Equals the active set whenever feedback and lazy are
+    /// both off (see [`BackendCore::plan_frames`]).
+    sent: Vec<usize>,
+    /// Active lanes that send only a skip marker this step, ascending.
+    skipped: Vec<usize>,
+    /// Scratch for the feedback settle dequantize in schedules that do
+    /// not loopback-decode inside the member stage.
+    ghat_scratch: Vec<f32>,
     meter: Meter,
     codec_seconds: f64,
     phase: CodecPhase,
@@ -157,6 +174,12 @@ impl BackendCore {
             rngs,
             membership: Membership::new(active),
             active,
+            feedback: None,
+            lazy: LazyPolicy::Off,
+            lazy_workers: vec![LazyWorker::default(); active],
+            sent: (0..active).collect(),
+            skipped: Vec::new(),
+            ghat_scratch: Vec::new(),
             meter: Meter::default(),
             codec_seconds: 0.0,
             phase: CodecPhase::default(),
@@ -194,22 +217,155 @@ impl BackendCore {
         self.step_encode_seconds = 0.0;
         if !self.session.is_quantized() {
             self.step_width = 32;
+        } else {
+            // The first active worker's gradient is the representative
+            // observation (worker 0 at full strength — the same protocol
+            // the TCP worker runs on its own gradient;
+            // `budget::select_width` is the single shared implementation,
+            // and the single `bit_decision` trace point). Width selection
+            // observes the *raw* gradient, never the feedback-corrected
+            // one, so `--error-feedback off --lazy off` trajectories and
+            // width decisions are pinned bit-identical.
+            let w0 = self.membership.active_ids().first().copied().unwrap_or(0);
+            let grad = grads.get(w0).map(|g| g.as_slice()).unwrap_or_default();
+            self.step_width = select_width(
+                self.controller.as_mut(),
+                &mut self.session,
+                step,
+                grad,
+                &self.tracer,
+            );
+        }
+        self.plan_frames(step, grads);
+    }
+
+    /// Partition the active set into this step's frame senders
+    /// ([`BackendCore::sent_ids`]) and skip-marker senders: apply the
+    /// error-feedback correction (residual + gradient) per active lane,
+    /// ask the [`LazyPolicy`] whether the corrected message clears the
+    /// send rule, and absorb skipped messages back into the residual.
+    ///
+    /// When feedback and lazy are both off this is a plan-copy of the
+    /// active set and nothing else — no buffer copies, no events, no RNG
+    /// draws — which is what keeps `--error-feedback off --lazy off`
+    /// bit-identical to the pre-feedback engine.
+    fn plan_frames(&mut self, step: usize, grads: &[Vec<f32>]) {
+        self.skipped.clear();
+        if self.feedback.is_none() && self.lazy.is_off() {
+            self.sent = self.membership.active_ids();
             return;
         }
-        // The first active worker's gradient is the representative
-        // observation (worker 0 at full strength — the same protocol
-        // the TCP worker runs on its own gradient; `budget::select_width`
-        // is the single shared implementation, and the single
-        // `bit_decision` trace point).
-        let w0 = self.membership.active_ids().first().copied().unwrap_or(0);
-        let grad = grads.get(w0).map(|g| g.as_slice()).unwrap_or_default();
-        self.step_width = select_width(
-            self.controller.as_mut(),
-            &mut self.session,
-            step,
-            grad,
-            &self.tracer,
-        );
+        self.sent.clear();
+        let ids = self.membership.active_ids();
+        let lossless = !self.session.is_quantized();
+        for &w in &ids {
+            if let Some(fb) = self.feedback.as_mut() {
+                fb.correct(w, &grads[w]);
+            }
+            let msg: &[f32] = match self.feedback.as_ref() {
+                Some(fb) => fb.corrected(w),
+                None => &grads[w],
+            };
+            let send = self.lazy_workers[w].decide(&self.lazy, msg);
+            if send {
+                self.sent.push(w);
+                if lossless {
+                    // A full-precision frame carries the message exactly:
+                    // the residual settles to zero without a decode.
+                    if let Some(fb) = self.feedback.as_mut() {
+                        fb.clear_residual(w);
+                    }
+                }
+            } else {
+                self.skipped.push(w);
+                // A skipped message is not lost: with feedback on, the
+                // whole corrected message becomes the next residual.
+                if let Some(fb) = self.feedback.as_mut() {
+                    fb.absorb(w);
+                }
+            }
+        }
+        if let Some(fb) = self.feedback.as_ref() {
+            if self.tracer.on(Level::Debug) {
+                for &w in &ids {
+                    let norm = fb.residual_norm(w);
+                    self.tracer.event(Level::Debug, "feedback_norm", |o| {
+                        o.insert("step", Json::Num(step as f64));
+                        o.insert("worker", Json::Num(w as f64));
+                        o.insert("norm", Json::Num(norm));
+                    });
+                }
+            }
+        }
+        // Senders keep their full (renormalized-to-1) aggregation
+        // weight; a step where *everyone* skips aggregates nothing and
+        // reports weight_sum 0 — `trace-summarize` surfaces both.
+        let weight_sum = if self.sent.is_empty() { 0.0 } else { 1.0 };
+        for &w in &self.skipped {
+            self.tracer.event(Level::Info, "skip", |o| {
+                o.insert("step", Json::Num(step as f64));
+                o.insert("worker", Json::Num(w as f64));
+                o.insert("bits", Json::Num(SKIP_MARKER_BITS as f64));
+                o.insert("weight_sum", Json::Num(weight_sum));
+            });
+        }
+    }
+
+    /// Enable or disable error-feedback residual memory. Follows the
+    /// [`BackendCore::set_pipeline`] setter pattern (not an
+    /// [`ExchangeConfig`] field): `sim::Cluster::new` and run setup call
+    /// it once before training. Unsupported over `ring` — rejected at
+    /// `RunConfig::validate` and asserted by `Cluster::new`.
+    pub fn set_error_feedback(&mut self, on: bool) {
+        self.feedback = if on {
+            Some(ErrorFeedback::new(self.active))
+        } else {
+            None
+        };
+    }
+
+    /// Whether error-feedback residual memory is enabled.
+    pub fn error_feedback(&self) -> bool {
+        self.feedback.is_some()
+    }
+
+    /// Select the lazy skip-round policy (default [`LazyPolicy::Off`]).
+    pub fn set_lazy(&mut self, lazy: LazyPolicy) {
+        self.lazy = lazy;
+    }
+
+    /// The configured lazy skip-round policy.
+    pub fn lazy(&self) -> LazyPolicy {
+        self.lazy
+    }
+
+    /// The lanes sending a frame this step, ascending — the set every
+    /// topology schedule quantizes, encodes, and aggregates over.
+    /// Equals [`Membership::active_ids`] when feedback and lazy are off.
+    pub fn sent_ids(&self) -> Vec<usize> {
+        self.sent.clone()
+    }
+
+    /// Bitmask form of [`BackendCore::sent_ids`] (bit w ⇔ lane w sent a
+    /// frame) — the projection the sim≡TCP parity tests compare.
+    pub fn sent_mask(&self) -> u64 {
+        self.sent.iter().fold(0u64, |m, &w| m | (1u64 << w))
+    }
+
+    /// How many active lanes sent only a skip marker this step.
+    pub fn skipped_count(&self) -> usize {
+        self.skipped.len()
+    }
+
+    /// The message lane `w` actually transmits this step: the
+    /// feedback-corrected gradient when residual memory is on, the raw
+    /// gradient otherwise. Valid after [`BackendCore::begin_step`] for
+    /// lanes in the sent set.
+    pub fn outgoing<'a>(&'a self, w: usize, grads: &'a [Vec<f32>]) -> &'a [f32] {
+        match self.feedback.as_ref() {
+            Some(fb) => fb.corrected(w),
+            None => &grads[w],
+        }
     }
 
     /// The quantization width the current/last step runs at (32 for
@@ -389,8 +545,15 @@ impl BackendCore {
     }
 
     /// Install the step's hop records (schedule order) and feed the
-    /// meter. Debug-asserts the hop-sum invariant: Σ hop bits equals the
-    /// step total every backend returns from `exchange()`.
+    /// meter; returns the step's total bits, skip markers included —
+    /// the value every backend returns from `exchange()`. Debug-asserts
+    /// the hop-sum invariant: Σ hop bits equals that step total.
+    ///
+    /// Zero-bit participants are charged here, once for every topology:
+    /// each lane the lazy policy silenced this step still transmits a
+    /// [`SKIP_MARKER_BITS`]-bit marker frame, appended as one `skip` hop
+    /// (n · marker bits, fan-in α-β seconds) so the hop-sum invariant
+    /// holds on skip steps and the meter never under-reports the wire.
     ///
     /// This is the single trace point for per-hop records and the step
     /// total, inherited by every topology: one `hop` event per schedule
@@ -398,7 +561,22 @@ impl BackendCore {
     /// `seconds`, which are deterministic and stay unmasked), then the
     /// `step` roll-up event whose `bits` is exactly the `StepStats.bits`
     /// the sim records.
-    pub fn finish_step(&mut self, hops: Vec<Hop>, step_bits: u64, step_seconds: f64) {
+    pub fn finish_step(&mut self, hops: Vec<Hop>, step_bits: u64, step_seconds: f64) -> u64 {
+        let mut hops = hops;
+        let mut step_bits = step_bits;
+        let mut step_seconds = step_seconds;
+        let n_skipped = self.skipped.len();
+        if n_skipped > 0 {
+            let bits = n_skipped as u64 * SKIP_MARKER_BITS;
+            let seconds = self.cfg.network.fan_time(n_skipped, SKIP_MARKER_BITS);
+            hops.push(Hop {
+                label: "skip".to_string(),
+                bits,
+                seconds,
+            });
+            step_bits += bits;
+            step_seconds += seconds;
+        }
         debug_assert_eq!(
             hops.iter().map(|h| h.bits).sum::<u64>(),
             step_bits,
@@ -439,6 +617,7 @@ impl BackendCore {
             self.meter.hide(self.step_encode_seconds.min(step_seconds));
         }
         self.step_encode_seconds = 0.0;
+        step_bits
     }
 
     /// Algorithm 1 line 4 at the update schedule, identical for every
@@ -488,16 +667,22 @@ impl BackendCore {
     }
 
     /// The member stage every gathered schedule starts with: bootstrap
-    /// the lazy empirical codebook from the first *active* lane's first
-    /// quantization if the coder needs one, quantize every active lane
+    /// the lazy empirical codebook from the first *sending* lane's first
+    /// quantization if the coder needs one, quantize every sending lane
     /// from its own RNG stream (fanned out per
     /// [`BackendCore::use_parallel`]), sample symbol counts every 10th
     /// step, and — when `encode` is set — entropy-encode and
-    /// loopback-decode each lane's frame. Inactive lanes (dropped or
-    /// standby members) are skipped entirely: they contribute no
-    /// symbols, no counts, and no frames. Sampled counts are folded
-    /// into the session on the calling thread in worker order, so
-    /// refreshed codebooks are bit-identical across schedules and modes.
+    /// loopback-decode each lane's frame. Lanes outside the sent set —
+    /// dropped or standby members, and lanes the [`LazyPolicy`] skipped
+    /// this step — are skipped entirely: they contribute no symbols, no
+    /// counts, no frames, and consume no RNG draws (matching the TCP
+    /// worker, which never quantizes a skipped step). Each lane
+    /// quantizes its *outgoing* message — the feedback-corrected
+    /// gradient when residual memory is on — and the decode error
+    /// settles back into the residual before this returns. Sampled
+    /// counts are folded into the session on the calling thread in
+    /// worker order, so refreshed codebooks are bit-identical across
+    /// schedules and modes.
     ///
     /// Must only be called on a quantized session.
     pub fn member_stage(
@@ -507,11 +692,15 @@ impl BackendCore {
         step: usize,
         encode: bool,
     ) {
-        let ids = self.membership.active_ids();
+        let ids = self.sent.clone();
         let Some(&first) = ids.first() else { return };
         let mut first_quantized = false;
         if self.session.needs_book() && self.session.book().is_none() {
-            lanes[first].quantize(&self.session, &grads[first], &mut self.rngs[first]);
+            let msg0: &[f32] = match self.feedback.as_ref() {
+                Some(fb) => fb.corrected(first),
+                None => &grads[first],
+            };
+            lanes[first].quantize(&self.session, msg0, &mut self.rngs[first]);
             self.session.build_empirical_book(lanes[first].quantized());
             first_quantized = true;
         }
@@ -519,13 +708,20 @@ impl BackendCore {
         let parallel = self.use_parallel(ids.len(), grads.first().map_or(0, |g| g.len()));
         let timings = {
             let session = &self.session;
+            let feedback = self.feedback.as_ref();
             let lane_refs = disjoint_mut(lanes, ids.iter().copied());
             let rng_refs = disjoint_mut(&mut self.rngs, ids.iter().copied());
             let mut tasks: Vec<(&mut ExchangeLane, &mut Rng, &[f32])> = lane_refs
                 .into_iter()
                 .zip(rng_refs)
                 .zip(ids.iter())
-                .map(|((lane, rng), &w)| (lane, rng, grads[w].as_slice()))
+                .map(|((lane, rng), &w)| {
+                    let msg: &[f32] = match feedback {
+                        Some(fb) => fb.corrected(w),
+                        None => grads[w].as_slice(),
+                    };
+                    (lane, rng, msg)
+                })
                 .collect();
             fan_out(parallel, &mut tasks, |i, task| {
                 let (lane, rng, grad) = task;
@@ -577,6 +773,31 @@ impl BackendCore {
             if encode {
                 self.trace_phase("encode", t_e);
                 self.trace_phase("decode", t_d);
+            }
+        }
+        // Settle each sender's residual against what receivers will
+        // decode: residual ← corrected − ĝ. With a loopback decode the
+        // lane's ĝ is exactly that; without one (the sharded schedule
+        // encodes per-shard later), dequantizing the lane's symbols
+        // yields the identical estimate, since entropy coding is
+        // lossless over symbols.
+        if self.feedback.is_some() {
+            if encode {
+                for &w in &ids {
+                    let fb = self.feedback.as_mut().expect("feedback checked above");
+                    fb.settle(w, lanes[w].ghat());
+                }
+            } else {
+                let q = self
+                    .session
+                    .quantizer()
+                    .expect("member_stage requires a quantized session");
+                for &w in &ids {
+                    self.ghat_scratch.resize(grads[w].len(), 0.0);
+                    q.dequantize(lanes[w].quantized(), &mut self.ghat_scratch);
+                    let fb = self.feedback.as_mut().expect("feedback checked above");
+                    fb.settle(w, &self.ghat_scratch);
+                }
             }
         }
     }

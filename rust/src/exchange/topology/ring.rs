@@ -127,15 +127,19 @@ impl RingExchange {
             grads.len()
         );
         agg.fill(0.0);
-        // The ring is formed over the active membership: position i on
-        // the ring is worker `ids[i]`, and chunks split the parameter
-        // vector `n` ways (not `m`), so a shrunken ring stays a valid
-        // 2(n−1)-stage schedule.
-        let ids = self.core.membership().active_ids();
+        // The ring is formed over this step's senders (active members
+        // minus lazy skips — a skipped worker is not a ring node this
+        // step): position i on the ring is worker `ids[i]`, and chunks
+        // split the parameter vector `n` ways (not `m`), so a shrunken
+        // ring stays a valid 2(n−1)-stage schedule. Error-feedback is
+        // unsupported over ring — partials are re-quantized per stage,
+        // so no per-worker decode error exists to settle a residual
+        // against; `RunConfig::validate` rejects the combination and
+        // `sim::Cluster::new` asserts it.
+        let ids = self.core.sent_ids();
         let n = ids.len();
         if n == 0 {
-            self.core.finish_step(Vec::new(), 0, 0.0);
-            return 0;
+            return self.core.finish_step(Vec::new(), 0, 0.0);
         }
         let d = agg.len();
         let net = self.core.cfg().network;
@@ -273,8 +277,7 @@ impl RingExchange {
         if quantized {
             self.core.add_codec_seconds(t0.elapsed().as_secs_f64());
         }
-        self.core.finish_step(hops, step_bits, step_seconds);
-        step_bits
+        self.core.finish_step(hops, step_bits, step_seconds)
     }
 }
 

@@ -103,24 +103,25 @@ impl ShardedExchange {
         agg.fill(0.0);
         let net = self.core.cfg().network;
         let shards = self.shards;
-        // The elastic active set: 0..M at full strength (byte-identical
-        // to the fixed-membership schedule), a subset under churn.
-        let ids = self.core.membership().active_ids();
+        // The step's frame plan: 0..M at full strength with feedback and
+        // lazy off (byte-identical to the fixed-membership schedule), a
+        // subset under churn or skip rounds. Skip markers are charged by
+        // `finish_step`.
+        let ids = self.core.sent_ids();
         let n = ids.len();
         if n == 0 {
-            self.core.finish_step(Vec::new(), 0, 0.0);
-            return 0;
+            return self.core.finish_step(Vec::new(), 0, 0.0);
         }
         self.bits_scratch.iter_mut().for_each(|b| *b = 0);
 
         if !self.core.is_quantized() {
-            // Full precision: 32·d per active worker, reduced in worker
+            // Full precision: 32·d per sending worker, reduced in worker
             // order exactly as the flat engine does; shards split the
             // fp32 payload coordinate-evenly for the hop accounting.
             let d = agg.len();
             let mut step_bits = 0u64;
             for &w in &ids {
-                let grad = &grads[w];
+                let grad = self.core.outgoing(w, grads);
                 self.bits_scratch[w] = 32 * grad.len() as u64;
                 step_bits += self.bits_scratch[w];
                 for (a, &g) in agg.iter_mut().zip(grad) {
@@ -143,8 +144,7 @@ impl ShardedExchange {
                     seconds,
                 });
             }
-            self.core.finish_step(hops, step_bits, step_seconds);
-            return step_bits;
+            return self.core.finish_step(hops, step_bits, step_seconds);
         }
 
         let t0 = std::time::Instant::now();
@@ -263,8 +263,7 @@ impl ShardedExchange {
         // sits on the wire while bucket-range k+1 encodes, and this is
         // the wall time the hidden-communication credit is bounded by.
         self.core.note_encode_seconds(encode_total);
-        self.core.finish_step(hops, step_bits, step_seconds);
-        step_bits
+        self.core.finish_step(hops, step_bits, step_seconds)
     }
 }
 

@@ -91,15 +91,16 @@ impl HierarchicalExchange {
         let d = agg.len();
         let net = self.core.cfg().network;
         let groups = self.groups;
-        // The elastic active set, projected onto the *fixed* group
-        // partition over the configured lanes: membership changes who
-        // participates in each group, never the partition itself. Groups
-        // whose members are all gone contribute no leader frame.
-        let ids = self.core.membership().active_ids();
+        // The step's frame plan (active members minus lazy skips),
+        // projected onto the *fixed* group partition over the configured
+        // lanes: membership and skip rounds change who participates in
+        // each group, never the partition itself. Groups whose members
+        // all dropped or skipped contribute no leader frame; skip
+        // markers are charged by `finish_step`.
+        let ids = self.core.sent_ids();
         let n = ids.len();
         if n == 0 {
-            self.core.finish_step(Vec::new(), 0, 0.0);
-            return 0;
+            return self.core.finish_step(Vec::new(), 0, 0.0);
         }
         let group_ids: Vec<Vec<usize>> = (0..groups)
             .map(|g| {
@@ -123,7 +124,8 @@ impl HierarchicalExchange {
             for &g in &present {
                 self.partials[0].fill(0.0);
                 for &w in &group_ids[g] {
-                    for (p, &x) in self.partials[0].iter_mut().zip(&grads[w]) {
+                    let grad = self.core.outgoing(w, grads);
+                    for (p, &x) in self.partials[0].iter_mut().zip(grad) {
                         *p += x * inv;
                     }
                 }
@@ -135,12 +137,11 @@ impl HierarchicalExchange {
             let lead_bits = 32 * d as u64 * present.len() as u64;
             let (up_s, xchg_s, down_s) = self.fp_hop_seconds(m, groups, 32 * d as u64, lead_bits);
             let step_bits = up_bits + 2 * lead_bits;
-            self.core.finish_step(
+            return self.core.finish_step(
                 level_hops(up_bits, lead_bits, up_s, xchg_s, down_s),
                 step_bits,
                 up_s + xchg_s + down_s,
             );
-            return step_bits;
         }
 
         let t0 = std::time::Instant::now();
@@ -230,8 +231,7 @@ impl HierarchicalExchange {
             level_hops(up_bits, lead_bits, up_seconds, xchg_seconds, down_seconds),
             step_bits,
             up_seconds + xchg_seconds + down_seconds,
-        );
-        step_bits
+        )
     }
 
     /// Analytical hop times for the fp32 path (same shapes as the

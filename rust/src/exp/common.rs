@@ -127,6 +127,8 @@ pub fn cluster_config(
         quantize_impl: crate::quant::QuantizeImpl::default(),
         pipeline: crate::exchange::PipelineMode::Off,
         faults: crate::sim::FaultPlan::default(),
+        error_feedback: false,
+        lazy: crate::exchange::LazyPolicy::Off,
     }
 }
 

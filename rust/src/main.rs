@@ -30,6 +30,7 @@ USAGE:
               [--bits-policy fixed:B|schedule:B1@s1,B2@s2,...|variance[:MIN-MAX[@T]]]
               [--quantize-impl scalar|fast|pallas]
               [--faults kill:W@S,delay:W@S:MS,join:W@S|none]
+              [--error-feedback on|off] [--lazy off|thresh:T|laq:C@K]
               [--trace PATH[:warn|info|debug]]
               (--parallel fans out flat/sharded/tree lanes, bit-identical
                to serial; the ring schedule is inherently serial.
@@ -42,7 +43,14 @@ USAGE:
                variance tracks the quantization-variance estimate.
                --quantize-impl picks the lane quantizer: scalar reference,
                the bit-identical vectorized fast path (default), or the
-               Pallas kernel via PJRT, falling back to fast when absent)
+               Pallas kernel via PJRT, falling back to fast when absent.
+               --error-feedback keeps each worker's decode error as a
+               residual added before the next quantization (not over
+               ring, whose stages re-quantize partials); --lazy lets a
+               worker send a 104-bit skip marker instead of a frame:
+               thresh:T skips while ‖msg‖₂ < T, laq:C@K skips while the
+               change against the last-sent reference stays under C×
+               its norm², at most K skips in a row)
   aqsgd exp <id> [--full] [--seeds N] [--iters N]     (exp list → all ids)
   aqsgd leader --bind 127.0.0.1:7700 --world 4 --iters 500
               [--topology flat|sharded:S|tree:G]
@@ -51,13 +59,17 @@ USAGE:
               (--deadline-ms/--retries tune timeout-and-drop: a worker
                missing its per-frame deadline is retried with doubled
                deadlines, then dropped; survivors renormalize to a
-               weighted partial aggregate. --deadline-ms 0 blocks forever)
+               weighted partial aggregate. --deadline-ms 0 blocks forever.
+               skip markers from --lazy workers need no leader flag:
+               the relay counts them, renormalizes the senders' weights,
+               and emits a `skip` trace event per marker)
   aqsgd worker --addr 127.0.0.1:7700 --worker 0 --world 4 --iters 500
               [--method ALQ --bits 3 --bucket 512 --seed 42]
               [--topology flat|sharded:S|tree:G] [--codec huffman|elias]
               [--pipeline off|overlap]
               [--bits-policy ...] [--quantize-impl scalar|fast|pallas]
               [--faults kill:W@S,delay:W@S:MS,join:W@S|none]
+              [--error-feedback on|off] [--lazy off|thresh:T|laq:C@K]
               [--trace PATH[:warn|info|debug]]
               (frames carry their width, so the leader relay needs no
                flag and no extra round-trip; --pipeline overlap hands
@@ -117,6 +129,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if cfg.pipeline != aqsgd::exchange::PipelineMode::Off {
         println!("  pipeline={}", cfg.pipeline.name());
     }
+    if cfg.error_feedback || !cfg.lazy.is_off() {
+        println!(
+            "  error-feedback={} lazy={}",
+            if cfg.error_feedback { "on" } else { "off" },
+            cfg.lazy.name()
+        );
+    }
     if cfg.model != "mlp" {
         bail!("`train` runs the pure-Rust blobs task; for HLO models see examples/train_lm.rs");
     }
@@ -143,6 +162,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 .as_ref()
                 .map(|l| l.iter().map(|x| (x * 1e4).round() / 1e4).collect::<Vec<_>>())
         );
+        if rec.skipped_frames > 0 {
+            println!(
+                "    skipped frames: {} ({} marker bits)",
+                rec.skipped_frames,
+                rec.skipped_frames * aqsgd::exchange::SKIP_MARKER_BITS
+            );
+        }
         accs.push(rec.final_eval.accuracy);
     }
     let (m, s) = aqsgd::metrics::mean_std(&accs);
@@ -327,15 +353,26 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         Some(v) => {
             let p = aqsgd::exchange::PipelineMode::parse(v)
                 .with_context(|| format!("bad --pipeline {v:?} (off|overlap)"))?;
-            if p == aqsgd::exchange::PipelineMode::Stale {
-                bail!(
-                    "--pipeline stale:1 is a simulation schedule (aqsgd train); \
-                     the TCP worker supports off|overlap"
-                );
-            }
+            // Same parse-time transport check RunConfig::validate runs
+            // for the sim (tcp = false there).
+            aqsgd::config::validate_pipeline_transport(p, true)
+                .map_err(|e| anyhow::anyhow!(e))?;
             p
         }
         None => aqsgd::exchange::PipelineMode::Off,
+    };
+    let error_feedback = match flag(args, "--error-feedback") {
+        Some(v) => match v.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => bail!("bad --error-feedback {v:?} (on|off)"),
+        },
+        None => false,
+    };
+    let lazy = match flag(args, "--lazy") {
+        Some(v) => aqsgd::exchange::LazyPolicy::parse_strict(v)
+            .map_err(|e| anyhow::anyhow!("bad --lazy: {e}"))?,
+        None => aqsgd::exchange::LazyPolicy::Off,
     };
     let faults = match flag(args, "--faults") {
         Some(v) => aqsgd::sim::FaultPlan::parse(v).map_err(|e| {
@@ -364,6 +401,8 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         quantize_impl,
         pipeline,
         faults,
+        error_feedback,
+        lazy,
     };
     if let Err(e) = cfg.faults.validate(cfg.world) {
         bail!("bad --faults: {e}");
@@ -371,6 +410,13 @@ fn cmd_worker(args: &[String]) -> Result<()> {
     let spec = aqsgd::exp::common::ModelSpec::resnet32_standin();
     let mut task = spec.task(cfg.world, 7);
     println!("worker {}/{} → {}", cfg.worker, cfg.world, cfg.addr);
+    if cfg.error_feedback || !cfg.lazy.is_off() {
+        println!(
+            "  error-feedback={} lazy={}",
+            if cfg.error_feedback { "on" } else { "off" },
+            cfg.lazy.name()
+        );
+    }
     let tracer = open_tracer(parse_trace_flag(args)?.as_ref())?;
     let report = run_worker_traced(&cfg, &mut task, &tracer)?;
     println!(

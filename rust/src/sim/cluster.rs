@@ -20,8 +20,8 @@
 //! (DESIGN.md §8).
 
 use crate::exchange::{
-    make_backend, BitsPolicy, CodecPhase, ExchangeBackend, ExchangeConfig, ParallelMode,
-    PipelineMode, TopologySpec,
+    make_backend, BitsPolicy, CodecPhase, ExchangeBackend, ExchangeConfig, LazyPolicy,
+    ParallelMode, PipelineMode, TopologySpec,
 };
 use crate::model::{EvalResult, TrainTask};
 use crate::opt::{LrSchedule, Optimizer, Sgd, Umsgd, UpdateSchedule};
@@ -71,6 +71,15 @@ pub struct ClusterConfig {
     /// the step's gradients; delays charge straggler seconds to the
     /// meter.
     pub faults: FaultPlan,
+    /// Error-feedback residual memory (`--error-feedback on|off`): each
+    /// worker adds its residual to the gradient before quantization and
+    /// keeps the decode error for the next step. Unsupported over
+    /// `--topology ring` (partials are re-quantized per stage).
+    pub error_feedback: bool,
+    /// Lazy skip-round policy (`--lazy off|thresh:T|laq:C@K`): a worker
+    /// whose message fails the send rule transmits a skip marker instead
+    /// of a frame that step.
+    pub lazy: LazyPolicy,
 }
 
 impl ClusterConfig {
@@ -96,6 +105,8 @@ impl ClusterConfig {
             codec: Codec::Huffman,
             quantize_impl: QuantizeImpl::default(),
             faults: FaultPlan::default(),
+            error_feedback: false,
+            lazy: LazyPolicy::Off,
         }
     }
 
@@ -129,6 +140,11 @@ pub struct StepStats {
     /// Active-membership bitmask this step (bit w set ⇔ worker w
     /// contributed to the aggregate). All-ones for fault-free runs.
     pub active: u64,
+    /// Sent-frame bitmask this step (bit w set ⇔ worker w sent an
+    /// encoded frame rather than a skip marker). Equals `active` unless
+    /// a `--lazy` policy skipped someone; part of the sim ≡ TCP parity
+    /// projection.
+    pub sent: u64,
     /// FNV-1a over the parameter bits after this step's update — the
     /// per-step replica fingerprint fault-parity tests project on.
     pub params_hash: u64,
@@ -171,6 +187,10 @@ pub struct TrainRecord {
     pub codec_phase: CodecPhase,
     /// Number of level updates performed.
     pub level_updates: usize,
+    /// Worker-steps that sent only a skip marker instead of a frame
+    /// (0 unless a `--lazy` policy is active) — the realized zero-frame
+    /// savings the `exp` tables report.
+    pub skipped_frames: u64,
     /// FNV-1a over the final parameter bits (parity fingerprint shared
     /// with the distributed workers' replica hash).
     pub params_hash: u64,
@@ -198,8 +218,17 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
+        // `RunConfig::validate` rejects this at the CLI; assert for
+        // programmatic construction too — ring re-quantizes partials per
+        // stage, so there is no per-worker decode error to feed back.
+        assert!(
+            !(cfg.error_feedback && cfg.topology == TopologySpec::Ring),
+            "--error-feedback is unsupported over --topology ring"
+        );
         let mut engine = make_backend(cfg.exchange(), cfg.topology);
         engine.core_mut().set_pipeline(cfg.pipeline);
+        engine.core_mut().set_error_feedback(cfg.error_feedback);
+        engine.core_mut().set_lazy(cfg.lazy);
         // Workers with a `join:W@S` fault start as standby: their lane
         // exists (they compute gradients and track the replica) but they
         // are outside the active set until their join step.
@@ -258,6 +287,7 @@ impl Cluster {
             codec_seconds: 0.0,
             codec_phase: CodecPhase::default(),
             level_updates: 0,
+            skipped_frames: 0,
             params_hash: 0,
         };
 
@@ -279,6 +309,11 @@ impl Cluster {
             o.insert("seed", Json::Num(self.cfg.seed as f64));
             o.insert("parallel", Json::Str(self.cfg.parallel.name().into()));
             o.insert("pipeline", Json::Str(self.cfg.pipeline.name().into()));
+            o.insert(
+                "error_feedback",
+                Json::Bool(self.cfg.error_feedback),
+            );
+            o.insert("lazy", Json::Str(self.cfg.lazy.name()));
         });
 
         for step in 0..self.cfg.iters {
@@ -363,6 +398,7 @@ impl Cluster {
                 optimizer.step(&mut params, &agg, lr);
             }
 
+            rec.skipped_frames += self.engine.core().skipped_count() as u64;
             rec.steps.push(StepStats {
                 step,
                 train_loss: mean_loss,
@@ -370,6 +406,7 @@ impl Cluster {
                 bits: step_bits,
                 width: self.engine.step_width(),
                 active: self.engine.core().membership().active_mask(),
+                sent: self.engine.core().sent_mask(),
                 params_hash: crate::util::hash_params(&params),
             });
 
@@ -732,6 +769,99 @@ mod tests {
         assert_eq!(scalar.params_hash, fast.params_hash);
         assert_eq!(scalar.comm_bits, fast.comm_bits);
         assert_eq!(scalar.final_levels, fast.final_levels);
+    }
+
+    #[test]
+    fn lazy_threshold_skips_frames_and_stays_deterministic() {
+        // An absurdly high threshold silences every worker: all frames
+        // become skip markers, the sent mask empties, and the meter
+        // charges exactly the marker bits.
+        let mut cfg = small_cfg(Method::QsgdInf, 6);
+        cfg.lazy = LazyPolicy::Thresh(1e30);
+        let rec = Cluster::new(cfg).train(&mut task(4, 31));
+        assert_eq!(rec.skipped_frames, 6 * 4);
+        assert!(rec.steps.iter().all(|s| s.sent == 0));
+        assert!(rec.steps.iter().all(|s| s.active == 0b1111));
+        assert!(rec
+            .steps
+            .iter()
+            .all(|s| s.bits == 4 * crate::exchange::SKIP_MARKER_BITS));
+
+        // A tiny threshold skips nobody and the sent mask tracks the
+        // active mask exactly.
+        let mut cfg = small_cfg(Method::QsgdInf, 6);
+        cfg.lazy = LazyPolicy::Thresh(1e-30);
+        let rec = Cluster::new(cfg).train(&mut task(4, 31));
+        assert_eq!(rec.skipped_frames, 0);
+        assert!(rec.steps.iter().all(|s| s.sent == s.active));
+
+        // LAQ skip plans are a pure function of the seed.
+        let run = || {
+            let mut cfg = small_cfg(Method::Alq, 30);
+            cfg.lazy = LazyPolicy::parse("laq:0.5@8").unwrap();
+            Cluster::new(cfg).train(&mut task(4, 33))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.params_hash, b.params_hash);
+        assert_eq!(a.skipped_frames, b.skipped_frames);
+        assert_eq!(
+            a.steps.iter().map(|s| s.sent).collect::<Vec<_>>(),
+            b.steps.iter().map(|s| s.sent).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn error_feedback_learns_at_two_bits_and_composes_with_lazy() {
+        // Feedback at width 2 (the ternary floor) must still train.
+        let mut cfg = small_cfg(Method::Alq, 400);
+        cfg.bits = BitsPolicy::Fixed(2);
+        cfg.error_feedback = true;
+        cfg.updates = UpdateSchedule::at(vec![1, 25], 100, 25);
+        let rec = Cluster::new(cfg).train(&mut task(4, 7));
+        assert!(
+            rec.final_eval.accuracy > 0.65,
+            "feedback@2bit acc {}",
+            rec.final_eval.accuracy
+        );
+
+        // Feedback + LAQ together: deterministic, and skipped messages
+        // are absorbed (not lost) by the residual.
+        let run = || {
+            let mut cfg = small_cfg(Method::QsgdInf, 30);
+            cfg.error_feedback = true;
+            cfg.lazy = LazyPolicy::parse("laq:1.0@4").unwrap();
+            Cluster::new(cfg).train(&mut task(4, 35))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.params_hash, b.params_hash);
+        assert_eq!(a.skipped_frames, b.skipped_frames);
+    }
+
+    #[test]
+    fn feedback_and_lazy_off_matches_the_plain_run_bit_for_bit() {
+        // The off/off determinism contract at the cluster level: the
+        // explicit defaults and an untouched config produce the same
+        // trajectory, bits, and hop accounting.
+        let base = Cluster::new(small_cfg(Method::Alq, 25)).train(&mut task(4, 37));
+        let mut cfg = small_cfg(Method::Alq, 25);
+        cfg.error_feedback = false;
+        cfg.lazy = LazyPolicy::Off;
+        let explicit = Cluster::new(cfg).train(&mut task(4, 37));
+        assert_eq!(base.params_hash, explicit.params_hash);
+        assert_eq!(base.comm_bits, explicit.comm_bits);
+        assert_eq!(base.skipped_frames, 0);
+        assert!(base.steps.iter().all(|s| s.sent == s.active));
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported over --topology ring")]
+    fn error_feedback_over_ring_is_rejected() {
+        let mut cfg = small_cfg(Method::QsgdInf, 2);
+        cfg.topology = TopologySpec::Ring;
+        cfg.error_feedback = true;
+        let _ = Cluster::new(cfg);
     }
 
     #[test]

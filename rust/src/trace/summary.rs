@@ -135,6 +135,23 @@ pub const EVENT_TYPES: &[EventSchema] = &[
         ],
     },
     EventSchema {
+        kind: "skip",
+        required: &[
+            ("step", Field::Num),
+            ("worker", Field::Num),
+            ("bits", Field::Num),
+            ("weight_sum", Field::Num),
+        ],
+    },
+    EventSchema {
+        kind: "feedback_norm",
+        required: &[
+            ("step", Field::Num),
+            ("worker", Field::Num),
+            ("norm", Field::Num),
+        ],
+    },
+    EventSchema {
         kind: "run_end",
         required: &[("steps", Field::Num), ("total_bits", Field::Num)],
     },
@@ -282,6 +299,15 @@ pub struct TraceSummary {
     pub width_totals: BTreeMap<u32, WidthTotal>,
     /// `(component, message)` of every warning event.
     pub warnings: Vec<(String, String)>,
+    /// Worker-steps that sent a skip marker instead of a frame
+    /// (`skip` events — the `--lazy` zero-frame savings).
+    pub skipped_frames: usize,
+    /// Total skip-marker bits those markers put on the wire.
+    pub skip_bits: u64,
+    /// `feedback_norm` samples seen (Debug-level `--error-feedback`
+    /// telemetry) and the largest residual ℓ₂ norm among them.
+    pub feedback_events: usize,
+    pub feedback_norm_max: f64,
     /// Steps whose `step.bits` ≠ Σ hop bits (should always be empty:
     /// `BackendCore::finish_step` debug-asserts the same invariant).
     pub hop_bits_mismatches: Vec<String>,
@@ -351,6 +377,14 @@ impl TraceSummary {
                     ev.req("component").as_str().unwrap().to_string(),
                     ev.req("message").as_str().unwrap().to_string(),
                 )),
+                "skip" => {
+                    s.skipped_frames += 1;
+                    s.skip_bits += num("bits").unwrap_or(0.0) as u64;
+                }
+                "feedback_norm" => {
+                    s.feedback_events += 1;
+                    s.feedback_norm_max = s.feedback_norm_max.max(num("norm").unwrap_or(0.0));
+                }
                 _ => {}
             }
         }
@@ -401,6 +435,15 @@ impl TraceSummary {
             for (w, u) in &self.width_totals {
                 t.row(vec![w.to_string(), u.steps.to_string(), u.bits.to_string()]);
             }
+            out.push(t);
+        }
+
+        if self.skipped_frames > 0 {
+            let mut t = Table::new("Skip rounds", &["Skipped frames", "Marker bits"]);
+            t.row(vec![
+                self.skipped_frames.to_string(),
+                self.skip_bits.to_string(),
+            ]);
             out.push(t);
         }
 
@@ -470,6 +513,16 @@ impl TraceSummary {
         }
         doc.insert("widths", widths);
 
+        let mut skips = Json::obj();
+        skips.insert("frames", Json::Num(self.skipped_frames as f64));
+        skips.insert("marker_bits", Json::Num(self.skip_bits as f64));
+        doc.insert("skips", skips);
+
+        let mut feedback = Json::obj();
+        feedback.insert("samples", Json::Num(self.feedback_events as f64));
+        feedback.insert("max_norm", Json::Num(self.feedback_norm_max));
+        doc.insert("feedback", feedback);
+
         let warnings: Vec<Json> = self
             .warnings
             .iter()
@@ -533,6 +586,49 @@ mod tests {
         let mistyped =
             line(r#"{"e":"timeout","seq":4,"step":3,"worker":1,"attempt":"x","deadline_ms":50}"#);
         assert!(validate_event(&mistyped).is_err());
+    }
+
+    #[test]
+    fn validate_covers_skip_and_feedback_events() {
+        let skip =
+            line(r#"{"e":"skip","seq":0,"step":5,"worker":2,"bits":104,"weight_sum":1}"#);
+        assert!(validate_event(&skip).is_ok());
+        let fb = line(r#"{"e":"feedback_norm","seq":1,"step":5,"worker":2,"norm":0.25}"#);
+        assert!(validate_event(&fb).is_ok());
+        let missing = line(r#"{"e":"skip","seq":2,"step":5,"worker":2,"bits":104}"#);
+        assert!(validate_event(&missing).is_err());
+        let mistyped =
+            line(r#"{"e":"feedback_norm","seq":3,"step":5,"worker":2,"norm":"big"}"#);
+        assert!(validate_event(&mistyped).is_err());
+    }
+
+    #[test]
+    fn summarize_folds_skip_rounds_and_feedback() {
+        let trace = r#"{"e":"run_start","seq":0,"runtime":"sim"}
+{"e":"feedback_norm","seq":1,"step":0,"worker":0,"norm":0.5}
+{"e":"feedback_norm","seq":2,"step":0,"worker":1,"norm":2.0}
+{"e":"skip","seq":3,"step":0,"worker":1,"bits":104,"weight_sum":1}
+{"e":"hop","seq":4,"step":0,"index":0,"label":"all-to-all","bits":520,"seconds":0.5}
+{"e":"hop","seq":5,"step":0,"index":1,"label":"skip","bits":104,"seconds":0.125}
+{"e":"step","seq":6,"step":0,"bits":624,"width":3}
+{"e":"skip","seq":7,"step":1,"worker":0,"bits":104,"weight_sum":0}
+{"e":"skip","seq":8,"step":1,"worker":1,"bits":104,"weight_sum":0}
+{"e":"hop","seq":9,"step":1,"index":0,"label":"skip","bits":208,"seconds":0.25}
+{"e":"step","seq":10,"step":1,"bits":208,"width":3}
+"#;
+        let s = TraceSummary::from_jsonl(trace).unwrap();
+        assert_eq!(s.skipped_frames, 3);
+        assert_eq!(s.skip_bits, 312);
+        assert_eq!(s.feedback_events, 2);
+        assert!((s.feedback_norm_max - 2.0).abs() < 1e-12);
+        // The skip hop participates in the hop-sum ≡ step-total
+        // invariant: an all-skip step carries marker bits only.
+        assert!(s.hop_bits_mismatches.is_empty(), "{:?}", s.hop_bits_mismatches);
+        assert_eq!(s.hop_totals["skip"].bits, 312);
+        assert!(s.tables().iter().any(|t| t.title == "Skip rounds"));
+        let doc = s.to_json().to_string();
+        assert!(doc.contains(r#""skips":{"frames":3,"marker_bits":312}"#), "{doc}");
+        assert!(doc.contains(r#""feedback":{"max_norm":2,"samples":2}"#), "{doc}");
     }
 
     #[test]

@@ -277,6 +277,8 @@ fn engine_and_coordinator_bits_agree_qualitatively() {
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
                 pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: aqsgd::sim::FaultPlan::default(),
+                error_feedback: false,
+                lazy: aqsgd::exchange::LazyPolicy::Off,
             };
             let mut t = task(world, 7);
             run_worker(&cfg, &mut t).unwrap()

@@ -30,7 +30,7 @@ use aqsgd::coordinator::{
     run_leader_elastic, run_worker, ElasticPolicy, LeaderReport, WorkerConfig, WorkerReport,
 };
 use aqsgd::data::Blobs;
-use aqsgd::exchange::{BitsPolicy, ParallelMode, TopologySpec};
+use aqsgd::exchange::{BitsPolicy, LazyPolicy, ParallelMode, TopologySpec, SKIP_MARKER_BITS};
 use aqsgd::model::{Mlp, MlpTask};
 use aqsgd::opt::{LrSchedule, UpdateSchedule};
 use aqsgd::quant::{Codec, Method, QuantizeImpl};
@@ -54,6 +54,16 @@ fn dims() -> u64 {
 }
 
 fn sim_run(method: Method, topology: TopologySpec, faults: &str, iters: usize) -> TrainRecord {
+    sim_run_lazy(method, topology, faults, iters, LazyPolicy::Off)
+}
+
+fn sim_run_lazy(
+    method: Method,
+    topology: TopologySpec,
+    faults: &str,
+    iters: usize,
+    lazy: LazyPolicy,
+) -> TrainRecord {
     let cfg = ClusterConfig {
         method,
         workers: WORLD,
@@ -74,6 +84,8 @@ fn sim_run(method: Method, topology: TopologySpec, faults: &str, iters: usize) -
         quantize_impl: QuantizeImpl::default(),
         pipeline: aqsgd::exchange::PipelineMode::Off,
         faults: FaultPlan::parse(faults).unwrap(),
+        error_feedback: false,
+        lazy,
     };
     Cluster::new(cfg).train(&mut task())
 }
@@ -92,6 +104,17 @@ fn tcp_run(
     faults: &str,
     iters: usize,
     policy: ElasticPolicy,
+) -> TcpRun {
+    tcp_run_lazy(method, topology, faults, iters, policy, LazyPolicy::Off)
+}
+
+fn tcp_run_lazy(
+    method: Method,
+    topology: TopologySpec,
+    faults: &str,
+    iters: usize,
+    policy: ElasticPolicy,
+    lazy: LazyPolicy,
 ) -> TcpRun {
     let (listener, addr) = common::free_listener();
     let (tracer, buf) = Tracer::memory(Level::Info);
@@ -122,6 +145,8 @@ fn tcp_run(
                 quantize_impl: QuantizeImpl::default(),
                 pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: plan,
+                error_feedback: false,
+                lazy,
             };
             run_worker(&cfg, &mut task()).map_err(|e| e.to_string())
         }));
@@ -335,6 +360,91 @@ fn deadline_miss_drops_straggler_and_survivors_renormalize() {
                 "worker {w}: replica hash at step {s}"
             );
         }
+    }
+}
+
+/// Lazy-aggregation parity: skip decisions are pure functions of the
+/// gradients, so one `--lazy` spec produces the same skip plan on both
+/// runtimes. For fp32 the full (step, sent-mask, width, bits,
+/// params_hash) projection matches — including genuinely zero-frame
+/// steps, which meter exactly `n·SKIP_MARKER_BITS` on both sides —
+/// under an unreachable threshold (every step skips) and a
+/// patience-bounded LAQ gate (a frame every 4th step), over flat and
+/// tree relays.
+#[test]
+fn lazy_skip_plans_agree_between_sim_and_tcp() {
+    let d = dims();
+    // laq:1e12@3: step 0 sends (no reference yet); the huge gain keeps
+    // every later drift under threshold, so frames recur exactly when
+    // the K=3 patience runs out — sends at steps 0, 4, 8, …, a
+    // data-independent plan mixing zero-frame and full steps.
+    for (name, lazy, send_period) in [
+        ("thresh:1e30", LazyPolicy::Thresh(1e30), None),
+        ("laq:1e12@3", LazyPolicy::parse("laq:1e12@3").unwrap(), Some(4usize)),
+    ] {
+        for topology in [TopologySpec::Flat, TopologySpec::Tree(2)] {
+            let ctx = format!("{name} over {}", topology.name());
+            let sim = sim_run_lazy(Method::SuperSgd, topology, "none", ITERS, lazy);
+            let tcp = tcp_run_lazy(
+                Method::SuperSgd,
+                topology,
+                "none",
+                ITERS,
+                ElasticPolicy::default(),
+                lazy,
+            );
+            let w0 = tcp.workers[0].as_ref().expect("worker 0");
+            assert!(sim.skipped_frames > 0, "{ctx}: no zero-frame worker-steps");
+            for s in 0..ITERS {
+                let st = &sim.steps[s];
+                let wr = &w0.step_records[s];
+                let lr = &tcp.leader.steps[s];
+                let send = send_period.is_some_and(|p| s % p == 0);
+                let want_sent: u64 = if send { 0b1111 } else { 0 };
+                assert_eq!(st.sent, want_sent, "{ctx}: sim sent-mask at step {s}");
+                assert_eq!(wr.sent_mask, want_sent, "{ctx}: tcp sent-mask at step {s}");
+                assert_eq!(st.active, 0b1111, "{ctx}: skippers must stay active");
+                assert_eq!(wr.active_mask, 0b1111, "{ctx}");
+                assert_eq!(st.width, 32, "{ctx}");
+                assert_eq!(wr.width, 32, "{ctx}");
+                assert_eq!(
+                    st.params_hash, wr.params_hash,
+                    "{ctx}: replica hash diverges at step {s}"
+                );
+                let (sim_bits, leader_bits) = if send {
+                    match topology {
+                        TopologySpec::Flat => (32 * d * 4, 32 * d * 4),
+                        _ => (32 * d * (4 + 2 * 2), 32 * d * (4 + 2)),
+                    }
+                } else {
+                    (4 * SKIP_MARKER_BITS, 4 * SKIP_MARKER_BITS)
+                };
+                assert_eq!(st.bits, sim_bits, "{ctx}: sim bits at step {s}");
+                assert_eq!(lr.bits, leader_bits, "{ctx}: leader bits at step {s}");
+            }
+            for w in 1..WORLD {
+                let wr = tcp.workers[w].as_ref().expect("worker");
+                assert_eq!(wr.step_records, w0.step_records, "{ctx}: worker {w}");
+            }
+        }
+    }
+    // Quantized runs agree on the same mask/width projection (bits and
+    // hashes differ by design: the runtimes build their codebooks on
+    // different lifecycles, like the other quantized parity tests).
+    let lazy = LazyPolicy::parse("laq:1e12@3").unwrap();
+    let sim = sim_run_lazy(Method::Alq, TopologySpec::Flat, "none", ITERS, lazy);
+    let tcp = tcp_run_lazy(
+        Method::Alq,
+        TopologySpec::Flat,
+        "none",
+        ITERS,
+        ElasticPolicy::default(),
+        lazy,
+    );
+    let w0 = tcp.workers[0].as_ref().expect("worker 0");
+    for s in 0..ITERS {
+        assert_eq!(sim.steps[s].sent, w0.step_records[s].sent_mask, "alq step {s}");
+        assert_eq!(sim.steps[s].width, w0.step_records[s].width, "alq step {s}");
     }
 }
 

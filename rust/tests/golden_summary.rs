@@ -18,8 +18,10 @@ use std::process::Command;
 
 /// The fixture: a deterministic JSONL trace with every summary-relevant
 /// event kind. Hop bits sum to each step's total (`trace-summarize`
-/// hard-fails otherwise), and the churn events mirror what the elastic
-/// leader emits on a deadline miss and a scheduled join.
+/// hard-fails otherwise), the churn events mirror what the elastic
+/// leader emits on a deadline miss and a scheduled join, and step 1
+/// carries a `--lazy` skip round (a 104-bit marker hop folded into the
+/// step total) plus an `--error-feedback` residual-norm sample.
 const FIXTURE: &str = r#"{"e":"run_start","seq":0,"runtime":"sim"}
 {"e":"connect","seq":1,"worker":0,"world":4}
 {"e":"bit_decision","seq":2,"step":0,"width":3}
@@ -36,9 +38,12 @@ const FIXTURE: &str = r#"{"e":"run_start","seq":0,"runtime":"sim"}
 {"e":"member_drop","seq":13,"step":1,"worker":1,"active":3,"weight_sum":1}
 {"e":"warning","seq":14,"component":"leader","message":"worker 1 dropped at step 1 (deadline); 3 active"}
 {"e":"member_join","seq":15,"step":2,"worker":2,"active":4,"weight_sum":1}
-{"e":"hop","seq":16,"step":1,"index":0,"label":"up","bits":720,"seconds":0.0625}
-{"e":"step","seq":17,"step":1,"bits":720,"width":4}
-{"e":"run_end","seq":18,"steps":2,"total_bits":2000}
+{"e":"feedback_norm","seq":16,"step":1,"worker":2,"norm":0.5}
+{"e":"skip","seq":17,"step":1,"worker":2,"bits":104,"weight_sum":1}
+{"e":"hop","seq":18,"step":1,"index":0,"label":"up","bits":720,"seconds":0.0625}
+{"e":"hop","seq":19,"step":1,"index":1,"label":"skip","bits":104,"seconds":0.03125}
+{"e":"step","seq":20,"step":1,"bits":824,"width":4}
+{"e":"run_end","seq":21,"steps":2,"total_bits":2104}
 "#;
 
 fn golden_path() -> PathBuf {
@@ -75,6 +80,14 @@ fn trace_summarize_json_matches_golden() {
         "CLI output diverges from TraceSummary::to_json"
     );
     assert!(produced.contains("\"schema\":\"aqsgd-trace-summary/v1\""));
+    assert!(
+        produced.contains("\"skips\":{\"frames\":1,\"marker_bits\":104}"),
+        "skip rounds missing from the summary: {produced}"
+    );
+    assert!(
+        produced.contains("\"feedback\":{\"max_norm\":0.5,\"samples\":1}"),
+        "feedback section missing from the summary: {produced}"
+    );
 
     let golden = golden_path();
     if std::env::var_os("UPDATE_GOLDEN").is_some() || !golden.exists() {

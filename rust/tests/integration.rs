@@ -47,6 +47,8 @@ fn quantized_training_over_hlo_model() {
         quantize_impl: aqsgd::quant::QuantizeImpl::default(),
         pipeline: aqsgd::exchange::PipelineMode::Off,
         faults: aqsgd::sim::FaultPlan::default(),
+        error_feedback: false,
+        lazy: aqsgd::exchange::LazyPolicy::Off,
     };
     let rec = Cluster::new(cfg).train(&mut task);
     let first = rec.steps.first().unwrap().train_loss;
@@ -171,6 +173,8 @@ fn cluster_and_coordinator_agree_qualitatively() {
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
                 pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: aqsgd::sim::FaultPlan::default(),
+                error_feedback: false,
+                lazy: aqsgd::exchange::LazyPolicy::Off,
             };
             let blobs = Blobs::generate(32, 10, 16384, 1024, 0.8, 11);
             let mut task = MlpTask::new(Mlp::new(vec![32, 64, 10]), blobs, 16, world, 11);

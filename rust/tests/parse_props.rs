@@ -1,12 +1,13 @@
-//! Property tests for the two user-facing spec grammars,
-//! `BitsPolicy::parse` and `FaultPlan::parse`: randomly generated valid
-//! values round-trip through their canonical `name()` strings
-//! (`parse(name()) == self`), and malformed specs are rejected with
-//! error messages that actually explain the problem. Generators are
-//! hand-rolled over the repo's own seeded [`aqsgd::util::Rng`] — no
-//! external property-testing dependency, fully deterministic.
+//! Property tests for the user-facing spec grammars —
+//! `BitsPolicy::parse`, `FaultPlan::parse`, and `LazyPolicy::parse`:
+//! randomly generated valid values round-trip through their canonical
+//! `name()` strings (`parse(name()) == self`), and malformed specs are
+//! rejected with error messages that actually explain the problem.
+//! Generators are hand-rolled over the repo's own seeded
+//! [`aqsgd::util::Rng`] — no external property-testing dependency,
+//! fully deterministic.
 
-use aqsgd::exchange::BitsPolicy;
+use aqsgd::exchange::{BitsPolicy, LazyPolicy};
 use aqsgd::sim::FaultPlan;
 use aqsgd::util::Rng;
 use std::collections::BTreeSet;
@@ -115,6 +116,76 @@ fn fault_plan_roundtrips_through_name() {
         }
     }
     assert!(nonempty > CASES / 2, "generator produced mostly empty plans");
+}
+
+/// A random valid `--lazy` value across all three variants.
+/// Two-decimal magnitudes round-trip exactly through f64 Display,
+/// which is all `name()` relies on (same trick as the variance target).
+fn gen_lazy(rng: &mut Rng) -> LazyPolicy {
+    match rng.below(3) {
+        0 => LazyPolicy::parse_strict("off").unwrap(),
+        1 => {
+            let t = (1 + rng.below(9999)) as f64 / 100.0;
+            LazyPolicy::parse_strict(&format!("thresh:{t}")).unwrap()
+        }
+        _ => {
+            let c = (1 + rng.below(999)) as f64 / 100.0;
+            let k = 1 + rng.below(50);
+            LazyPolicy::parse_strict(&format!("laq:{c}@{k}")).unwrap()
+        }
+    }
+}
+
+#[test]
+fn lazy_policy_roundtrips_through_name() {
+    let mut rng = Rng::new(0x1A2);
+    let mut variants = [false; 3];
+    for case in 0..CASES {
+        let p = gen_lazy(&mut rng);
+        let name = p.name();
+        let back = LazyPolicy::parse_strict(&name)
+            .unwrap_or_else(|e| panic!("case {case}: {name:?} failed to re-parse: {e}"));
+        assert_eq!(back, p, "case {case}: parse(name()) != self for {name:?}");
+        // The lossy and strict parsers agree, and the grammar is
+        // case/whitespace tolerant on input while name() is canonical.
+        assert_eq!(LazyPolicy::parse(&name), Some(p), "case {case}: {name:?}");
+        assert_eq!(
+            LazyPolicy::parse(&format!(" {} ", name.to_ascii_uppercase())),
+            Some(p),
+            "case {case}: {name:?}"
+        );
+        variants[match p {
+            LazyPolicy::Off => 0,
+            LazyPolicy::Thresh(_) => 1,
+            LazyPolicy::Laq { .. } => 2,
+        }] = true;
+    }
+    assert!(variants.iter().all(|&v| v), "generator missed a policy variant");
+}
+
+#[test]
+fn lazy_policy_rejections_carry_diagnostics() {
+    for (spec, needle) in [
+        ("", "empty lazy policy"),
+        ("   ", "empty lazy policy"),
+        ("thresh:", "invalid lazy threshold"),
+        ("thresh:big", "invalid lazy threshold"),
+        ("thresh:0", "positive and finite"),
+        ("thresh:-3", "positive and finite"),
+        ("thresh:nan", "positive and finite"),
+        ("laq:0.5", "missing '@K'"),
+        ("laq:@3", "invalid laq gain"),
+        ("laq:inf@3", "positive and finite"),
+        ("laq:0@3", "positive and finite"),
+        ("laq:0.5@", "invalid laq patience"),
+        ("laq:0.5@-1", "invalid laq patience"),
+        ("laq:0.5@0", "at least 1"),
+        ("eager", "unknown lazy policy"),
+    ] {
+        let err = LazyPolicy::parse_strict(spec).unwrap_err();
+        assert!(err.contains(needle), "{spec:?}: {err:?} lacks {needle:?}");
+        assert_eq!(LazyPolicy::parse(spec), None, "{spec:?} must not parse");
+    }
 }
 
 #[test]

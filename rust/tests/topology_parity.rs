@@ -367,6 +367,8 @@ fn spawn_tcp_pipeline(
                 quantize_impl: aqsgd::quant::QuantizeImpl::default(),
                 pipeline,
                 faults: FaultPlan::default(),
+                error_feedback: false,
+                lazy: aqsgd::exchange::LazyPolicy::Off,
             };
             let blobs = Blobs::generate(8, 4, 1600, 400, 1.0, 7);
             let mut t = MlpTask::new(Mlp::new(vec![8, 32, 4]), blobs, 32, world, 7);

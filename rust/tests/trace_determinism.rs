@@ -44,6 +44,8 @@ fn sim_cfg(topology: TopologySpec, parallel: ParallelMode) -> ClusterConfig {
         quantize_impl: QuantizeImpl::default(),
         pipeline: aqsgd::exchange::PipelineMode::Off,
         faults: FaultPlan::default(),
+        error_feedback: false,
+        lazy: aqsgd::exchange::LazyPolicy::Off,
     }
 }
 
@@ -99,6 +101,8 @@ fn tcp_trace(level: Level) -> (String, String) {
                 quantize_impl: QuantizeImpl::default(),
                 pipeline: aqsgd::exchange::PipelineMode::Off,
                 faults: FaultPlan::default(),
+                error_feedback: false,
+                lazy: aqsgd::exchange::LazyPolicy::Off,
             };
             run_worker_traced(&cfg, &mut sim_task(), &tracer).unwrap()
         }));
@@ -219,6 +223,24 @@ fn every_event_type_appears_and_validates() {
         );
     }
 
+    // Skip-round coverage: a feedback + lazy run where every message
+    // fails the send gate emits `skip` (Info) and `feedback_norm`
+    // (Debug) every step.
+    let mut lazy_cfg = sim_cfg(TopologySpec::Flat, ParallelMode::Auto);
+    lazy_cfg.error_feedback = true;
+    lazy_cfg.lazy = aqsgd::exchange::LazyPolicy::Thresh(1e30);
+    let mut lazy_cluster = Cluster::new(lazy_cfg);
+    let (lazy_tracer, lazy_buf) = Tracer::memory(Level::Debug);
+    lazy_cluster.set_tracer(lazy_tracer);
+    lazy_cluster.train(&mut sim_task());
+    let lazy_text = lazy_buf.lock().unwrap().clone();
+    for kind in ["skip", "feedback_norm"] {
+        assert!(
+            lazy_text.contains(&format!("\"e\":\"{kind}\"")),
+            "lazy sim run emitted no {kind} event"
+        );
+    }
+
     // Timeout coverage: the exact event shape the leader's
     // timeout-and-drop path emits on a deadline miss.
     let (timeout_tracer, timeout_buf) = Tracer::memory(Level::Info);
@@ -237,6 +259,7 @@ fn every_event_type_appears_and_validates() {
         &leader_text,
         &warn_text,
         &fault_text,
+        &lazy_text,
         &timeout_text,
     ] {
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
